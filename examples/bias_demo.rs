@@ -1,0 +1,128 @@
+//! Estimator study (paper Prop. 1 + Appendix B) on the REAL model gradient:
+//! demonstrates through the PJRT grad artifact that
+//!   * URS and RPC HT-corrected gradients are unbiased estimates of the
+//!     full-token GRPO gradient (cosine -> 1, relative error -> small as
+//!     mask draws accumulate), with variance that grows as p shrinks;
+//!   * deterministic truncation converges to the WRONG gradient (persistent
+//!     bias that averaging cannot remove).
+//!
+//! ```bash
+//! cargo run --release --example bias_demo
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use nat_rl::config::Method;
+use nat_rl::coordinator::batcher::{pack, LearnItem};
+use nat_rl::coordinator::masking;
+use nat_rl::coordinator::rollout::run_group_rollouts;
+use nat_rl::runtime::{GradAccum, ParamStore, Runtime};
+use nat_rl::tasks::{TaskMix, TaskSampler, Tier};
+use nat_rl::tokenizer::Tokenizer;
+use nat_rl::util::rng::Rng;
+
+fn grad_for_items(rt: &Runtime, params: &ParamStore, items: &[LearnItem]) -> Result<Vec<f32>> {
+    let d = &rt.manifest.dims;
+    let mbs = pack(items, &d.buckets, d.prompt_len, d.batch_train);
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    for mb in &mbs {
+        rt.grad(mb, params, &mut acc)?;
+    }
+    Ok(acc.flat)
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    dot / (na * nb).max(1e-30)
+}
+
+fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+    let num: f64 = a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum::<f64>().sqrt();
+    let den: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    num / den.max(1e-30)
+}
+
+fn main() -> Result<()> {
+    let rt = Runtime::load(Path::new("artifacts/tiny"))?;
+    let params = ParamStore::load_init(&rt.manifest)?;
+    let tok = Tokenizer::new();
+    let mut rng = Rng::new(0);
+
+    // A fixed batch of rollouts with synthetic advantages.
+    let mut sampler =
+        TaskSampler::new(1, TaskMix { tiers: vec![Tier::Easy], ..Default::default() });
+    let tasks = sampler.batch(2);
+    let seqs = run_group_rollouts(&rt, &params, &tok, &tasks, 4, 1.0, &mut rng)?;
+    let base_items: Vec<LearnItem> = seqs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| LearnItem {
+            tokens: s.tokens.clone(),
+            pad_len: s.pad_len,
+            resp_len: s.resp_len,
+            ht_w: vec![1.0; s.resp_len],
+            learn_len: s.resp_len,
+            adv: if i % 2 == 0 { 1.0 } else { -0.7 },
+            old_lp: s.old_lp.clone(),
+        })
+        .collect();
+
+    println!("computing full-token GRPO reference gradient ...");
+    let g_full = grad_for_items(&rt, &params, &base_items)?;
+
+    let n_draws = 40;
+    println!("\n{:<16} {:>8} {:>10} {:>12}", "estimator", "draws", "cosine", "rel-error");
+    for method in [
+        Method::Urs { p: 0.5 },
+        Method::Urs { p: 0.25 },
+        Method::Rpc { min_cut: 4 },
+        Method::DetTrunc { frac: 0.5 },
+    ] {
+        let mut acc = vec![0.0f64; g_full.len()];
+        let mut singles_err = 0.0;
+        for draw in 0..n_draws {
+            let items: Vec<LearnItem> = base_items
+                .iter()
+                .map(|it| {
+                    let m = masking::sample(&method, it.resp_len, &mut rng);
+                    LearnItem { ht_w: m.ht_w, learn_len: m.learn_len, ..it.clone() }
+                })
+                .collect();
+            let g = grad_for_items(&rt, &params, &items)?;
+            for (a, &x) in acc.iter_mut().zip(&g) {
+                *a += x as f64;
+            }
+            singles_err += rel_err(&g, &g_full);
+            if draw == 0 {
+                let g32: Vec<f32> = g.to_vec();
+                println!(
+                    "{:<16} {:>8} {:>10.4} {:>12.4}   (single draw)",
+                    method.label(),
+                    1,
+                    cosine(&g32, &g_full),
+                    rel_err(&g32, &g_full)
+                );
+            }
+        }
+        let mean: Vec<f32> = acc.iter().map(|&x| (x / n_draws as f64) as f32).collect();
+        println!(
+            "{:<16} {:>8} {:>10.4} {:>12.4}   (averaged; single-draw mean err {:.3})",
+            method.label(),
+            n_draws,
+            cosine(&mean, &g_full),
+            rel_err(&mean, &g_full),
+            singles_err / n_draws as f64
+        );
+    }
+    println!(
+        "\nReading: URS/RPC averaged gradients converge toward the full gradient\n\
+         (unbiased, Prop. 1); smaller p gives larger single-draw error (1/p\n\
+         second-moment inflation); Det. Trunc. stays biased no matter how many\n\
+         draws are averaged (its 'error' is pure bias, App. B.5)."
+    );
+    Ok(())
+}

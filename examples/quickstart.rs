@@ -1,0 +1,67 @@
+//! Quickstart: the smallest end-to-end NAT run.
+//!
+//! Loads the `tiny` artifacts, SFT-pretrains a base model for a few hundred
+//! steps, then runs NAT RL with Random Prefix Cutting and prints the metric
+//! stream — all through the AOT PJRT path, no Python at runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use nat_rl::config::{Method, RunConfig};
+use nat_rl::coordinator::trainer::Trainer;
+use nat_rl::coordinator::{evaluator, pretrainer};
+use nat_rl::runtime::{OptState, Runtime};
+use nat_rl::tasks::Tier;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT artifact set (built once by `make artifacts`).
+    let rt = Runtime::load(Path::new("artifacts/tiny"))?;
+    println!(
+        "loaded {} ({} params, buckets {:?})",
+        rt.manifest.dims.name, rt.manifest.param_count, rt.manifest.dims.buckets
+    );
+
+    // 2. Configure: tiny model, easy tier, RPC with a minimum cutoff.
+    let mut cfg = RunConfig::default();
+    cfg.model = "tiny".into();
+    cfg.method = Method::Rpc { min_cut: 4 };
+    cfg.rl.tiers = vec![Tier::Easy];
+    cfg.rl.steps = 30;
+    cfg.rl.prompts_per_step = 2;
+    cfg.rl.group_size = 8;
+    cfg.pretrain.steps = 400;
+    cfg.pretrain.corpus_size = 2048;
+    cfg.pretrain.noise = 0.15;
+
+    // 3. SFT base model (the stand-in for a pretrained checkpoint).
+    println!("\n--- SFT base model ({} steps) ---", cfg.pretrain.steps);
+    let base = pretrainer::pretrain(&rt, &cfg, false)?;
+    println!("final SFT loss: {:.3}", base.final_loss);
+
+    let before = evaluator::evaluate_all_tiers(&rt, &base.params, 8, 8, 1.0, 0)?;
+
+    // 4. NAT RL: only ~55% of tokens backpropagate, yet the gradient is an
+    //    unbiased estimate of the full-token GRPO gradient (HT reweighting).
+    println!("\n--- NAT RL: {} ---", cfg.method.label());
+    let mut tr = Trainer::new(&rt, cfg, base.params, OptState::zeros(&rt.manifest));
+    tr.train(30, true)?;
+
+    // 5. Before/after evaluation.
+    let after = evaluator::evaluate_all_tiers(&rt, &tr.params, 8, 8, 1.0, 0)?;
+    println!("\nbenchmark     Acc@8 before -> after");
+    for (b, a) in before.iter().zip(&after) {
+        println!(
+            "{:<12} {:.3} -> {:.3}",
+            b.tier.benchmark_name(),
+            b.acc_at_k,
+            a.acc_at_k
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

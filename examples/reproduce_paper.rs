@@ -1,0 +1,50 @@
+//! Regenerate every paper table and figure in one command (the programmatic
+//! equivalent of `nat repro --what all`).
+//!
+//! ```bash
+//! cargo run --release --example reproduce_paper            # tiny, 5 seeds
+//! cargo run --release --example reproduce_paper -- small 3 # model, seeds
+//! ```
+
+use anyhow::Result;
+
+use nat_rl::config::RunConfig;
+use nat_rl::exp::tables::{
+    figures_summary, paper_methods, run_sweep, table1, table2, table3, write_figures,
+};
+use nat_rl::runtime::Runtime;
+use nat_rl::tasks::Tier;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(String::as_str).unwrap_or("tiny").to_string();
+    let seeds: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5);
+
+    let mut cfg = RunConfig::default();
+    cfg.model = model.clone();
+    if model == "tiny" {
+        cfg.rl.tiers = vec![Tier::Easy];
+        cfg.rl.steps = 60;
+        cfg.rl.prompts_per_step = 4;
+        cfg.pretrain.steps = 1500;
+        cfg.pretrain.corpus_size = 4096;
+        cfg.pretrain.noise = 0.15;
+        cfg.eval.tasks_per_tier = 16;
+    } else {
+        cfg.rl.steps = 60;
+        cfg.rl.prompts_per_step = 2;
+        cfg.pretrain.steps = 2200;
+        cfg.pretrain.corpus_size = 8192;
+        cfg.pretrain.noise = 0.15;
+        cfg.eval.tasks_per_tier = 16;
+    }
+
+    let rt = Runtime::load(&cfg.artifact_dir())?;
+    println!("{}", table1());
+    let sweep = run_sweep(&rt, &cfg, &paper_methods(8), seeds)?;
+    println!("{}", table2(&sweep));
+    println!("{}", table3(&sweep));
+    println!("{}", write_figures(&sweep)?);
+    println!("{}", figures_summary(&sweep));
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! END-TO-END DRIVER (DESIGN.md / EXPERIMENTS.md §E2E): the full system on
+//! a real workload, proving all three layers compose.
+//!
+//! Pipeline: SFT-pretrain the `small` policy (~0.8M params) on the synthetic
+//! math corpus -> NAT RL (RPC) for a few hundred optimizer steps across all
+//! task tiers -> before/after Acc@16 / pass@16 on the three benchmarks,
+//! logging the reward/entropy/memory/time curves to results/e2e/.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_e2e                 # full run
+//! cargo run --release --example train_e2e -- --fast       # short CI run
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use nat_rl::config::{Method, RunConfig};
+use nat_rl::coordinator::trainer::Trainer;
+use nat_rl::coordinator::{evaluator, pretrainer};
+use nat_rl::runtime::{Checkpoint, OptState, ParamStore, Runtime};
+
+fn main() -> Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let model = "small";
+    let rt = Runtime::load(Path::new(&format!("artifacts/{model}")))?;
+    println!(
+        "e2e driver: model={} ({} params), fast={}",
+        model, rt.manifest.param_count, fast
+    );
+
+    let mut cfg = RunConfig::default();
+    cfg.model = model.into();
+    cfg.method = Method::Rpc { min_cut: 8 };
+    cfg.rl.steps = if fast { 10 } else { 150 };
+    cfg.rl.prompts_per_step = 2;
+    cfg.rl.group_size = 8;
+    cfg.pretrain.steps = if fast { 50 } else { 2200 };
+    cfg.pretrain.corpus_size = if fast { 512 } else { 8192 };
+    cfg.pretrain.noise = 0.15;
+    cfg.eval.tasks_per_tier = if fast { 8 } else { 16 };
+    cfg.eval.k = 16;
+
+    // --- base model: reuse the cached SFT checkpoint when present ---------
+    let ckpt = format!("checkpoints/{model}_sft.bin");
+    let base: ParamStore = if Path::new(&ckpt).exists() && !fast {
+        println!("loading base checkpoint {ckpt}");
+        Checkpoint::load(Path::new(&ckpt), &rt.manifest)?.0
+    } else {
+        println!("SFT phase: {} steps ...", cfg.pretrain.steps);
+        let res = pretrainer::pretrain(&rt, &cfg, true)?;
+        if !fast {
+            Checkpoint::save(Path::new(&ckpt), &rt.manifest, &res.params, None)?;
+        }
+        res.params
+    };
+
+    println!("\nevaluating base model ...");
+    let before =
+        evaluator::evaluate_all_tiers(&rt, &base, cfg.eval.tasks_per_tier, cfg.eval.k, 1.0, 0)?;
+    for e in &before {
+        println!(
+            "  base {:<10} Acc@{} {:.3}  pass@{} {:.3}",
+            e.tier.benchmark_name(),
+            e.k,
+            e.acc_at_k,
+            e.k,
+            e.pass_at_k
+        );
+    }
+
+    // --- NAT RL phase ------------------------------------------------------
+    println!("\nNAT RL: {} for {} steps ...", cfg.method.label(), cfg.rl.steps);
+    rt.warmup(&rt.manifest.dims.buckets.clone())?;
+    let steps = cfg.rl.steps;
+    let k = cfg.eval.k;
+    let tasks_per_tier = cfg.eval.tasks_per_tier;
+    let mut tr = Trainer::new(&rt, cfg, base, OptState::zeros(&rt.manifest));
+    tr.train(steps, true)?;
+
+    println!("\nevaluating trained model ...");
+    let after = evaluator::evaluate_all_tiers(&rt, &tr.params, tasks_per_tier, k, 1.0, 0)?;
+    println!("\n=== E2E RESULT (record in EXPERIMENTS.md) ===");
+    println!("benchmark     Acc@{k} before -> after | pass@{k} before -> after");
+    for (b, a) in before.iter().zip(&after) {
+        println!(
+            "{:<12} {:.3} -> {:.3}          | {:.3} -> {:.3}",
+            b.tier.benchmark_name(),
+            b.acc_at_k,
+            a.acc_at_k,
+            b.pass_at_k,
+            a.pass_at_k
+        );
+    }
+    let r = &tr.recorder;
+    println!(
+        "\ncurves: reward {:.3} -> {:.3} (tail) | entropy tail {:.3} | sel ratio {:.3} | \
+         learner {:.2}s/step | mem {:.4} GB",
+        r.values("reward").first().copied().unwrap_or(0.0),
+        r.tail_mean("reward", 0.1).unwrap_or(0.0),
+        r.tail_mean("entropy", 0.1).unwrap_or(0.0),
+        r.tail_mean("selected_ratio", 1.0).unwrap_or(0.0),
+        r.tail_mean("t_learn_s", 1.0).unwrap_or(0.0),
+        r.tail_mean("mem_gb", 1.0).unwrap_or(0.0),
+    );
+    r.write_csv(Path::new("results/e2e/train_e2e_small_rpc.csv"))?;
+    r.write_json(Path::new("results/e2e/train_e2e_small_rpc.json"))?;
+    Checkpoint::save(
+        Path::new("checkpoints/small_rpc_e2e.bin"),
+        &rt.manifest,
+        &tr.params,
+        None,
+    )?;
+    println!("\nmetrics -> results/e2e/train_e2e_small_rpc.csv");
+    println!("e2e driver OK");
+    Ok(())
+}

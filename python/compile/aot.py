@@ -1,0 +1,198 @@
+"""AOT pipeline: lower every L2 computation to HLO *text* + manifest.
+
+Run once per model config (``make artifacts``); the Rust coordinator then
+drives training entirely through PJRT with no Python on the request path.
+
+HLO text — not ``HloModuleProto.serialize()`` — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs under ``<out-dir>/<config>/``:
+  generate.hlo.txt            rollout (prefill + KV-cache scan decode)
+  score_T<b>.hlo.txt          logprob/entropy diagnostics (top bucket)
+  grad_T<b>.hlo.txt           NAT learner gradient, one per length bucket
+  apply.hlo.txt               AdamW with global-norm clip
+  pretrain.hlo.txt            fused SFT step
+  init_params.bin             raw little-endian f32, manifest order
+  manifest.json               shapes/param-table/artifact index for Rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg):
+    return [_spec(s) for _, s in M.param_spec(cfg)]
+
+
+def lower_generate(cfg, early_exit=True):
+    fn = lambda params, prompts, pad_len, seed, temp: M.generate(
+        cfg, params, prompts, pad_len, seed, temp, early_exit)
+    B, P = cfg.batch_rollout, cfg.prompt_len
+    return jax.jit(fn).lower(
+        _param_specs(cfg), _spec((B, P), jnp.int32), _spec((B,), jnp.int32),
+        _spec((), jnp.int32), _spec((), jnp.float32))
+
+
+def lower_score(cfg, bucket, use_pallas_attn=False):
+    fn = lambda params, tokens, pad_len: M.score(
+        cfg, params, tokens, pad_len, bucket, use_pallas_attn)
+    B, P = cfg.batch_rollout, cfg.prompt_len
+    return jax.jit(fn).lower(
+        _param_specs(cfg), _spec((B, P + bucket), jnp.int32),
+        _spec((B,), jnp.int32))
+
+
+def lower_grad(cfg, bucket):
+    fn = lambda params, tokens, ht_w, adv, old_lp, inv_len, pad_len: \
+        M.nat_grad(cfg, params, tokens, ht_w, adv, old_lp, inv_len, pad_len,
+                   bucket)
+    B, P = cfg.batch_train, cfg.prompt_len
+    return jax.jit(fn).lower(
+        _param_specs(cfg), _spec((B, P + bucket), jnp.int32),
+        _spec((B, bucket)), _spec((B,)), _spec((B, bucket)), _spec((B,)),
+        _spec((B,), jnp.int32))
+
+
+def lower_apply(cfg):
+    fn = lambda params, m, v, step, grads, scale: M.adamw_apply(
+        cfg, params, m, v, step, grads, scale)
+    ps = _param_specs(cfg)
+    return jax.jit(fn).lower(ps, ps, ps, _spec(()), ps, _spec(()))
+
+
+def lower_pretrain(cfg):
+    fn = lambda params, m, v, step, tokens, loss_mask, pad_len: M.pretrain_step(
+        cfg, params, m, v, step, tokens, loss_mask, pad_len)
+    ps = _param_specs(cfg)
+    B, S = cfg.batch_pretrain, cfg.pretrain_len
+    return jax.jit(fn).lower(
+        ps, ps, ps, _spec(()), _spec((B, S), jnp.int32), _spec((B, S - 1)),
+        _spec((B,), jnp.int32))
+
+
+def build_manifest(cfg):
+    params = []
+    offset = 0
+    for name, shape in M.param_spec(cfg):
+        size = int(np.prod(shape))
+        params.append({"name": name, "shape": list(shape), "size": size,
+                       "offset": offset})
+        offset += size
+    return {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "prompt_len": cfg.prompt_len,
+            "max_resp": cfg.max_resp, "buckets": list(cfg.buckets),
+            "batch_rollout": cfg.batch_rollout,
+            "batch_train": cfg.batch_train,
+            "pretrain_len": cfg.pretrain_len,
+            "batch_pretrain": cfg.batch_pretrain,
+            "lr": cfg.lr, "clip_eps": cfg.clip_eps,
+            "grad_clip": cfg.grad_clip, "pretrain_lr": cfg.pretrain_lr,
+        },
+        "param_count": sum(p["size"] for p in params),
+        "params": params,
+        "artifacts": {
+            "generate": "generate.hlo.txt",
+            "generate_full": "generate_full.hlo.txt",
+            "score": {str(cfg.buckets[-1]):
+                      f"score_T{cfg.buckets[-1]}.hlo.txt"},
+            "score_pallas": {str(cfg.buckets[-1]):
+                             f"score_pallas_T{cfg.buckets[-1]}.hlo.txt"},
+            "grad": {str(b): f"grad_T{b}.hlo.txt" for b in cfg.buckets},
+            "apply": "apply.hlo.txt",
+            "pretrain": "pretrain.hlo.txt",
+        },
+    }
+
+
+def _source_fingerprint() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in os.walk(here):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def build(cfg_name: str, out_dir: str, force: bool = False) -> None:
+    cfg = M.PRESETS[cfg_name]
+    d = os.path.join(out_dir, cfg_name)
+    os.makedirs(d, exist_ok=True)
+    stamp = os.path.join(d, ".stamp")
+    fp = _source_fingerprint()
+    if not force and os.path.exists(stamp) and open(stamp).read() == fp:
+        print(f"[aot] {cfg_name}: up to date")
+        return
+
+    def emit(name, lowered):
+        text = to_hlo_text(lowered)
+        path = os.path.join(d, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] {cfg_name}/{name}: {len(text) / 1e6:.2f} MB")
+
+    emit("generate.hlo.txt", lower_generate(cfg, early_exit=True))
+    emit("generate_full.hlo.txt", lower_generate(cfg, early_exit=False))
+    emit(f"score_T{cfg.buckets[-1]}.hlo.txt", lower_score(cfg, cfg.buckets[-1]))
+    # same scorer with the L1 Pallas flash-attention kernel in the forward —
+    # proves the attention kernel lowers and executes through rust PJRT.
+    emit(f"score_pallas_T{cfg.buckets[-1]}.hlo.txt",
+         lower_score(cfg, cfg.buckets[-1], use_pallas_attn=True))
+    for b in cfg.buckets:
+        emit(f"grad_T{b}.hlo.txt", lower_grad(cfg, b))
+    emit("apply.hlo.txt", lower_apply(cfg))
+    emit("pretrain.hlo.txt", lower_pretrain(cfg))
+
+    params = M.init_params(cfg, seed=0)
+    flat = np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+    flat.tofile(os.path.join(d, "init_params.bin"))
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(build_manifest(cfg), f, indent=1)
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"[aot] {cfg_name}: done ({M.param_count(cfg):,} params)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny,small,base",
+                    help="comma-separated preset names (see model.PRESETS)")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    for name in args.config.split(","):
+        build(name.strip(), args.out_dir, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: blocked causal flash-attention with left-pad masking.
+
+TPU adaptation of the memory-bound attention forward used by the NAT scoring
+path: queries are tiled into (BLOCK_Q) chunks held in VMEM; the key/value
+stream is consumed in (BLOCK_K) chunks with an online-softmax running
+(max, sum, acc) state, so the [S, S] score matrix is never materialised —
+the TPU analogue of the threadblock streaming the paper's GPU baselines get
+from fused attention kernels. Under RPC the scored sequence is the retained
+prefix, so S itself shrinks; this kernel keeps the *within-S* memory flat.
+
+Forward-only: it backs the AOT ``score`` artifact (logprob/entropy
+diagnostics), which is never differentiated. interpret=True for CPU PJRT.
+Oracle: kernels.ref.causal_attention_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 64
+BLOCK_K = 64
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(plen_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, seq_len,
+                 scale):
+    """One (batch*head, q-block) program: stream K/V blocks with online softmax."""
+    qi = pl.program_id(2)
+    q = q_ref[...]  # [block_q, dh]
+    block_q = q.shape[0]
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    pad = plen_ref[0]
+
+    m = jnp.full((block_q, 1), _NEG_INF, dtype=jnp.float32)
+    l = jnp.zeros((block_q, 1), dtype=jnp.float32)
+    acc = jnp.zeros((block_q, q.shape[1]), dtype=jnp.float32)
+
+    num_k_blocks = seq_len // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        valid = jnp.logical_and(k_pos <= q_pos, k_pos >= pad)
+        s = jnp.where(valid, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_k_blocks, body, (m, l, acc))
+    # Queries inside the left pad have no valid keys; their masked scores are
+    # uniformly -1e30, so acc/l would be a block-size-dependent mean of V.
+    # Define their output as exactly zero instead.
+    row_valid = (q_pos >= pad).astype(jnp.float32)
+    safe_l = jnp.where(l > 0.0, l, 1.0)
+    o_ref[...] = (row_valid * acc / safe_l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, pad_len, block_q=BLOCK_Q, block_k=BLOCK_K):
+    """Left-pad-aware causal attention. q, k, v: [B, H, S, Dh]; pad_len: [B]."""
+    b, h, s, dh = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    # The padded length must be divisible by BOTH block sizes: the k-stream
+    # loop runs sp // block_k iterations, so a remainder would drop keys.
+    pad_s = (-s) % math.lcm(block_q, block_k)
+    if pad_s:
+        padcfg = ((0, 0), (0, 0), (0, pad_s), (0, 0))
+        q = jnp.pad(q, padcfg)
+        k = jnp.pad(k, padcfg)
+        v = jnp.pad(v, padcfg)
+    sp = q.shape[2]
+    scale = 1.0 / float(dh) ** 0.5
+    grid = (b, h, sp // block_q)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=block_k, seq_len=sp,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, qi: (bi,)),
+            pl.BlockSpec((None, None, block_q, dh),
+                         lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, sp, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, None, sp, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, dh),
+                               lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, dh), q.dtype),
+        interpret=True,
+    )(pad_len.astype(jnp.int32), q, k, v)
+    return out[:, :, :s, :]

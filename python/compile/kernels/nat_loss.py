@@ -1,0 +1,154 @@
+"""L1 Pallas kernel: fused NAT (HT-reweighted, token-masked) GRPO surrogate.
+
+This is the paper's learner hot-spot expressed as a TPU-shaped kernel: the
+per-token clipped importance-weighted surrogate (Eq. 3), multiplied by the
+Horvitz-Thompson weight m_{i,t}/p_{i,t} and the per-sequence 1/T_i factor
+(Eq. 6/9), fused into a single blocked pass so that ratio/clip/min/weighting
+never materialise as separate [B, T] temporaries in HBM.
+
+Hardware adaptation (DESIGN.md §6): the GPU implementation of NAT simply
+masks the loss; on TPU we tile over (batch, token) blocks sized for VMEM.
+Because RPC zeroes a contiguous *suffix*, whole token-tiles beyond the cut
+have ht_w == 0 and — on a real TPU — their HBM->VMEM fetches are elided by
+the BlockSpec prefix schedule. Here the kernel runs under interpret=True
+(Mosaic custom-calls cannot execute on the CPU PJRT plugin), which lowers
+the same logic to plain HLO; numerics are validated against kernels.ref.
+
+The kernel is made differentiable with an explicit custom_vjp whose backward
+pass is itself a Pallas kernel (analytic PPO-clip gradient), so the whole
+train-step lowers into one HLO module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes. 8 x 128 matches the float32 TPU tile (sublane x lane);
+# token tiles of 128 keep the working set (6 input tiles + 2 output tiles,
+# f32) at ~16 KiB << 16 MiB VMEM, leaving room for double buffering.
+BLOCK_B = 8
+BLOCK_T = 128
+
+
+def _fwd_kernel(new_lp_ref, old_lp_ref, ht_w_ref, adv_ref, inv_len_ref,
+                loss_ref, clip_ref, *, clip_eps):
+    """One (BLOCK_B, BLOCK_T) tile of the fused surrogate."""
+    ratio = jnp.exp(new_lp_ref[...] - old_lp_ref[...])
+    adv = adv_ref[...]          # [bb, 1] — broadcast over the token tile
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    surrogate = jnp.minimum(unclipped, clipped)
+    loss_ref[...] = -ht_w_ref[...] * surrogate * inv_len_ref[...]
+    clip_ref[...] = (unclipped > clipped).astype(loss_ref.dtype)
+
+
+def _bwd_kernel(g_ref, new_lp_ref, old_lp_ref, ht_w_ref, adv_ref, inv_len_ref,
+                d_new_lp_ref, *, clip_eps):
+    """Analytic gradient tile: d(loss)/d new_lp = -w * (1/T) * A * r * 1[u<=c]."""
+    ratio = jnp.exp(new_lp_ref[...] - old_lp_ref[...])
+    adv = adv_ref[...]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    active = (unclipped <= clipped).astype(g_ref.dtype)
+    d_new_lp_ref[...] = (-g_ref[...] * ht_w_ref[...] * inv_len_ref[...]
+                         * adv * ratio * active)
+
+
+def _pad_bt(x, bb, bt):
+    b, t = x.shape
+    pb = (-b) % bb
+    pt = (-t) % bt
+    if pb or pt:
+        x = jnp.pad(x, ((0, pb), (0, pt)))
+    return x
+
+
+def _pad_b(x, bb):
+    b = x.shape[0]
+    pb = (-b) % bb
+    if pb:
+        x = jnp.pad(x, ((0, pb),))
+    return x
+
+
+def _tile_specs(bb, bt):
+    tile2 = pl.BlockSpec((bb, bt), lambda i, j: (i, j))
+    col = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
+    return tile2, col
+
+
+def _run_fwd(new_lp, old_lp, ht_w, adv, inv_len, clip_eps, bb, bt):
+    b, t = new_lp.shape
+    bb = min(bb, max(b, 1))
+    bt = min(bt, max(t, 1))
+    args = [_pad_bt(x, bb, bt) for x in (new_lp, old_lp, ht_w)]
+    adv_p = _pad_b(adv, bb)[:, None]
+    inv_p = _pad_b(inv_len, bb)[:, None]
+    pb, ptt = args[0].shape
+    tile2, col = _tile_specs(bb, bt)
+    loss, clip_ind = pl.pallas_call(
+        functools.partial(_fwd_kernel, clip_eps=clip_eps),
+        grid=(pb // bb, ptt // bt),
+        in_specs=[tile2, tile2, tile2, col, col],
+        out_specs=[tile2, tile2],
+        out_shape=[
+            jax.ShapeDtypeStruct((pb, ptt), new_lp.dtype),
+            jax.ShapeDtypeStruct((pb, ptt), new_lp.dtype),
+        ],
+        interpret=True,
+    )(*args, adv_p, inv_p)
+    return loss[:b, :t], clip_ind[:b, :t]
+
+
+def _run_bwd(g, new_lp, old_lp, ht_w, adv, inv_len, clip_eps, bb, bt):
+    b, t = new_lp.shape
+    bb = min(bb, max(b, 1))
+    bt = min(bt, max(t, 1))
+    args = [_pad_bt(x, bb, bt) for x in (g, new_lp, old_lp, ht_w)]
+    adv_p = _pad_b(adv, bb)[:, None]
+    inv_p = _pad_b(inv_len, bb)[:, None]
+    pb, ptt = args[0].shape
+    tile2, col = _tile_specs(bb, bt)
+    d_new = pl.pallas_call(
+        functools.partial(_bwd_kernel, clip_eps=clip_eps),
+        grid=(pb // bb, ptt // bt),
+        in_specs=[tile2, tile2, tile2, tile2, col, col],
+        out_specs=tile2,
+        out_shape=jax.ShapeDtypeStruct((pb, ptt), new_lp.dtype),
+        interpret=True,
+    )(*args, adv_p, inv_p)
+    return d_new[:b, :t]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def nat_loss_tokens(new_lp, old_lp, ht_w, adv, inv_len, clip_eps,
+                    block_b=BLOCK_B, block_t=BLOCK_T):
+    """Fused NAT loss tile pass. Differentiable in ``new_lp`` only.
+
+    Returns (loss_tok [B,T], clip_ind [B,T]); see kernels.ref for semantics.
+    """
+    return _run_fwd(new_lp, old_lp, ht_w, adv, inv_len, clip_eps,
+                    block_b, block_t)
+
+
+def _vjp_fwd(new_lp, old_lp, ht_w, adv, inv_len, clip_eps, block_b, block_t):
+    out = _run_fwd(new_lp, old_lp, ht_w, adv, inv_len, clip_eps,
+                   block_b, block_t)
+    return out, (new_lp, old_lp, ht_w, adv, inv_len)
+
+
+def _vjp_bwd(clip_eps, block_b, block_t, res, cts):
+    new_lp, old_lp, ht_w, adv, inv_len = res
+    g_loss, _g_clip = cts  # clip indicator is a non-differentiable statistic
+    d_new = _run_bwd(g_loss, new_lp, old_lp, ht_w, adv, inv_len, clip_eps,
+                     block_b, block_t)
+    zeros_like = jnp.zeros_like
+    return (d_new, zeros_like(old_lp), zeros_like(ht_w),
+            zeros_like(adv), zeros_like(inv_len))
+
+
+nat_loss_tokens.defvjp(_vjp_fwd, _vjp_bwd)

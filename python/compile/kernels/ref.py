@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the *correctness ground truth*: every Pallas kernel in this
+package must match its oracle to float32 tolerance under pytest
+(``python/tests/test_kernels.py`` sweeps shapes and values with hypothesis).
+The oracles are also used by the HT-unbiasedness statistical tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nat_loss_tokens_ref(new_lp, old_lp, ht_w, adv, inv_len, clip_eps):
+    """Per-token HT-reweighted clipped GRPO surrogate (negative, for minimisation).
+
+    Args:
+      new_lp:  [B, T] log pi_theta(o_t | ...) of the sampled tokens.
+      old_lp:  [B, T] log pi_theta_old(o_t | ...) (behaviour policy).
+      ht_w:    [B, T] Horvitz-Thompson weights m_{i,t}/p_{i,t}; 0 for tokens
+               excluded from the update (mask folded in).
+      adv:     [B]    group-relative advantage, shared across tokens (GRPO).
+      inv_len: [B]    1/T_i with T_i the FULL response length (the HT
+               estimator normalises by the full length, not the retained one).
+      clip_eps: PPO clip threshold (python float; baked at trace time).
+
+    Returns:
+      loss_tok: [B, T] per-token contribution to the scalar loss
+                ``-(1/T_i) * (m/p) * S_{i,t}`` (Eq. 6/9 of the paper).
+      clip_ind: [B, T] 1.0 where the clipped branch is active (ratio outside
+                the trust region AND the min selected the clipped term).
+    """
+    ratio = jnp.exp(new_lp - old_lp)
+    adv_b = adv[:, None]
+    unclipped = ratio * adv_b
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv_b
+    surrogate = jnp.minimum(unclipped, clipped)
+    clip_ind = (unclipped > clipped).astype(new_lp.dtype)
+    loss_tok = -ht_w * surrogate * inv_len[:, None]
+    return loss_tok, clip_ind
+
+
+def nat_loss_grad_ref(new_lp, old_lp, ht_w, adv, inv_len, clip_eps, g):
+    """Analytic d(sum(g * loss_tok))/d new_lp for the reference loss.
+
+    dS/d new_lp = A * r  when the unclipped branch is active (u <= c),
+                  0      otherwise (the clip freezes the surrogate).
+    """
+    ratio = jnp.exp(new_lp - old_lp)
+    adv_b = adv[:, None]
+    unclipped = ratio * adv_b
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv_b
+    active = (unclipped <= clipped).astype(new_lp.dtype)
+    return -g * ht_w * inv_len[:, None] * adv_b * ratio * active
+
+
+def causal_attention_ref(q, k, v, pad_len):
+    """Left-pad-aware causal attention oracle.
+
+    Args:
+      q, k, v: [B, H, S, Dh].
+      pad_len: [B] int32 — number of LEFT padding positions per sequence
+               (keys j < pad_len[b] are invalid).
+    Returns:
+      [B, H, S, Dh].
+    """
+    b, h, s, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    pos = jnp.arange(s)
+    causal = pos[None, :, None] >= pos[None, None, :]  # [1, q, k]
+    valid = pos[None, None, :] >= pad_len[:, None, None]  # [b, 1, k]
+    mask = jnp.logical_and(causal, valid)[:, None, :, :]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)

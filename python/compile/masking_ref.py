@@ -1,0 +1,43 @@
+"""Reference NAT token-selection schemes (mirrors rust/src/coordinator/masking.rs).
+
+Used by the HT-unbiasedness statistical tests and the estimator-variance
+study; NOT on any runtime path (the Rust coordinator owns mask sampling).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def urs_mask(rng: np.random.Generator, t_i: int, p: float):
+    """Uniform random sampling: Bernoulli(p) per token; HT weight m/p."""
+    m = (rng.random(t_i) < p).astype(np.float32)
+    return m, m / p
+
+
+def rpc_survival(t_i: int, c: int) -> np.ndarray:
+    """p_{i,t} for L ~ Uniform({C..T}): 1 for t<=C, (T-t+1)/(T-C+1) after."""
+    c = min(max(c, 1), t_i)
+    t = np.arange(1, t_i + 1, dtype=np.float64)
+    p = np.where(t <= c, 1.0, (t_i - t + 1) / (t_i - c + 1))
+    return p.astype(np.float32)
+
+
+def rpc_mask(rng: np.random.Generator, t_i: int, c: int):
+    """Random prefix cutting with minimum cutoff C; HT weight 1/p_{i,t}."""
+    c = min(max(c, 1), t_i)
+    cut = int(rng.integers(c, t_i + 1))
+    m = (np.arange(1, t_i + 1) <= cut).astype(np.float32)
+    return m, m / rpc_survival(t_i, c)
+
+
+def det_trunc_mask(t_i: int, frac: float = 0.5):
+    """Deterministic prefix truncation (biased; p=0 on the suffix)."""
+    k = max(1, int(np.floor(frac * t_i)))
+    m = (np.arange(1, t_i + 1) <= k).astype(np.float32)
+    return m, m.copy()  # no HT correction possible: weights are just the mask
+
+
+def full_mask(t_i: int):
+    m = np.ones(t_i, np.float32)
+    return m, m.copy()

@@ -1,0 +1,495 @@
+"""L2: the policy model and every AOT-exported computation.
+
+A decoder-only transformer (RMSNorm + RoPE + SwiGLU, Qwen-style) standing in
+for the paper's Qwen2.5-Math-7B / Qwen3-8B policies (DESIGN.md §2), plus the
+jitted functions the Rust coordinator drives through PJRT:
+
+  * ``generate``       — grouped rollout: prefill + KV-cache scan decode.
+  * ``score``          — per-token logprob + entropy of given tokens
+                         (optionally through the Pallas flash-attention L1).
+  * ``nat_grad``       — the NAT learner: forward over a *length bucket*,
+                         HT-masked clipped GRPO surrogate via the Pallas
+                         nat_loss L1 kernel, grads w.r.t. all params.
+  * ``adamw_apply``    — decoupled-weight-decay Adam with global-norm clip.
+  * ``pretrain_step``  — fused CE grad + AdamW update (SFT base-model phase).
+
+Layout convention shared with Rust: all token buffers are LEFT-padded to the
+fixed prompt window P, so the response always occupies positions [P, P+T).
+``plen`` carries the real prompt lengths for attention masking.
+
+Everything here is build-time only; ``aot.py`` lowers each function once to
+HLO text per (config, bucket) and Rust never imports Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.nat_loss import nat_loss_tokens
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/hyperparameter bundle. Mirrored in artifacts/manifest.json."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    prompt_len: int          # fixed left-padded prompt window P
+    max_resp: int            # T_max — top length bucket
+    buckets: Tuple[int, ...]  # learner length buckets (ascending, last == max_resp)
+    batch_rollout: int       # B for generate/score artifacts
+    batch_train: int         # B for grad artifacts
+    pretrain_len: int        # sequence length of the SFT artifact
+    batch_pretrain: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    eos_id: int = 2  # tokenizer EOS; used by early-exit generation
+    # Optimisation constants (baked into apply/pretrain artifacts).
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    clip_eps: float = 0.2    # PPO/GRPO trust region
+    pretrain_lr: float = 1e-3
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def seq_total(self) -> int:
+        return self.prompt_len + self.max_resp
+
+
+PRESETS = {
+    # ~0.12M params — unit-test scale.
+    # RL learning rates are deliberately much lower than the SFT rate —
+    # the paper fine-tunes strong base models at 1e-5 (Qwen2.5) / 5e-7
+    # (Qwen3); at 3e-4 the policy collapses its entropy and degrades.
+    "tiny": ModelConfig(
+        name="tiny", vocab=64, d_model=64, n_layers=2, n_heads=2, d_ff=176,
+        prompt_len=32, max_resp=64, buckets=(16, 32, 48, 64),
+        batch_rollout=8, batch_train=4, pretrain_len=96, batch_pretrain=16,
+        lr=1e-4),
+    # ~0.8M params — fast e2e runs (stands in for Qwen2.5-Math-7B).
+    "small": ModelConfig(
+        name="small", vocab=64, d_model=128, n_layers=4, n_heads=4, d_ff=352,
+        prompt_len=48, max_resp=128, buckets=(32, 64, 96, 128),
+        batch_rollout=16, batch_train=8, pretrain_len=176, batch_pretrain=16,
+        lr=2e-5),
+    # ~4.9M params — the main experiment scale (stands in for Qwen3-8B).
+    "base": ModelConfig(
+        name="base", vocab=64, d_model=256, n_layers=6, n_heads=8, d_ff=688,
+        prompt_len=48, max_resp=192, buckets=(48, 96, 144, 192),
+        batch_rollout=16, batch_train=8, pretrain_len=240, batch_pretrain=8,
+        lr=2e-5),
+    # ~91M params — scale proof (artifact build + a few steps; 1 CPU core).
+    "xl": ModelConfig(
+        name="xl", vocab=4096, d_model=768, n_layers=12, n_heads=12,
+        d_ff=2048, prompt_len=64, max_resp=256, buckets=(64, 128, 192, 256),
+        batch_rollout=4, batch_train=2, pretrain_len=320, batch_pretrain=2,
+        lr=1e-5),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) table — the contract with the Rust runtime."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        spec += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ff)),
+            (p + "w_up", (cfg.d_model, cfg.d_ff)),
+            (p + "w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    spec += [("final_norm", (cfg.d_model,)), ("head", (cfg.d_model, cfg.vocab))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """GPT-2-style init; residual-output projections scaled by 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(seed)
+    out: List[jnp.ndarray] = []
+    resid_scale = 1.0 / (2.0 * cfg.n_layers) ** 0.5
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_norm"):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = 0.02
+            if name.endswith(("wo", "w_down")):
+                std *= resid_scale
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_spec(cfg))
+
+
+def _unflatten(cfg: ModelConfig, flat: Sequence[jnp.ndarray]) -> dict:
+    d = {}
+    for (name, _), arr in zip(param_spec(cfg), flat):
+        d[name] = arr
+    return d
+
+
+# --------------------------------------------------------------------------
+# Transformer forward
+# --------------------------------------------------------------------------
+
+
+def _rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, positions, theta):
+    """x: [..., S, Hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention_dense(q, k, v, pad_len):
+    """jnp causal left-pad attention (default fwd/bwd path; XLA fuses this)."""
+    s = q.shape[2]
+    scale = 1.0 / float(q.shape[-1]) ** 0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    pos = jnp.arange(s)
+    causal = pos[None, :, None] >= pos[None, None, :]
+    valid = pos[None, None, :] >= pad_len[:, None, None]
+    mask = jnp.logical_and(causal, valid)[:, None, :, :]
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v)
+
+
+def _block(cfg: ModelConfig, p: dict, prefix: str, x, pad_len, positions,
+           use_pallas_attn: bool):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xn = _rmsnorm(x, p[prefix + "attn_norm"], cfg.norm_eps)
+    q = (xn @ p[prefix + "wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (xn @ p[prefix + "wk"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (xn @ p[prefix + "wv"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    q = _rope(q, positions[:, None, :], cfg.rope_theta)
+    k = _rope(k, positions[:, None, :], cfg.rope_theta)
+    if use_pallas_attn:
+        o = flash_attention(q, k, v, pad_len)
+    else:
+        o = _attention_dense(q, k, v, pad_len)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ p[prefix + "wo"]
+    xn = _rmsnorm(x, p[prefix + "mlp_norm"], cfg.norm_eps)
+    gate = jax.nn.silu(xn @ p[prefix + "w_gate"])
+    x = x + (gate * (xn @ p[prefix + "w_up"])) @ p[prefix + "w_down"]
+    return x
+
+
+def forward(cfg: ModelConfig, flat_params, tokens, pad_len,
+            use_pallas_attn: bool = False):
+    """tokens [B, S] int32 -> logits [B, S, V]."""
+    p = _unflatten(cfg, flat_params)
+    b, s = tokens.shape
+    x = p["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    for l in range(cfg.n_layers):
+        x = _block(cfg, p, f"layer{l}.", x, pad_len, positions, use_pallas_attn)
+    x = _rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return x @ p["head"]
+
+
+def _resp_logprobs(cfg, logits, tokens, resp_len):
+    """Logprob+entropy of tokens[:, P:P+resp_len] from logits[:, P-1:...]."""
+    P = cfg.prompt_len
+    sel = logits[:, P - 1:P + resp_len - 1, :]
+    lsm = jax.nn.log_softmax(sel, axis=-1)
+    targets = tokens[:, P:P + resp_len]
+    lp = jnp.take_along_axis(lsm, targets[..., None], axis=-1)[..., 0]
+    ent = -jnp.sum(jnp.exp(lsm) * lsm, axis=-1)
+    return lp, ent
+
+
+# --------------------------------------------------------------------------
+# Rollout: prefill + KV-cache decode scan
+# --------------------------------------------------------------------------
+
+
+def _decode_attention(q, k_cache, v_cache, pos, pad_len):
+    """Single-position attention against a full-size cache.
+
+    q: [B, H, 1, Hd]; caches [B, H, S_tot, Hd]; pos: scalar current index.
+    """
+    s_tot = k_cache.shape[2]
+    scale = 1.0 / float(q.shape[-1]) ** 0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_cache) * scale  # [B,H,1,S]
+    j = jnp.arange(s_tot)
+    valid = jnp.logical_and(j[None, :] <= pos, j[None, :] >= pad_len[:, None])
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v_cache)
+
+
+def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
+             early_exit: bool = True):
+    """Sample up to cfg.max_resp tokens after the prompt window.
+
+    Args:
+      prompts: [B, P] int32 left-padded prompts.
+      pad_len: [B] int32 (P - true prompt length).
+      seed:    int32 scalar; per-call fresh randomness.
+      temp:    f32 scalar sampling temperature (behaviour logprobs are always
+               recorded at temperature 1.0 — the policy's own distribution).
+      early_exit: lower the decode loop as a `while` that stops as soon as
+        every row has emitted EOS (§Perf opt-1: rollouts whose longest
+        response is L cost O(L) decode steps instead of O(T)). Produces
+        bit-identical sampled prefixes to the fixed-trip scan because the
+        per-step key is fold_in(key, t).
+
+    Returns:
+      tokens [B, P+T] int32 (positions past each row's stop point stay PAD),
+      behaviour_lp [B, T] f32.
+    """
+    p = _unflatten(cfg, flat_params)
+    B, P = prompts.shape
+    T = cfg.max_resp
+    S = P + T
+    h, hd, L = cfg.n_heads, cfg.head_dim, cfg.n_layers
+
+    # ---- Prefill over the prompt window, building full-size caches.
+    x = p["embed"][prompts]
+    positions = jnp.broadcast_to(jnp.arange(P)[None, :], (B, P))
+    k_caches, v_caches = [], []
+    for l in range(L):
+        pre = f"layer{l}."
+        xn = _rmsnorm(x, p[pre + "attn_norm"], cfg.norm_eps)
+        q = (xn @ p[pre + "wq"]).reshape(B, P, h, hd).transpose(0, 2, 1, 3)
+        k = (xn @ p[pre + "wk"]).reshape(B, P, h, hd).transpose(0, 2, 1, 3)
+        v = (xn @ p[pre + "wv"]).reshape(B, P, h, hd).transpose(0, 2, 1, 3)
+        q = _rope(q, positions[:, None, :], cfg.rope_theta)
+        k = _rope(k, positions[:, None, :], cfg.rope_theta)
+        o = _attention_dense(q, k, v, pad_len)
+        o = o.transpose(0, 2, 1, 3).reshape(B, P, cfg.d_model)
+        x = x + o @ p[pre + "wo"]
+        xn = _rmsnorm(x, p[pre + "mlp_norm"], cfg.norm_eps)
+        gate = jax.nn.silu(xn @ p[pre + "w_gate"])
+        x = x + (gate * (xn @ p[pre + "w_up"])) @ p[pre + "w_down"]
+        kc = jnp.zeros((B, h, S, hd), jnp.float32).at[:, :, :P, :].set(k)
+        vc = jnp.zeros((B, h, S, hd), jnp.float32).at[:, :, :P, :].set(v)
+        k_caches.append(kc)
+        v_caches.append(vc)
+    xn = _rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    logits0 = (xn @ p["head"])[:, -1, :]  # predicts position P
+
+    key = jax.random.PRNGKey(seed)
+    tokens0 = jnp.concatenate(
+        [prompts, jnp.zeros((B, T), jnp.int32)], axis=1)
+
+    def step(carry, t):
+        caches_k, caches_v, logits, tokens = carry
+        pos = P + t
+        key_t = jax.random.fold_in(key, t)
+        tok = jax.random.categorical(key_t, logits / temp, axis=-1)  # [B]
+        lp_t = jnp.take_along_axis(
+            jax.nn.log_softmax(logits, axis=-1), tok[:, None], axis=-1)[:, 0]
+        tokens = jax.lax.dynamic_update_slice(
+            tokens, tok[:, None], (0, pos))
+        # One decode step at position `pos`.
+        x = p["embed"][tok][:, None, :]  # [B, 1, D]
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        new_k, new_v = [], []
+        for l in range(L):
+            pre = f"layer{l}."
+            xn = _rmsnorm(x, p[pre + "attn_norm"], cfg.norm_eps)
+            q = (xn @ p[pre + "wq"]).reshape(B, 1, h, hd).transpose(0, 2, 1, 3)
+            k = (xn @ p[pre + "wk"]).reshape(B, 1, h, hd).transpose(0, 2, 1, 3)
+            v = (xn @ p[pre + "wv"]).reshape(B, 1, h, hd).transpose(0, 2, 1, 3)
+            q = _rope(q, posv[:, None, :], cfg.rope_theta)
+            k = _rope(k, posv[:, None, :], cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice(
+                caches_k[l], k, (0, 0, pos, 0))
+            vc = jax.lax.dynamic_update_slice(
+                caches_v[l], v, (0, 0, pos, 0))
+            o = _decode_attention(q, kc, vc, pos, pad_len)
+            o = o.transpose(0, 2, 1, 3).reshape(B, 1, cfg.d_model)
+            x = x + o @ p[pre + "wo"]
+            xn = _rmsnorm(x, p[pre + "mlp_norm"], cfg.norm_eps)
+            gate = jax.nn.silu(xn @ p[pre + "w_gate"])
+            x = x + (gate * (xn @ p[pre + "w_up"])) @ p[pre + "w_down"]
+            new_k.append(kc)
+            new_v.append(vc)
+        xn = _rmsnorm(x, p["final_norm"], cfg.norm_eps)
+        logits_next = (xn @ p["head"])[:, 0, :]
+        return (tuple(new_k), tuple(new_v), logits_next, tokens), lp_t
+
+    if not early_exit:
+        carry0 = (tuple(k_caches), tuple(v_caches), logits0, tokens0)
+        (_, _, _, tokens), lps = jax.lax.scan(step, carry0, jnp.arange(T))
+        return tokens, lps.T  # [B, P+T], [B, T]
+
+    # Early-exit variant: while_loop with an all-rows-done predicate.
+    lps0 = jnp.zeros((B, T), jnp.float32)
+    done0 = jnp.zeros((B,), jnp.bool_)
+
+    def cond(state):
+        t, done, _ = state[0], state[1], state[2]
+        return jnp.logical_and(t < T, jnp.logical_not(jnp.all(done)))
+
+    def body(state):
+        t, done, lps, carry = state
+        carry, lp_t = step(carry, t)
+        lps = jax.lax.dynamic_update_slice(lps, lp_t[:, None], (0, t))
+        tok_t = jax.lax.dynamic_slice(
+            carry[3], (0, P + t), (B, 1))[:, 0]
+        done = jnp.logical_or(done, tok_t == cfg.eos_id)
+        return (t + 1, done, lps, carry)
+
+    carry0 = (tuple(k_caches), tuple(v_caches), logits0, tokens0)
+    _, _, lps, carry = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), done0, lps0, carry0))
+    return carry[3], lps
+
+
+# --------------------------------------------------------------------------
+# Scoring, NAT gradient, optimiser, pretraining
+# --------------------------------------------------------------------------
+
+
+def score(cfg: ModelConfig, flat_params, tokens, pad_len, resp_len: int,
+          use_pallas_attn: bool = False):
+    """tokens [B, P+resp_len] -> (logprobs [B, resp_len], entropy [B, resp_len])."""
+    logits = forward(cfg, flat_params, tokens, pad_len, use_pallas_attn)
+    return _resp_logprobs(cfg, logits, tokens, resp_len)
+
+
+def nat_grad(cfg: ModelConfig, flat_params, tokens, ht_w, adv, old_lp,
+             inv_len, pad_len, bucket: int):
+    """NAT learner gradient over one length-bucket micro-batch.
+
+    tokens: [B, P+bucket]; ht_w/old_lp: [B, bucket]; adv/inv_len/pad_len: [B].
+    Returns (grads list in param order, metrics [loss, tok, ent, clip, kl]).
+    The scalar loss is a SUM over the micro-batch; the coordinator divides by
+    the number of sequences in the full logical batch via ``scale`` at apply
+    time, so gradient accumulation across buckets stays exact.
+    """
+    mask = (ht_w > 0.0).astype(jnp.float32)
+
+    def loss_fn(params):
+        logits = forward(cfg, params, tokens, pad_len)
+        new_lp, ent = _resp_logprobs(cfg, logits, tokens, bucket)
+        loss_tok, clip_ind = nat_loss_tokens(
+            new_lp, old_lp, ht_w, adv, inv_len, cfg.clip_eps)
+        loss = jnp.sum(loss_tok)
+        tok = jnp.sum(mask)
+        ent_sum = jnp.sum(jax.lax.stop_gradient(ent) * mask)
+        clip_sum = jnp.sum(clip_ind * mask)
+        kl_sum = jnp.sum((old_lp - jax.lax.stop_gradient(new_lp)) * mask)
+        return loss, jnp.stack([loss, tok, ent_sum, clip_sum, kl_sum])
+
+    (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        list(flat_params))
+    return tuple(grads) + (metrics,)
+
+
+def adamw_apply(cfg: ModelConfig, flat_params, m, v, step, grads, scale):
+    """AdamW with decoupled weight decay and global-norm clipping.
+
+    step: f32 scalar (1-based update index); scale: f32 multiplier applied to
+    the accumulated gradient sums (1 / sequences-in-batch).
+    Returns params', m', v', metrics [grad_norm_before_clip].
+    """
+    g = [gi * scale for gi in grads]
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(gi)) for gi in g))
+    factor = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    g = [gi * factor for gi in g]
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_p, new_m, new_v = [], [], []
+    decay_skip = {i for i, (n, _) in enumerate(param_spec(cfg))
+                  if n.endswith("_norm")}
+    for i, (pi, mi, vi, gi) in enumerate(zip(flat_params, m, v, g)):
+        mi = b1 * mi + (1.0 - b1) * gi
+        vi = b2 * vi + (1.0 - b2) * jnp.square(gi)
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + cfg.adam_eps)
+        wd = 0.0 if i in decay_skip else cfg.weight_decay
+        pi = pi - cfg.lr * (update + wd * pi)
+        new_p.append(pi)
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (jnp.stack([gnorm]),)
+
+
+def pretrain_step(cfg: ModelConfig, flat_params, m, v, step, tokens,
+                  loss_mask, pad_len):
+    """Fused next-token CE gradient + AdamW update (SFT phase).
+
+    tokens: [B, S_pt] int32 in the SAME layout as rollout/scoring — prompt
+    LEFT-padded into the fixed window, response following it (so SFT and RL
+    see identical RoPE positions and attention masks);
+    loss_mask: [B, S_pt-1] f32 over predicted positions;
+    pad_len: [B] int32 left-pad lengths.
+    """
+
+    def loss_fn(params):
+        logits = forward(cfg, params, tokens, pad_len)
+        lsm = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+        tgt = tokens[:, 1:]
+        lp = jnp.take_along_axis(lsm, tgt[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+        return -jnp.sum(lp * loss_mask) / denom
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(flat_params))
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(gi)) for gi in grads))
+    factor = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_p, new_m, new_v = [], [], []
+    decay_skip = {i for i, (n, _) in enumerate(param_spec(cfg))
+                  if n.endswith("_norm")}
+    for i, (pi, mi, vi, gi) in enumerate(zip(flat_params, m, v, grads)):
+        gi = gi * factor
+        mi = b1 * mi + (1.0 - b1) * gi
+        vi = b2 * vi + (1.0 - b2) * jnp.square(gi)
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + cfg.adam_eps)
+        wd = 0.0 if i in decay_skip else cfg.weight_decay
+        pi = pi - cfg.pretrain_lr * (update + wd * pi)
+        new_p.append(pi)
+        new_m.append(mi)
+        new_v.append(vi)
+    return (tuple(new_p) + tuple(new_m) + tuple(new_v)
+            + (jnp.stack([loss, gnorm]),))

@@ -1,0 +1,77 @@
+"""L1 §Perf analysis: VMEM footprint + MXU-utilisation estimates per block
+shape for the NAT-loss and flash-attention Pallas kernels.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the L1
+optimisation target is structural (DESIGN.md §8): block shapes must
+(a) fit comfortably in the ~16 MiB VMEM with room for double buffering,
+(b) align to the f32 (8, 128) TPU tile, and (c) for attention, keep the MXU
+contraction dimension >= 128 wherever possible.
+
+Run: python -m compile.vmem_analysis
+"""
+
+from __future__ import annotations
+
+VMEM_BYTES = 16 * 1024 * 1024
+TILE = (8, 128)  # f32 sublane x lane
+
+
+def nat_loss_vmem(bb: int, bt: int) -> dict:
+    """Fwd kernel tiles: 3x [bb,bt] in, 2x [bb,1] in, 2x [bb,bt] out."""
+    in_bytes = 4 * (3 * bb * bt + 2 * bb)
+    out_bytes = 4 * (2 * bb * bt)
+    total = in_bytes + out_bytes
+    return {
+        "block": (bb, bt),
+        "bytes": total,
+        "vmem_frac": total / VMEM_BYTES,
+        "double_buffer_ok": 2 * total < VMEM_BYTES,
+        "tile_aligned": bb % TILE[0] == 0 and bt % TILE[1] == 0,
+    }
+
+
+def attention_vmem(bq: int, bk: int, s: int, dh: int) -> dict:
+    """Streaming state: q [bq,dh], one k/v block [bk,dh] each, score tile
+    [bq,bk], online-softmax state (m,l [bq,1], acc [bq,dh])."""
+    total = 4 * (bq * dh + 2 * bk * dh + bq * bk + 2 * bq + bq * dh)
+    # MXU utilisation estimate: contraction dims of the two matmuls
+    mxu = min(dh, 128) / 128 * min(bk, 128) / 128
+    return {
+        "block": (bq, bk),
+        "bytes": total,
+        "vmem_frac": total / VMEM_BYTES,
+        "double_buffer_ok": 2 * total < VMEM_BYTES,
+        "mxu_contraction_util": round(mxu, 3),
+        "hbm_traffic_per_q_tile_bytes": 4 * 2 * s * dh,  # stream K+V once
+    }
+
+
+def main() -> None:
+    print("NAT-loss kernel block sweep (chosen: 8x128)")
+    print(f"{'block':>12} {'KiB':>8} {'vmem%':>7} {'2xbuf':>6} {'aligned':>8}")
+    for bb, bt in [(1, 128), (8, 128), (8, 256), (8, 512), (16, 512), (64, 1024)]:
+        r = nat_loss_vmem(bb, bt)
+        print(f"{str(r['block']):>12} {r['bytes']/1024:>8.1f} "
+              f"{100*r['vmem_frac']:>6.2f}% {str(r['double_buffer_ok']):>6} "
+              f"{str(r['tile_aligned']):>8}")
+    print("\nFlash-attention block sweep (chosen: 64x64, dh=64, S=256)")
+    print(f"{'block':>12} {'KiB':>8} {'vmem%':>7} {'2xbuf':>6} {'mxu':>6}")
+    for bq, bk in [(16, 16), (64, 64), (128, 128), (256, 128), (512, 256)]:
+        r = attention_vmem(bq, bk, 256, 64)
+        print(f"{str(r['block']):>12} {r['bytes']/1024:>8.1f} "
+              f"{100*r['vmem_frac']:>6.2f}% {str(r['double_buffer_ok']):>6} "
+              f"{r['mxu_contraction_util']:>6}")
+    print(
+        "\nReading: the NAT-loss tile (8,128) uses <0.1% of VMEM — the kernel\n"
+        "is HBM-bandwidth-bound, so larger token tiles (8,512) amortise grid\n"
+        "overhead while staying tile-aligned; whole-suffix tiles with ht_w==0\n"
+        "can skip their HBM fetch under an RPC prefix schedule. Attention at\n"
+        "(64,64) fits double-buffered with 25% MXU contraction utilisation on\n"
+        "dh=64 heads; (128,128) reaches 100% lane utilisation and is the\n"
+        "preferred real-TPU shape (kept at 64 here for interpret-mode test\n"
+        "latency)."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""AOT pipeline: lowering, manifest consistency, HLO-text executability."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+def _entry_param_count(text: str) -> int:
+    """Count parameters of the ENTRY computation only (nested computations
+    in HLO text also contain parameter() instructions)."""
+    start = text.index("ENTRY")
+    depth = 0
+    end = start
+    for i, ch in enumerate(text[start:], start):
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return text[start:end].count(" parameter(")
+
+
+class TestLowering:
+    def test_all_artifacts_lower_and_contain_entry(self):
+        for name, lowered in [
+            ("generate", aot.lower_generate(CFG)),
+            ("score", aot.lower_score(CFG, CFG.buckets[-1])),
+            ("grad", aot.lower_grad(CFG, CFG.buckets[0])),
+            ("apply", aot.lower_apply(CFG)),
+            ("pretrain", aot.lower_pretrain(CFG)),
+        ]:
+            text = aot.to_hlo_text(lowered)
+            assert "ENTRY" in text, name
+            assert "HloModule" in text, name
+
+    def test_grad_artifact_parameter_count(self):
+        """Input arity contract with the Rust runtime."""
+        lowered = aot.lower_grad(CFG, CFG.buckets[0])
+        text = aot.to_hlo_text(lowered)
+        n_params = len(M.param_spec(CFG))
+        count = _entry_param_count(text)
+        assert count == n_params + 6, (count, n_params)
+
+    def test_apply_artifact_parameter_count(self):
+        lowered = aot.lower_apply(CFG)
+        text = aot.to_hlo_text(lowered)
+        n = len(M.param_spec(CFG))
+        assert _entry_param_count(text) == 4 * n + 2
+
+
+class TestManifest:
+    def test_offsets_are_contiguous(self):
+        man = aot.build_manifest(CFG)
+        off = 0
+        for p in man["params"]:
+            assert p["offset"] == off
+            assert p["size"] == int(np.prod(p["shape"]))
+            off += p["size"]
+        assert man["param_count"] == off == M.param_count(CFG)
+
+    def test_manifest_matches_spec(self):
+        man = aot.build_manifest(CFG)
+        spec = M.param_spec(CFG)
+        assert len(man["params"]) == len(spec)
+        for entry, (name, shape) in zip(man["params"], spec):
+            assert entry["name"] == name
+            assert tuple(entry["shape"]) == tuple(shape)
+
+    def test_grad_buckets_cover_config(self):
+        man = aot.build_manifest(CFG)
+        assert sorted(int(b) for b in man["artifacts"]["grad"]) == \
+            sorted(CFG.buckets)
+
+
+class TestBuiltArtifacts:
+    """Validate the on-disk artifact set if `make artifacts` has run."""
+
+    ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                       "tiny")
+
+    @pytest.fixture(autouse=True)
+    def _skip_if_missing(self):
+        if not os.path.exists(os.path.join(self.ART, "manifest.json")):
+            pytest.skip("artifacts/tiny not built")
+
+    def test_init_params_size_matches_manifest(self):
+        man = json.load(open(os.path.join(self.ART, "manifest.json")))
+        raw = os.path.getsize(os.path.join(self.ART, "init_params.bin"))
+        assert raw == man["param_count"] * 4
+
+    def test_all_listed_artifacts_exist(self):
+        man = json.load(open(os.path.join(self.ART, "manifest.json")))
+        arts = man["artifacts"]
+        files = [arts["generate"], arts["apply"], arts["pretrain"]]
+        files += list(arts["grad"].values()) + list(arts["score"].values())
+        for f in files:
+            path = os.path.join(self.ART, f)
+            assert os.path.exists(path), f
+            with open(path) as fh:
+                assert "ENTRY" in fh.read()

@@ -1,0 +1,151 @@
+"""Statistical validation of Proposition 1 and Appendix B.
+
+Monte-Carlo over mask draws: the HT-corrected masked gradient must be an
+unbiased estimator of the full-token GRPO gradient for URS and RPC, while
+deterministic truncation keeps a persistent bias. Also checks the URS 1/p
+second-moment inflation (Sec. 3.1) and the det-trunc MSE decomposition
+(App. B.5) directionally.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import masking_ref as mk
+from compile import model as M
+from compile.kernels import ref as kref
+
+CFG = M.PRESETS["tiny"]
+BUCKET = CFG.buckets[-1]  # mask over the full response window
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(42)
+    B = 4
+    S = CFG.prompt_len + BUCKET
+    tokens = jnp.asarray(rng.integers(1, CFG.vocab, (B, S)), jnp.int32)
+    adv = jnp.asarray(rng.normal(0, 1, B).astype(np.float32))
+    lens = rng.integers(BUCKET // 2, BUCKET + 1, B)  # true response lengths
+    pad = jnp.zeros((B,), jnp.int32)
+    params = M.init_params(CFG, seed=7)
+    logits = M.forward(CFG, params, tokens, pad)
+    old_lp, _ = M._resp_logprobs(CFG, logits, tokens, BUCKET)
+    old_lp = old_lp + 0.1 * jnp.asarray(
+        rng.normal(0, 1, old_lp.shape).astype(np.float32))
+    return params, tokens, adv, lens, pad, old_lp
+
+
+def _grad_for_weights(batch, ht_w):
+    params, tokens, adv, lens, pad, old_lp = batch
+    inv_len = jnp.asarray((1.0 / lens).astype(np.float32))
+
+    def loss(ps):
+        logits = M.forward(CFG, ps, tokens, pad)
+        new_lp, _ = M._resp_logprobs(CFG, logits, tokens, BUCKET)
+        lt, _ = kref.nat_loss_tokens_ref(new_lp, old_lp, jnp.asarray(ht_w),
+                                         adv, inv_len, CFG.clip_eps)
+        return jnp.sum(lt)
+
+    g = jax.grad(loss)(list(params))
+    return np.concatenate([np.asarray(x).ravel() for x in g])
+
+
+def _full_weights(lens):
+    w = np.zeros((len(lens), BUCKET), np.float32)
+    for i, t in enumerate(lens):
+        w[i, :t] = 1.0
+    return w
+
+
+def _sampled_weights(lens, rng, scheme, **kw):
+    w = np.zeros((len(lens), BUCKET), np.float32)
+    for i, t in enumerate(lens):
+        if scheme == "urs":
+            _, wi = mk.urs_mask(rng, t, kw["p"])
+        elif scheme == "rpc":
+            _, wi = mk.rpc_mask(rng, t, kw["c"])
+        elif scheme == "det":
+            _, wi = mk.det_trunc_mask(t, kw["frac"])
+        w[i, :t] = wi
+    return w
+
+
+@pytest.mark.parametrize("scheme,kw", [
+    ("urs", {"p": 0.5}),
+    ("rpc", {"c": 8}),
+])
+def test_ht_estimator_is_unbiased(batch, scheme, kw):
+    """Averaged masked gradient converges to the full gradient; det-trunc
+    (tested below) does not. 200 draws, cosine + relative-error criteria."""
+    lens = batch[3]
+    g_full = _grad_for_weights(batch, _full_weights(lens))
+    rng = np.random.default_rng(0)
+    acc = np.zeros_like(g_full)
+    n = 200
+    for _ in range(n):
+        acc += _grad_for_weights(batch,
+                                 _sampled_weights(lens, rng, scheme, **kw))
+    g_hat = acc / n
+    cos = float(g_hat @ g_full /
+                (np.linalg.norm(g_hat) * np.linalg.norm(g_full)))
+    rel = float(np.linalg.norm(g_hat - g_full) / np.linalg.norm(g_full))
+    assert cos > 0.99, (scheme, cos, rel)
+    assert rel < 0.2, (scheme, cos, rel)
+
+
+def test_det_trunc_is_biased(batch):
+    """Deterministic truncation converges to the WRONG gradient."""
+    lens = batch[3]
+    g_full = _grad_for_weights(batch, _full_weights(lens))
+    # det-trunc is deterministic: its expectation is its single draw
+    g_det = _grad_for_weights(
+        batch, _sampled_weights(lens, np.random.default_rng(0), "det",
+                                frac=0.5))
+    rel = float(np.linalg.norm(g_det - g_full) / np.linalg.norm(g_full))
+    assert rel > 0.3, rel  # persistent bias, does not vanish with averaging
+
+
+def test_urs_second_moment_inflation():
+    """E||g_hat||^2 = ||g||^2 / p for a single-token URS estimate."""
+    rng = np.random.default_rng(3)
+    g = 1.7
+    for p in (0.25, 0.5):
+        draws = (rng.random(200_000) < p).astype(np.float64) / p * g
+        second = np.mean(draws ** 2)
+        np.testing.assert_allclose(second, g * g / p, rtol=0.03)
+
+
+def test_variance_ordering_urs_vs_rpc_vs_det(batch):
+    """App. B: det-trunc has ~zero variance (but bias); URS/RPC have spread.
+
+    MSE(det) must be dominated by bias^2; MSE(urs/rpc) by variance.
+    """
+    lens = batch[3]
+    g_full = _grad_for_weights(batch, _full_weights(lens))
+    rng = np.random.default_rng(1)
+    n = 60
+
+    def draws(scheme, **kw):
+        return np.stack([
+            _grad_for_weights(batch,
+                              _sampled_weights(lens, rng, scheme, **kw))
+            for _ in range(n)])
+
+    d_urs = draws("urs", p=0.5)
+    d_rpc = draws("rpc", c=8)
+    d_det = np.stack([_grad_for_weights(
+        batch, _sampled_weights(lens, rng, "det", frac=0.5))] * 2)
+
+    def var(d):
+        return float(np.mean(np.var(d, axis=0)))
+
+    def bias2(d):
+        return float(np.mean((d.mean(axis=0) - g_full) ** 2))
+
+    assert var(d_det) < 1e-12
+    assert var(d_urs) > var(d_det)
+    assert var(d_rpc) > var(d_det)
+    assert bias2(d_det) > 5 * bias2(d_urs)
+    assert bias2(d_det) > 5 * bias2(d_rpc)

@@ -1,0 +1,151 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, nat_loss, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def _case(seed, b, t, adv_scale=1.0):
+    rng = np.random.default_rng(seed)
+    new_lp = jnp.asarray(rng.normal(-2.0, 0.7, (b, t)).astype(np.float32))
+    old_lp = new_lp + jnp.asarray(rng.normal(0, 0.3, (b, t)).astype(np.float32))
+    keep = rng.random((b, t)) < 0.6
+    p_inc = rng.uniform(0.2, 1.0, (b, t)).astype(np.float32)
+    ht_w = jnp.asarray(np.where(keep, 1.0 / p_inc, 0.0).astype(np.float32))
+    adv = jnp.asarray((adv_scale * rng.normal(0, 1, b)).astype(np.float32))
+    inv_len = jnp.asarray(1.0 / rng.integers(1, t + 1, b).astype(np.float32))
+    return new_lp, old_lp, ht_w, adv, inv_len
+
+
+class TestNatLossForward:
+    @given(seed=st.integers(0, 10_000), b=st.integers(1, 9),
+           t=st.integers(1, 200))
+    def test_matches_ref(self, seed, b, t):
+        args = _case(seed, b, t)
+        lt, ci = nat_loss.nat_loss_tokens(*args, 0.2)
+        lt_r, ci_r = ref.nat_loss_tokens_ref(*args, 0.2)
+        np.testing.assert_allclose(lt, lt_r, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(ci, ci_r)
+
+    @given(seed=st.integers(0, 10_000),
+           clip_eps=st.floats(0.05, 0.5))
+    def test_clip_eps_sweep(self, seed, clip_eps):
+        args = _case(seed, 4, 33)
+        lt, ci = nat_loss.nat_loss_tokens(*args, clip_eps)
+        lt_r, ci_r = ref.nat_loss_tokens_ref(*args, clip_eps)
+        np.testing.assert_allclose(lt, lt_r, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(ci, ci_r)
+
+    def test_excluded_tokens_contribute_zero(self):
+        new_lp, old_lp, ht_w, adv, inv_len = _case(3, 4, 50)
+        ht_w = ht_w.at[:, 10:].set(0.0)
+        lt, _ = nat_loss.nat_loss_tokens(new_lp, old_lp, ht_w, adv, inv_len, 0.2)
+        assert np.all(np.asarray(lt[:, 10:]) == 0.0)
+
+    def test_block_shape_invariance(self):
+        """Different tilings must produce identical numerics."""
+        args = _case(11, 7, 97)
+        base, _ = nat_loss.nat_loss_tokens(*args, 0.2)
+        for bb, bt in [(1, 8), (2, 32), (8, 256), (4, 17)]:
+            out, _ = nat_loss.nat_loss_tokens(*args, 0.2, bb, bt)
+            np.testing.assert_allclose(out, base, rtol=1e-6)
+
+    def test_identity_ratio_reduces_to_pg(self):
+        """old == new => ratio 1, never clipped, loss = -w*A/T."""
+        rng = np.random.default_rng(0)
+        lp = jnp.asarray(rng.normal(-1, 0.5, (3, 20)).astype(np.float32))
+        ht_w = jnp.ones((3, 20), jnp.float32) * 2.0
+        adv = jnp.asarray([1.0, -0.5, 0.0], jnp.float32)
+        inv_len = jnp.asarray([0.05, 0.05, 0.05], jnp.float32)
+        lt, ci = nat_loss.nat_loss_tokens(lp, lp, ht_w, adv, inv_len, 0.2)
+        np.testing.assert_allclose(
+            lt, -2.0 * adv[:, None] * 0.05 * np.ones((3, 20)), rtol=1e-6)
+        assert np.all(np.asarray(ci) == 0.0)
+
+
+class TestNatLossBackward:
+    @given(seed=st.integers(0, 10_000), b=st.integers(1, 6),
+           t=st.integers(1, 150))
+    def test_grad_matches_ref_autodiff(self, seed, b, t):
+        new_lp, old_lp, ht_w, adv, inv_len = _case(seed, b, t)
+        rng = np.random.default_rng(seed + 1)
+        g = jnp.asarray(rng.normal(0, 1, (b, t)).astype(np.float32))
+
+        def f(nl):
+            return jnp.sum(nat_loss.nat_loss_tokens(
+                nl, old_lp, ht_w, adv, inv_len, 0.2)[0] * g)
+
+        def fr(nl):
+            return jnp.sum(ref.nat_loss_tokens_ref(
+                nl, old_lp, ht_w, adv, inv_len, 0.2)[0] * g)
+
+        np.testing.assert_allclose(jax.grad(f)(new_lp), jax.grad(fr)(new_lp),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_grad_matches_analytic(self):
+        new_lp, old_lp, ht_w, adv, inv_len = _case(5, 4, 64)
+        g = jnp.ones((4, 64), jnp.float32)
+        got = jax.grad(lambda nl: jnp.sum(nat_loss.nat_loss_tokens(
+            nl, old_lp, ht_w, adv, inv_len, 0.2)[0]))(new_lp)
+        want = ref.nat_loss_grad_ref(new_lp, old_lp, ht_w, adv, inv_len, 0.2, g)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+    def test_clipped_tokens_have_zero_grad(self):
+        """Push ratios far outside the trust region; gradient must vanish."""
+        b, t = 2, 16
+        old_lp = jnp.full((b, t), -3.0, jnp.float32)
+        new_lp = jnp.full((b, t), -1.0, jnp.float32)  # ratio = e^2 >> 1.2
+        ht_w = jnp.ones((b, t), jnp.float32)
+        adv = jnp.asarray([1.0, 2.0], jnp.float32)  # positive adv + high ratio
+        inv_len = jnp.full((b,), 1.0 / t, jnp.float32)
+        got = jax.grad(lambda nl: jnp.sum(nat_loss.nat_loss_tokens(
+            nl, old_lp, ht_w, adv, inv_len, 0.2)[0]))(new_lp)
+        np.testing.assert_allclose(got, np.zeros((b, t)), atol=1e-8)
+
+
+class TestFlashAttention:
+    @given(seed=st.integers(0, 10_000), b=st.integers(1, 3),
+           h=st.integers(1, 4), s=st.integers(2, 80),
+           dh=st.sampled_from([4, 8, 16]))
+    def test_matches_ref(self, seed, b, h, s, dh):
+        rng = np.random.default_rng(seed)
+        q, k, v = (jnp.asarray(rng.normal(0, 1, (b, h, s, dh))
+                               .astype(np.float32)) for _ in range(3))
+        pad = jnp.asarray(rng.integers(0, s // 2 + 1, b), dtype=jnp.int32)
+        o = attention.flash_attention(q, k, v, pad, block_q=16, block_k=16)
+        o_r = ref.causal_attention_ref(q, k, v, pad)
+        valid = (np.arange(s)[None, :] >= np.asarray(pad)[:, None])
+        m = valid[:, None, :, None]
+        np.testing.assert_allclose(np.where(m, np.asarray(o), 0),
+                                   np.where(m, np.asarray(o_r), 0),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_block_shape_invariance(self):
+        rng = np.random.default_rng(1)
+        q, k, v = (jnp.asarray(rng.normal(0, 1, (2, 2, 40, 8))
+                               .astype(np.float32)) for _ in range(3))
+        pad = jnp.asarray([0, 5], dtype=jnp.int32)
+        base = attention.flash_attention(q, k, v, pad, block_q=8, block_k=8)
+        for bq, bk in [(16, 8), (8, 16), (40, 40), (64, 32)]:
+            o = attention.flash_attention(q, k, v, pad, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(o, base, rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        """Perturbing a future key/value must not change earlier outputs."""
+        rng = np.random.default_rng(2)
+        q, k, v = (jnp.asarray(rng.normal(0, 1, (1, 2, 32, 8))
+                               .astype(np.float32)) for _ in range(3))
+        pad = jnp.zeros((1,), jnp.int32)
+        o1 = attention.flash_attention(q, k, v, pad, block_q=8, block_k=8)
+        k2 = k.at[:, :, 20:, :].add(100.0)
+        v2 = v.at[:, :, 20:, :].add(-50.0)
+        o2 = attention.flash_attention(q, k2, v2, pad, block_q=8, block_k=8)
+        np.testing.assert_allclose(o1[:, :, :20], o2[:, :, :20],
+                                   rtol=1e-6, atol=1e-6)

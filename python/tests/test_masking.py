@@ -1,0 +1,68 @@
+"""Properties of the reference NAT samplers (mirrors rust proptests)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import masking_ref as mk
+
+settings.register_profile("mask", max_examples=50, deadline=None)
+settings.load_profile("mask")
+
+
+@given(t=st.integers(1, 300), c=st.integers(1, 300))
+def test_rpc_survival_properties(t, c):
+    p = mk.rpc_survival(t, c)
+    assert p.shape == (t,)
+    assert p[0] == 1.0                       # p_{i,1} = 1
+    assert np.all(p > 0)                     # HT requirement
+    assert np.all(np.diff(p) <= 1e-7)        # monotone non-increasing
+    cc = min(max(c, 1), t)
+    assert np.allclose(p[:cc], 1.0)          # mandatory prefix
+    assert np.isclose(p[-1], 1.0 if cc == t else 1.0 / (t - cc + 1))
+
+
+@given(t=st.integers(1, 200), c=st.integers(1, 200), seed=st.integers(0, 999))
+def test_rpc_mask_is_prefix_and_weights_match(t, c, seed):
+    rng = np.random.default_rng(seed)
+    m, w = mk.rpc_mask(rng, t, c)
+    # contiguous prefix
+    kept = int(m.sum())
+    assert np.all(m[:kept] == 1) and np.all(m[kept:] == 0)
+    assert kept >= min(max(c, 1), t)
+    p = mk.rpc_survival(t, c)
+    np.testing.assert_allclose(w, m / p, rtol=1e-6)
+
+
+@given(t=st.integers(1, 200), seed=st.integers(0, 999),
+       p=st.floats(0.05, 1.0))
+def test_urs_weights(t, seed, p):
+    rng = np.random.default_rng(seed)
+    m, w = mk.urs_mask(rng, t, p)
+    np.testing.assert_allclose(w, m / p, rtol=1e-6)
+    assert set(np.unique(m)).issubset({0.0, 1.0})
+
+
+def test_rpc_empirical_inclusion_matches_survival():
+    """Monte-Carlo check: E[m_t] == p_t (the HT premise)."""
+    t, c, n = 40, 5, 20000
+    rng = np.random.default_rng(0)
+    acc = np.zeros(t)
+    for _ in range(n):
+        m, _ = mk.rpc_mask(rng, t, c)
+        acc += m
+    p_hat = acc / n
+    np.testing.assert_allclose(p_hat, mk.rpc_survival(t, c), atol=0.02)
+
+
+def test_rpc_expected_selected_ratio():
+    """E[L]/T = 1/2 + C/(2T) — the paper's Fig. 3 ~0.54-0.56 prediction."""
+    t, c, n = 100, 10, 20000
+    rng = np.random.default_rng(1)
+    tot = sum(mk.rpc_mask(rng, t, c)[0].sum() for _ in range(n)) / n
+    assert abs(tot / t - (0.5 + c / (2 * t))) < 0.01
+
+
+def test_det_trunc_suffix_never_selected():
+    m, w = mk.det_trunc_mask(100, 0.5)
+    assert m[:50].all() and not m[50:].any()
+    np.testing.assert_array_equal(m, w)

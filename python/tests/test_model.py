@@ -1,0 +1,211 @@
+"""L2 model invariants: shapes, causality, padding, rollout consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def _prompts(b, seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(rng.integers(1, CFG.vocab, (b, CFG.prompt_len)),
+                          dtype=jnp.int32)
+    plen = jnp.asarray(rng.integers(1, CFG.prompt_len + 1, b), jnp.int32)
+    pad = CFG.prompt_len - plen
+    return prompts, pad
+
+
+class TestForward:
+    def test_logits_shape(self, params):
+        prompts, pad = _prompts(3)
+        logits = M.forward(CFG, params, prompts, pad)
+        assert logits.shape == (3, CFG.prompt_len, CFG.vocab)
+
+    def test_causality(self, params):
+        """Changing a future token must not change earlier REAL logits.
+
+        Positions inside the left pad have no valid keys (their attention
+        output is an undefined uniform average) and are never read by any
+        consumer; causality is asserted on real positions only.
+        """
+        prompts, pad = _prompts(2, seed=1)
+        l1 = M.forward(CFG, params, prompts, pad)
+        mod = prompts.at[:, -1].set((prompts[:, -1] + 1) % CFG.vocab)
+        l2 = M.forward(CFG, params, mod, pad)
+        d = np.abs(np.asarray(l1) - np.asarray(l2)).max(axis=2)
+        for b in range(2):
+            real = slice(int(pad[b]), CFG.prompt_len - 1)
+            assert d[b, real].max() < 1e-5
+        assert not np.allclose(l1[:, -1], l2[:, -1])
+
+    def test_pad_content_invariance(self, params):
+        """Tokens inside the left pad must not influence any real position."""
+        prompts, _ = _prompts(2, seed=2)
+        pad = jnp.asarray([7, 3], jnp.int32)
+        altered = prompts.at[0, :7].set(5).at[1, :3].set(9)
+        l1 = M.forward(CFG, params, prompts, pad)
+        l2 = M.forward(CFG, params, altered, pad)
+        # positions >= pad are real; embeddings at pad positions differ but
+        # must not leak through attention into real positions
+        np.testing.assert_allclose(l1[0, 7:], l2[0, 7:], rtol=2e-5, atol=1e-5)
+        np.testing.assert_allclose(l1[1, 3:], l2[1, 3:], rtol=2e-5, atol=1e-5)
+
+    def test_pallas_attention_path_matches_dense(self, params):
+        prompts, pad = _prompts(2, seed=3)
+        l_dense = M.forward(CFG, params, prompts, pad, use_pallas_attn=False)
+        l_pallas = M.forward(CFG, params, prompts, pad, use_pallas_attn=True)
+        valid = (np.arange(CFG.prompt_len)[None, :] >= np.asarray(pad)[:, None])
+        m = valid[:, :, None]
+        np.testing.assert_allclose(np.where(m, np.asarray(l_dense), 0),
+                                   np.where(m, np.asarray(l_pallas), 0),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestGenerate:
+    def test_shapes_and_prompt_preserved(self, params):
+        prompts, pad = _prompts(CFG.batch_rollout, seed=4)
+        toks, lps = M.generate(CFG, params, prompts, pad,
+                               jnp.int32(1), jnp.float32(1.0))
+        assert toks.shape == (CFG.batch_rollout, CFG.seq_total)
+        assert lps.shape == (CFG.batch_rollout, CFG.max_resp)
+        np.testing.assert_array_equal(toks[:, :CFG.prompt_len], prompts)
+
+    def test_deterministic_per_seed(self, params):
+        prompts, pad = _prompts(4, seed=5)
+        t1, l1 = M.generate(CFG, params, prompts, pad, jnp.int32(9),
+                            jnp.float32(1.0))
+        t2, l2 = M.generate(CFG, params, prompts, pad, jnp.int32(9),
+                            jnp.float32(1.0))
+        np.testing.assert_array_equal(t1, t2)
+        np.testing.assert_allclose(l1, l2)
+        t3, _ = M.generate(CFG, params, prompts, pad, jnp.int32(10),
+                           jnp.float32(1.0))
+        assert not np.array_equal(np.asarray(t1), np.asarray(t3))
+
+    def test_score_reproduces_behaviour_logprobs(self, params):
+        """THE consistency contract: learner-side scoring of rollout tokens
+        must reproduce the rollout's own logprobs (ratio == 1 on-policy)."""
+        prompts, pad = _prompts(4, seed=6)
+        toks, lps = M.generate(CFG, params, prompts, pad, jnp.int32(3),
+                               jnp.float32(1.0))
+        lp2, ent = M.score(CFG, params, toks, pad, CFG.max_resp)
+        np.testing.assert_allclose(lps, lp2, rtol=5e-4, atol=5e-5)
+        assert np.all(np.asarray(ent) >= 0)
+
+    def test_low_temperature_is_greedy(self, params):
+        prompts, pad = _prompts(3, seed=7)
+        t1, _ = M.generate(CFG, params, prompts, pad, jnp.int32(0),
+                           jnp.float32(1e-4))
+        t2, _ = M.generate(CFG, params, prompts, pad, jnp.int32(99),
+                           jnp.float32(1e-4))
+        np.testing.assert_array_equal(t1, t2)  # seed-independent at temp->0
+
+
+class TestNatGrad:
+    def _grad_inputs(self, bucket, seed=0):
+        rng = np.random.default_rng(seed)
+        B = CFG.batch_train
+        S = CFG.prompt_len + bucket
+        tokens = jnp.asarray(rng.integers(1, CFG.vocab, (B, S)), jnp.int32)
+        ht_w = jnp.asarray(rng.random((B, bucket)).astype(np.float32))
+        adv = jnp.asarray(rng.normal(0, 1, B).astype(np.float32))
+        old_lp = jnp.asarray(rng.normal(-3, 0.5, (B, bucket)).astype(np.float32))
+        inv_len = jnp.full((B,), 1.0 / bucket, jnp.float32)
+        pad = jnp.zeros((B,), jnp.int32)
+        return tokens, ht_w, adv, old_lp, inv_len, pad
+
+    def test_shapes(self, params):
+        bucket = CFG.buckets[0]
+        outs = M.nat_grad(CFG, params, *self._grad_inputs(bucket), bucket)
+        assert len(outs) == len(params) + 1
+        for g, p in zip(outs[:-1], params):
+            assert g.shape == p.shape
+        assert outs[-1].shape == (5,)
+
+    def test_zero_weights_give_zero_grads(self, params):
+        bucket = CFG.buckets[0]
+        tokens, ht_w, adv, old_lp, inv_len, pad = self._grad_inputs(bucket)
+        outs = M.nat_grad(CFG, params, tokens, jnp.zeros_like(ht_w), adv,
+                          old_lp, inv_len, pad, bucket)
+        for g in outs[:-1]:
+            np.testing.assert_allclose(g, np.zeros(g.shape), atol=1e-8)
+
+    def test_grad_matches_direct_autodiff(self, params):
+        """Pallas-kernel gradient path == jnp reference loss gradient."""
+        from compile.kernels import ref as kref
+        bucket = CFG.buckets[0]
+        args = self._grad_inputs(bucket, seed=3)
+        tokens, ht_w, adv, old_lp, inv_len, pad = args
+
+        def ref_loss(ps):
+            logits = M.forward(CFG, ps, tokens, pad)
+            new_lp, _ = M._resp_logprobs(CFG, logits, tokens, bucket)
+            lt, _ = kref.nat_loss_tokens_ref(new_lp, old_lp, ht_w, adv,
+                                             inv_len, CFG.clip_eps)
+            return jnp.sum(lt)
+
+        want = jax.grad(ref_loss)(list(params))
+        got = M.nat_grad(CFG, params, *args, bucket)[:-1]
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=2e-3, atol=1e-6)
+
+
+class TestOptimisers:
+    def test_adamw_apply_moves_params(self, params):
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        grads = [jnp.ones_like(p) * 0.01 for p in params]
+        outs = M.adamw_apply(CFG, params, m, v, jnp.float32(1.0), grads,
+                             jnp.float32(0.5))
+        n = len(params)
+        new_p = outs[:n]
+        gnorm = outs[-1]
+        assert gnorm.shape == (1,)
+        moved = sum(float(jnp.max(jnp.abs(a - b))) for a, b in
+                    zip(new_p, params))
+        assert moved > 0
+
+    def test_grad_clip_bounds_update(self, params):
+        """A huge gradient must produce the same update as a scaled one."""
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        g1 = [jnp.ones_like(p) * 1e3 for p in params]
+        g2 = [jnp.ones_like(p) * 1e6 for p in params]
+        o1 = M.adamw_apply(CFG, params, m, v, jnp.float32(1.0), g1,
+                           jnp.float32(1.0))
+        o2 = M.adamw_apply(CFG, params, m, v, jnp.float32(1.0), g2,
+                           jnp.float32(1.0))
+        n = len(params)
+        for a, b in zip(o1[:n], o2[:n]):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+    def test_pretrain_step_reduces_loss(self, params):
+        rng = np.random.default_rng(0)
+        B, S = CFG.batch_pretrain, CFG.pretrain_len
+        # a trivially learnable corpus: constant token sequences
+        tokens = jnp.asarray(np.tile(rng.integers(1, 8, (1, S)), (B, 1)),
+                             jnp.int32)
+        mask = jnp.ones((B, S - 1), jnp.float32)
+        p = [jnp.asarray(x) for x in params]
+        m = [jnp.zeros_like(x) for x in p]
+        v = [jnp.zeros_like(x) for x in p]
+        n = len(p)
+        losses = []
+        pad0 = jnp.zeros((B,), jnp.int32)
+        for step in range(8):
+            outs = M.pretrain_step(CFG, p, m, v, jnp.float32(step + 1),
+                                   tokens, mask, pad0)
+            p = list(outs[:n])
+            m = list(outs[n:2 * n])
+            v = list(outs[2 * n:3 * n])
+            losses.append(float(outs[-1][0]))
+        assert losses[-1] < losses[0] * 0.8, losses

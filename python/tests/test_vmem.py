@@ -1,0 +1,25 @@
+"""§Perf L1 structural checks: chosen Pallas block shapes satisfy the VMEM
+and tile-alignment constraints the DESIGN.md hardware-adaptation argues."""
+
+from compile import vmem_analysis as V
+from compile.kernels import attention, nat_loss
+
+
+def test_nat_loss_default_blocks_fit_and_align():
+    r = V.nat_loss_vmem(nat_loss.BLOCK_B, nat_loss.BLOCK_T)
+    assert r["double_buffer_ok"]
+    assert r["tile_aligned"]
+    assert r["vmem_frac"] < 0.01  # bandwidth-bound kernel, tiny working set
+
+
+def test_attention_default_blocks_fit():
+    r = V.attention_vmem(attention.BLOCK_Q, attention.BLOCK_K, 256, 64)
+    assert r["double_buffer_ok"]
+    assert r["vmem_frac"] < 0.05
+    assert r["mxu_contraction_util"] >= 0.25
+
+
+def test_larger_token_tiles_still_fit():
+    # the (8, 512) upgrade path discussed in DESIGN.md §8
+    r = V.nat_loss_vmem(8, 512)
+    assert r["double_buffer_ok"] and r["tile_aligned"]

@@ -1,0 +1,38 @@
+//! Microbench: bucket routing + micro-batch packing (host hot loop between
+//! rollout and the grad artifacts).
+use nat_rl::config::Method;
+use nat_rl::coordinator::batcher::{pack, LearnItem};
+use nat_rl::coordinator::masking::sample;
+use nat_rl::util::bench::Bench;
+use nat_rl::util::rng::Rng;
+
+fn items(n: usize, method: &Method, t_max: usize, rng: &mut Rng) -> Vec<LearnItem> {
+    (0..n)
+        .map(|_| {
+            let resp_len = 1 + rng.below(t_max as u64) as usize;
+            let m = sample(method, resp_len, rng);
+            LearnItem {
+                tokens: vec![7; 48 + t_max],
+                pad_len: 5,
+                resp_len,
+                ht_w: m.ht_w,
+                learn_len: m.learn_len,
+                adv: rng.normal() as f32,
+                old_lp: vec![-1.2; resp_len],
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let buckets = [32usize, 64, 96, 128];
+    let mut b = Bench::new("batcher");
+    let mut rng = Rng::new(1);
+    for n in [16usize, 64, 256] {
+        let grpo = items(n, &Method::Grpo, 128, &mut rng);
+        let rpc = items(n, &Method::Rpc { min_cut: 8 }, 128, &mut rng);
+        b.iter(&format!("pack_grpo/n={n}"), || pack(&grpo, &buckets, 48, 8));
+        b.iter(&format!("pack_rpc/n={n}"), || pack(&rpc, &buckets, 48, 8));
+    }
+    b.report();
+}

@@ -1,0 +1,26 @@
+//! Microbench: NAT mask sampling throughput (the per-sequence host-side
+//! cost the coordinator adds on top of vanilla GRPO — must be negligible
+//! next to a grad call).
+use nat_rl::config::Method;
+use nat_rl::coordinator::masking::{rpc_survival, sample};
+use nat_rl::util::bench::Bench;
+use nat_rl::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("masking");
+    let mut rng = Rng::new(0);
+    for t_i in [64usize, 192, 1024, 4096] {
+        b.iter(&format!("grpo/T={t_i}"), || sample(&Method::Grpo, t_i, &mut rng));
+        b.iter(&format!("urs_p0.5/T={t_i}"), || {
+            sample(&Method::Urs { p: 0.5 }, t_i, &mut rng)
+        });
+        b.iter(&format!("det_trunc/T={t_i}"), || {
+            sample(&Method::DetTrunc { frac: 0.5 }, t_i, &mut rng)
+        });
+        b.iter(&format!("rpc_c8/T={t_i}"), || {
+            sample(&Method::Rpc { min_cut: 8 }, t_i, &mut rng)
+        });
+        b.iter(&format!("rpc_survival/T={t_i}"), || rpc_survival(t_i, 8));
+    }
+    b.report();
+}

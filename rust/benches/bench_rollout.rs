@@ -1,0 +1,70 @@
+//! End-to-end rollout bench: one generate call (B_rollout sequences,
+//! prefill + max_resp KV-cache decode steps) per model config present.
+//! This is the paper's "inference" stage — NAT leaves it untouched, which
+//! Table 3's total-vs-learner split depends on.
+use std::path::Path;
+
+use nat_rl::coordinator::rollout::encode_prompt;
+use nat_rl::runtime::{ParamStore, Runtime};
+use nat_rl::tokenizer::Tokenizer;
+use nat_rl::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("rollout").slow();
+    for model in ["tiny", "small", "base"] {
+        let dir = format!("artifacts/{model}");
+        if !Path::new(&dir).join("manifest.json").exists() {
+            eprintln!("skip {model}: artifacts not built");
+            continue;
+        }
+        let rt = Runtime::load(Path::new(&dir)).unwrap();
+        let params = ParamStore::load_init(&rt.manifest).unwrap();
+        let d = rt.manifest.dims.clone();
+        let tok = Tokenizer::new();
+        let (row, pad) = encode_prompt(&tok, "e:3+4*2%7=", d.prompt_len).unwrap();
+        let prompts: Vec<i32> =
+            row.iter().cycle().take(d.batch_rollout * d.prompt_len).copied().collect();
+        let pads = vec![pad as i32; d.batch_rollout];
+        // warm the executables so compile time is not measured
+        rt.generate(&params, &prompts, &pads, 0, 1.0).unwrap();
+        let mut seed = 0;
+        b.iter(&format!("generate/{model}/B={}xT={}", d.batch_rollout, d.max_resp), || {
+            seed += 1;
+            rt.generate(&params, &prompts, &pads, seed, 1.0).unwrap()
+        });
+        // §Perf opt-1 A/B: fixed-trip-count decode (the pre-optimization
+        // rollout). With a random-init policy both run full length; with a
+        // trained policy (checkpoints/<model>_sft.bin) the early-exit
+        // variant stops at the batch's longest response.
+        if rt.generate_full(&params, &prompts, &pads, 0, 1.0).is_ok() {
+            let mut seed = 0;
+            b.iter(
+                &format!("generate_full/{model}/B={}xT={}", d.batch_rollout, d.max_resp),
+                || {
+                    seed += 1;
+                    rt.generate_full(&params, &prompts, &pads, seed, 1.0).unwrap()
+                },
+            );
+        }
+        // trained-policy A/B (realistic response-length distribution)
+        let ckpt = format!("checkpoints/{model}_sft.bin");
+        if Path::new(&ckpt).exists() {
+            if let Ok((trained, _)) = nat_rl::runtime::Checkpoint::load(
+                Path::new(&ckpt),
+                &rt.manifest,
+            ) {
+                let mut seed = 0;
+                b.iter(&format!("generate_sft/{model}/early_exit"), || {
+                    seed += 1;
+                    rt.generate(&trained, &prompts, &pads, seed, 1.0).unwrap()
+                });
+                let mut seed = 0;
+                b.iter(&format!("generate_sft/{model}/full"), || {
+                    seed += 1;
+                    rt.generate_full(&trained, &prompts, &pads, seed, 1.0).unwrap()
+                });
+            }
+        }
+    }
+    b.report();
+}

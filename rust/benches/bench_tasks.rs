@@ -1,0 +1,31 @@
+//! Microbench: synthetic task substrate (generation, CoT rendering,
+//! verification, SFT corpus building).
+use nat_rl::tasks::gen::gen_task;
+use nat_rl::tasks::render::render_cot;
+use nat_rl::tasks::verify::reward_text;
+use nat_rl::tasks::{Kind, SftCorpus, TaskMix, Tier};
+use nat_rl::tokenizer::Tokenizer;
+use nat_rl::util::bench::Bench;
+use nat_rl::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("tasks");
+    let mut rng = Rng::new(2);
+    for kind in Kind::ALL {
+        b.iter(&format!("gen/{kind:?}/hard"), || {
+            gen_task(&mut rng, kind, Tier::Hard, 0)
+        });
+    }
+    let task = gen_task(&mut rng, Kind::Expr, Tier::Hard, 0);
+    let cot = render_cot(&task);
+    b.iter("render_cot/expr_hard", || render_cot(&task));
+    b.iter("verify/expr_hard", || reward_text(&task, &cot));
+    let tok = Tokenizer::new();
+    b.iter("tokenize/cot", || tok.encode(&cot));
+    let mut b2 = Bench::new("sft_corpus").slow();
+    b2.iter("build_256_examples", || {
+        SftCorpus::build(&tok, 256, 48, 176, 0.15, 3, &TaskMix::default())
+    });
+    b.report();
+    b2.report();
+}

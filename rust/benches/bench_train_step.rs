@@ -1,0 +1,95 @@
+//! The Table 3 / Fig. 5 bench: learner cost per micro-batch bucket and the
+//! end-to-end optimizer step per NAT method.
+//!
+//! Regenerates the paper's key system rows on this host:
+//!   * grad/<model>/T=<bucket>  — forward+backward cost vs bucket length
+//!     (RPC's savings = the gap between buckets; URS/GRPO always pay the top
+//!     bucket).
+//!   * step/<model>/<method>    — full rollout->grad->apply step.
+use std::path::Path;
+
+use nat_rl::config::{Method, RunConfig};
+use nat_rl::coordinator::batcher::{pack, LearnItem};
+use nat_rl::coordinator::trainer::Trainer;
+use nat_rl::runtime::{GradAccum, OptState, ParamStore, Runtime};
+use nat_rl::tasks::Tier;
+use nat_rl::util::bench::Bench;
+use nat_rl::util::rng::Rng;
+
+fn grad_bench(b: &mut Bench, model: &str) {
+    let dir = format!("artifacts/{model}");
+    if !Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skip {model}: artifacts not built");
+        return;
+    }
+    let rt = Runtime::load(Path::new(&dir)).unwrap();
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let d = rt.manifest.dims.clone();
+    rt.warmup(&d.buckets).unwrap();
+    let mut rng = Rng::new(0);
+    for &bucket in &d.buckets {
+        let items: Vec<LearnItem> = (0..d.batch_train)
+            .map(|_| LearnItem {
+                tokens: (0..(d.prompt_len + d.max_resp))
+                    .map(|_| 3 + rng.below(40) as i32)
+                    .collect(),
+                pad_len: 4,
+                resp_len: bucket,
+                ht_w: vec![1.0; bucket],
+                learn_len: bucket,
+                adv: 0.5,
+                old_lp: vec![-1.5; bucket],
+            })
+            .collect();
+        let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
+        assert_eq!(mbs.len(), 1);
+        let mut acc = GradAccum::zeros(rt.manifest.param_count);
+        b.iter(&format!("grad/{model}/T={bucket}"), || {
+            acc.reset();
+            rt.grad(&mbs[0], &params, &mut acc).unwrap()
+        });
+    }
+    // apply cost (params+moments roundtrip + AdamW)
+    let mut p = params.clone();
+    let mut opt = OptState::zeros(&rt.manifest);
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    acc.flat.iter_mut().for_each(|g| *g = 1e-3);
+    acc.sequences = 8;
+    b.iter(&format!("apply/{model}"), || rt.apply(&mut p, &mut opt, &acc).unwrap());
+}
+
+fn step_bench(b: &mut Bench, model: &str) {
+    let dir = format!("artifacts/{model}");
+    if !Path::new(&dir).join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::load(Path::new(&dir)).unwrap();
+    rt.warmup(&rt.manifest.dims.buckets.clone()).unwrap();
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    for method in [
+        Method::Grpo,
+        Method::Urs { p: 0.5 },
+        Method::DetTrunc { frac: 0.5 },
+        Method::Rpc { min_cut: 8 },
+    ] {
+        let mut cfg = RunConfig::default();
+        cfg.model = model.into();
+        cfg.method = method;
+        cfg.rl.tiers = if model == "tiny" { vec![Tier::Easy] } else { Tier::ALL.to_vec() };
+        cfg.rl.prompts_per_step = 2;
+        cfg.rl.group_size = 8;
+        let mut tr = Trainer::new(&rt, cfg, base.clone(), OptState::zeros(&rt.manifest));
+        b.iter(&format!("step/{model}/{}", method.id()), || tr.step().unwrap());
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("train_step").slow();
+    for model in ["tiny", "small"] {
+        grad_bench(&mut b, model);
+    }
+    for model in ["tiny", "small"] {
+        step_bench(&mut b, model);
+    }
+    b.report();
+}

@@ -1,0 +1,8 @@
+//! Run configuration: NAT method selection + RL/pretrain/eval hyperparameters.
+//!
+//! Layered like a real launcher: built-in defaults ← `configs/*.toml` file
+//! ← command-line `--key value` overrides (see `util::cli` and main.rs).
+
+mod run;
+
+pub use run::{EvalCfg, Method, PretrainCfg, RlCfg, RunConfig};

@@ -1,0 +1,409 @@
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tasks::{Kind, TaskMix, Tier};
+use crate::util::json::Json;
+use crate::util::tomlite;
+
+/// NAT token-selection strategy (paper §3-4).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Vanilla GRPO: every response token backpropagates.
+    Grpo,
+    /// Uniform Random Sampling: Bernoulli(p) per token, HT weight 1/p.
+    Urs { p: f64 },
+    /// Deterministic prefix truncation (biased baseline): keep first frac.
+    DetTrunc { frac: f64 },
+    /// Random Prefix Cutting: L ~ Uniform({min_cut..T}), HT weights 1/p_t.
+    Rpc { min_cut: usize },
+    /// Information-aware selection (paper §7 future work, implemented):
+    /// inclusion probability p_t = floor + (1-floor) * normalized behaviour
+    /// surprisal, HT-corrected. Allocates compute to high-information
+    /// tokens; backward savings only (like URS).
+    Saliency { floor: f64 },
+}
+
+impl Method {
+    pub fn parse(name: &str, p: f64, frac: f64, min_cut: usize) -> Result<Method> {
+        Ok(match name {
+            "grpo" | "full" => Method::Grpo,
+            "urs" => Method::Urs { p },
+            "det" | "det_trunc" => Method::DetTrunc { frac },
+            "rpc" => Method::Rpc { min_cut },
+            "saliency" | "sal" => Method::Saliency { floor: p },
+            other => bail!("unknown method '{other}' (grpo|urs|det_trunc|rpc|saliency)"),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Method::Grpo => "GRPO".into(),
+            Method::Urs { p } => format!("URS(p={p})"),
+            Method::DetTrunc { frac } => format!("DetTrunc({frac})"),
+            Method::Rpc { min_cut } => format!("RPC(C={min_cut})"),
+            Method::Saliency { floor } => format!("SAL(floor={floor})"),
+        }
+    }
+
+    /// Short id used in file names.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Method::Grpo => "grpo",
+            Method::Urs { .. } => "urs",
+            Method::DetTrunc { .. } => "det",
+            Method::Rpc { .. } => "rpc",
+            Method::Saliency { .. } => "sal",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RlCfg {
+    /// Task tiers sampled during training (tiny configs: easy only — the
+    /// hard tiers' CoTs do not fit its 64-token response window).
+    pub tiers: Vec<Tier>,
+    pub steps: usize,
+    /// Prompts per optimizer step; each gets `group_size` rollouts.
+    pub prompts_per_step: usize,
+    /// G — group size for group-relative advantages.
+    pub group_size: usize,
+    pub temperature: f32,
+    /// Optimizer epochs over each rollout batch (DAPO-style mini-batching;
+    /// epochs >= 2 exercise the off-policy clipping path, ratio != 1).
+    pub ppo_epochs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct PretrainCfg {
+    pub steps: usize,
+    pub corpus_size: usize,
+    /// Label-noise rate of the SFT corpus (leaves RL headroom).
+    pub noise: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct EvalCfg {
+    pub every: usize,
+    pub tasks_per_tier: usize,
+    /// k for Acc@k / pass@k (paper: 16).
+    pub k: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub artifacts_dir: String,
+    pub results_dir: String,
+    pub checkpoints_dir: String,
+    pub method: Method,
+    pub seed: u64,
+    pub rl: RlCfg,
+    pub pretrain: PretrainCfg,
+    pub eval: EvalCfg,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "tiny".into(),
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+            checkpoints_dir: "checkpoints".into(),
+            method: Method::Rpc { min_cut: 8 },
+            seed: 0,
+            rl: RlCfg {
+                tiers: Tier::ALL.to_vec(),
+                steps: 60,
+                prompts_per_step: 2,
+                group_size: 8,
+                temperature: 1.0,
+                ppo_epochs: 1,
+            },
+            pretrain: PretrainCfg { steps: 300, corpus_size: 2048, noise: 0.25 },
+            eval: EvalCfg { every: 0, tasks_per_tier: 16, k: 16 },
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file over the defaults.
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        let table = tomlite::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let mut cfg = RunConfig::default();
+        let get = |sec: &str, key: &str| -> Option<&Json> {
+            table.get(sec).and_then(|m| m.get(key))
+        };
+        if let Some(v) = get("", "model").or(get("run", "model")) {
+            cfg.model = v.as_str().ok_or_else(|| anyhow!("model must be a string"))?.into();
+        }
+        if let Some(v) = get("run", "seed") {
+            cfg.seed = v.as_i64().ok_or_else(|| anyhow!("seed"))? as u64;
+        }
+        for (key, slot) in [
+            ("artifacts_dir", &mut cfg.artifacts_dir),
+            ("results_dir", &mut cfg.results_dir),
+            ("checkpoints_dir", &mut cfg.checkpoints_dir),
+        ] {
+            if let Some(v) = table.get("").and_then(|m| m.get(key)) {
+                *slot = v.as_str().ok_or_else(|| anyhow!("{key} must be a string"))?.into();
+            }
+        }
+        // method
+        let name = get("method", "name").and_then(Json::as_str).unwrap_or("rpc");
+        let p = get("method", "p").and_then(Json::as_f64).unwrap_or(0.5);
+        let frac = get("method", "frac").and_then(Json::as_f64).unwrap_or(0.5);
+        let min_cut = get("method", "min_cut").and_then(Json::as_usize).unwrap_or(8);
+        cfg.method = Method::parse(name, p, frac, min_cut)?;
+        // rl / pretrain / eval sections
+        macro_rules! setnum {
+            ($sec:literal, $key:literal, $slot:expr, $ty:ty) => {
+                if let Some(v) = get($sec, $key).and_then(Json::as_f64) {
+                    $slot = v as $ty;
+                }
+            };
+        }
+        if let Some(arr) = get("rl", "tiers").and_then(Json::as_arr) {
+            cfg.rl.tiers = arr
+                .iter()
+                .filter_map(Json::as_str)
+                .filter_map(Tier::from_str)
+                .collect();
+            if cfg.rl.tiers.is_empty() {
+                bail!("rl.tiers resolved to an empty list");
+            }
+        }
+        setnum!("rl", "steps", cfg.rl.steps, usize);
+        setnum!("rl", "prompts_per_step", cfg.rl.prompts_per_step, usize);
+        setnum!("rl", "group_size", cfg.rl.group_size, usize);
+        setnum!("rl", "temperature", cfg.rl.temperature, f32);
+        setnum!("rl", "ppo_epochs", cfg.rl.ppo_epochs, usize);
+        setnum!("pretrain", "steps", cfg.pretrain.steps, usize);
+        setnum!("pretrain", "corpus_size", cfg.pretrain.corpus_size, usize);
+        setnum!("pretrain", "noise", cfg.pretrain.noise, f64);
+        setnum!("eval", "every", cfg.eval.every, usize);
+        setnum!("eval", "tasks_per_tier", cfg.eval.tasks_per_tier, usize);
+        setnum!("eval", "k", cfg.eval.k, usize);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply a single `--key value` override (dotted path).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "model" => self.model = value.into(),
+            "seed" => self.seed = value.parse()?,
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "results_dir" => self.results_dir = value.into(),
+            "checkpoints_dir" => self.checkpoints_dir = value.into(),
+            "method" => {
+                self.method = Method::parse(
+                    value,
+                    self.method_p(),
+                    self.method_frac(),
+                    self.method_min_cut(),
+                )?
+            }
+            "method.p" => {
+                if let Method::Urs { ref mut p } = self.method {
+                    *p = value.parse()?;
+                } else {
+                    self.method = Method::Urs { p: value.parse()? };
+                }
+            }
+            "method.frac" => {
+                if let Method::DetTrunc { ref mut frac } = self.method {
+                    *frac = value.parse()?;
+                } else {
+                    self.method = Method::DetTrunc { frac: value.parse()? };
+                }
+            }
+            "method.min_cut" => {
+                if let Method::Rpc { ref mut min_cut } = self.method {
+                    *min_cut = value.parse()?;
+                } else {
+                    self.method = Method::Rpc { min_cut: value.parse()? };
+                }
+            }
+            "rl.tiers" => {
+                let tiers: Vec<Tier> =
+                    value.split(',').filter_map(|t| Tier::from_str(t.trim())).collect();
+                if tiers.is_empty() {
+                    bail!("--rl.tiers '{value}': no valid tiers (easy|medium|hard)");
+                }
+                self.rl.tiers = tiers;
+            }
+            "rl.steps" => self.rl.steps = value.parse()?,
+            "rl.prompts_per_step" => self.rl.prompts_per_step = value.parse()?,
+            "rl.group_size" => self.rl.group_size = value.parse()?,
+            "rl.temperature" => self.rl.temperature = value.parse()?,
+            "rl.ppo_epochs" => self.rl.ppo_epochs = value.parse()?,
+            "method.floor" => {
+                if let Method::Saliency { ref mut floor } = self.method {
+                    *floor = value.parse()?;
+                } else {
+                    self.method = Method::Saliency { floor: value.parse()? };
+                }
+            }
+            "pretrain.steps" => self.pretrain.steps = value.parse()?,
+            "pretrain.corpus_size" => self.pretrain.corpus_size = value.parse()?,
+            "pretrain.noise" => self.pretrain.noise = value.parse()?,
+            "eval.every" => self.eval.every = value.parse()?,
+            "eval.tasks_per_tier" => self.eval.tasks_per_tier = value.parse()?,
+            "eval.k" => self.eval.k = value.parse()?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        self.validate()
+    }
+
+    fn method_p(&self) -> f64 {
+        match self.method {
+            Method::Urs { p } => p,
+            _ => 0.5,
+        }
+    }
+
+    fn method_frac(&self) -> f64 {
+        match self.method {
+            Method::DetTrunc { frac } => frac,
+            _ => 0.5,
+        }
+    }
+
+    fn method_min_cut(&self) -> usize {
+        match self.method {
+            Method::Rpc { min_cut } => min_cut,
+            _ => 8,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.rl.group_size < 2 {
+            bail!("group_size must be >= 2 for group-relative advantages");
+        }
+        if self.rl.prompts_per_step == 0 || self.rl.steps == 0 {
+            bail!("rl.steps and rl.prompts_per_step must be positive");
+        }
+        if let Method::Urs { p } = self.method {
+            if !(0.0 < p && p <= 1.0) {
+                bail!("URS p must be in (0, 1], got {p}");
+            }
+        }
+        if let Method::DetTrunc { frac } = self.method {
+            if !(0.0 < frac && frac <= 1.0) {
+                bail!("DetTrunc frac must be in (0, 1], got {frac}");
+            }
+        }
+        if let Method::Saliency { floor } = self.method {
+            if !(0.0 < floor && floor <= 1.0) {
+                bail!("Saliency floor must be in (0, 1], got {floor}");
+            }
+        }
+        if self.rl.ppo_epochs == 0 {
+            bail!("rl.ppo_epochs must be >= 1");
+        }
+        Ok(())
+    }
+
+    pub fn artifact_dir(&self) -> std::path::PathBuf {
+        Path::new(&self.artifacts_dir).join(&self.model)
+    }
+
+    /// Task mixture for training and pretraining.
+    pub fn task_mix(&self) -> TaskMix {
+        TaskMix { kinds: Kind::ALL.to_vec(), tiers: self.rl.tiers.clone() }
+    }
+
+    /// Build from `--config file` plus dotted CLI overrides. Keys consumed
+    /// by subcommands themselves (ckpt/out/what/fig/seeds/verbose) are
+    /// skipped here.
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<RunConfig> {
+        let mut cfg = match args.get("config") {
+            Some(path) => RunConfig::from_file(Path::new(path))?,
+            None => RunConfig::default(),
+        };
+        const SKIP: [&str; 7] = ["config", "ckpt", "out", "what", "fig", "seeds", "bench-json"];
+        for (k, v) in &args.options {
+            if SKIP.contains(&k.as_str()) {
+                continue;
+            }
+            cfg.set(k, v)
+                .map_err(|e| anyhow!("applying override --{k} {v}: {e}"))?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("grpo", 0.5, 0.5, 8).unwrap(), Method::Grpo);
+        assert_eq!(Method::parse("urs", 0.3, 0.5, 8).unwrap(), Method::Urs { p: 0.3 });
+        assert_eq!(
+            Method::parse("det_trunc", 0.5, 0.4, 8).unwrap(),
+            Method::DetTrunc { frac: 0.4 }
+        );
+        assert_eq!(Method::parse("rpc", 0.5, 0.5, 100).unwrap(), Method::Rpc { min_cut: 100 });
+        assert!(Method::parse("nope", 0.5, 0.5, 8).is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut cfg = RunConfig::default();
+        cfg.set("model", "base").unwrap();
+        cfg.set("method", "urs").unwrap();
+        cfg.set("method.p", "0.25").unwrap();
+        cfg.set("rl.steps", "120").unwrap();
+        assert_eq!(cfg.model, "base");
+        assert_eq!(cfg.method, Method::Urs { p: 0.25 });
+        assert_eq!(cfg.rl.steps, 120);
+        assert!(cfg.set("bogus.key", "1").is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.set("method.p", "1.5").is_err());
+        assert!(cfg.set("rl.group_size", "1").is_err());
+    }
+
+    #[test]
+    fn tier_overrides() {
+        let mut cfg = RunConfig::default();
+        cfg.set("rl.tiers", "easy").unwrap();
+        assert_eq!(cfg.rl.tiers, vec![Tier::Easy]);
+        cfg.set("rl.tiers", "easy, hard").unwrap();
+        assert_eq!(cfg.rl.tiers, vec![Tier::Easy, Tier::Hard]);
+        assert!(cfg.set("rl.tiers", "bogus").is_err());
+    }
+
+    #[test]
+    fn from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.toml");
+        std::fs::write(
+            &path,
+            "model = \"small\"\n[method]\nname = \"rpc\"\nmin_cut = 16\n\
+             [rl]\nsteps = 42\ngroup_size = 4\n[pretrain]\nnoise = 0.3\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.model, "small");
+        assert_eq!(cfg.method, Method::Rpc { min_cut: 16 });
+        assert_eq!(cfg.rl.steps, 42);
+        assert_eq!(cfg.rl.group_size, 4);
+        assert_eq!(cfg.pretrain.noise, 0.3);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

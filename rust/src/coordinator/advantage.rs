@@ -1,0 +1,79 @@
+//! Group-relative advantages (GRPO, paper Eq. 2).
+
+/// epsilon in the normalised advantage denominator.
+pub const ADV_EPS: f64 = 1e-6;
+
+/// \hat A_i = (R_i - mean) / (std + eps), computed per group.
+/// Population std (1/G), matching the paper's Eq. 2.
+pub fn group_advantages(rewards: &[f32]) -> Vec<f32> {
+    let g = rewards.len();
+    if g == 0 {
+        return vec![];
+    }
+    let mean = rewards.iter().map(|&r| r as f64).sum::<f64>() / g as f64;
+    let var = rewards.iter().map(|&r| (r as f64 - mean).powi(2)).sum::<f64>() / g as f64;
+    let std = var.sqrt();
+    rewards.iter().map(|&r| ((r as f64 - mean) / (std + ADV_EPS)) as f32).collect()
+}
+
+/// Advantages for a flat reward slice organised as consecutive groups of
+/// size `group_size` (the rollout scheduler's layout).
+pub fn grouped_advantages(rewards: &[f32], group_size: usize) -> Vec<f32> {
+    assert!(group_size > 0 && rewards.len() % group_size == 0,
+        "rewards {} not divisible into groups of {group_size}", rewards.len());
+    rewards.chunks(group_size).flat_map(|g| group_advantages(g)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_variance_group_gets_zero_advantages() {
+        // all-correct or all-wrong groups provide no signal (std=0)
+        for r in [0.0f32, 1.0] {
+            let a = group_advantages(&[r; 8]);
+            assert!(a.iter().all(|&x| x.abs() < 1e-3), "{a:?}");
+        }
+    }
+
+    #[test]
+    fn advantages_are_standardised() {
+        let a = group_advantages(&[1.0, 0.0, 1.0, 0.0]);
+        let mean: f32 = a.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        // half correct: (1 - .5)/.5 = 1, (0 - .5)/.5 = -1
+        assert!((a[0] - 1.0).abs() < 1e-4);
+        assert!((a[1] + 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn single_winner_gets_large_advantage() {
+        let a = group_advantages(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(a[0] > 2.0);
+        assert!(a[1] < 0.0);
+        // winner's advantage balances the 7 losers
+        let sum: f32 = a.iter().sum();
+        assert!(sum.abs() < 1e-4);
+    }
+
+    #[test]
+    fn grouped_layout() {
+        let r = [1.0, 0.0, /* group 2 */ 1.0, 1.0];
+        let a = grouped_advantages(&r, 2);
+        assert_eq!(a.len(), 4);
+        assert!(a[0] > 0.0 && a[1] < 0.0);
+        assert!(a[2].abs() < 1e-3 && a[3].abs() < 1e-3); // no-signal group
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_groups_panic() {
+        grouped_advantages(&[1.0, 0.0, 1.0], 2);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(group_advantages(&[]).is_empty());
+    }
+}

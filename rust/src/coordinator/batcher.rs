@@ -1,0 +1,198 @@
+//! Length-bucketed micro-batching.
+//!
+//! Each learner item carries a `learn_len` from the NAT masker; the batcher
+//! routes it to the smallest compiled grad-artifact bucket that fits and
+//! packs fixed-size micro-batches (padding short rows with inert entries:
+//! zero HT weights and zero advantage contribute exactly nothing to the
+//! accumulated gradient). This is where RPC's forward savings materialise:
+//! GRPO/URS items always land in the top bucket, RPC items spread across
+//! buckets roughly uniformly.
+
+use crate::tokenizer::PAD;
+
+/// One response ready for the learner.
+#[derive(Clone, Debug)]
+pub struct LearnItem {
+    /// Full [P + max_resp] token row from the rollout (left-padded prompt).
+    pub tokens: Vec<i32>,
+    /// Left-pad length of the prompt window.
+    pub pad_len: usize,
+    /// True response length t_i (1..=max_resp), before any cutting.
+    pub resp_len: usize,
+    /// HT weights over 0..resp_len (from the masker).
+    pub ht_w: Vec<f32>,
+    /// Forward prefix the learner needs.
+    pub learn_len: usize,
+    /// Group-relative advantage.
+    pub adv: f32,
+    /// Behaviour logprobs over 0..resp_len.
+    pub old_lp: Vec<f32>,
+}
+
+/// A packed micro-batch for one grad-artifact bucket.
+#[derive(Clone, Debug)]
+pub struct MicroBatch {
+    pub bucket: usize,
+    /// Number of real (non-padding) rows.
+    pub real_rows: usize,
+    pub tokens: Vec<i32>,   // [B, P + bucket]
+    pub ht_w: Vec<f32>,     // [B, bucket]
+    pub adv: Vec<f32>,      // [B]
+    pub old_lp: Vec<f32>,   // [B, bucket]
+    pub inv_len: Vec<f32>,  // [B] = 1 / t_i (FULL response length)
+    pub pad_len: Vec<i32>,  // [B]
+}
+
+/// Route items to buckets and pack micro-batches of `batch` rows.
+pub fn pack(
+    items: &[LearnItem],
+    buckets: &[usize],
+    prompt_len: usize,
+    batch: usize,
+) -> Vec<MicroBatch> {
+    let mut by_bucket: Vec<Vec<&LearnItem>> = vec![Vec::new(); buckets.len()];
+    for item in items {
+        debug_assert!(item.learn_len >= 1 && item.learn_len <= item.resp_len);
+        debug_assert_eq!(item.ht_w.len(), item.resp_len);
+        let bi = buckets
+            .iter()
+            .position(|&b| b >= item.learn_len)
+            .unwrap_or(buckets.len() - 1);
+        by_bucket[bi].push(item);
+    }
+    let mut out = Vec::new();
+    for (bi, group) in by_bucket.iter().enumerate() {
+        let bucket = buckets[bi];
+        for chunk in group.chunks(batch) {
+            out.push(pack_one(chunk, bucket, prompt_len, batch));
+        }
+    }
+    out
+}
+
+fn pack_one(rows: &[&LearnItem], bucket: usize, prompt_len: usize, batch: usize) -> MicroBatch {
+    let s = prompt_len + bucket;
+    let mut mb = MicroBatch {
+        bucket,
+        real_rows: rows.len(),
+        tokens: vec![PAD; batch * s],
+        ht_w: vec![0.0; batch * bucket],
+        adv: vec![0.0; batch],
+        old_lp: vec![0.0; batch * bucket],
+        inv_len: vec![0.0; batch],
+        pad_len: vec![prompt_len as i32; batch],
+    };
+    for (r, item) in rows.iter().enumerate() {
+        // token prefix: prompt window + first `bucket` response tokens
+        mb.tokens[r * s..(r + 1) * s].copy_from_slice(&item.tokens[..s]);
+        let take = item.learn_len.min(bucket);
+        for t in 0..take {
+            mb.ht_w[r * bucket + t] = item.ht_w[t];
+            mb.old_lp[r * bucket + t] = item.old_lp[t];
+        }
+        mb.adv[r] = item.adv;
+        mb.inv_len[r] = 1.0 / item.resp_len as f32;
+        mb.pad_len[r] = item.pad_len as i32;
+    }
+    mb
+}
+
+/// Micro-batch (batch, seq) shapes for the analytic memory model.
+pub fn micro_shapes(mbs: &[MicroBatch], prompt_len: usize) -> Vec<(usize, usize)> {
+    mbs.iter().map(|m| (m.adv.len(), prompt_len + m.bucket)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: usize = 8;
+    const BUCKETS: [usize; 3] = [4, 8, 16];
+
+    fn item(resp_len: usize, learn_len: usize, adv: f32) -> LearnItem {
+        LearnItem {
+            tokens: (0..(P + 16) as i32).collect(),
+            pad_len: 2,
+            resp_len,
+            ht_w: (0..resp_len).map(|t| if t < learn_len { 1.5 } else { 0.0 }).collect(),
+            learn_len,
+            adv,
+            old_lp: (0..resp_len).map(|t| -(t as f32)).collect(),
+        }
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting_bucket() {
+        let items = vec![item(16, 3, 1.0), item(16, 4, 1.0), item(16, 5, 1.0), item(16, 16, 1.0)];
+        let mbs = pack(&items, &BUCKETS, P, 4);
+        let buckets: Vec<usize> = mbs.iter().map(|m| m.bucket).collect();
+        assert!(buckets.contains(&4));
+        assert!(buckets.contains(&8));
+        assert!(buckets.contains(&16));
+        let total_rows: usize = mbs.iter().map(|m| m.real_rows).sum();
+        assert_eq!(total_rows, 4);
+    }
+
+    #[test]
+    fn splits_into_fixed_micro_batches() {
+        let items: Vec<LearnItem> = (0..10).map(|_| item(16, 16, 0.5)).collect();
+        let mbs = pack(&items, &BUCKETS, P, 4);
+        assert_eq!(mbs.len(), 3); // 4 + 4 + 2
+        assert_eq!(mbs[2].real_rows, 2);
+        for m in &mbs {
+            assert_eq!(m.adv.len(), 4); // padded to full batch
+            assert_eq!(m.tokens.len(), 4 * (P + m.bucket));
+        }
+    }
+
+    #[test]
+    fn padding_rows_are_inert() {
+        let items = vec![item(16, 16, 2.0)];
+        let mbs = pack(&items, &BUCKETS, P, 4);
+        let m = &mbs[0];
+        for r in 1..4 {
+            assert_eq!(m.adv[r], 0.0);
+            assert_eq!(m.inv_len[r], 0.0);
+            assert!(m.ht_w[r * m.bucket..(r + 1) * m.bucket].iter().all(|&w| w == 0.0));
+        }
+    }
+
+    #[test]
+    fn weights_beyond_learn_len_are_zero_and_truncated_to_bucket() {
+        let items = vec![item(16, 6, 1.0)]; // routes to bucket 8
+        let mbs = pack(&items, &BUCKETS, P, 1);
+        let m = &mbs[0];
+        assert_eq!(m.bucket, 8);
+        assert!(m.ht_w[..6].iter().all(|&w| w == 1.5));
+        assert!(m.ht_w[6..8].iter().all(|&w| w == 0.0));
+        // inv_len reflects the FULL response length, not the cut
+        assert!((m.inv_len[0] - 1.0 / 16.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn token_rows_are_sliced_to_bucket_window() {
+        let items = vec![item(16, 3, 1.0)];
+        let mbs = pack(&items, &BUCKETS, P, 1);
+        let m = &mbs[0];
+        assert_eq!(m.bucket, 4);
+        assert_eq!(m.tokens.len(), P + 4);
+        assert_eq!(m.tokens[..P + 4], (0..(P + 4) as i32).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn learn_len_over_top_bucket_clamps() {
+        let items = vec![item(16, 16, 1.0)];
+        let mbs = pack(&items, &[4, 8], P, 1); // top bucket smaller than learn_len
+        assert_eq!(mbs[0].bucket, 8);
+        assert!(mbs[0].ht_w.iter().take(8).all(|&w| w > 0.0));
+    }
+
+    #[test]
+    fn micro_shapes_for_memory_model() {
+        let items = vec![item(16, 3, 1.0), item(16, 16, 1.0)];
+        let mbs = pack(&items, &BUCKETS, P, 4);
+        let shapes = micro_shapes(&mbs, P);
+        assert!(shapes.contains(&(4, P + 4)));
+        assert!(shapes.contains(&(4, P + 16)));
+    }
+}

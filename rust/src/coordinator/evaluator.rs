@@ -1,0 +1,105 @@
+//! Benchmark evaluation: Acc@k and pass@k at temperature 1.0 (paper §5.1:
+//! 16 independent responses per question).
+
+use anyhow::Result;
+
+use crate::coordinator::rollout::{encode_prompt, trim_at_eos};
+use crate::runtime::{ParamStore, Runtime};
+use crate::tasks::verify::reward_tokens;
+use crate::tasks::{EvalSet, Task, Tier};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub tier: Tier,
+    /// Mean over tasks of (correct draws / k).
+    pub acc_at_k: f64,
+    /// Mean over tasks of 1[any draw correct].
+    pub pass_at_k: f64,
+    pub mean_resp_len: f64,
+    pub tasks: usize,
+    pub k: usize,
+}
+
+/// Count correct completions for every task with k samples each.
+pub fn evaluate(
+    rt: &Runtime,
+    params: &ParamStore,
+    tok: &Tokenizer,
+    eval: &EvalSet,
+    k: usize,
+    temp: f32,
+    rng: &mut Rng,
+) -> Result<EvalResult> {
+    let d = &rt.manifest.dims;
+    let (b_roll, p, t_max) = (d.batch_rollout, d.prompt_len, d.max_resp);
+    let n = eval.tasks.len();
+    let mut correct = vec![0usize; n];
+    let mut len_sum = 0usize;
+    let mut len_cnt = 0usize;
+
+    // flat sample ids: task i, draw j -> i * k + j; chunked into B_roll rows
+    let total = n * k;
+    let encoded: Vec<(Vec<i32>, usize)> = eval
+        .tasks
+        .iter()
+        .map(|t: &Task| encode_prompt(tok, &t.prompt, p))
+        .collect::<Result<_>>()?;
+    let mut cursor = 0usize;
+    while cursor < total {
+        let chunk: Vec<usize> = (cursor..total.min(cursor + b_roll)).collect();
+        cursor += chunk.len();
+        let mut prompts = Vec::with_capacity(b_roll * p);
+        let mut pads = Vec::with_capacity(b_roll);
+        for row in 0..b_roll {
+            let flat_id = chunk.get(row).copied().unwrap_or(chunk[0]);
+            let (ref ids, pad) = encoded[flat_id / k];
+            prompts.extend_from_slice(ids);
+            pads.push(pad as i32);
+        }
+        let gen = rt.generate(params, &prompts, &pads, rng.next_i32_seed(), temp)?;
+        for (row, &flat_id) in chunk.iter().enumerate() {
+            let task_idx = flat_id / k;
+            let s = p + t_max;
+            let resp = &gen.tokens[row * s + p..(row + 1) * s];
+            let resp_len = trim_at_eos(resp);
+            len_sum += resp_len;
+            len_cnt += 1;
+            if reward_tokens(tok, &eval.tasks[task_idx], &resp[..resp_len]) > 0.5 {
+                correct[task_idx] += 1;
+            }
+        }
+    }
+
+    let acc = correct.iter().map(|&c| c as f64 / k as f64).sum::<f64>() / n as f64;
+    let pass = correct.iter().filter(|&&c| c > 0).count() as f64 / n as f64;
+    Ok(EvalResult {
+        tier: eval.tier,
+        acc_at_k: acc,
+        pass_at_k: pass,
+        mean_resp_len: len_sum as f64 / len_cnt.max(1) as f64,
+        tasks: n,
+        k,
+    })
+}
+
+/// Evaluate all three benchmark tiers.
+pub fn evaluate_all_tiers(
+    rt: &Runtime,
+    params: &ParamStore,
+    tasks_per_tier: usize,
+    k: usize,
+    temp: f32,
+    seed: u64,
+) -> Result<Vec<EvalResult>> {
+    let tok = Tokenizer::new();
+    let mut rng = Rng::new(seed ^ 0xEAA1);
+    Tier::ALL
+        .iter()
+        .map(|&tier| {
+            let set = EvalSet::build(tier, tasks_per_tier, 1234);
+            evaluate(rt, params, &tok, &set, k, temp, &mut rng)
+        })
+        .collect()
+}

@@ -1,0 +1,362 @@
+//! NAT token selection — the paper's core contribution (§3-4).
+//!
+//! Given a response of true length `t_i`, each strategy produces a
+//! Horvitz-Thompson weight vector `w_t = m_t / p_t` (zero where the token is
+//! excluded) plus the *learner length*: the forward prefix the gradient
+//! computation actually needs. The learner length is what the bucketed
+//! batcher routes on — it is exactly the mechanism by which RPC converts
+//! statistical masking into real forward/backward savings while URS cannot
+//! (causal attention still needs the full prefix).
+
+use crate::config::Method;
+use crate::util::rng::Rng;
+
+/// One sampled selection for one response.
+#[derive(Clone, Debug)]
+pub struct MaskSample {
+    /// HT weights over tokens 0..t_i (0.0 = excluded from the update).
+    pub ht_w: Vec<f32>,
+    /// Number of selected tokens.
+    pub kept: usize,
+    /// Forward prefix length the learner must process (<= t_i).
+    pub learn_len: usize,
+}
+
+impl MaskSample {
+    pub fn selected_ratio(&self) -> f64 {
+        if self.ht_w.is_empty() {
+            0.0
+        } else {
+            self.kept as f64 / self.ht_w.len() as f64
+        }
+    }
+}
+
+/// Survival function of RPC with minimum cutoff C (paper Eq. after (8)):
+/// p_t = 1 for t <= C, (T - t + 1) / (T - C + 1) for t > C (1-based t).
+pub fn rpc_survival(t_i: usize, min_cut: usize) -> Vec<f32> {
+    let c = min_cut.clamp(1, t_i);
+    (1..=t_i)
+        .map(|t| {
+            if t <= c {
+                1.0
+            } else {
+                (t_i - t + 1) as f32 / (t_i - c + 1) as f32
+            }
+        })
+        .collect()
+}
+
+/// Sample a token selection for a response of length `t_i`.
+/// For context-dependent strategies (Saliency) use [`sample_ctx`].
+pub fn sample(method: &Method, t_i: usize, rng: &mut Rng) -> MaskSample {
+    sample_ctx(method, t_i, None, rng)
+}
+
+/// Sample with optional per-token context (behaviour logprobs over
+/// 0..t_i), required by information-aware strategies.
+pub fn sample_ctx(
+    method: &Method,
+    t_i: usize,
+    old_lp: Option<&[f32]>,
+    rng: &mut Rng,
+) -> MaskSample {
+    assert!(t_i > 0, "empty response reached the masker");
+    match *method {
+        Method::Grpo => MaskSample { ht_w: vec![1.0; t_i], kept: t_i, learn_len: t_i },
+        Method::Urs { p } => {
+            let w = (1.0 / p) as f32;
+            let mut ht_w = vec![0.0f32; t_i];
+            let mut kept = 0;
+            for slot in ht_w.iter_mut() {
+                if rng.bernoulli(p) {
+                    *slot = w;
+                    kept += 1;
+                }
+            }
+            // URS gains no forward savings: the causal prefix up to the last
+            // *scored* token is still required; conservatively the full t_i
+            // (matches the paper's "URS retains near-full forward cost").
+            MaskSample { ht_w, kept, learn_len: t_i }
+        }
+        Method::DetTrunc { frac } => {
+            let k = ((frac * t_i as f64).floor() as usize).clamp(1, t_i);
+            let mut ht_w = vec![0.0f32; t_i];
+            for slot in ht_w.iter_mut().take(k) {
+                *slot = 1.0; // no HT correction exists: p = 0 on the suffix
+            }
+            MaskSample { ht_w, kept: k, learn_len: k }
+        }
+        Method::Rpc { min_cut } => {
+            let c = min_cut.clamp(1, t_i);
+            let cut = rng.range_inclusive(c as u64, t_i as u64) as usize;
+            let p = rpc_survival(t_i, min_cut);
+            let mut ht_w = vec![0.0f32; t_i];
+            for t in 0..cut {
+                ht_w[t] = 1.0 / p[t];
+            }
+            MaskSample { ht_w, kept: cut, learn_len: cut }
+        }
+        Method::Saliency { floor } => {
+            let p = saliency_probs(
+                old_lp.expect("Saliency masking needs behaviour logprobs"),
+                floor,
+            );
+            debug_assert_eq!(p.len(), t_i);
+            let mut ht_w = vec![0.0f32; t_i];
+            let mut kept = 0;
+            for (slot, &pt) in ht_w.iter_mut().zip(&p) {
+                if rng.bernoulli(pt as f64) {
+                    *slot = 1.0 / pt;
+                    kept += 1;
+                }
+            }
+            // independent masking: no forward savings (same as URS)
+            MaskSample { ht_w, kept, learn_len: t_i }
+        }
+    }
+}
+
+/// Inclusion probabilities for information-aware selection: behaviour
+/// surprisal u_t = -log pi_old(o_t) normalised to [0, 1] per sequence, then
+/// p_t = floor + (1 - floor) * u_t. High-surprisal ("high-entropy
+/// minority") tokens are (almost) always kept; boilerplate tokens are kept
+/// with probability ~floor and up-weighted by 1/p_t when they are — the
+/// paper's §7 future-work scheme inside the same HT framework.
+pub fn saliency_probs(old_lp: &[f32], floor: f64) -> Vec<f32> {
+    let max_u = old_lp.iter().map(|&lp| -lp).fold(1e-6f32, f32::max);
+    old_lp
+        .iter()
+        .map(|&lp| {
+            let u = (-lp / max_u).clamp(0.0, 1.0);
+            (floor as f32 + (1.0 - floor as f32) * u).clamp(floor as f32, 1.0)
+        })
+        .collect()
+}
+
+/// Expected selected-token ratio (paper Fig. 3 prediction): RPC with
+/// minimum cutoff keeps E[L]/T = 1/2 + C/(2T).
+pub fn expected_ratio(method: &Method, t_i: usize) -> f64 {
+    match *method {
+        Method::Grpo => 1.0,
+        Method::Urs { p } => p,
+        Method::DetTrunc { frac } => {
+            ((frac * t_i as f64).floor().max(1.0)) / t_i as f64
+        }
+        Method::Rpc { min_cut } => {
+            let c = min_cut.clamp(1, t_i) as f64;
+            let t = t_i as f64;
+            (c + t) / (2.0 * t)
+        }
+        // depends on the realised surprisal profile; floor is a lower bound
+        Method::Saliency { floor } => floor,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grpo_keeps_everything() {
+        let mut rng = Rng::new(0);
+        let s = sample(&Method::Grpo, 37, &mut rng);
+        assert_eq!(s.kept, 37);
+        assert_eq!(s.learn_len, 37);
+        assert!(s.ht_w.iter().all(|&w| w == 1.0));
+    }
+
+    #[test]
+    fn urs_weight_is_inverse_p_and_full_learn_len() {
+        let mut rng = Rng::new(1);
+        let s = sample(&Method::Urs { p: 0.25 }, 200, &mut rng);
+        assert_eq!(s.learn_len, 200);
+        for &w in &s.ht_w {
+            assert!(w == 0.0 || (w - 4.0).abs() < 1e-6);
+        }
+        assert_eq!(s.kept, s.ht_w.iter().filter(|&&w| w > 0.0).count());
+    }
+
+    #[test]
+    fn urs_keep_rate_concentrates() {
+        let mut rng = Rng::new(2);
+        let mut total = 0usize;
+        let n = 300;
+        for _ in 0..n {
+            total += sample(&Method::Urs { p: 0.5 }, 100, &mut rng).kept;
+        }
+        let rate = total as f64 / (n * 100) as f64;
+        assert!((rate - 0.5).abs() < 0.02, "{rate}");
+    }
+
+    #[test]
+    fn det_trunc_is_deterministic_prefix() {
+        let mut rng = Rng::new(3);
+        let s1 = sample(&Method::DetTrunc { frac: 0.5 }, 101, &mut rng);
+        let s2 = sample(&Method::DetTrunc { frac: 0.5 }, 101, &mut rng);
+        assert_eq!(s1.kept, 50);
+        assert_eq!(s1.learn_len, 50);
+        assert_eq!(s1.ht_w, s2.ht_w);
+        assert!(s1.ht_w[..50].iter().all(|&w| w == 1.0));
+        assert!(s1.ht_w[50..].iter().all(|&w| w == 0.0));
+    }
+
+    #[test]
+    fn rpc_mask_is_prefix_with_ht_weights() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let t_i = 1 + rng.below(150) as usize;
+            let c = 1 + rng.below(30) as usize;
+            let s = sample(&Method::Rpc { min_cut: c }, t_i, &mut rng);
+            let p = rpc_survival(t_i, c);
+            assert!(s.kept >= c.min(t_i));
+            assert_eq!(s.learn_len, s.kept);
+            for t in 0..t_i {
+                if t < s.kept {
+                    assert!((s.ht_w[t] - 1.0 / p[t]).abs() < 1e-6);
+                } else {
+                    assert_eq!(s.ht_w[t], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rpc_survival_properties() {
+        for (t_i, c) in [(1, 1), (10, 3), (100, 100), (64, 1), (200, 50)] {
+            let p = rpc_survival(t_i, c);
+            assert_eq!(p.len(), t_i);
+            assert_eq!(p[0], 1.0);
+            assert!(p.iter().all(|&x| x > 0.0)); // HT requirement
+            assert!(p.windows(2).all(|w| w[1] <= w[0] + 1e-7)); // monotone
+            let cc = c.clamp(1, t_i);
+            assert!(p[..cc].iter().all(|&x| x == 1.0));
+        }
+    }
+
+    #[test]
+    fn rpc_empirical_inclusion_matches_survival() {
+        // Monte-Carlo validation of the HT premise E[m_t] = p_t.
+        let (t_i, c, n) = (30, 4, 40_000);
+        let mut rng = Rng::new(5);
+        let method = Method::Rpc { min_cut: c };
+        let mut counts = vec![0u32; t_i];
+        for _ in 0..n {
+            let s = sample(&method, t_i, &mut rng);
+            for t in 0..s.kept {
+                counts[t] += 1;
+            }
+        }
+        let p = rpc_survival(t_i, c);
+        for t in 0..t_i {
+            let hat = counts[t] as f64 / n as f64;
+            assert!((hat - p[t] as f64).abs() < 0.02, "t={t} {hat} vs {}", p[t]);
+        }
+    }
+
+    #[test]
+    fn ht_weights_are_unbiased_token_counts() {
+        // sum_t w_t must average to t_i for unbiased strategies...
+        let t_i = 50;
+        let mut rng = Rng::new(6);
+        for method in [Method::Urs { p: 0.5 }, Method::Rpc { min_cut: 5 }] {
+            let n = 30_000;
+            let mut acc = 0.0f64;
+            for _ in 0..n {
+                acc += sample(&method, t_i, &mut rng).ht_w.iter().map(|&w| w as f64).sum::<f64>();
+            }
+            let mean = acc / n as f64;
+            assert!((mean - t_i as f64).abs() < 0.5, "{method:?}: {mean}");
+        }
+        // ...and to strictly less for the biased baseline.
+        let s = sample(&Method::DetTrunc { frac: 0.5 }, t_i, &mut rng);
+        assert_eq!(s.ht_w.iter().sum::<f32>(), 25.0);
+    }
+
+    #[test]
+    fn expected_ratio_formulas() {
+        assert_eq!(expected_ratio(&Method::Grpo, 100), 1.0);
+        assert_eq!(expected_ratio(&Method::Urs { p: 0.5 }, 100), 0.5);
+        assert_eq!(expected_ratio(&Method::DetTrunc { frac: 0.5 }, 100), 0.5);
+        // paper Fig. 3: C=100, T~3000 -> ratio slightly above 0.5
+        let r = expected_ratio(&Method::Rpc { min_cut: 10 }, 100);
+        assert!((r - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rpc_empirical_ratio_matches_paper_prediction() {
+        let mut rng = Rng::new(7);
+        let method = Method::Rpc { min_cut: 10 };
+        let n = 30_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += sample(&method, 100, &mut rng).selected_ratio();
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 0.55) < 0.01, "{mean}"); // ~0.55 like Fig. 3
+    }
+
+    #[test]
+    fn saliency_probs_are_floored_and_monotone_in_surprisal() {
+        let old_lp = [-0.1f32, -1.0, -5.0, -0.01];
+        let p = saliency_probs(&old_lp, 0.25);
+        assert!(p.iter().all(|&x| (0.25..=1.0).contains(&x)));
+        // most surprising token gets p == 1
+        assert!((p[2] - 1.0).abs() < 1e-6);
+        // less surprising => smaller p
+        assert!(p[3] < p[0] && p[0] < p[1] && p[1] < p[2]);
+    }
+
+    #[test]
+    fn saliency_mask_is_ht_unbiased() {
+        let old_lp: Vec<f32> = (0..40).map(|t| -0.2 - 0.1 * (t % 7) as f32).collect();
+        let method = Method::Saliency { floor: 0.3 };
+        let mut rng = Rng::new(10);
+        let n = 30_000;
+        let mut acc = 0.0f64;
+        for _ in 0..n {
+            let s = sample_ctx(&method, 40, Some(&old_lp), &mut rng);
+            acc += s.ht_w.iter().map(|&w| w as f64).sum::<f64>();
+            assert_eq!(s.learn_len, 40); // no forward savings
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 40.0).abs() < 0.3, "{mean}");
+    }
+
+    #[test]
+    fn saliency_keeps_surprising_tokens_more_often() {
+        let mut old_lp = vec![-0.05f32; 30];
+        old_lp[7] = -6.0; // one very surprising token
+        let method = Method::Saliency { floor: 0.2 };
+        let mut rng = Rng::new(11);
+        let mut kept7 = 0;
+        let mut kept0 = 0;
+        for _ in 0..2000 {
+            let s = sample_ctx(&method, 30, Some(&old_lp), &mut rng);
+            if s.ht_w[7] > 0.0 {
+                kept7 += 1;
+            }
+            if s.ht_w[0] > 0.0 {
+                kept0 += 1;
+            }
+        }
+        assert!(kept7 > 1950, "{kept7}");
+        assert!(kept0 < 600, "{kept0}");
+    }
+
+    #[test]
+    fn degenerate_lengths() {
+        let mut rng = Rng::new(8);
+        for method in [
+            Method::Grpo,
+            Method::Urs { p: 0.5 },
+            Method::DetTrunc { frac: 0.5 },
+            Method::Rpc { min_cut: 8 },
+        ] {
+            let s = sample(&method, 1, &mut rng);
+            assert_eq!(s.ht_w.len(), 1);
+            assert!(s.learn_len >= 1);
+            assert!(s.kept >= 1 || matches!(method, Method::Urs { .. }));
+        }
+    }
+}

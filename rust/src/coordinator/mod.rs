@@ -1,0 +1,17 @@
+//! L3 coordinator: the paper's system contribution.
+//!
+//! * [`masking`]   — NAT token selection (URS / RPC / DetTrunc / full) with
+//!                   Horvitz-Thompson weights: the core algorithm.
+//! * [`advantage`] — group-relative advantages (GRPO Eq. 2).
+//! * [`rollout`]   — grouped sampling through the AOT generate artifact.
+//! * [`batcher`]   — length-bucketed micro-batching (RPC's compute savings).
+//! * [`trainer`]   — the NAT×GRPO optimizer loop with paper-aligned metrics.
+//! * [`pretrainer`]— SFT base-model phase.
+//! * [`evaluator`] — Acc@k / pass@k benchmark evaluation.
+pub mod advantage;
+pub mod batcher;
+pub mod evaluator;
+pub mod masking;
+pub mod pretrainer;
+pub mod rollout;
+pub mod trainer;

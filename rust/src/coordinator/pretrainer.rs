@@ -1,0 +1,70 @@
+//! SFT pretraining phase: produces the "base model" the RL phase starts
+//! from (the reproduction's stand-in for Qwen checkpoints, DESIGN.md §2).
+//!
+//! The corpus is rendered gold CoT with controlled label noise, so the base
+//! model emits well-formed solutions with imperfect accuracy — leaving the
+//! verifiable-reward headroom RL needs to demonstrate lift.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::metrics::Recorder;
+use crate::runtime::{OptState, ParamStore, Runtime};
+use crate::tasks::SftCorpus;
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+pub struct PretrainResult {
+    pub params: ParamStore,
+    pub opt: OptState,
+    pub recorder: Recorder,
+    pub final_loss: f64,
+}
+
+pub fn pretrain(rt: &Runtime, cfg: &RunConfig, verbose: bool) -> Result<PretrainResult> {
+    let tok = Tokenizer::new();
+    let d = &rt.manifest.dims;
+    let mut rng = Rng::new(cfg.seed ^ 0x5F7A_11CE);
+    let corpus = SftCorpus::build(
+        &tok,
+        cfg.pretrain.corpus_size,
+        d.prompt_len,
+        d.pretrain_len,
+        cfg.pretrain.noise,
+        cfg.seed,
+        &cfg.task_mix(),
+    );
+    let mut params = ParamStore::load_init(&rt.manifest)?;
+    let mut opt = OptState::zeros(&rt.manifest);
+    let mut recorder = Recorder::new();
+    let mut step = 0u64;
+    let t0 = Instant::now();
+    'outer: loop {
+        let batches = corpus.batches(d.batch_pretrain, &mut rng);
+        for (tokens, mask, pads) in &batches {
+            if step >= cfg.pretrain.steps as u64 {
+                break 'outer;
+            }
+            let (loss, gnorm) = rt.pretrain_step(&mut params, &mut opt, tokens, mask, pads)?;
+            step += 1;
+            recorder.push("sft_loss", step, loss);
+            recorder.push("sft_grad_norm", step, gnorm);
+            if verbose && (step % 25 == 0 || step == 1) {
+                println!(
+                    "sft step {:>5} | loss {:.4} | gnorm {:.3} | {:.1}s",
+                    step,
+                    loss,
+                    gnorm,
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+        if batches.is_empty() {
+            anyhow::bail!("pretrain corpus produced no full batches");
+        }
+    }
+    let final_loss = recorder.tail_mean("sft_loss", 0.05).unwrap_or(f64::NAN);
+    Ok(PretrainResult { params, opt, recorder, final_loss })
+}

@@ -1,0 +1,136 @@
+//! Rollout scheduling: grouped sampling through the `generate` artifact.
+//!
+//! For each prompt we draw G completions (GRPO groups). Prompts are encoded
+//! and LEFT-padded to the fixed prompt window; responses are trimmed at the
+//! first EOS. Rewards are verified on the FULL decoded response — NAT never
+//! touches the reward path.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{ParamStore, Runtime};
+use crate::tasks::verify::reward_tokens;
+use crate::tasks::Task;
+use crate::tokenizer::{Tokenizer, EOS, PAD};
+use crate::util::rng::Rng;
+
+/// One completed rollout sequence.
+#[derive(Clone, Debug)]
+pub struct RolloutSeq {
+    /// Index into the step's task list (groups are contiguous).
+    pub task_idx: usize,
+    /// Full [P + T] row (left-padded prompt + response).
+    pub tokens: Vec<i32>,
+    pub pad_len: usize,
+    /// Response length after EOS trim (1..=T, EOS included).
+    pub resp_len: usize,
+    /// Behaviour logprobs over 0..resp_len.
+    pub old_lp: Vec<f32>,
+    pub reward: f32,
+}
+
+/// Encode and left-pad a prompt into a fixed window.
+pub fn encode_prompt(tok: &Tokenizer, prompt: &str, window: usize) -> Result<(Vec<i32>, usize)> {
+    let ids = tok
+        .try_encode(prompt)
+        .ok_or_else(|| anyhow::anyhow!("prompt has untokenizable chars: {prompt}"))?;
+    if ids.len() > window {
+        bail!("prompt of {} tokens exceeds window {window}: {prompt}", ids.len());
+    }
+    let pad = window - ids.len();
+    let mut row = vec![PAD; window];
+    row[pad..].copy_from_slice(&ids);
+    Ok((row, pad))
+}
+
+/// Trim a response at the first EOS (inclusive). Empty -> length 1 floor
+/// (the first token always exists; T >= 1).
+pub fn trim_at_eos(resp: &[i32]) -> usize {
+    match resp.iter().position(|&t| t == EOS) {
+        Some(i) => i + 1,
+        None => resp.len(),
+    }
+}
+
+/// Sample G completions per task. Returns sequences grouped task-major:
+/// `out[i * g + j]` is completion j of task i.
+pub fn run_group_rollouts(
+    rt: &Runtime,
+    params: &ParamStore,
+    tok: &Tokenizer,
+    tasks: &[Task],
+    g: usize,
+    temp: f32,
+    rng: &mut Rng,
+) -> Result<Vec<RolloutSeq>> {
+    let d = &rt.manifest.dims;
+    let (b_roll, p, t_max) = (d.batch_rollout, d.prompt_len, d.max_resp);
+    let total = tasks.len() * g;
+    // encode each distinct prompt once
+    let encoded: Vec<(Vec<i32>, usize)> = tasks
+        .iter()
+        .map(|t| encode_prompt(tok, &t.prompt, p))
+        .collect::<Result<_>>()?;
+    let mut out: Vec<Option<RolloutSeq>> = vec![None; total];
+    let mut flat: Vec<usize> = (0..total).collect(); // flat id = task_idx * g + j
+    // process in chunks of the rollout batch; the tail chunk is padded with
+    // repeats of the first prompt and the padding rows are discarded.
+    while !flat.is_empty() {
+        let chunk: Vec<usize> = flat.drain(..flat.len().min(b_roll)).collect();
+        let mut prompts = Vec::with_capacity(b_roll * p);
+        let mut pads = Vec::with_capacity(b_roll);
+        for row in 0..b_roll {
+            let flat_id = chunk.get(row).copied().unwrap_or(chunk[0]);
+            let (ref ids, pad) = encoded[flat_id / g];
+            prompts.extend_from_slice(ids);
+            pads.push(pad as i32);
+        }
+        let gen = rt.generate(params, &prompts, &pads, rng.next_i32_seed(), temp)?;
+        for (row, &flat_id) in chunk.iter().enumerate() {
+            let task_idx = flat_id / g;
+            let s = p + t_max;
+            let tokens = gen.tokens[row * s..(row + 1) * s].to_vec();
+            let resp = &tokens[p..];
+            let resp_len = trim_at_eos(resp);
+            let old_lp = gen.lp[row * t_max..row * t_max + resp_len].to_vec();
+            let reward = reward_tokens(tok, &tasks[task_idx], &resp[..resp_len]);
+            out[flat_id] = Some(RolloutSeq {
+                task_idx,
+                tokens,
+                pad_len: pads[row] as usize,
+                resp_len,
+                old_lp,
+                reward,
+            });
+        }
+    }
+    Ok(out.into_iter().map(|o| o.expect("rollout slot unfilled")).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_prompt_left_pads() {
+        let tok = Tokenizer::new();
+        let (row, pad) = encode_prompt(&tok, "a:1+2=", 10).unwrap();
+        assert_eq!(row.len(), 10);
+        assert_eq!(pad, 4);
+        assert!(row[..4].iter().all(|&t| t == PAD));
+        assert_eq!(tok.decode(&row), "a:1+2=");
+    }
+
+    #[test]
+    fn encode_prompt_rejects_oversize() {
+        let tok = Tokenizer::new();
+        assert!(encode_prompt(&tok, "a:11111+22222=", 5).is_err());
+    }
+
+    #[test]
+    fn trim_at_eos_variants() {
+        assert_eq!(trim_at_eos(&[5, 6, EOS, 9]), 3);
+        assert_eq!(trim_at_eos(&[EOS]), 1);
+        assert_eq!(trim_at_eos(&[5, 6, 7]), 3); // no EOS -> full length
+        assert_eq!(trim_at_eos(&[EOS, EOS, 5]), 1);
+    }
+}

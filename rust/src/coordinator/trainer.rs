@@ -1,0 +1,268 @@
+//! The NAT×GRPO training loop — the L3 system the paper's learner-side
+//! claims are measured on.
+//!
+//! One optimizer step:
+//!   rollout (G completions per prompt) → verify rewards → group-relative
+//!   advantages → NAT mask sampling + HT weights → bucketed micro-batching
+//!   → per-bucket grad artifacts with host-side accumulation → AdamW apply.
+//!
+//! Timing is split exactly as in the paper's Table 3: `t_learn` is the
+//! train-time-per-step *excluding inference*, `t_total` includes rollout.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::batcher::{micro_shapes, pack, LearnItem};
+use crate::coordinator::{advantage, masking, rollout};
+use crate::metrics::Recorder;
+use crate::model::memory;
+use crate::runtime::{GradAccum, GradMetrics, OptState, ParamStore, Runtime};
+use crate::tasks::TaskSampler;
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+/// Per-step scalar statistics (the rows behind Figures 1-6).
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    pub step: u64,
+    pub reward_mean: f64,
+    pub entropy: f64,
+    pub clip_frac: f64,
+    pub kl: f64,
+    pub grad_norm: f64,
+    /// Fraction of response tokens selected for the update (Fig. 3).
+    pub selected_ratio: f64,
+    pub resp_len_mean: f64,
+    /// Analytic mean allocated learner memory (Table 3 / Fig. 6 headline).
+    pub mem_gb: f64,
+    /// Analytic strict peak (largest single micro-batch).
+    pub peak_mem_gb: f64,
+    /// Train time per step WITHOUT inference (Table 3 col 2, Fig. 5).
+    pub t_learn_s: f64,
+    /// Total time per step including rollout (Table 3 col 3).
+    pub t_total_s: f64,
+    pub micro_batches: usize,
+    pub sequences: usize,
+}
+
+pub struct Trainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    pub tok: Tokenizer,
+    pub params: ParamStore,
+    pub opt: OptState,
+    pub recorder: Recorder,
+    sampler: TaskSampler,
+    rng_rollout: Rng,
+    rng_mask: Rng,
+    acc: GradAccum,
+    step: u64,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: RunConfig,
+        params: ParamStore,
+        opt: OptState,
+    ) -> Trainer<'rt> {
+        let mut root = Rng::new(cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+        let sampler = TaskSampler::new(root.fork(1).next_u64(), cfg.task_mix());
+        Trainer {
+            rt,
+            tok: Tokenizer::new(),
+            params,
+            opt,
+            recorder: Recorder::new(),
+            sampler,
+            rng_rollout: root.fork(2),
+            rng_mask: root.fork(3),
+            acc: GradAccum::zeros(rt.manifest.param_count),
+            cfg,
+            step: 0,
+        }
+    }
+
+    /// Run one optimizer step; returns its statistics.
+    pub fn step(&mut self) -> Result<StepStats> {
+        let t_start = Instant::now();
+        let d = &self.rt.manifest.dims;
+        let g = self.cfg.rl.group_size;
+        let tasks = self.sampler.batch(self.cfg.rl.prompts_per_step);
+
+        // --- Stage 1: rollout (inference) --------------------------------
+        let seqs = rollout::run_group_rollouts(
+            self.rt,
+            &self.params,
+            &self.tok,
+            &tasks,
+            g,
+            self.cfg.rl.temperature,
+            &mut self.rng_rollout,
+        )?;
+        let t_rollout = t_start.elapsed().as_secs_f64();
+
+        // --- Stage 2+3: learner (forward + backward + apply) -------------
+        // ppo_epochs >= 2 re-uses the rollout for multiple optimizer
+        // updates (DAPO-style mini-batching): the first epoch is on-policy
+        // (ratio 1), later epochs exercise the clipped off-policy path.
+        // Masks are re-sampled per epoch, so every position keeps nonzero
+        // inclusion probability per update.
+        let t_learn_start = Instant::now();
+        let rewards: Vec<f32> = seqs.iter().map(|s| s.reward).collect();
+        let advs = advantage::grouped_advantages(&rewards, g);
+
+        let mut metrics = GradMetrics::default();
+        let mut grad_norm = 0.0;
+        let mut sel_tokens = 0usize;
+        let mut tot_tokens = 0usize;
+        let mut all_shapes: Vec<(usize, usize)> = Vec::new();
+        let mut n_micro = 0usize;
+        for _epoch in 0..self.cfg.rl.ppo_epochs {
+            let mut items = Vec::with_capacity(seqs.len());
+            for (seq, &adv) in seqs.iter().zip(&advs) {
+                let m = masking::sample_ctx(
+                    &self.cfg.method,
+                    seq.resp_len,
+                    Some(&seq.old_lp),
+                    &mut self.rng_mask,
+                );
+                sel_tokens += m.kept;
+                tot_tokens += seq.resp_len;
+                items.push(LearnItem {
+                    tokens: seq.tokens.clone(),
+                    pad_len: seq.pad_len,
+                    resp_len: seq.resp_len,
+                    ht_w: m.ht_w,
+                    learn_len: m.learn_len,
+                    adv,
+                    old_lp: seq.old_lp.clone(),
+                });
+            }
+            let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
+            self.acc.reset();
+            // §Perf opt-2: parameters are immutable within the epoch; build
+            // the literals once and share across every bucket micro-batch.
+            let param_lits = self.params.to_literals(&self.rt.manifest)?;
+            for mb in &mbs {
+                let m = self.rt.grad_cached(mb, &param_lits, &mut self.acc)?;
+                metrics.add(&m);
+            }
+            drop(param_lits);
+            grad_norm = self.rt.apply(&mut self.params, &mut self.opt, &self.acc)?;
+            all_shapes.extend(micro_shapes(&mbs, d.prompt_len));
+            n_micro += mbs.len();
+        }
+        let t_learn = t_learn_start.elapsed().as_secs_f64();
+        let t_total = t_start.elapsed().as_secs_f64();
+
+        let pc = self.rt.manifest.param_count;
+        let mem_gb = memory::step_mean_bytes(d, pc, &all_shapes) as f64 / 1e9;
+        let peak_mem_gb = memory::step_peak_bytes(d, pc, &all_shapes) as f64 / 1e9;
+
+        self.step += 1;
+        let stats = StepStats {
+            step: self.step,
+            reward_mean: rewards.iter().map(|&r| r as f64).sum::<f64>()
+                / rewards.len() as f64,
+            entropy: metrics.mean_entropy(),
+            clip_frac: metrics.clip_frac(),
+            kl: if metrics.tokens > 0.0 { metrics.kl_sum / metrics.tokens } else { 0.0 },
+            grad_norm,
+            selected_ratio: if tot_tokens > 0 {
+                sel_tokens as f64 / tot_tokens as f64
+            } else {
+                0.0
+            },
+            resp_len_mean: tot_tokens as f64
+                / (seqs.len() * self.cfg.rl.ppo_epochs) as f64,
+            mem_gb,
+            peak_mem_gb,
+            t_learn_s: t_learn,
+            t_total_s: t_total,
+            micro_batches: n_micro,
+            sequences: seqs.len(),
+        };
+        self.record(&stats, t_rollout);
+        Ok(stats)
+    }
+
+    fn record(&mut self, s: &StepStats, t_rollout: f64) {
+        let r = &mut self.recorder;
+        r.push("reward", s.step, s.reward_mean);
+        r.push("entropy", s.step, s.entropy);
+        r.push("clip_frac", s.step, s.clip_frac);
+        r.push("kl", s.step, s.kl);
+        r.push("grad_norm", s.step, s.grad_norm);
+        r.push("selected_ratio", s.step, s.selected_ratio);
+        r.push("resp_len", s.step, s.resp_len_mean);
+        r.push("mem_gb", s.step, s.mem_gb);
+        r.push("peak_mem_gb", s.step, s.peak_mem_gb);
+        r.push("t_learn_s", s.step, s.t_learn_s);
+        r.push("t_rollout_s", s.step, t_rollout);
+        r.push("t_total_s", s.step, s.t_total_s);
+    }
+
+    /// Run `n` steps, optionally logging to stdout. When cfg.eval.every > 0
+    /// an in-training benchmark evaluation is recorded every that-many
+    /// steps (series `acc_<benchmark>` / `pass_<benchmark>`).
+    pub fn train(&mut self, n: usize, verbose: bool) -> Result<()> {
+        for _ in 0..n {
+            let s = self.step()?;
+            if self.cfg.eval.every > 0 && s.step % self.cfg.eval.every as u64 == 0 {
+                let evals = crate::coordinator::evaluator::evaluate_all_tiers(
+                    self.rt,
+                    &self.params,
+                    self.cfg.eval.tasks_per_tier,
+                    self.cfg.eval.k,
+                    self.cfg.rl.temperature,
+                    self.cfg.seed ^ s.step,
+                )?;
+                for e in &evals {
+                    self.recorder.push(
+                        &format!("acc_{}", e.tier.benchmark_name()),
+                        s.step,
+                        e.acc_at_k,
+                    );
+                    self.recorder.push(
+                        &format!("pass_{}", e.tier.benchmark_name()),
+                        s.step,
+                        e.pass_at_k,
+                    );
+                }
+                if verbose {
+                    println!(
+                        "  eval @ step {}: {}",
+                        s.step,
+                        evals
+                            .iter()
+                            .map(|e| format!(
+                                "{} {:.3}",
+                                e.tier.benchmark_name(),
+                                e.acc_at_k
+                            ))
+                            .collect::<Vec<_>>()
+                            .join("  ")
+                    );
+                }
+            }
+            if verbose {
+                println!(
+                    "step {:>4} | reward {:.3} | ent {:.3} | gnorm {:.3} | sel {:.2} | \
+                     mem {:.3} GB | learn {:.2}s | total {:.2}s",
+                    s.step,
+                    s.reward_mean,
+                    s.entropy,
+                    s.grad_norm,
+                    s.selected_ratio,
+                    s.mem_gb,
+                    s.t_learn_s,
+                    s.t_total_s
+                );
+            }
+        }
+        Ok(())
+    }
+}

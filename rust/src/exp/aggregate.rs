@@ -1,0 +1,104 @@
+//! Cross-seed aggregation of metric curves and final statistics.
+
+use crate::metrics::Recorder;
+use crate::stats::MeanCi;
+
+/// Mean ± 95% CI per step across runs (the shaded curves of Figs. 2-6).
+pub fn curve_mean_ci(recorders: &[&Recorder], series: &str) -> Vec<(u64, MeanCi)> {
+    let mut steps: Vec<u64> = recorders
+        .iter()
+        .flat_map(|r| r.get(series).iter().map(|&(s, _)| s))
+        .collect();
+    steps.sort();
+    steps.dedup();
+    steps
+        .into_iter()
+        .filter_map(|step| {
+            let vals: Vec<f64> = recorders
+                .iter()
+                .filter_map(|r| {
+                    r.get(series).iter().find(|&&(s, _)| s == step).map(|&(_, v)| v)
+                })
+                .collect();
+            if vals.is_empty() {
+                None
+            } else {
+                Some((step, MeanCi::of(&vals)))
+            }
+        })
+        .collect()
+}
+
+/// Scalar per run (series mean over all steps), aggregated across runs —
+/// Table 3's "averaged over training steps, mean ± CI across 5 runs".
+pub fn step_mean_then_ci(recorders: &[&Recorder], series: &str) -> MeanCi {
+    let per_run: Vec<f64> = recorders
+        .iter()
+        .filter_map(|r| {
+            let v = r.values(series);
+            if v.is_empty() {
+                None
+            } else {
+                Some(v.iter().sum::<f64>() / v.len() as f64)
+            }
+        })
+        .collect();
+    MeanCi::of(&per_run)
+}
+
+/// Tail-plateau statistic per run, aggregated (Fig. 1 bar heights).
+pub fn tail_mean_then_ci(recorders: &[&Recorder], series: &str, frac: f64) -> MeanCi {
+    let per_run: Vec<f64> =
+        recorders.iter().filter_map(|r| r.tail_mean(series, frac)).collect();
+    MeanCi::of(&per_run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(vals: &[(u64, f64)]) -> Recorder {
+        let mut r = Recorder::new();
+        for &(s, v) in vals {
+            r.push("x", s, v);
+        }
+        r
+    }
+
+    #[test]
+    fn curve_aggregation() {
+        let a = rec(&[(1, 1.0), (2, 2.0)]);
+        let b = rec(&[(1, 3.0), (2, 4.0)]);
+        let c = curve_mean_ci(&[&a, &b], "x");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].0, 1);
+        assert!((c[0].1.mean - 2.0).abs() < 1e-12);
+        assert!((c[1].1.mean - 3.0).abs() < 1e-12);
+        assert_eq!(c[0].1.n, 2);
+    }
+
+    #[test]
+    fn missing_steps_are_skipped_per_run() {
+        let a = rec(&[(1, 1.0)]);
+        let b = rec(&[(2, 4.0)]);
+        let c = curve_mean_ci(&[&a, &b], "x");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].1.n, 1);
+    }
+
+    #[test]
+    fn step_mean_then_ci_averages_within_runs_first() {
+        let a = rec(&[(1, 1.0), (2, 3.0)]); // run mean 2
+        let b = rec(&[(1, 4.0), (2, 6.0)]); // run mean 5
+        let m = step_mean_then_ci(&[&a, &b], "x");
+        assert!((m.mean - 3.5).abs() < 1e-12);
+        assert_eq!(m.n, 2);
+    }
+
+    #[test]
+    fn tail_statistic() {
+        let a = rec(&[(1, 0.0), (2, 0.0), (3, 10.0), (4, 10.0)]);
+        let m = tail_mean_then_ci(&[&a], "x", 0.5);
+        assert!((m.mean - 10.0).abs() < 1e-12);
+    }
+}

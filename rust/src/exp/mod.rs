@@ -1,0 +1,13 @@
+//! Experiment harness: regenerates every table and figure of the paper
+//! (DESIGN.md §5). Placeholder populated incrementally.
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+pub mod aggregate;
+pub mod runs;
+pub mod tables;
+
+pub fn cmd_repro(args: &Args) -> Result<()> {
+    tables::cmd_repro(args)
+}

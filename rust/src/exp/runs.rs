@@ -1,0 +1,35 @@
+//! One RL run = (model, method, seed) -> metric recorder + final evals.
+use anyhow::Result;
+
+use crate::config::{Method, RunConfig};
+use crate::coordinator::evaluator::{self, EvalResult};
+use crate::coordinator::trainer::Trainer;
+use crate::metrics::Recorder;
+use crate::runtime::{OptState, ParamStore, Runtime};
+
+pub struct RunResult {
+    pub method: Method,
+    pub seed: u64,
+    pub recorder: Recorder,
+    pub evals: Vec<EvalResult>,
+}
+
+/// Execute one full RL run from a shared base checkpoint.
+pub fn run_rl(
+    rt: &Runtime,
+    base: &ParamStore,
+    cfg: &RunConfig,
+    verbose: bool,
+) -> Result<RunResult> {
+    let mut tr = Trainer::new(rt, cfg.clone(), base.clone(), OptState::zeros(&rt.manifest));
+    tr.train(cfg.rl.steps, verbose)?;
+    let evals = evaluator::evaluate_all_tiers(
+        rt,
+        &tr.params,
+        cfg.eval.tasks_per_tier,
+        cfg.eval.k,
+        cfg.rl.temperature,
+        cfg.seed,
+    )?;
+    Ok(RunResult { method: cfg.method, seed: cfg.seed, recorder: tr.recorder, evals })
+}

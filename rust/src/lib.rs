@@ -1,0 +1,28 @@
+//! # NAT-RL: Not All Tokens are Needed — token-efficient reinforcement learning
+//!
+//! Production-shaped reproduction of "Not All Tokens are Needed (NAT):
+//! Token-Efficient Reinforcement Learning" (Sang et al., 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the RL coordinator: rollout scheduling, verifiable
+//!   rewards, group-relative advantages, NAT token selection with
+//!   Horvitz-Thompson reweighting, length-bucketed batching, gradient
+//!   accumulation and optimiser stepping, evaluation, and the experiment
+//!   harness regenerating every paper table and figure.
+//! * **L2 (python/compile/model.py)** — the policy transformer and train
+//!   computations, AOT-lowered to HLO text once per config.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the NAT loss and
+//!   flash attention, fused into the same HLO.
+//!
+//! Python never runs at training time: the coordinator drives the AOT
+//! artifacts through PJRT (`runtime` module).
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod stats;
+pub mod tasks;
+pub mod tokenizer;
+pub mod util;

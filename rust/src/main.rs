@@ -1,0 +1,187 @@
+//! `nat` — launcher for the NAT token-efficient RL stack.
+//!
+//! Subcommands:
+//!   info      — print model/artifact information
+//!   pretrain  — SFT base-model phase; writes a checkpoint
+//!   train     — NAT×GRPO RL from a checkpoint
+//!   eval      — Acc@16 / pass@16 on the benchmark tiers
+//!   repro     — regenerate paper tables/figures (see rust/src/exp)
+//!
+//! Common options: --model tiny|small|base|xl, --config configs/x.toml,
+//! plus any dotted config key as --key value (e.g. --rl.steps 100).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use nat_rl::config::RunConfig;
+use nat_rl::coordinator::{evaluator, pretrainer, trainer::Trainer};
+use nat_rl::exp;
+use nat_rl::runtime::{Checkpoint, OptState, ParamStore, Runtime};
+use nat_rl::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.subcommand.as_str() {
+        "info" => cmd_info(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "repro" => exp::cmd_repro(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try: nat help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "nat — NAT: token-efficient RL (Rust + JAX + Pallas reproduction)\n\n\
+         USAGE: nat <subcommand> [--key value ...]\n\n\
+         SUBCOMMANDS:\n\
+           info      print model/artifact information (--model tiny)\n\
+           pretrain  SFT base model -> checkpoint (--model small --pretrain.steps 300)\n\
+           train     NAT RL from a checkpoint (--method rpc|urs|det_trunc|grpo)\n\
+           eval      Acc@16/pass@16 over MATH-S/AIME24-S/AIME25-S (--ckpt path)\n\
+           repro     regenerate paper tables and figures (--what table2|table3|figures|all)\n\n\
+         CONFIG: --config configs/file.toml, then dotted overrides, e.g.\n\
+           --model base --method urs --method.p 0.5 --rl.steps 100 --seed 3"
+    );
+}
+
+fn config_from_args(args: &Args) -> Result<RunConfig> {
+    RunConfig::from_args(args)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::load(&cfg.artifact_dir())?;
+    let d = &rt.manifest.dims;
+    println!("model: {} ({} params)", d.name, rt.manifest.param_count);
+    println!(
+        "dims: d_model={} layers={} heads={} d_ff={} vocab={}",
+        d.d_model, d.n_layers, d.n_heads, d.d_ff, d.vocab
+    );
+    println!(
+        "windows: prompt={} max_resp={} buckets={:?}",
+        d.prompt_len, d.max_resp, d.buckets
+    );
+    println!(
+        "batches: rollout={} train={} pretrain={}x{}",
+        d.batch_rollout, d.batch_train, d.batch_pretrain, d.pretrain_len
+    );
+    println!("artifacts: {}", rt.manifest.dir.display());
+    println!("method: {}", cfg.method.label());
+    Ok(())
+}
+
+fn default_ckpt(cfg: &RunConfig) -> String {
+    format!("{}/{}_sft.bin", cfg.checkpoints_dir, cfg.model)
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::load(&cfg.artifact_dir())?;
+    let out = args.get_or("out", &default_ckpt(&cfg)).to_string();
+    println!(
+        "pretraining {} for {} steps (corpus {}, noise {}) -> {out}",
+        cfg.model, cfg.pretrain.steps, cfg.pretrain.corpus_size, cfg.pretrain.noise
+    );
+    let res = pretrainer::pretrain(&rt, &cfg, true)?;
+    Checkpoint::save(Path::new(&out), &rt.manifest, &res.params, None)?;
+    res.recorder
+        .write_csv(Path::new(&cfg.results_dir).join("sft_loss.csv").as_path())?;
+    println!("final SFT loss: {:.4}; checkpoint: {out}", res.final_loss);
+    Ok(())
+}
+
+fn load_ckpt_or_init(args: &Args, cfg: &RunConfig, rt: &Runtime) -> Result<ParamStore> {
+    match args.get("ckpt") {
+        Some(p) => Ok(Checkpoint::load(Path::new(p), &rt.manifest)?.0),
+        None => {
+            let default = default_ckpt(cfg);
+            if Path::new(&default).exists() {
+                println!("using checkpoint {default}");
+                Ok(Checkpoint::load(Path::new(&default), &rt.manifest)?.0)
+            } else {
+                println!("no checkpoint found; starting from random init");
+                ParamStore::load_init(&rt.manifest)
+            }
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::load(&cfg.artifact_dir())?;
+    let params = load_ckpt_or_init(args, &cfg, &rt)?;
+    let opt = OptState::zeros(&rt.manifest);
+    println!(
+        "RL: model={} method={} steps={} prompts/step={} G={} seed={}",
+        cfg.model,
+        cfg.method.label(),
+        cfg.rl.steps,
+        cfg.rl.prompts_per_step,
+        cfg.rl.group_size,
+        cfg.seed
+    );
+    let results_dir = cfg.results_dir.clone();
+    let steps = cfg.rl.steps;
+    let method_id = cfg.method.id();
+    let model = cfg.model.clone();
+    let seed = cfg.seed;
+    let mut tr = Trainer::new(&rt, cfg.clone(), params, opt);
+    tr.train(steps, true)?;
+    let base = format!("{results_dir}/train_{model}_{method_id}_s{seed}");
+    tr.recorder.write_csv(Path::new(&format!("{base}.csv")))?;
+    tr.recorder.write_json(Path::new(&format!("{base}.json")))?;
+    if let Some(out) = args.get("out") {
+        Checkpoint::save(Path::new(out), &rt.manifest, &tr.params, None)?;
+        println!("saved trained checkpoint to {out}");
+    }
+    println!("metrics: {base}.csv");
+    // final eval
+    let evals = evaluator::evaluate_all_tiers(
+        &rt,
+        &tr.params,
+        tr.cfg.eval.tasks_per_tier,
+        tr.cfg.eval.k,
+        tr.cfg.rl.temperature,
+        seed,
+    )?;
+    for e in evals {
+        println!(
+            "{:>9}: Acc@{} {:.3}  pass@{} {:.3}  (len {:.1}, {} tasks)",
+            e.tier.benchmark_name(), e.k, e.acc_at_k, e.k, e.pass_at_k, e.mean_resp_len, e.tasks
+        );
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let rt = Runtime::load(&cfg.artifact_dir())?;
+    let params = load_ckpt_or_init(args, &cfg, &rt)?;
+    let evals = evaluator::evaluate_all_tiers(
+        &rt,
+        &params,
+        cfg.eval.tasks_per_tier,
+        cfg.eval.k,
+        cfg.rl.temperature,
+        cfg.seed,
+    )?;
+    println!("benchmark     Acc@{:<3} pass@{:<3} len", cfg.eval.k, cfg.eval.k);
+    for e in evals {
+        println!(
+            "{:<12} {:.3}   {:.3}    {:.1}",
+            e.tier.benchmark_name(),
+            e.acc_at_k,
+            e.pass_at_k,
+            e.mean_resp_len
+        );
+    }
+    Ok(())
+}

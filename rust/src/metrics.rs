@@ -1,0 +1,162 @@
+//! Metric recording: named step-series with CSV/JSON export.
+//!
+//! Every figure in the paper is a per-step series aggregated over seeds;
+//! the trainer pushes into a `Recorder`, the experiment harness merges
+//! recorders across runs and renders figure data files.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr_f64, obj, Json};
+
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    /// series name -> (step, value) pairs in push order.
+    series: BTreeMap<String, Vec<(u64, f64)>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, step: u64, value: f64) {
+        self.series.entry(name.to_string()).or_default().push((step, value));
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.series.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> &[(u64, f64)] {
+        self.series.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn values(&self, name: &str) -> Vec<f64> {
+        self.get(name).iter().map(|&(_, v)| v).collect()
+    }
+
+    pub fn last(&self, name: &str) -> Option<f64> {
+        self.get(name).last().map(|&(_, v)| v)
+    }
+
+    /// Mean of the final `frac` fraction of a series (plateau statistic).
+    pub fn tail_mean(&self, name: &str, frac: f64) -> Option<f64> {
+        let vals = self.values(name);
+        if vals.is_empty() {
+            return None;
+        }
+        let k = ((vals.len() as f64 * frac).ceil() as usize).clamp(1, vals.len());
+        Some(vals[vals.len() - k..].iter().sum::<f64>() / k as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut items = Vec::new();
+        for (name, pts) in &self.series {
+            items.push(obj(vec![
+                ("name", Json::Str(name.clone())),
+                ("steps", Json::Arr(pts.iter().map(|&(s, _)| Json::Num(s as f64)).collect())),
+                ("values", arr_f64(&pts.iter().map(|&(_, v)| v).collect::<Vec<_>>())),
+            ]));
+        }
+        Json::Arr(items)
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Wide CSV: step, series1, series2, ... (missing cells empty).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let names: Vec<&String> = self.series.keys().collect();
+        let mut steps: Vec<u64> = self
+            .series
+            .values()
+            .flat_map(|v| v.iter().map(|&(s, _)| s))
+            .collect();
+        steps.sort();
+        steps.dedup();
+        let mut f = std::fs::File::create(path)?;
+        write!(f, "step")?;
+        for n in &names {
+            write!(f, ",{n}")?;
+        }
+        writeln!(f)?;
+        for s in steps {
+            write!(f, "{s}")?;
+            for n in &names {
+                match self.series[*n].iter().find(|&&(st, _)| st == s) {
+                    Some(&(_, v)) => write!(f, ",{v}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_query() {
+        let mut r = Recorder::new();
+        r.push("reward", 0, 0.1);
+        r.push("reward", 1, 0.3);
+        r.push("entropy", 0, 2.0);
+        assert_eq!(r.values("reward"), vec![0.1, 0.3]);
+        assert_eq!(r.last("reward"), Some(0.3));
+        assert_eq!(r.last("missing"), None);
+        assert_eq!(r.names(), vec!["entropy", "reward"]);
+    }
+
+    #[test]
+    fn tail_mean() {
+        let mut r = Recorder::new();
+        for i in 0..10 {
+            r.push("x", i, i as f64);
+        }
+        assert_eq!(r.tail_mean("x", 0.2), Some(8.5)); // mean of 8, 9
+        assert_eq!(r.tail_mean("x", 1.0), Some(4.5));
+        assert_eq!(r.tail_mean("none", 0.5), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut r = Recorder::new();
+        r.push("a", 0, 1.5);
+        r.push("a", 2, 2.5);
+        let j = r.to_json();
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(j, j2);
+        assert_eq!(j2.idx(0).unwrap().get("name").unwrap().as_str(), Some("a"));
+    }
+
+    #[test]
+    fn csv_layout() {
+        let mut r = Recorder::new();
+        r.push("a", 0, 1.0);
+        r.push("b", 1, 2.0);
+        let dir = std::env::temp_dir().join("nat_rl_metrics_test");
+        let path = dir.join("m.csv");
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,a,b");
+        assert_eq!(lines[1], "0,1,");
+        assert_eq!(lines[2], "1,,2");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,268 @@
+//! Artifact manifest: the shape/ordering contract between python/compile
+//! (which writes artifacts/<cfg>/manifest.json) and the Rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub prompt_len: usize,
+    pub max_resp: usize,
+    pub buckets: Vec<usize>,
+    pub batch_rollout: usize,
+    pub batch_train: usize,
+    pub pretrain_len: usize,
+    pub batch_pretrain: usize,
+    pub lr: f64,
+    pub clip_eps: f64,
+    pub grad_clip: f64,
+    pub pretrain_lr: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub params: Vec<ParamEntry>,
+    pub param_count: usize,
+    pub generate_file: String,
+    /// Fixed-trip-count rollout variant (perf A/B; §Perf opt-1).
+    pub generate_full_file: Option<String>,
+    pub apply_file: String,
+    pub pretrain_file: String,
+    /// (bucket, filename), ascending by bucket.
+    pub grad_files: Vec<(usize, String)>,
+    pub score_files: Vec<(usize, String)>,
+    /// Scorer variant whose forward runs the L1 Pallas flash-attention
+    /// kernel (integration proof; may be absent in older artifact sets).
+    pub score_pallas_files: Vec<(usize, String)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let cfg = j.get("config").ok_or_else(|| anyhow!("missing config"))?;
+        let us = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let fl = |k: &str| -> Result<f64> {
+            cfg.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let buckets: Vec<usize> = cfg
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("config.buckets missing"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        if buckets.is_empty() || buckets.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("buckets must be non-empty ascending: {buckets:?}");
+        }
+        let dims = ModelDims {
+            name: cfg.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            vocab: us("vocab")?,
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            d_ff: us("d_ff")?,
+            prompt_len: us("prompt_len")?,
+            max_resp: us("max_resp")?,
+            buckets: buckets.clone(),
+            batch_rollout: us("batch_rollout")?,
+            batch_train: us("batch_train")?,
+            pretrain_len: us("pretrain_len")?,
+            batch_pretrain: us("batch_pretrain")?,
+            lr: fl("lr")?,
+            clip_eps: fl("clip_eps")?,
+            grad_clip: fl("grad_clip")?,
+            pretrain_lr: fl("pretrain_lr")?,
+        };
+        if *buckets.last().unwrap() != dims.max_resp {
+            bail!("top bucket {} != max_resp {}", buckets.last().unwrap(), dims.max_resp);
+        }
+
+        let mut params = Vec::new();
+        let mut expect_offset = 0usize;
+        for p in j.get("params").and_then(Json::as_arr).ok_or_else(|| anyhow!("params"))? {
+            let name = p.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("p.name"))?;
+            let shape: Vec<usize> = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("p.shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let size = p.get("size").and_then(Json::as_usize).ok_or_else(|| anyhow!("p.size"))?;
+            let offset =
+                p.get("offset").and_then(Json::as_usize).ok_or_else(|| anyhow!("p.offset"))?;
+            if shape.iter().product::<usize>() != size {
+                bail!("param {name}: shape {shape:?} does not match size {size}");
+            }
+            if offset != expect_offset {
+                bail!("param {name}: non-contiguous offset {offset} != {expect_offset}");
+            }
+            expect_offset += size;
+            params.push(ParamEntry { name: name.to_string(), shape, size, offset });
+        }
+        let param_count =
+            j.get("param_count").and_then(Json::as_usize).ok_or_else(|| anyhow!("param_count"))?;
+        if param_count != expect_offset {
+            bail!("param_count {param_count} != sum of sizes {expect_offset}");
+        }
+
+        let arts = j.get("artifacts").ok_or_else(|| anyhow!("artifacts"))?;
+        let file = |k: &str| -> Result<String> {
+            arts.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("artifacts.{k}"))
+        };
+        let bucket_map = |k: &str| -> Result<Vec<(usize, String)>> {
+            let obj = arts.get(k).and_then(Json::as_obj).ok_or_else(|| anyhow!("artifacts.{k}"))?;
+            let mut v: Vec<(usize, String)> = obj
+                .iter()
+                .map(|(b, f)| {
+                    Ok((
+                        b.parse::<usize>().map_err(|_| anyhow!("bad bucket {b}"))?,
+                        f.as_str().ok_or_else(|| anyhow!("bad file"))?.to_string(),
+                    ))
+                })
+                .collect::<Result<_>>()?;
+            v.sort();
+            Ok(v)
+        };
+        let grad_files = bucket_map("grad")?;
+        if grad_files.iter().map(|(b, _)| *b).collect::<Vec<_>>() != buckets {
+            bail!("grad buckets do not match config buckets");
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dims,
+            params,
+            param_count,
+            generate_file: file("generate")?,
+            generate_full_file: arts
+                .get("generate_full")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            apply_file: file("apply")?,
+            pretrain_file: file("pretrain")?,
+            grad_files,
+            score_files: bucket_map("score")?,
+            score_pallas_files: bucket_map("score_pallas").unwrap_or_default(),
+        })
+    }
+
+    /// Smallest bucket >= learn_len (falls back to the top bucket).
+    pub fn bucket_for(&self, learn_len: usize) -> usize {
+        for &b in &self.dims.buckets {
+            if b >= learn_len {
+                return b;
+            }
+        }
+        *self.dims.buckets.last().unwrap()
+    }
+
+    pub fn seq_total(&self) -> usize {
+        self.dims.prompt_len + self.dims.max_resp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest_json() -> String {
+        r#"{
+          "config": {"name":"t","vocab":8,"d_model":4,"n_layers":1,"n_heads":1,
+            "d_ff":8,"prompt_len":4,"max_resp":8,"buckets":[4,8],
+            "batch_rollout":2,"batch_train":2,"pretrain_len":12,
+            "batch_pretrain":2,"lr":0.001,"clip_eps":0.2,"grad_clip":1.0,
+            "pretrain_lr":0.001},
+          "param_count": 40,
+          "params": [
+            {"name":"embed","shape":[8,4],"size":32,"offset":0},
+            {"name":"head","shape":[4,2],"size":8,"offset":32}],
+          "artifacts": {"generate":"g.txt","apply":"a.txt","pretrain":"p.txt",
+            "grad":{"4":"g4.txt","8":"g8.txt"},"score":{"8":"s8.txt"}}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_toy_manifest() {
+        let j = Json::parse(&toy_manifest_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert_eq!(m.param_count, 40);
+        assert_eq!(m.params[1].offset, 32);
+        assert_eq!(m.grad_files, vec![(4, "g4.txt".into()), (8, "g8.txt".into())]);
+        assert_eq!(m.dims.buckets, vec![4, 8]);
+        assert_eq!(m.seq_total(), 12);
+    }
+
+    #[test]
+    fn bucket_routing() {
+        let j = Json::parse(&toy_manifest_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert_eq!(m.bucket_for(1), 4);
+        assert_eq!(m.bucket_for(4), 4);
+        assert_eq!(m.bucket_for(5), 8);
+        assert_eq!(m.bucket_for(8), 8);
+        assert_eq!(m.bucket_for(99), 8); // clamps to top
+    }
+
+    #[test]
+    fn rejects_inconsistent_manifests() {
+        let base = toy_manifest_json();
+        // wrong param_count
+        let bad = base.replace("\"param_count\": 40", "\"param_count\": 41");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+        // non-contiguous offset
+        let bad = base.replace("\"offset\":32", "\"offset\":33");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+        // shape/size mismatch
+        let bad = base.replace("\"shape\":[4,2],\"size\":8", "\"shape\":[4,2],\"size\":9");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+        // descending buckets
+        let bad = base.replace("\"buckets\":[4,8]", "\"buckets\":[8,4]");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+
+    #[test]
+    fn loads_real_tiny_manifest_if_built() {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny"));
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert_eq!(m.dims.name, "tiny");
+            assert_eq!(m.param_count, 108_864);
+            assert_eq!(m.dims.buckets, vec![16, 32, 48, 64]);
+        }
+    }
+}

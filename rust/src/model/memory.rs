@@ -1,0 +1,193 @@
+//! Analytic activation-memory and FLOP model (DESIGN.md §7).
+//!
+//! Reproduces the paper's Table 3 / Fig. 6 memory comparison on hardware we
+//! do not have: peak learner memory per optimizer step is a deterministic
+//! function of the micro-batch shape (B, S = P + bucket) and the model dims,
+//! because activations residing for the backward pass dominate. The same
+//! token-length scaling that gives RPC its ~18% GPU saving appears here
+//! directly. Numbers are exact byte counts for OUR f32 stack (not the
+//! paper's bf16+checkpointing stack); EXPERIMENTS.md compares ratios.
+
+use super::manifest::ModelDims;
+
+/// Bytes of activations materialised by one fwd+bwd micro-batch of shape
+/// [batch, seq]. Term-by-term count of every tensor the backward pass
+/// retains for our L2 graph (see python/compile/model.py::forward).
+pub fn activation_bytes(d: &ModelDims, batch: usize, seq: usize) -> usize {
+    let b = batch;
+    let s = seq;
+    let dm = d.d_model;
+    let h = d.n_heads;
+    let f = d.d_ff;
+    let v = d.vocab;
+    let per_layer =
+        // attn_norm out, q, k, v, attn out, wo out
+        6 * b * s * dm
+        // attention score + softmax matrices
+        + 2 * b * h * s * s
+        // mlp_norm out, gate, up (silu input kept), gated product, down out
+        + b * s * dm + 3 * b * s * f + b * s * dm;
+    let embeds = b * s * dm;
+    let final_norm = b * s * dm;
+    let logits = 2 * b * s * v; // logits + log_softmax
+    4 * (embeds + d.n_layers * per_layer + final_norm + logits)
+}
+
+/// Static bytes: params + grads + Adam moments (f32 each).
+pub fn static_bytes(param_count: usize) -> usize {
+    4 * param_count * 4
+}
+
+/// Peak learner bytes for a step whose micro-batches have the given
+/// (batch, seq) shapes: static state + the largest single micro-batch
+/// activation set (micro-batches run sequentially; activations are freed
+/// between them, grads accumulate in place).
+pub fn step_peak_bytes(
+    d: &ModelDims,
+    param_count: usize,
+    micro_shapes: &[(usize, usize)],
+) -> usize {
+    let act = micro_shapes
+        .iter()
+        .map(|&(b, s)| activation_bytes(d, b, s))
+        .max()
+        .unwrap_or(0);
+    static_bytes(param_count) + act
+}
+
+/// Mean allocated learner bytes across the step's micro-batches: static
+/// state + the average activation set. This is the Table 3 / Fig. 6
+/// headline metric: VERL's per-step `allocated_memory_gb` tracks allocator
+/// residency across the (sequential) micro-batches, which follows the mean
+/// rather than the strict instantaneous maximum; the strict maximum is
+/// logged separately as `peak_mem_gb`. See EXPERIMENTS.md §Memory-metric.
+pub fn step_mean_bytes(
+    d: &ModelDims,
+    param_count: usize,
+    micro_shapes: &[(usize, usize)],
+) -> usize {
+    if micro_shapes.is_empty() {
+        return static_bytes(param_count);
+    }
+    let act: usize = micro_shapes
+        .iter()
+        .map(|&(b, s)| activation_bytes(d, b, s))
+        .sum::<usize>()
+        / micro_shapes.len();
+    static_bytes(param_count) + act
+}
+
+/// Forward FLOPs of one micro-batch [batch, seq] (dense attention).
+pub fn forward_flops(d: &ModelDims, batch: usize, seq: usize) -> u64 {
+    let b = batch as u64;
+    let s = seq as u64;
+    let dm = d.d_model as u64;
+    let h = d.n_heads as u64;
+    let hd = dm / h;
+    let f = d.d_ff as u64;
+    let v = d.vocab as u64;
+    // per layer: qkv+wo projections, attention matmuls, mlp
+    let proj = 2 * b * s * dm * dm * 4;
+    let attn = 2 * b * h * s * s * hd * 2;
+    let mlp = 2 * b * s * dm * f * 3;
+    d.n_layers as u64 * (proj + attn + mlp) + 2 * b * s * dm * v
+}
+
+/// fwd+bwd FLOPs (standard 3x forward approximation).
+pub fn train_flops(d: &ModelDims, batch: usize, seq: usize) -> u64 {
+    3 * forward_flops(d, batch, seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            name: "t".into(),
+            vocab: 64,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 352,
+            prompt_len: 48,
+            max_resp: 128,
+            buckets: vec![32, 64, 96, 128],
+            batch_rollout: 16,
+            batch_train: 8,
+            pretrain_len: 176,
+            batch_pretrain: 16,
+            lr: 3e-4,
+            clip_eps: 0.2,
+            grad_clip: 1.0,
+            pretrain_lr: 1e-3,
+        }
+    }
+
+    #[test]
+    fn activations_grow_superlinearly_in_seq() {
+        let d = dims();
+        let a1 = activation_bytes(&d, 8, 88); // P + 40
+        let a2 = activation_bytes(&d, 8, 176); // P + 128
+        assert!(a2 > 2 * a1, "{a1} {a2}"); // attention S^2 term
+    }
+
+    #[test]
+    fn activations_linear_in_batch() {
+        let d = dims();
+        assert_eq!(activation_bytes(&d, 16, 100), 2 * activation_bytes(&d, 8, 100));
+    }
+
+    #[test]
+    fn rpc_bucket_mixture_saves_vs_full() {
+        let d = dims();
+        let pc = 820_352;
+        let full = step_peak_bytes(&d, pc, &[(8, 176), (8, 176), (8, 176), (8, 176)]);
+        // RPC: micro-batches land in shorter buckets; peak set by the
+        // largest bucket that actually occurs in the step.
+        let rpc = step_peak_bytes(&d, pc, &[(8, 80), (8, 112), (8, 144), (8, 144)]);
+        assert!(rpc < full);
+        let ratio = rpc as f64 / full as f64;
+        assert!(ratio < 0.95, "{ratio}");
+        assert!(ratio > 0.4, "{ratio}");
+    }
+
+    #[test]
+    fn det_trunc_is_cheapest() {
+        let d = dims();
+        let pc = 820_352;
+        let det = step_peak_bytes(&d, pc, &[(8, 112); 4]); // always 50%
+        let rpc = step_peak_bytes(&d, pc, &[(8, 80), (8, 176), (8, 112), (8, 144)]);
+        let full = step_peak_bytes(&d, pc, &[(8, 176); 4]);
+        assert!(det < rpc || rpc == full); // det <= rpc <= full typical case
+        assert!(det < full);
+    }
+
+    #[test]
+    fn flops_scale_with_seq_and_bwd_factor() {
+        let d = dims();
+        assert!(forward_flops(&d, 8, 176) > 2 * forward_flops(&d, 8, 88));
+        assert_eq!(train_flops(&d, 8, 100), 3 * forward_flops(&d, 8, 100));
+    }
+
+    #[test]
+    fn empty_step_has_static_floor() {
+        let d = dims();
+        assert_eq!(step_peak_bytes(&d, 100, &[]), static_bytes(100));
+        assert_eq!(step_mean_bytes(&d, 100, &[]), static_bytes(100));
+    }
+
+    #[test]
+    fn mean_residency_orders_methods_like_the_paper() {
+        // Det < RPC < URS = GRPO (Table 3 qualitative ordering)
+        let d = dims();
+        let pc = 820_352;
+        let full = step_mean_bytes(&d, pc, &[(8, 176); 4]);
+        let urs = step_mean_bytes(&d, pc, &[(8, 176); 4]);
+        let rpc = step_mean_bytes(&d, pc, &[(8, 80), (8, 112), (8, 144), (8, 176)]);
+        let det = step_mean_bytes(&d, pc, &[(8, 112); 4]);
+        assert_eq!(urs, full);
+        assert!(det < rpc, "{det} {rpc}");
+        assert!(rpc < full, "{rpc} {full}");
+    }
+}

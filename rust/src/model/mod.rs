@@ -1,0 +1,7 @@
+//! Model-side metadata: the artifact manifest contract and the analytic
+//! memory/FLOP model used to reproduce the paper's system-efficiency
+//! numbers (Table 3, Fig. 6) on simulated hardware.
+pub mod manifest;
+pub mod memory;
+
+pub use manifest::{Manifest, ModelDims, ParamEntry};

@@ -1,0 +1,343 @@
+//! PJRT runtime: load AOT HLO-text artifacts and drive them from Rust.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Executables are compiled lazily on first
+//! use and cached (GRPO never touches the short grad buckets; DetTrunc
+//! never touches the long ones). HLO *text* is the interchange format —
+//! see python/compile/aot.py for why.
+
+pub mod params;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::batcher::MicroBatch;
+use crate::model::Manifest;
+pub use params::{Checkpoint, GradAccum, OptState, ParamStore};
+
+/// Scalar metrics returned by one grad micro-batch (sums over the batch).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GradMetrics {
+    pub loss_sum: f64,
+    pub tokens: f64,
+    pub entropy_sum: f64,
+    pub clip_sum: f64,
+    pub kl_sum: f64,
+}
+
+impl GradMetrics {
+    pub fn add(&mut self, other: &GradMetrics) {
+        self.loss_sum += other.loss_sum;
+        self.tokens += other.tokens;
+        self.entropy_sum += other.entropy_sum;
+        self.clip_sum += other.clip_sum;
+        self.kl_sum += other.kl_sum;
+    }
+
+    pub fn mean_entropy(&self) -> f64 {
+        if self.tokens > 0.0 { self.entropy_sum / self.tokens } else { 0.0 }
+    }
+
+    pub fn clip_frac(&self) -> f64 {
+        if self.tokens > 0.0 { self.clip_sum / self.tokens } else { 0.0 }
+    }
+}
+
+/// Rollout output: token matrix and behaviour logprobs.
+pub struct GenerateOut {
+    /// [B, P + T] row-major.
+    pub tokens: Vec<i32>,
+    /// [B, T] row-major, temperature-1 logprobs of sampled tokens.
+    pub lp: Vec<f32>,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn load(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, exes: RefCell::new(HashMap::new()) })
+    }
+
+    fn exe(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
+        );
+        self.exes.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (startup warmup; avoids first-step
+    /// compile latency polluting timing benchmarks).
+    pub fn warmup(&self, grad_buckets: &[usize]) -> Result<()> {
+        self.exe(&self.manifest.generate_file.clone())?;
+        self.exe(&self.manifest.apply_file.clone())?;
+        for &(b, ref f) in &self.manifest.grad_files.clone() {
+            if grad_buckets.contains(&b) {
+                self.exe(f)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    fn run(&self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(file)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    fn run_refs(&self, file: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(file)?;
+        let result = exe.execute::<&xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Rollout: sample up to `max_resp` tokens per row (early-exit decode).
+    /// prompts: [B, P] left-padded; pad_len: [B].
+    pub fn generate(
+        &self,
+        params: &ParamStore,
+        prompts: &[i32],
+        pad_len: &[i32],
+        seed: i32,
+        temp: f32,
+    ) -> Result<GenerateOut> {
+        let file = self.manifest.generate_file.clone();
+        self.generate_with(&file, params, prompts, pad_len, seed, temp)
+    }
+
+    /// Fixed-trip-count rollout (perf A/B baseline for §Perf opt-1).
+    pub fn generate_full(
+        &self,
+        params: &ParamStore,
+        prompts: &[i32],
+        pad_len: &[i32],
+        seed: i32,
+        temp: f32,
+    ) -> Result<GenerateOut> {
+        let file = self
+            .manifest
+            .generate_full_file
+            .clone()
+            .context("no generate_full artifact (rebuild artifacts)")?;
+        self.generate_with(&file, params, prompts, pad_len, seed, temp)
+    }
+
+    fn generate_with(
+        &self,
+        file: &str,
+        params: &ParamStore,
+        prompts: &[i32],
+        pad_len: &[i32],
+        seed: i32,
+        temp: f32,
+    ) -> Result<GenerateOut> {
+        let d = &self.manifest.dims;
+        let (b, p) = (d.batch_rollout, d.prompt_len);
+        if prompts.len() != b * p || pad_len.len() != b {
+            bail!("generate: bad input shapes ({} vs {})", prompts.len(), b * p);
+        }
+        let mut inputs = params.to_literals(&self.manifest)?;
+        inputs.push(xla::Literal::vec1(prompts).reshape(&[b as i64, p as i64])?);
+        inputs.push(xla::Literal::vec1(pad_len));
+        inputs.push(xla::Literal::from(seed));
+        inputs.push(xla::Literal::from(temp));
+        let outs = self.run(file, &inputs)?;
+        if outs.len() != 2 {
+            bail!("generate: expected 2 outputs, got {}", outs.len());
+        }
+        Ok(GenerateOut { tokens: outs[0].to_vec()?, lp: outs[1].to_vec()? })
+    }
+
+    /// NAT learner gradient over one micro-batch; accumulates into `acc`.
+    pub fn grad(
+        &self,
+        mb: &MicroBatch,
+        params: &ParamStore,
+        acc: &mut GradAccum,
+    ) -> Result<GradMetrics> {
+        let lits = params.to_literals(&self.manifest)?;
+        self.grad_cached(mb, &lits, acc)
+    }
+
+    /// Grad with pre-built parameter literals (§Perf opt-2: the trainer
+    /// builds them once per optimizer step and shares them across all
+    /// bucket micro-batches instead of re-slicing the whole parameter
+    /// store per call).
+    pub fn grad_cached(
+        &self,
+        mb: &MicroBatch,
+        param_lits: &[xla::Literal],
+        acc: &mut GradAccum,
+    ) -> Result<GradMetrics> {
+        let d = &self.manifest.dims;
+        let (b, p, t) = (d.batch_train, d.prompt_len, mb.bucket);
+        let file = self
+            .manifest
+            .grad_files
+            .iter()
+            .find(|(bk, _)| *bk == t)
+            .map(|(_, f)| f.clone())
+            .with_context(|| format!("no grad artifact for bucket {t}"))?;
+        let s = (p + t) as i64;
+        let batch_lits = [
+            xla::Literal::vec1(&mb.tokens).reshape(&[b as i64, s])?,
+            xla::Literal::vec1(&mb.ht_w).reshape(&[b as i64, t as i64])?,
+            xla::Literal::vec1(&mb.adv),
+            xla::Literal::vec1(&mb.old_lp).reshape(&[b as i64, t as i64])?,
+            xla::Literal::vec1(&mb.inv_len),
+            xla::Literal::vec1(&mb.pad_len),
+        ];
+        let inputs: Vec<&xla::Literal> =
+            param_lits.iter().chain(batch_lits.iter()).collect();
+        let outs = self.run_refs(&file, &inputs)?;
+        let n = self.manifest.params.len();
+        if outs.len() != n + 1 {
+            bail!("grad: expected {} outputs, got {}", n + 1, outs.len());
+        }
+        acc.add_literals(&self.manifest, &outs[..n], mb.real_rows)?;
+        let met: Vec<f32> = outs[n].to_vec()?;
+        Ok(GradMetrics {
+            loss_sum: met[0] as f64,
+            tokens: met[1] as f64,
+            entropy_sum: met[2] as f64,
+            clip_sum: met[3] as f64,
+            kl_sum: met[4] as f64,
+        })
+    }
+
+    /// AdamW update from accumulated gradients. Returns pre-clip grad norm.
+    pub fn apply(
+        &self,
+        params: &mut ParamStore,
+        opt: &mut OptState,
+        acc: &GradAccum,
+    ) -> Result<f64> {
+        opt.step += 1;
+        let mut inputs = params.to_literals(&self.manifest)?;
+        inputs.extend(opt.m.to_literals(&self.manifest)?);
+        inputs.extend(opt.v.to_literals(&self.manifest)?);
+        inputs.push(xla::Literal::from(opt.step as f32));
+        let grads = ParamStore { flat: acc.flat.clone() };
+        inputs.extend(grads.to_literals(&self.manifest)?);
+        inputs.push(xla::Literal::from(acc.scale()));
+        let file = self.manifest.apply_file.clone();
+        let outs = self.run(&file, &inputs)?;
+        let n = self.manifest.params.len();
+        if outs.len() != 3 * n + 1 {
+            bail!("apply: expected {} outputs, got {}", 3 * n + 1, outs.len());
+        }
+        params.from_literals(&self.manifest, &outs[..n])?;
+        opt.m.from_literals(&self.manifest, &outs[n..2 * n])?;
+        opt.v.from_literals(&self.manifest, &outs[2 * n..3 * n])?;
+        let met: Vec<f32> = outs[3 * n].to_vec()?;
+        Ok(met[0] as f64)
+    }
+
+    /// Fused SFT step in the rollout layout. tokens: [B, pretrain_len];
+    /// mask: [B, pretrain_len-1]; pad_len: [B]. Returns (loss, grad_norm).
+    pub fn pretrain_step(
+        &self,
+        params: &mut ParamStore,
+        opt: &mut OptState,
+        tokens: &[i32],
+        loss_mask: &[f32],
+        pad_len: &[i32],
+    ) -> Result<(f64, f64)> {
+        let d = &self.manifest.dims;
+        let (b, s) = (d.batch_pretrain, d.pretrain_len);
+        if tokens.len() != b * s || loss_mask.len() != b * (s - 1) || pad_len.len() != b {
+            bail!("pretrain: bad input shapes");
+        }
+        opt.step += 1;
+        let mut inputs = params.to_literals(&self.manifest)?;
+        inputs.extend(opt.m.to_literals(&self.manifest)?);
+        inputs.extend(opt.v.to_literals(&self.manifest)?);
+        inputs.push(xla::Literal::from(opt.step as f32));
+        inputs.push(xla::Literal::vec1(tokens).reshape(&[b as i64, s as i64])?);
+        inputs.push(xla::Literal::vec1(loss_mask).reshape(&[b as i64, (s - 1) as i64])?);
+        inputs.push(xla::Literal::vec1(pad_len));
+        let file = self.manifest.pretrain_file.clone();
+        let outs = self.run(&file, &inputs)?;
+        let n = self.manifest.params.len();
+        if outs.len() != 3 * n + 1 {
+            bail!("pretrain: expected {} outputs, got {}", 3 * n + 1, outs.len());
+        }
+        params.from_literals(&self.manifest, &outs[..n])?;
+        opt.m.from_literals(&self.manifest, &outs[n..2 * n])?;
+        opt.v.from_literals(&self.manifest, &outs[2 * n..3 * n])?;
+        let met: Vec<f32> = outs[3 * n].to_vec()?;
+        Ok((met[0] as f64, met[1] as f64))
+    }
+
+    /// Score tokens with the current policy (diagnostics / tests).
+    /// tokens: [B_rollout, P + bucket]. Returns (logprobs, entropy) [B, bucket].
+    pub fn score(
+        &self,
+        params: &ParamStore,
+        tokens: &[i32],
+        pad_len: &[i32],
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.score_impl(params, tokens, pad_len, bucket, false)
+    }
+
+    /// Scorer whose forward pass runs the L1 Pallas flash-attention kernel.
+    pub fn score_pallas(
+        &self,
+        params: &ParamStore,
+        tokens: &[i32],
+        pad_len: &[i32],
+        bucket: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.score_impl(params, tokens, pad_len, bucket, true)
+    }
+
+    fn score_impl(
+        &self,
+        params: &ParamStore,
+        tokens: &[i32],
+        pad_len: &[i32],
+        bucket: usize,
+        pallas: bool,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = &self.manifest.dims;
+        let (b, p) = (d.batch_rollout, d.prompt_len);
+        let files =
+            if pallas { &self.manifest.score_pallas_files } else { &self.manifest.score_files };
+        let file = files
+            .iter()
+            .find(|(bk, _)| *bk == bucket)
+            .map(|(_, f)| f.clone())
+            .with_context(|| format!("no score artifact for bucket {bucket}"))?;
+        let mut inputs = params.to_literals(&self.manifest)?;
+        inputs.push(xla::Literal::vec1(tokens).reshape(&[b as i64, (p + bucket) as i64])?);
+        inputs.push(xla::Literal::vec1(pad_len));
+        let outs = self.run(&file, &inputs)?;
+        Ok((outs[0].to_vec()?, outs[1].to_vec()?))
+    }
+}

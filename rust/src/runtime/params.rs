@@ -1,0 +1,322 @@
+//! Parameter / optimiser-state stores and gradient accumulation.
+//!
+//! Parameters live in ONE contiguous host `Vec<f32>` in manifest order
+//! (exactly the layout of `artifacts/<cfg>/init_params.bin` and of
+//! checkpoints), and are sliced into per-tensor literals at call time.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::Manifest;
+use crate::util::json::{obj, Json};
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub flat: Vec<f32>,
+}
+
+impl ParamStore {
+    /// Load the python-initialised parameters shipped with the artifacts.
+    pub fn load_init(manifest: &Manifest) -> Result<ParamStore> {
+        let path = manifest.dir.join("init_params.bin");
+        Self::from_bin(&path, manifest.param_count)
+    }
+
+    pub fn from_bin(path: &Path, expect: usize) -> Result<ParamStore> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != expect * 4 {
+            bail!("{}: {} bytes, expected {}", path.display(), bytes.len(), expect * 4);
+        }
+        let flat = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(ParamStore { flat })
+    }
+
+    pub fn zeros_like(manifest: &Manifest) -> ParamStore {
+        ParamStore { flat: vec![0.0; manifest.param_count] }
+    }
+
+    /// Per-tensor literals in manifest order.
+    pub fn to_literals(&self, manifest: &Manifest) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let slice = &self.flat[p.offset..p.offset + p.size];
+            let lit = xla::Literal::vec1(slice);
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            out.push(if dims.len() == 1 { lit } else { lit.reshape(&dims)? });
+        }
+        Ok(out)
+    }
+
+    /// Overwrite from per-tensor output literals (apply/pretrain results).
+    pub fn from_literals(&mut self, manifest: &Manifest, lits: &[xla::Literal]) -> Result<()> {
+        if lits.len() != manifest.params.len() {
+            bail!("expected {} tensors, got {}", manifest.params.len(), lits.len());
+        }
+        for (p, lit) in manifest.params.iter().zip(lits) {
+            let v: Vec<f32> = lit.to_vec()?;
+            if v.len() != p.size {
+                bail!("tensor {}: got {} elems, expected {}", p.name, v.len(), p.size);
+            }
+            self.flat[p.offset..p.offset + p.size].copy_from_slice(&v);
+        }
+        Ok(())
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.flat.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Adam moments + step counter.
+#[derive(Clone, Debug)]
+pub struct OptState {
+    pub m: ParamStore,
+    pub v: ParamStore,
+    pub step: u64,
+}
+
+impl OptState {
+    pub fn zeros(manifest: &Manifest) -> OptState {
+        OptState {
+            m: ParamStore::zeros_like(manifest),
+            v: ParamStore::zeros_like(manifest),
+            step: 0,
+        }
+    }
+}
+
+/// Host-side gradient accumulator across micro-batches.
+#[derive(Clone, Debug)]
+pub struct GradAccum {
+    pub flat: Vec<f32>,
+    pub sequences: usize,
+}
+
+impl GradAccum {
+    pub fn zeros(param_count: usize) -> GradAccum {
+        GradAccum { flat: vec![0.0; param_count], sequences: 0 }
+    }
+
+    pub fn reset(&mut self) {
+        self.flat.iter_mut().for_each(|x| *x = 0.0);
+        self.sequences = 0;
+    }
+
+    /// Add one micro-batch's per-tensor gradient literals in place.
+    pub fn add_literals(
+        &mut self,
+        manifest: &Manifest,
+        lits: &[xla::Literal],
+        real_rows: usize,
+    ) -> Result<()> {
+        if lits.len() < manifest.params.len() {
+            bail!("grad output too short: {}", lits.len());
+        }
+        for (p, lit) in manifest.params.iter().zip(lits) {
+            let v: Vec<f32> = lit.to_vec()?;
+            if v.len() != p.size {
+                bail!("grad tensor {}: {} elems, expected {}", p.name, v.len(), p.size);
+            }
+            let dst = &mut self.flat[p.offset..p.offset + p.size];
+            for (d, s) in dst.iter_mut().zip(&v) {
+                *d += *s;
+            }
+        }
+        self.sequences += real_rows;
+        Ok(())
+    }
+
+    /// 1 / sequences — the `scale` fed to the apply artifact.
+    pub fn scale(&self) -> f32 {
+        if self.sequences == 0 {
+            0.0
+        } else {
+            1.0 / self.sequences as f32
+        }
+    }
+}
+
+/// Checkpoint = params (+ optional opt state) + JSON sidecar.
+pub struct Checkpoint;
+
+impl Checkpoint {
+    pub fn save(
+        path: &Path,
+        manifest: &Manifest,
+        params: &ParamStore,
+        opt: Option<&OptState>,
+    ) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut bytes: Vec<u8> = Vec::with_capacity(params.flat.len() * 4);
+        for &x in &params.flat {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        if let Some(o) = opt {
+            for store in [&o.m, &o.v] {
+                for &x in &store.flat {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        std::fs::write(path, &bytes)?;
+        let meta = obj(vec![
+            ("model", Json::Str(manifest.dims.name.clone())),
+            ("param_count", Json::Num(manifest.param_count as f64)),
+            ("has_opt", Json::Bool(opt.is_some())),
+            ("opt_step", Json::Num(opt.map(|o| o.step).unwrap_or(0) as f64)),
+        ]);
+        std::fs::write(path.with_extension("json"), meta.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(
+        path: &Path,
+        manifest: &Manifest,
+    ) -> Result<(ParamStore, Option<OptState>)> {
+        let meta_text = std::fs::read_to_string(path.with_extension("json"))
+            .with_context(|| format!("checkpoint sidecar for {}", path.display()))?;
+        let meta = Json::parse(&meta_text).map_err(|e| anyhow::anyhow!(e))?;
+        let n = meta.get("param_count").and_then(Json::as_usize).unwrap_or(0);
+        if n != manifest.param_count {
+            bail!(
+                "checkpoint is for {} params, manifest has {} (model {} vs {})",
+                n,
+                manifest.param_count,
+                meta.get("model").and_then(Json::as_str).unwrap_or("?"),
+                manifest.dims.name
+            );
+        }
+        let has_opt = matches!(meta.get("has_opt"), Some(Json::Bool(true)));
+        let bytes = std::fs::read(path)?;
+        let expect = if has_opt { 3 * n * 4 } else { n * 4 };
+        if bytes.len() != expect {
+            bail!("checkpoint size {} != expected {expect}", bytes.len());
+        }
+        let read_store = |off: usize| -> ParamStore {
+            ParamStore {
+                flat: bytes[off..off + n * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            }
+        };
+        let params = read_store(0);
+        let opt = if has_opt {
+            Some(OptState {
+                m: read_store(n * 4),
+                v: read_store(2 * n * 4),
+                step: meta.get("opt_step").and_then(Json::as_i64).unwrap_or(0) as u64,
+            })
+        } else {
+            None
+        };
+        Ok((params, opt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn toy_manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{
+          "config": {"name":"t","vocab":8,"d_model":4,"n_layers":1,"n_heads":1,
+            "d_ff":8,"prompt_len":4,"max_resp":8,"buckets":[4,8],
+            "batch_rollout":2,"batch_train":2,"pretrain_len":12,
+            "batch_pretrain":2,"lr":0.001,"clip_eps":0.2,"grad_clip":1.0,
+            "pretrain_lr":0.001},
+          "param_count": 40,
+          "params": [
+            {"name":"embed","shape":[8,4],"size":32,"offset":0},
+            {"name":"head","shape":[4,2],"size":8,"offset":32}],
+          "artifacts": {"generate":"g.txt","apply":"a.txt","pretrain":"p.txt",
+            "grad":{"4":"g4.txt","8":"g8.txt"},"score":{"8":"s8.txt"}}
+        }"#,
+        )
+        .unwrap();
+        Manifest::from_json(Path::new("/tmp"), &j).unwrap()
+    }
+
+    #[test]
+    fn literals_roundtrip() {
+        let m = toy_manifest();
+        let mut ps = ParamStore::zeros_like(&m);
+        for (i, x) in ps.flat.iter_mut().enumerate() {
+            *x = i as f32 * 0.5;
+        }
+        let lits = ps.to_literals(&m).unwrap();
+        assert_eq!(lits.len(), 2);
+        let mut ps2 = ParamStore::zeros_like(&m);
+        ps2.from_literals(&m, &lits).unwrap();
+        assert_eq!(ps.flat, ps2.flat);
+    }
+
+    #[test]
+    fn grad_accum_sums_and_scales() {
+        let m = toy_manifest();
+        let mut acc = GradAccum::zeros(m.param_count);
+        let mut ps = ParamStore::zeros_like(&m);
+        ps.flat.iter_mut().for_each(|x| *x = 2.0);
+        let lits = ps.to_literals(&m).unwrap();
+        acc.add_literals(&m, &lits, 3).unwrap();
+        acc.add_literals(&m, &lits, 2).unwrap();
+        assert!(acc.flat.iter().all(|&x| (x - 4.0).abs() < 1e-7));
+        assert_eq!(acc.sequences, 5);
+        assert!((acc.scale() - 0.2).abs() < 1e-7);
+        acc.reset();
+        assert_eq!(acc.scale(), 0.0);
+        assert!(acc.flat.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_with_opt() {
+        let m = toy_manifest();
+        let dir = std::env::temp_dir().join("nat_rl_ckpt_test");
+        let path = dir.join("test.bin");
+        let mut ps = ParamStore::zeros_like(&m);
+        ps.flat[7] = 1.25;
+        let mut opt = OptState::zeros(&m);
+        opt.m.flat[0] = -3.0;
+        opt.step = 17;
+        Checkpoint::save(&path, &m, &ps, Some(&opt)).unwrap();
+        let (ps2, opt2) = Checkpoint::load(&path, &m).unwrap();
+        assert_eq!(ps.flat, ps2.flat);
+        let opt2 = opt2.unwrap();
+        assert_eq!(opt2.m.flat[0], -3.0);
+        assert_eq!(opt2.step, 17);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn checkpoint_without_opt() {
+        let m = toy_manifest();
+        let dir = std::env::temp_dir().join("nat_rl_ckpt_test2");
+        let path = dir.join("p.bin");
+        let ps = ParamStore::zeros_like(&m);
+        Checkpoint::save(&path, &m, &ps, None).unwrap();
+        let (_, opt) = Checkpoint::load(&path, &m).unwrap();
+        assert!(opt.is_none());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let _m = toy_manifest();
+        let dir = std::env::temp_dir().join("nat_rl_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, vec![0u8; 7]).unwrap();
+        assert!(ParamStore::from_bin(&path, 40).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

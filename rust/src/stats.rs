@@ -1,0 +1,201 @@
+//! Statistics substrate: streaming moments, Student-t 95% CIs, bootstrap.
+//!
+//! Every paper table/figure reports mean ± 95% CI across 5 runs; this module
+//! provides exactly that aggregation (plus bootstrap CIs for pass@k, whose
+//! per-run distribution is far from normal at small n).
+
+use crate::util::rng::Rng;
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Two-sided 95% Student-t critical values for df = 1..=30 (then normal).
+const T95: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+    2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+    2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+];
+
+pub fn t95(df: u64) -> f64 {
+    if df == 0 {
+        f64::INFINITY
+    } else if df <= 30 {
+        T95[(df - 1) as usize]
+    } else {
+        1.96
+    }
+}
+
+/// Mean and 95% CI half-width of a sample (the paper's `x ± ci` cells).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeanCi {
+    pub mean: f64,
+    pub ci95: f64,
+    pub n: u64,
+}
+
+impl MeanCi {
+    pub fn of(xs: &[f64]) -> MeanCi {
+        let mut w = Welford::new();
+        for &x in xs {
+            w.push(x);
+        }
+        let df = w.count().saturating_sub(1);
+        MeanCi {
+            mean: w.mean(),
+            ci95: if df == 0 { 0.0 } else { t95(df) * w.sem() },
+            n: w.count(),
+        }
+    }
+
+    /// The paper's CI-overlap colouring heuristic (Table 2).
+    pub fn overlaps(&self, other: &MeanCi) -> bool {
+        (self.mean - other.mean).abs() <= self.ci95 + other.ci95
+    }
+}
+
+impl std::fmt::Display for MeanCi {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.3}±{:.3}", self.mean, self.ci95)
+    }
+}
+
+/// Percentile-bootstrap 95% CI of the mean.
+pub fn bootstrap_ci(xs: &[f64], resamples: usize, rng: &mut Rng) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut means: Vec<f64> = (0..resamples)
+        .map(|_| {
+            let mut s = 0.0;
+            for _ in 0..xs.len() {
+                s += xs[rng.below(xs.len() as u64) as usize];
+            }
+            s / xs.len() as f64
+        })
+        .collect();
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let lo = means[(resamples as f64 * 0.025) as usize];
+    let hi = means[((resamples as f64 * 0.975) as usize).min(resamples - 1)];
+    (lo, hi)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::new();
+        for x in xs {
+            w.push(x);
+        }
+        let m = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / 4.0;
+        assert!((w.mean() - m).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn welford_degenerate() {
+        let mut w = Welford::new();
+        assert_eq!(w.var(), 0.0);
+        w.push(3.0);
+        assert_eq!(w.var(), 0.0);
+        assert_eq!(w.mean(), 3.0);
+    }
+
+    #[test]
+    fn t_table_monotone_and_tails() {
+        assert!(t95(1) > t95(2));
+        assert!((t95(4) - 2.776).abs() < 1e-9); // 5 runs => df 4, the paper's case
+        assert!((t95(1000) - 1.96).abs() < 1e-9);
+        assert!(t95(0).is_infinite());
+    }
+
+    #[test]
+    fn mean_ci_of_five_runs() {
+        let xs = [0.61, 0.60, 0.62, 0.59, 0.63];
+        let ci = MeanCi::of(&xs);
+        assert!((ci.mean - 0.61).abs() < 1e-12);
+        assert!(ci.ci95 > 0.0 && ci.ci95 < 0.05);
+        assert_eq!(ci.n, 5);
+    }
+
+    #[test]
+    fn overlap_heuristic() {
+        let a = MeanCi { mean: 0.5, ci95: 0.05, n: 5 };
+        let b = MeanCi { mean: 0.56, ci95: 0.02, n: 5 };
+        let c = MeanCi { mean: 0.60, ci95: 0.02, n: 5 };
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+    }
+
+    #[test]
+    fn bootstrap_brackets_mean() {
+        let xs: Vec<f64> = (0..100).map(|i| (i % 10) as f64).collect();
+        let mut rng = Rng::new(0);
+        let (lo, hi) = bootstrap_ci(&xs, 500, &mut rng);
+        let m = mean(&xs);
+        assert!(lo <= m && m <= hi, "{lo} {m} {hi}");
+        assert!(hi - lo < 2.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Task instance generators, one per [`Kind`], parameterised by [`Tier`].
+
+use crate::util::rng::Rng;
+
+use super::{Kind, Task, Tier};
+
+/// Difficulty knobs per tier.
+#[derive(Clone, Copy, Debug)]
+pub struct TierParams {
+    /// Number of binary ops in an expression chain.
+    pub expr_ops: usize,
+    /// Max operand value in expression chains.
+    pub expr_max: i64,
+    /// Digits per addend.
+    pub add_digits: usize,
+    /// Number of digits to sort.
+    pub sort_len: usize,
+}
+
+pub fn tier_params(tier: Tier) -> TierParams {
+    match tier {
+        Tier::Easy => TierParams { expr_ops: 2, expr_max: 9, add_digits: 2, sort_len: 4 },
+        Tier::Medium => TierParams { expr_ops: 3, expr_max: 9, add_digits: 3, sort_len: 6 },
+        Tier::Hard => TierParams { expr_ops: 4, expr_max: 12, add_digits: 4, sort_len: 8 },
+    }
+}
+
+/// Evaluate a left-to-right chain: ((a0 op0 a1) op1 a2) ...
+pub fn eval_chain(operands: &[i64], ops: &[char]) -> i64 {
+    let mut acc = operands[0];
+    for (i, &op) in ops.iter().enumerate() {
+        let b = operands[i + 1];
+        acc = match op {
+            '+' => acc + b,
+            '-' => acc - b,
+            '*' => acc * b,
+            _ => unreachable!("bad op {op}"),
+        };
+    }
+    acc
+}
+
+/// Mathematical modulus (result always in [0, m)).
+pub fn imod(x: i64, m: i64) -> i64 {
+    ((x % m) + m) % m
+}
+
+pub fn gen_expr(rng: &mut Rng, tier: Tier, id: u64) -> Task {
+    let p = tier_params(tier);
+    loop {
+        let n = p.expr_ops + 1;
+        let operands: Vec<i64> =
+            (0..n).map(|_| rng.range_inclusive(1, p.expr_max as u64) as i64).collect();
+        let ops: Vec<char> = (0..p.expr_ops)
+            .map(|_| *rng.choose(&['+', '-', '*']))
+            .collect();
+        // Keep intermediates small so CoT stays within the response budget
+        // and the char-level model sees bounded digit counts.
+        let mut acc = operands[0];
+        let mut ok = true;
+        for (i, &op) in ops.iter().enumerate() {
+            let b = operands[i + 1];
+            acc = match op {
+                '+' => acc + b,
+                '-' => acc - b,
+                '*' => acc * b,
+                _ => unreachable!(),
+            };
+            if acc.abs() > 999 {
+                ok = false;
+                break;
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let m = rng.range_inclusive(5, 13) as i64;
+        let result = imod(acc, m);
+        let mut prompt = String::from("e:");
+        for (i, v) in operands.iter().enumerate() {
+            if i > 0 {
+                prompt.push(ops[i - 1]);
+            }
+            prompt.push_str(&v.to_string());
+        }
+        prompt.push('%');
+        prompt.push_str(&m.to_string());
+        prompt.push('=');
+        return Task { id, tier, kind: Kind::Expr, prompt, answer: result.to_string() };
+    }
+}
+
+pub fn gen_add(rng: &mut Rng, tier: Tier, id: u64) -> Task {
+    let p = tier_params(tier);
+    let lo = 10i64.pow(p.add_digits as u32 - 1);
+    let hi = 10i64.pow(p.add_digits as u32) - 1;
+    let a = rng.range_inclusive(lo as u64, hi as u64) as i64;
+    let b = rng.range_inclusive(lo as u64, hi as u64) as i64;
+    Task {
+        id,
+        tier,
+        kind: Kind::Add,
+        prompt: format!("a:{a}+{b}="),
+        answer: (a + b).to_string(),
+    }
+}
+
+pub fn gen_sort(rng: &mut Rng, tier: Tier, id: u64) -> Task {
+    let p = tier_params(tier);
+    let digits: Vec<u8> = (0..p.sort_len).map(|_| rng.below(10) as u8).collect();
+    let prompt: String = digits.iter().map(|d| (b'0' + d) as char).collect();
+    let mut sorted = digits.clone();
+    sorted.sort();
+    let answer: String = sorted.iter().map(|d| (b'0' + d) as char).collect();
+    Task { id, tier, kind: Kind::Sort, prompt: format!("s:{prompt}="), answer }
+}
+
+pub fn gen_task(rng: &mut Rng, kind: Kind, tier: Tier, id: u64) -> Task {
+    match kind {
+        Kind::Expr => gen_expr(rng, tier, id),
+        Kind::Add => gen_add(rng, tier, id),
+        Kind::Sort => gen_sort(rng, tier, id),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_answer_is_correct_mod() {
+        let mut rng = Rng::new(0);
+        for i in 0..200 {
+            let t = gen_expr(&mut rng, Tier::Hard, i);
+            // re-parse the prompt and recompute
+            let body = t.prompt.strip_prefix("e:").unwrap().strip_suffix('=').unwrap();
+            let (chain, m) = body.rsplit_once('%').unwrap();
+            let m: i64 = m.parse().unwrap();
+            let mut operands = Vec::new();
+            let mut ops = Vec::new();
+            let mut cur = String::new();
+            for c in chain.chars() {
+                if c.is_ascii_digit() {
+                    cur.push(c);
+                } else {
+                    operands.push(cur.parse::<i64>().unwrap());
+                    cur.clear();
+                    ops.push(c);
+                }
+            }
+            operands.push(cur.parse().unwrap());
+            let want = imod(eval_chain(&operands, &ops), m);
+            assert_eq!(t.answer, want.to_string(), "{}", t.prompt);
+            assert!((0..m).contains(&want));
+        }
+    }
+
+    #[test]
+    fn add_answer_is_sum() {
+        let mut rng = Rng::new(1);
+        for i in 0..100 {
+            let t = gen_add(&mut rng, Tier::Medium, i);
+            let body = t.prompt.strip_prefix("a:").unwrap().strip_suffix('=').unwrap();
+            let (a, b) = body.split_once('+').unwrap();
+            let want: i64 = a.parse::<i64>().unwrap() + b.parse::<i64>().unwrap();
+            assert_eq!(t.answer, want.to_string());
+        }
+    }
+
+    #[test]
+    fn sort_answer_is_sorted_multiset() {
+        let mut rng = Rng::new(2);
+        for i in 0..100 {
+            let t = gen_sort(&mut rng, Tier::Hard, i);
+            let body = t.prompt.strip_prefix("s:").unwrap().strip_suffix('=').unwrap();
+            let mut digs: Vec<char> = body.chars().collect();
+            digs.sort();
+            assert_eq!(t.answer, digs.into_iter().collect::<String>());
+            let mut sorted_chars: Vec<char> = t.answer.chars().collect();
+            let is_sorted = sorted_chars.windows(2).all(|w| w[0] <= w[1]);
+            assert!(is_sorted);
+            sorted_chars.dedup();
+        }
+    }
+
+    #[test]
+    fn prompts_fit_the_smallest_prompt_window() {
+        let mut rng = Rng::new(3);
+        for tier in Tier::ALL {
+            for kind in Kind::ALL {
+                for i in 0..100 {
+                    let t = gen_task(&mut rng, kind, tier, i);
+                    assert!(t.prompt.len() <= 32, "{} ({:?})", t.prompt, tier);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn imod_is_nonnegative() {
+        assert_eq!(imod(-3, 7), 4);
+        assert_eq!(imod(10, 7), 3);
+        assert_eq!(imod(-14, 7), 0);
+    }
+
+    #[test]
+    fn difficulty_increases_with_tier() {
+        let e = tier_params(Tier::Easy);
+        let h = tier_params(Tier::Hard);
+        assert!(h.expr_ops > e.expr_ops);
+        assert!(h.add_digits > e.add_digits);
+        assert!(h.sort_len > e.sort_len);
+    }
+}

@@ -1,0 +1,75 @@
+//! Synthetic verifiable math task suite — the reproduction's stand-in for
+//! DAPO-Math-17K (training) and MATH / AIME24 / AIME25 (evaluation).
+//!
+//! Three task families with tiered difficulty produce prompts whose
+//! solutions require multi-step chain-of-thought and admit an exact-match
+//! verifier, preserving the RLVR structure the paper depends on
+//! (full-response reward, response-length variability, late "answer
+//! formation" tokens that deterministic truncation destroys).
+//!
+//! Benchmark naming (DESIGN.md §2): `MATH-S` = Easy, `AIME24-S` = Medium,
+//! `AIME25-S` = Hard.
+
+pub mod dataset;
+pub mod gen;
+pub mod render;
+pub mod verify;
+
+pub use dataset::{EvalSet, SftCorpus, TaskMix, TaskSampler};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tier {
+    Easy,
+    Medium,
+    Hard,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 3] = [Tier::Easy, Tier::Medium, Tier::Hard];
+
+    /// Paper-facing benchmark label.
+    pub fn benchmark_name(self) -> &'static str {
+        match self {
+            Tier::Easy => "MATH-S",
+            Tier::Medium => "AIME24-S",
+            Tier::Hard => "AIME25-S",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Tier> {
+        match s {
+            "easy" | "MATH-S" => Some(Tier::Easy),
+            "medium" | "AIME24-S" => Some(Tier::Medium),
+            "hard" | "AIME25-S" => Some(Tier::Hard),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// Left-to-right arithmetic chain with a final modulus:
+    /// `e:3+5*2%7=` means ((3+5)*2) mod 7.
+    Expr,
+    /// Multi-digit addition: `a:372+85=`.
+    Add,
+    /// Digit sorting: `s:52961=`.
+    Sort,
+}
+
+impl Kind {
+    pub const ALL: [Kind; 3] = [Kind::Expr, Kind::Add, Kind::Sort];
+}
+
+/// One verifiable problem instance.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: u64,
+    pub tier: Tier,
+    pub kind: Kind,
+    /// Prompt text, e.g. "e:3+5*2%7=". Encoded and LEFT-padded by the
+    /// rollout scheduler.
+    pub prompt: String,
+    /// Canonical answer string the verifier matches exactly.
+    pub answer: String,
+}

@@ -1,0 +1,228 @@
+//! Chain-of-thought renderers: gold solutions for the SFT (base-model)
+//! phase and for measuring oracle response lengths.
+//!
+//! The CoT formats deliberately put the final answer at the END of the
+//! response (`#<answer>` then EOS) — the paper's argument against
+//! deterministic truncation rests on late tokens carrying answer formation,
+//! and these renderers preserve that structure.
+
+use crate::util::rng::Rng;
+
+use super::gen::imod;
+use super::{Kind, Task};
+
+/// Render the gold chain-of-thought (without prompt, without EOS).
+pub fn render_cot(task: &Task) -> String {
+    match task.kind {
+        Kind::Expr => render_expr_cot(task),
+        Kind::Add => render_add_cot(task),
+        Kind::Sort => render_sort_cot(task),
+    }
+}
+
+fn render_expr_cot(task: &Task) -> String {
+    let body = task.prompt.strip_prefix("e:").unwrap().strip_suffix('=').unwrap();
+    let (chain, m) = body.rsplit_once('%').unwrap();
+    let m: i64 = m.parse().unwrap();
+    let mut operands: Vec<i64> = Vec::new();
+    let mut ops: Vec<char> = Vec::new();
+    let mut cur = String::new();
+    for c in chain.chars() {
+        if c.is_ascii_digit() {
+            cur.push(c);
+        } else {
+            operands.push(cur.parse().unwrap());
+            cur.clear();
+            ops.push(c);
+        }
+    }
+    operands.push(cur.parse().unwrap());
+    let mut out = String::new();
+    let mut acc = operands[0];
+    for (i, &op) in ops.iter().enumerate() {
+        let b = operands[i + 1];
+        let next = match op {
+            '+' => acc + b,
+            '-' => acc - b,
+            '*' => acc * b,
+            _ => unreachable!(),
+        };
+        out.push_str(&format!("{acc}{op}{b}={next}\n"));
+        acc = next;
+    }
+    let r = imod(acc, m);
+    out.push_str(&format!("{acc}%{m}={r}\n#{r}"));
+    out
+}
+
+fn render_add_cot(task: &Task) -> String {
+    let body = task.prompt.strip_prefix("a:").unwrap().strip_suffix('=').unwrap();
+    let (a, b) = body.split_once('+').unwrap();
+    let (a, b): (i64, i64) = (a.parse().unwrap(), b.parse().unwrap());
+    let (da, db) = (digits_rev(a), digits_rev(b));
+    let mut out = String::new();
+    let mut carry = 0i64;
+    let n = da.len().max(db.len());
+    for i in 0..n {
+        let x = da.get(i).copied().unwrap_or(0);
+        let y = db.get(i).copied().unwrap_or(0);
+        let s = x + y + carry;
+        out.push_str(&format!("{x}+{y}+{carry}={s}\n"));
+        carry = s / 10;
+    }
+    out.push_str(&format!("#{}", a + b));
+    out
+}
+
+fn digits_rev(mut x: i64) -> Vec<i64> {
+    let mut out = Vec::new();
+    while x > 0 {
+        out.push(x % 10);
+        x /= 10;
+    }
+    if out.is_empty() {
+        out.push(0);
+    }
+    out
+}
+
+fn render_sort_cot(task: &Task) -> String {
+    // Progressive selection sort: each line is the sorted prefix built so
+    // far (short enough that Hard-tier 8-digit tasks fit the response
+    // budget of the small config, yet still multi-step).
+    let body = task.prompt.strip_prefix("s:").unwrap().strip_suffix('=').unwrap();
+    let mut rest: Vec<char> = body.chars().collect();
+    let mut out = String::new();
+    let mut picked = String::new();
+    while !rest.is_empty() {
+        let (mi, &mc) = rest.iter().enumerate().min_by_key(|(_, c)| **c).unwrap();
+        rest.remove(mi);
+        picked.push(mc);
+        out.push_str(&picked);
+        out.push('\n');
+    }
+    out.push_str(&format!("#{picked}"));
+    out
+}
+
+/// Corrupt a gold CoT with probability `noise`: the SFT corpus is
+/// deliberately imperfect so the base model leaves headroom for RL (the
+/// paper's base models are likewise not task-saturated).
+pub fn maybe_corrupt(rng: &mut Rng, task: &Task, cot: &str, noise: f64) -> String {
+    if !rng.bernoulli(noise) {
+        return cot.to_string();
+    }
+    // Replace the final answer with a plausible wrong one (digit nudge).
+    if let Some(pos) = cot.rfind('#') {
+        let (head, ans) = cot.split_at(pos);
+        let ans = &ans[1..];
+        let wrong = nudge_answer(rng, ans);
+        if wrong != ans {
+            return format!("{head}#{wrong}");
+        }
+    }
+    let _ = task;
+    cot.to_string()
+}
+
+fn nudge_answer(rng: &mut Rng, ans: &str) -> String {
+    let mut chars: Vec<char> = ans.chars().collect();
+    if chars.is_empty() {
+        return "0".into();
+    }
+    let i = rng.below(chars.len() as u64) as usize;
+    if let Some(d) = chars[i].to_digit(10) {
+        let nd = (d + 1 + rng.below(8) as u32) % 10;
+        chars[i] = char::from_digit(nd, 10).unwrap();
+    }
+    chars.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gen::{gen_task, tier_params};
+    use super::super::{Kind, Tier};
+    use super::*;
+    use crate::tasks::verify::extract_answer;
+    use crate::tokenizer::Tokenizer;
+
+    #[test]
+    fn cot_ends_with_correct_answer() {
+        let mut rng = Rng::new(0);
+        for tier in Tier::ALL {
+            for kind in Kind::ALL {
+                for i in 0..50 {
+                    let t = gen_task(&mut rng, kind, tier, i);
+                    let cot = render_cot(&t);
+                    assert_eq!(extract_answer(&cot), Some(t.answer.clone()),
+                        "{} -> {cot}", t.prompt);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cot_is_tokenizable() {
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(1);
+        for tier in Tier::ALL {
+            for kind in Kind::ALL {
+                let t = gen_task(&mut rng, kind, tier, 0);
+                assert!(tok.try_encode(&render_cot(&t)).is_some());
+                assert!(tok.try_encode(&t.prompt).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn cot_fits_response_budget_small_config() {
+        // small/base configs have max_resp >= 128; CoTs must fit with EOS.
+        let mut rng = Rng::new(2);
+        let mut max_len = 0;
+        for tier in Tier::ALL {
+            for kind in Kind::ALL {
+                for i in 0..200 {
+                    let t = gen_task(&mut rng, kind, tier, i);
+                    let len = render_cot(&t).chars().count() + 1; // + EOS
+                    max_len = max_len.max(len);
+                    assert!(len <= 127, "{} chars for {}", len, t.prompt);
+                }
+            }
+        }
+        assert!(max_len > 30, "suspiciously short CoTs: {max_len}");
+    }
+
+    #[test]
+    fn corruption_changes_answers_at_high_noise() {
+        let mut rng = Rng::new(3);
+        let t = gen_task(&mut rng, Kind::Add, Tier::Easy, 0);
+        let cot = render_cot(&t);
+        let mut changed = 0;
+        for _ in 0..100 {
+            let c = maybe_corrupt(&mut rng, &t, &cot, 1.0);
+            if extract_answer(&c) != Some(t.answer.clone()) {
+                changed += 1;
+            }
+        }
+        assert!(changed > 80, "{changed}");
+        // zero noise never corrupts
+        for _ in 0..20 {
+            assert_eq!(maybe_corrupt(&mut rng, &t, &cot, 0.0), cot);
+        }
+    }
+
+    #[test]
+    fn hard_tier_cots_are_longer_on_average() {
+        let mut rng = Rng::new(4);
+        let mut avg = |tier| -> f64 {
+            let mut s = 0usize;
+            for i in 0..100u64 {
+                let t = gen_task(&mut rng.fork(i), Kind::Sort, tier, i);
+                s += render_cot(&t).len();
+            }
+            s as f64 / 100.0
+        };
+        assert!(avg(Tier::Hard) > avg(Tier::Easy) + 10.0);
+        let _ = tier_params(Tier::Easy);
+    }
+}

@@ -1,0 +1,90 @@
+//! Exact-match verifier — the RLVR reward function.
+//!
+//! Rewards are computed on the FULL decoded response (never on the NAT-cut
+//! prefix): the paper's framework changes only which tokens backpropagate,
+//! not how rewards are produced.
+
+use crate::tokenizer::Tokenizer;
+
+use super::Task;
+
+/// Extract the answer: text after the LAST '#', up to newline/end, trimmed.
+pub fn extract_answer(response: &str) -> Option<String> {
+    let pos = response.rfind('#')?;
+    let tail = &response[pos + 1..];
+    let ans: &str = tail.split('\n').next().unwrap_or("");
+    let ans = ans.trim();
+    if ans.is_empty() {
+        None
+    } else {
+        Some(ans.to_string())
+    }
+}
+
+/// Binary verifiable reward.
+pub fn reward_text(task: &Task, response: &str) -> f32 {
+    match extract_answer(response) {
+        Some(a) if a == task.answer => 1.0,
+        _ => 0.0,
+    }
+}
+
+/// Decode response token ids (stops at EOS) and verify.
+pub fn reward_tokens(tok: &Tokenizer, task: &Task, resp_ids: &[i32]) -> f32 {
+    reward_text(task, &tok.decode(resp_ids))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Kind, Tier};
+    use super::*;
+    use crate::tokenizer::EOS;
+
+    fn task(ans: &str) -> Task {
+        Task {
+            id: 0,
+            tier: Tier::Easy,
+            kind: Kind::Expr,
+            prompt: "e:1+1%5=".into(),
+            answer: ans.into(),
+        }
+    }
+
+    #[test]
+    fn extracts_after_last_hash() {
+        assert_eq!(extract_answer(""), None);
+        assert_eq!(extract_answer("1+1=2\n#2"), Some("2".into()));
+        assert_eq!(extract_answer("#3\nmore\n#7"), Some("7".into()));
+        assert_eq!(extract_answer("#  42  "), Some("42".into()));
+        assert_eq!(extract_answer("no marker"), None);
+        assert_eq!(extract_answer("#"), None);
+        assert_eq!(extract_answer("#12\ntrailing"), Some("12".into()));
+    }
+
+    #[test]
+    fn reward_is_exact_match() {
+        let t = task("7");
+        assert_eq!(reward_text(&t, "steps\n#7"), 1.0);
+        assert_eq!(reward_text(&t, "steps\n#17"), 0.0);
+        assert_eq!(reward_text(&t, "steps\n# 7"), 1.0); // trimmed
+        assert_eq!(reward_text(&t, "7"), 0.0); // needs the marker
+    }
+
+    #[test]
+    fn reward_tokens_stops_at_eos() {
+        let tok = Tokenizer::new();
+        let t = task("2");
+        let mut ids = tok.encode("#2");
+        ids.push(EOS);
+        ids.extend(tok.encode("#9")); // garbage after EOS must be ignored
+        assert_eq!(reward_tokens(&tok, &t, &ids), 1.0);
+    }
+
+    #[test]
+    fn empty_and_degenerate_responses() {
+        let tok = Tokenizer::new();
+        let t = task("2");
+        assert_eq!(reward_tokens(&tok, &t, &[]), 0.0);
+        assert_eq!(reward_tokens(&tok, &t, &[EOS]), 0.0);
+    }
+}

@@ -1,0 +1,145 @@
+//! Character-level tokenizer over the synthetic-math alphabet.
+//!
+//! The task suite (rust/src/tasks) renders prompts and chain-of-thought
+//! solutions from a closed alphabet so a small vocab (64, matching the
+//! tiny/small/base model configs) suffices. Special tokens:
+//!   PAD=0 (left padding / unused), BOS=1 (pretraining sequences),
+//!   EOS=2 (end of response — the verifier reads up to the first EOS).
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+/// Printable alphabet starting at id 3. Order is part of the artifact
+/// contract (changing it invalidates pretrained checkpoints).
+const ALPHABET: &str = "0123456789+-*%()=,.:#> abcdefghijklmnopqrstuvwxyz\n";
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    to_id: [i32; 128],
+    to_char: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut to_id = [-1i32; 128];
+        let mut to_char = vec!['\0', '\u{1}', '\u{2}']; // PAD/BOS/EOS placeholders
+        for (i, c) in ALPHABET.chars().enumerate() {
+            let id = 3 + i as i32;
+            to_id[c as usize] = id;
+            to_char.push(c);
+        }
+        Tokenizer { to_id, to_char }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.to_char.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .map(|c| {
+                let i = c as usize;
+                assert!(i < 128 && self.to_id[i] >= 0, "untokenizable char {c:?}");
+                self.to_id[i]
+            })
+            .collect()
+    }
+
+    pub fn try_encode(&self, text: &str) -> Option<Vec<i32>> {
+        text.chars()
+            .map(|c| {
+                let i = c as usize;
+                if i < 128 && self.to_id[i] >= 0 {
+                    Some(self.to_id[i])
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Decode, stopping at EOS; PAD/BOS are skipped.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut out = String::new();
+        for &id in ids {
+            if id == EOS {
+                break;
+            }
+            if id == PAD || id == BOS {
+                continue;
+            }
+            if let Some(&c) = self.to_char.get(id as usize) {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    pub fn id_of(&self, c: char) -> i32 {
+        let i = c as usize;
+        assert!(i < 128 && self.to_id[i] >= 0);
+        self.to_id[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_model_configs() {
+        let t = Tokenizer::new();
+        assert!(t.vocab_size() <= 64, "{}", t.vocab_size());
+        assert!(t.vocab_size() > 40);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let s = "(3+5)*2%7=\n16%7\n#2";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn decode_stops_at_eos_and_skips_pad() {
+        let t = Tokenizer::new();
+        let mut ids = vec![PAD, PAD, BOS];
+        ids.extend(t.encode("ab"));
+        ids.push(EOS);
+        ids.extend(t.encode("junk"));
+        assert_eq!(t.decode(&ids), "ab");
+    }
+
+    #[test]
+    fn ids_are_stable() {
+        // contract: artifact checkpoints depend on this mapping
+        let t = Tokenizer::new();
+        assert_eq!(t.id_of('0'), 3);
+        assert_eq!(t.id_of('9'), 12);
+        assert_eq!(t.id_of('+'), 13);
+        assert_eq!(t.id_of('#'), 23);
+        assert_eq!(t.id_of('\n'), (3 + ALPHABET.len() - 1) as i32);
+    }
+
+    #[test]
+    fn try_encode_rejects_unknown() {
+        let t = Tokenizer::new();
+        assert!(t.try_encode("ABC").is_none()); // uppercase not in alphabet
+        assert!(t.try_encode("3+4").is_some());
+    }
+
+    #[test]
+    fn all_alphabet_chars_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for c in ALPHABET.chars() {
+            assert!(seen.insert(c), "duplicate char {c:?}");
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Mini-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```ignore
+//! let mut b = Bench::new("masking");
+//! b.iter("rpc/T=192", || masking::sample(&strategy, 192, &mut rng));
+//! b.report();
+//! ```
+//! Each case runs a warmup phase, then timed batches until both a minimum
+//! duration and a minimum iteration count are reached; reports mean / std /
+//! median / p95 ns per op. `BENCH_JSON=path` additionally dumps the raw
+//! numbers so the experiment harness can consume them.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub struct CaseResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+}
+
+pub struct Bench {
+    pub group: String,
+    pub min_time: Duration,
+    pub min_iters: u64,
+    pub warmup: Duration,
+    pub results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Bench {
+            group: group.to_string(),
+            min_time: Duration::from_millis(
+                std::env::var("BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(600),
+            ),
+            min_iters: 10,
+            warmup: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+
+    /// Fast-path setting for expensive cases (e.g. whole train steps).
+    pub fn slow(mut self) -> Self {
+        self.min_iters = 3;
+        self.warmup = Duration::from_millis(0);
+        self
+    }
+
+    pub fn iter<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) {
+        // Warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Timed samples: one sample per call (ops here are >= microseconds).
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.min_time || (samples.len() as u64) < self.min_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n.max(1.0);
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let p95_idx = (((sorted.len() as f64) * 0.95) as usize).min(sorted.len() - 1);
+        let p95 = sorted[p95_idx];
+        self.results.push(CaseResult {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            median_ns: median,
+            p95_ns: p95,
+        });
+    }
+
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<40} {:>10} {:>14} {:>12} {:>14} {:>14}",
+            "case", "iters", "mean", "std", "median", "p95"
+        );
+        for r in &self.results {
+            println!(
+                "{:<40} {:>10} {:>14} {:>12} {:>14} {:>14}",
+                r.name,
+                r.iters,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.std_ns),
+                fmt_ns(r.median_ns),
+                fmt_ns(r.p95_ns)
+            );
+        }
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            let mut items = Vec::new();
+            for r in &self.results {
+                items.push(crate::util::json::obj(vec![
+                    ("group", crate::util::json::Json::Str(self.group.clone())),
+                    ("name", crate::util::json::Json::Str(r.name.clone())),
+                    ("iters", crate::util::json::Json::Num(r.iters as f64)),
+                    ("mean_ns", crate::util::json::Json::Num(r.mean_ns)),
+                    ("std_ns", crate::util::json::Json::Num(r.std_ns)),
+                    ("median_ns", crate::util::json::Json::Num(r.median_ns)),
+                    ("p95_ns", crate::util::json::Json::Num(r.p95_ns)),
+                ]));
+            }
+            let _ = std::fs::write(
+                format!("{path}.{}.json", self.group),
+                crate::util::json::Json::Arr(items).to_string(),
+            );
+        }
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let mut b = Bench::new("test");
+        b.min_time = Duration::from_millis(5);
+        b.warmup = Duration::from_millis(1);
+        let mut x = 0u64;
+        b.iter("noop", || {
+            x = x.wrapping_add(1);
+            x
+        });
+        assert_eq!(b.results.len(), 1);
+        let r = &b.results[0];
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.median_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(2_500.0).ends_with("µs"));
+        assert!(fmt_ns(2_500_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_500_000_000.0).ends_with("s"));
+    }
+}

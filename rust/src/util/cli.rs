@@ -1,0 +1,108 @@
+//! Tiny CLI substrate: subcommand + `--key value` / `--flag` parsing
+//! (clap is not in the offline vendor set).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if arg.starts_with('-') && arg.len() > 1 {
+                bail!("short options not supported: {arg}");
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{s}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("train --model small --steps 10 --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("model"), Some("small"));
+        assert_eq!(a.parse_or::<usize>("steps", 0).unwrap(), 10);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("repro --fig=2 --out=x.csv");
+        assert_eq!(a.get("fig"), Some("2"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn trailing_flag_and_positional() {
+        let a = parse("eval ckpt.bin --fast");
+        assert_eq!(a.positional, vec!["ckpt.bin"]);
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn parse_or_errors_on_bad_value() {
+        let a = parse("x --steps ten");
+        assert!(a.parse_or::<usize>("steps", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.get_or("model", "tiny"), "tiny");
+        assert_eq!(a.parse_or::<u64>("seed", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,7 @@
+//! In-tree substrates for the offline environment (DESIGN.md §4): PRNG,
+//! JSON, TOML-subset config parsing, and a mini benchmark harness.
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod tomlite;

@@ -1,0 +1,174 @@
+//! TOML-subset parser for run configuration files (`configs/*.toml`).
+//!
+//! Supported grammar (all the project's configs need, nothing more):
+//!   * `[section]` headers (one level)
+//!   * `key = value` with value ∈ {string "..."/'...', integer, float, bool,
+//!     flat array of scalars}
+//!   * `#` comments and blank lines
+//!
+//! Values are surfaced as [`crate::util::json::Json`] so config and manifest
+//! plumbing share one value type.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+pub type Table = BTreeMap<String, BTreeMap<String, Json>>;
+
+pub fn parse(text: &str) -> Result<Table, String> {
+    let mut out: Table = BTreeMap::new();
+    let mut section = String::new();
+    out.insert(String::new(), BTreeMap::new());
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", lineno + 1));
+            }
+            section = name.to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        out.get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must not start a comment
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match in_str {
+            Some(q) if c == q => in_str = None,
+            None if c == '"' || c == '\'' => in_str = Some(c),
+            None if c == '#' => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = quoted(s) {
+        return Ok(Json::Str(inner));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value: {s}"))
+}
+
+fn quoted(s: &str) -> Option<String> {
+    for q in ['"', '\''] {
+        if s.len() >= 2 && s.starts_with(q) && s.ends_with(q) {
+            return Some(s[1..s.len() - 1].to_string());
+        }
+    }
+    None
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // arrays are flat (no nesting) — split on commas outside quotes
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str: Option<char> = None;
+    for (i, c) in s.char_indices() {
+        match in_str {
+            Some(q) if c == q => in_str = None,
+            None if c == '"' || c == '\'' => in_str = Some(c),
+            None if c == ',' => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let t = parse(
+            "top = 1\n[run]\nmethod = \"rpc\" # comment\nsteps = 200\nlr = 2.5e-4\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(t[""]["top"].as_i64(), Some(1));
+        assert_eq!(t["run"]["method"].as_str(), Some("rpc"));
+        assert_eq!(t["run"]["steps"].as_i64(), Some(200));
+        assert_eq!(t["run"]["lr"].as_f64(), Some(2.5e-4));
+        assert_eq!(t["run"]["flag"], Json::Bool(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let t = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\nempty = []\n").unwrap();
+        assert_eq!(t[""]["xs"].as_arr().unwrap().len(), 3);
+        assert_eq!(t[""]["ys"].idx(1).unwrap().as_str(), Some("b"));
+        assert!(t[""]["empty"].as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = parse("marker = \"#\"\n").unwrap();
+        assert_eq!(t[""]["marker"].as_str(), Some("#"));
+    }
+
+    #[test]
+    fn errors_are_positioned() {
+        let err = parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("k = \n").is_err());
+    }
+
+    #[test]
+    fn single_quotes() {
+        let t = parse("s = 'hello world'\n").unwrap();
+        assert_eq!(t[""]["s"].as_str(), Some("hello world"));
+    }
+}

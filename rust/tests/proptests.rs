@@ -1,0 +1,229 @@
+//! Randomized property tests (in-tree generator; proptest is not vendored).
+//!
+//! Each property runs against hundreds of random inputs drawn from our
+//! deterministic PRNG, with the failing seed printed on assertion failure —
+//! the same workflow proptest gives, minus shrinking.
+
+use nat_rl::config::Method;
+use nat_rl::coordinator::advantage::group_advantages;
+use nat_rl::coordinator::batcher::{pack, LearnItem};
+use nat_rl::coordinator::masking::{expected_ratio, rpc_survival, sample};
+use nat_rl::coordinator::rollout::trim_at_eos;
+use nat_rl::stats::MeanCi;
+use nat_rl::tokenizer::{Tokenizer, EOS};
+use nat_rl::util::json::Json;
+use nat_rl::util::rng::Rng;
+
+/// Run `f` against `n` random cases, reporting the failing case seed.
+fn for_cases(n: u64, f: impl Fn(u64, &mut Rng)) {
+    for case in 0..n {
+        let mut rng = Rng::new(0xBADC0DE ^ (case.wrapping_mul(0x9E3779B97F4A7C15)));
+        f(case, &mut rng);
+    }
+}
+
+#[test]
+fn prop_rpc_survival_is_valid_inclusion_distribution() {
+    for_cases(500, |case, rng| {
+        let t_i = 1 + rng.below(400) as usize;
+        let c = 1 + rng.below(200) as usize;
+        let p = rpc_survival(t_i, c);
+        assert_eq!(p.len(), t_i, "case {case}");
+        assert!(p[0] == 1.0, "case {case}");
+        assert!(p.iter().all(|&x| x > 0.0 && x <= 1.0), "case {case}");
+        assert!(p.windows(2).all(|w| w[1] <= w[0] + 1e-7), "case {case}");
+        // sum of survival == expected retained length == (C + T) / 2 for C<=T
+        let cc = c.clamp(1, t_i) as f64;
+        let sum: f64 = p.iter().map(|&x| x as f64).sum();
+        let expect = (cc + t_i as f64) / 2.0;
+        assert!((sum - expect).abs() < 1e-3, "case {case}: {sum} vs {expect}");
+    });
+}
+
+#[test]
+fn prop_masks_are_consistent_for_all_methods() {
+    for_cases(500, |case, rng| {
+        let t_i = 1 + rng.below(300) as usize;
+        let methods = [
+            Method::Grpo,
+            Method::Urs { p: 0.05 + 0.95 * rng.uniform() },
+            Method::DetTrunc { frac: 0.05 + 0.95 * rng.uniform() },
+            Method::Rpc { min_cut: 1 + rng.below(100) as usize },
+        ];
+        for m in methods {
+            let s = sample(&m, t_i, rng);
+            assert_eq!(s.ht_w.len(), t_i, "case {case} {m:?}");
+            assert_eq!(s.kept, s.ht_w.iter().filter(|&&w| w > 0.0).count(), "case {case} {m:?}");
+            assert!(s.learn_len >= 1 && s.learn_len <= t_i, "case {case} {m:?}");
+            assert!(s.ht_w.iter().all(|&w| w.is_finite() && w >= 0.0), "case {case} {m:?}");
+            // prefix methods: weights form a contiguous prefix
+            if matches!(m, Method::Rpc { .. } | Method::DetTrunc { .. } | Method::Grpo) {
+                let kept = s.kept;
+                assert!(s.ht_w[..kept].iter().all(|&w| w > 0.0), "case {case} {m:?}");
+                assert!(s.ht_w[kept..].iter().all(|&w| w == 0.0), "case {case} {m:?}");
+                assert_eq!(s.learn_len, kept.max(1), "case {case} {m:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ht_weight_sums_are_unbiased_for_unbiased_methods() {
+    // For each random (t_i, method), E[sum_t w_t] == t_i within MC error.
+    for_cases(20, |case, rng| {
+        let t_i = 5 + rng.below(120) as usize;
+        let methods = [
+            Method::Urs { p: 0.2 + 0.8 * rng.uniform() },
+            Method::Rpc { min_cut: 1 + rng.below(20) as usize },
+        ];
+        for m in methods {
+            let n = 4000;
+            let mut acc = 0.0f64;
+            for _ in 0..n {
+                acc += sample(&m, t_i, rng).ht_w.iter().map(|&w| w as f64).sum::<f64>();
+            }
+            let mean = acc / n as f64;
+            let tol = t_i as f64 * 0.05 + 1.0;
+            assert!((mean - t_i as f64).abs() < tol, "case {case} {m:?}: {mean} vs {t_i}");
+        }
+    });
+}
+
+#[test]
+fn prop_expected_ratio_matches_empirical_ratio() {
+    for_cases(15, |case, rng| {
+        let t_i = 10 + rng.below(150) as usize;
+        let m = Method::Rpc { min_cut: 1 + rng.below(30) as usize };
+        let n = 3000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += sample(&m, t_i, rng).kept as f64 / t_i as f64;
+        }
+        let emp = acc / n as f64;
+        let theory = expected_ratio(&m, t_i);
+        assert!((emp - theory).abs() < 0.02, "case {case}: {emp} vs {theory}");
+    });
+}
+
+#[test]
+fn prop_group_advantages_are_zero_mean_and_scale_free() {
+    for_cases(300, |case, rng| {
+        let g = 2 + rng.below(14) as usize;
+        let rewards: Vec<f32> = (0..g).map(|_| rng.bernoulli(0.4) as u8 as f32).collect();
+        let advs = group_advantages(&rewards);
+        let mean: f64 = advs.iter().map(|&a| a as f64).sum::<f64>() / g as f64;
+        assert!(mean.abs() < 1e-4, "case {case}: mean {mean}");
+        // scaling rewards by a constant offset leaves advantages unchanged
+        let shifted: Vec<f32> = rewards.iter().map(|&r| r + 5.0).collect();
+        let advs2 = group_advantages(&shifted);
+        for (a, b) in advs.iter().zip(&advs2) {
+            assert!((a - b).abs() < 1e-3, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_rows_and_never_underruns_learn_len() {
+    let buckets = [16usize, 32, 64, 128];
+    let p = 32usize;
+    for_cases(200, |case, rng| {
+        let n = 1 + rng.below(40) as usize;
+        let items: Vec<LearnItem> = (0..n)
+            .map(|_| {
+                let resp_len = 1 + rng.below(128) as usize;
+                let learn_len = 1 + rng.below(resp_len as u64) as usize;
+                LearnItem {
+                    tokens: vec![7; p + 128],
+                    pad_len: rng.below(p as u64) as usize,
+                    resp_len,
+                    ht_w: (0..resp_len)
+                        .map(|t| if t < learn_len { 1.0 } else { 0.0 })
+                        .collect(),
+                    learn_len,
+                    adv: rng.normal() as f32,
+                    old_lp: vec![-1.0; resp_len],
+                }
+            })
+            .collect();
+        let batch = 1 + rng.below(8) as usize;
+        let mbs = pack(&items, &buckets, p, batch);
+        let total: usize = mbs.iter().map(|m| m.real_rows).sum();
+        assert_eq!(total, n, "case {case}");
+        for mb in &mbs {
+            assert!(mb.real_rows <= batch, "case {case}");
+            assert!(buckets.contains(&mb.bucket), "case {case}");
+        }
+        // every item's bucket >= its learn_len (no truncation of selected tokens)
+        for item in &items {
+            let b = buckets.iter().find(|&&b| b >= item.learn_len);
+            assert!(b.is_some(), "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_tokenizer_roundtrips_arbitrary_alphabet_strings() {
+    let tok = Tokenizer::new();
+    let alphabet: Vec<char> = "0123456789+-*%()=,.:#> abcdefghijklmnopqrstuvwxyz\n".chars().collect();
+    for_cases(300, |case, rng| {
+        let len = rng.below(60) as usize;
+        let s: String = (0..len).map(|_| *rng.choose(&alphabet)).collect();
+        let ids = tok.encode(&s);
+        assert_eq!(tok.decode(&ids), s, "case {case}");
+        // EOS placed anywhere truncates exactly there
+        if !ids.is_empty() {
+            let cut = rng.below(ids.len() as u64) as usize;
+            let mut with_eos = ids.clone();
+            with_eos.insert(cut, EOS);
+            assert_eq!(trim_at_eos(&with_eos), cut + 1, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => {
+                let len = rng.below(8) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| *rng.choose(&['a', 'b', '"', '\\', '\n', 'x', '7']))
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases(400, |case, rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}: {text}");
+    });
+}
+
+#[test]
+fn prop_mean_ci_contains_true_mean_for_gaussian_samples() {
+    // 95% CI should contain the true mean ~95% of the time.
+    let mut hits = 0;
+    let n_trials = 400;
+    for case in 0..n_trials {
+        let mut rng = Rng::new(1000 + case);
+        let xs: Vec<f64> = (0..5).map(|_| 3.0 + rng.normal()).collect();
+        let ci = MeanCi::of(&xs);
+        if (ci.mean - 3.0).abs() <= ci.ci95 {
+            hits += 1;
+        }
+    }
+    let rate = hits as f64 / n_trials as f64;
+    assert!((0.90..=0.99).contains(&rate), "{rate}");
+}

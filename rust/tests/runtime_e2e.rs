@@ -1,0 +1,328 @@
+//! End-to-end runtime tests against the real `artifacts/tiny` AOT set.
+//!
+//! These exercise the full L1+L2+L3 composition: the Pallas NAT-loss kernel
+//! inside the grad artifact, the KV-cache generate scan, AdamW apply, the
+//! SFT step, and the complete Trainer loop. Skipped (cleanly) if artifacts
+//! have not been built — `make artifacts` first.
+
+use std::path::Path;
+
+use nat_rl::config::{Method, RunConfig};
+use nat_rl::coordinator::batcher::{pack, LearnItem};
+use nat_rl::coordinator::rollout::{encode_prompt, run_group_rollouts};
+use nat_rl::coordinator::trainer::Trainer;
+use nat_rl::coordinator::{evaluator, masking, pretrainer};
+use nat_rl::runtime::{GradAccum, OptState, ParamStore, Runtime};
+use nat_rl::tasks::{EvalSet, TaskMix, TaskSampler, Tier};
+use nat_rl::tokenizer::Tokenizer;
+use nat_rl::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny"));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts/tiny not built");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("loading tiny artifacts"))
+}
+
+fn tiny_cfg(method: Method, seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "tiny".into();
+    cfg.method = method;
+    cfg.seed = seed;
+    cfg.rl.tiers = vec![Tier::Easy];
+    cfg.rl.steps = 2;
+    cfg.rl.prompts_per_step = 1;
+    cfg.rl.group_size = 4;
+    cfg.pretrain.steps = 10;
+    cfg.pretrain.corpus_size = 128;
+    cfg
+}
+
+#[test]
+fn generate_is_deterministic_and_prompts_preserved() {
+    let Some(rt) = runtime() else { return };
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let d = rt.manifest.dims.clone();
+    let tok = Tokenizer::new();
+    let (row, pad) = encode_prompt(&tok, "e:3+4%5=", d.prompt_len).unwrap();
+    let mut prompts = Vec::new();
+    let mut pads = Vec::new();
+    for _ in 0..d.batch_rollout {
+        prompts.extend_from_slice(&row);
+        pads.push(pad as i32);
+    }
+    let a = rt.generate(&params, &prompts, &pads, 42, 1.0).unwrap();
+    let b = rt.generate(&params, &prompts, &pads, 42, 1.0).unwrap();
+    assert_eq!(a.tokens, b.tokens);
+    assert_eq!(a.lp, b.lp);
+    let c = rt.generate(&params, &prompts, &pads, 43, 1.0).unwrap();
+    assert_ne!(a.tokens, c.tokens);
+    // prompt region preserved verbatim
+    let s = d.prompt_len + d.max_resp;
+    for r in 0..d.batch_rollout {
+        assert_eq!(&a.tokens[r * s..r * s + d.prompt_len], &row[..]);
+    }
+    // behaviour logprobs are valid logprobs
+    assert!(a.lp.iter().all(|&x| x <= 1e-4 && x > -30.0));
+}
+
+#[test]
+fn score_reproduces_generate_logprobs() {
+    // The on-policy consistency contract across TWO different artifacts
+    // (generate's KV-cache decode vs score's full-sequence forward).
+    let Some(rt) = runtime() else { return };
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let d = rt.manifest.dims.clone();
+    let tok = Tokenizer::new();
+    let (row, pad) = encode_prompt(&tok, "a:12+34=", d.prompt_len).unwrap();
+    let prompts: Vec<i32> = row.iter().cycle().take(d.batch_rollout * d.prompt_len).copied().collect();
+    let pads = vec![pad as i32; d.batch_rollout];
+    let gen = rt.generate(&params, &prompts, &pads, 7, 1.0).unwrap();
+    let (lp, ent) = rt.score(&params, &gen.tokens, &pads, d.max_resp).unwrap();
+    for (i, (&a, &b)) in gen.lp.iter().zip(&lp).enumerate() {
+        assert!((a - b).abs() < 3e-3, "pos {i}: generate {a} vs score {b}");
+    }
+    assert!(ent.iter().all(|&e| e >= -1e-4));
+}
+
+fn make_learn_items(
+    rt: &Runtime,
+    params: &ParamStore,
+    method: &Method,
+    rng: &mut Rng,
+) -> Vec<LearnItem> {
+    let tok = Tokenizer::new();
+    let mut sampler = TaskSampler::new(3, TaskMix { tiers: vec![Tier::Easy], ..Default::default() });
+    let tasks = sampler.batch(1);
+    let seqs = run_group_rollouts(rt, params, &tok, &tasks, 4, 1.0, rng).unwrap();
+    seqs.iter()
+        .map(|s| {
+            let m = masking::sample(method, s.resp_len, rng);
+            LearnItem {
+                tokens: s.tokens.clone(),
+                pad_len: s.pad_len,
+                resp_len: s.resp_len,
+                ht_w: m.ht_w,
+                learn_len: m.learn_len,
+                adv: if s.reward > 0.5 { 1.0 } else { -0.4 },
+                old_lp: s.old_lp.clone(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn grad_metrics_and_zero_mask_behaviour() {
+    let Some(rt) = runtime() else { return };
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let d = rt.manifest.dims.clone();
+    let mut rng = Rng::new(5);
+    let items = make_learn_items(&rt, &params, &Method::Grpo, &mut rng);
+    let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    let mut toks = 0.0;
+    for mb in &mbs {
+        let m = rt.grad(mb, &params, &mut acc).unwrap();
+        toks += m.tokens;
+        assert!(m.entropy_sum >= 0.0);
+        assert!(m.clip_frac() >= 0.0 && m.clip_frac() <= 1.0);
+    }
+    // GRPO: every response token participates
+    let expect: usize = items.iter().map(|i| i.resp_len).sum();
+    assert_eq!(toks as usize, expect);
+    assert!(acc.flat.iter().any(|&g| g != 0.0));
+    assert_eq!(acc.sequences, items.len());
+
+    // zero-mask micro-batch contributes exactly nothing
+    let mut zero_items = items.clone();
+    for it in &mut zero_items {
+        it.ht_w = vec![0.0; it.resp_len];
+        it.adv = 0.0;
+    }
+    let mbs0 = pack(&zero_items, &d.buckets, d.prompt_len, d.batch_train);
+    let mut acc0 = GradAccum::zeros(rt.manifest.param_count);
+    for mb in &mbs0 {
+        rt.grad(mb, &params, &mut acc0).unwrap();
+    }
+    let gmax = acc0.flat.iter().fold(0.0f32, |m, &g| m.max(g.abs()));
+    assert!(gmax < 1e-6, "zero-mask grad leaked: {gmax}");
+}
+
+#[test]
+fn ratio_one_on_policy_is_never_clipped() {
+    // On-policy first pass: new_lp == old_lp => ratio 1 => clip_frac == 0.
+    let Some(rt) = runtime() else { return };
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let d = rt.manifest.dims.clone();
+    let mut rng = Rng::new(11);
+    let items = make_learn_items(&rt, &params, &Method::Grpo, &mut rng);
+    let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    for mb in &mbs {
+        let m = rt.grad(mb, &params, &mut acc).unwrap();
+        assert!(
+            m.clip_frac() < 0.02,
+            "on-policy ratio should be ~1 (clip_frac {})",
+            m.clip_frac()
+        );
+        assert!(m.kl_sum.abs() / m.tokens.max(1.0) < 0.01);
+    }
+}
+
+#[test]
+fn apply_updates_params_and_respects_scale() {
+    let Some(rt) = runtime() else { return };
+    let mut params = ParamStore::load_init(&rt.manifest).unwrap();
+    let before = params.flat.clone();
+    let mut opt = OptState::zeros(&rt.manifest);
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    acc.flat.iter_mut().for_each(|g| *g = 0.01);
+    acc.sequences = 4;
+    let gnorm = rt.apply(&mut params, &mut opt, &acc).unwrap();
+    assert!(gnorm > 0.0);
+    assert_eq!(opt.step, 1);
+    let moved = params
+        .flat
+        .iter()
+        .zip(&before)
+        .filter(|(a, b)| (**a - **b).abs() > 0.0)
+        .count();
+    assert!(moved > rt.manifest.param_count / 2, "only {moved} params moved");
+    // moments populated
+    assert!(opt.m.flat.iter().any(|&x| x != 0.0));
+    assert!(opt.v.flat.iter().any(|&x| x != 0.0));
+}
+
+#[test]
+fn pretrain_reduces_loss_on_fixed_corpus() {
+    let Some(rt) = runtime() else { return };
+    let cfg = tiny_cfg(Method::Grpo, 0);
+    let res = pretrainer::pretrain(&rt, &cfg, false).unwrap();
+    let losses = res.recorder.values("sft_loss");
+    assert_eq!(losses.len(), cfg.pretrain.steps);
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "no learning: {losses:?}"
+    );
+}
+
+#[test]
+fn trainer_runs_all_methods_and_records_metrics() {
+    let Some(rt) = runtime() else { return };
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    for method in [
+        Method::Grpo,
+        Method::Urs { p: 0.5 },
+        Method::DetTrunc { frac: 0.5 },
+        Method::Rpc { min_cut: 4 },
+    ] {
+        let cfg = tiny_cfg(method, 1);
+        let mut tr = Trainer::new(&rt, cfg, base.clone(), OptState::zeros(&rt.manifest));
+        tr.train(2, false).unwrap();
+        for series in
+            ["reward", "entropy", "grad_norm", "selected_ratio", "mem_gb", "t_learn_s"]
+        {
+            assert_eq!(tr.recorder.get(series).len(), 2, "{method:?} {series}");
+        }
+        let sel = tr.recorder.values("selected_ratio");
+        match method {
+            Method::Grpo => assert!(sel.iter().all(|&r| (r - 1.0).abs() < 1e-9)),
+            Method::Urs { p } => {
+                assert!(sel.iter().all(|&r| (r - p).abs() < 0.25), "{sel:?}")
+            }
+            Method::DetTrunc { .. } => {
+                assert!(sel.iter().all(|&r| r < 0.62), "{sel:?}")
+            }
+            Method::Rpc { .. } => assert!(sel.iter().all(|&r| r > 0.4 && r <= 1.0)),
+            Method::Saliency { floor } => {
+                assert!(sel.iter().all(|&r| r >= floor * 0.8 && r <= 1.0))
+            }
+        }
+    }
+}
+
+#[test]
+fn trainer_is_deterministic_per_seed() {
+    let Some(rt) = runtime() else { return };
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    let run = |seed| {
+        let cfg = tiny_cfg(Method::Rpc { min_cut: 4 }, seed);
+        let mut tr = Trainer::new(&rt, cfg, base.clone(), OptState::zeros(&rt.manifest));
+        tr.train(2, false).unwrap();
+        (
+            (tr.recorder.values("reward"), tr.recorder.values("entropy"),
+             tr.recorder.values("selected_ratio")),
+            tr.params.flat,
+        )
+    };
+    let (r1, p1) = run(7);
+    let (r2, p2) = run(7);
+    assert_eq!(r1, r2);
+    assert_eq!(p1, p2);
+    // A different seed changes rollouts and masks; reward values alone can
+    // coincide (binary rewards), but the entropy/selected-ratio traces are
+    // continuous functions of the sampled tokens and masks.
+    let (r3, _) = run(8);
+    assert!(r1.1 != r3.1 || r1.2 != r3.2, "seed 8 reproduced seed 7 traces");
+}
+
+#[test]
+fn evaluator_bounds_and_consistency() {
+    let Some(rt) = runtime() else { return };
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let tok = Tokenizer::new();
+    let set = EvalSet::build(Tier::Easy, 4, 99);
+    let mut rng = Rng::new(3);
+    let e = evaluator::evaluate(&rt, &params, &tok, &set, 4, 1.0, &mut rng).unwrap();
+    assert!(e.acc_at_k >= 0.0 && e.acc_at_k <= 1.0);
+    assert!(e.pass_at_k >= e.acc_at_k - 1e-9); // pass@k dominates acc@k
+    assert_eq!(e.tasks, 4);
+    assert_eq!(e.k, 4);
+    assert!(e.mean_resp_len >= 1.0);
+}
+
+#[test]
+fn det_trunc_uses_less_simulated_memory_than_grpo() {
+    let Some(rt) = runtime() else { return };
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    let mem = |method| {
+        let cfg = tiny_cfg(method, 2);
+        let mut tr = Trainer::new(&rt, cfg, base.clone(), OptState::zeros(&rt.manifest));
+        tr.train(2, false).unwrap();
+        tr.recorder.values("mem_gb").iter().sum::<f64>() / 2.0
+    };
+    let grpo = mem(Method::Grpo);
+    let det = mem(Method::DetTrunc { frac: 0.5 });
+    assert!(det < grpo, "det {det} !< grpo {grpo}");
+}
+
+#[test]
+fn pallas_attention_scorer_matches_dense_scorer() {
+    // The L1 flash-attention kernel, lowered inside the score artifact and
+    // executed through rust PJRT, must agree with the dense-attention
+    // scorer on real rollout tokens.
+    let Some(rt) = runtime() else { return };
+    if rt.manifest.score_pallas_files.is_empty() {
+        eprintln!("SKIP: score_pallas artifact not built");
+        return;
+    }
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let d = rt.manifest.dims.clone();
+    let tok = Tokenizer::new();
+    let (row, pad) = encode_prompt(&tok, "s:9216=", d.prompt_len).unwrap();
+    let prompts: Vec<i32> =
+        row.iter().cycle().take(d.batch_rollout * d.prompt_len).copied().collect();
+    let pads = vec![pad as i32; d.batch_rollout];
+    let gen = rt.generate(&params, &prompts, &pads, 3, 1.0).unwrap();
+    let (lp_dense, ent_dense) = rt.score(&params, &gen.tokens, &pads, d.max_resp).unwrap();
+    let (lp_pallas, ent_pallas) =
+        rt.score_pallas(&params, &gen.tokens, &pads, d.max_resp).unwrap();
+    for (i, (&a, &b)) in lp_dense.iter().zip(&lp_pallas).enumerate() {
+        assert!((a - b).abs() < 5e-3, "lp {i}: dense {a} vs pallas {b}");
+    }
+    for (&a, &b) in ent_dense.iter().zip(&ent_pallas) {
+        assert!((a - b).abs() < 5e-3, "entropy: dense {a} vs pallas {b}");
+    }
+}
