@@ -1,0 +1,135 @@
+//! Serial vs pipelined optimizer-step throughput.
+//!
+//! Two tiers:
+//!
+//! * `sim/*` — always runs: synthetic produce/consume stages with a fixed
+//!   compute cost drive the real pipeline engine (scheduler, bounded queue,
+//!   staleness gate, reorder buffer), isolating orchestration overhead and
+//!   demonstrating the overlap win without artifacts. With rollout ~2x the
+//!   learner cost (the paper's regime — NAT makes the update cheap), the
+//!   ideal 2-worker pipelined speedup over serial is ~1.5x wall-clock.
+//! * `train/*` — artifact-gated: the full `Trainer` vs `PipelineTrainer`
+//!   on `artifacts/tiny`, measuring end-to-end steps/sec.
+//!
+//! Run: `cargo bench --bench bench_pipeline` (BENCH_MS=200 for a quick pass).
+
+use std::hint::black_box;
+use std::path::Path;
+use std::time::Instant;
+
+use nat_rl::config::{Method, RunConfig};
+use nat_rl::coordinator::pipeline::engine::{self, PipelineOpts};
+use nat_rl::coordinator::pipeline::PipelineTrainer;
+use nat_rl::coordinator::trainer::Trainer;
+use nat_rl::runtime::{OptState, ParamStore, Runtime};
+use nat_rl::tasks::Tier;
+use nat_rl::util::bench::Bench;
+
+/// Deterministic busy-work: ~`units` multiply-add kernels.
+fn spin(units: u64) -> u64 {
+    let mut x = 0x9E37_79B9_7F4A_7C15u64;
+    for i in 0..units {
+        x = x.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(i);
+    }
+    black_box(x)
+}
+
+/// Tuned so one "rollout" is a few hundred microseconds on a laptop core.
+const ROLLOUT_UNITS: u64 = 400_000;
+const LEARN_UNITS: u64 = 200_000;
+const SIM_STEPS: u64 = 24;
+
+fn sim_serial() -> u64 {
+    let mut acc = 0u64;
+    for k in 0..SIM_STEPS {
+        acc ^= spin(ROLLOUT_UNITS).wrapping_add(k);
+        acc ^= spin(LEARN_UNITS);
+    }
+    acc
+}
+
+fn sim_pipelined(workers: usize, max_staleness: u64) -> u64 {
+    let mut acc = 0u64;
+    engine::run(
+        &PipelineOpts { workers, queue_depth: 2, max_staleness },
+        0,
+        SIM_STEPS,
+        0u64,
+        |k, _snap: &u64| Ok(spin(ROLLOUT_UNITS).wrapping_add(k)),
+        |_meta, g: u64| {
+            acc ^= g;
+            acc ^= spin(LEARN_UNITS);
+            Ok(acc)
+        },
+        |_| Ok(()),
+    )
+    .expect("sim pipeline failed");
+    acc
+}
+
+fn sim_bench(b: &mut Bench) {
+    b.iter("sim/serial", sim_serial);
+    b.iter("sim/pipelined/w=1 sync", || sim_pipelined(1, 0));
+    b.iter("sim/pipelined/w=2 s=1", || sim_pipelined(2, 1));
+    b.iter("sim/pipelined/w=4 s=2", || sim_pipelined(4, 2));
+
+    // Headline comparison in plain steps/sec.
+    let t0 = Instant::now();
+    black_box(sim_serial());
+    let serial_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    black_box(sim_pipelined(2, 1));
+    let piped_s = t0.elapsed().as_secs_f64();
+    println!(
+        "sim summary: serial {:.1} steps/s | pipelined(w=2) {:.1} steps/s | speedup {:.2}x",
+        SIM_STEPS as f64 / serial_s,
+        SIM_STEPS as f64 / piped_s,
+        serial_s / piped_s
+    );
+}
+
+fn tiny_cfg(workers: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "tiny".into();
+    cfg.method = Method::Rpc { min_cut: 8 };
+    cfg.rl.tiers = vec![Tier::Easy];
+    cfg.rl.prompts_per_step = 2;
+    cfg.rl.group_size = 8;
+    cfg.pipeline.workers = workers;
+    cfg
+}
+
+fn train_bench(b: &mut Bench) {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skip train/*: artifacts/tiny not built (make artifacts)");
+        return;
+    }
+    let rt = Runtime::load(dir).unwrap();
+    rt.warmup(&rt.manifest.dims.buckets.clone()).unwrap();
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    const STEPS: usize = 3;
+
+    let mut serial = Trainer::new(&rt, tiny_cfg(0), base.clone(), OptState::zeros(&rt.manifest));
+    b.iter(&format!("train/tiny/serial x{STEPS}"), || {
+        serial.train(STEPS, false).unwrap()
+    });
+    for workers in [1usize, 2] {
+        let mut tr = PipelineTrainer::new(
+            &rt,
+            tiny_cfg(workers),
+            base.clone(),
+            OptState::zeros(&rt.manifest),
+        );
+        b.iter(&format!("train/tiny/pipelined w={workers} x{STEPS}"), || {
+            tr.train(STEPS, false).unwrap()
+        });
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("pipeline").slow();
+    sim_bench(&mut b);
+    train_bench(&mut b);
+    b.report();
+}

@@ -72,6 +72,32 @@ pub struct RlCfg {
     /// Optimizer epochs over each rollout batch (DAPO-style mini-batching;
     /// epochs >= 2 exercise the off-policy clipping path, ratio != 1).
     pub ppo_epochs: usize,
+    /// Write a resumable checkpoint (params + opt state + step) every this
+    /// many optimizer steps; 0 disables mid-run checkpointing.
+    pub ckpt_every: usize,
+}
+
+/// Async rollout/learner pipeline configuration (`coordinator::pipeline`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PipelineCfg {
+    /// Rollout worker threads. 0 = serial trainer (pipeline disabled);
+    /// 1 = pipelined but synchronous (bit-identical to serial — the
+    /// validation mode); >= 2 = overlapped rollout and learning.
+    pub workers: usize,
+    /// Bounded queue capacity: completed rollout groups buffered ahead of
+    /// the learner before producers block.
+    pub queue_depth: usize,
+    /// Maximum optimizer-step lag allowed between the parameter snapshot a
+    /// group was rolled out with and the parameters at consume time. The
+    /// PPO clipped ratio corrects slightly-off-policy data, so 1 is the
+    /// classic one-step pipeline. Forced to 0 when workers <= 1.
+    pub max_staleness: u64,
+}
+
+impl Default for PipelineCfg {
+    fn default() -> Self {
+        PipelineCfg { workers: 0, queue_depth: 2, max_staleness: 1 }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -101,6 +127,7 @@ pub struct RunConfig {
     pub rl: RlCfg,
     pub pretrain: PretrainCfg,
     pub eval: EvalCfg,
+    pub pipeline: PipelineCfg,
 }
 
 impl Default for RunConfig {
@@ -119,9 +146,11 @@ impl Default for RunConfig {
                 group_size: 8,
                 temperature: 1.0,
                 ppo_epochs: 1,
+                ckpt_every: 0,
             },
             pretrain: PretrainCfg { steps: 300, corpus_size: 2048, noise: 0.25 },
             eval: EvalCfg { every: 0, tasks_per_tier: 16, k: 16 },
+            pipeline: PipelineCfg::default(),
         }
     }
 }
@@ -180,6 +209,10 @@ impl RunConfig {
         setnum!("rl", "group_size", cfg.rl.group_size, usize);
         setnum!("rl", "temperature", cfg.rl.temperature, f32);
         setnum!("rl", "ppo_epochs", cfg.rl.ppo_epochs, usize);
+        setnum!("rl", "ckpt_every", cfg.rl.ckpt_every, usize);
+        setnum!("pipeline", "workers", cfg.pipeline.workers, usize);
+        setnum!("pipeline", "queue_depth", cfg.pipeline.queue_depth, usize);
+        setnum!("pipeline", "max_staleness", cfg.pipeline.max_staleness, u64);
         setnum!("pretrain", "steps", cfg.pretrain.steps, usize);
         setnum!("pretrain", "corpus_size", cfg.pretrain.corpus_size, usize);
         setnum!("pretrain", "noise", cfg.pretrain.noise, f64);
@@ -240,6 +273,10 @@ impl RunConfig {
             "rl.group_size" => self.rl.group_size = value.parse()?,
             "rl.temperature" => self.rl.temperature = value.parse()?,
             "rl.ppo_epochs" => self.rl.ppo_epochs = value.parse()?,
+            "rl.ckpt_every" => self.rl.ckpt_every = value.parse()?,
+            "pipeline.workers" => self.pipeline.workers = value.parse()?,
+            "pipeline.queue_depth" => self.pipeline.queue_depth = value.parse()?,
+            "pipeline.max_staleness" => self.pipeline.max_staleness = value.parse()?,
             "method.floor" => {
                 if let Method::Saliency { ref mut floor } = self.method {
                     *floor = value.parse()?;
@@ -304,7 +341,25 @@ impl RunConfig {
         if self.rl.ppo_epochs == 0 {
             bail!("rl.ppo_epochs must be >= 1");
         }
+        if self.pipeline.queue_depth == 0 {
+            bail!("pipeline.queue_depth must be >= 1");
+        }
+        if self.pipeline.workers > 64 {
+            bail!("pipeline.workers {} is unreasonable (max 64)", self.pipeline.workers);
+        }
         Ok(())
+    }
+
+    /// Path the trainer's periodic mid-run checkpoint is written to
+    /// (and `--resume` typically reads from).
+    pub fn rolling_ckpt_path(&self) -> String {
+        format!(
+            "{}/{}_{}_s{}_auto.bin",
+            self.checkpoints_dir,
+            self.model,
+            self.method.id(),
+            self.seed
+        )
     }
 
     pub fn artifact_dir(&self) -> std::path::PathBuf {
@@ -324,7 +379,8 @@ impl RunConfig {
             Some(path) => RunConfig::from_file(Path::new(path))?,
             None => RunConfig::default(),
         };
-        const SKIP: [&str; 7] = ["config", "ckpt", "out", "what", "fig", "seeds", "bench-json"];
+        const SKIP: [&str; 9] =
+            ["config", "ckpt", "out", "what", "fig", "seeds", "bench-json", "resume", "min-cut"];
         for (k, v) in &args.options {
             if SKIP.contains(&k.as_str()) {
                 continue;
@@ -385,6 +441,49 @@ mod tests {
         cfg.set("rl.tiers", "easy, hard").unwrap();
         assert_eq!(cfg.rl.tiers, vec![Tier::Easy, Tier::Hard]);
         assert!(cfg.set("rl.tiers", "bogus").is_err());
+    }
+
+    #[test]
+    fn pipeline_overrides_and_validation() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.pipeline, PipelineCfg { workers: 0, queue_depth: 2, max_staleness: 1 });
+        cfg.set("pipeline.workers", "2").unwrap();
+        cfg.set("pipeline.queue_depth", "4").unwrap();
+        cfg.set("pipeline.max_staleness", "3").unwrap();
+        cfg.set("rl.ckpt_every", "10").unwrap();
+        assert_eq!(cfg.pipeline.workers, 2);
+        assert_eq!(cfg.pipeline.queue_depth, 4);
+        assert_eq!(cfg.pipeline.max_staleness, 3);
+        assert_eq!(cfg.rl.ckpt_every, 10);
+        assert!(cfg.set("pipeline.queue_depth", "0").is_err());
+        assert!(cfg.set("pipeline.workers", "1000").is_err());
+    }
+
+    #[test]
+    fn pipeline_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_pipe_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.toml");
+        std::fs::write(
+            &path,
+            "[pipeline]\nworkers = 3\nqueue_depth = 5\nmax_staleness = 2\n\
+             [rl]\nckpt_every = 25\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.pipeline.workers, 3);
+        assert_eq!(cfg.pipeline.queue_depth, 5);
+        assert_eq!(cfg.pipeline.max_staleness, 2);
+        assert_eq!(cfg.rl.ckpt_every, 25);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn rolling_ckpt_path_is_run_scoped() {
+        let mut cfg = RunConfig::default();
+        cfg.model = "small".into();
+        cfg.seed = 9;
+        assert_eq!(cfg.rolling_ckpt_path(), "checkpoints/small_rpc_s9_auto.bin");
     }
 
     #[test]

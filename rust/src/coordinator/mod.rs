@@ -6,12 +6,15 @@
 //! * [`rollout`]   — grouped sampling through the AOT generate artifact.
 //! * [`batcher`]   — length-bucketed micro-batching (RPC's compute savings).
 //! * [`trainer`]   — the NAT×GRPO optimizer loop with paper-aligned metrics.
+//! * [`pipeline`]  — async pipelined rollout/learner orchestration with
+//!                   bounded staleness (the serial loop, overlapped).
 //! * [`pretrainer`]— SFT base-model phase.
 //! * [`evaluator`] — Acc@k / pass@k benchmark evaluation.
 pub mod advantage;
 pub mod batcher;
 pub mod evaluator;
 pub mod masking;
+pub mod pipeline;
 pub mod pretrainer;
 pub mod rollout;
 pub mod trainer;

@@ -1,0 +1,338 @@
+//! The generic bounded-staleness producer/consumer engine.
+//!
+//! N worker threads produce one *group* per step against the freshest
+//! published snapshot that satisfies the staleness bound; the caller's
+//! thread consumes groups strictly in step order (a reorder buffer absorbs
+//! worker completion jitter) and publishes a new snapshot after each one.
+//!
+//! The engine is deliberately independent of the trainer: `produce` and
+//! `consume` are closures, so the scheduling, back-pressure, ordering and
+//! shutdown logic is testable host-side with synthetic stages (see the
+//! tests below) — no PJRT runtime or artifacts required. The trainer glue
+//! lives in `coordinator::pipeline` (the parent module).
+//!
+//! ## Progress & shutdown invariants
+//!
+//! * Steps are claimed from an atomic counter, so claims are contiguous;
+//!   a worker blocked on the staleness gate for step `k` can only be
+//!   waiting on steps `< k`, all of which are claimed by other workers or
+//!   already queued — no circular waits.
+//! * The consumer always drains the channel (stashing out-of-order groups),
+//!   so producers blocked on a full queue always make progress.
+//! * Worker exits — normal, error, or panic — release the channel via a
+//!   drop guard; consumer exits close both primitives, so no side can
+//!   deadlock the other.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::sync::{Channel, ProducerGuard, SnapshotBoard};
+
+/// Engine parameters (a validated subset of `config::PipelineCfg`).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineOpts {
+    /// Producer threads (>= 1).
+    pub workers: usize,
+    /// Bounded channel capacity.
+    pub queue_depth: usize,
+    /// Max allowed `step - behaviour_version` for any produced group.
+    /// 0 = fully synchronous: producing step `k` waits until every step
+    /// `< k` has been consumed.
+    pub max_staleness: u64,
+}
+
+/// Per-group provenance handed to the consumer.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupMeta {
+    /// The 0-based step this group feeds.
+    pub step: u64,
+    /// Snapshot version (= consumed-step count) the producer used.
+    pub behaviour_version: u64,
+    /// Wall-clock seconds the producer spent on this group.
+    pub produce_s: f64,
+}
+
+impl GroupMeta {
+    /// How many optimizer steps behind the behaviour snapshot was.
+    pub fn staleness(&self) -> u64 {
+        self.step - self.behaviour_version
+    }
+}
+
+/// Run steps `start..end` through the pipeline.
+///
+/// * `produce(step, &snapshot)` runs on worker threads; the snapshot is
+///   guaranteed to satisfy `version >= max(start, step - max_staleness)`.
+/// * `consume(&meta, group)` runs on the calling thread, strictly in step
+///   order, and returns the snapshot to publish as `version = step + 1`.
+/// * `after_publish(&meta)` runs on the calling thread AFTER the snapshot
+///   is published — slow per-step bookkeeping (evaluation, checkpoint I/O)
+///   belongs here so workers waiting at the staleness gate are released
+///   first and keep rolling out while the learner does its housekeeping.
+///
+/// The first error from any stage aborts the run and is returned; a
+/// worker panic propagates after shutdown.
+pub fn run<S, G, P, C, A>(
+    opts: &PipelineOpts,
+    start: u64,
+    end: u64,
+    init: S,
+    produce: P,
+    mut consume: C,
+    mut after_publish: A,
+) -> Result<()>
+where
+    S: Send + Sync,
+    G: Send,
+    P: Fn(u64, &S) -> Result<G> + Sync,
+    C: FnMut(&GroupMeta, G) -> Result<S>,
+    A: FnMut(&GroupMeta) -> Result<()>,
+{
+    if start >= end {
+        return Ok(());
+    }
+    let workers = opts.workers.max(1);
+    let chan: Channel<(GroupMeta, Result<G>)> =
+        Channel::bounded(opts.queue_depth.max(1), workers);
+    let board: SnapshotBoard<S> = SnapshotBoard::new(start, init);
+    let next = AtomicU64::new(start);
+    let abort = AtomicBool::new(false);
+
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..workers {
+            let (chan, board, next, abort, produce) =
+                (&chan, &board, &next, &abort, &produce);
+            scope.spawn(move || {
+                let _release = ProducerGuard(chan);
+                loop {
+                    if abort.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let k = next.fetch_add(1, Ordering::SeqCst);
+                    if k >= end {
+                        break;
+                    }
+                    let min_v = start.max(k.saturating_sub(opts.max_staleness));
+                    let Ok((v, snap)) = board.wait_min(min_v) else { break };
+                    let t0 = Instant::now();
+                    let res = produce(k, &snap);
+                    let failed = res.is_err();
+                    let meta = GroupMeta {
+                        step: k,
+                        behaviour_version: v,
+                        produce_s: t0.elapsed().as_secs_f64(),
+                    };
+                    if chan.send((meta, res)).is_err() || failed {
+                        break;
+                    }
+                }
+            });
+        }
+
+        // Consumer side (this thread). Closes both primitives on every exit
+        // path — including an unwinding `consume` — so workers never hang.
+        struct ShutdownGuard<'a, S, T> {
+            board: &'a SnapshotBoard<S>,
+            chan: &'a Channel<T>,
+            abort: &'a AtomicBool,
+        }
+        impl<S, T> Drop for ShutdownGuard<'_, S, T> {
+            fn drop(&mut self) {
+                self.abort.store(true, Ordering::Release);
+                self.board.close();
+                self.chan.close();
+            }
+        }
+        let _shutdown = ShutdownGuard { board: &board, chan: &chan, abort: &abort };
+
+        let mut pending: BTreeMap<u64, (GroupMeta, Result<G>)> = BTreeMap::new();
+        let mut expected = start;
+        while expected < end {
+            let (meta, group) = loop {
+                if let Some(item) = pending.remove(&expected) {
+                    break item;
+                }
+                match chan.recv() {
+                    Some(item) => {
+                        if item.0.step == expected {
+                            break item;
+                        }
+                        pending.insert(item.0.step, item);
+                    }
+                    None => {
+                        return Err(anyhow!(
+                            "pipeline: workers exited before producing step {expected}"
+                        ));
+                    }
+                }
+            };
+            debug_assert!(meta.staleness() <= opts.max_staleness);
+            let snap = group.and_then(|g| consume(&meta, g))?;
+            expected += 1;
+            board.publish(expected, Arc::new(snap));
+            after_publish(&meta)?;
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn opts(workers: usize, queue_depth: usize, max_staleness: u64) -> PipelineOpts {
+        PipelineOpts { workers, queue_depth, max_staleness }
+    }
+
+    /// workers=1, staleness=0 must behave exactly like the serial loop:
+    /// every group is produced from the snapshot the previous consume
+    /// published — the pipelined-equals-serial contract.
+    #[test]
+    fn synchronous_mode_matches_serial_fold() {
+        let fold = |state: u64, k: u64| state.wrapping_mul(31).wrapping_add(k ^ 0xA5);
+        // Serial reference.
+        let mut serial = 1u64;
+        for k in 0..20 {
+            serial = fold(serial, k);
+        }
+        // Pipelined: produce captures the snapshot it saw; consume checks
+        // it is the exact serial state and folds the step in.
+        let mut state = 1u64;
+        let seen = Mutex::new(Vec::new());
+        run(
+            &opts(1, 2, 0),
+            0,
+            20,
+            1u64,
+            |k, snap: &u64| Ok((k, *snap)),
+            |meta, (k, snap): (u64, u64)| {
+                assert_eq!(meta.step, k);
+                assert_eq!(meta.behaviour_version, k, "staleness 0 must be on-policy");
+                assert_eq!(snap, state, "step {k} rolled out against a stale snapshot");
+                state = fold(state, k);
+                seen.lock().unwrap().push(k);
+                Ok(state)
+            },
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(state, serial);
+        assert_eq!(*seen.lock().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ordered_consumption_and_staleness_bound_with_many_workers() {
+        let stal = 2u64;
+        let mut next_expected = 5u64;
+        let mut consumed = 0u64;
+        run(
+            &opts(4, 3, stal),
+            5,
+            60,
+            0u64,
+            |k, _snap: &u64| Ok(k),
+            |meta, k: u64| {
+                assert_eq!(k, next_expected, "groups must arrive in step order");
+                assert!(meta.behaviour_version <= meta.step);
+                assert!(
+                    meta.behaviour_version >= 5u64.max(meta.step.saturating_sub(stal)),
+                    "step {} used version {} (bound {})",
+                    meta.step,
+                    meta.behaviour_version,
+                    stal
+                );
+                next_expected += 1;
+                consumed += 1;
+                Ok(consumed)
+            },
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert_eq!(consumed, 55);
+    }
+
+    #[test]
+    fn produce_error_aborts_without_hanging() {
+        let err = run(
+            &opts(3, 2, 1),
+            0,
+            100,
+            0u64,
+            |k, _snap: &u64| {
+                if k == 7 {
+                    Err(anyhow!("rollout worker exploded at step {k}"))
+                } else {
+                    Ok(k)
+                }
+            },
+            |_meta, k: u64| Ok(k),
+            |_| Ok(()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("step 7"), "{err:?}");
+    }
+
+    #[test]
+    fn consume_error_aborts_without_hanging() {
+        let err = run(
+            &opts(3, 2, 1),
+            0,
+            100,
+            0u64,
+            |k, _snap: &u64| Ok(k),
+            |_meta, k: u64| {
+                if k == 5 {
+                    Err(anyhow!("learner rejected step {k}"))
+                } else {
+                    Ok(k)
+                }
+            },
+            |_| Ok(()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("step 5"), "{err:?}");
+    }
+
+    #[test]
+    fn empty_and_offset_ranges() {
+        // start == end: no work, no threads needed.
+        run(
+            &opts(2, 2, 1),
+            3,
+            3,
+            0u64,
+            |_, _: &u64| Ok(()),
+            |_, _: ()| Ok(0u64),
+            |_| Ok(()),
+        )
+        .unwrap();
+        // Resumed range: steps and versions begin at `start`; after_publish
+        // fires once per step, after its consume.
+        let mut steps = Vec::new();
+        let mut after_steps = Vec::new();
+        run(
+            &opts(2, 2, 1),
+            10,
+            14,
+            0u64,
+            |k, _: &u64| Ok(k),
+            |meta, k: u64| {
+                assert!(meta.behaviour_version >= 10);
+                steps.push(k);
+                Ok(k)
+            },
+            |meta| {
+                after_steps.push(meta.step);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(steps, vec![10, 11, 12, 13]);
+        assert_eq!(after_steps, steps);
+    }
+}

@@ -1,0 +1,207 @@
+//! Async pipelined rollout/learner orchestration.
+//!
+//! The serial [`Trainer`](crate::coordinator::trainer::Trainer) alternates
+//! rollout and learning in one thread, so rollout latency caps throughput no
+//! matter how cheap NAT makes the update. This subsystem decouples them:
+//!
+//! * N **rollout workers** claim optimizer steps from an atomic counter,
+//!   plan each step deterministically (`plan_step` is a pure function of
+//!   `(seed, step)`), generate the step's `RolloutSeq` group against the
+//!   freshest *published parameter snapshot* that satisfies the staleness
+//!   bound, and push it into a bounded channel.
+//! * The **learner** (caller's thread) consumes groups strictly in step
+//!   order, runs the existing NAT mask → HT-weight → bucketed-microbatch →
+//!   grad/apply path via `learn_stage`, then publishes the new parameters
+//!   as snapshot version `step + 1`.
+//!
+//! Staleness is bounded per group: a group for step `k` is rolled out with
+//! parameters at version `>= k - max_staleness`. The PPO clipped ratio
+//! already corrects one-step-off-policy data (NAT leaves the rollout
+//! pipeline untouched, which is what makes the overlap safe), and the
+//! realized lag is recorded per step as the `staleness` metric series.
+//!
+//! Semantics by worker count:
+//! * `workers == 1` — staleness is forced to 0: rollout `k` waits for apply
+//!   `k-1`, making the run **bit-identical to the serial trainer** for the
+//!   same seed (the validation mode; asserted in `tests/runtime_e2e.rs`).
+//! * `workers >= 2` — rollout of step `k` overlaps learning of step `k-1`
+//!   (up to `max_staleness` steps of lag), trading strict on-policyness for
+//!   throughput; runs are reward-equivalent, not bit-identical.
+//!
+//! The learner clones the parameter store once per publish; for the paper's
+//! model sizes this is microseconds against a multi-second step, and it
+//! keeps workers lock-free on the fast path (they share `Arc`s, never the
+//! live mutable params).
+
+pub mod engine;
+pub mod sync;
+
+pub use engine::{GroupMeta, PipelineOpts};
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::trainer::{
+    learn_stage, mask_rng, maybe_checkpoint, plan_step, post_step, record_step,
+    rollout_stage, RolloutGroup,
+};
+use crate::metrics::Recorder;
+use crate::runtime::{GradAccum, OptState, ParamStore, Runtime};
+use crate::tokenizer::Tokenizer;
+
+/// Pipelined counterpart of `Trainer`: same fields, same metric series
+/// (plus `staleness`), different execution schedule.
+pub struct PipelineTrainer<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: RunConfig,
+    pub tok: Tokenizer,
+    pub params: ParamStore,
+    pub opt: OptState,
+    pub recorder: Recorder,
+    acc: GradAccum,
+    step: u64,
+}
+
+impl<'rt> PipelineTrainer<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: RunConfig,
+        params: ParamStore,
+        opt: OptState,
+    ) -> PipelineTrainer<'rt> {
+        PipelineTrainer {
+            rt,
+            tok: Tokenizer::new(),
+            params,
+            opt,
+            recorder: Recorder::new(),
+            acc: GradAccum::zeros(rt.manifest.param_count),
+            cfg,
+            step: 0,
+        }
+    }
+
+    /// Number of optimizer steps completed so far.
+    pub fn completed_steps(&self) -> u64 {
+        self.step
+    }
+
+    /// Continue a checkpointed run from `step` (see `Trainer::set_start_step`).
+    pub fn set_start_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// The effective engine options for this config: a single worker is
+    /// forced synchronous so it stays bit-identical to the serial trainer.
+    pub fn engine_opts(&self) -> PipelineOpts {
+        let workers = self.cfg.pipeline.workers.max(1);
+        PipelineOpts {
+            workers,
+            queue_depth: self.cfg.pipeline.queue_depth,
+            max_staleness: if workers <= 1 { 0 } else { self.cfg.pipeline.max_staleness },
+        }
+    }
+
+    /// Run `n` optimizer steps through the pipeline. Records the same series
+    /// as the serial trainer plus `staleness`; honours `cfg.eval.every` and
+    /// `cfg.rl.ckpt_every` identically (both run on the learner thread).
+    pub fn train(&mut self, n: usize, verbose: bool) -> Result<()> {
+        let opts = self.engine_opts();
+        let start = self.step;
+        let end = start + n as u64;
+        if verbose {
+            println!(
+                "pipeline: {} rollout worker(s), queue {}, max staleness {}",
+                opts.workers, opts.queue_depth, opts.max_staleness
+            );
+        }
+
+        // The producer closure (shared across worker threads) captures only
+        // immutable handles; all learner-side mutable state lives behind one
+        // RefCell shared by `consume` and `after_publish` — both run
+        // sequentially on this thread, never nested.
+        let rt = self.rt;
+        let cfg = &self.cfg;
+        let tok = &self.tok;
+        struct LearnerState<'s> {
+            params: &'s mut ParamStore,
+            opt: &'s mut OptState,
+            acc: &'s mut GradAccum,
+            recorder: &'s mut Recorder,
+            step: &'s mut u64,
+            last_apply: Instant,
+            /// Stats of the step consumed but not yet post-processed.
+            pending: Option<crate::coordinator::trainer::StepStats>,
+        }
+        let state = RefCell::new(LearnerState {
+            params: &mut self.params,
+            opt: &mut self.opt,
+            acc: &mut self.acc,
+            recorder: &mut self.recorder,
+            step: &mut self.step,
+            last_apply: Instant::now(),
+            pending: None,
+        });
+        let init = state.borrow().params.clone();
+
+        let produce = |step: u64, snap: &ParamStore| -> Result<RolloutGroup> {
+            let mut plan = plan_step(cfg, step);
+            rollout_stage(rt, snap, tok, cfg, &mut plan)
+        };
+        let consume = |meta: &GroupMeta, group: RolloutGroup| -> Result<ParamStore> {
+            let mut guard = state.borrow_mut();
+            let st = &mut *guard;
+            let mut rng_mask = mask_rng(cfg, meta.step);
+            let mut stats = learn_stage(
+                rt,
+                cfg,
+                st.params,
+                st.opt,
+                st.acc,
+                &mut rng_mask,
+                meta.step + 1,
+                &group.seqs,
+            )?;
+            // Learner throughput: wall-clock between consecutive applies
+            // (rollout ran concurrently, so serial-style "rollout + learn"
+            // would double-count overlapped time).
+            stats.t_total_s = st.last_apply.elapsed().as_secs_f64();
+            st.last_apply = Instant::now();
+            record_step(st.recorder, &stats, group.t_rollout_s);
+            st.recorder.push("staleness", stats.step, meta.staleness() as f64);
+            // Worker-side wall-clock for the whole produce stage (planning +
+            // generation); `t_rollout_s` above is the generate call alone.
+            st.recorder.push("t_produce_s", stats.step, meta.produce_s);
+            *st.step += 1;
+            let snap = st.params.clone();
+            st.pending = Some(stats);
+            Ok(snap)
+        };
+        // Runs after the engine publishes the new snapshot, so rollout
+        // workers resume immediately while the learner does its slow
+        // bookkeeping (in-training eval, checkpoint I/O).
+        let after_publish = |_meta: &GroupMeta| -> Result<()> {
+            let mut guard = state.borrow_mut();
+            let st = &mut *guard;
+            let stats = st.pending.take().expect("after_publish without a consumed step");
+            post_step(rt, cfg, st.recorder, st.params, &stats, verbose)?;
+            if let Some(path) = maybe_checkpoint(rt, cfg, st.params, st.opt, stats.step)? {
+                if verbose {
+                    println!("  checkpoint @ step {}: {path}", stats.step);
+                }
+            }
+            Ok(())
+        };
+        engine::run(&opts, start, end, init, produce, consume, after_publish)?;
+
+        if verbose {
+            if let Some(mean) = self.recorder.mean("staleness") {
+                println!("pipeline: mean staleness {mean:.2} optimizer steps");
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,293 @@
+//! Thread-coordination primitives for the rollout/learner pipeline.
+//!
+//! The offline vendor set has no `crossbeam`, so this module provides the
+//! two primitives the engine needs, built on `Mutex` + `Condvar`:
+//!
+//! * [`Channel`] — a bounded MPSC queue. Producers block when the queue is
+//!   full (back-pressure bounds rollout-ahead memory), the consumer blocks
+//!   when it is empty, and the channel drains cleanly once every registered
+//!   producer has finished.
+//! * [`SnapshotBoard`] — a versioned publish/subscribe cell. The learner
+//!   publishes `(version, Arc<snapshot>)` after each optimizer apply;
+//!   rollout workers wait until the published version is fresh enough for
+//!   their step's staleness bound.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The peer closed the channel/board (shutdown or error propagation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Closed;
+
+struct ChanState<T> {
+    queue: VecDeque<T>,
+    producers: usize,
+    closed: bool,
+}
+
+/// Bounded multi-producer single-consumer queue.
+pub struct Channel<T> {
+    cap: usize,
+    state: Mutex<ChanState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> Channel<T> {
+    /// A channel holding at most `cap` items, with `producers` registered
+    /// senders (each must eventually call [`Channel::producer_done`]).
+    pub fn bounded(cap: usize, producers: usize) -> Channel<T> {
+        assert!(cap >= 1, "channel capacity must be >= 1");
+        Channel {
+            cap,
+            state: Mutex::new(ChanState {
+                queue: VecDeque::with_capacity(cap),
+                producers,
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Blocking send; returns `Err(Closed)` if the consumer closed the
+    /// channel (the item is dropped).
+    pub fn send(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.state.lock().expect("channel poisoned");
+        loop {
+            if st.closed {
+                return Err(Closed);
+            }
+            if st.queue.len() < self.cap {
+                st.queue.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).expect("channel poisoned");
+        }
+    }
+
+    /// Blocking receive. `None` once the channel is closed, or empty with
+    /// no live producers left.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("channel poisoned");
+        loop {
+            if let Some(item) = st.queue.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed || st.producers == 0 {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("channel poisoned");
+        }
+    }
+
+    /// A producer finished (normally or by unwinding — see
+    /// [`ProducerGuard`]). When the last one leaves, a blocked consumer
+    /// wakes and drains.
+    pub fn producer_done(&self) {
+        let mut st = self.state.lock().expect("channel poisoned");
+        st.producers = st.producers.saturating_sub(1);
+        if st.producers == 0 {
+            self.not_empty.notify_all();
+        }
+    }
+
+    /// Close from the consumer side: pending and future sends fail, blocked
+    /// peers wake immediately. Queued items are discarded.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("channel poisoned");
+        st.closed = true;
+        st.queue.clear();
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("channel poisoned").queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Decrements the channel's producer count on drop, so a panicking worker
+/// still releases the consumer (no deadlocked `recv`).
+pub struct ProducerGuard<'a, T>(pub &'a Channel<T>);
+
+impl<T> Drop for ProducerGuard<'_, T> {
+    fn drop(&mut self) {
+        self.0.producer_done();
+    }
+}
+
+struct BoardState<S> {
+    version: u64,
+    snap: Arc<S>,
+    closed: bool,
+}
+
+/// Versioned single-slot publish/subscribe cell: readers wait for a minimum
+/// version, writers monotonically replace the snapshot.
+pub struct SnapshotBoard<S> {
+    state: Mutex<BoardState<S>>,
+    advanced: Condvar,
+}
+
+impl<S> SnapshotBoard<S> {
+    pub fn new(version: u64, snap: S) -> SnapshotBoard<S> {
+        SnapshotBoard {
+            state: Mutex::new(BoardState { version, snap: Arc::new(snap), closed: false }),
+            advanced: Condvar::new(),
+        }
+    }
+
+    /// Publish a newer snapshot. Versions must be monotonic.
+    pub fn publish(&self, version: u64, snap: Arc<S>) {
+        let mut st = self.state.lock().expect("board poisoned");
+        debug_assert!(version >= st.version, "board version went backwards");
+        st.version = version;
+        st.snap = snap;
+        self.advanced.notify_all();
+    }
+
+    /// Current `(version, snapshot)` without waiting.
+    pub fn latest(&self) -> (u64, Arc<S>) {
+        let st = self.state.lock().expect("board poisoned");
+        (st.version, st.snap.clone())
+    }
+
+    /// Block until the published version is at least `min_version`
+    /// (the staleness gate). `Err(Closed)` on shutdown.
+    pub fn wait_min(&self, min_version: u64) -> Result<(u64, Arc<S>), Closed> {
+        let mut st = self.state.lock().expect("board poisoned");
+        loop {
+            if st.closed {
+                return Err(Closed);
+            }
+            if st.version >= min_version {
+                return Ok((st.version, st.snap.clone()));
+            }
+            st = self.advanced.wait(st).expect("board poisoned");
+        }
+    }
+
+    /// Wake all waiters with `Err(Closed)` (shutdown or error propagation).
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("board poisoned");
+        st.closed = true;
+        self.advanced.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn channel_is_fifo_and_drains_after_producers_finish() {
+        let ch: Channel<u32> = Channel::bounded(4, 1);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = ProducerGuard(&ch);
+                for i in 0..100 {
+                    ch.send(i).unwrap();
+                }
+            });
+            let mut got = Vec::new();
+            while let Some(x) = ch.recv() {
+                got.push(x);
+            }
+            assert_eq!(got, (0..100).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn channel_bounds_producers() {
+        // With capacity 2 the producer cannot run ahead of the consumer by
+        // more than 2 items + 1 in flight.
+        let ch: Channel<usize> = Channel::bounded(2, 1);
+        let sent = AtomicUsize::new(0);
+        let max_lead = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = ProducerGuard(&ch);
+                for i in 0..50 {
+                    ch.send(i).unwrap();
+                    sent.store(i + 1, Ordering::SeqCst);
+                }
+            });
+            let mut received = 0usize;
+            while ch.recv().is_some() {
+                received += 1;
+                let lead = sent.load(Ordering::SeqCst).saturating_sub(received);
+                max_lead.fetch_max(lead, Ordering::SeqCst);
+            }
+            assert_eq!(received, 50);
+        });
+        assert!(max_lead.load(Ordering::SeqCst) <= 3, "{:?}", max_lead);
+    }
+
+    #[test]
+    fn channel_close_unblocks_producer() {
+        let ch: Channel<u32> = Channel::bounded(1, 1);
+        ch.send(1).unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // Fills the queue, then blocks until close.
+                assert_eq!(ch.send(2), Err(Closed));
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            ch.close();
+        });
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn producer_guard_releases_on_panic() {
+        let ch: Channel<u32> = Channel::bounded(1, 1);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let _guard = ProducerGuard(&ch);
+                panic!("worker died");
+            });
+            assert!(h.join().is_err());
+            // No items, no producers: recv must not hang.
+            assert_eq!(ch.recv(), None);
+        });
+    }
+
+    #[test]
+    fn board_waits_for_version() {
+        let board: SnapshotBoard<u64> = SnapshotBoard::new(0, 100);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                board.publish(1, Arc::new(101));
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                board.publish(3, Arc::new(103));
+            });
+            let (v, snap) = board.wait_min(0).unwrap();
+            assert!(v <= 3);
+            assert_eq!(*snap, 100 + v);
+            let (v, snap) = board.wait_min(2).unwrap();
+            assert_eq!(v, 3);
+            assert_eq!(*snap, 103);
+        });
+        assert_eq!(board.latest().0, 3);
+    }
+
+    #[test]
+    fn board_close_unblocks_waiters() {
+        let board: SnapshotBoard<()> = SnapshotBoard::new(0, ());
+        std::thread::scope(|s| {
+            let h = s.spawn(|| board.wait_min(10));
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            board.close();
+            assert_eq!(h.join().unwrap(), Err(Closed));
+        });
+    }
+}

@@ -42,13 +42,32 @@ pub fn encode_prompt(tok: &Tokenizer, prompt: &str, window: usize) -> Result<(Ve
     Ok((row, pad))
 }
 
-/// Trim a response at the first EOS (inclusive). Empty -> length 1 floor
-/// (the first token always exists; T >= 1).
+/// Trim a response at the first EOS (inclusive). For a non-empty window the
+/// result is always in `1..=T` (length-1 floor: the first sampled token
+/// always exists), which is what the masker's `t_i > 0` invariant relies on.
+/// A degenerate empty window reports 0 — callers slice `&resp[..len]`, so
+/// inventing a length there would be out of bounds.
 pub fn trim_at_eos(resp: &[i32]) -> usize {
+    if resp.is_empty() {
+        return 0;
+    }
     match resp.iter().position(|&t| t == EOS) {
         Some(i) => i + 1,
-        None => resp.len(),
+        None => resp.len().max(1),
     }
+}
+
+/// Split `total` flat rollout slots into generate-call chunks of at most
+/// `batch` real rows each (the device batch is fixed at `batch`; the tail
+/// chunk's remaining rows are padded with duplicates of the chunk's first
+/// slot and discarded by the scatter loop, which iterates real slots only).
+pub fn plan_chunks(total: usize, batch: usize) -> Vec<Vec<usize>> {
+    assert!(batch > 0, "rollout batch must be positive");
+    (0..total)
+        .collect::<Vec<usize>>()
+        .chunks(batch)
+        .map(|c| c.to_vec())
+        .collect()
 }
 
 /// Sample G completions per task. Returns sequences grouped task-major:
@@ -71,11 +90,10 @@ pub fn run_group_rollouts(
         .map(|t| encode_prompt(tok, &t.prompt, p))
         .collect::<Result<_>>()?;
     let mut out: Vec<Option<RolloutSeq>> = vec![None; total];
-    let mut flat: Vec<usize> = (0..total).collect(); // flat id = task_idx * g + j
-    // process in chunks of the rollout batch; the tail chunk is padded with
-    // repeats of the first prompt and the padding rows are discarded.
-    while !flat.is_empty() {
-        let chunk: Vec<usize> = flat.drain(..flat.len().min(b_roll)).collect();
+    // flat id = task_idx * g + j; process in chunks of the rollout batch.
+    // The tail chunk is padded with repeats of the first prompt and the
+    // padding rows are discarded by the scatter loop below.
+    for chunk in plan_chunks(total, b_roll) {
         let mut prompts = Vec::with_capacity(b_roll * p);
         let mut pads = Vec::with_capacity(b_roll);
         for row in 0..b_roll {
@@ -132,5 +150,62 @@ mod tests {
         assert_eq!(trim_at_eos(&[EOS]), 1);
         assert_eq!(trim_at_eos(&[5, 6, 7]), 3); // no EOS -> full length
         assert_eq!(trim_at_eos(&[EOS, EOS, 5]), 1);
+    }
+
+    #[test]
+    fn trim_at_eos_has_length_one_floor_for_nonempty_windows() {
+        // Regression for the documented `1..=T` contract: every non-empty
+        // window reports at least 1 (the masker asserts `t_i > 0`), while an
+        // empty window reports 0 so callers' `&resp[..len]` stays in bounds.
+        assert_eq!(trim_at_eos(&[7]), 1);
+        assert_eq!(trim_at_eos(&[PAD]), 1);
+        assert_eq!(trim_at_eos(&[]), 0);
+    }
+
+    #[test]
+    fn plan_chunks_covers_every_slot_exactly_once() {
+        for (total, batch) in [(8, 4), (10, 4), (3, 4), (4, 4), (1, 3), (13, 5)] {
+            let chunks = plan_chunks(total, batch);
+            let mut seen = vec![0usize; total];
+            for c in &chunks {
+                assert!(!c.is_empty() && c.len() <= batch);
+                for &id in c {
+                    seen[id] += 1;
+                }
+            }
+            assert!(
+                seen.iter().all(|&n| n == 1),
+                "total={total} batch={batch}: {seen:?}"
+            );
+            // Only the final chunk may be short (the padded tail).
+            for c in &chunks[..chunks.len().saturating_sub(1)] {
+                assert_eq!(c.len(), batch);
+            }
+            assert_eq!(chunks.len(), total.div_ceil(batch));
+        }
+    }
+
+    #[test]
+    fn tail_chunk_scatter_discards_padding_rows() {
+        // Mirror of the scatter loop in `run_group_rollouts`: the device
+        // batch has `batch` rows, rows beyond the chunk's real slots repeat
+        // slot chunk[0] and must never be written back.
+        let (total, batch) = (10usize, 4usize);
+        let mut out: Vec<Option<usize>> = vec![None; total];
+        for chunk in plan_chunks(total, batch) {
+            // rows 0..batch exist on-device; enumerate only real slots
+            for (row, &flat_id) in chunk.iter().enumerate() {
+                assert!(row < batch);
+                assert!(out[flat_id].is_none(), "slot {flat_id} written twice");
+                out[flat_id] = Some(row);
+            }
+            // padding rows (chunk.len()..batch) duplicate chunk[0]'s prompt
+            for row in chunk.len()..batch {
+                let dup_of = chunk[0];
+                assert!(out[dup_of].is_some(), "padding duplicated an unfilled slot");
+                let _ = row; // rows are generated on-device but never scattered
+            }
+        }
+        assert!(out.iter().all(Option::is_some), "{out:?}");
     }
 }

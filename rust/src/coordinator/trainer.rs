@@ -6,6 +6,19 @@
 //!   advantages → NAT mask sampling + HT weights → bucketed micro-batching
 //!   → per-bucket grad artifacts with host-side accumulation → AdamW apply.
 //!
+//! The step is split into two reusable stage functions so the serial
+//! [`Trainer`] and the pipelined trainer (`coordinator::pipeline`) share one
+//! code path bit-for-bit:
+//!
+//! * [`rollout_stage`] — inference: tasks → grouped completions + rewards.
+//! * [`learn_stage`]   — forward/backward/apply on a completed group.
+//!
+//! Every per-step random stream (task sampling, rollout seeds, NAT masks) is
+//! derived as a pure function of `(cfg.seed, step)` via [`plan_step`], so
+//! (a) rollout workers can plan any future step without having consumed the
+//! previous ones, and (b) resuming from a checkpointed step reproduces the
+//! uninterrupted run exactly.
+//!
 //! Timing is split exactly as in the paper's Table 3: `t_learn` is the
 //! train-time-per-step *excluding inference*, `t_total` includes rollout.
 
@@ -15,11 +28,12 @@ use anyhow::Result;
 
 use crate::config::RunConfig;
 use crate::coordinator::batcher::{micro_shapes, pack, LearnItem};
+use crate::coordinator::rollout::RolloutSeq;
 use crate::coordinator::{advantage, masking, rollout};
 use crate::metrics::Recorder;
 use crate::model::memory;
-use crate::runtime::{GradAccum, GradMetrics, OptState, ParamStore, Runtime};
-use crate::tasks::TaskSampler;
+use crate::runtime::{Checkpoint, GradAccum, GradMetrics, OptState, ParamStore, Runtime, TrainMeta};
+use crate::tasks::{Task, TaskSampler};
 use crate::tokenizer::Tokenizer;
 use crate::util::rng::Rng;
 
@@ -41,10 +55,272 @@ pub struct StepStats {
     pub peak_mem_gb: f64,
     /// Train time per step WITHOUT inference (Table 3 col 2, Fig. 5).
     pub t_learn_s: f64,
-    /// Total time per step including rollout (Table 3 col 3).
+    /// Total time per step including rollout (Table 3 col 3). For the
+    /// pipelined trainer this is the wall-clock between consecutive applies
+    /// (learner throughput), since rollout runs concurrently.
     pub t_total_s: f64,
     pub micro_batches: usize,
     pub sequences: usize,
+}
+
+/// Stream tags for [`stream_seed`]; distinct per consumer so forked streams
+/// at the same step stay decorrelated.
+const TAG_TASKS: u64 = 0x5441_534B;
+const TAG_ROLLOUT: u64 = 0x524F_4C4C;
+const TAG_MASK: u64 = 0x4D41_534B;
+
+/// One-way mix of `(run seed, step, stream tag)` into a PRNG seed.
+fn stream_seed(seed: u64, step: u64, tag: u64) -> u64 {
+    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ step.wrapping_add(1).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ tag.wrapping_mul(0x94D0_49BB_1331_11EB)
+}
+
+/// Deterministic per-step context: tasks and RNG streams for optimizer step
+/// `step` (0-based), independent of any other step's state.
+pub struct StepPlan {
+    pub step: u64,
+    pub tasks: Vec<Task>,
+    pub rng_rollout: Rng,
+    pub rng_mask: Rng,
+}
+
+/// Build the plan for a step as a pure function of `(cfg.seed, step)`.
+pub fn plan_step(cfg: &RunConfig, step: u64) -> StepPlan {
+    let mut sampler =
+        TaskSampler::new(stream_seed(cfg.seed, step, TAG_TASKS), cfg.task_mix());
+    StepPlan {
+        step,
+        tasks: sampler.batch(cfg.rl.prompts_per_step),
+        rng_rollout: Rng::new(stream_seed(cfg.seed, step, TAG_ROLLOUT)),
+        rng_mask: mask_rng(cfg, step),
+    }
+}
+
+/// The NAT mask stream for a step — same stream [`plan_step`] embeds, so the
+/// pipelined learner (which receives rollout groups, not plans) re-derives
+/// it identically.
+pub fn mask_rng(cfg: &RunConfig, step: u64) -> Rng {
+    Rng::new(stream_seed(cfg.seed, step, TAG_MASK))
+}
+
+/// A completed rollout batch for one optimizer step, ready for the learner.
+pub struct RolloutGroup {
+    /// 0-based optimizer step this group feeds.
+    pub step: u64,
+    pub seqs: Vec<RolloutSeq>,
+    pub t_rollout_s: f64,
+}
+
+/// Stage 1 — inference. Pure with respect to `params`: the caller decides
+/// which parameter snapshot the behaviour policy uses (the pipelined trainer
+/// passes a possibly-stale published snapshot).
+pub fn rollout_stage(
+    rt: &Runtime,
+    params: &ParamStore,
+    tok: &Tokenizer,
+    cfg: &RunConfig,
+    plan: &mut StepPlan,
+) -> Result<RolloutGroup> {
+    let t0 = Instant::now();
+    let seqs = rollout::run_group_rollouts(
+        rt,
+        params,
+        tok,
+        &plan.tasks,
+        cfg.rl.group_size,
+        cfg.rl.temperature,
+        &mut plan.rng_rollout,
+    )?;
+    Ok(RolloutGroup { step: plan.step, seqs, t_rollout_s: t0.elapsed().as_secs_f64() })
+}
+
+/// Stage 2+3 — learner (forward + backward + apply). `step1` is the 1-based
+/// step number reported in the stats; `t_total_s` is left at 0 for the
+/// caller to fill (serial: elapsed incl. rollout; pipeline: apply-to-apply).
+///
+/// ppo_epochs >= 2 re-uses the rollout for multiple optimizer updates
+/// (DAPO-style mini-batching): the first epoch is on-policy (ratio 1), later
+/// epochs exercise the clipped off-policy path. Masks are re-sampled per
+/// epoch, so every position keeps nonzero inclusion probability per update.
+#[allow(clippy::too_many_arguments)]
+pub fn learn_stage(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    params: &mut ParamStore,
+    opt: &mut OptState,
+    acc: &mut GradAccum,
+    rng_mask: &mut Rng,
+    step1: u64,
+    seqs: &[RolloutSeq],
+) -> Result<StepStats> {
+    let t_learn_start = Instant::now();
+    let d = &rt.manifest.dims;
+    let g = cfg.rl.group_size;
+    let rewards: Vec<f32> = seqs.iter().map(|s| s.reward).collect();
+    let advs = advantage::grouped_advantages(&rewards, g);
+
+    let mut metrics = GradMetrics::default();
+    let mut grad_norm = 0.0;
+    let mut sel_tokens = 0usize;
+    let mut tot_tokens = 0usize;
+    let mut all_shapes: Vec<(usize, usize)> = Vec::new();
+    let mut n_micro = 0usize;
+    for _epoch in 0..cfg.rl.ppo_epochs {
+        let mut items = Vec::with_capacity(seqs.len());
+        for (seq, &adv) in seqs.iter().zip(&advs) {
+            let m = masking::sample_ctx(
+                &cfg.method,
+                seq.resp_len,
+                Some(&seq.old_lp),
+                rng_mask,
+            );
+            sel_tokens += m.kept;
+            tot_tokens += seq.resp_len;
+            items.push(LearnItem {
+                tokens: seq.tokens.clone(),
+                pad_len: seq.pad_len,
+                resp_len: seq.resp_len,
+                ht_w: m.ht_w,
+                learn_len: m.learn_len,
+                adv,
+                old_lp: seq.old_lp.clone(),
+            });
+        }
+        let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
+        acc.reset();
+        // §Perf opt-2: parameters are immutable within the epoch; build
+        // the literals once and share across every bucket micro-batch.
+        let param_lits = params.to_literals(&rt.manifest)?;
+        for mb in &mbs {
+            let m = rt.grad_cached(mb, &param_lits, acc)?;
+            metrics.add(&m);
+        }
+        drop(param_lits);
+        grad_norm = rt.apply(params, opt, acc)?;
+        all_shapes.extend(micro_shapes(&mbs, d.prompt_len));
+        n_micro += mbs.len();
+    }
+    let t_learn = t_learn_start.elapsed().as_secs_f64();
+
+    let pc = rt.manifest.param_count;
+    let mem_gb = memory::step_mean_bytes(d, pc, &all_shapes) as f64 / 1e9;
+    let peak_mem_gb = memory::step_peak_bytes(d, pc, &all_shapes) as f64 / 1e9;
+
+    Ok(StepStats {
+        step: step1,
+        reward_mean: rewards.iter().map(|&r| r as f64).sum::<f64>() / rewards.len() as f64,
+        entropy: metrics.mean_entropy(),
+        clip_frac: metrics.clip_frac(),
+        kl: if metrics.tokens > 0.0 { metrics.kl_sum / metrics.tokens } else { 0.0 },
+        grad_norm,
+        selected_ratio: if tot_tokens > 0 {
+            sel_tokens as f64 / tot_tokens as f64
+        } else {
+            0.0
+        },
+        resp_len_mean: tot_tokens as f64 / (seqs.len() * cfg.rl.ppo_epochs) as f64,
+        mem_gb,
+        peak_mem_gb,
+        t_learn_s: t_learn,
+        t_total_s: 0.0,
+        micro_batches: n_micro,
+        sequences: seqs.len(),
+    })
+}
+
+/// Push one step's stats into the shared metric series.
+pub fn record_step(r: &mut Recorder, s: &StepStats, t_rollout_s: f64) {
+    r.push("reward", s.step, s.reward_mean);
+    r.push("entropy", s.step, s.entropy);
+    r.push("clip_frac", s.step, s.clip_frac);
+    r.push("kl", s.step, s.kl);
+    r.push("grad_norm", s.step, s.grad_norm);
+    r.push("selected_ratio", s.step, s.selected_ratio);
+    r.push("resp_len", s.step, s.resp_len_mean);
+    r.push("mem_gb", s.step, s.mem_gb);
+    r.push("peak_mem_gb", s.step, s.peak_mem_gb);
+    r.push("t_learn_s", s.step, s.t_learn_s);
+    r.push("t_rollout_s", s.step, t_rollout_s);
+    r.push("t_total_s", s.step, s.t_total_s);
+}
+
+/// Shared post-step bookkeeping: in-training evaluation every
+/// `cfg.eval.every` steps and optional stdout logging. Used by both the
+/// serial and pipelined trainers so their metric streams are identical.
+pub(crate) fn post_step(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    recorder: &mut Recorder,
+    params: &ParamStore,
+    s: &StepStats,
+    verbose: bool,
+) -> Result<()> {
+    if cfg.eval.every > 0 && s.step % cfg.eval.every as u64 == 0 {
+        let evals = crate::coordinator::evaluator::evaluate_all_tiers(
+            rt,
+            params,
+            cfg.eval.tasks_per_tier,
+            cfg.eval.k,
+            cfg.rl.temperature,
+            cfg.seed ^ s.step,
+        )?;
+        for e in &evals {
+            recorder.push(&format!("acc_{}", e.tier.benchmark_name()), s.step, e.acc_at_k);
+            recorder.push(&format!("pass_{}", e.tier.benchmark_name()), s.step, e.pass_at_k);
+        }
+        if verbose {
+            println!(
+                "  eval @ step {}: {}",
+                s.step,
+                evals
+                    .iter()
+                    .map(|e| format!("{} {:.3}", e.tier.benchmark_name(), e.acc_at_k))
+                    .collect::<Vec<_>>()
+                    .join("  ")
+            );
+        }
+    }
+    if verbose {
+        println!(
+            "step {:>4} | reward {:.3} | ent {:.3} | gnorm {:.3} | sel {:.2} | \
+             mem {:.3} GB | learn {:.2}s | total {:.2}s",
+            s.step,
+            s.reward_mean,
+            s.entropy,
+            s.grad_norm,
+            s.selected_ratio,
+            s.mem_gb,
+            s.t_learn_s,
+            s.t_total_s
+        );
+    }
+    Ok(())
+}
+
+/// Mid-run checkpointing: every `cfg.rl.ckpt_every` completed steps, save
+/// params + optimizer state + train meta to the run's rolling checkpoint
+/// path (`nat train --resume <path>` continues from it). Returns the path
+/// written, if any.
+pub(crate) fn maybe_checkpoint(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    params: &ParamStore,
+    opt: &OptState,
+    completed_step: u64,
+) -> Result<Option<String>> {
+    if cfg.rl.ckpt_every == 0 || completed_step % cfg.rl.ckpt_every as u64 != 0 {
+        return Ok(None);
+    }
+    let path = cfg.rolling_ckpt_path();
+    Checkpoint::save_train(
+        std::path::Path::new(&path),
+        &rt.manifest,
+        params,
+        opt,
+        &TrainMeta { step: completed_step, seed: cfg.seed },
+    )?;
+    Ok(Some(path))
 }
 
 pub struct Trainer<'rt> {
@@ -54,9 +330,6 @@ pub struct Trainer<'rt> {
     pub params: ParamStore,
     pub opt: OptState,
     pub recorder: Recorder,
-    sampler: TaskSampler,
-    rng_rollout: Rng,
-    rng_mask: Rng,
     acc: GradAccum,
     step: u64,
 }
@@ -68,199 +341,66 @@ impl<'rt> Trainer<'rt> {
         params: ParamStore,
         opt: OptState,
     ) -> Trainer<'rt> {
-        let mut root = Rng::new(cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
-        let sampler = TaskSampler::new(root.fork(1).next_u64(), cfg.task_mix());
         Trainer {
             rt,
             tok: Tokenizer::new(),
             params,
             opt,
             recorder: Recorder::new(),
-            sampler,
-            rng_rollout: root.fork(2),
-            rng_mask: root.fork(3),
             acc: GradAccum::zeros(rt.manifest.param_count),
             cfg,
             step: 0,
         }
     }
 
+    /// Number of optimizer steps completed so far.
+    pub fn completed_steps(&self) -> u64 {
+        self.step
+    }
+
+    /// Continue a checkpointed run: steps before `step` are considered done
+    /// (their plans are skipped deterministically, so the continuation
+    /// reproduces the uninterrupted run).
+    pub fn set_start_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
     /// Run one optimizer step; returns its statistics.
     pub fn step(&mut self) -> Result<StepStats> {
         let t_start = Instant::now();
-        let d = &self.rt.manifest.dims;
-        let g = self.cfg.rl.group_size;
-        let tasks = self.sampler.batch(self.cfg.rl.prompts_per_step);
-
-        // --- Stage 1: rollout (inference) --------------------------------
-        let seqs = rollout::run_group_rollouts(
+        let mut plan = plan_step(&self.cfg, self.step);
+        let group = rollout_stage(self.rt, &self.params, &self.tok, &self.cfg, &mut plan)?;
+        let mut stats = learn_stage(
             self.rt,
-            &self.params,
-            &self.tok,
-            &tasks,
-            g,
-            self.cfg.rl.temperature,
-            &mut self.rng_rollout,
+            &self.cfg,
+            &mut self.params,
+            &mut self.opt,
+            &mut self.acc,
+            &mut plan.rng_mask,
+            self.step + 1,
+            &group.seqs,
         )?;
-        let t_rollout = t_start.elapsed().as_secs_f64();
-
-        // --- Stage 2+3: learner (forward + backward + apply) -------------
-        // ppo_epochs >= 2 re-uses the rollout for multiple optimizer
-        // updates (DAPO-style mini-batching): the first epoch is on-policy
-        // (ratio 1), later epochs exercise the clipped off-policy path.
-        // Masks are re-sampled per epoch, so every position keeps nonzero
-        // inclusion probability per update.
-        let t_learn_start = Instant::now();
-        let rewards: Vec<f32> = seqs.iter().map(|s| s.reward).collect();
-        let advs = advantage::grouped_advantages(&rewards, g);
-
-        let mut metrics = GradMetrics::default();
-        let mut grad_norm = 0.0;
-        let mut sel_tokens = 0usize;
-        let mut tot_tokens = 0usize;
-        let mut all_shapes: Vec<(usize, usize)> = Vec::new();
-        let mut n_micro = 0usize;
-        for _epoch in 0..self.cfg.rl.ppo_epochs {
-            let mut items = Vec::with_capacity(seqs.len());
-            for (seq, &adv) in seqs.iter().zip(&advs) {
-                let m = masking::sample_ctx(
-                    &self.cfg.method,
-                    seq.resp_len,
-                    Some(&seq.old_lp),
-                    &mut self.rng_mask,
-                );
-                sel_tokens += m.kept;
-                tot_tokens += seq.resp_len;
-                items.push(LearnItem {
-                    tokens: seq.tokens.clone(),
-                    pad_len: seq.pad_len,
-                    resp_len: seq.resp_len,
-                    ht_w: m.ht_w,
-                    learn_len: m.learn_len,
-                    adv,
-                    old_lp: seq.old_lp.clone(),
-                });
-            }
-            let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
-            self.acc.reset();
-            // §Perf opt-2: parameters are immutable within the epoch; build
-            // the literals once and share across every bucket micro-batch.
-            let param_lits = self.params.to_literals(&self.rt.manifest)?;
-            for mb in &mbs {
-                let m = self.rt.grad_cached(mb, &param_lits, &mut self.acc)?;
-                metrics.add(&m);
-            }
-            drop(param_lits);
-            grad_norm = self.rt.apply(&mut self.params, &mut self.opt, &self.acc)?;
-            all_shapes.extend(micro_shapes(&mbs, d.prompt_len));
-            n_micro += mbs.len();
-        }
-        let t_learn = t_learn_start.elapsed().as_secs_f64();
-        let t_total = t_start.elapsed().as_secs_f64();
-
-        let pc = self.rt.manifest.param_count;
-        let mem_gb = memory::step_mean_bytes(d, pc, &all_shapes) as f64 / 1e9;
-        let peak_mem_gb = memory::step_peak_bytes(d, pc, &all_shapes) as f64 / 1e9;
-
         self.step += 1;
-        let stats = StepStats {
-            step: self.step,
-            reward_mean: rewards.iter().map(|&r| r as f64).sum::<f64>()
-                / rewards.len() as f64,
-            entropy: metrics.mean_entropy(),
-            clip_frac: metrics.clip_frac(),
-            kl: if metrics.tokens > 0.0 { metrics.kl_sum / metrics.tokens } else { 0.0 },
-            grad_norm,
-            selected_ratio: if tot_tokens > 0 {
-                sel_tokens as f64 / tot_tokens as f64
-            } else {
-                0.0
-            },
-            resp_len_mean: tot_tokens as f64
-                / (seqs.len() * self.cfg.rl.ppo_epochs) as f64,
-            mem_gb,
-            peak_mem_gb,
-            t_learn_s: t_learn,
-            t_total_s: t_total,
-            micro_batches: n_micro,
-            sequences: seqs.len(),
-        };
-        self.record(&stats, t_rollout);
+        stats.t_total_s = t_start.elapsed().as_secs_f64();
+        record_step(&mut self.recorder, &stats, group.t_rollout_s);
         Ok(stats)
-    }
-
-    fn record(&mut self, s: &StepStats, t_rollout: f64) {
-        let r = &mut self.recorder;
-        r.push("reward", s.step, s.reward_mean);
-        r.push("entropy", s.step, s.entropy);
-        r.push("clip_frac", s.step, s.clip_frac);
-        r.push("kl", s.step, s.kl);
-        r.push("grad_norm", s.step, s.grad_norm);
-        r.push("selected_ratio", s.step, s.selected_ratio);
-        r.push("resp_len", s.step, s.resp_len_mean);
-        r.push("mem_gb", s.step, s.mem_gb);
-        r.push("peak_mem_gb", s.step, s.peak_mem_gb);
-        r.push("t_learn_s", s.step, s.t_learn_s);
-        r.push("t_rollout_s", s.step, t_rollout);
-        r.push("t_total_s", s.step, s.t_total_s);
     }
 
     /// Run `n` steps, optionally logging to stdout. When cfg.eval.every > 0
     /// an in-training benchmark evaluation is recorded every that-many
-    /// steps (series `acc_<benchmark>` / `pass_<benchmark>`).
+    /// steps (series `acc_<benchmark>` / `pass_<benchmark>`); when
+    /// cfg.rl.ckpt_every > 0 a resumable checkpoint is written every
+    /// that-many steps.
     pub fn train(&mut self, n: usize, verbose: bool) -> Result<()> {
         for _ in 0..n {
             let s = self.step()?;
-            if self.cfg.eval.every > 0 && s.step % self.cfg.eval.every as u64 == 0 {
-                let evals = crate::coordinator::evaluator::evaluate_all_tiers(
-                    self.rt,
-                    &self.params,
-                    self.cfg.eval.tasks_per_tier,
-                    self.cfg.eval.k,
-                    self.cfg.rl.temperature,
-                    self.cfg.seed ^ s.step,
-                )?;
-                for e in &evals {
-                    self.recorder.push(
-                        &format!("acc_{}", e.tier.benchmark_name()),
-                        s.step,
-                        e.acc_at_k,
-                    );
-                    self.recorder.push(
-                        &format!("pass_{}", e.tier.benchmark_name()),
-                        s.step,
-                        e.pass_at_k,
-                    );
-                }
+            post_step(self.rt, &self.cfg, &mut self.recorder, &self.params, &s, verbose)?;
+            if let Some(path) =
+                maybe_checkpoint(self.rt, &self.cfg, &self.params, &self.opt, s.step)?
+            {
                 if verbose {
-                    println!(
-                        "  eval @ step {}: {}",
-                        s.step,
-                        evals
-                            .iter()
-                            .map(|e| format!(
-                                "{} {:.3}",
-                                e.tier.benchmark_name(),
-                                e.acc_at_k
-                            ))
-                            .collect::<Vec<_>>()
-                            .join("  ")
-                    );
+                    println!("  checkpoint @ step {}: {path}", s.step);
                 }
-            }
-            if verbose {
-                println!(
-                    "step {:>4} | reward {:.3} | ent {:.3} | gnorm {:.3} | sel {:.2} | \
-                     mem {:.3} GB | learn {:.2}s | total {:.2}s",
-                    s.step,
-                    s.reward_mean,
-                    s.entropy,
-                    s.grad_norm,
-                    s.selected_ratio,
-                    s.mem_gb,
-                    s.t_learn_s,
-                    s.t_total_s
-                );
             }
         }
         Ok(())

@@ -15,9 +15,11 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use nat_rl::config::RunConfig;
+use nat_rl::coordinator::pipeline::PipelineTrainer;
 use nat_rl::coordinator::{evaluator, pretrainer, trainer::Trainer};
 use nat_rl::exp;
-use nat_rl::runtime::{Checkpoint, OptState, ParamStore, Runtime};
+use nat_rl::metrics::Recorder;
+use nat_rl::runtime::{Checkpoint, OptState, ParamStore, Runtime, TrainMeta};
 use nat_rl::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -48,7 +50,14 @@ fn print_help() {
            eval      Acc@16/pass@16 over MATH-S/AIME24-S/AIME25-S (--ckpt path)\n\
            repro     regenerate paper tables and figures (--what table2|table3|figures|all)\n\n\
          CONFIG: --config configs/file.toml, then dotted overrides, e.g.\n\
-           --model base --method urs --method.p 0.5 --rl.steps 100 --seed 3"
+           --model base --method urs --method.p 0.5 --rl.steps 100 --seed 3\n\n\
+         PIPELINE / RESUME (train):\n\
+           --pipeline.workers N       async rollout workers (0 = serial,\n\
+                                      1 = pipelined-synchronous, >=2 overlapped)\n\
+           --pipeline.queue_depth Q   bounded rollout-group queue (default 2)\n\
+           --pipeline.max_staleness S max optimizer-step lag per group (default 1)\n\
+           --rl.ckpt_every N          write a resumable checkpoint every N steps\n\
+           --resume path.bin          continue a mid-run checkpoint exactly"
     );
 }
 
@@ -117,39 +126,111 @@ fn load_ckpt_or_init(args: &Args, cfg: &RunConfig, rt: &Runtime) -> Result<Param
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let rt = Runtime::load(&cfg.artifact_dir())?;
-    let params = load_ckpt_or_init(args, &cfg, &rt)?;
-    let opt = OptState::zeros(&rt.manifest);
+
+    // Starting state: --resume beats --ckpt beats the default SFT checkpoint.
+    let (params, opt, start_step) = match args.get("resume") {
+        Some(p) => {
+            let (params, opt, train) = Checkpoint::load_full(Path::new(p), &rt.manifest)?;
+            let opt = opt.unwrap_or_else(|| OptState::zeros(&rt.manifest));
+            let start = match train {
+                Some(t) => {
+                    if t.seed != cfg.seed {
+                        println!(
+                            "WARNING: checkpoint was trained with seed {} but this run \
+                             uses seed {}; the continuation will not reproduce the \
+                             original stream (pass --seed {} to match)",
+                            t.seed, cfg.seed, t.seed
+                        );
+                    }
+                    t.step
+                }
+                None => {
+                    println!(
+                        "note: {p} has no training state (params-only checkpoint); \
+                         starting from step 0"
+                    );
+                    0
+                }
+            };
+            println!("resuming from {p} at step {start}");
+            (params, opt, start)
+        }
+        None => (load_ckpt_or_init(args, &cfg, &rt)?, OptState::zeros(&rt.manifest), 0),
+    };
+
+    let remaining = (cfg.rl.steps as u64).saturating_sub(start_step) as usize;
     println!(
-        "RL: model={} method={} steps={} prompts/step={} G={} seed={}",
+        "RL: model={} method={} steps={} (from {start_step}) prompts/step={} G={} seed={} \
+         pipeline={}",
         cfg.model,
         cfg.method.label(),
         cfg.rl.steps,
         cfg.rl.prompts_per_step,
         cfg.rl.group_size,
-        cfg.seed
+        cfg.seed,
+        if cfg.pipeline.workers > 0 {
+            format!("{}w", cfg.pipeline.workers)
+        } else {
+            "off".into()
+        }
     );
+    if remaining == 0 {
+        println!("nothing to do: checkpoint already at {} >= rl.steps", start_step);
+    }
+
     let results_dir = cfg.results_dir.clone();
-    let steps = cfg.rl.steps;
     let method_id = cfg.method.id();
     let model = cfg.model.clone();
     let seed = cfg.seed;
-    let mut tr = Trainer::new(&rt, cfg.clone(), params, opt);
-    tr.train(steps, true)?;
-    let base = format!("{results_dir}/train_{model}_{method_id}_s{seed}");
-    tr.recorder.write_csv(Path::new(&format!("{base}.csv")))?;
-    tr.recorder.write_json(Path::new(&format!("{base}.json")))?;
+    let eval_cfg = cfg.eval.clone();
+    let temperature = cfg.rl.temperature;
+
+    // Serial and pipelined trainers share the stage functions and metric
+    // series; which one runs is purely a scheduling choice.
+    let (final_params, final_opt, recorder): (ParamStore, OptState, Recorder) =
+        if cfg.pipeline.workers > 0 {
+            let mut tr = PipelineTrainer::new(&rt, cfg, params, opt);
+            tr.set_start_step(start_step);
+            tr.train(remaining, true)?;
+            (tr.params, tr.opt, tr.recorder)
+        } else {
+            let mut tr = Trainer::new(&rt, cfg, params, opt);
+            tr.set_start_step(start_step);
+            tr.train(remaining, true)?;
+            (tr.params, tr.opt, tr.recorder)
+        };
+
+    // A continuation only holds steps start+1.., so it must not clobber the
+    // original run's metric files (and an already-complete run writes none).
+    let base = if start_step == 0 {
+        format!("{results_dir}/train_{model}_{method_id}_s{seed}")
+    } else {
+        format!("{results_dir}/train_{model}_{method_id}_s{seed}_from{start_step}")
+    };
+    if remaining > 0 {
+        recorder.write_csv(Path::new(&format!("{base}.csv")))?;
+        recorder.write_json(Path::new(&format!("{base}.json")))?;
+        println!("metrics: {base}.csv");
+    }
     if let Some(out) = args.get("out") {
-        Checkpoint::save(Path::new(out), &rt.manifest, &tr.params, None)?;
+        // Full training state, so `--resume <out>` continues rather than
+        // replaying from step 0 on top of trained params.
+        Checkpoint::save_train(
+            Path::new(out),
+            &rt.manifest,
+            &final_params,
+            &final_opt,
+            &TrainMeta { step: start_step + remaining as u64, seed },
+        )?;
         println!("saved trained checkpoint to {out}");
     }
-    println!("metrics: {base}.csv");
     // final eval
     let evals = evaluator::evaluate_all_tiers(
         &rt,
-        &tr.params,
-        tr.cfg.eval.tasks_per_tier,
-        tr.cfg.eval.k,
-        tr.cfg.rl.temperature,
+        &final_params,
+        eval_cfg.tasks_per_tier,
+        eval_cfg.k,
+        temperature,
         seed,
     )?;
     for e in evals {

@@ -43,6 +43,11 @@ impl Recorder {
         self.get(name).last().map(|&(_, v)| v)
     }
 
+    /// Mean over a whole series (e.g. the pipeline's realized `staleness`).
+    pub fn mean(&self, name: &str) -> Option<f64> {
+        self.tail_mean(name, 1.0)
+    }
+
     /// Mean of the final `frac` fraction of a series (plateau statistic).
     pub fn tail_mean(&self, name: &str, frac: f64) -> Option<f64> {
         let vals = self.values(name);
@@ -131,6 +136,8 @@ mod tests {
         assert_eq!(r.tail_mean("x", 0.2), Some(8.5)); // mean of 8, 9
         assert_eq!(r.tail_mean("x", 1.0), Some(4.5));
         assert_eq!(r.tail_mean("none", 0.5), None);
+        assert_eq!(r.mean("x"), Some(4.5));
+        assert_eq!(r.mean("none"), None);
     }
 
     #[test]

@@ -8,16 +8,15 @@
 
 pub mod params;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::batcher::MicroBatch;
 use crate::model::Manifest;
-pub use params::{Checkpoint, GradAccum, OptState, ParamStore};
+pub use params::{Checkpoint, GradAccum, OptState, ParamStore, TrainMeta};
 
 /// Scalar metrics returned by one grad micro-batch (sums over the batch).
 #[derive(Clone, Copy, Debug, Default)]
@@ -55,21 +54,26 @@ pub struct GenerateOut {
     pub lp: Vec<f32>,
 }
 
+/// Shareable across threads: the pipelined trainer hands `&Runtime` to N
+/// rollout workers plus the learner, so the lazily-populated executable
+/// cache is behind a `Mutex` and entries are `Arc`s (the lock covers lookup
+/// and compile; execution runs on the cloned handle outside the lock).
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl Runtime {
     pub fn load(artifact_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, exes: RefCell::new(HashMap::new()) })
+        Ok(Runtime { client, manifest, exes: Mutex::new(HashMap::new()) })
     }
 
-    fn exe(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(file) {
+    fn exe(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let mut exes = self.exes.lock().expect("executable cache poisoned");
+        if let Some(e) = exes.get(file) {
             return Ok(e.clone());
         }
         let path = self.manifest.dir.join(file);
@@ -78,10 +82,10 @@ impl Runtime {
         )
         .with_context(|| format!("parsing {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
+        let exe = Arc::new(
             self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
         );
-        self.exes.borrow_mut().insert(file.to_string(), exe.clone());
+        exes.insert(file.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -99,7 +103,7 @@ impl Runtime {
     }
 
     pub fn compiled_count(&self) -> usize {
-        self.exes.borrow().len()
+        self.exes.lock().expect("executable cache poisoned").len()
     }
 
     fn run(&self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {

@@ -141,6 +141,18 @@ impl GradAccum {
     }
 }
 
+/// Mid-run training state carried by a resumable checkpoint. All per-step
+/// random streams are pure functions of `(seed, step)` (see
+/// `coordinator::trainer::plan_step`), so the optimizer-step counter plus
+/// the run seed IS the complete RNG state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrainMeta {
+    /// Completed optimizer steps.
+    pub step: u64,
+    /// The run seed the streams were derived from.
+    pub seed: u64,
+}
+
 /// Checkpoint = params (+ optional opt state) + JSON sidecar.
 pub struct Checkpoint;
 
@@ -150,6 +162,28 @@ impl Checkpoint {
         manifest: &Manifest,
         params: &ParamStore,
         opt: Option<&OptState>,
+    ) -> Result<()> {
+        Self::save_impl(path, manifest, params, opt, None)
+    }
+
+    /// Save a resumable mid-run checkpoint: params + optimizer state + the
+    /// training step / seed needed to continue the exact run.
+    pub fn save_train(
+        path: &Path,
+        manifest: &Manifest,
+        params: &ParamStore,
+        opt: &OptState,
+        meta: &TrainMeta,
+    ) -> Result<()> {
+        Self::save_impl(path, manifest, params, Some(opt), Some(meta))
+    }
+
+    fn save_impl(
+        path: &Path,
+        manifest: &Manifest,
+        params: &ParamStore,
+        opt: Option<&OptState>,
+        train: Option<&TrainMeta>,
     ) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -166,12 +200,19 @@ impl Checkpoint {
             }
         }
         std::fs::write(path, &bytes)?;
-        let meta = obj(vec![
+        let mut fields = vec![
             ("model", Json::Str(manifest.dims.name.clone())),
             ("param_count", Json::Num(manifest.param_count as f64)),
             ("has_opt", Json::Bool(opt.is_some())),
             ("opt_step", Json::Num(opt.map(|o| o.step).unwrap_or(0) as f64)),
-        ]);
+        ];
+        if let Some(t) = train {
+            fields.push(("train_step", Json::Num(t.step as f64)));
+            // Decimal string: a u64 seed does not survive an f64 JSON number
+            // round-trip above 2^53.
+            fields.push(("run_seed", Json::Str(t.seed.to_string())));
+        }
+        let meta = obj(fields);
         std::fs::write(path.with_extension("json"), meta.to_string())?;
         Ok(())
     }
@@ -180,6 +221,16 @@ impl Checkpoint {
         path: &Path,
         manifest: &Manifest,
     ) -> Result<(ParamStore, Option<OptState>)> {
+        let (params, opt, _) = Self::load_full(path, manifest)?;
+        Ok((params, opt))
+    }
+
+    /// Load a checkpoint including its training state, if present
+    /// (checkpoints written by `save` have none — they load as fresh runs).
+    pub fn load_full(
+        path: &Path,
+        manifest: &Manifest,
+    ) -> Result<(ParamStore, Option<OptState>, Option<TrainMeta>)> {
         let meta_text = std::fs::read_to_string(path.with_extension("json"))
             .with_context(|| format!("checkpoint sidecar for {}", path.display()))?;
         let meta = Json::parse(&meta_text).map_err(|e| anyhow::anyhow!(e))?;
@@ -217,7 +268,15 @@ impl Checkpoint {
         } else {
             None
         };
-        Ok((params, opt))
+        let seed = meta.get("run_seed").and_then(|v| match v {
+            Json::Str(s) => s.parse::<u64>().ok(),
+            _ => v.as_i64().map(|x| x as u64),
+        });
+        let train = meta.get("train_step").and_then(Json::as_i64).map(|step| TrainMeta {
+            step: step as u64,
+            seed: seed.unwrap_or(0),
+        });
+        Ok((params, opt, train))
     }
 }
 
@@ -294,6 +353,33 @@ mod tests {
         let opt2 = opt2.unwrap();
         assert_eq!(opt2.m.flat[0], -3.0);
         assert_eq!(opt2.step, 17);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn checkpoint_train_state_roundtrip() {
+        let m = toy_manifest();
+        let dir = std::env::temp_dir().join("nat_rl_ckpt_train_test");
+        let path = dir.join("auto.bin");
+        let mut ps = ParamStore::zeros_like(&m);
+        ps.flat[3] = 0.75;
+        let mut opt = OptState::zeros(&m);
+        opt.step = 12;
+        opt.v.flat[1] = 0.5;
+        // seed above 2^53: must survive the JSON sidecar round-trip exactly
+        let meta = TrainMeta { step: 6, seed: u64::MAX - 41 };
+        Checkpoint::save_train(&path, &m, &ps, &opt, &meta).unwrap();
+        let (ps2, opt2, train2) = Checkpoint::load_full(&path, &m).unwrap();
+        assert_eq!(ps.flat, ps2.flat);
+        let opt2 = opt2.unwrap();
+        assert_eq!(opt2.step, 12);
+        assert_eq!(opt2.v.flat[1], 0.5);
+        assert_eq!(train2, Some(meta));
+        // plain `save` checkpoints carry no train state and load as fresh
+        let plain = dir.join("plain.bin");
+        Checkpoint::save(&plain, &m, &ps, Some(&opt)).unwrap();
+        let (_, _, train3) = Checkpoint::load_full(&plain, &m).unwrap();
+        assert_eq!(train3, None);
         let _ = std::fs::remove_dir_all(dir);
     }
 

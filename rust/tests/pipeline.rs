@@ -1,0 +1,203 @@
+//! Host-side integration tests for the pipelined orchestrator: determinism
+//! of per-step planning, the engine driving trainer-shaped state, and
+//! resumable checkpoints — none of which need PJRT or artifacts.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use nat_rl::config::RunConfig;
+use nat_rl::coordinator::pipeline::engine::{self, PipelineOpts};
+use nat_rl::coordinator::trainer::{mask_rng, plan_step};
+use nat_rl::model::Manifest;
+use nat_rl::runtime::{Checkpoint, OptState, ParamStore, TrainMeta};
+use nat_rl::util::json::Json;
+
+/// Per-step plans must be pure functions of (seed, step): identical across
+/// calls, across processes, and independent of which steps were planned
+/// before — the property that lets rollout workers plan any future step.
+#[test]
+fn step_plans_are_pure_functions_of_seed_and_step() {
+    let cfg = RunConfig::default();
+    for step in [0u64, 1, 7, 1000] {
+        let mut a = plan_step(&cfg, step);
+        let mut b = plan_step(&cfg, step);
+        assert_eq!(
+            a.tasks.iter().map(|t| t.prompt.clone()).collect::<Vec<_>>(),
+            b.tasks.iter().map(|t| t.prompt.clone()).collect::<Vec<_>>(),
+        );
+        for _ in 0..16 {
+            assert_eq!(a.rng_rollout.next_u64(), b.rng_rollout.next_u64());
+            assert_eq!(a.rng_mask.next_u64(), b.rng_mask.next_u64());
+        }
+        // mask_rng must be the exact stream the plan embeds (the pipelined
+        // learner re-derives it without the plan).
+        let mut c = plan_step(&cfg, step);
+        let mut m = mask_rng(&cfg, step);
+        assert_eq!(c.rng_mask.next_u64(), m.next_u64());
+    }
+    // Different steps and different seeds give different streams/tasks.
+    let mut p0 = plan_step(&cfg, 0);
+    let mut p1 = plan_step(&cfg, 1);
+    assert_ne!(p0.rng_rollout.next_u64(), p1.rng_rollout.next_u64());
+    let mut other = RunConfig::default();
+    other.seed = 1;
+    let mut q0 = plan_step(&other, 0);
+    assert_ne!(plan_step(&cfg, 0).rng_rollout.next_u64(), q0.rng_rollout.next_u64());
+}
+
+/// Drive the engine with trainer-shaped state (a real `ParamStore` as the
+/// published snapshot): the synchronous single-worker schedule must produce
+/// bit-identical parameters to the serial loop, because each "rollout"
+/// observes exactly the previous "apply"'s output.
+#[test]
+fn engine_with_paramstore_snapshots_matches_serial_bitwise() {
+    let n_params = 64usize;
+    let steps = 12u64;
+    // Deterministic fake stages: "rollout" hashes the snapshot into a
+    // pseudo-group; "learn" folds the group into every parameter.
+    let fake_rollout = |step: u64, params: &ParamStore| -> f32 {
+        let s: f32 = params.flat.iter().sum();
+        (s * 0.25 + step as f32).sin()
+    };
+    let fake_apply = |params: &mut ParamStore, g: f32| {
+        for (i, p) in params.flat.iter_mut().enumerate() {
+            *p = (*p + g * (i as f32 + 1.0).recip()) * 0.999;
+        }
+    };
+
+    // Serial reference.
+    let mut serial = ParamStore { flat: vec![0.01; n_params] };
+    for k in 0..steps {
+        let g = fake_rollout(k, &serial);
+        fake_apply(&mut serial, g);
+    }
+
+    // Pipelined, workers=1, staleness=0.
+    let mut piped = ParamStore { flat: vec![0.01; n_params] };
+    let trace = Mutex::new(Vec::new());
+    engine::run(
+        &PipelineOpts { workers: 1, queue_depth: 2, max_staleness: 0 },
+        0,
+        steps,
+        piped.clone(),
+        |k, snap: &ParamStore| {
+            trace.lock().unwrap().push(k);
+            Ok(fake_rollout(k, snap))
+        },
+        |meta, g: f32| {
+            assert_eq!(meta.staleness(), 0);
+            fake_apply(&mut piped, g);
+            Ok(piped.clone())
+        },
+        |_| Ok(()),
+    )
+    .unwrap();
+    assert_eq!(piped.flat, serial.flat, "workers=1 pipeline diverged from serial");
+    assert_eq!(*trace.lock().unwrap(), (0..steps).collect::<Vec<_>>());
+}
+
+/// With overlap enabled the run is NOT necessarily bit-identical, but every
+/// group must respect the staleness bound and steps must apply in order.
+#[test]
+fn engine_with_paramstore_snapshots_bounds_staleness_under_overlap() {
+    let steps = 40u64;
+    let stal = 1u64;
+    let mut version_log = Vec::new();
+    let mut params = ParamStore { flat: vec![1.0; 8] };
+    engine::run(
+        &PipelineOpts { workers: 3, queue_depth: 2, max_staleness: stal },
+        0,
+        steps,
+        params.clone(),
+        |k, snap: &ParamStore| Ok(snap.flat[0] + k as f32),
+        |meta, _g: f32| {
+            assert!(meta.staleness() <= stal);
+            version_log.push((meta.step, meta.behaviour_version));
+            params.flat[0] += 1.0;
+            Ok(params.clone())
+        },
+        |_| Ok(()),
+    )
+    .unwrap();
+    assert_eq!(version_log.len(), steps as usize);
+    for (i, &(step, _)) in version_log.iter().enumerate() {
+        assert_eq!(step, i as u64, "applies out of order");
+    }
+    assert_eq!(params.flat[0], 1.0 + steps as f32);
+}
+
+fn toy_manifest() -> Manifest {
+    let j = Json::parse(
+        r#"{
+      "config": {"name":"t","vocab":8,"d_model":4,"n_layers":1,"n_heads":1,
+        "d_ff":8,"prompt_len":4,"max_resp":8,"buckets":[4,8],
+        "batch_rollout":2,"batch_train":2,"pretrain_len":12,
+        "batch_pretrain":2,"lr":0.001,"clip_eps":0.2,"grad_clip":1.0,
+        "pretrain_lr":0.001},
+      "param_count": 40,
+      "params": [
+        {"name":"embed","shape":[8,4],"size":32,"offset":0},
+        {"name":"head","shape":[4,2],"size":8,"offset":32}],
+      "artifacts": {"generate":"g.txt","apply":"a.txt","pretrain":"p.txt",
+        "grad":{"4":"g4.txt","8":"g8.txt"},"score":{"8":"s8.txt"}}
+    }"#,
+    )
+    .unwrap();
+    Manifest::from_json(Path::new("/tmp"), &j).unwrap()
+}
+
+/// Mid-run checkpoints round-trip the complete training state through the
+/// public API: params, both Adam moments, optimizer step, trainer step and
+/// run seed — everything a `--resume` needs for an exact continuation.
+#[test]
+fn mid_run_checkpoint_roundtrips_full_training_state() {
+    let m = toy_manifest();
+    let dir = std::env::temp_dir().join("nat_rl_pipeline_ckpt_test");
+    let path = dir.join("mid.bin");
+
+    let mut params = ParamStore::zeros_like(&m);
+    for (i, x) in params.flat.iter_mut().enumerate() {
+        *x = (i as f32) * 0.125 - 1.0;
+    }
+    let mut opt = OptState::zeros(&m);
+    opt.step = 34; // 17 trainer steps x 2 ppo epochs
+    opt.m.flat[5] = 0.25;
+    opt.v.flat[7] = 1.5;
+    let meta = TrainMeta { step: 17, seed: 123 };
+
+    Checkpoint::save_train(&path, &m, &params, &opt, &meta).unwrap();
+    let (p2, o2, t2) = Checkpoint::load_full(&path, &m).unwrap();
+    let o2 = o2.expect("resumable checkpoint must carry optimizer state");
+    assert_eq!(p2.flat, params.flat);
+    assert_eq!(o2.step, 34);
+    assert_eq!(o2.m.flat, opt.m.flat);
+    assert_eq!(o2.v.flat, opt.v.flat);
+    assert_eq!(t2, Some(meta));
+
+    // Legacy checkpoints (no train state) still load through load_full.
+    let legacy = dir.join("legacy.bin");
+    Checkpoint::save(&legacy, &m, &params, None).unwrap();
+    let (_, o3, t3) = Checkpoint::load_full(&legacy, &m).unwrap();
+    assert!(o3.is_none());
+    assert!(t3.is_none());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The pipeline config surfaces through the same dotted-override path the
+/// CLI uses, and the `--resume`-adjacent keys are accepted end to end.
+#[test]
+fn pipeline_cli_style_overrides() {
+    let mut cfg = RunConfig::default();
+    for (k, v) in [
+        ("pipeline.workers", "2"),
+        ("pipeline.queue_depth", "3"),
+        ("pipeline.max_staleness", "2"),
+        ("rl.ckpt_every", "5"),
+    ] {
+        cfg.set(k, v).unwrap();
+    }
+    assert_eq!(cfg.pipeline.workers, 2);
+    assert_eq!(cfg.pipeline.queue_depth, 3);
+    assert_eq!(cfg.pipeline.max_staleness, 2);
+    assert_eq!(cfg.rl.ckpt_every, 5);
+}

@@ -9,10 +9,11 @@ use std::path::Path;
 
 use nat_rl::config::{Method, RunConfig};
 use nat_rl::coordinator::batcher::{pack, LearnItem};
+use nat_rl::coordinator::pipeline::PipelineTrainer;
 use nat_rl::coordinator::rollout::{encode_prompt, run_group_rollouts};
 use nat_rl::coordinator::trainer::Trainer;
 use nat_rl::coordinator::{evaluator, masking, pretrainer};
-use nat_rl::runtime::{GradAccum, OptState, ParamStore, Runtime};
+use nat_rl::runtime::{Checkpoint, GradAccum, OptState, ParamStore, Runtime};
 use nat_rl::tasks::{EvalSet, TaskMix, TaskSampler, Tier};
 use nat_rl::tokenizer::Tokenizer;
 use nat_rl::util::rng::Rng;
@@ -296,6 +297,128 @@ fn det_trunc_uses_less_simulated_memory_than_grpo() {
     let grpo = mem(Method::Grpo);
     let det = mem(Method::DetTrunc { frac: 0.5 });
     assert!(det < grpo, "det {det} !< grpo {grpo}");
+}
+
+/// Acceptance: the single-worker pipeline is forced synchronous, so for the
+/// same seed it must be BIT-identical to the serial trainer — parameters
+/// and every metric series.
+#[test]
+fn pipelined_workers1_is_bit_identical_to_serial() {
+    let Some(rt) = runtime() else { return };
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    let mut cfg = tiny_cfg(Method::Rpc { min_cut: 4 }, 5);
+    let mut serial = Trainer::new(&rt, cfg.clone(), base.clone(), OptState::zeros(&rt.manifest));
+    serial.train(3, false).unwrap();
+
+    cfg.pipeline.workers = 1;
+    let mut piped = PipelineTrainer::new(&rt, cfg, base, OptState::zeros(&rt.manifest));
+    piped.train(3, false).unwrap();
+
+    assert_eq!(serial.params.flat, piped.params.flat, "parameter divergence");
+    for series in ["reward", "entropy", "selected_ratio", "grad_norm", "kl"] {
+        assert_eq!(
+            serial.recorder.values(series),
+            piped.recorder.values(series),
+            "series {series} diverged"
+        );
+    }
+    // Synchronous schedule: staleness must be exactly 0 at every step.
+    assert!(piped.recorder.values("staleness").iter().all(|&s| s == 0.0));
+}
+
+/// Acceptance: with overlap (workers=2, staleness 1) the run is off-policy
+/// by at most one optimizer step per group. It must complete, respect the
+/// staleness bound, and stay reward-equivalent to serial within tolerance
+/// (binary rewards on a tiny model: mean rewards live in the same band).
+#[test]
+fn pipelined_workers2_bounds_staleness_and_matches_rewards() {
+    let Some(rt) = runtime() else { return };
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    let steps = 4usize;
+    let mut cfg = tiny_cfg(Method::Rpc { min_cut: 4 }, 6);
+    let mut serial = Trainer::new(&rt, cfg.clone(), base.clone(), OptState::zeros(&rt.manifest));
+    serial.train(steps, false).unwrap();
+
+    cfg.pipeline.workers = 2;
+    cfg.pipeline.max_staleness = 1;
+    let mut piped = PipelineTrainer::new(&rt, cfg, base, OptState::zeros(&rt.manifest));
+    piped.train(steps, false).unwrap();
+
+    let stal = piped.recorder.values("staleness");
+    assert_eq!(stal.len(), steps);
+    assert!(stal.iter().all(|&s| (0.0..=1.0).contains(&s)), "{stal:?}");
+    assert_eq!(piped.recorder.values("reward").len(), steps);
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (rs, rp) = (mean(&serial.recorder.values("reward")), mean(&piped.recorder.values("reward")));
+    assert!(
+        (rs - rp).abs() <= 0.5,
+        "pipelined rewards diverged from serial: serial {rs:.3} vs pipelined {rp:.3}"
+    );
+    // Parameters must still be finite and actually trained.
+    assert!(piped.params.flat.iter().all(|p| p.is_finite()));
+    assert_ne!(piped.params.flat, ParamStore::load_init(&rt.manifest).unwrap().flat);
+}
+
+/// Acceptance: a mid-run checkpoint + `--resume` continuation reproduces
+/// the uninterrupted run exactly (per-step streams are derived from
+/// (seed, step), so nothing but params/opt/step needs to survive).
+#[test]
+fn resume_from_mid_run_checkpoint_reproduces_uninterrupted_run() {
+    let Some(rt) = runtime() else { return };
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    let dir = std::env::temp_dir().join("nat_rl_resume_e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = tiny_cfg(Method::Rpc { min_cut: 4 }, 9);
+    cfg.checkpoints_dir = dir.to_string_lossy().into_owned();
+    cfg.rl.ckpt_every = 2;
+
+    // Uninterrupted 4-step run.
+    let mut full = Trainer::new(&rt, cfg.clone(), base.clone(), OptState::zeros(&rt.manifest));
+    full.train(4, false).unwrap();
+
+    // Interrupted: 2 steps (writes the rolling checkpoint), then resume.
+    let mut first = Trainer::new(&rt, cfg.clone(), base, OptState::zeros(&rt.manifest));
+    first.train(2, false).unwrap();
+    let ckpt = cfg.rolling_ckpt_path();
+    let (params, opt, meta) =
+        Checkpoint::load_full(Path::new(&ckpt), &rt.manifest).unwrap();
+    let meta = meta.expect("rolling checkpoint must carry train state");
+    assert_eq!(meta.step, 2);
+    assert_eq!(meta.seed, cfg.seed);
+    let mut resumed = Trainer::new(&rt, cfg.clone(), params, opt.unwrap());
+    resumed.set_start_step(meta.step);
+    resumed.train(2, false).unwrap();
+
+    assert_eq!(full.params.flat, resumed.params.flat, "resume diverged");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Tail-chunk coverage: when total rollouts are not divisible by the device
+/// rollout batch, the padded duplicate rows must be discarded and every
+/// flat slot filled exactly once with its own task's completion.
+#[test]
+fn run_group_rollouts_tail_chunk_fills_every_slot_once() {
+    let Some(rt) = runtime() else { return };
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let d = rt.manifest.dims.clone();
+    let tok = Tokenizer::new();
+    let mut sampler = TaskSampler::new(21, TaskMix { tiers: vec![Tier::Easy], ..Default::default() });
+    // 2 tasks x (batch_rollout + 1) completions: guaranteed ragged tail.
+    let g = d.batch_rollout + 1;
+    let tasks = sampler.batch(2);
+    let mut rng = Rng::new(13);
+    let seqs = run_group_rollouts(&rt, &params, &tok, &tasks, g, 1.0, &mut rng).unwrap();
+    assert_eq!(seqs.len(), 2 * g);
+    for (flat, s) in seqs.iter().enumerate() {
+        assert_eq!(s.task_idx, flat / g, "slot {flat} carries the wrong task");
+        // Prompt region must be this task's encoded prompt, not the padding
+        // duplicate of the chunk's first row.
+        let (row, pad) = encode_prompt(&tok, &tasks[s.task_idx].prompt, d.prompt_len).unwrap();
+        assert_eq!(&s.tokens[..d.prompt_len], &row[..]);
+        assert_eq!(s.pad_len, pad);
+        assert!(s.resp_len >= 1 && s.resp_len <= d.max_resp);
+        assert_eq!(s.old_lp.len(), s.resp_len);
+    }
 }
 
 #[test]

@@ -1,0 +1,276 @@
+//! Offline stub of the `xla` PJRT binding.
+//!
+//! This environment cannot link the real XLA/PJRT runtime, but the
+//! coordinator crate must still build and its host-side logic must still be
+//! testable. The split is:
+//!
+//! * [`Literal`] — fully functional host-side tensor container (typed
+//!   storage, `vec1`, `reshape`, `to_vec`, scalars, tuples). Everything the
+//!   coordinator does between device calls works for real.
+//! * [`PjRtClient`] / [`PjRtLoadedExecutable`] — construction fails with an
+//!   explanatory error. All call sites in `nat_rl` gate on the artifact
+//!   directory existing and skip cleanly, so builds and tests pass without
+//!   a device runtime; linking the real binding restores execution with the
+//!   same API.
+//!
+//! Types are `Send + Sync` so the coordinator's pipelined trainer can share
+//! runtime handles across rollout worker threads.
+
+use std::fmt;
+use std::sync::Mutex;
+
+/// Stub error type (implements `std::error::Error`, so `?` converts into
+/// `anyhow::Error` at call sites).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new<M: fmt::Display>(msg: M) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_runtime<T>() -> Result<T> {
+    Err(Error::new(
+        "PJRT execution is unavailable in this offline build (vendored xla stub); \
+         link the real xla crate to run against compiled artifacts",
+    ))
+}
+
+/// Element storage for [`Literal`].
+#[derive(Clone, Debug, PartialEq)]
+enum Data {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::I32(v) => v.len(),
+            Data::F32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+}
+
+/// Element trait for the typed `Literal` accessors. Only public types appear
+/// in its signatures; implementations touch `Literal`'s private storage.
+pub trait NativeType: Copy + 'static {
+    fn vec1(v: &[Self]) -> Literal
+    where
+        Self: Sized;
+    fn extract(lit: &Literal) -> Option<Vec<Self>>
+    where
+        Self: Sized;
+}
+
+impl NativeType for i32 {
+    fn vec1(v: &[i32]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: Data::I32(v.to_vec()) }
+    }
+    fn extract(lit: &Literal) -> Option<Vec<i32>> {
+        match &lit.data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn vec1(v: &[f32]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: Data::F32(v.to_vec()) }
+    }
+    fn extract(lit: &Literal) -> Option<Vec<f32>> {
+        match &lit.data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side tensor value: typed flat storage plus a shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::vec1(v)
+    }
+
+    /// Tuple literal (what executables return).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![elems.len() as i64], data: Data::Tuple(elems) }
+    }
+
+    /// Reshape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape to {dims:?} ({n} elems) from {} elems",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Flat typed copy of the storage.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+            .ok_or_else(|| Error::new(format!("to_vec: wrong element type for {:?}", self.dims)))
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(v) => Ok(v.clone()),
+            _ => Err(Error::new("to_tuple on a non-tuple literal")),
+        }
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(x: i32) -> Literal {
+        Literal { dims: vec![], data: Data::I32(vec![x]) }
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(x: f32) -> Literal {
+        Literal { dims: vec![], data: Data::F32(vec![x]) }
+    }
+}
+
+/// Parsed HLO module (stub: retains the text so parse errors surface at the
+/// right place — a missing or unreadable artifact file fails here).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution (stub: never constructed).
+pub struct PjRtBuffer {
+    _p: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        no_runtime()
+    }
+}
+
+/// Compiled executable handle (stub: never constructed; `Mutex` documents
+/// that the real handle is used behind shared references from many threads).
+pub struct PjRtLoadedExecutable {
+    _guard: Mutex<()>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with owned or borrowed literal arguments
+    /// (`execute::<Literal>` / `execute::<&Literal>` both work).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_runtime()
+    }
+}
+
+/// PJRT client handle. `cpu()` is the stub's failure point: everything in
+/// `nat_rl` that needs a device goes through `Runtime::load`, which calls
+/// this after checking the artifact manifest exists.
+pub struct PjRtClient {
+    _p: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        no_runtime()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        no_runtime()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4, 5, 6]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn typed_access_is_checked() {
+        let l = Literal::vec1(&[1.5f32, 2.5]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.5, 2.5]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalars_and_tuples() {
+        let s: Literal = 7i32.into();
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        let t = Literal::tuple(vec![s.clone(), 1.0f32.into()]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_paths_fail_with_clear_error() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline"));
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
