@@ -25,7 +25,7 @@ use nat_rl::util::rng::Rng;
 
 fn grad_for_items(rt: &Runtime, params: &ParamStore, items: &[LearnItem]) -> Result<Vec<f32>> {
     let d = &rt.manifest.dims;
-    let mbs = pack(items, &d.buckets, d.prompt_len, d.batch_train);
+    let mbs = pack(items, &d.buckets, d.prompt_len, d.batch_train)?;
     let mut acc = GradAccum::zeros(rt.manifest.param_count);
     for mb in &mbs {
         rt.grad(mb, params, &mut acc)?;

@@ -13,6 +13,8 @@ Outputs under ``<out-dir>/<config>/``:
   generate.hlo.txt            rollout (prefill + KV-cache scan decode)
   score_T<b>.hlo.txt          logprob/entropy diagnostics (top bucket)
   grad_T<b>.hlo.txt           NAT learner gradient, one per length bucket
+  grad_T<b>_B<r>.hlo.txt      same, for the sub-batch row grid {1,2,4,...}
+                              (the token-budget packer's 2-D artifact grid)
   apply.hlo.txt               AdamW with global-norm clip
   pretrain.hlo.txt            fused SFT step
   init_params.bin             raw little-endian f32, manifest order
@@ -68,15 +70,34 @@ def lower_score(cfg, bucket, use_pallas_attn=False):
         _spec((B,), jnp.int32))
 
 
-def lower_grad(cfg, bucket):
+def lower_grad(cfg, bucket, rows=None):
+    """Lower the NAT grad for one (sequence bucket, rows) grid cell.
+
+    ``rows=None`` is the legacy full-row artifact (B = batch_train); the
+    token-budget packer additionally uses smaller row counts so ragged
+    micro-batch tails do not pay a full batch of padding rows.
+    """
     fn = lambda params, tokens, ht_w, adv, old_lp, inv_len, pad_len: \
         M.nat_grad(cfg, params, tokens, ht_w, adv, old_lp, inv_len, pad_len,
                    bucket)
-    B, P = cfg.batch_train, cfg.prompt_len
+    B, P = rows or cfg.batch_train, cfg.prompt_len
     return jax.jit(fn).lower(
         _param_specs(cfg), _spec((B, P + bucket), jnp.int32),
         _spec((B, bucket)), _spec((B,)), _spec((B, bucket)), _spec((B,)),
         _spec((B,), jnp.int32))
+
+
+def row_grid(batch_train):
+    """Compiled batch dimensions below batch_train: powers of two, ascending.
+
+    Mirrors the grid Rust's ``Manifest::row_grid`` reassembles (it appends
+    batch_train itself, which the legacy ``grad`` artifacts cover).
+    """
+    rows, r = [], 1
+    while r < batch_train:
+        rows.append(r)
+        r *= 2
+    return rows
 
 
 def lower_apply(cfg):
@@ -127,6 +148,9 @@ def build_manifest(cfg):
             "score_pallas": {str(cfg.buckets[-1]):
                              f"score_pallas_T{cfg.buckets[-1]}.hlo.txt"},
             "grad": {str(b): f"grad_T{b}.hlo.txt" for b in cfg.buckets},
+            "grad_rows": {f"{b}x{r}": f"grad_T{b}_B{r}.hlo.txt"
+                          for b in cfg.buckets
+                          for r in row_grid(cfg.batch_train)},
             "apply": "apply.hlo.txt",
             "pretrain": "pretrain.hlo.txt",
         },
@@ -170,6 +194,9 @@ def build(cfg_name: str, out_dir: str, force: bool = False) -> None:
          lower_score(cfg, cfg.buckets[-1], use_pallas_attn=True))
     for b in cfg.buckets:
         emit(f"grad_T{b}.hlo.txt", lower_grad(cfg, b))
+        # 2-D (bucket x rows) grid for the token-budget packer.
+        for r in row_grid(cfg.batch_train):
+            emit(f"grad_T{b}_B{r}.hlo.txt", lower_grad(cfg, b, rows=r))
     emit("apply.hlo.txt", lower_apply(cfg))
     emit("pretrain.hlo.txt", lower_pretrain(cfg))
 

@@ -83,6 +83,19 @@ class TestManifest:
         assert sorted(int(b) for b in man["artifacts"]["grad"]) == \
             sorted(CFG.buckets)
 
+    def test_grad_row_grid_covers_every_bucket(self):
+        man = aot.build_manifest(CFG)
+        grid = aot.row_grid(CFG.batch_train)
+        assert grid == sorted(grid)
+        assert all(r < CFG.batch_train for r in grid)
+        keys = set(man["artifacts"]["grad_rows"])
+        assert keys == {f"{b}x{r}" for b in CFG.buckets for r in grid}
+
+    def test_row_grid_is_powers_of_two(self):
+        assert aot.row_grid(8) == [1, 2, 4]
+        assert aot.row_grid(6) == [1, 2, 4]
+        assert aot.row_grid(1) == []
+
 
 class TestBuiltArtifacts:
     """Validate the on-disk artifact set if `make artifacts` has run."""
@@ -105,6 +118,7 @@ class TestBuiltArtifacts:
         arts = man["artifacts"]
         files = [arts["generate"], arts["apply"], arts["pretrain"]]
         files += list(arts["grad"].values()) + list(arts["score"].values())
+        files += list(arts.get("grad_rows", {}).values())
         for f in files:
             path = os.path.join(self.ART, f)
             assert os.path.exists(path), f

@@ -1,18 +1,29 @@
-//! Microbench: bucket routing + micro-batch packing (host hot loop between
+//! Batcher bench: packing throughput AND padded-token waste for the fixed
+//! vs token-budget packers, per NAT method (the host hot loop between
 //! rollout and the grad artifacts).
+//!
+//! The waste table is the acceptance metric for the budget packer: at equal
+//! batch config it must allocate >= 30% fewer padding tokens than the fixed
+//! packer for RPC (the paper's method), and never more for GRPO/URS.
 use nat_rl::config::Method;
-use nat_rl::coordinator::batcher::{pack, LearnItem};
+use nat_rl::coordinator::batcher::{pack, pack_budget, padding_waste, LearnItem};
 use nat_rl::coordinator::masking::sample;
 use nat_rl::util::bench::Bench;
 use nat_rl::util::rng::Rng;
 
-fn items(n: usize, method: &Method, t_max: usize, rng: &mut Rng) -> Vec<LearnItem> {
+const P: usize = 48;
+const T_MAX: usize = 128;
+const BUCKETS: [usize; 4] = [32, 64, 96, 128];
+const ROW_GRID: [usize; 4] = [1, 2, 4, 8];
+const BATCH: usize = 8;
+
+fn items(n: usize, method: &Method, rng: &mut Rng) -> Vec<LearnItem> {
     (0..n)
         .map(|_| {
-            let resp_len = 1 + rng.below(t_max as u64) as usize;
+            let resp_len = 1 + rng.below(T_MAX as u64) as usize;
             let m = sample(method, resp_len, rng);
             LearnItem {
-                tokens: vec![7; 48 + t_max],
+                tokens: vec![7; P + T_MAX],
                 pad_len: 5,
                 resp_len,
                 ht_w: m.ht_w,
@@ -25,14 +36,53 @@ fn items(n: usize, method: &Method, t_max: usize, rng: &mut Rng) -> Vec<LearnIte
 }
 
 fn main() {
-    let buckets = [32usize, 64, 96, 128];
+    let methods = [
+        ("grpo", Method::Grpo),
+        ("urs", Method::Urs { p: 0.5 }),
+        ("rpc", Method::Rpc { min_cut: 8 }),
+    ];
+
+    // Padded-token waste at realistic per-step scale (prompts_per_step x G
+    // = 16 rows) and at bulk scale, averaged over many mask draws.
+    println!("== padded-token waste (1 - ideal/allocated) ==");
+    println!("{:<8} {:>6} {:>12} {:>12} {:>10}", "method", "n", "fixed", "budget", "saving");
+    for (name, method) in &methods {
+        for n in [16usize, 64, 256] {
+            let mut rng = Rng::new(1);
+            let (mut wf, mut wb) = (0.0, 0.0);
+            let draws = 40;
+            for _ in 0..draws {
+                let it = items(n, method, &mut rng);
+                let fixed = pack(&it, &BUCKETS, P, BATCH).unwrap();
+                let budget = pack_budget(&it, &BUCKETS, P, &ROW_GRID, 0).unwrap();
+                wf += padding_waste(&fixed, &it, P) / draws as f64;
+                wb += padding_waste(&budget, &it, P) / draws as f64;
+            }
+            println!(
+                "{:<8} {:>6} {:>11.1}% {:>11.1}% {:>9.1}%",
+                name,
+                n,
+                100.0 * wf,
+                100.0 * wb,
+                100.0 * (1.0 - wb / wf.max(1e-12))
+            );
+        }
+    }
+
+    // Packing throughput (ns/op): the packer must stay negligible next to
+    // a grad-artifact execution.
     let mut b = Bench::new("batcher");
     let mut rng = Rng::new(1);
-    for n in [16usize, 64, 256] {
-        let grpo = items(n, &Method::Grpo, 128, &mut rng);
-        let rpc = items(n, &Method::Rpc { min_cut: 8 }, 128, &mut rng);
-        b.iter(&format!("pack_grpo/n={n}"), || pack(&grpo, &buckets, 48, 8));
-        b.iter(&format!("pack_rpc/n={n}"), || pack(&rpc, &buckets, 48, 8));
+    for (name, method) in &methods {
+        for n in [16usize, 64, 256] {
+            let it = items(n, method, &mut rng);
+            b.iter(&format!("pack_fixed/{name}/n={n}"), || {
+                pack(&it, &BUCKETS, P, BATCH).unwrap()
+            });
+            b.iter(&format!("pack_budget/{name}/n={n}"), || {
+                pack_budget(&it, &BUCKETS, P, &ROW_GRID, 0).unwrap()
+            });
+        }
     }
     b.report();
 }

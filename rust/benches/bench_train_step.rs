@@ -41,7 +41,7 @@ fn grad_bench(b: &mut Bench, model: &str) {
                 old_lp: vec![-1.5; bucket],
             })
             .collect();
-        let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
+        let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train).unwrap();
         assert_eq!(mbs.len(), 1);
         let mut acc = GradAccum::zeros(rt.manifest.param_count);
         b.iter(&format!("grad/{model}/T={bucket}"), || {

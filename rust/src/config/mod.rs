@@ -5,4 +5,4 @@
 
 mod run;
 
-pub use run::{EvalCfg, Method, PipelineCfg, PretrainCfg, RlCfg, RunConfig};
+pub use run::{EvalCfg, Method, Packer, PipelineCfg, PretrainCfg, RlCfg, RunConfig, TrainCfg};

@@ -20,7 +20,7 @@ pub enum Method {
     /// Information-aware selection (paper §7 future work, implemented):
     /// inclusion probability p_t = floor + (1-floor) * normalized behaviour
     /// surprisal, HT-corrected. Allocates compute to high-information
-    /// tokens; backward savings only (like URS).
+    /// tokens; forward savings only past the last scored token (like URS).
     Saliency { floor: f64 },
 }
 
@@ -55,6 +55,58 @@ impl Method {
             Method::Rpc { .. } => "rpc",
             Method::Saliency { .. } => "sal",
         }
+    }
+}
+
+/// Micro-batch packing strategy (`coordinator::batcher`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Packer {
+    /// Legacy layout: every micro-batch allocates exactly `batch_train`
+    /// rows in its sequence bucket — the parity/compat mode. Bit-identical
+    /// to the pre-budget-packer trainer for prefix methods (GRPO, DetTrunc,
+    /// RPC); URS/Saliency bucket routing changed with the tighter
+    /// `learn_len`, so their runs are estimator- but not bit-equivalent.
+    Fixed,
+    /// Cost-based token-budget packing into the 2-D (sequence bucket ×
+    /// row bucket) artifact grid; minimises padded-token waste under
+    /// `rows × (P + bucket) <= train.token_budget`.
+    Budget,
+}
+
+impl Packer {
+    pub fn parse(name: &str) -> Result<Packer> {
+        Ok(match name {
+            "fixed" => Packer::Fixed,
+            "budget" => Packer::Budget,
+            other => bail!("unknown packer '{other}' (fixed|budget)"),
+        })
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            Packer::Fixed => "fixed",
+            Packer::Budget => "budget",
+        }
+    }
+}
+
+/// Learner batching configuration (`--train.*`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrainCfg {
+    pub packer: Packer,
+    /// Max allocated learner tokens per micro-batch, `rows × (P + bucket)`.
+    /// 0 = auto: the fixed packer's allocation, `batch_train × (P + top
+    /// bucket)`. Only consulted by the budget packer.
+    pub token_budget: usize,
+    /// Auto-tune the sequence-bucket routing edges from an EMA histogram of
+    /// observed `learn_len` (`coordinator::bucket_tuner`). Budget packer
+    /// only; trades bit-reproducibility of resumed runs for less padding.
+    pub auto_buckets: bool,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg { packer: Packer::Budget, token_budget: 0, auto_buckets: false }
     }
 }
 
@@ -125,6 +177,7 @@ pub struct RunConfig {
     pub method: Method,
     pub seed: u64,
     pub rl: RlCfg,
+    pub train: TrainCfg,
     pub pretrain: PretrainCfg,
     pub eval: EvalCfg,
     pub pipeline: PipelineCfg,
@@ -148,6 +201,7 @@ impl Default for RunConfig {
                 ppo_epochs: 1,
                 ckpt_every: 0,
             },
+            train: TrainCfg::default(),
             pretrain: PretrainCfg { steps: 300, corpus_size: 2048, noise: 0.25 },
             eval: EvalCfg { every: 0, tasks_per_tier: 16, k: 16 },
             pipeline: PipelineCfg::default(),
@@ -210,6 +264,13 @@ impl RunConfig {
         setnum!("rl", "temperature", cfg.rl.temperature, f32);
         setnum!("rl", "ppo_epochs", cfg.rl.ppo_epochs, usize);
         setnum!("rl", "ckpt_every", cfg.rl.ckpt_every, usize);
+        if let Some(name) = get("train", "packer").and_then(Json::as_str) {
+            cfg.train.packer = Packer::parse(name)?;
+        }
+        setnum!("train", "token_budget", cfg.train.token_budget, usize);
+        if let Some(b) = get("train", "auto_buckets").and_then(Json::as_bool) {
+            cfg.train.auto_buckets = b;
+        }
         setnum!("pipeline", "workers", cfg.pipeline.workers, usize);
         setnum!("pipeline", "queue_depth", cfg.pipeline.queue_depth, usize);
         setnum!("pipeline", "max_staleness", cfg.pipeline.max_staleness, u64);
@@ -274,6 +335,15 @@ impl RunConfig {
             "rl.temperature" => self.rl.temperature = value.parse()?,
             "rl.ppo_epochs" => self.rl.ppo_epochs = value.parse()?,
             "rl.ckpt_every" => self.rl.ckpt_every = value.parse()?,
+            "train.packer" => self.train.packer = Packer::parse(value)?,
+            "train.token_budget" => self.train.token_budget = value.parse()?,
+            "train.auto_buckets" => {
+                self.train.auto_buckets = match value {
+                    "true" | "1" | "on" => true,
+                    "false" | "0" | "off" => false,
+                    other => bail!("--train.auto_buckets '{other}' (true|false)"),
+                }
+            }
             "pipeline.workers" => self.pipeline.workers = value.parse()?,
             "pipeline.queue_depth" => self.pipeline.queue_depth = value.parse()?,
             "pipeline.max_staleness" => self.pipeline.max_staleness = value.parse()?,
@@ -441,6 +511,42 @@ mod tests {
         cfg.set("rl.tiers", "easy, hard").unwrap();
         assert_eq!(cfg.rl.tiers, vec![Tier::Easy, Tier::Hard]);
         assert!(cfg.set("rl.tiers", "bogus").is_err());
+    }
+
+    #[test]
+    fn train_packer_overrides_and_parsing() {
+        let mut cfg = RunConfig::default();
+        // budget packing is the default; fixed remains selectable for parity
+        assert_eq!(
+            cfg.train,
+            TrainCfg { packer: Packer::Budget, token_budget: 0, auto_buckets: false }
+        );
+        cfg.set("train.packer", "fixed").unwrap();
+        assert_eq!(cfg.train.packer, Packer::Fixed);
+        cfg.set("train.packer", "budget").unwrap();
+        cfg.set("train.token_budget", "4096").unwrap();
+        cfg.set("train.auto_buckets", "true").unwrap();
+        assert_eq!(cfg.train.token_budget, 4096);
+        assert!(cfg.train.auto_buckets);
+        assert!(cfg.set("train.packer", "bogus").is_err());
+        assert!(cfg.set("train.auto_buckets", "maybe").is_err());
+    }
+
+    #[test]
+    fn train_section_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_train_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.toml");
+        std::fs::write(
+            &path,
+            "[train]\npacker = \"budget\"\ntoken_budget = 2048\nauto_buckets = true\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.train.packer, Packer::Budget);
+        assert_eq!(cfg.train.token_budget, 2048);
+        assert!(cfg.train.auto_buckets);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

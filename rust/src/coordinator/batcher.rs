@@ -1,12 +1,39 @@
-//! Length-bucketed micro-batching.
+//! Micro-batching: turning NAT `learn_len` prefixes into real workloads.
 //!
 //! Each learner item carries a `learn_len` from the NAT masker; the batcher
-//! routes it to the smallest compiled grad-artifact bucket that fits and
-//! packs fixed-size micro-batches (padding short rows with inert entries:
-//! zero HT weights and zero advantage contribute exactly nothing to the
-//! accumulated gradient). This is where RPC's forward savings materialise:
-//! GRPO/URS items always land in the top bucket, RPC items spread across
-//! buckets roughly uniformly.
+//! routes it to a compiled grad-artifact shape and packs micro-batches
+//! (padding short rows with inert entries: zero HT weights and zero
+//! advantage contribute exactly nothing to the accumulated gradient). This
+//! is where RPC's forward savings materialise: GRPO items always need the
+//! top bucket, RPC items spread across buckets roughly uniformly.
+//!
+//! Two packers share the [`MicroBatch`] layout:
+//!
+//! * [`pack`] — the legacy **fixed** packer: every micro-batch allocates
+//!   exactly `batch_train` rows in the smallest sequence bucket that fits
+//!   its items. Kept selectable (`--train.packer fixed`) for parity
+//!   testing: bit-identical to the pre-budget-packer trainer for the
+//!   prefix methods (GRPO/DetTrunc/RPC; URS/Saliency route into smaller
+//!   buckets since the `learn_len = last kept + 1` fix, so only their
+//!   estimator — not the float schedule — is unchanged).
+//! * [`pack_budget`] — the cost-based **token-budget** packer: items are
+//!   sorted by `learn_len` and partitioned into a 2-D artifact grid of
+//!   (sequence bucket × row-count bucket), minimising padded-token waste
+//!   under `rows × (P + bucket) <= token_budget`. Row counts are drawn from
+//!   the manifest's compiled row grid (e.g. {1, 2, 4, ..., batch_train}),
+//!   so a 3-item tail decomposes into exact 2+1 rows instead of a full
+//!   `batch_train`; on a coarse (legacy) grid the partition instead merges
+//!   stragglers into the next bucket's batch when that wastes less. The
+//!   model counts tokens only — per-micro-batch launch overhead is noise
+//!   next to a fwd+bwd in this stack, and artifact shapes come from a
+//!   small fixed grid so the compile cache stays warm.
+//!
+//! Both packers reject items whose `learn_len` exceeds the top sequence
+//! bucket: silently zero-weighting the overflow (the old behaviour) drops
+//! selected tokens with no HT reweighting, biasing the gradient exactly
+//! like deterministic truncation.
+
+use anyhow::{bail, Result};
 
 use crate::tokenizer::PAD;
 
@@ -29,35 +56,72 @@ pub struct LearnItem {
     pub old_lp: Vec<f32>,
 }
 
-/// A packed micro-batch for one grad-artifact bucket.
-#[derive(Clone, Debug)]
-pub struct MicroBatch {
-    pub bucket: usize,
-    /// Number of real (non-padding) rows.
-    pub real_rows: usize,
-    pub tokens: Vec<i32>,   // [B, P + bucket]
-    pub ht_w: Vec<f32>,     // [B, bucket]
-    pub adv: Vec<f32>,      // [B]
-    pub old_lp: Vec<f32>,   // [B, bucket]
-    pub inv_len: Vec<f32>,  // [B] = 1 / t_i (FULL response length)
-    pub pad_len: Vec<i32>,  // [B]
+impl LearnItem {
+    /// True if the row contributes nothing to the accumulated gradient:
+    /// no kept token (all-Bernoulli-miss URS/Saliency draws) or zero
+    /// advantage (zero-variance reward groups). Such rows still burn a
+    /// full forward/backward if packed.
+    pub fn is_zero_contribution(&self) -> bool {
+        self.adv == 0.0 || self.ht_w.iter().all(|&w| w == 0.0)
+    }
 }
 
-/// Route items to buckets and pack micro-batches of `batch` rows.
+/// A packed micro-batch for one (sequence bucket, row bucket) grad artifact.
+#[derive(Clone, Debug)]
+pub struct MicroBatch {
+    /// Sequence bucket: response window length of the grad artifact.
+    pub bucket: usize,
+    /// Allocated rows (the artifact's batch dimension). Always `batch_train`
+    /// under the fixed packer; a row-grid bucket under the budget packer.
+    pub rows: usize,
+    /// Number of real (non-padding) rows.
+    pub real_rows: usize,
+    pub tokens: Vec<i32>,   // [rows, P + bucket]
+    pub ht_w: Vec<f32>,     // [rows, bucket]
+    pub adv: Vec<f32>,      // [rows]
+    pub old_lp: Vec<f32>,   // [rows, bucket]
+    pub inv_len: Vec<f32>,  // [rows] = 1 / t_i (FULL response length)
+    pub pad_len: Vec<i32>,  // [rows]
+}
+
+/// Smallest bucket >= learn_len; hard error past the top bucket (silent
+/// clamping would zero-weight selected tokens with no HT reweighting —
+/// DetTrunc-style bias smuggled in by the batcher).
+fn bucket_for(buckets: &[usize], learn_len: usize) -> Result<usize> {
+    match buckets.iter().copied().find(|&b| b >= learn_len) {
+        Some(b) => Ok(b),
+        None => bail!(
+            "learn_len {learn_len} exceeds top bucket {} — packing it would \
+             silently truncate selected tokens and bias the gradient",
+            buckets.last().copied().unwrap_or(0)
+        ),
+    }
+}
+
+fn validate(items: &[LearnItem], buckets: &[usize]) -> Result<()> {
+    if buckets.is_empty() || buckets.windows(2).any(|w| w[0] >= w[1]) {
+        bail!("buckets must be non-empty ascending: {buckets:?}");
+    }
+    for item in items {
+        debug_assert!(item.learn_len >= 1 && item.learn_len <= item.resp_len);
+        debug_assert_eq!(item.ht_w.len(), item.resp_len);
+        bucket_for(buckets, item.learn_len)?;
+    }
+    Ok(())
+}
+
+/// Fixed packer: route items to sequence buckets and pack micro-batches of
+/// exactly `batch` allocated rows (the pre-budget-packer layout, bit-for-bit).
 pub fn pack(
     items: &[LearnItem],
     buckets: &[usize],
     prompt_len: usize,
     batch: usize,
-) -> Vec<MicroBatch> {
+) -> Result<Vec<MicroBatch>> {
+    validate(items, buckets)?;
     let mut by_bucket: Vec<Vec<&LearnItem>> = vec![Vec::new(); buckets.len()];
     for item in items {
-        debug_assert!(item.learn_len >= 1 && item.learn_len <= item.resp_len);
-        debug_assert_eq!(item.ht_w.len(), item.resp_len);
-        let bi = buckets
-            .iter()
-            .position(|&b| b >= item.learn_len)
-            .unwrap_or(buckets.len() - 1);
+        let bi = buckets.iter().position(|&b| b >= item.learn_len).expect("validated");
         by_bucket[bi].push(item);
     }
     let mut out = Vec::new();
@@ -67,26 +131,122 @@ pub fn pack(
             out.push(pack_one(chunk, bucket, prompt_len, batch));
         }
     }
-    out
+    Ok(out)
 }
 
-fn pack_one(rows: &[&LearnItem], bucket: usize, prompt_len: usize, batch: usize) -> MicroBatch {
+/// Smallest row-grid entry >= `n`. The grid is the set of batch dimensions
+/// compiled grad artifacts exist for (ascending, max = batch_train).
+pub fn alloc_rows(row_grid: &[usize], n: usize) -> usize {
+    row_grid
+        .iter()
+        .copied()
+        .find(|&r| r >= n)
+        .unwrap_or_else(|| row_grid.last().copied().unwrap_or(n))
+}
+
+/// Token-budget packer: sort by `learn_len`, then fill micro-batches in the
+/// (sequence bucket × row bucket) grid so that total allocated tokens are
+/// minimal subject to `rows × (P + bucket) <= token_budget` per micro-batch.
+///
+/// Because items are sorted, every micro-batch is a contiguous run of the
+/// sorted list and its sequence bucket is decided by its longest (= last)
+/// item, so the minimal-waste grouping is an exact O(n × batch_train)
+/// partition DP rather than a heuristic: the cost of a run is
+/// `alloc_rows(len) × (P + bucket(last))`, and the DP decides where runs
+/// split — automatically merging a short-bucket straggler into the next
+/// bucket's batch when that allocates fewer tokens than an under-filled
+/// micro-batch of its own.
+///
+/// `token_budget == 0` means "no extra limit": the budget defaults to the
+/// fixed packer's per-batch allocation, `batch_train × (P + top bucket)`.
+pub fn pack_budget(
+    items: &[LearnItem],
+    buckets: &[usize],
+    prompt_len: usize,
+    row_grid: &[usize],
+    token_budget: usize,
+) -> Result<Vec<MicroBatch>> {
+    validate(items, buckets)?;
+    if row_grid.is_empty() || row_grid.windows(2).any(|w| w[0] >= w[1]) {
+        bail!("row grid must be non-empty ascending: {row_grid:?}");
+    }
+    let max_rows = *row_grid.last().unwrap();
+    let top = *buckets.last().unwrap();
+    let budget = if token_budget == 0 { max_rows * (prompt_len + top) } else { token_budget };
+    let cost = |n: usize, bucket: usize| alloc_rows(row_grid, n) * (prompt_len + bucket);
+    for item in items {
+        let b = bucket_for(buckets, item.learn_len)?;
+        if cost(1, b) > budget {
+            bail!(
+                "train.token_budget {budget} is below one row of bucket {b} \
+                 ({} tokens); raise the budget or use --train.packer fixed",
+                cost(1, b)
+            );
+        }
+    }
+
+    // Sort by learn_len (stable: ties keep arrival order) so every group of
+    // consecutive items shares the smallest viable bucket of its last item.
+    let mut order: Vec<usize> = (0..items.len()).collect();
+    order.sort_by_key(|&i| items[i].learn_len);
+
+    // dp[i] = minimal allocated tokens packing the first i sorted items;
+    // cut[i] = start of the last micro-batch in that optimum. Ties prefer
+    // the longest run (fewest micro-batches).
+    let n = order.len();
+    let mut dp = vec![usize::MAX; n + 1];
+    let mut cut = vec![0usize; n + 1];
+    dp[0] = 0;
+    for i in 1..=n {
+        let b_i = bucket_for(buckets, items[order[i - 1]].learn_len)?;
+        for j in i.saturating_sub(max_rows)..i {
+            let c = cost(i - j, b_i);
+            if c > budget || dp[j] == usize::MAX {
+                continue;
+            }
+            if dp[j] + c < dp[i] {
+                dp[i] = dp[j] + c;
+                cut[i] = j;
+            }
+        }
+        debug_assert_ne!(dp[i], usize::MAX, "single rows were pre-validated against the budget");
+    }
+
+    let mut bounds = Vec::new();
+    let mut i = n;
+    while i > 0 {
+        bounds.push((cut[i], i));
+        i = cut[i];
+    }
+    bounds.reverse();
+    let mut out = Vec::new();
+    for (lo, hi) in bounds {
+        let group: Vec<&LearnItem> = order[lo..hi].iter().map(|&k| &items[k]).collect();
+        let bucket = bucket_for(buckets, items[order[hi - 1]].learn_len)?;
+        let rows = alloc_rows(row_grid, group.len());
+        out.push(pack_one(&group, bucket, prompt_len, rows));
+    }
+    Ok(out)
+}
+
+fn pack_one(rows: &[&LearnItem], bucket: usize, prompt_len: usize, alloc: usize) -> MicroBatch {
+    debug_assert!(rows.len() <= alloc);
     let s = prompt_len + bucket;
     let mut mb = MicroBatch {
         bucket,
+        rows: alloc,
         real_rows: rows.len(),
-        tokens: vec![PAD; batch * s],
-        ht_w: vec![0.0; batch * bucket],
-        adv: vec![0.0; batch],
-        old_lp: vec![0.0; batch * bucket],
-        inv_len: vec![0.0; batch],
-        pad_len: vec![prompt_len as i32; batch],
+        tokens: vec![PAD; alloc * s],
+        ht_w: vec![0.0; alloc * bucket],
+        adv: vec![0.0; alloc],
+        old_lp: vec![0.0; alloc * bucket],
+        inv_len: vec![0.0; alloc],
+        pad_len: vec![prompt_len as i32; alloc],
     };
     for (r, item) in rows.iter().enumerate() {
         // token prefix: prompt window + first `bucket` response tokens
         mb.tokens[r * s..(r + 1) * s].copy_from_slice(&item.tokens[..s]);
-        let take = item.learn_len.min(bucket);
-        for t in 0..take {
+        for t in 0..item.learn_len {
             mb.ht_w[r * bucket + t] = item.ht_w[t];
             mb.old_lp[r * bucket + t] = item.old_lp[t];
         }
@@ -97,17 +257,53 @@ fn pack_one(rows: &[&LearnItem], bucket: usize, prompt_len: usize, batch: usize)
     mb
 }
 
-/// Micro-batch (batch, seq) shapes for the analytic memory model.
+/// Split items into (contributing, dropped-count): rows with no kept token
+/// or zero advantage contribute exactly nothing to the accumulated gradient
+/// but burn a full forward/backward if packed. The caller must keep the
+/// dropped count in the apply scale (`GradAccum::sequences`) so the applied
+/// gradient is bit-for-bit what packing the inert rows would have produced.
+pub fn split_zero_contribution(items: Vec<LearnItem>) -> (Vec<LearnItem>, usize) {
+    let n = items.len();
+    let kept: Vec<LearnItem> = items.into_iter().filter(|i| !i.is_zero_contribution()).collect();
+    let dropped = n - kept.len();
+    (kept, dropped)
+}
+
+/// Micro-batch (rows, seq) shapes for the analytic memory model.
 pub fn micro_shapes(mbs: &[MicroBatch], prompt_len: usize) -> Vec<(usize, usize)> {
-    mbs.iter().map(|m| (m.adv.len(), prompt_len + m.bucket)).collect()
+    mbs.iter().map(|m| (m.rows, prompt_len + m.bucket)).collect()
+}
+
+/// Learner tokens actually allocated by a packed step: Σ rows × (P + bucket).
+pub fn allocated_tokens(mbs: &[MicroBatch], prompt_len: usize) -> usize {
+    mbs.iter().map(|m| m.rows * (prompt_len + m.bucket)).sum()
+}
+
+/// Zero-padding lower bound for an item list: Σ (P + learn_len).
+pub fn ideal_tokens(items: &[LearnItem], prompt_len: usize) -> usize {
+    items.iter().map(|i| prompt_len + i.learn_len).sum()
+}
+
+/// Fraction of allocated learner tokens that are padding (the
+/// `padding_waste` metric series).
+pub fn padding_waste(mbs: &[MicroBatch], items: &[LearnItem], prompt_len: usize) -> f64 {
+    let alloc = allocated_tokens(mbs, prompt_len);
+    if alloc == 0 {
+        return 0.0;
+    }
+    1.0 - ideal_tokens(items, prompt_len) as f64 / alloc as f64
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Method;
+    use crate::coordinator::masking::sample;
+    use crate::util::rng::Rng;
 
     const P: usize = 8;
     const BUCKETS: [usize; 3] = [4, 8, 16];
+    const GRID: [usize; 3] = [1, 2, 4];
 
     fn item(resp_len: usize, learn_len: usize, adv: f32) -> LearnItem {
         LearnItem {
@@ -124,7 +320,7 @@ mod tests {
     #[test]
     fn routes_to_smallest_fitting_bucket() {
         let items = vec![item(16, 3, 1.0), item(16, 4, 1.0), item(16, 5, 1.0), item(16, 16, 1.0)];
-        let mbs = pack(&items, &BUCKETS, P, 4);
+        let mbs = pack(&items, &BUCKETS, P, 4).unwrap();
         let buckets: Vec<usize> = mbs.iter().map(|m| m.bucket).collect();
         assert!(buckets.contains(&4));
         assert!(buckets.contains(&8));
@@ -136,11 +332,12 @@ mod tests {
     #[test]
     fn splits_into_fixed_micro_batches() {
         let items: Vec<LearnItem> = (0..10).map(|_| item(16, 16, 0.5)).collect();
-        let mbs = pack(&items, &BUCKETS, P, 4);
+        let mbs = pack(&items, &BUCKETS, P, 4).unwrap();
         assert_eq!(mbs.len(), 3); // 4 + 4 + 2
         assert_eq!(mbs[2].real_rows, 2);
         for m in &mbs {
-            assert_eq!(m.adv.len(), 4); // padded to full batch
+            assert_eq!(m.rows, 4); // fixed packer: padded to full batch
+            assert_eq!(m.adv.len(), 4);
             assert_eq!(m.tokens.len(), 4 * (P + m.bucket));
         }
     }
@@ -148,7 +345,7 @@ mod tests {
     #[test]
     fn padding_rows_are_inert() {
         let items = vec![item(16, 16, 2.0)];
-        let mbs = pack(&items, &BUCKETS, P, 4);
+        let mbs = pack(&items, &BUCKETS, P, 4).unwrap();
         let m = &mbs[0];
         for r in 1..4 {
             assert_eq!(m.adv[r], 0.0);
@@ -158,9 +355,9 @@ mod tests {
     }
 
     #[test]
-    fn weights_beyond_learn_len_are_zero_and_truncated_to_bucket() {
+    fn weights_beyond_learn_len_are_zero() {
         let items = vec![item(16, 6, 1.0)]; // routes to bucket 8
-        let mbs = pack(&items, &BUCKETS, P, 1);
+        let mbs = pack(&items, &BUCKETS, P, 1).unwrap();
         let m = &mbs[0];
         assert_eq!(m.bucket, 8);
         assert!(m.ht_w[..6].iter().all(|&w| w == 1.5));
@@ -172,7 +369,7 @@ mod tests {
     #[test]
     fn token_rows_are_sliced_to_bucket_window() {
         let items = vec![item(16, 3, 1.0)];
-        let mbs = pack(&items, &BUCKETS, P, 1);
+        let mbs = pack(&items, &BUCKETS, P, 1).unwrap();
         let m = &mbs[0];
         assert_eq!(m.bucket, 4);
         assert_eq!(m.tokens.len(), P + 4);
@@ -180,19 +377,188 @@ mod tests {
     }
 
     #[test]
-    fn learn_len_over_top_bucket_clamps() {
+    fn learn_len_over_top_bucket_is_rejected() {
+        // Clamping (the old behaviour) would zero-weight tokens 8..16 with
+        // no HT reweighting — DetTrunc-style bias. Both packers refuse.
         let items = vec![item(16, 16, 1.0)];
-        let mbs = pack(&items, &[4, 8], P, 1); // top bucket smaller than learn_len
-        assert_eq!(mbs[0].bucket, 8);
-        assert!(mbs[0].ht_w.iter().take(8).all(|&w| w > 0.0));
+        let err = pack(&items, &[4, 8], P, 1).unwrap_err();
+        assert!(err.to_string().contains("exceeds top bucket"), "{err}");
+        let err = pack_budget(&items, &[4, 8], P, &GRID, 0).unwrap_err();
+        assert!(err.to_string().contains("exceeds top bucket"), "{err}");
     }
 
     #[test]
     fn micro_shapes_for_memory_model() {
         let items = vec![item(16, 3, 1.0), item(16, 16, 1.0)];
-        let mbs = pack(&items, &BUCKETS, P, 4);
+        let mbs = pack(&items, &BUCKETS, P, 4).unwrap();
         let shapes = micro_shapes(&mbs, P);
         assert!(shapes.contains(&(4, P + 4)));
         assert!(shapes.contains(&(4, P + 16)));
+    }
+
+    #[test]
+    fn alloc_rows_rounds_up_in_grid() {
+        assert_eq!(alloc_rows(&[1, 2, 4, 8], 1), 1);
+        assert_eq!(alloc_rows(&[1, 2, 4, 8], 3), 4);
+        assert_eq!(alloc_rows(&[1, 2, 4, 8], 8), 8);
+        // legacy manifests compile only the full batch dimension
+        assert_eq!(alloc_rows(&[8], 2), 8);
+    }
+
+    #[test]
+    fn budget_rows_follow_the_row_grid() {
+        // 3 short items: the fixed packer burns 4 allocated rows in one
+        // micro-batch; the budget packer decomposes 3 = 2 + 1 exactly in
+        // the power-of-two grid — zero row padding.
+        let items = vec![item(16, 2, 1.0), item(16, 3, 1.0), item(16, 3, 1.0)];
+        let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+        let alloc: usize = mbs.iter().map(|m| m.rows).sum();
+        let real: usize = mbs.iter().map(|m| m.real_rows).sum();
+        assert_eq!(real, 3);
+        assert_eq!(alloc, 3, "{mbs:?}");
+        assert!(mbs.iter().all(|m| m.bucket == 4 && GRID.contains(&m.rows)));
+        assert_eq!(allocated_tokens(&mbs, P), 3 * (P + 4));
+        let fixed = pack(&items, &BUCKETS, P, 4).unwrap();
+        assert_eq!(allocated_tokens(&fixed, P), 4 * (P + 4));
+        let one = pack_budget(&items[..1], &BUCKETS, P, &GRID, 0).unwrap();
+        assert_eq!(one[0].rows, 1);
+    }
+
+    #[test]
+    fn budget_limit_splits_micro_batches() {
+        let items: Vec<LearnItem> = (0..4).map(|_| item(16, 4, 1.0)).collect();
+        // 2 rows × (8 + 4) = 24 tokens fits; 4 rows = 48 does not.
+        let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 24).unwrap();
+        assert_eq!(mbs.len(), 2);
+        for m in &mbs {
+            assert_eq!(m.rows, 2);
+            assert!(m.rows * (P + m.bucket) <= 24);
+        }
+        // A budget below one minimal row is a config error.
+        let err = pack_budget(&items, &BUCKETS, P, &GRID, 8).unwrap_err();
+        assert!(err.to_string().contains("token_budget"), "{err}");
+    }
+
+    #[test]
+    fn budget_merges_small_buckets_when_cheaper() {
+        // Coarse row grid (a legacy manifest compiles only rows=4): the
+        // straggler at learn_len 4 would need its own 4-row batch (4×12=48)
+        // next to the bucket-8 batch (4×16=64); merging everything into one
+        // bucket-8 batch costs 64 total → the DP merges.
+        let items =
+            vec![item(16, 4, 1.0), item(16, 8, 1.0), item(16, 8, 1.0), item(16, 8, 1.0)];
+        let coarse = [4usize];
+        let mbs = pack_budget(&items, &BUCKETS, P, &coarse, 0).unwrap();
+        assert_eq!(mbs.len(), 1);
+        assert_eq!(mbs[0].bucket, 8);
+        assert_eq!(mbs[0].rows, 4);
+        assert_eq!(mbs[0].real_rows, 4);
+        // With a fine grid, exact row sums beat cross-bucket merging: the
+        // straggler gets its own 1-row bucket-4 batch instead.
+        let fine = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+        assert!(fine.iter().any(|m| m.bucket == 4 && m.rows == 1));
+        assert!(allocated_tokens(&fine, P) < allocated_tokens(&mbs, P));
+    }
+
+    #[test]
+    fn budget_splits_buckets_when_upgrade_is_wasteful() {
+        // 2 items at learn_len 4 + 1 at learn_len 16: one merged batch at
+        // bucket 16 costs alloc(3)=4 rows × (8+16) = 96; splitting costs
+        // 2×12 + 1×24 = 48 → the DP splits.
+        let items = vec![item(16, 4, 1.0), item(16, 4, 1.0), item(16, 16, 1.0)];
+        let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+        assert_eq!(mbs.len(), 2);
+        assert_eq!(mbs[0].bucket, 4);
+        assert_eq!(mbs[0].real_rows, 2);
+        assert_eq!(mbs[1].bucket, 16);
+        assert_eq!(mbs[1].rows, 1);
+    }
+
+    #[test]
+    fn budget_conserves_rows_and_weights() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let n = 1 + rng.below(24) as usize;
+            let items: Vec<LearnItem> = (0..n)
+                .map(|_| {
+                    let t = 1 + rng.below(16) as usize;
+                    let ll = 1 + rng.below(t as u64) as usize;
+                    item(t, ll, rng.normal() as f32)
+                })
+                .collect();
+            let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+            let total: usize = mbs.iter().map(|m| m.real_rows).sum();
+            assert_eq!(total, n);
+            let w = |mbs: &[MicroBatch]| -> f64 {
+                mbs.iter().flat_map(|m| m.ht_w.iter()).map(|&x| x as f64).sum()
+            };
+            let fixed = pack(&items, &BUCKETS, P, 4).unwrap();
+            assert!((w(&mbs) - w(&fixed)).abs() < 1e-9);
+            for m in &mbs {
+                assert!(GRID.contains(&m.rows));
+                assert!(m.real_rows <= m.rows);
+            }
+        }
+    }
+
+    #[test]
+    fn budget_packer_cuts_rpc_padded_waste_by_30pct() {
+        // Acceptance: ≥ 30% lower padded-token waste for RPC (min_cut
+        // default 8) at equal batch config. Realistic per-step scale:
+        // prompts_per_step × G = 16 items, buckets [32,64,96,128], B=8.
+        let (p, buckets, grid) = (48usize, [32usize, 64, 96, 128], [1usize, 2, 4, 8]);
+        let mut rng = Rng::new(7);
+        let mut waste_fixed = 0.0;
+        let mut waste_budget = 0.0;
+        for _ in 0..50 {
+            let items: Vec<LearnItem> = (0..16)
+                .map(|_| {
+                    let t = 1 + rng.below(128) as usize;
+                    let m = sample(&Method::Rpc { min_cut: 8 }, t, &mut rng);
+                    LearnItem {
+                        tokens: vec![7; p + 128],
+                        pad_len: 5,
+                        resp_len: t,
+                        ht_w: m.ht_w,
+                        learn_len: m.learn_len,
+                        adv: 1.0,
+                        old_lp: vec![-1.0; t],
+                    }
+                })
+                .collect();
+            let fixed = pack(&items, &buckets, p, 8).unwrap();
+            let budget = pack_budget(&items, &buckets, p, &grid, 0).unwrap();
+            waste_fixed += padding_waste(&fixed, &items, p);
+            waste_budget += padding_waste(&budget, &items, p);
+        }
+        assert!(
+            waste_budget < 0.7 * waste_fixed,
+            "budget packer waste {waste_budget:.3} not ≥30% below fixed {waste_fixed:.3}"
+        );
+    }
+
+    #[test]
+    fn zero_contribution_split_preserves_population_accounting() {
+        let items = vec![
+            item(16, 4, 1.0),                // contributes
+            item(16, 4, 0.0),                // zero advantage
+            LearnItem { ht_w: vec![0.0; 16], ..item(16, 4, 1.0) }, // no kept token
+            item(16, 8, -0.5),               // contributes
+        ];
+        let n = items.len();
+        let (kept, dropped) = split_zero_contribution(items);
+        assert_eq!(kept.len(), 2);
+        assert_eq!(dropped, 2);
+        assert_eq!(kept.len() + dropped, n);
+        assert!(kept.iter().all(|i| !i.is_zero_contribution()));
+    }
+
+    #[test]
+    fn waste_metric_is_zero_for_perfect_fit() {
+        let items: Vec<LearnItem> = (0..4).map(|_| item(16, 16, 1.0)).collect();
+        let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+        assert!(padding_waste(&mbs, &items, P) < 1e-9);
+        assert_eq!(allocated_tokens(&mbs, P), ideal_tokens(&items, P));
+        assert_eq!(padding_waste(&[], &[], P), 0.0);
     }
 }

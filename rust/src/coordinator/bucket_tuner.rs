@@ -1,0 +1,231 @@
+//! EMA auto-tuning of the sequence-bucket routing edges.
+//!
+//! The manifest ships a fixed ascending bucket set, but which of those
+//! compiled artifacts are *worth routing into* depends on the run's
+//! `learn_len` distribution: RPC's cut is ~uniform over `[min_cut, T]`, so
+//! for a large `min_cut` the short buckets never fill and every micro-batch
+//! that lands in one is mostly row padding. Static edges are therefore
+//! always wrong for some `min_cut` — this tuner watches the realised
+//! distribution and keeps only the edges that reduce expected allocated
+//! tokens.
+//!
+//! The tuner maintains an exponential moving average of (a) the per-step
+//! `learn_len` histogram and (b) the items-per-step count, and selects the
+//! subset of manifest buckets (always retaining the top bucket — dropping
+//! it would reject long items) that minimises the expected allocated tokens
+//! of a step under the budget packer's cost model: mass routed to an edge
+//! pays `(P + edge)` per row, rounded up through the compiled row grid.
+//!
+//! Routing edges are always a subset of the manifest buckets, so every
+//! tuned choice maps to an existing compiled artifact. The tuner only
+//! *removes* fragmentation, never shapes.
+
+use crate::coordinator::batcher::alloc_rows;
+
+/// EMA histogram of observed `learn_len` plus the edge selector.
+#[derive(Clone, Debug)]
+pub struct BucketTuner {
+    /// EMA of the per-step learn_len frequency, index = learn_len - 1.
+    hist: Vec<f64>,
+    /// EMA of items per optimizer step.
+    items_per_step: f64,
+    /// Blend factor for new observations (0 < alpha <= 1).
+    alpha: f64,
+    /// Steps observed so far (cold-start gate).
+    steps: u64,
+}
+
+/// Observations before the tuner trusts its histogram and starts pruning
+/// edges (cold start routes over the full manifest bucket set).
+const WARMUP_STEPS: u64 = 2;
+
+impl BucketTuner {
+    pub fn new(max_len: usize, alpha: f64) -> BucketTuner {
+        BucketTuner {
+            hist: vec![0.0; max_len.max(1)],
+            items_per_step: 0.0,
+            alpha: alpha.clamp(1e-3, 1.0),
+            steps: 0,
+        }
+    }
+
+    /// Fold one optimizer step's packed `learn_len`s into the EMA state.
+    pub fn observe(&mut self, lens: &[usize]) {
+        if lens.is_empty() {
+            return;
+        }
+        let mut freq = vec![0.0f64; self.hist.len()];
+        for &l in lens {
+            let i = l.clamp(1, self.hist.len()) - 1;
+            freq[i] += 1.0 / lens.len() as f64;
+        }
+        let a = if self.steps == 0 { 1.0 } else { self.alpha };
+        for (h, f) in self.hist.iter_mut().zip(&freq) {
+            *h = (1.0 - a) * *h + a * f;
+        }
+        self.items_per_step =
+            (1.0 - a) * self.items_per_step + a * lens.len() as f64;
+        self.steps += 1;
+    }
+
+    pub fn steps_observed(&self) -> u64 {
+        self.steps
+    }
+
+    /// Expected allocated rows for `n` expected items in one edge: full
+    /// `batch_train` micro-batches plus a tail rounded up in the row grid.
+    fn expected_rows(row_grid: &[usize], n: f64) -> f64 {
+        let bt = *row_grid.last().unwrap() as f64;
+        let full = (n / bt).floor() * bt;
+        let rem = (n - full).ceil() as usize;
+        full + if rem == 0 { 0.0 } else { alloc_rows(row_grid, rem) as f64 }
+    }
+
+    /// The routing-edge subset of `buckets` minimising expected allocated
+    /// tokens per step for the observed distribution. Always contains the
+    /// top bucket; returns the full set during warm-up.
+    ///
+    /// `token_budget` is the packer's per-micro-batch limit (0 = auto, as
+    /// in `pack_budget`): pruning an edge re-routes its mass upward, and a
+    /// subset that would push observed mass into an edge too expensive for
+    /// even a single allocated row under the budget is rejected — the tuner
+    /// must never turn a feasible config into a packing error.
+    pub fn edges(
+        &self,
+        buckets: &[usize],
+        prompt_len: usize,
+        row_grid: &[usize],
+        token_budget: usize,
+    ) -> Vec<usize> {
+        let k = buckets.len();
+        if self.steps < WARMUP_STEPS || k <= 1 || k > 16 || row_grid.is_empty() {
+            return buckets.to_vec();
+        }
+        let top = *buckets.last().unwrap();
+        let max_rows = *row_grid.last().unwrap();
+        let budget =
+            if token_budget == 0 { max_rows * (prompt_len + top) } else { token_budget };
+        let one_row = |e: usize| alloc_rows(row_grid, 1) * (prompt_len + e);
+        let mut best: Option<(f64, Vec<usize>)> = None;
+        // Exhaustive over subsets of the non-top buckets (k <= ~8 in
+        // practice); the top bucket is always an edge.
+        for mask in 0u32..(1 << (k - 1)) {
+            let edges: Vec<usize> = (0..k)
+                .filter(|&i| i == k - 1 || mask & (1 << i) != 0)
+                .map(|i| buckets[i])
+                .collect();
+            // Feasibility is mass-independent (future items can land where
+            // the histogram is empty): any item that fits its own minimal
+            // bucket under the budget must still fit the edge covering it.
+            let covering = |b: usize| edges.iter().copied().find(|&e| e >= b).unwrap_or(top);
+            if buckets.iter().any(|&b| one_row(b) <= budget && one_row(covering(b)) > budget) {
+                continue;
+            }
+            // Expected mass routed to each edge: histogram mass in
+            // (previous edge, edge].
+            let mut cost = 0.0;
+            let mut lo = 0usize; // exclusive lower learn_len bound
+            for &e in &edges {
+                let hi = e.min(self.hist.len());
+                let mass: f64 = self.hist[lo..hi].iter().sum();
+                lo = hi;
+                let n = mass * self.items_per_step;
+                if n > 0.0 {
+                    cost += Self::expected_rows(row_grid, n) * (prompt_len + e) as f64;
+                }
+            }
+            // Mass above the top bucket (clamped observations) pays top.
+            if best.as_ref().map(|(c, _)| cost < *c).unwrap_or(true) {
+                best = Some((cost, edges));
+            }
+        }
+        best.map(|(_, e)| e).unwrap_or_else(|| buckets.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BUCKETS: [usize; 4] = [32, 64, 96, 128];
+    const GRID: [usize; 4] = [1, 2, 4, 8];
+    const P: usize = 48;
+
+    #[test]
+    fn cold_start_routes_over_all_buckets() {
+        let t = BucketTuner::new(128, 0.2);
+        assert_eq!(t.edges(&BUCKETS, P, &GRID, 0), BUCKETS.to_vec());
+        let mut t = t;
+        t.observe(&[10, 20, 30]);
+        assert_eq!(t.edges(&BUCKETS, P, &GRID, 0), BUCKETS.to_vec());
+    }
+
+    #[test]
+    fn high_min_cut_distribution_drops_dead_short_buckets() {
+        // RPC with a large min_cut: learn_len ~ uniform [100, 128]. All
+        // mass lands in the top edge; the dead short buckets are pruned so
+        // no stray micro-batch ever allocates into them.
+        let mut t = BucketTuner::new(128, 0.2);
+        for _ in 0..10 {
+            let lens: Vec<usize> = (0..16).map(|i| 100 + (i * 28) / 15).collect();
+            t.observe(&lens);
+        }
+        assert_eq!(t.edges(&BUCKETS, P, &GRID, 0), vec![128]);
+    }
+
+    #[test]
+    fn merges_thin_mid_bucket_into_neighbour() {
+        // ~2 items/step at learn_len<=64 against 14 at <=128: a 2-row
+        // micro-batch in bucket 64 costs 2×112=224 extra; merging them into
+        // the top bucket's full batches costs 2×176 but saves the
+        // fragment — the tuner decides by expected allocated tokens.
+        let mut t = BucketTuner::new(128, 0.5);
+        for _ in 0..10 {
+            let mut lens = vec![60usize, 62];
+            lens.resize(16, 120);
+            t.observe(&lens);
+        }
+        let edges = t.edges(&BUCKETS, P, &GRID, 0);
+        assert_eq!(*edges.last().unwrap(), 128);
+        assert!(!edges.contains(&32), "{edges:?}");
+    }
+
+    #[test]
+    fn broad_distribution_keeps_multiple_edges() {
+        // learn_len ~ uniform over [1, 128] with plenty of items: every
+        // bucket earns its keep.
+        let mut t = BucketTuner::new(128, 0.3);
+        for s in 0..10 {
+            let lens: Vec<usize> = (0..64).map(|i| 1 + (i * 2 + s) % 128).collect();
+            t.observe(&lens);
+        }
+        let edges = t.edges(&BUCKETS, P, &GRID, 0);
+        assert!(edges.len() >= 3, "{edges:?}");
+        assert_eq!(*edges.last().unwrap(), 128);
+    }
+
+    #[test]
+    fn budget_constraint_blocks_pruning_into_unaffordable_edges() {
+        // one_row: 32→80, 64→112, 96→144, 128→176. Budget 150 affords a
+        // single row of every bucket except the top, so edge 96 must
+        // survive pruning no matter what the histogram says — dropping it
+        // would re-route bucket-96 items into an unpackable 128-row.
+        let mut t = BucketTuner::new(128, 0.3);
+        for _ in 0..10 {
+            t.observe(&[90; 16]);
+        }
+        let edges = t.edges(&BUCKETS, P, &GRID, 150);
+        assert!(edges.contains(&96), "{edges:?}");
+        // unconstrained, the same history keeps only the mass-bearing edge
+        let free = t.edges(&BUCKETS, P, &GRID, 0);
+        assert_eq!(free, vec![96, 128]);
+    }
+
+    #[test]
+    fn expected_rows_rounds_through_grid() {
+        assert_eq!(BucketTuner::expected_rows(&GRID, 3.2), 4.0);
+        assert_eq!(BucketTuner::expected_rows(&GRID, 8.0), 8.0);
+        assert_eq!(BucketTuner::expected_rows(&GRID, 11.0), 8.0 + 4.0);
+        assert_eq!(BucketTuner::expected_rows(&GRID, 0.0), 0.0);
+    }
+}

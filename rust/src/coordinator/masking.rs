@@ -3,10 +3,10 @@
 //! Given a response of true length `t_i`, each strategy produces a
 //! Horvitz-Thompson weight vector `w_t = m_t / p_t` (zero where the token is
 //! excluded) plus the *learner length*: the forward prefix the gradient
-//! computation actually needs. The learner length is what the bucketed
-//! batcher routes on — it is exactly the mechanism by which RPC converts
-//! statistical masking into real forward/backward savings while URS cannot
-//! (causal attention still needs the full prefix).
+//! computation actually needs — the causal prefix up to the last scored
+//! token. The learner length is what the bucketed batcher routes on: RPC's
+//! prefix cuts shorten it deterministically, while URS/Saliency only save
+//! whatever tail their Bernoulli draws happen to leave unscored.
 
 use crate::config::Method;
 use crate::util::rng::Rng;
@@ -68,16 +68,22 @@ pub fn sample_ctx(
             let w = (1.0 / p) as f32;
             let mut ht_w = vec![0.0f32; t_i];
             let mut kept = 0;
-            for slot in ht_w.iter_mut() {
+            let mut last_kept = 0usize;
+            for (t, slot) in ht_w.iter_mut().enumerate() {
                 if rng.bernoulli(p) {
                     *slot = w;
                     kept += 1;
+                    last_kept = t + 1;
                 }
             }
-            // URS gains no forward savings: the causal prefix up to the last
-            // *scored* token is still required; conservatively the full t_i
-            // (matches the paper's "URS retains near-full forward cost").
-            MaskSample { ht_w, kept, learn_len: t_i }
+            // Causal attention only needs the prefix up to the last *scored*
+            // token: positions past it contribute nothing to the update, so
+            // the forward may stop there (floor 1 so empty draws still
+            // produce a valid artifact shape). In expectation this is close
+            // to t_i for moderate p — URS keeps near-full forward cost, as
+            // the paper notes — but the realised tail savings are real and
+            // let short draws land in smaller buckets.
+            MaskSample { ht_w, kept, learn_len: last_kept.max(1) }
         }
         Method::DetTrunc { frac } => {
             let k = ((frac * t_i as f64).floor() as usize).clamp(1, t_i);
@@ -105,14 +111,17 @@ pub fn sample_ctx(
             debug_assert_eq!(p.len(), t_i);
             let mut ht_w = vec![0.0f32; t_i];
             let mut kept = 0;
-            for (slot, &pt) in ht_w.iter_mut().zip(&p) {
+            let mut last_kept = 0usize;
+            for (t, (slot, &pt)) in ht_w.iter_mut().zip(&p).enumerate() {
                 if rng.bernoulli(pt as f64) {
                     *slot = 1.0 / pt;
                     kept += 1;
+                    last_kept = t + 1;
                 }
             }
-            // independent masking: no forward savings (same as URS)
-            MaskSample { ht_w, kept, learn_len: t_i }
+            // independent masking: forward only up to the last scored token
+            // (same realised-tail savings as URS; floor 1 for empty draws)
+            MaskSample { ht_w, kept, learn_len: last_kept.max(1) }
         }
     }
 }
@@ -167,14 +176,36 @@ mod tests {
     }
 
     #[test]
-    fn urs_weight_is_inverse_p_and_full_learn_len() {
+    fn urs_weight_is_inverse_p_and_learn_len_stops_at_last_kept() {
         let mut rng = Rng::new(1);
         let s = sample(&Method::Urs { p: 0.25 }, 200, &mut rng);
-        assert_eq!(s.learn_len, 200);
+        // forward prefix ends at the last scored token (floor 1)
+        let last_kept = s.ht_w.iter().rposition(|&w| w > 0.0).map(|t| t + 1).unwrap_or(0);
+        assert_eq!(s.learn_len, last_kept.max(1));
+        assert!(s.learn_len <= 200);
         for &w in &s.ht_w {
             assert!(w == 0.0 || (w - 4.0).abs() < 1e-6);
         }
         assert_eq!(s.kept, s.ht_w.iter().filter(|&&w| w > 0.0).count());
+    }
+
+    #[test]
+    fn urs_and_saliency_learn_len_covers_every_scored_token() {
+        let mut rng = Rng::new(42);
+        let old_lp: Vec<f32> = (0..64).map(|t| -0.1 - 0.05 * (t % 9) as f32).collect();
+        for _ in 0..500 {
+            for method in [Method::Urs { p: 0.3 }, Method::Saliency { floor: 0.25 }] {
+                let s = sample_ctx(&method, 64, Some(&old_lp), &mut rng);
+                assert!(s.learn_len >= 1 && s.learn_len <= 64);
+                // no scored token may lie beyond the forward prefix...
+                assert!(s.ht_w[s.learn_len..].iter().all(|&w| w == 0.0));
+                // ...and the prefix is tight: its last position is scored
+                // (unless the draw kept nothing and the floor kicked in).
+                if s.kept > 0 {
+                    assert!(s.ht_w[s.learn_len - 1] > 0.0);
+                }
+            }
+        }
     }
 
     #[test]
@@ -317,7 +348,7 @@ mod tests {
         for _ in 0..n {
             let s = sample_ctx(&method, 40, Some(&old_lp), &mut rng);
             acc += s.ht_w.iter().map(|&w| w as f64).sum::<f64>();
-            assert_eq!(s.learn_len, 40); // no forward savings
+            assert!(s.learn_len >= 1 && s.learn_len <= 40);
         }
         let mean = acc / n as f64;
         assert!((mean - 40.0).abs() < 0.3, "{mean}");

@@ -4,7 +4,9 @@
 //!                   Horvitz-Thompson weights: the core algorithm.
 //! * [`advantage`] — group-relative advantages (GRPO Eq. 2).
 //! * [`rollout`]   — grouped sampling through the AOT generate artifact.
-//! * [`batcher`]   — length-bucketed micro-batching (RPC's compute savings).
+//! * [`batcher`]   — 2-D (length × rows) bucketed micro-batching with a
+//!                   token-budget packer (RPC's compute savings).
+//! * [`bucket_tuner`] — EMA auto-tuning of sequence-bucket routing edges.
 //! * [`trainer`]   — the NAT×GRPO optimizer loop with paper-aligned metrics.
 //! * [`pipeline`]  — async pipelined rollout/learner orchestration with
 //!                   bounded staleness (the serial loop, overlapped).
@@ -12,6 +14,7 @@
 //! * [`evaluator`] — Acc@k / pass@k benchmark evaluation.
 pub mod advantage;
 pub mod batcher;
+pub mod bucket_tuner;
 pub mod evaluator;
 pub mod masking;
 pub mod pipeline;

@@ -44,8 +44,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::config::RunConfig;
+use crate::coordinator::bucket_tuner::BucketTuner;
 use crate::coordinator::trainer::{
-    learn_stage, mask_rng, maybe_checkpoint, plan_step, post_step, record_step,
+    learn_stage, make_tuner, mask_rng, maybe_checkpoint, plan_step, post_step, record_step,
     rollout_stage, RolloutGroup,
 };
 use crate::metrics::Recorder;
@@ -62,6 +63,7 @@ pub struct PipelineTrainer<'rt> {
     pub opt: OptState,
     pub recorder: Recorder,
     acc: GradAccum,
+    tuner: Option<BucketTuner>,
     step: u64,
 }
 
@@ -79,6 +81,7 @@ impl<'rt> PipelineTrainer<'rt> {
             opt,
             recorder: Recorder::new(),
             acc: GradAccum::zeros(rt.manifest.param_count),
+            tuner: make_tuner(rt, &cfg),
             cfg,
             step: 0,
         }
@@ -131,6 +134,7 @@ impl<'rt> PipelineTrainer<'rt> {
             opt: &'s mut OptState,
             acc: &'s mut GradAccum,
             recorder: &'s mut Recorder,
+            tuner: &'s mut Option<BucketTuner>,
             step: &'s mut u64,
             last_apply: Instant,
             /// Stats of the step consumed but not yet post-processed.
@@ -141,6 +145,7 @@ impl<'rt> PipelineTrainer<'rt> {
             opt: &mut self.opt,
             acc: &mut self.acc,
             recorder: &mut self.recorder,
+            tuner: &mut self.tuner,
             step: &mut self.step,
             last_apply: Instant::now(),
             pending: None,
@@ -161,6 +166,7 @@ impl<'rt> PipelineTrainer<'rt> {
                 st.params,
                 st.opt,
                 st.acc,
+                st.tuner.as_mut(),
                 &mut rng_mask,
                 meta.step + 1,
                 &group.seqs,

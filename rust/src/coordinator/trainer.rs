@@ -3,8 +3,9 @@
 //!
 //! One optimizer step:
 //!   rollout (G completions per prompt) → verify rewards → group-relative
-//!   advantages → NAT mask sampling + HT weights → bucketed micro-batching
-//!   → per-bucket grad artifacts with host-side accumulation → AdamW apply.
+//!   advantages → NAT mask sampling + HT weights → micro-batching (fixed
+//!   or token-budget packer; see `--train.packer`) → per-(bucket, rows)
+//!   grad artifacts with host-side accumulation → AdamW apply.
 //!
 //! The step is split into two reusable stage functions so the serial
 //! [`Trainer`] and the pipelined trainer (`coordinator::pipeline`) share one
@@ -26,8 +27,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::RunConfig;
-use crate::coordinator::batcher::{micro_shapes, pack, LearnItem};
+use crate::config::{Packer, RunConfig};
+use crate::coordinator::batcher::{
+    allocated_tokens, ideal_tokens, micro_shapes, pack, pack_budget, split_zero_contribution,
+    LearnItem, MicroBatch,
+};
+use crate::coordinator::bucket_tuner::BucketTuner;
 use crate::coordinator::rollout::RolloutSeq;
 use crate::coordinator::{advantage, masking, rollout};
 use crate::metrics::Recorder;
@@ -49,6 +54,9 @@ pub struct StepStats {
     /// Fraction of response tokens selected for the update (Fig. 3).
     pub selected_ratio: f64,
     pub resp_len_mean: f64,
+    /// Fraction of allocated learner tokens that were padding (bucket slack
+    /// + inert rows). The budget packer exists to push this down.
+    pub padding_waste: f64,
     /// Analytic mean allocated learner memory (Table 3 / Fig. 6 headline).
     pub mem_gb: f64,
     /// Analytic strict peak (largest single micro-batch).
@@ -150,6 +158,7 @@ pub fn learn_stage(
     params: &mut ParamStore,
     opt: &mut OptState,
     acc: &mut GradAccum,
+    mut tuner: Option<&mut BucketTuner>,
     rng_mask: &mut Rng,
     step1: u64,
     seqs: &[RolloutSeq],
@@ -160,10 +169,24 @@ pub fn learn_stage(
     let rewards: Vec<f32> = seqs.iter().map(|s| s.reward).collect();
     let advs = advantage::grouped_advantages(&rewards, g);
 
+    // Budget-packer routing state for this step. The tuned edges are a
+    // function of PREVIOUS steps' observations only, so the step stays a
+    // pure function of (params, group, tuner-state-in).
+    let budget = cfg.train.packer == Packer::Budget;
+    let row_grid = rt.manifest.row_grid();
+    let edges: Vec<usize> = match tuner.as_deref() {
+        Some(t) if budget => {
+            t.edges(&d.buckets, d.prompt_len, &row_grid, cfg.train.token_budget)
+        }
+        _ => d.buckets.clone(),
+    };
+
     let mut metrics = GradMetrics::default();
     let mut grad_norm = 0.0;
     let mut sel_tokens = 0usize;
     let mut tot_tokens = 0usize;
+    let mut alloc_toks = 0usize;
+    let mut ideal_toks = 0usize;
     let mut all_shapes: Vec<(usize, usize)> = Vec::new();
     let mut n_micro = 0usize;
     for _epoch in 0..cfg.rl.ppo_epochs {
@@ -187,16 +210,46 @@ pub fn learn_stage(
                 old_lp: seq.old_lp.clone(),
             });
         }
-        let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
-        acc.reset();
-        // §Perf opt-2: parameters are immutable within the epoch; build
-        // the literals once and share across every bucket micro-batch.
-        let param_lits = params.to_literals(&rt.manifest)?;
-        for mb in &mbs {
-            let m = rt.grad_cached(mb, &param_lits, acc)?;
-            metrics.add(&m);
+        // Zero-contribution rows (no kept token / zero advantage) burn a
+        // full forward for exactly nothing — drop them before packing.
+        // `selected_ratio`/`resp_len_mean` above counted the full
+        // population, and the dropped rows are restored into the apply
+        // scale below, so the applied gradient and reward/selection series
+        // match the unfiltered step exactly. Diagnostic token means
+        // (entropy/clip_frac/kl) narrow to gradient-contributing tokens:
+        // dropped kept==0 rows never had metric mass, and dropping
+        // zero-variance-group rows is DAPO-style dynamic-sampling
+        // semantics (documented in README). The fixed packer keeps the
+        // pre-budget-packer path bit-for-bit, inert rows included.
+        let (items, dropped) = if budget {
+            split_zero_contribution(items)
+        } else {
+            (items, 0)
+        };
+        if let Some(t) = tuner.as_deref_mut() {
+            let lens: Vec<usize> = items.iter().map(|i| i.learn_len).collect();
+            t.observe(&lens);
         }
-        drop(param_lits);
+        let mbs: Vec<MicroBatch> = if budget {
+            pack_budget(&items, &edges, d.prompt_len, &row_grid, cfg.train.token_budget)?
+        } else {
+            pack(&items, &d.buckets, d.prompt_len, d.batch_train)?
+        };
+        alloc_toks += allocated_tokens(&mbs, d.prompt_len);
+        ideal_toks += ideal_tokens(&items, d.prompt_len);
+        acc.reset();
+        // Dropped inert rows still count toward the 1/sequences apply
+        // scale: they contributed zero gradient but a real denominator row.
+        acc.sequences += dropped;
+        if !mbs.is_empty() {
+            // §Perf opt-2: parameters are immutable within the epoch; build
+            // the literals once and share across every bucket micro-batch.
+            let param_lits = params.to_literals(&rt.manifest)?;
+            for mb in &mbs {
+                let m = rt.grad_cached(mb, &param_lits, acc)?;
+                metrics.add(&m);
+            }
+        }
         grad_norm = rt.apply(params, opt, acc)?;
         all_shapes.extend(micro_shapes(&mbs, d.prompt_len));
         n_micro += mbs.len();
@@ -220,6 +273,11 @@ pub fn learn_stage(
             0.0
         },
         resp_len_mean: tot_tokens as f64 / (seqs.len() * cfg.rl.ppo_epochs) as f64,
+        padding_waste: if alloc_toks > 0 {
+            1.0 - ideal_toks as f64 / alloc_toks as f64
+        } else {
+            0.0
+        },
         mem_gb,
         peak_mem_gb,
         t_learn_s: t_learn,
@@ -238,6 +296,7 @@ pub fn record_step(r: &mut Recorder, s: &StepStats, t_rollout_s: f64) {
     r.push("grad_norm", s.step, s.grad_norm);
     r.push("selected_ratio", s.step, s.selected_ratio);
     r.push("resp_len", s.step, s.resp_len_mean);
+    r.push("padding_waste", s.step, s.padding_waste);
     r.push("mem_gb", s.step, s.mem_gb);
     r.push("peak_mem_gb", s.step, s.peak_mem_gb);
     r.push("t_learn_s", s.step, s.t_learn_s);
@@ -331,7 +390,18 @@ pub struct Trainer<'rt> {
     pub opt: OptState,
     pub recorder: Recorder,
     acc: GradAccum,
+    tuner: Option<BucketTuner>,
     step: u64,
+}
+
+/// EMA blend factor for the optional bucket auto-tuner.
+pub(crate) const TUNER_ALPHA: f64 = 0.2;
+
+/// Build the learn-len auto-tuner when the config asks for it (budget
+/// packer only: the fixed packer is the bit-exact compatibility path).
+pub(crate) fn make_tuner(rt: &Runtime, cfg: &RunConfig) -> Option<BucketTuner> {
+    (cfg.train.auto_buckets && cfg.train.packer == Packer::Budget)
+        .then(|| BucketTuner::new(rt.manifest.dims.max_resp, TUNER_ALPHA))
 }
 
 impl<'rt> Trainer<'rt> {
@@ -348,6 +418,7 @@ impl<'rt> Trainer<'rt> {
             opt,
             recorder: Recorder::new(),
             acc: GradAccum::zeros(rt.manifest.param_count),
+            tuner: make_tuner(rt, &cfg),
             cfg,
             step: 0,
         }
@@ -376,6 +447,7 @@ impl<'rt> Trainer<'rt> {
             &mut self.params,
             &mut self.opt,
             &mut self.acc,
+            self.tuner.as_mut(),
             &mut plan.rng_mask,
             self.step + 1,
             &group.seqs,

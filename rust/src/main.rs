@@ -57,7 +57,15 @@ fn print_help() {
            --pipeline.queue_depth Q   bounded rollout-group queue (default 2)\n\
            --pipeline.max_staleness S max optimizer-step lag per group (default 1)\n\
            --rl.ckpt_every N          write a resumable checkpoint every N steps\n\
-           --resume path.bin          continue a mid-run checkpoint exactly"
+           --resume path.bin          continue a mid-run checkpoint exactly\n\n\
+         PACKING (train):\n\
+           --train.packer P           budget (default) = token-budget packing in\n\
+                                      the 2-D (bucket x rows) artifact grid;\n\
+                                      fixed = legacy full-row micro-batches\n\
+           --train.token_budget B     max rows*(P+bucket) tokens per micro-batch\n\
+                                      (0 = auto: batch_train*(P+top bucket))\n\
+           --train.auto_buckets true  EMA-tune bucket routing edges to the\n\
+                                      observed learn_len distribution"
     );
 }
 

@@ -47,8 +47,14 @@ pub struct Manifest {
     pub generate_full_file: Option<String>,
     pub apply_file: String,
     pub pretrain_file: String,
-    /// (bucket, filename), ascending by bucket.
+    /// (bucket, filename), ascending by bucket. Full-row (`batch_train`)
+    /// grad artifacts — the fixed packer's (and legacy manifests') grid.
     pub grad_files: Vec<(usize, String)>,
+    /// ((bucket, rows), filename): the 2-D grad-artifact grid the
+    /// token-budget packer routes into. Rows are the compiled batch
+    /// dimensions below `batch_train` (e.g. {1, 2, 4}); absent in legacy
+    /// manifests, where only full-row micro-batches can execute.
+    pub grad_row_files: Vec<((usize, usize), String)>,
     pub score_files: Vec<(usize, String)>,
     /// Scorer variant whose forward runs the L1 Pallas flash-attention
     /// kernel (integration proof; may be absent in older artifact sets).
@@ -158,6 +164,26 @@ impl Manifest {
         if grad_files.iter().map(|(b, _)| *b).collect::<Vec<_>>() != buckets {
             bail!("grad buckets do not match config buckets");
         }
+        // Optional 2-D grid: {"<bucket>x<rows>": file}. Every key must name
+        // a real sequence bucket and a batch dimension <= batch_train.
+        let mut grad_row_files: Vec<((usize, usize), String)> = Vec::new();
+        if let Some(obj) = arts.get("grad_rows").and_then(Json::as_obj) {
+            for (key, f) in obj {
+                let (b, r) = key
+                    .split_once('x')
+                    .and_then(|(b, r)| Some((b.parse::<usize>().ok()?, r.parse::<usize>().ok()?)))
+                    .ok_or_else(|| anyhow!("bad grad_rows key '{key}' (want '<bucket>x<rows>')"))?;
+                if !buckets.contains(&b) {
+                    bail!("grad_rows bucket {b} is not a config bucket {buckets:?}");
+                }
+                if r == 0 || r > dims.batch_train {
+                    bail!("grad_rows rows {r} outside 1..={}", dims.batch_train);
+                }
+                let file = f.as_str().ok_or_else(|| anyhow!("bad grad_rows file"))?;
+                grad_row_files.push(((b, r), file.to_string()));
+            }
+            grad_row_files.sort();
+        }
         Ok(Manifest {
             dir: dir.to_path_buf(),
             dims,
@@ -171,6 +197,7 @@ impl Manifest {
             apply_file: file("apply")?,
             pretrain_file: file("pretrain")?,
             grad_files,
+            grad_row_files,
             score_files: bucket_map("score")?,
             score_pallas_files: bucket_map("score_pallas").unwrap_or_default(),
         })
@@ -184,6 +211,49 @@ impl Manifest {
             }
         }
         *self.dims.buckets.last().unwrap()
+    }
+
+    /// The row-count grid compiled grad artifacts exist for: every batch
+    /// dimension available for ALL sequence buckets, plus `batch_train`
+    /// (ascending). Legacy manifests yield `[batch_train]`, so the budget
+    /// packer still works — it just cannot shrink rows.
+    pub fn row_grid(&self) -> Vec<usize> {
+        let mut grid: Vec<usize> = Vec::new();
+        let rows: std::collections::BTreeSet<usize> =
+            self.grad_row_files.iter().map(|&((_, r), _)| r).collect();
+        for r in rows {
+            if self
+                .dims
+                .buckets
+                .iter()
+                .all(|&b| self.grad_row_files.iter().any(|&((bb, rr), _)| bb == b && rr == r))
+            {
+                grid.push(r);
+            }
+        }
+        if grid.last() != Some(&self.dims.batch_train) {
+            grid.push(self.dims.batch_train);
+        }
+        grid
+    }
+
+    /// Grad artifact for a (sequence bucket, rows) micro-batch shape.
+    pub fn grad_file_for(&self, bucket: usize, rows: usize) -> Result<&str> {
+        if rows == self.dims.batch_train {
+            if let Some((_, f)) = self.grad_files.iter().find(|(b, _)| *b == bucket) {
+                return Ok(f);
+            }
+        }
+        self.grad_row_files
+            .iter()
+            .find(|&&((b, r), _)| b == bucket && r == rows)
+            .map(|(_, f)| f.as_str())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no grad artifact for bucket {bucket} × rows {rows}; rebuild \
+                     artifacts (make artifacts) or run with --train.packer fixed"
+                )
+            })
     }
 
     pub fn seq_total(&self) -> usize {
@@ -221,6 +291,60 @@ mod tests {
         assert_eq!(m.grad_files, vec![(4, "g4.txt".into()), (8, "g8.txt".into())]);
         assert_eq!(m.dims.buckets, vec![4, 8]);
         assert_eq!(m.seq_total(), 12);
+        // legacy manifest: no grad_rows → only full-row micro-batches
+        assert!(m.grad_row_files.is_empty());
+        assert_eq!(m.row_grid(), vec![2]);
+        assert_eq!(m.grad_file_for(4, 2).unwrap(), "g4.txt");
+        assert!(m.grad_file_for(4, 1).is_err());
+    }
+
+    fn grid_manifest_json() -> String {
+        toy_manifest_json().replace(
+            r#""grad":{"4":"g4.txt","8":"g8.txt"}"#,
+            r#""grad":{"4":"g4.txt","8":"g8.txt"},
+               "grad_rows":{"4x1":"g4b1.txt","8x1":"g8b1.txt"}"#,
+        )
+    }
+
+    #[test]
+    fn parses_grad_row_grid() {
+        let j = Json::parse(&grid_manifest_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert_eq!(m.row_grid(), vec![1, 2]);
+        assert_eq!(m.grad_file_for(8, 1).unwrap(), "g8b1.txt");
+        assert_eq!(m.grad_file_for(8, 2).unwrap(), "g8.txt");
+        assert!(m.grad_file_for(8, 3).is_err());
+    }
+
+    #[test]
+    fn row_grid_requires_every_bucket() {
+        // rows=1 exists only for bucket 4 → not a usable grid entry.
+        let partial = toy_manifest_json().replace(
+            r#""grad":{"4":"g4.txt","8":"g8.txt"}"#,
+            r#""grad":{"4":"g4.txt","8":"g8.txt"},
+               "grad_rows":{"4x1":"g4b1.txt"}"#,
+        );
+        let j = Json::parse(&partial).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert_eq!(m.row_grid(), vec![2]);
+        // but a direct (bucket, rows) lookup still finds the artifact
+        assert_eq!(m.grad_file_for(4, 1).unwrap(), "g4b1.txt");
+    }
+
+    #[test]
+    fn rejects_bad_grad_rows() {
+        for (from, to) in [
+            // rows beyond batch_train
+            (r#""4x1":"g4b1.txt""#, r#""4x3":"g4b1.txt""#),
+            // bucket not in config
+            (r#""4x1":"g4b1.txt""#, r#""5x1":"g4b1.txt""#),
+            // malformed key
+            (r#""4x1":"g4b1.txt""#, r#""4-1":"g4b1.txt""#),
+        ] {
+            let bad = grid_manifest_json().replace(from, to);
+            let j = Json::parse(&bad).unwrap();
+            assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err(), "{to}");
+        }
     }
 
     #[test]

@@ -171,6 +171,21 @@ mod tests {
     }
 
     #[test]
+    fn row_grid_shapes_cut_residency_vs_full_rows() {
+        // The budget packer's micro-batches carry their allocated row count,
+        // so a 2-row tail costs 1/4 of a full 8-row batch in activations —
+        // the (rows, seq) dimension the fixed packer always maxed out.
+        let d = dims();
+        let pc = 820_352;
+        let fixed = step_mean_bytes(&d, pc, &[(8, 80), (8, 112), (8, 144), (8, 176)]);
+        let budget = step_mean_bytes(&d, pc, &[(4, 80), (2, 112), (2, 144), (4, 176)]);
+        assert!(budget < fixed, "{budget} !< {fixed}");
+        assert!(
+            step_peak_bytes(&d, pc, &[(4, 176)]) < step_peak_bytes(&d, pc, &[(8, 176)])
+        );
+    }
+
+    #[test]
     fn empty_step_has_static_floor() {
         let d = dims();
         assert_eq!(step_peak_bytes(&d, 100, &[]), static_bytes(100));

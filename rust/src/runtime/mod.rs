@@ -99,6 +99,15 @@ impl Runtime {
                 self.exe(f)?;
             }
         }
+        // Row-grid variants of the same buckets: only the cells the budget
+        // packer can actually route into (rows in the usable grid — rows
+        // compiled for some buckets but not all are never allocated).
+        let grid = self.manifest.row_grid();
+        for &((b, r), ref f) in &self.manifest.grad_row_files.clone() {
+            if grad_buckets.contains(&b) && grid.contains(&r) {
+                self.exe(f)?;
+            }
+        }
         Ok(())
     }
 
@@ -199,14 +208,11 @@ impl Runtime {
         acc: &mut GradAccum,
     ) -> Result<GradMetrics> {
         let d = &self.manifest.dims;
-        let (b, p, t) = (d.batch_train, d.prompt_len, mb.bucket);
-        let file = self
-            .manifest
-            .grad_files
-            .iter()
-            .find(|(bk, _)| *bk == t)
-            .map(|(_, f)| f.clone())
-            .with_context(|| format!("no grad artifact for bucket {t}"))?;
+        // The micro-batch addresses one cell of the 2-D (bucket × rows)
+        // artifact grid; the fixed packer always produces rows ==
+        // batch_train, which maps to the legacy full-row artifacts.
+        let (b, p, t) = (mb.rows, d.prompt_len, mb.bucket);
+        let file = self.manifest.grad_file_for(t, b)?.to_string();
         let s = (p + t) as i64;
         let batch_lits = [
             xla::Literal::vec1(&mb.tokens).reshape(&[b as i64, s])?,

@@ -5,8 +5,11 @@
 
 use nat_rl::config::Method;
 use nat_rl::coordinator::advantage::grouped_advantages;
-use nat_rl::coordinator::batcher::{micro_shapes, pack, LearnItem};
+use nat_rl::coordinator::batcher::{
+    allocated_tokens, micro_shapes, pack, pack_budget, split_zero_contribution, LearnItem,
+};
 use nat_rl::coordinator::masking;
+use nat_rl::coordinator::masking::rpc_survival;
 use nat_rl::coordinator::rollout::{encode_prompt, trim_at_eos};
 use nat_rl::tasks::render::render_cot;
 use nat_rl::tasks::verify::reward_text;
@@ -68,7 +71,7 @@ fn full_host_path_produces_consistent_micro_batches() {
     for (it, &a) in items.iter_mut().zip(&advs) {
         it.adv = a;
     }
-    let mbs = pack(&items, &BUCKETS, P, 8);
+    let mbs = pack(&items, &BUCKETS, P, 8).unwrap();
     // every real row accounted for exactly once
     let total: usize = mbs.iter().map(|m| m.real_rows).sum();
     assert_eq!(total, items.len());
@@ -127,7 +130,7 @@ fn rpc_routes_to_strictly_more_buckets_than_grpo() {
     }
     let distinct = |items: &[LearnItem]| {
         let mut b: Vec<usize> =
-            pack(items, &BUCKETS, P, 8).iter().map(|m| m.bucket).collect();
+            pack(items, &BUCKETS, P, 8).unwrap().iter().map(|m| m.bucket).collect();
         b.sort();
         b.dedup();
         b
@@ -140,6 +143,123 @@ fn rpc_routes_to_strictly_more_buckets_than_grpo() {
     let min_rpc = *rpc_buckets.first().unwrap();
     let min_grpo = *grpo_buckets.first().unwrap();
     assert!(min_rpc <= min_grpo);
+}
+
+/// Monte-Carlo: per-token HT inclusion expectations must SURVIVE packing —
+/// reading the weights back out of budget-packed tensors reproduces the RPC
+/// survival function, so the packed layout feeds the grad artifact exactly
+/// the estimator the masking theory analysed.
+#[test]
+fn rpc_inclusion_expectations_survive_budget_packing() {
+    const GRID: [usize; 4] = [1, 2, 4, 8];
+    let (t_i, c, draws) = (100usize, 8usize, 4000usize);
+    let mut rng = Rng::new(17);
+    let mut counts = vec![0u32; t_i];
+    let mut wsum = vec![0.0f64; t_i];
+    for _ in 0..draws {
+        // a group of 8 rows, one of which is the tracked length-t_i item
+        let items: Vec<LearnItem> = (0..8)
+            .map(|j| {
+                let resp_len = if j == 0 { t_i } else { 1 + rng.below(T_MAX as u64) as usize };
+                let m = masking::sample(&Method::Rpc { min_cut: c }, resp_len, &mut rng);
+                LearnItem {
+                    tokens: vec![7; P + T_MAX],
+                    pad_len: 3,
+                    resp_len,
+                    ht_w: m.ht_w,
+                    learn_len: m.learn_len,
+                    adv: if j == 0 { 9.0 } else { 0.5 },
+                    old_lp: vec![-1.0; resp_len],
+                }
+            })
+            .collect();
+        let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+        // find the tracked row (unique adv marker) in the packed tensors
+        let mut found = false;
+        for mb in &mbs {
+            for r in 0..mb.real_rows {
+                if (mb.adv[r] - 9.0).abs() < 1e-6 {
+                    assert!(!found, "tracked row packed twice");
+                    found = true;
+                    let row = &mb.ht_w[r * mb.bucket..(r + 1) * mb.bucket];
+                    for (t, &w) in row.iter().enumerate() {
+                        if w > 0.0 {
+                            counts[t] += 1;
+                            wsum[t] += w as f64;
+                        }
+                    }
+                    // nothing beyond the bucket exists to read: positions
+                    // >= bucket were never selected (hard-error guarantee)
+                    assert!(mb.bucket >= items[0].learn_len);
+                }
+            }
+        }
+        assert!(found, "tracked row lost in packing");
+    }
+    let p = rpc_survival(t_i, c);
+    for t in 0..t_i {
+        let hat = counts[t] as f64 / draws as f64;
+        assert!((hat - p[t] as f64).abs() < 0.05, "t={t}: {hat} vs {}", p[t]);
+        // HT identity: E[m_t * w_t] == 1. Var[m w] = 1/p - 1 explodes at
+        // the tail, so assert only where inclusion is common (>= 6 sigma
+        // of MC headroom at these draw counts).
+        if p[t] >= 0.5 {
+            let mean_w = wsum[t] / draws as f64;
+            assert!((mean_w - 1.0).abs() < 0.1, "t={t}: E[m w] = {mean_w}");
+        }
+    }
+}
+
+/// Zero-contribution rows (kept == 0 or adv == 0) may be dropped before
+/// packing without changing anything the optimizer sees: the packed
+/// gradient mass is identical, the apply scale denominator is restored by
+/// the caller, and the pre-filter population still backs the
+/// selected_ratio / resp_len accounting.
+#[test]
+fn zero_contribution_filter_preserves_step_semantics() {
+    let g = 8;
+    let (mut items, rewards) = fake_rollouts(6, g, 11);
+    let advs = grouped_advantages(&rewards, g);
+    for (it, &a) in items.iter_mut().zip(&advs) {
+        it.adv = a;
+    }
+    // force some all-miss rows on top of the zero-variance groups
+    for it in items.iter_mut().step_by(7) {
+        it.ht_w = vec![0.0; it.resp_len];
+    }
+    let n = items.len();
+    // gradient-relevant mass of a packed set: sum over rows/tokens of
+    // ht_w * adv * inv_len * old_lp-weighted terms; any per-token linear
+    // functional works — use ht_w * adv and ht_w * adv * old_lp.
+    let mass = |mbs: &[nat_rl::coordinator::batcher::MicroBatch]| -> (f64, f64) {
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        for mb in mbs {
+            for r in 0..mb.rows {
+                for t in 0..mb.bucket {
+                    let w = mb.ht_w[r * mb.bucket + t] as f64 * mb.adv[r] as f64;
+                    m1 += w;
+                    m2 += w * mb.old_lp[r * mb.bucket + t] as f64;
+                }
+            }
+        }
+        (m1, m2)
+    };
+    const GRID: [usize; 4] = [1, 2, 4, 8];
+    let unfiltered = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+    let (kept, dropped) = split_zero_contribution(items.clone());
+    let filtered = pack_budget(&kept, &BUCKETS, P, &GRID, 0).unwrap();
+    // the apply scale denominator is fully restored
+    let packed_rows: usize = filtered.iter().map(|m| m.real_rows).sum();
+    assert_eq!(packed_rows + dropped, n);
+    assert!(dropped > 0, "test should exercise the filter");
+    // identical gradient-relevant content
+    let (a1, a2) = mass(&unfiltered);
+    let (b1, b2) = mass(&filtered);
+    assert!((a1 - b1).abs() < 1e-6, "{a1} vs {b1}");
+    assert!((a2 - b2).abs() < 1e-6, "{a2} vs {b2}");
+    // and strictly less compute burnt
+    assert!(allocated_tokens(&filtered, P) < allocated_tokens(&unfiltered, P));
 }
 
 #[test]

@@ -6,7 +6,9 @@
 
 use nat_rl::config::Method;
 use nat_rl::coordinator::advantage::group_advantages;
-use nat_rl::coordinator::batcher::{pack, LearnItem};
+use nat_rl::coordinator::batcher::{
+    alloc_rows, allocated_tokens, ideal_tokens, pack, pack_budget, LearnItem,
+};
 use nat_rl::coordinator::masking::{expected_ratio, rpc_survival, sample};
 use nat_rl::coordinator::rollout::trim_at_eos;
 use nat_rl::stats::MeanCi;
@@ -146,11 +148,12 @@ fn prop_batcher_conserves_rows_and_never_underruns_learn_len() {
             })
             .collect();
         let batch = 1 + rng.below(8) as usize;
-        let mbs = pack(&items, &buckets, p, batch);
+        let mbs = pack(&items, &buckets, p, batch).unwrap();
         let total: usize = mbs.iter().map(|m| m.real_rows).sum();
         assert_eq!(total, n, "case {case}");
         for mb in &mbs {
             assert!(mb.real_rows <= batch, "case {case}");
+            assert_eq!(mb.rows, batch, "case {case}: fixed packer allocates full rows");
             assert!(buckets.contains(&mb.bucket), "case {case}");
         }
         // every item's bucket >= its learn_len (no truncation of selected tokens)
@@ -158,6 +161,106 @@ fn prop_batcher_conserves_rows_and_never_underruns_learn_len() {
             let b = buckets.iter().find(|&&b| b >= item.learn_len);
             assert!(b.is_some(), "case {case}");
         }
+    });
+}
+
+/// The budget packer is a pure RE-LAYOUT: for any bucket set, row grid and
+/// token budget, every item's tensors must reappear exactly once in the
+/// packed micro-batches, bit-for-bit, with only inert padding added.
+#[test]
+fn prop_budget_packing_is_a_lossless_relayout() {
+    const P: usize = 32;
+    const T: usize = 128;
+    let bucket_sets: [&[usize]; 4] =
+        [&[128], &[64, 128], &[32, 64, 96, 128], &[16, 48, 128]];
+    let row_grids: [&[usize]; 4] = [&[8], &[1, 8], &[1, 2, 4, 8], &[2, 4, 6]];
+    let budgets = [0usize, 512, 1024, 4096];
+    for_cases(150, |case, rng| {
+        let n = 1 + rng.below(40) as usize;
+        let items: Vec<LearnItem> = (0..n)
+            .map(|i| {
+                let resp_len = 1 + rng.below(T as u64) as usize;
+                let learn_len = 1 + rng.below(resp_len as u64) as usize;
+                LearnItem {
+                    tokens: (0..(P + T)).map(|_| rng.below(50) as i32).collect(),
+                    pad_len: rng.below(P as u64) as usize,
+                    resp_len,
+                    // arbitrary weights, zeros allowed inside the prefix;
+                    // adv is unique per item so rows can be matched back
+                    ht_w: (0..resp_len)
+                        .map(|t| {
+                            if t < learn_len && rng.bernoulli(0.8) {
+                                rng.uniform() as f32 + 0.1
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect(),
+                    learn_len,
+                    adv: (i as f32 + 1.0) * 0.37,
+                    old_lp: (0..resp_len).map(|_| -(rng.uniform() as f32) - 0.01).collect(),
+                }
+            })
+            .collect();
+        let buckets = bucket_sets[rng.below(4) as usize];
+        let grid = row_grids[rng.below(4) as usize];
+        // a budget must fit at least one allocated row of the top bucket;
+        // draw between that floor and a non-binding 0
+        let min_budget = alloc_rows(grid, 1) * (P + 128);
+        let budget = [0, 0, min_budget, 3 * min_budget][rng.below(4) as usize];
+        let mbs = pack_budget(&items, buckets, P, grid, budget).unwrap();
+
+        let effective = if budget == 0 { grid.last().unwrap() * (P + 128) } else { budget };
+        let total: usize = mbs.iter().map(|m| m.real_rows).sum();
+        assert_eq!(total, n, "case {case}");
+        let mut seen = vec![false; n];
+        for mb in &mbs {
+            assert!(buckets.contains(&mb.bucket), "case {case}");
+            assert!(grid.contains(&mb.rows), "case {case}");
+            assert_eq!(mb.rows, alloc_rows(grid, mb.real_rows), "case {case}");
+            assert!(mb.rows * (P + mb.bucket) <= effective, "case {case}");
+            let s = P + mb.bucket;
+            for r in 0..mb.real_rows {
+                // match the row back to its source item via the unique adv
+                let i = items
+                    .iter()
+                    .position(|it| (it.adv - mb.adv[r]).abs() < 1e-6)
+                    .unwrap_or_else(|| panic!("case {case}: unmatched row"));
+                assert!(!seen[i], "case {case}: item {i} packed twice");
+                seen[i] = true;
+                let it = &items[i];
+                assert!(mb.bucket >= it.learn_len, "case {case}");
+                assert_eq!(&mb.tokens[r * s..(r + 1) * s], &it.tokens[..s], "case {case}");
+                let w = &mb.ht_w[r * mb.bucket..(r + 1) * mb.bucket];
+                let lp = &mb.old_lp[r * mb.bucket..(r + 1) * mb.bucket];
+                assert_eq!(&w[..it.learn_len], &it.ht_w[..it.learn_len], "case {case}");
+                assert!(w[it.learn_len..].iter().all(|&x| x == 0.0), "case {case}");
+                assert_eq!(&lp[..it.learn_len], &it.old_lp[..it.learn_len], "case {case}");
+                assert!(lp[it.learn_len..].iter().all(|&x| x == 0.0), "case {case}");
+                assert!((mb.inv_len[r] - 1.0 / it.resp_len as f32).abs() < 1e-7, "case {case}");
+                assert_eq!(mb.pad_len[r], it.pad_len as i32, "case {case}");
+            }
+            // padding rows are inert
+            for r in mb.real_rows..mb.rows {
+                assert_eq!(mb.adv[r], 0.0, "case {case}");
+                assert_eq!(mb.inv_len[r], 0.0, "case {case}");
+                assert!(
+                    mb.ht_w[r * mb.bucket..(r + 1) * mb.bucket].iter().all(|&x| x == 0.0),
+                    "case {case}"
+                );
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "case {case}: item lost in packing");
+        // with a non-binding budget the packer never allocates MORE tokens
+        // than the fixed layout (the fixed grouping is in its search space)
+        if budget == 0 {
+            let fixed = pack(&items, buckets, P, *grid.last().unwrap()).unwrap();
+            assert!(
+                allocated_tokens(&mbs, P) <= allocated_tokens(&fixed, P),
+                "case {case}: budget packer regressed allocation"
+            );
+        }
+        assert!(ideal_tokens(&items, P) <= allocated_tokens(&mbs, P), "case {case}");
     });
 }
 

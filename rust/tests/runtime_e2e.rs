@@ -121,7 +121,7 @@ fn grad_metrics_and_zero_mask_behaviour() {
     let d = rt.manifest.dims.clone();
     let mut rng = Rng::new(5);
     let items = make_learn_items(&rt, &params, &Method::Grpo, &mut rng);
-    let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
+    let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train).unwrap();
     let mut acc = GradAccum::zeros(rt.manifest.param_count);
     let mut toks = 0.0;
     for mb in &mbs {
@@ -142,7 +142,7 @@ fn grad_metrics_and_zero_mask_behaviour() {
         it.ht_w = vec![0.0; it.resp_len];
         it.adv = 0.0;
     }
-    let mbs0 = pack(&zero_items, &d.buckets, d.prompt_len, d.batch_train);
+    let mbs0 = pack(&zero_items, &d.buckets, d.prompt_len, d.batch_train).unwrap();
     let mut acc0 = GradAccum::zeros(rt.manifest.param_count);
     for mb in &mbs0 {
         rt.grad(mb, &params, &mut acc0).unwrap();
@@ -159,7 +159,7 @@ fn ratio_one_on_policy_is_never_clipped() {
     let d = rt.manifest.dims.clone();
     let mut rng = Rng::new(11);
     let items = make_learn_items(&rt, &params, &Method::Grpo, &mut rng);
-    let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train);
+    let mbs = pack(&items, &d.buckets, d.prompt_len, d.batch_train).unwrap();
     let mut acc = GradAccum::zeros(rt.manifest.param_count);
     for mb in &mbs {
         let m = rt.grad(mb, &params, &mut acc).unwrap();
@@ -297,6 +297,63 @@ fn det_trunc_uses_less_simulated_memory_than_grpo() {
     let grpo = mem(Method::Grpo);
     let det = mem(Method::DetTrunc { frac: 0.5 });
     assert!(det < grpo, "det {det} !< grpo {grpo}");
+}
+
+/// Acceptance: `--train.packer fixed` is the pre-budget-packer layout, and
+/// the budget packer computes the same estimator through smaller artifacts.
+/// Host-side mask/selection streams are packer-independent (exact equality);
+/// the applied gradients agree mathematically, so rewards stay in the same
+/// band while the budget packer strictly reduces padded tokens.
+#[test]
+fn fixed_and_budget_packers_agree_for_seeds_0_and_1() {
+    let Some(rt) = runtime() else { return };
+    if rt.manifest.grad_row_files.is_empty() {
+        eprintln!("SKIP: artifacts have no grad_rows grid (rebuild with make artifacts)");
+        return;
+    }
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    for seed in [0u64, 1] {
+        // One optimizer step: both packers see the SAME rollout (identical
+        // starting params) and the SAME mask stream, so every host-side
+        // series must match exactly and the applied gradients are the same
+        // estimator. (From step 2 on, float reduction-order differences
+        // across artifact shapes could flip a sampled token, so strict
+        // comparisons stop being meaningful.)
+        let run = |packer: &str| {
+            let mut cfg = tiny_cfg(Method::Rpc { min_cut: 4 }, seed);
+            cfg.set("train.packer", packer).unwrap();
+            let mut tr = Trainer::new(&rt, cfg, base.clone(), OptState::zeros(&rt.manifest));
+            tr.train(1, false).unwrap();
+            tr
+        };
+        let fixed = run("fixed");
+        let budget = run("budget");
+        for series in ["selected_ratio", "resp_len", "reward"] {
+            assert_eq!(
+                fixed.recorder.values(series),
+                budget.recorder.values(series),
+                "seed {seed} series {series} diverged"
+            );
+        }
+        // the budget packer only removes padding, never adds it
+        let w = |tr: &Trainer, s: &str| tr.recorder.values(s).iter().sum::<f64>();
+        assert!(
+            w(&budget, "padding_waste") <= w(&fixed, "padding_waste") + 1e-9,
+            "seed {seed}: budget packer wasted more than fixed"
+        );
+        // same estimator: parameters agree to float tolerance. Not
+        // bit-equality — reduction order differs across artifact shapes,
+        // and where a gradient sum is pure roundoff Adam's first step is
+        // ~lr·sign(g), so allow a few lr of slack.
+        let max_dp = fixed
+            .params
+            .flat
+            .iter()
+            .zip(&budget.params.flat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_dp < 1e-2, "seed {seed}: params diverged by {max_dp}");
+    }
 }
 
 /// Acceptance: the single-worker pipeline is forced synchronous, so for the
