@@ -57,8 +57,17 @@ fn main() -> Result<()> {
     };
 
     println!("\nevaluating base model ...");
-    let before =
-        evaluator::evaluate_all_tiers(&rt, &base, cfg.eval.tasks_per_tier, cfg.eval.k, 1.0, 0)?;
+    // Both evals use the fixed engine (None) so the recorded before->after
+    // delta reflects training, not a change of eval sampling stream.
+    let before = evaluator::evaluate_all_tiers(
+        &rt,
+        &base,
+        cfg.eval.tasks_per_tier,
+        cfg.eval.k,
+        1.0,
+        0,
+        None,
+    )?;
     for e in &before {
         println!(
             "  base {:<10} Acc@{} {:.3}  pass@{} {:.3}",
@@ -73,6 +82,9 @@ fn main() -> Result<()> {
     // --- NAT RL phase ------------------------------------------------------
     println!("\nNAT RL: {} for {} steps ...", cfg.method.label(), cfg.rl.steps);
     rt.warmup(&rt.manifest.dims.buckets.clone())?;
+    if cfg.rollout.engine == nat_rl::config::RolloutEngine::Bucketed {
+        rt.warmup_generate_buckets()?;
+    }
     let steps = cfg.rl.steps;
     let k = cfg.eval.k;
     let tasks_per_tier = cfg.eval.tasks_per_tier;
@@ -80,7 +92,7 @@ fn main() -> Result<()> {
     tr.train(steps, true)?;
 
     println!("\nevaluating trained model ...");
-    let after = evaluator::evaluate_all_tiers(&rt, &tr.params, tasks_per_tier, k, 1.0, 0)?;
+    let after = evaluator::evaluate_all_tiers(&rt, &tr.params, tasks_per_tier, k, 1.0, 0, None)?;
     println!("\n=== E2E RESULT (record in EXPERIMENTS.md) ===");
     println!("benchmark     Acc@{k} before -> after | pass@{k} before -> after");
     for (b, a) in before.iter().zip(&after) {

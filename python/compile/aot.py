@@ -11,6 +11,10 @@ cleanly. See /opt/xla-example/README.md.
 
 Outputs under ``<out-dir>/<config>/``:
   generate.hlo.txt            rollout (prefill + KV-cache scan decode)
+  generate_T<b>.hlo.txt       bucketed rollout, one per response bucket,
+                              with PER-ROW sampling seeds (the continuous-
+                              batching scheduler's grid; a row's stream is
+                              independent of batch placement and bucket cap)
   score_T<b>.hlo.txt          logprob/entropy diagnostics (top bucket)
   grad_T<b>.hlo.txt           NAT learner gradient, one per length bucket
   grad_T<b>_B<r>.hlo.txt      same, for the sub-batch row grid {1,2,4,...}
@@ -59,6 +63,22 @@ def lower_generate(cfg, early_exit=True):
     return jax.jit(fn).lower(
         _param_specs(cfg), _spec((B, P), jnp.int32), _spec((B,), jnp.int32),
         _spec((), jnp.int32), _spec((), jnp.float32))
+
+
+def lower_generate_bucket(cfg, bucket):
+    """Per-row-seed rollout capped at ``bucket`` decode steps.
+
+    The seeds input is [B] int32 (one stream per row) instead of the legacy
+    scalar: each row's sampled tokens depend only on its own seed, so the
+    Rust scheduler can place a slot in any batch/bucket without changing its
+    output — and escalate overflow rows to a larger bucket bit-identically.
+    """
+    fn = lambda params, prompts, pad_len, seeds, temp: M.generate(
+        cfg, params, prompts, pad_len, seeds, temp, True, t_max=bucket)
+    B, P = cfg.batch_rollout, cfg.prompt_len
+    return jax.jit(fn).lower(
+        _param_specs(cfg), _spec((B, P), jnp.int32), _spec((B,), jnp.int32),
+        _spec((B,), jnp.int32), _spec((), jnp.float32))
 
 
 def lower_score(cfg, bucket, use_pallas_attn=False):
@@ -143,6 +163,8 @@ def build_manifest(cfg):
         "artifacts": {
             "generate": "generate.hlo.txt",
             "generate_full": "generate_full.hlo.txt",
+            "generate_buckets": {str(b): f"generate_T{b}.hlo.txt"
+                                 for b in cfg.buckets},
             "score": {str(cfg.buckets[-1]):
                       f"score_T{cfg.buckets[-1]}.hlo.txt"},
             "score_pallas": {str(cfg.buckets[-1]):
@@ -187,6 +209,10 @@ def build(cfg_name: str, out_dir: str, force: bool = False) -> None:
 
     emit("generate.hlo.txt", lower_generate(cfg, early_exit=True))
     emit("generate_full.hlo.txt", lower_generate(cfg, early_exit=False))
+    # Bucketed per-row-seed generate grid for the continuous-batching
+    # rollout scheduler (one artifact per response bucket).
+    for b in cfg.buckets:
+        emit(f"generate_T{b}.hlo.txt", lower_generate_bucket(cfg, b))
     emit(f"score_T{cfg.buckets[-1]}.hlo.txt", lower_score(cfg, cfg.buckets[-1]))
     # same scorer with the L1 Pallas flash-attention kernel in the forward —
     # proves the attention kernel lowers and executes through rust PJRT.

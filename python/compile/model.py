@@ -264,13 +264,18 @@ def _decode_attention(q, k_cache, v_cache, pos, pad_len):
 
 
 def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
-             early_exit: bool = True):
-    """Sample up to cfg.max_resp tokens after the prompt window.
+             early_exit: bool = True, t_max=None):
+    """Sample up to ``t_max or cfg.max_resp`` tokens after the prompt window.
 
     Args:
       prompts: [B, P] int32 left-padded prompts.
       pad_len: [B] int32 (P - true prompt length).
-      seed:    int32 scalar; per-call fresh randomness.
+      seed:    int32 scalar (per-call fresh randomness, the legacy layout)
+               OR int32 [B] vector of PER-ROW seeds. With per-row seeds each
+               row's sampling stream is a pure function of its own seed —
+               independent of batch placement and of ``t_max`` (a longer cap
+               extends the stream with a bit-identical prefix), which is the
+               rollout scheduler's scheduling-invariance contract.
       temp:    f32 scalar sampling temperature (behaviour logprobs are always
                recorded at temperature 1.0 — the policy's own distribution).
       early_exit: lower the decode loop as a `while` that stops as soon as
@@ -278,6 +283,8 @@ def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
         response is L cost O(L) decode steps instead of O(T)). Produces
         bit-identical sampled prefixes to the fixed-trip scan because the
         per-step key is fold_in(key, t).
+      t_max: response window cap (the bucketed ``generate_T<b>`` artifacts;
+        None = cfg.max_resp).
 
     Returns:
       tokens [B, P+T] int32 (positions past each row's stop point stay PAD),
@@ -285,7 +292,7 @@ def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
     """
     p = _unflatten(cfg, flat_params)
     B, P = prompts.shape
-    T = cfg.max_resp
+    T = cfg.max_resp if t_max is None else t_max
     S = P + T
     h, hd, L = cfg.n_heads, cfg.head_dim, cfg.n_layers
 
@@ -314,15 +321,23 @@ def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
     xn = _rmsnorm(x, p["final_norm"], cfg.norm_eps)
     logits0 = (xn @ p["head"])[:, -1, :]  # predicts position P
 
-    key = jax.random.PRNGKey(seed)
+    per_row = jnp.ndim(seed) == 1
+    if per_row:
+        row_keys = jax.vmap(jax.random.PRNGKey)(seed)  # [B, 2]
+    else:
+        key = jax.random.PRNGKey(seed)
     tokens0 = jnp.concatenate(
         [prompts, jnp.zeros((B, T), jnp.int32)], axis=1)
 
     def step(carry, t):
         caches_k, caches_v, logits, tokens = carry
         pos = P + t
-        key_t = jax.random.fold_in(key, t)
-        tok = jax.random.categorical(key_t, logits / temp, axis=-1)  # [B]
+        if per_row:
+            keys_t = jax.vmap(jax.random.fold_in, (0, None))(row_keys, t)
+            tok = jax.vmap(jax.random.categorical)(keys_t, logits / temp)  # [B]
+        else:
+            key_t = jax.random.fold_in(key, t)
+            tok = jax.random.categorical(key_t, logits / temp, axis=-1)  # [B]
         lp_t = jnp.take_along_axis(
             jax.nn.log_softmax(logits, axis=-1), tok[:, None], axis=-1)[:, 0]
         tokens = jax.lax.dynamic_update_slice(

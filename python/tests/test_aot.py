@@ -36,6 +36,7 @@ class TestLowering:
     def test_all_artifacts_lower_and_contain_entry(self):
         for name, lowered in [
             ("generate", aot.lower_generate(CFG)),
+            ("generate_bucket", aot.lower_generate_bucket(CFG, CFG.buckets[0])),
             ("score", aot.lower_score(CFG, CFG.buckets[-1])),
             ("grad", aot.lower_grad(CFG, CFG.buckets[0])),
             ("apply", aot.lower_apply(CFG)),
@@ -95,6 +96,15 @@ class TestManifest:
         assert aot.row_grid(8) == [1, 2, 4]
         assert aot.row_grid(6) == [1, 2, 4]
         assert aot.row_grid(1) == []
+
+    def test_generate_buckets_cover_config(self):
+        man = aot.build_manifest(CFG)
+        gb = man["artifacts"]["generate_buckets"]
+        assert sorted(int(b) for b in gb) == sorted(CFG.buckets)
+        # the top bucket (== max_resp) must be present: the scheduler's
+        # escalation chain terminates there
+        assert str(CFG.max_resp) in gb
+        assert gb[str(CFG.max_resp)] == f"generate_T{CFG.max_resp}.hlo.txt"
 
 
 class TestBuiltArtifacts:

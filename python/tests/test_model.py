@@ -101,6 +101,47 @@ class TestGenerate:
         np.testing.assert_allclose(lps, lp2, rtol=5e-4, atol=5e-5)
         assert np.all(np.asarray(ent) >= 0)
 
+    def test_per_row_seeds_are_batch_and_cap_invariant(self, params):
+        """The bucketed scheduler's contract: with per-row seeds, a row's
+        sampled stream UP TO ITS OWN EOS depends only on its (prompt, seed)
+        — shuffling rows, and capping the window at a bucket, reproduce the
+        same response prefix and logprobs. (Positions past a row's EOS keep
+        sampling until the whole batch stops, so they are batch-dependent;
+        the Rust scheduler blanks them to PAD.)"""
+        P = CFG.prompt_len
+
+        def resp_lens(toks):
+            out = []
+            for row in np.asarray(toks)[:, P:]:
+                eos = np.flatnonzero(row == CFG.eos_id)
+                out.append(int(eos[0]) + 1 if eos.size else row.shape[0])
+            return out
+
+        prompts, pad = _prompts(4, seed=8)
+        seeds = jnp.arange(11, 15, dtype=jnp.int32)
+        t1, l1 = M.generate(CFG, params, prompts, pad, seeds,
+                            jnp.float32(1.0))
+        lens = resp_lens(t1)
+        # reversed batch order: row i's stream must follow its seed
+        rev = np.arange(3, -1, -1)
+        t2, l2 = M.generate(CFG, params, prompts[rev], pad[rev], seeds[rev],
+                            jnp.float32(1.0))
+        assert resp_lens(t2) == [lens[i] for i in rev]
+        for i, n in enumerate(lens):
+            np.testing.assert_array_equal(
+                np.asarray(t1)[i, P:P + n], np.asarray(t2)[rev][i, P:P + n])
+            np.testing.assert_allclose(
+                np.asarray(l1)[i, :n], np.asarray(l2)[rev][i, :n])
+        # a shorter bucket cap yields the identical per-row prefix
+        cap = CFG.buckets[0]
+        t3, l3 = M.generate(CFG, params, prompts, pad, seeds,
+                            jnp.float32(1.0), t_max=cap)
+        for i, n in enumerate(min(n, cap) for n in lens):
+            np.testing.assert_array_equal(
+                np.asarray(t1)[i, P:P + n], np.asarray(t3)[i, P:P + n])
+            np.testing.assert_allclose(
+                np.asarray(l1)[i, :n], np.asarray(l3)[i, :n])
+
     def test_low_temperature_is_greedy(self, params):
         prompts, pad = _prompts(3, seed=7)
         t1, _ = M.generate(CFG, params, prompts, pad, jnp.int32(0),

@@ -107,6 +107,7 @@ fn train_bench(b: &mut Bench) {
     }
     let rt = Runtime::load(dir).unwrap();
     rt.warmup(&rt.manifest.dims.buckets.clone()).unwrap();
+    rt.warmup_generate_buckets().unwrap(); // default cfg rolls out bucketed
     let base = ParamStore::load_init(&rt.manifest).unwrap();
     const STEPS: usize = 3;
 

@@ -1,16 +1,120 @@
-//! End-to-end rollout bench: one generate call (B_rollout sequences,
-//! prefill + max_resp KV-cache decode steps) per model config present.
-//! This is the paper's "inference" stage — NAT leaves it untouched, which
-//! Table 3's total-vs-learner split depends on.
+//! Rollout engine bench: fixed vs bucketed+refill scheduling.
+//!
+//! Two tiers:
+//!
+//! * `sim/*` — always runs: the real scheduler core drives a simulated
+//!   per-row-seeded policy ([`SimBackend`]) at the default workload
+//!   (buckets [32,64,96,128], B=8, short-response RPC-trained length mix),
+//!   comparing allocated decode-token-steps and wall-time between the
+//!   legacy fixed engine and the bucketed+refill engine. This is the
+//!   acceptance metric: bucketed must allocate >= 25% fewer decode-token
+//!   steps than fixed. Results are also written to `BENCH_rollout.json`
+//!   (machine-readable, for in-repo perf tracking).
+//! * `generate/*` — artifact-gated: one real generate call per model
+//!   config (prefill + KV-cache decode through PJRT), fixed vs early-exit,
+//!   as before.
 use std::path::Path;
+use std::time::Instant;
 
 use nat_rl::coordinator::rollout::encode_prompt;
+use nat_rl::coordinator::rollout::scheduler::{sim_workload, RolloutScheduler, SchedStats};
 use nat_rl::runtime::{ParamStore, Runtime};
 use nat_rl::tokenizer::Tokenizer;
 use nat_rl::util::bench::Bench;
+use nat_rl::util::json::{obj, Json};
 
-fn main() {
-    let mut b = Bench::new("rollout").slow();
+/// One bucketed run over the shared default workload; returns accumulated
+/// stats (the predictor warms over the first steps exactly as in training).
+fn run_bucketed() -> SchedStats {
+    let backend = sim_workload::backend();
+    let encoded = sim_workload::prompts();
+    let sched = RolloutScheduler::new(*sim_workload::BUCKETS.last().unwrap());
+    let mut total = SchedStats::default();
+    for step in 0..sim_workload::STEPS {
+        let slots = sim_workload::slots(step);
+        let (_, stats) = sched.run(&backend, &encoded, &slots, 1.0).unwrap();
+        total.calls += stats.calls;
+        total.decode_token_steps += stats.decode_token_steps;
+        total.escalations += stats.escalations;
+        total.padded_rows += stats.padded_rows;
+    }
+    total
+}
+
+/// The fixed engine's accounting for the same workload.
+fn fixed_stats() -> SchedStats {
+    let calls_per_step = sim_workload::SLOTS_PER_STEP.div_ceil(sim_workload::BATCH);
+    let calls = calls_per_step * sim_workload::STEPS as usize;
+    SchedStats {
+        calls,
+        decode_token_steps: sim_workload::fixed_decode_steps(),
+        escalations: 0,
+        padded_rows: (calls_per_step * sim_workload::BATCH - sim_workload::SLOTS_PER_STEP)
+            * sim_workload::STEPS as usize,
+    }
+}
+
+fn sim_bench(b: &mut Bench) {
+    b.iter("sim/bucketed+refill/schedule", run_bucketed);
+
+    let t0 = Instant::now();
+    let bucketed = run_bucketed();
+    let bucketed_wall_s = t0.elapsed().as_secs_f64();
+    let fixed = fixed_stats();
+    let saving = 1.0 - bucketed.decode_token_steps as f64 / fixed.decode_token_steps as f64;
+    println!(
+        "sim decode-token-steps: fixed {} | bucketed+refill {} | saving {:.1}% \
+         (escalations {}, padded rows {} vs {})",
+        fixed.decode_token_steps,
+        bucketed.decode_token_steps,
+        100.0 * saving,
+        bucketed.escalations,
+        bucketed.padded_rows,
+        fixed.padded_rows,
+    );
+    assert!(
+        saving >= 0.25,
+        "acceptance: bucketed+refill must allocate >= 25% fewer decode-token-steps \
+         than fixed at the default workload (got {:.1}%)",
+        100.0 * saving
+    );
+
+    // Machine-readable record for in-repo perf tracking (CI keeps
+    // `cargo bench --no-run` green; a full run refreshes this file).
+    let side = |s: &SchedStats, wall_s: f64| {
+        obj(vec![
+            ("calls", Json::Num(s.calls as f64)),
+            ("decode_token_steps", Json::Num(s.decode_token_steps as f64)),
+            ("escalations", Json::Num(s.escalations as f64)),
+            ("padded_rows", Json::Num(s.padded_rows as f64)),
+            ("wall_s", Json::Num(wall_s)),
+        ])
+    };
+    let buckets_json = nat_rl::util::json::arr_f64(
+        &sim_workload::BUCKETS.iter().map(|&b| b as f64).collect::<Vec<_>>(),
+    );
+    let record = obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("batch", Json::Num(sim_workload::BATCH as f64)),
+                ("prompt_len", Json::Num(sim_workload::PROMPT_LEN as f64)),
+                ("buckets", buckets_json),
+                ("mean_resp_len", Json::Num(sim_workload::MEAN_RESP_LEN as f64)),
+                ("slots_per_step", Json::Num(sim_workload::SLOTS_PER_STEP as f64)),
+                ("steps", Json::Num(sim_workload::STEPS as f64)),
+            ]),
+        ),
+        // fixed wall-time is not meaningful in sim (no device): report 0.
+        ("fixed", side(&fixed, 0.0)),
+        ("bucketed", side(&bucketed, bucketed_wall_s)),
+        ("decode_step_saving", Json::Num(saving)),
+    ]);
+    std::fs::write("BENCH_rollout.json", record.to_string()).unwrap();
+    println!("wrote BENCH_rollout.json");
+}
+
+fn generate_bench(b: &mut Bench) {
     for model in ["tiny", "small", "base"] {
         let dir = format!("artifacts/{model}");
         if !Path::new(&dir).join("manifest.json").exists() {
@@ -32,6 +136,18 @@ fn main() {
             seed += 1;
             rt.generate(&params, &prompts, &pads, seed, 1.0).unwrap()
         });
+        // Bucketed grid: the shortest per-row-seeded bucket artifact is the
+        // unit the scheduler refills with.
+        if let Some(&(bucket, _)) = rt.manifest.generate_files.first() {
+            let seeds: Vec<i32> = (0..d.batch_rollout as i32).collect();
+            rt.generate_bucketed(&params, bucket, &prompts, &pads, &seeds, 1.0).unwrap();
+            let mut s = 0;
+            b.iter(&format!("generate_bucketed/{model}/T={bucket}"), || {
+                s += 1;
+                let seeds: Vec<i32> = (s..s + d.batch_rollout as i32).collect();
+                rt.generate_bucketed(&params, bucket, &prompts, &pads, &seeds, 1.0).unwrap()
+            });
+        }
         // §Perf opt-1 A/B: fixed-trip-count decode (the pre-optimization
         // rollout). With a random-init policy both run full length; with a
         // trained policy (checkpoints/<model>_sft.bin) the early-exit
@@ -66,5 +182,11 @@ fn main() {
             }
         }
     }
+}
+
+fn main() {
+    let mut b = Bench::new("rollout").slow();
+    sim_bench(&mut b);
+    generate_bench(&mut b);
     b.report();
 }

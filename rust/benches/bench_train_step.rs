@@ -65,6 +65,7 @@ fn step_bench(b: &mut Bench, model: &str) {
     }
     let rt = Runtime::load(Path::new(&dir)).unwrap();
     rt.warmup(&rt.manifest.dims.buckets.clone()).unwrap();
+    rt.warmup_generate_buckets().unwrap(); // default cfg rolls out bucketed
     let base = ParamStore::load_init(&rt.manifest).unwrap();
     for method in [
         Method::Grpo,

@@ -5,4 +5,7 @@
 
 mod run;
 
-pub use run::{EvalCfg, Method, Packer, PipelineCfg, PretrainCfg, RlCfg, RunConfig, TrainCfg};
+pub use run::{
+    EvalCfg, Method, Packer, PipelineCfg, PretrainCfg, RlCfg, RolloutCfg, RolloutEngine,
+    RunConfig, TrainCfg,
+};

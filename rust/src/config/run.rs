@@ -90,6 +90,55 @@ impl Packer {
     }
 }
 
+/// Rollout scheduling engine (`coordinator::rollout::scheduler`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RolloutEngine {
+    /// Legacy path: every generate call runs the full `batch_rollout ×
+    /// (P + max_resp)` window with one scalar seed drawn per chunk, and
+    /// tail chunks are padded with duplicate rows. Kept selectable for
+    /// parity with pre-scheduler runs.
+    Fixed,
+    /// Length-bucketed continuous batching: prompts are routed into the
+    /// shortest viable `generate_T<b>` artifact by an EMA response-length
+    /// predictor, finished rows are refilled with pending slots instead of
+    /// duplicate padding, and overflow rows escalate to the next bucket.
+    /// Per-slot RNG seeds derive from `(seed, step, flat_id)`, so rollout
+    /// output is a pure function of the plan — bit-identical across batch
+    /// sizes, bucket routing, and refill interleavings.
+    Bucketed,
+}
+
+impl RolloutEngine {
+    pub fn parse(name: &str) -> Result<RolloutEngine> {
+        Ok(match name {
+            "fixed" => RolloutEngine::Fixed,
+            "bucketed" => RolloutEngine::Bucketed,
+            other => bail!("unknown rollout engine '{other}' (fixed|bucketed)"),
+        })
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            RolloutEngine::Fixed => "fixed",
+            RolloutEngine::Bucketed => "bucketed",
+        }
+    }
+}
+
+/// Rollout configuration (`--rollout.*`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RolloutCfg {
+    /// Engine selection. `Bucketed` (default) falls back to the fixed path
+    /// when the artifact set predates the `generate_buckets` grid.
+    pub engine: RolloutEngine,
+}
+
+impl Default for RolloutCfg {
+    fn default() -> Self {
+        RolloutCfg { engine: RolloutEngine::Bucketed }
+    }
+}
+
 /// Learner batching configuration (`--train.*`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TrainCfg {
@@ -100,7 +149,9 @@ pub struct TrainCfg {
     pub token_budget: usize,
     /// Auto-tune the sequence-bucket routing edges from an EMA histogram of
     /// observed `learn_len` (`coordinator::bucket_tuner`). Budget packer
-    /// only; trades bit-reproducibility of resumed runs for less padding.
+    /// only. The tuner's EMA state is serialized into resumable checkpoints
+    /// (`TrainMeta`), so `--resume` continuations reproduce the
+    /// uninterrupted run's routing exactly.
     pub auto_buckets: bool,
 }
 
@@ -177,6 +228,7 @@ pub struct RunConfig {
     pub method: Method,
     pub seed: u64,
     pub rl: RlCfg,
+    pub rollout: RolloutCfg,
     pub train: TrainCfg,
     pub pretrain: PretrainCfg,
     pub eval: EvalCfg,
@@ -201,6 +253,7 @@ impl Default for RunConfig {
                 ppo_epochs: 1,
                 ckpt_every: 0,
             },
+            rollout: RolloutCfg::default(),
             train: TrainCfg::default(),
             pretrain: PretrainCfg { steps: 300, corpus_size: 2048, noise: 0.25 },
             eval: EvalCfg { every: 0, tasks_per_tier: 16, k: 16 },
@@ -264,6 +317,9 @@ impl RunConfig {
         setnum!("rl", "temperature", cfg.rl.temperature, f32);
         setnum!("rl", "ppo_epochs", cfg.rl.ppo_epochs, usize);
         setnum!("rl", "ckpt_every", cfg.rl.ckpt_every, usize);
+        if let Some(name) = get("rollout", "engine").and_then(Json::as_str) {
+            cfg.rollout.engine = RolloutEngine::parse(name)?;
+        }
         if let Some(name) = get("train", "packer").and_then(Json::as_str) {
             cfg.train.packer = Packer::parse(name)?;
         }
@@ -335,6 +391,7 @@ impl RunConfig {
             "rl.temperature" => self.rl.temperature = value.parse()?,
             "rl.ppo_epochs" => self.rl.ppo_epochs = value.parse()?,
             "rl.ckpt_every" => self.rl.ckpt_every = value.parse()?,
+            "rollout.engine" => self.rollout.engine = RolloutEngine::parse(value)?,
             "train.packer" => self.train.packer = Packer::parse(value)?,
             "train.token_budget" => self.train.token_budget = value.parse()?,
             "train.auto_buckets" => {
@@ -530,6 +587,31 @@ mod tests {
         assert!(cfg.train.auto_buckets);
         assert!(cfg.set("train.packer", "bogus").is_err());
         assert!(cfg.set("train.auto_buckets", "maybe").is_err());
+    }
+
+    #[test]
+    fn rollout_engine_overrides_and_parsing() {
+        let mut cfg = RunConfig::default();
+        // bucketed scheduling is the default; fixed remains the parity mode
+        assert_eq!(cfg.rollout, RolloutCfg { engine: RolloutEngine::Bucketed });
+        cfg.set("rollout.engine", "fixed").unwrap();
+        assert_eq!(cfg.rollout.engine, RolloutEngine::Fixed);
+        cfg.set("rollout.engine", "bucketed").unwrap();
+        assert_eq!(cfg.rollout.engine, RolloutEngine::Bucketed);
+        assert!(cfg.set("rollout.engine", "bogus").is_err());
+        assert_eq!(RolloutEngine::Fixed.id(), "fixed");
+        assert_eq!(RolloutEngine::Bucketed.id(), "bucketed");
+    }
+
+    #[test]
+    fn rollout_section_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_rollout_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.toml");
+        std::fs::write(&path, "[rollout]\nengine = \"fixed\"\n").unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.rollout.engine, RolloutEngine::Fixed);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

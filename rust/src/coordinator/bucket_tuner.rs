@@ -19,37 +19,42 @@
 //! Routing edges are always a subset of the manifest buckets, so every
 //! tuned choice maps to an existing compiled artifact. The tuner only
 //! *removes* fragmentation, never shapes.
+//!
+//! The histogram substrate ([`EmaHist`]) is shared with the rollout
+//! scheduler's response-length predictor
+//! (`coordinator::rollout::scheduler`), and the tuner's full EMA state is
+//! serializable ([`TunerState`]) so resumable checkpoints reproduce the
+//! uninterrupted run's routing exactly.
 
 use crate::coordinator::batcher::alloc_rows;
 
-/// EMA histogram of observed `learn_len` plus the edge selector.
-#[derive(Clone, Debug)]
-pub struct BucketTuner {
-    /// EMA of the per-step learn_len frequency, index = learn_len - 1.
+/// EMA histogram over observed lengths in `1..=max_len` (index = length-1).
+///
+/// Each `observe` folds one step's normalized length-frequency vector into
+/// the moving average (the first observation replaces the zero state).
+/// Shared by the learner-side [`BucketTuner`] and the rollout scheduler's
+/// response-length predictor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EmaHist {
+    /// EMA of the per-step length frequency, index = length - 1.
     hist: Vec<f64>,
-    /// EMA of items per optimizer step.
-    items_per_step: f64,
     /// Blend factor for new observations (0 < alpha <= 1).
     alpha: f64,
-    /// Steps observed so far (cold-start gate).
+    /// Observations folded in so far (cold-start gate for consumers).
     steps: u64,
 }
 
-/// Observations before the tuner trusts its histogram and starts pruning
-/// edges (cold start routes over the full manifest bucket set).
-const WARMUP_STEPS: u64 = 2;
-
-impl BucketTuner {
-    pub fn new(max_len: usize, alpha: f64) -> BucketTuner {
-        BucketTuner {
-            hist: vec![0.0; max_len.max(1)],
-            items_per_step: 0.0,
-            alpha: alpha.clamp(1e-3, 1.0),
-            steps: 0,
-        }
+impl EmaHist {
+    pub fn new(max_len: usize, alpha: f64) -> EmaHist {
+        EmaHist { hist: vec![0.0; max_len.max(1)], alpha: alpha.clamp(1e-3, 1.0), steps: 0 }
     }
 
-    /// Fold one optimizer step's packed `learn_len`s into the EMA state.
+    /// Rebuild from serialized state (checkpoint resume).
+    pub fn from_parts(hist: Vec<f64>, alpha: f64, steps: u64) -> EmaHist {
+        EmaHist { hist, alpha: alpha.clamp(1e-3, 1.0), steps }
+    }
+
+    /// Fold one step's observed lengths into the EMA (no-op when empty).
     pub fn observe(&mut self, lens: &[usize]) {
         if lens.is_empty() {
             return;
@@ -63,13 +68,112 @@ impl BucketTuner {
         for (h, f) in self.hist.iter_mut().zip(&freq) {
             *h = (1.0 - a) * *h + a * f;
         }
-        self.items_per_step =
-            (1.0 - a) * self.items_per_step + a * lens.len() as f64;
         self.steps += 1;
     }
 
-    pub fn steps_observed(&self) -> u64 {
+    pub fn steps(&self) -> u64 {
         self.steps
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Histogram capacity (the max observable length).
+    pub fn len(&self) -> usize {
+        self.hist.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hist.is_empty()
+    }
+
+    /// Σ hist over the index range `[lo, hi)` (index = length - 1).
+    pub fn mass(&self, lo: usize, hi: usize) -> f64 {
+        let hi = hi.min(self.hist.len());
+        if lo >= hi {
+            return 0.0;
+        }
+        self.hist[lo..hi].iter().sum()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.hist.iter().sum()
+    }
+
+    /// P(observed length > `len`) under the EMA histogram (0 when empty).
+    pub fn tail(&self, len: usize) -> f64 {
+        let total = self.total();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.mass(len, self.hist.len()) / total
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.hist
+    }
+}
+
+/// Serializable snapshot of a [`BucketTuner`]: everything a `--resume`
+/// continuation needs to reproduce the uninterrupted run's routing edges
+/// (carried by `runtime::TrainMeta` in the checkpoint sidecar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunerState {
+    pub hist: Vec<f64>,
+    pub items_per_step: f64,
+    pub alpha: f64,
+    pub steps: u64,
+}
+
+/// EMA histogram of observed `learn_len` plus the edge selector.
+#[derive(Clone, Debug)]
+pub struct BucketTuner {
+    hist: EmaHist,
+    /// EMA of items per optimizer step.
+    items_per_step: f64,
+}
+
+/// Observations before the tuner trusts its histogram and starts pruning
+/// edges (cold start routes over the full manifest bucket set).
+const WARMUP_STEPS: u64 = 2;
+
+impl BucketTuner {
+    pub fn new(max_len: usize, alpha: f64) -> BucketTuner {
+        BucketTuner { hist: EmaHist::new(max_len, alpha), items_per_step: 0.0 }
+    }
+
+    /// Snapshot the EMA state for checkpointing.
+    pub fn state(&self) -> TunerState {
+        TunerState {
+            hist: self.hist.values().to_vec(),
+            items_per_step: self.items_per_step,
+            alpha: self.hist.alpha(),
+            steps: self.hist.steps(),
+        }
+    }
+
+    /// Rebuild from a checkpointed snapshot; continuing to `observe` from
+    /// here reproduces the uninterrupted run's state exactly.
+    pub fn from_state(s: TunerState) -> BucketTuner {
+        BucketTuner {
+            hist: EmaHist::from_parts(s.hist, s.alpha, s.steps),
+            items_per_step: s.items_per_step,
+        }
+    }
+
+    /// Fold one optimizer step's packed `learn_len`s into the EMA state.
+    pub fn observe(&mut self, lens: &[usize]) {
+        if lens.is_empty() {
+            return;
+        }
+        let a = if self.hist.steps() == 0 { 1.0 } else { self.hist.alpha() };
+        self.hist.observe(lens);
+        self.items_per_step = (1.0 - a) * self.items_per_step + a * lens.len() as f64;
+    }
+
+    pub fn steps_observed(&self) -> u64 {
+        self.hist.steps()
     }
 
     /// Expected allocated rows for `n` expected items in one edge: full
@@ -98,7 +202,7 @@ impl BucketTuner {
         token_budget: usize,
     ) -> Vec<usize> {
         let k = buckets.len();
-        if self.steps < WARMUP_STEPS || k <= 1 || k > 16 || row_grid.is_empty() {
+        if self.hist.steps() < WARMUP_STEPS || k <= 1 || k > 16 || row_grid.is_empty() {
             return buckets.to_vec();
         }
         let top = *buckets.last().unwrap();
@@ -127,7 +231,7 @@ impl BucketTuner {
             let mut lo = 0usize; // exclusive lower learn_len bound
             for &e in &edges {
                 let hi = e.min(self.hist.len());
-                let mass: f64 = self.hist[lo..hi].iter().sum();
+                let mass = self.hist.mass(lo, hi);
                 lo = hi;
                 let n = mass * self.items_per_step;
                 if n > 0.0 {
@@ -227,5 +331,52 @@ mod tests {
         assert_eq!(BucketTuner::expected_rows(&GRID, 8.0), 8.0);
         assert_eq!(BucketTuner::expected_rows(&GRID, 11.0), 8.0 + 4.0);
         assert_eq!(BucketTuner::expected_rows(&GRID, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ema_hist_mass_tail_and_cold_start() {
+        let mut h = EmaHist::new(8, 0.5);
+        assert_eq!(h.total(), 0.0);
+        assert_eq!(h.tail(4), 0.0);
+        // first observation replaces the zero state (a = 1)
+        h.observe(&[1, 1, 5, 9 /* clamps to 8 */]);
+        assert!((h.total() - 1.0).abs() < 1e-12);
+        assert!((h.mass(0, 1) - 0.5).abs() < 1e-12);
+        assert!((h.tail(4) - 0.5).abs() < 1e-12, "{}", h.tail(4));
+        assert!((h.tail(8) - 0.0).abs() < 1e-12);
+        assert_eq!(h.steps(), 1);
+        // out-of-range / empty queries are safe
+        assert_eq!(h.mass(7, 3), 0.0);
+        assert_eq!(h.mass(100, 200), 0.0);
+        h.observe(&[]);
+        assert_eq!(h.steps(), 1);
+    }
+
+    /// Satellite regression: restoring the serialized tuner state and
+    /// continuing must be bit-identical to the uninterrupted run — the
+    /// `--resume` + `--train.auto_buckets` determinism contract.
+    #[test]
+    fn state_roundtrip_continues_bit_identically() {
+        let step_lens = |s: usize| -> Vec<usize> {
+            (0..16).map(|i| 1 + (i * 7 + s * 13) % 128).collect()
+        };
+        let mut full = BucketTuner::new(128, 0.2);
+        let mut first = BucketTuner::new(128, 0.2);
+        for s in 0..3 {
+            full.observe(&step_lens(s));
+            first.observe(&step_lens(s));
+        }
+        // "checkpoint" at step 3, restore, and continue both runs
+        let mut resumed = BucketTuner::from_state(first.state());
+        for s in 3..8 {
+            full.observe(&step_lens(s));
+            resumed.observe(&step_lens(s));
+        }
+        assert_eq!(resumed.state(), full.state());
+        assert_eq!(
+            resumed.edges(&BUCKETS, P, &GRID, 0),
+            full.edges(&BUCKETS, P, &GRID, 0)
+        );
+        assert_eq!(resumed.steps_observed(), full.steps_observed());
     }
 }

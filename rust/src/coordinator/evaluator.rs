@@ -1,9 +1,24 @@
 //! Benchmark evaluation: Acc@k and pass@k at temperature 1.0 (paper §5.1:
 //! 16 independent responses per question).
+//!
+//! Both rollout engines are supported and share their implementation with
+//! the training path (`rollout::scheduler`) — the evaluator used to
+//! hand-roll its own copy of the chunk/pad-with-duplicates/scatter loop;
+//! that invariant now lives in one place:
+//!
+//! * fixed — [`run_slots_fixed`]: the legacy chunked loop, one scalar seed
+//!   per chunk in chunk order (bit-identical to the pre-scheduler
+//!   evaluator).
+//! * bucketed — per-slot seeds are drawn upfront in flat order, so the
+//!   correctness counts are scheduling-invariant: independent of bucket
+//!   routing, refill interleaving, and batch composition.
 
 use anyhow::Result;
 
-use crate::coordinator::rollout::{encode_prompt, trim_at_eos};
+use crate::coordinator::rollout::encode_prompt;
+use crate::coordinator::rollout::scheduler::{
+    run_slots_fixed, RolloutScheduler, RuntimeBackend, SlotOut, SlotSpec,
+};
 use crate::runtime::{ParamStore, Runtime};
 use crate::tasks::verify::reward_tokens;
 use crate::tasks::{EvalSet, Task, Tier};
@@ -22,7 +37,10 @@ pub struct EvalResult {
     pub k: usize,
 }
 
-/// Count correct completions for every task with k samples each.
+/// Count correct completions for every task with k samples each. `sched`
+/// selects the engine: Some(_) runs the bucketed scheduler (falling back to
+/// the fixed path when the artifact set has no `generate_buckets` grid);
+/// None replays the legacy fixed loop exactly.
 pub fn evaluate(
     rt: &Runtime,
     params: &ParamStore,
@@ -31,44 +49,51 @@ pub fn evaluate(
     k: usize,
     temp: f32,
     rng: &mut Rng,
+    sched: Option<&RolloutScheduler>,
 ) -> Result<EvalResult> {
     let d = &rt.manifest.dims;
-    let (b_roll, p, t_max) = (d.batch_rollout, d.prompt_len, d.max_resp);
     let n = eval.tasks.len();
-    let mut correct = vec![0usize; n];
-    let mut len_sum = 0usize;
-    let mut len_cnt = 0usize;
-
-    // flat sample ids: task i, draw j -> i * k + j; chunked into B_roll rows
     let total = n * k;
+    // flat sample ids: task i, draw j -> i * k + j
     let encoded: Vec<(Vec<i32>, usize)> = eval
         .tasks
         .iter()
-        .map(|t: &Task| encode_prompt(tok, &t.prompt, p))
+        .map(|t: &Task| encode_prompt(tok, &t.prompt, d.prompt_len))
         .collect::<Result<_>>()?;
-    let mut cursor = 0usize;
-    while cursor < total {
-        let chunk: Vec<usize> = (cursor..total.min(cursor + b_roll)).collect();
-        cursor += chunk.len();
-        let mut prompts = Vec::with_capacity(b_roll * p);
-        let mut pads = Vec::with_capacity(b_roll);
-        for row in 0..b_roll {
-            let flat_id = chunk.get(row).copied().unwrap_or(chunk[0]);
-            let (ref ids, pad) = encoded[flat_id / k];
-            prompts.extend_from_slice(ids);
-            pads.push(pad as i32);
-        }
-        let gen = rt.generate(params, &prompts, &pads, rng.next_i32_seed(), temp)?;
-        for (row, &flat_id) in chunk.iter().enumerate() {
-            let task_idx = flat_id / k;
-            let s = p + t_max;
-            let resp = &gen.tokens[row * s + p..(row + 1) * s];
-            let resp_len = trim_at_eos(resp);
-            len_sum += resp_len;
-            len_cnt += 1;
-            if reward_tokens(tok, &eval.tasks[task_idx], &resp[..resp_len]) > 0.5 {
-                correct[task_idx] += 1;
-            }
+
+    let use_bucketed = sched.is_some() && !rt.manifest.generate_files.is_empty();
+    let slots: Vec<SlotOut> = if use_bucketed {
+        // Per-slot seeds drawn upfront in flat order: the draw sequence —
+        // and therefore every completion — is independent of how the
+        // scheduler batches, routes, or refills the slots.
+        let specs: Vec<SlotSpec> = (0..total)
+            .map(|f| SlotSpec { flat_id: f, prompt_idx: f / k, seed: rng.next_i32_seed() })
+            .collect();
+        let backend = RuntimeBackend { rt, params };
+        sched.expect("use_bucketed").run(&backend, &encoded, &specs, temp)?.0
+    } else {
+        let prompt_idx: Vec<usize> = (0..total).map(|f| f / k).collect();
+        run_slots_fixed(
+            d.batch_rollout,
+            d.prompt_len,
+            d.max_resp,
+            &encoded,
+            &prompt_idx,
+            rng,
+            |prompts, pads, seed| rt.generate(params, prompts, pads, seed, temp),
+        )?
+    };
+
+    let mut correct = vec![0usize; n];
+    let mut len_sum = 0usize;
+    let mut len_cnt = 0usize;
+    for o in &slots {
+        let task_idx = o.flat_id / k;
+        let resp = &o.tokens[d.prompt_len..];
+        len_sum += o.resp_len;
+        len_cnt += 1;
+        if reward_tokens(tok, &eval.tasks[task_idx], &resp[..o.resp_len]) > 0.5 {
+            correct[task_idx] += 1;
         }
     }
 
@@ -92,6 +117,7 @@ pub fn evaluate_all_tiers(
     k: usize,
     temp: f32,
     seed: u64,
+    sched: Option<&RolloutScheduler>,
 ) -> Result<Vec<EvalResult>> {
     let tok = Tokenizer::new();
     let mut rng = Rng::new(seed ^ 0xEAA1);
@@ -99,7 +125,7 @@ pub fn evaluate_all_tiers(
         .iter()
         .map(|&tier| {
             let set = EvalSet::build(tier, tasks_per_tier, 1234);
-            evaluate(rt, params, &tok, &set, k, temp, &mut rng)
+            evaluate(rt, params, &tok, &set, k, temp, &mut rng, sched)
         })
         .collect()
 }

@@ -43,8 +43,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::RunConfig;
-use crate::coordinator::bucket_tuner::BucketTuner;
+use crate::config::{RolloutEngine, RunConfig};
+use crate::coordinator::bucket_tuner::{BucketTuner, TunerState};
+use crate::coordinator::rollout::scheduler::RolloutScheduler;
 use crate::coordinator::trainer::{
     learn_stage, make_tuner, mask_rng, maybe_checkpoint, plan_step, post_step, record_step,
     rollout_stage, RolloutGroup,
@@ -64,6 +65,12 @@ pub struct PipelineTrainer<'rt> {
     pub recorder: Recorder,
     acc: GradAccum,
     tuner: Option<BucketTuner>,
+    /// Shared across rollout workers (routing state behind a mutex; output
+    /// stays a pure function of the slot plan, so sharing is benign).
+    sched: RolloutScheduler,
+    /// Eval-scoped routing state (see `Trainer::eval_sched`): in-training
+    /// evaluation must not fold its lengths into the training predictor.
+    eval_sched: RolloutScheduler,
     step: u64,
 }
 
@@ -82,6 +89,8 @@ impl<'rt> PipelineTrainer<'rt> {
             recorder: Recorder::new(),
             acc: GradAccum::zeros(rt.manifest.param_count),
             tuner: make_tuner(rt, &cfg),
+            sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
+            eval_sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
             cfg,
             step: 0,
         }
@@ -95,6 +104,27 @@ impl<'rt> PipelineTrainer<'rt> {
     /// Continue a checkpointed run from `step` (see `Trainer::set_start_step`).
     pub fn set_start_step(&mut self, step: u64) {
         self.step = step;
+    }
+
+    /// Restore the auto-tuner's EMA state from a resumed checkpoint (no-op
+    /// when the config does not use `--train.auto_buckets`).
+    pub fn restore_tuner(&mut self, state: Option<&TunerState>) {
+        if let (Some(t), Some(s)) = (self.tuner.as_mut(), state) {
+            *t = BucketTuner::from_state(s.clone());
+        }
+    }
+
+    /// Snapshot the auto-tuner's EMA state for checkpointing.
+    pub fn tuner_state(&self) -> Option<TunerState> {
+        self.tuner.as_ref().map(BucketTuner::state)
+    }
+
+    /// Scheduler handle for engine-aware evaluation (None under the fixed
+    /// engine — evaluation then replays the legacy chunked loop). This is
+    /// an eval-scoped scheduler, NOT the training one, so eval lengths
+    /// never pollute training routing.
+    pub fn eval_sched(&self) -> Option<&RolloutScheduler> {
+        (self.cfg.rollout.engine == RolloutEngine::Bucketed).then_some(&self.eval_sched)
     }
 
     /// The effective engine options for this config: a single worker is
@@ -129,6 +159,9 @@ impl<'rt> PipelineTrainer<'rt> {
         let rt = self.rt;
         let cfg = &self.cfg;
         let tok = &self.tok;
+        let sched = &self.sched;
+        let eval_sched =
+            (cfg.rollout.engine == RolloutEngine::Bucketed).then_some(&self.eval_sched);
         struct LearnerState<'s> {
             params: &'s mut ParamStore,
             opt: &'s mut OptState,
@@ -154,7 +187,7 @@ impl<'rt> PipelineTrainer<'rt> {
 
         let produce = |step: u64, snap: &ParamStore| -> Result<RolloutGroup> {
             let mut plan = plan_step(cfg, step);
-            rollout_stage(rt, snap, tok, cfg, &mut plan)
+            rollout_stage(rt, snap, tok, cfg, sched, &mut plan)
         };
         let consume = |meta: &GroupMeta, group: RolloutGroup| -> Result<ParamStore> {
             let mut guard = state.borrow_mut();
@@ -193,8 +226,10 @@ impl<'rt> PipelineTrainer<'rt> {
             let mut guard = state.borrow_mut();
             let st = &mut *guard;
             let stats = st.pending.take().expect("after_publish without a consumed step");
-            post_step(rt, cfg, st.recorder, st.params, &stats, verbose)?;
-            if let Some(path) = maybe_checkpoint(rt, cfg, st.params, st.opt, stats.step)? {
+            post_step(rt, cfg, st.recorder, st.params, eval_sched, &stats, verbose)?;
+            if let Some(path) =
+                maybe_checkpoint(rt, cfg, st.params, st.opt, st.tuner.as_ref(), stats.step)?
+            {
                 if verbose {
                     println!("  checkpoint @ step {}: {path}", stats.step);
                 }

@@ -1,9 +1,22 @@
-//! Rollout scheduling: grouped sampling through the `generate` artifact.
+//! Rollout scheduling: grouped sampling through the `generate` artifacts.
 //!
 //! For each prompt we draw G completions (GRPO groups). Prompts are encoded
 //! and LEFT-padded to the fixed prompt window; responses are trimmed at the
 //! first EOS. Rewards are verified on the FULL decoded response — NAT never
 //! touches the reward path.
+//!
+//! Two engines produce the same `RolloutSeq` layout (see [`scheduler`]):
+//!
+//! * [`run_group_rollouts`] — the legacy **fixed** engine: full-window
+//!   generate calls, one scalar seed per chunk drawn in chunk order, tail
+//!   chunks padded with duplicate rows (`--rollout.engine fixed`).
+//! * [`run_group_rollouts_bucketed`] — the length-bucketed
+//!   continuous-batching engine: per-slot seeds derived from
+//!   `(seed, step, flat_id)`, EMA-predicted bucket routing, refill instead
+//!   of padding, and overflow escalation. Output is a pure function of the
+//!   plan — bit-identical across batch composition and refill order.
+
+pub mod scheduler;
 
 use anyhow::{bail, Result};
 
@@ -12,6 +25,10 @@ use crate::tasks::verify::reward_tokens;
 use crate::tasks::Task;
 use crate::tokenizer::{Tokenizer, EOS, PAD};
 use crate::util::rng::Rng;
+
+use self::scheduler::{
+    run_slots_fixed, slot_seed, RolloutScheduler, RuntimeBackend, SlotOut, SlotSpec,
+};
 
 /// One completed rollout sequence.
 #[derive(Clone, Debug)]
@@ -70,8 +87,45 @@ pub fn plan_chunks(total: usize, batch: usize) -> Vec<Vec<usize>> {
         .collect()
 }
 
-/// Sample G completions per task. Returns sequences grouped task-major:
-/// `out[i * g + j]` is completion j of task i.
+/// Encode each distinct task prompt once.
+fn encode_tasks(
+    tok: &Tokenizer,
+    tasks: &[Task],
+    window: usize,
+) -> Result<Vec<(Vec<i32>, usize)>> {
+    tasks.iter().map(|t| encode_prompt(tok, &t.prompt, window)).collect()
+}
+
+/// Turn completed slots (flat order, `flat_id = task_idx * g + j`) into
+/// verified rollout sequences.
+fn finish_slots(
+    slots: Vec<SlotOut>,
+    tok: &Tokenizer,
+    tasks: &[Task],
+    g: usize,
+    prompt_len: usize,
+    encoded: &[(Vec<i32>, usize)],
+) -> Vec<RolloutSeq> {
+    slots
+        .into_iter()
+        .map(|o| {
+            let task_idx = o.flat_id / g;
+            let resp = &o.tokens[prompt_len..];
+            let reward = reward_tokens(tok, &tasks[task_idx], &resp[..o.resp_len]);
+            RolloutSeq {
+                task_idx,
+                pad_len: encoded[task_idx].1,
+                resp_len: o.resp_len,
+                old_lp: o.lp,
+                reward,
+                tokens: o.tokens,
+            }
+        })
+        .collect()
+}
+
+/// Sample G completions per task with the legacy fixed engine. Returns
+/// sequences grouped task-major: `out[i * g + j]` is completion j of task i.
 pub fn run_group_rollouts(
     rt: &Runtime,
     params: &ParamStore,
@@ -82,46 +136,47 @@ pub fn run_group_rollouts(
     rng: &mut Rng,
 ) -> Result<Vec<RolloutSeq>> {
     let d = &rt.manifest.dims;
-    let (b_roll, p, t_max) = (d.batch_rollout, d.prompt_len, d.max_resp);
-    let total = tasks.len() * g;
-    // encode each distinct prompt once
-    let encoded: Vec<(Vec<i32>, usize)> = tasks
-        .iter()
-        .map(|t| encode_prompt(tok, &t.prompt, p))
-        .collect::<Result<_>>()?;
-    let mut out: Vec<Option<RolloutSeq>> = vec![None; total];
-    // flat id = task_idx * g + j; process in chunks of the rollout batch.
-    // The tail chunk is padded with repeats of the first prompt and the
-    // padding rows are discarded by the scatter loop below.
-    for chunk in plan_chunks(total, b_roll) {
-        let mut prompts = Vec::with_capacity(b_roll * p);
-        let mut pads = Vec::with_capacity(b_roll);
-        for row in 0..b_roll {
-            let flat_id = chunk.get(row).copied().unwrap_or(chunk[0]);
-            let (ref ids, pad) = encoded[flat_id / g];
-            prompts.extend_from_slice(ids);
-            pads.push(pad as i32);
-        }
-        let gen = rt.generate(params, &prompts, &pads, rng.next_i32_seed(), temp)?;
-        for (row, &flat_id) in chunk.iter().enumerate() {
-            let task_idx = flat_id / g;
-            let s = p + t_max;
-            let tokens = gen.tokens[row * s..(row + 1) * s].to_vec();
-            let resp = &tokens[p..];
-            let resp_len = trim_at_eos(resp);
-            let old_lp = gen.lp[row * t_max..row * t_max + resp_len].to_vec();
-            let reward = reward_tokens(tok, &tasks[task_idx], &resp[..resp_len]);
-            out[flat_id] = Some(RolloutSeq {
-                task_idx,
-                tokens,
-                pad_len: pads[row] as usize,
-                resp_len,
-                old_lp,
-                reward,
-            });
-        }
-    }
-    Ok(out.into_iter().map(|o| o.expect("rollout slot unfilled")).collect())
+    let encoded = encode_tasks(tok, tasks, d.prompt_len)?;
+    let prompt_idx: Vec<usize> = (0..tasks.len() * g).map(|f| f / g).collect();
+    let slots = run_slots_fixed(
+        d.batch_rollout,
+        d.prompt_len,
+        d.max_resp,
+        &encoded,
+        &prompt_idx,
+        rng,
+        |prompts, pads, seed| rt.generate(params, prompts, pads, seed, temp),
+    )?;
+    Ok(finish_slots(slots, tok, tasks, g, d.prompt_len, &encoded))
+}
+
+/// Sample G completions per task with the bucketed continuous-batching
+/// engine. Per-slot seeds derive from `(run_seed, step, flat_id)`, so the
+/// returned sequences are a pure function of the plan — independent of the
+/// scheduler's routing, refill order, and worker count.
+pub fn run_group_rollouts_bucketed(
+    rt: &Runtime,
+    params: &ParamStore,
+    tok: &Tokenizer,
+    tasks: &[Task],
+    g: usize,
+    temp: f32,
+    run_seed: u64,
+    step: u64,
+    sched: &RolloutScheduler,
+) -> Result<Vec<RolloutSeq>> {
+    let d = &rt.manifest.dims;
+    let encoded = encode_tasks(tok, tasks, d.prompt_len)?;
+    let slots: Vec<SlotSpec> = (0..tasks.len() * g)
+        .map(|f| SlotSpec {
+            flat_id: f,
+            prompt_idx: f / g,
+            seed: slot_seed(run_seed, step, f as u64),
+        })
+        .collect();
+    let backend = RuntimeBackend { rt, params };
+    let (outs, _stats) = sched.run(&backend, &encoded, &slots, temp)?;
+    Ok(finish_slots(outs, tok, tasks, g, d.prompt_len, &encoded))
 }
 
 #[cfg(test)]
@@ -187,9 +242,9 @@ mod tests {
 
     #[test]
     fn tail_chunk_scatter_discards_padding_rows() {
-        // Mirror of the scatter loop in `run_group_rollouts`: the device
-        // batch has `batch` rows, rows beyond the chunk's real slots repeat
-        // slot chunk[0] and must never be written back.
+        // Mirror of the scatter loop in `run_slots_fixed`: the device batch
+        // has `batch` rows, rows beyond the chunk's real slots repeat slot
+        // chunk[0] and must never be written back.
         let (total, batch) = (10usize, 4usize);
         let mut out: Vec<Option<usize>> = vec![None; total];
         for chunk in plan_chunks(total, batch) {

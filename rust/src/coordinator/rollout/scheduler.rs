@@ -1,0 +1,850 @@
+//! Length-bucketed continuous-batching rollout scheduler.
+//!
+//! The legacy rollout path runs every generate call over the full
+//! `batch_rollout × (P + max_resp)` window: tail chunks are padded with
+//! duplicate rows and short responses keep a slot allocated until the
+//! slowest straggler finishes. This module mirrors the learner-side
+//! bucketing (PR 2) on the inference side:
+//!
+//! * Each **slot** (one pending completion) carries its own RNG seed,
+//!   derived as a pure function of `(run seed, step, flat_id)` via
+//!   [`slot_seed`] — never from chunk-order draws. Combined with per-row
+//!   sampling streams in the `generate_T<b>` artifacts, a slot's output is
+//!   **scheduling-invariant**: bit-identical for any device batch size,
+//!   bucket routing, refill interleaving, or worker count.
+//! * Slots are routed into the shortest viable response bucket by an EMA
+//!   response-length predictor ([`LenPredictor`], reusing the
+//!   [`EmaHist`](crate::coordinator::bucket_tuner::EmaHist) machinery of
+//!   the learner's `BucketTuner`), and batches are drained smallest bucket
+//!   first.
+//! * A tail batch is never padded with duplicate rows while real work is
+//!   pending: a partial remainder is **promoted** into the next non-empty
+//!   larger bucket whenever the extra decode steps cost less than the
+//!   padding rows it replaces (the continuous-batching "refill" — the
+//!   monolithic artifact call is the refill granularity).
+//! * A row that exhausts its bucket without emitting EOS **escalates** to
+//!   the next bucket and re-decodes there; per-row seeding makes the re-run
+//!   prefix bit-identical, so escalation changes cost, never output.
+//!
+//! The scheduler core ([`schedule`]) is generic over a [`RolloutBackend`]
+//! so its routing/refill/escalation logic — and the scheduling-invariance
+//! contract — are testable host-side against simulated policies
+//! ([`SimBackend`]) without PJRT. The legacy engine is preserved as
+//! [`run_slots_fixed`] (`--rollout.engine fixed`): the single place that
+//! implements the chunk/pad-with-duplicates/scatter loop that
+//! `run_group_rollouts` and the evaluator both used to hand-roll.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::bucket_tuner::EmaHist;
+use crate::coordinator::rollout::{plan_chunks, trim_at_eos};
+use crate::runtime::{GenerateOut, ParamStore, Runtime};
+use crate::tokenizer::{EOS, PAD};
+use crate::util::rng::Rng;
+
+/// Per-slot RNG seed: a pure one-way mix of `(run seed, step, flat_id)`.
+///
+/// This is the invariance keystone — the seed belongs to the *slot*, not to
+/// the generate call it happens to land in, so rollout output is a pure
+/// function of the plan.
+pub fn slot_seed(seed: u64, step: u64, flat_id: u64) -> i32 {
+    let mut x = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ step.wrapping_add(1).wrapping_mul(0xBF58_476D_1CE4_E5B9)
+        ^ flat_id.wrapping_add(1).wrapping_mul(0x94D0_49BB_1331_11EB)
+        ^ 0x524F_4C4C_534C_4F54; // "ROLLSLOT" tag
+    // SplitMix64 finalizer: full avalanche so nearby (step, flat_id) pairs
+    // land on decorrelated seeds.
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x & 0x7FFF_FFFF) as i32
+}
+
+/// One pending completion: which prompt to decode and with which seed.
+#[derive(Clone, Copy, Debug)]
+pub struct SlotSpec {
+    /// The caller's flat rollout index (e.g. `task_idx * G + j`).
+    pub flat_id: usize,
+    /// Index into the caller's encoded-prompt table.
+    pub prompt_idx: usize,
+    /// Per-slot sampling seed (see [`slot_seed`]).
+    pub seed: i32,
+}
+
+/// One completed slot, in the legacy full-window layout.
+#[derive(Clone, Debug)]
+pub struct SlotOut {
+    pub flat_id: usize,
+    /// Full `[P + top_bucket]` row; positions past the stop point are PAD.
+    pub tokens: Vec<i32>,
+    /// Response length after EOS trim (1..=top bucket, EOS included).
+    pub resp_len: usize,
+    /// Behaviour logprobs over `0..resp_len`.
+    pub lp: Vec<f32>,
+}
+
+/// Device abstraction the bucketed scheduler drives. `Runtime` implements
+/// it over the manifest's `generate_T<b>` artifacts ([`RuntimeBackend`]);
+/// tests and benches implement simulated policies ([`SimBackend`]).
+///
+/// Contract required for scheduling invariance: each row's sampled stream
+/// must be a pure function of its own `(prompt, seed)` — independent of its
+/// batch position, of the other rows, and of the bucket cap (a longer
+/// bucket extends the stream, bit-identical prefix).
+pub trait RolloutBackend {
+    /// Ascending response buckets with compiled generate artifacts; the
+    /// last is the full response window (`max_resp`).
+    fn gen_buckets(&self) -> Vec<usize>;
+    /// Rows per generate call (the device batch).
+    fn batch_rollout(&self) -> usize;
+    fn prompt_len(&self) -> usize;
+    /// One bucketed call: prompts `[B, P]`, pads/seeds `[B]`; returns
+    /// tokens `[B, P + bucket]` and behaviour logprobs `[B, bucket]`.
+    fn generate_bucket(
+        &self,
+        bucket: usize,
+        prompts: &[i32],
+        pads: &[i32],
+        seeds: &[i32],
+        temp: f32,
+    ) -> Result<GenerateOut>;
+}
+
+/// [`RolloutBackend`] over the runtime's per-bucket generate artifacts.
+pub struct RuntimeBackend<'a> {
+    pub rt: &'a Runtime,
+    pub params: &'a ParamStore,
+}
+
+impl RolloutBackend for RuntimeBackend<'_> {
+    fn gen_buckets(&self) -> Vec<usize> {
+        self.rt.manifest.generate_files.iter().map(|&(b, _)| b).collect()
+    }
+
+    fn batch_rollout(&self) -> usize {
+        self.rt.manifest.dims.batch_rollout
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.rt.manifest.dims.prompt_len
+    }
+
+    fn generate_bucket(
+        &self,
+        bucket: usize,
+        prompts: &[i32],
+        pads: &[i32],
+        seeds: &[i32],
+        temp: f32,
+    ) -> Result<GenerateOut> {
+        self.rt.generate_bucketed(self.params, bucket, prompts, pads, seeds, temp)
+    }
+}
+
+/// Cost accounting for one scheduled run (benches + perf tracking).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStats {
+    /// Generate calls issued.
+    pub calls: usize,
+    /// Σ allocated_rows × bucket over all calls — the decode-step budget
+    /// the device pays regardless of early exits.
+    pub decode_token_steps: usize,
+    /// Rows re-decoded in a larger bucket after overflowing their first.
+    pub escalations: usize,
+    /// Allocated rows that carried no real slot (tail padding).
+    pub padded_rows: usize,
+}
+
+/// Run every slot to completion through bucketed generate calls.
+///
+/// `routes[i]` is slot i's initial routing hint (any length; snapped to the
+/// smallest bucket that covers it). Because escalation re-decodes the
+/// bit-identical prefix and continues, the *output* is independent of the
+/// routing — only the cost ([`SchedStats`]) changes. Returned slots are in
+/// input order.
+pub fn schedule<B: RolloutBackend + ?Sized>(
+    backend: &B,
+    encoded: &[(Vec<i32>, usize)],
+    slots: &[SlotSpec],
+    routes: &[usize],
+    temp: f32,
+) -> Result<(Vec<SlotOut>, SchedStats)> {
+    let buckets = backend.gen_buckets();
+    if buckets.is_empty() || buckets.windows(2).any(|w| w[0] >= w[1]) {
+        bail!("generate buckets must be non-empty ascending: {buckets:?}");
+    }
+    if slots.len() != routes.len() {
+        bail!("schedule: {} slots vs {} routes", slots.len(), routes.len());
+    }
+    let top = *buckets.last().unwrap();
+    let b_roll = backend.batch_rollout();
+    let p = backend.prompt_len();
+    if b_roll == 0 {
+        bail!("rollout batch must be positive");
+    }
+
+    // Per-bucket FIFO queues of slot indices; arbitrary initial routing is
+    // snapped into the compiled grid (over-long hints clamp to top).
+    let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); buckets.len()];
+    for (i, &route) in routes.iter().enumerate() {
+        let bi = buckets
+            .iter()
+            .position(|&b| b >= route)
+            .unwrap_or(buckets.len() - 1);
+        queues[bi].push_back(i);
+    }
+
+    let mut out: Vec<Option<SlotOut>> = slots.iter().map(|_| None).collect();
+    let mut stats = SchedStats::default();
+    // Drain smallest bucket first so escalations cascade upward into
+    // batches that have not formed yet.
+    while let Some(bi) = (0..buckets.len()).find(|&i| !queues[i].is_empty()) {
+        let b = buckets[bi];
+        let pending = queues[bi].len();
+        if pending < b_roll {
+            // Refill-over-padding: a partial tail is promoted into the next
+            // non-empty larger bucket when the extra decode steps cost less
+            // than the duplicate-padding rows they replace.
+            if let Some(bj) = (bi + 1..buckets.len()).find(|&j| !queues[j].is_empty()) {
+                let extra = pending * (buckets[bj] - b);
+                let padding = (b_roll - pending) * b;
+                if extra <= padding {
+                    while let Some(s) = queues[bi].pop_back() {
+                        queues[bj].push_front(s);
+                    }
+                    continue;
+                }
+            }
+        }
+        let mut batch: Vec<usize> = Vec::with_capacity(b_roll);
+        while batch.len() < b_roll {
+            match queues[bi].pop_front() {
+                Some(s) => batch.push(s),
+                None => break,
+            }
+        }
+
+        let mut prompts = Vec::with_capacity(b_roll * p);
+        let mut pads = Vec::with_capacity(b_roll);
+        let mut seeds = Vec::with_capacity(b_roll);
+        for row in 0..b_roll {
+            // Padding rows repeat the first slot; their output is never
+            // scattered back (the loop below iterates real slots only).
+            let si = batch.get(row).copied().unwrap_or(batch[0]);
+            let (ref ids, pad) = encoded[slots[si].prompt_idx];
+            prompts.extend_from_slice(ids);
+            pads.push(pad as i32);
+            seeds.push(slots[si].seed);
+        }
+        let gen = backend.generate_bucket(b, &prompts, &pads, &seeds, temp)?;
+        let s_len = p + b;
+        if gen.tokens.len() != b_roll * s_len || gen.lp.len() != b_roll * b {
+            bail!(
+                "generate_T{b}: bad output shapes ({} tokens, {} lp)",
+                gen.tokens.len(),
+                gen.lp.len()
+            );
+        }
+        stats.calls += 1;
+        stats.decode_token_steps += b_roll * b;
+        stats.padded_rows += b_roll - batch.len();
+        for (row, &si) in batch.iter().enumerate() {
+            let row_toks = &gen.tokens[row * s_len..(row + 1) * s_len];
+            let resp = &row_toks[p..];
+            if !resp.contains(&EOS) && b < top {
+                // No EOS within this bucket: re-decode in the next one (the
+                // per-row stream makes the longer run's prefix identical).
+                stats.escalations += 1;
+                queues[bi + 1].push_back(si);
+                continue;
+            }
+            let resp_len = trim_at_eos(resp);
+            let mut tokens = row_toks.to_vec();
+            // Canonicalize: the decode loop keeps sampling into rows that
+            // finished early until the whole batch stops, so positions past
+            // the stop point hold batch-dependent garbage — blank them to
+            // PAD so the row is a pure function of its slot.
+            for t in &mut tokens[p + resp_len..] {
+                *t = PAD;
+            }
+            tokens.resize(p + top, PAD);
+            debug_assert!(out[si].is_none(), "slot {si} scheduled twice");
+            out[si] = Some(SlotOut {
+                flat_id: slots[si].flat_id,
+                tokens,
+                resp_len,
+                lp: gen.lp[row * b..row * b + resp_len].to_vec(),
+            });
+        }
+    }
+    let outs = out.into_iter().map(|o| o.expect("rollout slot unfilled")).collect();
+    Ok((outs, stats))
+}
+
+/// Observations before the predictor trusts its histogram (cold start
+/// routes everything to the top bucket — always correct, never cheaper).
+const PREDICTOR_WARMUP: u64 = 2;
+
+/// EMA blend factor for the response-length predictor.
+const PREDICTOR_ALPHA: f64 = 0.2;
+
+/// EMA response-length predictor: picks the initial routing bucket that
+/// minimises expected decode steps per slot under the observed length
+/// distribution, accounting for the escalation chain (`b_i` is always paid;
+/// each `b_{j+1}` is paid with probability `P(len > b_j)`).
+#[derive(Clone, Debug)]
+pub struct LenPredictor {
+    hist: EmaHist,
+}
+
+impl LenPredictor {
+    pub fn new(max_len: usize) -> LenPredictor {
+        LenPredictor { hist: EmaHist::new(max_len, PREDICTOR_ALPHA) }
+    }
+
+    /// Fold one run's realised response lengths into the EMA.
+    pub fn observe(&mut self, lens: &[usize]) {
+        self.hist.observe(lens);
+    }
+
+    /// The routing bucket minimising expected decode steps per slot.
+    pub fn route(&self, buckets: &[usize]) -> usize {
+        let top = *buckets.last().expect("non-empty buckets");
+        if self.hist.steps() < PREDICTOR_WARMUP {
+            return top;
+        }
+        let mut best = (f64::INFINITY, top);
+        for i in 0..buckets.len() {
+            let mut cost = buckets[i] as f64;
+            for j in i..buckets.len() - 1 {
+                cost += self.hist.tail(buckets[j]) * buckets[j + 1] as f64;
+            }
+            if cost < best.0 {
+                best = (cost, buckets[i]);
+            }
+        }
+        best.1
+    }
+}
+
+/// The production scheduler: routing state (EMA predictor) behind a mutex
+/// so pipelined rollout workers share one instance. Routing only shapes
+/// cost — output stays a pure function of the slot plan — so cross-thread
+/// observation order is benign.
+#[derive(Debug)]
+pub struct RolloutScheduler {
+    predictor: Mutex<LenPredictor>,
+}
+
+impl RolloutScheduler {
+    pub fn new(max_resp: usize) -> RolloutScheduler {
+        RolloutScheduler { predictor: Mutex::new(LenPredictor::new(max_resp)) }
+    }
+
+    /// Route, schedule, and fold the realised lengths back into the
+    /// predictor. Returned slots are in input order.
+    pub fn run<B: RolloutBackend + ?Sized>(
+        &self,
+        backend: &B,
+        encoded: &[(Vec<i32>, usize)],
+        slots: &[SlotSpec],
+        temp: f32,
+    ) -> Result<(Vec<SlotOut>, SchedStats)> {
+        let buckets = backend.gen_buckets();
+        if buckets.is_empty() {
+            bail!("bucketed scheduling needs generate_T<b> artifacts (rebuild artifacts)");
+        }
+        let route = self.predictor.lock().expect("predictor poisoned").route(&buckets);
+        let routes = vec![route; slots.len()];
+        let (outs, stats) = schedule(backend, encoded, slots, &routes, temp)?;
+        let lens: Vec<usize> = outs.iter().map(|o| o.resp_len).collect();
+        self.predictor.lock().expect("predictor poisoned").observe(&lens);
+        Ok((outs, stats))
+    }
+}
+
+/// The legacy fixed engine, shared by training rollouts and evaluation:
+/// flat slots are chunked into full-window generate calls with ONE scalar
+/// seed drawn per chunk in chunk order, the tail chunk is padded with
+/// duplicates of its first slot, and padding rows are discarded by the
+/// scatter (which iterates real slots only). `prompt_idx[flat_id]` indexes
+/// `encoded`; `gen_call(prompts, pads, seed)` is one device call.
+pub fn run_slots_fixed<F>(
+    batch: usize,
+    prompt_len: usize,
+    max_resp: usize,
+    encoded: &[(Vec<i32>, usize)],
+    prompt_idx: &[usize],
+    rng: &mut Rng,
+    mut gen_call: F,
+) -> Result<Vec<SlotOut>>
+where
+    F: FnMut(&[i32], &[i32], i32) -> Result<GenerateOut>,
+{
+    let (p, t_max) = (prompt_len, max_resp);
+    let total = prompt_idx.len();
+    let mut out: Vec<Option<SlotOut>> = (0..total).map(|_| None).collect();
+    for chunk in plan_chunks(total, batch) {
+        let mut prompts = Vec::with_capacity(batch * p);
+        let mut pads = Vec::with_capacity(batch);
+        for row in 0..batch {
+            let flat_id = chunk.get(row).copied().unwrap_or(chunk[0]);
+            let (ref ids, pad) = encoded[prompt_idx[flat_id]];
+            prompts.extend_from_slice(ids);
+            pads.push(pad as i32);
+        }
+        let gen = gen_call(&prompts, &pads, rng.next_i32_seed())?;
+        let s = p + t_max;
+        if gen.tokens.len() != batch * s || gen.lp.len() != batch * t_max {
+            bail!(
+                "generate: bad output shapes ({} tokens, {} lp)",
+                gen.tokens.len(),
+                gen.lp.len()
+            );
+        }
+        for (row, &flat_id) in chunk.iter().enumerate() {
+            let tokens = gen.tokens[row * s..(row + 1) * s].to_vec();
+            let resp_len = trim_at_eos(&tokens[p..]);
+            out[flat_id] = Some(SlotOut {
+                flat_id,
+                resp_len,
+                lp: gen.lp[row * t_max..row * t_max + resp_len].to_vec(),
+                tokens,
+            });
+        }
+    }
+    Ok(out.into_iter().map(|o| o.expect("rollout slot unfilled")).collect())
+}
+
+/// Deterministic host-side policy simulation (benches + the
+/// scheduling-invariance tests; no PJRT). Each row's token/logprob stream
+/// is a pure hash of its `(prompt, seed)` — the exact contract the per-row
+/// `generate_T<b>` artifacts provide — so the same slot produces the same
+/// stream in any batch position and under any bucket cap.
+pub struct SimBackend {
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub buckets: Vec<usize>,
+    /// Mean of the simulated (geometric-ish) response-length distribution.
+    pub mean_len: usize,
+}
+
+impl SimBackend {
+    fn mix(mut x: u64) -> u64 {
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^ (x >> 31)
+    }
+
+    fn row_key(&self, prompt: &[i32], seed: i32) -> u64 {
+        let mut h = 0xCBF2_9CE4_8422_2325u64 ^ seed as u64;
+        for &t in prompt {
+            h = Self::mix(h ^ t as u64);
+        }
+        h
+    }
+
+    /// Simulated response length for a row stream (may exceed the top
+    /// bucket, in which case the row never emits EOS — the no-EOS path).
+    fn row_len(&self, key: u64) -> usize {
+        let u = (Self::mix(key ^ 0x4C45_4E) >> 11) as f64 / (1u64 << 53) as f64;
+        1 + (-(self.mean_len as f64) * (1.0 - u).max(1e-12).ln()) as usize
+    }
+}
+
+impl RolloutBackend for SimBackend {
+    fn gen_buckets(&self) -> Vec<usize> {
+        self.buckets.clone()
+    }
+
+    fn batch_rollout(&self) -> usize {
+        self.batch
+    }
+
+    fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    fn generate_bucket(
+        &self,
+        bucket: usize,
+        prompts: &[i32],
+        pads: &[i32],
+        seeds: &[i32],
+        _temp: f32,
+    ) -> Result<GenerateOut> {
+        let (b_roll, p) = (self.batch, self.prompt_len);
+        if prompts.len() != b_roll * p || pads.len() != b_roll || seeds.len() != b_roll {
+            bail!("sim generate_T{bucket}: bad input shapes");
+        }
+        let s = p + bucket;
+        let mut tokens = vec![PAD; b_roll * s];
+        let mut lp = vec![0.0f32; b_roll * bucket];
+        for row in 0..b_roll {
+            let prompt = &prompts[row * p..(row + 1) * p];
+            tokens[row * s..row * s + p].copy_from_slice(prompt);
+            let key = self.row_key(prompt, seeds[row]);
+            let len = self.row_len(key);
+            for t in 0..bucket.min(len) {
+                let draw = Self::mix(key ^ (t as u64).wrapping_mul(0x9E37_79B9));
+                tokens[row * s + p + t] =
+                    if t == len - 1 { EOS } else { 3 + (draw % 61) as i32 };
+                lp[row * bucket + t] = -0.01 - (draw >> 32) as f32 / u32::MAX as f32;
+            }
+        }
+        Ok(GenerateOut { tokens, lp })
+    }
+}
+
+/// The default simulated rollout workload: the paper's post-RL regime
+/// (mostly short responses with a long tail) over the learner's bucket
+/// grid at bulk scale. ONE definition shared by `benches/bench_rollout.rs`
+/// (which writes `BENCH_rollout.json`) and the tier-1 decode-step
+/// acceptance test, so the perf record and the CI gate always measure the
+/// same workload.
+pub mod sim_workload {
+    use super::{slot_seed, SimBackend, SlotSpec};
+
+    pub const BATCH: usize = 8;
+    pub const PROMPT_LEN: usize = 48;
+    pub const BUCKETS: [usize; 4] = [32, 64, 96, 128];
+    pub const MEAN_RESP_LEN: usize = 24;
+    /// prompts_per_step × G at bulk scale.
+    pub const SLOTS_PER_STEP: usize = 64;
+    pub const STEPS: u64 = 12;
+    pub const RUN_SEED: u64 = 17;
+    const N_PROMPTS: usize = 16;
+
+    pub fn backend() -> SimBackend {
+        SimBackend {
+            batch: BATCH,
+            prompt_len: PROMPT_LEN,
+            buckets: BUCKETS.to_vec(),
+            mean_len: MEAN_RESP_LEN,
+        }
+    }
+
+    pub fn prompts() -> Vec<(Vec<i32>, usize)> {
+        (0..N_PROMPTS)
+            .map(|i| {
+                let mut row = vec![0i32; PROMPT_LEN];
+                for (t, slot) in row.iter_mut().enumerate().skip(4) {
+                    *slot = 3 + ((i * 13 + t * 7) % 50) as i32;
+                }
+                (row, 4)
+            })
+            .collect()
+    }
+
+    pub fn slots(step: u64) -> Vec<SlotSpec> {
+        (0..SLOTS_PER_STEP)
+            .map(|f| SlotSpec {
+                flat_id: f,
+                prompt_idx: f % N_PROMPTS,
+                seed: slot_seed(RUN_SEED, step, f as u64),
+            })
+            .collect()
+    }
+
+    /// The fixed engine's allocation for the same workload: every chunk
+    /// decodes the full top-bucket window over the whole device batch.
+    pub fn fixed_decode_steps() -> usize {
+        let top = *BUCKETS.last().unwrap();
+        STEPS as usize * SLOTS_PER_STEP.div_ceil(BATCH) * BATCH * top
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(batch: usize, buckets: &[usize], mean_len: usize) -> SimBackend {
+        SimBackend { batch, prompt_len: 6, buckets: buckets.to_vec(), mean_len }
+    }
+
+    fn encoded_prompts(n: usize, p: usize) -> Vec<(Vec<i32>, usize)> {
+        (0..n)
+            .map(|i| {
+                let mut row = vec![PAD; p];
+                for (t, slot) in row.iter_mut().enumerate().skip(1) {
+                    *slot = 3 + ((i * 7 + t * 3) % 50) as i32;
+                }
+                (row, 1)
+            })
+            .collect()
+    }
+
+    fn slots_for(n_prompts: usize, g: usize, seed: u64, step: u64) -> Vec<SlotSpec> {
+        (0..n_prompts * g)
+            .map(|f| SlotSpec {
+                flat_id: f,
+                prompt_idx: f / g,
+                seed: slot_seed(seed, step, f as u64),
+            })
+            .collect()
+    }
+
+    /// Bit-comparable fingerprint of a scheduled run, sorted by flat id.
+    fn canon(outs: &[SlotOut]) -> Vec<(usize, usize, Vec<i32>, Vec<u32>)> {
+        let mut v: Vec<_> = outs
+            .iter()
+            .map(|o| {
+                (
+                    o.flat_id,
+                    o.resp_len,
+                    o.tokens.clone(),
+                    o.lp.iter().map(|x| x.to_bits()).collect(),
+                )
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn slot_seed_is_pure_and_decorrelated() {
+        assert_eq!(slot_seed(7, 3, 11), slot_seed(7, 3, 11));
+        let mut seen = std::collections::HashSet::new();
+        for step in 0..8u64 {
+            for flat in 0..64u64 {
+                let s = slot_seed(42, step, flat);
+                assert!(s >= 0);
+                seen.insert(s);
+            }
+        }
+        // full avalanche: essentially no collisions across nearby inputs
+        assert!(seen.len() >= 8 * 64 - 1, "{}", seen.len());
+        assert_ne!(slot_seed(1, 0, 0), slot_seed(2, 0, 0));
+        assert_ne!(slot_seed(1, 0, 0), slot_seed(1, 1, 0));
+        assert_ne!(slot_seed(1, 0, 0), slot_seed(1, 0, 1));
+    }
+
+    #[test]
+    fn schedule_fills_every_slot_once_and_trims_eos() {
+        let backend = sim(4, &[8, 16, 32], 6);
+        let encoded = encoded_prompts(3, 6);
+        let slots = slots_for(3, 3, 1, 0);
+        let routes = vec![8; slots.len()];
+        let (outs, stats) = schedule(&backend, &encoded, &slots, &routes, 1.0).unwrap();
+        assert_eq!(outs.len(), 9);
+        for (i, o) in outs.iter().enumerate() {
+            assert_eq!(o.flat_id, i);
+            assert_eq!(o.tokens.len(), 6 + 32);
+            assert!(o.resp_len >= 1 && o.resp_len <= 32);
+            assert_eq!(o.lp.len(), o.resp_len);
+            // prompt region preserved verbatim
+            assert_eq!(&o.tokens[..6], &encoded[i / 3].0[..]);
+            // past the stop point the row is PAD
+            assert!(o.tokens[6 + o.resp_len..].iter().all(|&t| t == PAD));
+        }
+        assert!(stats.calls > 0);
+        assert_eq!(stats.decode_token_steps % 4, 0);
+    }
+
+    #[test]
+    fn overflow_rows_escalate_to_the_next_bucket() {
+        // mean_len 40 over buckets [8, 64]: most rows overflow bucket 8
+        // when routed there and must re-decode at 64.
+        let backend = sim(2, &[8, 64], 40);
+        let encoded = encoded_prompts(2, 6);
+        let slots = slots_for(2, 2, 9, 1);
+        let routes = [8usize; 4];
+        let (outs, stats) = schedule(&backend, &encoded, &slots, &routes, 1.0).unwrap();
+        assert_eq!(outs.len(), 4);
+        assert!(stats.escalations > 0, "{stats:?}");
+        // ...and the no-EOS path: rows longer than the top bucket report
+        // the full window.
+        assert!(outs.iter().all(|o| o.resp_len <= 64));
+    }
+
+    /// The tentpole invariance contract: the same slot plan yields
+    /// byte-identical outputs for ANY batch size, bucket grid (same top),
+    /// and initial routing — scheduling shapes cost only.
+    #[test]
+    fn outputs_are_invariant_to_batch_buckets_and_routing() {
+        let top = 48usize;
+        let encoded = encoded_prompts(5, 6);
+        for case in 0..40u64 {
+            let mut rng = crate::util::rng::Rng::new(0xC0FFEE ^ case);
+            let g = 1 + rng.below(4) as usize;
+            let slots = slots_for(5, g, case, rng.below(100));
+            let mean = 4 + rng.below(40) as usize;
+            // reference: single-bucket grid (everything decodes at top)
+            let reference = {
+                let backend = sim(4, &[top], mean);
+                let routes = vec![top; slots.len()];
+                canon(&schedule(&backend, &encoded, &slots, &routes, 1.0).unwrap().0)
+            };
+            let grids: [&[usize]; 4] =
+                [&[top], &[12, top], &[8, 16, 24, top], &[6, 12, 18, 24, 30, 36, 42, top]];
+            for _ in 0..3 {
+                let batch = 1 + rng.below(9) as usize;
+                let grid = grids[rng.below(grids.len() as u64) as usize];
+                let backend = sim(batch, grid, mean);
+                // adversarial routing: arbitrary initial buckets per slot
+                let routes: Vec<usize> =
+                    slots.iter().map(|_| 1 + rng.below(top as u64) as usize).collect();
+                let (outs, _) = schedule(&backend, &encoded, &slots, &routes, 1.0).unwrap();
+                assert_eq!(canon(&outs), reference, "case {case} batch {batch} {grid:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn predictor_cold_start_routes_top_then_adapts() {
+        let buckets = [16usize, 32, 64];
+        let mut p = LenPredictor::new(64);
+        assert_eq!(p.route(&buckets), 64);
+        p.observe(&[4, 5, 6, 7]);
+        assert_eq!(p.route(&buckets), 64, "one observation is still warm-up");
+        p.observe(&[4, 5, 6, 7]);
+        // all mass <= 16: expected cost 16 beats 32/64
+        assert_eq!(p.route(&buckets), 16);
+        // shift the distribution long: routing follows
+        let mut p = LenPredictor::new(64);
+        for _ in 0..8 {
+            p.observe(&[60, 61, 62, 63]);
+        }
+        assert_eq!(p.route(&buckets), 64);
+    }
+
+    #[test]
+    fn predictor_accounts_for_escalation_cost() {
+        // Half the mass at <=16, half at <=64: routing at 16 costs
+        // 16 + 0.5*32 + 0.5*64 = 64, routing at 32 costs 32 + 0.5*64 = 64,
+        // routing at 64 costs 64 — all tied here; make the long half
+        // dominant so low routing is strictly worse and top wins.
+        let buckets = [16usize, 32, 64];
+        let mut p = LenPredictor::new(64);
+        for _ in 0..8 {
+            p.observe(&[10, 60, 60, 60]);
+        }
+        assert_eq!(p.route(&buckets), 64);
+    }
+
+    #[test]
+    fn partial_tails_promote_instead_of_padding_when_cheaper() {
+        // 1 slot pending at bucket 8 + work pending at 16, batch 4: padding
+        // would burn 3×8 = 24 steps, promotion costs 1×(16-8) = 8 → the
+        // scheduler must merge the tail upward (no padded rows at all when
+        // the merged bucket fills exactly).
+        let backend = sim(4, &[8, 16], 3);
+        let encoded = encoded_prompts(4, 6);
+        let slots = slots_for(4, 1, 3, 0);
+        let routes = [8usize, 16, 16, 16];
+        let (_, stats) = schedule(&backend, &encoded, &slots, &routes, 1.0).unwrap();
+        assert_eq!(stats.calls, 1, "{stats:?}");
+        assert_eq!(stats.padded_rows, 0, "{stats:?}");
+        assert_eq!(stats.decode_token_steps, 4 * 16);
+    }
+
+    #[test]
+    fn scheduler_run_warms_predictor_and_cuts_cost() {
+        // Short-response policy (mean 6) over buckets up to 64: after the
+        // predictor warms up, scheduled decode steps must undercut the
+        // fixed engine's total-slots × top allocation by well over 25%.
+        let backend = sim(8, &[8, 16, 32, 64], 6);
+        let encoded = encoded_prompts(8, 6);
+        let sched = RolloutScheduler::new(64);
+        let mut warm_steps = 0usize;
+        for step in 0..6u64 {
+            let slots = slots_for(8, 2, 11, step);
+            let (outs, stats) = sched.run(&backend, &encoded, &slots, 1.0).unwrap();
+            assert_eq!(outs.len(), 16);
+            if step >= 2 {
+                warm_steps += stats.decode_token_steps;
+            }
+        }
+        let fixed_steps = 4 * (16usize.div_ceil(8) * 8 * 64); // 4 warm runs
+        // Loose bound here (a tiny 16-slot workload has lumpy escalation
+        // counts); the ≥25% acceptance runs in bench_rollout at bulk scale.
+        assert!(
+            (warm_steps as f64) < 0.85 * fixed_steps as f64,
+            "bucketed {warm_steps} vs fixed {fixed_steps}"
+        );
+    }
+
+    #[test]
+    fn fixed_engine_matches_the_legacy_loop_bit_for_bit() {
+        // The refactored shared fixed path must reproduce the pre-scheduler
+        // implementation exactly: same chunking, same one-seed-per-chunk rng
+        // consumption, same duplicate-padded tail, same scatter.
+        let (batch, p, t_max) = (4usize, 6usize, 16usize);
+        let encoded = encoded_prompts(3, p);
+        let prompt_idx: Vec<usize> = (0..7).map(|f| f / 3).collect();
+        let sim_gen = |prompts: &[i32], _pads: &[i32], seed: i32| -> Result<GenerateOut> {
+            // scalar-seed mock: each row's stream hashes (call seed, row)
+            let s = p + t_max;
+            let mut tokens = vec![PAD; batch * s];
+            let mut lp = vec![0.0f32; batch * t_max];
+            for row in 0..batch {
+                tokens[row * s..row * s + p].copy_from_slice(&prompts[row * p..(row + 1) * p]);
+                let key = SimBackend::mix(seed as u64 ^ ((row as u64) << 32));
+                let len = 1 + (key % t_max as u64) as usize;
+                for t in 0..len {
+                    let draw = SimBackend::mix(key ^ t as u64);
+                    tokens[row * s + p + t] =
+                        if t == len - 1 { EOS } else { 3 + (draw % 61) as i32 };
+                    lp[row * t_max + t] = -(draw % 97) as f32 / 97.0 - 0.01;
+                }
+            }
+            Ok(GenerateOut { tokens, lp })
+        };
+        // legacy reference, transcribed from the pre-PR run_group_rollouts
+        let mut rng = crate::util::rng::Rng::new(55);
+        let mut legacy: Vec<Option<(Vec<i32>, usize, Vec<f32>)>> = vec![None; 7];
+        for chunk in plan_chunks(7, batch) {
+            let mut prompts = Vec::new();
+            let mut pads = Vec::new();
+            for row in 0..batch {
+                let flat_id = chunk.get(row).copied().unwrap_or(chunk[0]);
+                let (ref ids, pad) = encoded[prompt_idx[flat_id]];
+                prompts.extend_from_slice(ids);
+                pads.push(pad as i32);
+            }
+            let gen = sim_gen(&prompts, &pads, rng.next_i32_seed()).unwrap();
+            for (row, &flat_id) in chunk.iter().enumerate() {
+                let s = p + t_max;
+                let tokens = gen.tokens[row * s..(row + 1) * s].to_vec();
+                let resp_len = trim_at_eos(&tokens[p..]);
+                let lp = gen.lp[row * t_max..row * t_max + resp_len].to_vec();
+                legacy[flat_id] = Some((tokens, resp_len, lp));
+            }
+        }
+        let mut rng2 = crate::util::rng::Rng::new(55);
+        let outs =
+            run_slots_fixed(batch, p, t_max, &encoded, &prompt_idx, &mut rng2, sim_gen).unwrap();
+        for (o, l) in outs.iter().zip(&legacy) {
+            let (tokens, resp_len, lp) = l.as_ref().unwrap();
+            assert_eq!(&o.tokens, tokens);
+            assert_eq!(o.resp_len, *resp_len);
+            assert_eq!(&o.lp, lp);
+        }
+        // identical rng consumption: both streams are at the same point
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn schedule_rejects_bad_inputs() {
+        let backend = sim(2, &[8, 16], 4);
+        let encoded = encoded_prompts(1, 6);
+        let slots = slots_for(1, 1, 0, 0);
+        assert!(schedule(&backend, &encoded, &slots, &[], 1.0).is_err());
+        let empty = SimBackend { batch: 2, prompt_len: 6, buckets: vec![], mean_len: 4 };
+        assert!(schedule(&empty, &encoded, &slots, &[8], 1.0).is_err());
+        let unsorted = SimBackend { batch: 2, prompt_len: 6, buckets: vec![16, 8], mean_len: 4 };
+        assert!(schedule(&unsorted, &encoded, &slots, &[8], 1.0).is_err());
+    }
+
+    #[test]
+    fn empty_slot_list_is_a_noop() {
+        let backend = sim(2, &[8], 4);
+        let (outs, stats) = schedule(&backend, &[], &[], &[], 1.0).unwrap();
+        assert!(outs.is_empty());
+        assert_eq!(stats.calls, 0);
+    }
+}

@@ -15,10 +15,13 @@
 //! * [`learn_stage`]   — forward/backward/apply on a completed group.
 //!
 //! Every per-step random stream (task sampling, rollout seeds, NAT masks) is
-//! derived as a pure function of `(cfg.seed, step)` via [`plan_step`], so
-//! (a) rollout workers can plan any future step without having consumed the
-//! previous ones, and (b) resuming from a checkpointed step reproduces the
-//! uninterrupted run exactly.
+//! derived as a pure function of `(cfg.seed, step)` via [`plan_step`] —
+//! under the bucketed rollout engine, per-slot sampling seeds go one level
+//! deeper, `(cfg.seed, step, flat_id)` — so (a) rollout workers can plan any
+//! future step without having consumed the previous ones, and (b) resuming
+//! from a checkpointed step reproduces the uninterrupted run exactly (the
+//! `--train.auto_buckets` tuner, the one cross-step learner state outside
+//! this scheme, is serialized into `TrainMeta`).
 //!
 //! Timing is split exactly as in the paper's Table 3: `t_learn` is the
 //! train-time-per-step *excluding inference*, `t_total` includes rollout.
@@ -27,12 +30,13 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{Packer, RunConfig};
+use crate::config::{Packer, RolloutEngine, RunConfig};
 use crate::coordinator::batcher::{
     allocated_tokens, ideal_tokens, micro_shapes, pack, pack_budget, split_zero_contribution,
     LearnItem, MicroBatch,
 };
-use crate::coordinator::bucket_tuner::BucketTuner;
+use crate::coordinator::bucket_tuner::{BucketTuner, TunerState};
+use crate::coordinator::rollout::scheduler::RolloutScheduler;
 use crate::coordinator::rollout::RolloutSeq;
 use crate::coordinator::{advantage, masking, rollout};
 use crate::metrics::Recorder;
@@ -123,23 +127,46 @@ pub struct RolloutGroup {
 /// Stage 1 — inference. Pure with respect to `params`: the caller decides
 /// which parameter snapshot the behaviour policy uses (the pipelined trainer
 /// passes a possibly-stale published snapshot).
+///
+/// Engine dispatch: the bucketed scheduler derives per-slot seeds from
+/// `(cfg.seed, step, flat_id)` — the rollout is a pure function of the plan
+/// regardless of routing or refill order. The fixed engine replays the
+/// legacy chunk-order scalar-seed stream (`plan.rng_rollout`); it is also
+/// the automatic fallback when the artifact set predates `generate_buckets`.
 pub fn rollout_stage(
     rt: &Runtime,
     params: &ParamStore,
     tok: &Tokenizer,
     cfg: &RunConfig,
+    sched: &RolloutScheduler,
     plan: &mut StepPlan,
 ) -> Result<RolloutGroup> {
     let t0 = Instant::now();
-    let seqs = rollout::run_group_rollouts(
-        rt,
-        params,
-        tok,
-        &plan.tasks,
-        cfg.rl.group_size,
-        cfg.rl.temperature,
-        &mut plan.rng_rollout,
-    )?;
+    let bucketed = cfg.rollout.engine == RolloutEngine::Bucketed
+        && !rt.manifest.generate_files.is_empty();
+    let seqs = if bucketed {
+        rollout::run_group_rollouts_bucketed(
+            rt,
+            params,
+            tok,
+            &plan.tasks,
+            cfg.rl.group_size,
+            cfg.rl.temperature,
+            cfg.seed,
+            plan.step,
+            sched,
+        )?
+    } else {
+        rollout::run_group_rollouts(
+            rt,
+            params,
+            tok,
+            &plan.tasks,
+            cfg.rl.group_size,
+            cfg.rl.temperature,
+            &mut plan.rng_rollout,
+        )?
+    };
     Ok(RolloutGroup { step: plan.step, seqs, t_rollout_s: t0.elapsed().as_secs_f64() })
 }
 
@@ -312,6 +339,7 @@ pub(crate) fn post_step(
     cfg: &RunConfig,
     recorder: &mut Recorder,
     params: &ParamStore,
+    sched: Option<&RolloutScheduler>,
     s: &StepStats,
     verbose: bool,
 ) -> Result<()> {
@@ -323,6 +351,7 @@ pub(crate) fn post_step(
             cfg.eval.k,
             cfg.rl.temperature,
             cfg.seed ^ s.step,
+            sched,
         )?;
         for e in &evals {
             recorder.push(&format!("acc_{}", e.tier.benchmark_name()), s.step, e.acc_at_k);
@@ -358,14 +387,17 @@ pub(crate) fn post_step(
 }
 
 /// Mid-run checkpointing: every `cfg.rl.ckpt_every` completed steps, save
-/// params + optimizer state + train meta to the run's rolling checkpoint
-/// path (`nat train --resume <path>` continues from it). Returns the path
+/// params + optimizer state + train meta (including the auto-tuner's EMA
+/// state, the one cross-step learner state not derivable from
+/// `(seed, step)`) to the run's rolling checkpoint path
+/// (`nat train --resume <path>` continues from it). Returns the path
 /// written, if any.
 pub(crate) fn maybe_checkpoint(
     rt: &Runtime,
     cfg: &RunConfig,
     params: &ParamStore,
     opt: &OptState,
+    tuner: Option<&BucketTuner>,
     completed_step: u64,
 ) -> Result<Option<String>> {
     if cfg.rl.ckpt_every == 0 || completed_step % cfg.rl.ckpt_every as u64 != 0 {
@@ -377,7 +409,11 @@ pub(crate) fn maybe_checkpoint(
         &rt.manifest,
         params,
         opt,
-        &TrainMeta { step: completed_step, seed: cfg.seed },
+        &TrainMeta {
+            step: completed_step,
+            seed: cfg.seed,
+            tuner: tuner.map(BucketTuner::state),
+        },
     )?;
     Ok(Some(path))
 }
@@ -391,6 +427,11 @@ pub struct Trainer<'rt> {
     pub recorder: Recorder,
     acc: GradAccum,
     tuner: Option<BucketTuner>,
+    sched: RolloutScheduler,
+    /// Separate routing state for in-training evaluation: eval response
+    /// lengths (different task mix, k samples) must not fold into the
+    /// TRAINING predictor's EMA and skew rollout routing cost.
+    eval_sched: RolloutScheduler,
     step: u64,
 }
 
@@ -419,6 +460,8 @@ impl<'rt> Trainer<'rt> {
             recorder: Recorder::new(),
             acc: GradAccum::zeros(rt.manifest.param_count),
             tuner: make_tuner(rt, &cfg),
+            sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
+            eval_sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
             cfg,
             step: 0,
         }
@@ -436,11 +479,33 @@ impl<'rt> Trainer<'rt> {
         self.step = step;
     }
 
+    /// Restore the auto-tuner's EMA state from a resumed checkpoint (no-op
+    /// when the config does not use `--train.auto_buckets`).
+    pub fn restore_tuner(&mut self, state: Option<&TunerState>) {
+        if let (Some(t), Some(s)) = (self.tuner.as_mut(), state) {
+            *t = BucketTuner::from_state(s.clone());
+        }
+    }
+
+    /// Snapshot the auto-tuner's EMA state for checkpointing.
+    pub fn tuner_state(&self) -> Option<TunerState> {
+        self.tuner.as_ref().map(BucketTuner::state)
+    }
+
+    /// Scheduler handle for engine-aware evaluation (None under the fixed
+    /// engine — evaluation then replays the legacy chunked loop). This is
+    /// an eval-scoped scheduler, NOT the training one, so eval lengths
+    /// never pollute training routing.
+    pub fn eval_sched(&self) -> Option<&RolloutScheduler> {
+        (self.cfg.rollout.engine == RolloutEngine::Bucketed).then_some(&self.eval_sched)
+    }
+
     /// Run one optimizer step; returns its statistics.
     pub fn step(&mut self) -> Result<StepStats> {
         let t_start = Instant::now();
         let mut plan = plan_step(&self.cfg, self.step);
-        let group = rollout_stage(self.rt, &self.params, &self.tok, &self.cfg, &mut plan)?;
+        let group =
+            rollout_stage(self.rt, &self.params, &self.tok, &self.cfg, &self.sched, &mut plan)?;
         let mut stats = learn_stage(
             self.rt,
             &self.cfg,
@@ -466,10 +531,17 @@ impl<'rt> Trainer<'rt> {
     pub fn train(&mut self, n: usize, verbose: bool) -> Result<()> {
         for _ in 0..n {
             let s = self.step()?;
-            post_step(self.rt, &self.cfg, &mut self.recorder, &self.params, &s, verbose)?;
-            if let Some(path) =
-                maybe_checkpoint(self.rt, &self.cfg, &self.params, &self.opt, s.step)?
-            {
+            let sched = (self.cfg.rollout.engine == RolloutEngine::Bucketed)
+                .then_some(&self.eval_sched);
+            post_step(self.rt, &self.cfg, &mut self.recorder, &self.params, sched, &s, verbose)?;
+            if let Some(path) = maybe_checkpoint(
+                self.rt,
+                &self.cfg,
+                &self.params,
+                &self.opt,
+                self.tuner.as_ref(),
+                s.step,
+            )? {
                 if verbose {
                     println!("  checkpoint @ step {}: {path}", s.step);
                 }

@@ -30,6 +30,7 @@ pub fn run_rl(
         cfg.eval.k,
         cfg.rl.temperature,
         cfg.seed,
+        tr.eval_sched(),
     )?;
     Ok(RunResult { method: cfg.method, seed: cfg.seed, recorder: tr.recorder, evals })
 }

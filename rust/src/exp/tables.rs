@@ -16,7 +16,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::config::{Method, RunConfig};
+use crate::config::{Method, RolloutEngine, RunConfig};
 use crate::coordinator::pretrainer;
 use crate::exp::aggregate::{curve_mean_ci, step_mean_then_ci, tail_mean_then_ci};
 use crate::exp::runs::{run_rl, RunResult};
@@ -97,6 +97,9 @@ pub fn run_sweep(
     // timings (GRPO is swept first and would absorb the cost).
     let t0 = std::time::Instant::now();
     rt.warmup(&rt.manifest.dims.buckets.clone())?;
+    if base_cfg.rollout.engine == RolloutEngine::Bucketed {
+        rt.warmup_generate_buckets()?;
+    }
     println!("[repro] artifact warmup: {:.1}s", t0.elapsed().as_secs_f64());
     let mut results = Vec::new();
     let total = methods.len() as u64 * seeds;

@@ -14,8 +14,10 @@ use std::path::Path;
 
 use anyhow::{bail, Result};
 
-use nat_rl::config::RunConfig;
+use nat_rl::config::{Packer, RolloutEngine, RunConfig};
+use nat_rl::coordinator::bucket_tuner::TunerState;
 use nat_rl::coordinator::pipeline::PipelineTrainer;
+use nat_rl::coordinator::rollout::scheduler::RolloutScheduler;
 use nat_rl::coordinator::{evaluator, pretrainer, trainer::Trainer};
 use nat_rl::exp;
 use nat_rl::metrics::Recorder;
@@ -58,6 +60,13 @@ fn print_help() {
            --pipeline.max_staleness S max optimizer-step lag per group (default 1)\n\
            --rl.ckpt_every N          write a resumable checkpoint every N steps\n\
            --resume path.bin          continue a mid-run checkpoint exactly\n\n\
+         ROLLOUT (train/eval):\n\
+           --rollout.engine E         bucketed (default) = length-bucketed\n\
+                                      continuous batching with per-slot seeds\n\
+                                      derived from (seed, step, flat_id) —\n\
+                                      scheduling-invariant rollouts; fixed =\n\
+                                      legacy full-window chunked generate\n\
+                                      (auto-fallback for legacy artifacts)\n\n\
          PACKING (train):\n\
            --train.packer P           budget (default) = token-budget packing in\n\
                                       the 2-D (bucket x rows) artifact grid;\n\
@@ -65,7 +74,8 @@ fn print_help() {
            --train.token_budget B     max rows*(P+bucket) tokens per micro-batch\n\
                                       (0 = auto: batch_train*(P+top bucket))\n\
            --train.auto_buckets true  EMA-tune bucket routing edges to the\n\
-                                      observed learn_len distribution"
+                                      observed learn_len distribution (state\n\
+                                      is checkpointed; resume is exact)"
     );
 }
 
@@ -136,35 +146,57 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = Runtime::load(&cfg.artifact_dir())?;
 
     // Starting state: --resume beats --ckpt beats the default SFT checkpoint.
-    let (params, opt, start_step) = match args.get("resume") {
-        Some(p) => {
-            let (params, opt, train) = Checkpoint::load_full(Path::new(p), &rt.manifest)?;
-            let opt = opt.unwrap_or_else(|| OptState::zeros(&rt.manifest));
-            let start = match train {
-                Some(t) => {
-                    if t.seed != cfg.seed {
-                        println!(
-                            "WARNING: checkpoint was trained with seed {} but this run \
-                             uses seed {}; the continuation will not reproduce the \
-                             original stream (pass --seed {} to match)",
-                            t.seed, cfg.seed, t.seed
-                        );
+    let (params, opt, start_step, tuner0): (_, _, u64, Option<TunerState>) =
+        match args.get("resume") {
+            Some(p) => {
+                let (params, opt, train) = Checkpoint::load_full(Path::new(p), &rt.manifest)?;
+                let opt = opt.unwrap_or_else(|| OptState::zeros(&rt.manifest));
+                let (start, tuner0) = match train {
+                    Some(t) => {
+                        if t.seed != cfg.seed {
+                            println!(
+                                "WARNING: checkpoint was trained with seed {} but this run \
+                                 uses seed {}; the continuation will not reproduce the \
+                                 original stream (pass --seed {} to match)",
+                                t.seed, cfg.seed, t.seed
+                            );
+                        }
+                        (t.step, t.tuner)
                     }
-                    t.step
-                }
-                None => {
+                    None => {
+                        println!(
+                            "note: {p} has no training state (params-only checkpoint); \
+                             starting from step 0"
+                        );
+                        (0, None)
+                    }
+                };
+                // Exact-resume contract check for the auto-bucket tuner
+                // (mirrors the seed-mismatch warning above): silently
+                // dropping or cold-starting the EMA state would make the
+                // continuation diverge from the uninterrupted run.
+                let uses_tuner =
+                    cfg.train.auto_buckets && cfg.train.packer == Packer::Budget;
+                if uses_tuner && tuner0.is_none() && start > 0 {
                     println!(
-                        "note: {p} has no training state (params-only checkpoint); \
-                         starting from step 0"
+                        "WARNING: --train.auto_buckets is on but {p} carries no tuner \
+                         state; the tuner cold-starts and the continuation will not \
+                         reproduce the original run's routing"
                     );
-                    0
+                } else if !uses_tuner && tuner0.is_some() {
+                    println!(
+                        "WARNING: {p} carries auto-bucket tuner state but this run \
+                         does not use it; routing reverts to static edges (pass \
+                         --train.auto_buckets true to continue the original run)"
+                    );
                 }
-            };
-            println!("resuming from {p} at step {start}");
-            (params, opt, start)
-        }
-        None => (load_ckpt_or_init(args, &cfg, &rt)?, OptState::zeros(&rt.manifest), 0),
-    };
+                println!("resuming from {p} at step {start}");
+                (params, opt, start, tuner0)
+            }
+            None => {
+                (load_ckpt_or_init(args, &cfg, &rt)?, OptState::zeros(&rt.manifest), 0, None)
+            }
+        };
 
     let remaining = (cfg.rl.steps as u64).saturating_sub(start_step) as usize;
     println!(
@@ -192,21 +224,30 @@ fn cmd_train(args: &Args) -> Result<()> {
     let seed = cfg.seed;
     let eval_cfg = cfg.eval.clone();
     let temperature = cfg.rl.temperature;
+    let engine = cfg.rollout.engine;
 
     // Serial and pipelined trainers share the stage functions and metric
     // series; which one runs is purely a scheduling choice.
-    let (final_params, final_opt, recorder): (ParamStore, OptState, Recorder) =
-        if cfg.pipeline.workers > 0 {
-            let mut tr = PipelineTrainer::new(&rt, cfg, params, opt);
-            tr.set_start_step(start_step);
-            tr.train(remaining, true)?;
-            (tr.params, tr.opt, tr.recorder)
-        } else {
-            let mut tr = Trainer::new(&rt, cfg, params, opt);
-            tr.set_start_step(start_step);
-            tr.train(remaining, true)?;
-            (tr.params, tr.opt, tr.recorder)
-        };
+    let (final_params, final_opt, recorder, tuner_fin): (
+        ParamStore,
+        OptState,
+        Recorder,
+        Option<TunerState>,
+    ) = if cfg.pipeline.workers > 0 {
+        let mut tr = PipelineTrainer::new(&rt, cfg, params, opt);
+        tr.set_start_step(start_step);
+        tr.restore_tuner(tuner0.as_ref());
+        tr.train(remaining, true)?;
+        let ts = tr.tuner_state();
+        (tr.params, tr.opt, tr.recorder, ts)
+    } else {
+        let mut tr = Trainer::new(&rt, cfg, params, opt);
+        tr.set_start_step(start_step);
+        tr.restore_tuner(tuner0.as_ref());
+        tr.train(remaining, true)?;
+        let ts = tr.tuner_state();
+        (tr.params, tr.opt, tr.recorder, ts)
+    };
 
     // A continuation only holds steps start+1.., so it must not clobber the
     // original run's metric files (and an already-complete run writes none).
@@ -221,18 +262,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("metrics: {base}.csv");
     }
     if let Some(out) = args.get("out") {
-        // Full training state, so `--resume <out>` continues rather than
-        // replaying from step 0 on top of trained params.
+        // Full training state (including tuner EMA), so `--resume <out>`
+        // continues rather than replaying from step 0 on top of trained
+        // params.
         Checkpoint::save_train(
             Path::new(out),
             &rt.manifest,
             &final_params,
             &final_opt,
-            &TrainMeta { step: start_step + remaining as u64, seed },
+            &TrainMeta { step: start_step + remaining as u64, seed, tuner: tuner_fin },
         )?;
         println!("saved trained checkpoint to {out}");
     }
     // final eval
+    let eval_sched = (engine == RolloutEngine::Bucketed)
+        .then(|| RolloutScheduler::new(rt.manifest.dims.max_resp));
     let evals = evaluator::evaluate_all_tiers(
         &rt,
         &final_params,
@@ -240,6 +284,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_cfg.k,
         temperature,
         seed,
+        eval_sched.as_ref(),
     )?;
     for e in evals {
         println!(
@@ -254,6 +299,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let rt = Runtime::load(&cfg.artifact_dir())?;
     let params = load_ckpt_or_init(args, &cfg, &rt)?;
+    let sched = (cfg.rollout.engine == RolloutEngine::Bucketed)
+        .then(|| RolloutScheduler::new(rt.manifest.dims.max_resp));
     let evals = evaluator::evaluate_all_tiers(
         &rt,
         &params,
@@ -261,6 +308,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         cfg.eval.k,
         cfg.rl.temperature,
         cfg.seed,
+        sched.as_ref(),
     )?;
     println!("benchmark     Acc@{:<3} pass@{:<3} len", cfg.eval.k, cfg.eval.k);
     for e in evals {

@@ -45,6 +45,11 @@ pub struct Manifest {
     pub generate_file: String,
     /// Fixed-trip-count rollout variant (perf A/B; §Perf opt-1).
     pub generate_full_file: Option<String>,
+    /// (bucket, filename), ascending by bucket: per-response-bucket
+    /// generate artifacts (`generate_T<b>`) with PER-ROW sampling seeds —
+    /// the bucketed rollout scheduler's grid. Empty in legacy manifests,
+    /// where only the fixed engine can run.
+    pub generate_files: Vec<(usize, String)>,
     pub apply_file: String,
     pub pretrain_file: String,
     /// (bucket, filename), ascending by bucket. Full-row (`batch_train`)
@@ -164,6 +169,27 @@ impl Manifest {
         if grad_files.iter().map(|(b, _)| *b).collect::<Vec<_>>() != buckets {
             bail!("grad buckets do not match config buckets");
         }
+        // Optional per-bucket generate grid. Every key must be a config
+        // bucket, and a non-empty grid must include the top bucket — the
+        // scheduler's escalation chain terminates there (a grid without it
+        // could never finish a full-length response).
+        let generate_files = if arts.get("generate_buckets").is_some() {
+            let files = bucket_map("generate_buckets")?;
+            for &(b, _) in &files {
+                if !buckets.contains(&b) {
+                    bail!("generate bucket {b} is not a config bucket {buckets:?}");
+                }
+            }
+            if files.last().map(|&(b, _)| b) != Some(dims.max_resp) {
+                bail!(
+                    "generate_buckets must include the top bucket {} (max_resp)",
+                    dims.max_resp
+                );
+            }
+            files
+        } else {
+            Vec::new()
+        };
         // Optional 2-D grid: {"<bucket>x<rows>": file}. Every key must name
         // a real sequence bucket and a batch dimension <= batch_train.
         let mut grad_row_files: Vec<((usize, usize), String)> = Vec::new();
@@ -194,6 +220,7 @@ impl Manifest {
                 .get("generate_full")
                 .and_then(Json::as_str)
                 .map(str::to_string),
+            generate_files,
             apply_file: file("apply")?,
             pretrain_file: file("pretrain")?,
             grad_files,
@@ -256,6 +283,20 @@ impl Manifest {
             })
     }
 
+    /// Per-row-seed generate artifact for one response bucket.
+    pub fn generate_file_for(&self, bucket: usize) -> Result<&str> {
+        self.generate_files
+            .iter()
+            .find(|&&(b, _)| b == bucket)
+            .map(|(_, f)| f.as_str())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no generate artifact for bucket {bucket}; rebuild artifacts \
+                     (make artifacts) or run with --rollout.engine fixed"
+                )
+            })
+    }
+
     pub fn seq_total(&self) -> usize {
         self.dims.prompt_len + self.dims.max_resp
     }
@@ -296,6 +337,44 @@ mod tests {
         assert_eq!(m.row_grid(), vec![2]);
         assert_eq!(m.grad_file_for(4, 2).unwrap(), "g4.txt");
         assert!(m.grad_file_for(4, 1).is_err());
+        // legacy manifest: no generate_buckets → only the fixed engine
+        assert!(m.generate_files.is_empty());
+        assert!(m.generate_file_for(8).is_err());
+    }
+
+    #[test]
+    fn parses_generate_bucket_grid() {
+        let with = toy_manifest_json().replace(
+            r#""generate":"g.txt""#,
+            r#""generate":"g.txt",
+               "generate_buckets":{"4":"gen4.txt","8":"gen8.txt"}"#,
+        );
+        let j = Json::parse(&with).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert_eq!(
+            m.generate_files,
+            vec![(4, "gen4.txt".into()), (8, "gen8.txt".into())]
+        );
+        assert_eq!(m.generate_file_for(4).unwrap(), "gen4.txt");
+        assert_eq!(m.generate_file_for(8).unwrap(), "gen8.txt");
+        assert!(m.generate_file_for(5).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_generate_buckets() {
+        for grid in [
+            // missing the top bucket: the escalation chain cannot terminate
+            r#""generate_buckets":{"4":"gen4.txt"}"#,
+            // bucket not in the config set
+            r#""generate_buckets":{"5":"gen5.txt","8":"gen8.txt"}"#,
+        ] {
+            let bad = toy_manifest_json().replace(
+                r#""generate":"g.txt""#,
+                &format!(r#""generate":"g.txt",{grid}"#),
+            );
+            let j = Json::parse(&bad).unwrap();
+            assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err(), "{grid}");
+        }
     }
 
     fn grid_manifest_json() -> String {

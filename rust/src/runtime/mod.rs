@@ -111,6 +111,16 @@ impl Runtime {
         Ok(())
     }
 
+    /// Pre-compile the bucketed rollout grid (`generate_T<b>`, absent in
+    /// legacy manifests). Separate from [`Runtime::warmup`] so runs on
+    /// `--rollout.engine fixed` never pay compilations they will not use.
+    pub fn warmup_generate_buckets(&self) -> Result<()> {
+        for (_, f) in &self.manifest.generate_files {
+            self.exe(f)?;
+        }
+        Ok(())
+    }
+
     pub fn compiled_count(&self) -> usize {
         self.exes.lock().expect("executable cache poisoned").len()
     }
@@ -158,6 +168,44 @@ impl Runtime {
             .clone()
             .context("no generate_full artifact (rebuild artifacts)")?;
         self.generate_with(&file, params, prompts, pad_len, seed, temp)
+    }
+
+    /// Bucketed rollout: sample up to `bucket` tokens per row with PER-ROW
+    /// seeds. Each row's sampling stream is a pure function of its own seed
+    /// (and the step index), so a slot's output is identical in any batch
+    /// placement and under any bucket cap that covers it — the
+    /// scheduling-invariance contract the rollout scheduler relies on.
+    /// prompts: [B, P] left-padded; pad_len/seeds: [B].
+    pub fn generate_bucketed(
+        &self,
+        params: &ParamStore,
+        bucket: usize,
+        prompts: &[i32],
+        pad_len: &[i32],
+        seeds: &[i32],
+        temp: f32,
+    ) -> Result<GenerateOut> {
+        let d = &self.manifest.dims;
+        let (b, p) = (d.batch_rollout, d.prompt_len);
+        if prompts.len() != b * p || pad_len.len() != b || seeds.len() != b {
+            bail!(
+                "generate_T{bucket}: bad input shapes ({} prompts, {} pads, {} seeds)",
+                prompts.len(),
+                pad_len.len(),
+                seeds.len()
+            );
+        }
+        let file = self.manifest.generate_file_for(bucket)?.to_string();
+        let mut inputs = params.to_literals(&self.manifest)?;
+        inputs.push(xla::Literal::vec1(prompts).reshape(&[b as i64, p as i64])?);
+        inputs.push(xla::Literal::vec1(pad_len));
+        inputs.push(xla::Literal::vec1(seeds));
+        inputs.push(xla::Literal::from(temp));
+        let outs = self.run(&file, &inputs)?;
+        if outs.len() != 2 {
+            bail!("generate_T{bucket}: expected 2 outputs, got {}", outs.len());
+        }
+        Ok(GenerateOut { tokens: outs[0].to_vec()?, lp: outs[1].to_vec()? })
     }
 
     fn generate_with(

@@ -8,8 +8,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::bucket_tuner::TunerState;
 use crate::model::Manifest;
-use crate::util::json::{obj, Json};
+use crate::util::json::{arr_f64, obj, Json};
 
 #[derive(Clone, Debug)]
 pub struct ParamStore {
@@ -144,13 +145,19 @@ impl GradAccum {
 /// Mid-run training state carried by a resumable checkpoint. All per-step
 /// random streams are pure functions of `(seed, step)` (see
 /// `coordinator::trainer::plan_step`), so the optimizer-step counter plus
-/// the run seed IS the complete RNG state.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// the run seed is the complete RNG state. The one piece of cross-step
+/// learner state that is NOT derivable from `(seed, step)` — the
+/// `--train.auto_buckets` tuner's EMA histogram — rides along explicitly,
+/// so resumed runs reproduce the uninterrupted routing exactly.
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainMeta {
     /// Completed optimizer steps.
     pub step: u64,
     /// The run seed the streams were derived from.
     pub seed: u64,
+    /// `BucketTuner` EMA state at checkpoint time (None when the run does
+    /// not use `--train.auto_buckets`).
+    pub tuner: Option<TunerState>,
 }
 
 /// Checkpoint = params (+ optional opt state) + JSON sidecar.
@@ -211,6 +218,14 @@ impl Checkpoint {
             // Decimal string: a u64 seed does not survive an f64 JSON number
             // round-trip above 2^53.
             fields.push(("run_seed", Json::Str(t.seed.to_string())));
+            if let Some(ts) = &t.tuner {
+                // f64 values round-trip exactly: the JSON writer uses Rust's
+                // shortest-roundtrip Display for non-integral floats.
+                fields.push(("tuner_hist", arr_f64(&ts.hist)));
+                fields.push(("tuner_items_per_step", Json::Num(ts.items_per_step)));
+                fields.push(("tuner_alpha", Json::Num(ts.alpha)));
+                fields.push(("tuner_steps", Json::Num(ts.steps as f64)));
+            }
         }
         let meta = obj(fields);
         std::fs::write(path.with_extension("json"), meta.to_string())?;
@@ -272,9 +287,19 @@ impl Checkpoint {
             Json::Str(s) => s.parse::<u64>().ok(),
             _ => v.as_i64().map(|x| x as u64),
         });
+        let tuner = meta.get("tuner_hist").and_then(Json::as_arr).map(|a| TunerState {
+            hist: a.iter().filter_map(Json::as_f64).collect(),
+            items_per_step: meta
+                .get("tuner_items_per_step")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            alpha: meta.get("tuner_alpha").and_then(Json::as_f64).unwrap_or(0.2),
+            steps: meta.get("tuner_steps").and_then(Json::as_i64).unwrap_or(0) as u64,
+        });
         let train = meta.get("train_step").and_then(Json::as_i64).map(|step| TrainMeta {
             step: step as u64,
             seed: seed.unwrap_or(0),
+            tuner,
         });
         Ok((params, opt, train))
     }
@@ -367,7 +392,7 @@ mod tests {
         opt.step = 12;
         opt.v.flat[1] = 0.5;
         // seed above 2^53: must survive the JSON sidecar round-trip exactly
-        let meta = TrainMeta { step: 6, seed: u64::MAX - 41 };
+        let meta = TrainMeta { step: 6, seed: u64::MAX - 41, tuner: None };
         Checkpoint::save_train(&path, &m, &ps, &opt, &meta).unwrap();
         let (ps2, opt2, train2) = Checkpoint::load_full(&path, &m).unwrap();
         assert_eq!(ps.flat, ps2.flat);
@@ -380,6 +405,37 @@ mod tests {
         Checkpoint::save(&plain, &m, &ps, Some(&opt)).unwrap();
         let (_, _, train3) = Checkpoint::load_full(&plain, &m).unwrap();
         assert_eq!(train3, None);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Satellite regression: the `--train.auto_buckets` EMA state must
+    /// survive the checkpoint sidecar bit-exactly (f64 Display is
+    /// shortest-roundtrip), so a `--resume` continuation's routing edges
+    /// match the uninterrupted run.
+    #[test]
+    fn checkpoint_roundtrips_tuner_state_exactly() {
+        use crate::coordinator::bucket_tuner::BucketTuner;
+
+        let m = toy_manifest();
+        let dir = std::env::temp_dir().join("nat_rl_ckpt_tuner_test");
+        let path = dir.join("auto.bin");
+        let ps = ParamStore::zeros_like(&m);
+        let opt = OptState::zeros(&m);
+        // awkward non-dyadic EMA values via real observations
+        let mut tuner = BucketTuner::new(8, 0.3);
+        tuner.observe(&[1, 3, 3, 7]);
+        tuner.observe(&[2, 5, 6]);
+        tuner.observe(&[8, 8, 1, 4, 4, 4, 9]);
+        let meta = TrainMeta { step: 3, seed: 17, tuner: Some(tuner.state()) };
+        Checkpoint::save_train(&path, &m, &ps, &opt, &meta).unwrap();
+        let (_, _, train2) = Checkpoint::load_full(&path, &m).unwrap();
+        let train2 = train2.expect("train meta must survive");
+        assert_eq!(train2.tuner, Some(tuner.state()), "tuner state drifted in the sidecar");
+        // ...and a tuner rebuilt from it continues bit-identically
+        let mut resumed = BucketTuner::from_state(train2.tuner.unwrap());
+        tuner.observe(&[2, 2, 6]);
+        resumed.observe(&[2, 2, 6]);
+        assert_eq!(resumed.state(), tuner.state());
         let _ = std::fs::remove_dir_all(dir);
     }
 

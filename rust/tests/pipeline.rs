@@ -163,7 +163,7 @@ fn mid_run_checkpoint_roundtrips_full_training_state() {
     opt.step = 34; // 17 trainer steps x 2 ppo epochs
     opt.m.flat[5] = 0.25;
     opt.v.flat[7] = 1.5;
-    let meta = TrainMeta { step: 17, seed: 123 };
+    let meta = TrainMeta { step: 17, seed: 123, tuner: None };
 
     Checkpoint::save_train(&path, &m, &params, &opt, &meta).unwrap();
     let (p2, o2, t2) = Checkpoint::load_full(&path, &m).unwrap();

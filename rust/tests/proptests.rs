@@ -10,6 +10,9 @@ use nat_rl::coordinator::batcher::{
     alloc_rows, allocated_tokens, ideal_tokens, pack, pack_budget, LearnItem,
 };
 use nat_rl::coordinator::masking::{expected_ratio, rpc_survival, sample};
+use nat_rl::coordinator::rollout::scheduler::{
+    schedule, sim_workload, slot_seed, RolloutScheduler, SimBackend, SlotSpec,
+};
 use nat_rl::coordinator::rollout::trim_at_eos;
 use nat_rl::stats::MeanCi;
 use nat_rl::tokenizer::{Tokenizer, EOS};
@@ -262,6 +265,102 @@ fn prop_budget_packing_is_a_lossless_relayout() {
         }
         assert!(ideal_tokens(&items, P) <= allocated_tokens(&mbs, P), "case {case}");
     });
+}
+
+/// Tentpole acceptance: for the same `(seed, step)` slot plan, the bucketed
+/// rollout scheduler yields byte-identical outputs for ANY device batch
+/// size, bucket-edge set (same top), and initial routing / refill
+/// interleaving — rollout is a pure function of the plan.
+#[test]
+fn prop_bucketed_rollouts_are_scheduling_invariant() {
+    const P: usize = 8;
+    const TOP: usize = 64;
+    for_cases(60, |case, rng| {
+        let n_prompts = 1 + rng.below(6) as usize;
+        let g = 1 + rng.below(5) as usize;
+        let encoded: Vec<(Vec<i32>, usize)> = (0..n_prompts)
+            .map(|_| {
+                let pad = rng.below(P as u64 / 2) as usize;
+                let mut row = vec![0i32; P];
+                for slot in row.iter_mut().skip(pad) {
+                    *slot = 3 + rng.below(50) as i32;
+                }
+                (row, pad)
+            })
+            .collect();
+        let (run_seed, step) = (rng.next_u64(), rng.below(1000));
+        let slots: Vec<SlotSpec> = (0..n_prompts * g)
+            .map(|f| SlotSpec {
+                flat_id: f,
+                prompt_idx: f / g,
+                seed: slot_seed(run_seed, step, f as u64),
+            })
+            .collect();
+        let mean_len = 3 + rng.below(50) as usize;
+        let canon = |backend: &SimBackend, routes: &[usize]| {
+            let (outs, _) = schedule(backend, &encoded, &slots, routes, 1.0).unwrap();
+            let mut v: Vec<(usize, usize, Vec<i32>, Vec<u32>)> = outs
+                .iter()
+                .map(|o| {
+                    (
+                        o.flat_id,
+                        o.resp_len,
+                        o.tokens.clone(),
+                        o.lp.iter().map(|x| x.to_bits()).collect(),
+                    )
+                })
+                .collect();
+            v.sort();
+            v
+        };
+        // reference: single top bucket, batch 4 — the "no scheduling" run
+        let reference = canon(
+            &SimBackend { batch: 4, prompt_len: P, buckets: vec![TOP], mean_len },
+            &vec![TOP; slots.len()],
+        );
+        for _ in 0..4 {
+            let batch = 1 + rng.below(10) as usize;
+            let mut buckets: Vec<usize> =
+                (0..rng.below(4)).map(|_| 4 + rng.below(TOP as u64 - 8) as usize).collect();
+            buckets.push(TOP);
+            buckets.sort();
+            buckets.dedup();
+            let backend = SimBackend { batch, prompt_len: P, buckets, mean_len };
+            // adversarial per-slot routing: arbitrary initial buckets
+            let routes: Vec<usize> =
+                slots.iter().map(|_| 1 + rng.below(TOP as u64) as usize).collect();
+            assert_eq!(
+                canon(&backend, &routes),
+                reference,
+                "case {case}: scheduling changed rollout output"
+            );
+        }
+    });
+}
+
+/// Acceptance: at the ONE default workload shared with `bench_rollout`
+/// (`scheduler::sim_workload` — same constants feed `BENCH_rollout.json`),
+/// the bucketed+refill engine must allocate >= 25% fewer decode-token-steps
+/// than the fixed engine's `chunks × B × max_resp`.
+#[test]
+fn bucketed_engine_cuts_decode_steps_by_25pct_at_default_workload() {
+    let backend = sim_workload::backend();
+    let encoded = sim_workload::prompts();
+    let sched = RolloutScheduler::new(*sim_workload::BUCKETS.last().unwrap());
+    let mut bucketed_steps = 0usize;
+    for step in 0..sim_workload::STEPS {
+        let slots = sim_workload::slots(step);
+        let (outs, stats) = sched.run(&backend, &encoded, &slots, 1.0).unwrap();
+        assert_eq!(outs.len(), sim_workload::SLOTS_PER_STEP);
+        bucketed_steps += stats.decode_token_steps;
+    }
+    let fixed_steps = sim_workload::fixed_decode_steps();
+    let saving = 1.0 - bucketed_steps as f64 / fixed_steps as f64;
+    assert!(
+        saving >= 0.25,
+        "bucketed {bucketed_steps} vs fixed {fixed_steps}: saving {:.1}% < 25%",
+        100.0 * saving
+    );
 }
 
 #[test]

@@ -276,7 +276,7 @@ fn evaluator_bounds_and_consistency() {
     let tok = Tokenizer::new();
     let set = EvalSet::build(Tier::Easy, 4, 99);
     let mut rng = Rng::new(3);
-    let e = evaluator::evaluate(&rt, &params, &tok, &set, 4, 1.0, &mut rng).unwrap();
+    let e = evaluator::evaluate(&rt, &params, &tok, &set, 4, 1.0, &mut rng, None).unwrap();
     assert!(e.acc_at_k >= 0.0 && e.acc_at_k <= 1.0);
     assert!(e.pass_at_k >= e.acc_at_k - 1e-9); // pass@k dominates acc@k
     assert_eq!(e.tasks, 4);
@@ -418,36 +418,60 @@ fn pipelined_workers2_bounds_staleness_and_matches_rewards() {
 
 /// Acceptance: a mid-run checkpoint + `--resume` continuation reproduces
 /// the uninterrupted run exactly (per-step streams are derived from
-/// (seed, step), so nothing but params/opt/step needs to survive).
+/// (seed, step); the `--train.auto_buckets` tuner — the one piece of
+/// cross-step learner state outside that scheme — rides along in
+/// `TrainMeta`, which is the satellite bugfix this test also covers).
 #[test]
 fn resume_from_mid_run_checkpoint_reproduces_uninterrupted_run() {
     let Some(rt) = runtime() else { return };
     let base = ParamStore::load_init(&rt.manifest).unwrap();
-    let dir = std::env::temp_dir().join("nat_rl_resume_e2e");
-    let _ = std::fs::remove_dir_all(&dir);
-    let mut cfg = tiny_cfg(Method::Rpc { min_cut: 4 }, 9);
-    cfg.checkpoints_dir = dir.to_string_lossy().into_owned();
-    cfg.rl.ckpt_every = 2;
+    for auto_buckets in [false, true] {
+        let dir = std::env::temp_dir().join(format!("nat_rl_resume_e2e_{auto_buckets}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = tiny_cfg(Method::Rpc { min_cut: 4 }, 9);
+        cfg.checkpoints_dir = dir.to_string_lossy().into_owned();
+        cfg.rl.ckpt_every = 2;
+        cfg.train.auto_buckets = auto_buckets;
+        if auto_buckets && rt.manifest.grad_row_files.is_empty() {
+            eprintln!("SKIP auto_buckets leg: artifacts have no grad_rows grid");
+            continue;
+        }
 
-    // Uninterrupted 4-step run.
-    let mut full = Trainer::new(&rt, cfg.clone(), base.clone(), OptState::zeros(&rt.manifest));
-    full.train(4, false).unwrap();
+        // Uninterrupted 4-step run.
+        let mut full =
+            Trainer::new(&rt, cfg.clone(), base.clone(), OptState::zeros(&rt.manifest));
+        full.train(4, false).unwrap();
 
-    // Interrupted: 2 steps (writes the rolling checkpoint), then resume.
-    let mut first = Trainer::new(&rt, cfg.clone(), base, OptState::zeros(&rt.manifest));
-    first.train(2, false).unwrap();
-    let ckpt = cfg.rolling_ckpt_path();
-    let (params, opt, meta) =
-        Checkpoint::load_full(Path::new(&ckpt), &rt.manifest).unwrap();
-    let meta = meta.expect("rolling checkpoint must carry train state");
-    assert_eq!(meta.step, 2);
-    assert_eq!(meta.seed, cfg.seed);
-    let mut resumed = Trainer::new(&rt, cfg.clone(), params, opt.unwrap());
-    resumed.set_start_step(meta.step);
-    resumed.train(2, false).unwrap();
+        // Interrupted: 2 steps (writes the rolling checkpoint), then resume.
+        let mut first = Trainer::new(&rt, cfg.clone(), base.clone(), OptState::zeros(&rt.manifest));
+        first.train(2, false).unwrap();
+        let ckpt = cfg.rolling_ckpt_path();
+        let (params, opt, meta) =
+            Checkpoint::load_full(Path::new(&ckpt), &rt.manifest).unwrap();
+        let meta = meta.expect("rolling checkpoint must carry train state");
+        assert_eq!(meta.step, 2);
+        assert_eq!(meta.seed, cfg.seed);
+        assert_eq!(
+            meta.tuner.is_some(),
+            auto_buckets,
+            "tuner state must be checkpointed exactly when auto_buckets is on"
+        );
+        let mut resumed = Trainer::new(&rt, cfg.clone(), params, opt.unwrap());
+        resumed.set_start_step(meta.step);
+        resumed.restore_tuner(meta.tuner.as_ref());
+        resumed.train(2, false).unwrap();
 
-    assert_eq!(full.params.flat, resumed.params.flat, "resume diverged");
-    let _ = std::fs::remove_dir_all(dir);
+        assert_eq!(
+            full.params.flat, resumed.params.flat,
+            "resume diverged (auto_buckets={auto_buckets})"
+        );
+        assert_eq!(
+            full.tuner_state(),
+            resumed.tuner_state(),
+            "tuner EMA state diverged after resume"
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
 }
 
 /// Tail-chunk coverage: when total rollouts are not divisible by the device
@@ -473,6 +497,60 @@ fn run_group_rollouts_tail_chunk_fills_every_slot_once() {
         let (row, pad) = encode_prompt(&tok, &tasks[s.task_idx].prompt, d.prompt_len).unwrap();
         assert_eq!(&s.tokens[..d.prompt_len], &row[..]);
         assert_eq!(s.pad_len, pad);
+        assert!(s.resp_len >= 1 && s.resp_len <= d.max_resp);
+        assert_eq!(s.old_lp.len(), s.resp_len);
+    }
+}
+
+/// Acceptance (tentpole): on real artifacts, bucketed rollouts are a pure
+/// function of `(seed, step, flat_id)` — a scheduler whose predictor was
+/// warmed on a different workload (different routing → different batching,
+/// refill, and escalation) must produce byte-identical sequences.
+#[test]
+fn bucketed_rollouts_are_scheduling_invariant_on_real_artifacts() {
+    use nat_rl::coordinator::rollout::run_group_rollouts_bucketed;
+    use nat_rl::coordinator::rollout::scheduler::RolloutScheduler;
+
+    let Some(rt) = runtime() else { return };
+    if rt.manifest.generate_files.is_empty() {
+        eprintln!("SKIP: artifacts have no generate_buckets grid (rebuild with make artifacts)");
+        return;
+    }
+    let params = ParamStore::load_init(&rt.manifest).unwrap();
+    let d = rt.manifest.dims.clone();
+    let tok = Tokenizer::new();
+    let mut sampler =
+        TaskSampler::new(31, TaskMix { tiers: vec![Tier::Easy], ..Default::default() });
+    let g = d.batch_rollout + 1; // guaranteed ragged batching
+    let tasks = sampler.batch(2);
+
+    let run = |sched: &RolloutScheduler| {
+        run_group_rollouts_bucketed(&rt, &params, &tok, &tasks, g, 1.0, 7, 3, sched).unwrap()
+    };
+    let cold = RolloutScheduler::new(d.max_resp);
+    let a = run(&cold);
+    // warm a second scheduler on an unrelated workload so its routing —
+    // and therefore the batch composition and refill order — differs
+    let warm = RolloutScheduler::new(d.max_resp);
+    for step in 0..3u64 {
+        let _ = run_group_rollouts_bucketed(
+            &rt, &params, &tok, &tasks, g, 1.0, 999, step, &warm,
+        )
+        .unwrap();
+    }
+    let b = run(&warm);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.tokens, y.tokens, "scheduling changed sampled tokens");
+        assert_eq!(x.resp_len, y.resp_len);
+        assert_eq!(x.old_lp, y.old_lp);
+        assert_eq!(x.reward, y.reward);
+        assert_eq!(x.task_idx, y.task_idx);
+    }
+    // and the per-slot layout matches the legacy contract
+    for (flat, s) in a.iter().enumerate() {
+        assert_eq!(s.task_idx, flat / g);
+        assert_eq!(s.tokens.len(), d.prompt_len + d.max_resp);
         assert!(s.resp_len >= 1 && s.resp_len <= d.max_resp);
         assert_eq!(s.old_lp.len(), s.resp_len);
     }
