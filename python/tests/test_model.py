@@ -93,12 +93,21 @@ class TestGenerate:
 
     def test_score_reproduces_behaviour_logprobs(self, params):
         """THE consistency contract: learner-side scoring of rollout tokens
-        must reproduce the rollout's own logprobs (ratio == 1 on-policy)."""
+        must reproduce the rollout's own logprobs (ratio == 1 on-policy).
+        Compared per row up to its EOS: the early-exit decode stops the
+        whole batch once every row has finished, so positions past the stop
+        point are unfilled (lp 0) and are never consumed by the learner."""
+        P = CFG.prompt_len
         prompts, pad = _prompts(4, seed=6)
         toks, lps = M.generate(CFG, params, prompts, pad, jnp.int32(3),
                                jnp.float32(1.0))
         lp2, ent = M.score(CFG, params, toks, pad, CFG.max_resp)
-        np.testing.assert_allclose(lps, lp2, rtol=5e-4, atol=5e-5)
+        for i, row in enumerate(np.asarray(toks)[:, P:]):
+            eos = np.flatnonzero(row == CFG.eos_id)
+            n = int(eos[0]) + 1 if eos.size else row.shape[0]
+            np.testing.assert_allclose(np.asarray(lps)[i, :n],
+                                       np.asarray(lp2)[i, :n],
+                                       rtol=5e-4, atol=5e-5)
         assert np.all(np.asarray(ent) >= 0)
 
     def test_per_row_seeds_are_batch_and_cap_invariant(self, params):
@@ -130,8 +139,11 @@ class TestGenerate:
         for i, n in enumerate(lens):
             np.testing.assert_array_equal(
                 np.asarray(t1)[i, P:P + n], np.asarray(t2)[rev][i, P:P + n])
+            # reordering the batch reorders XLA reductions: allow a few
+            # ulps of float32 slack instead of the exact-match default
             np.testing.assert_allclose(
-                np.asarray(l1)[i, :n], np.asarray(l2)[rev][i, :n])
+                np.asarray(l1)[i, :n], np.asarray(l2)[rev][i, :n],
+                rtol=1e-6, atol=1e-7)
         # a shorter bucket cap yields the identical per-row prefix
         cap = CFG.buckets[0]
         t3, l3 = M.generate(CFG, params, prompts, pad, seeds,
@@ -140,7 +152,8 @@ class TestGenerate:
             np.testing.assert_array_equal(
                 np.asarray(t1)[i, P:P + n], np.asarray(t3)[i, P:P + n])
             np.testing.assert_allclose(
-                np.asarray(l1)[i, :n], np.asarray(l3)[i, :n])
+                np.asarray(l1)[i, :n], np.asarray(l3)[i, :n],
+                rtol=1e-6, atol=1e-7)
 
     def test_low_temperature_is_greedy(self, params):
         prompts, pad = _prompts(3, seed=7)

@@ -24,6 +24,7 @@ use nat_rl::coordinator::trainer::Trainer;
 use nat_rl::runtime::{OptState, ParamStore, Runtime};
 use nat_rl::tasks::Tier;
 use nat_rl::util::bench::Bench;
+use nat_rl::util::json::{obj, Json};
 
 /// Deterministic busy-work: ~`units` multiply-add kernels.
 fn spin(units: u64) -> u64 {
@@ -86,6 +87,27 @@ fn sim_bench(b: &mut Bench) {
         SIM_STEPS as f64 / piped_s,
         serial_s / piped_s
     );
+
+    // Machine-readable record for in-repo perf tracking, mirroring
+    // BENCH_rollout.json / BENCH_train_step.json (CI keeps
+    // `cargo bench --no-run` green; a full run refreshes this file).
+    let record = obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("steps", Json::Num(SIM_STEPS as f64)),
+                ("rollout_units", Json::Num(ROLLOUT_UNITS as f64)),
+                ("learn_units", Json::Num(LEARN_UNITS as f64)),
+            ]),
+        ),
+        ("serial_wall_s", Json::Num(serial_s)),
+        ("pipelined_w2_wall_s", Json::Num(piped_s)),
+        ("serial_steps_per_s", Json::Num(SIM_STEPS as f64 / serial_s)),
+        ("pipelined_w2_steps_per_s", Json::Num(SIM_STEPS as f64 / piped_s)),
+        ("w2_speedup", Json::Num(serial_s / piped_s)),
+    ]);
+    std::fs::write("BENCH_pipeline.json", record.to_string()).unwrap();
+    println!("wrote BENCH_pipeline.json");
 }
 
 fn tiny_cfg(workers: usize) -> RunConfig {

@@ -153,11 +153,18 @@ pub struct TrainCfg {
     /// (`TrainMeta`), so `--resume` continuations reproduce the
     /// uninterrupted run's routing exactly.
     pub auto_buckets: bool,
+    /// Data-parallel learner shards: each optimizer step's packed
+    /// micro-batches are split across this many concurrent grad workers and
+    /// recombined with a fixed-order tree reduction keyed by micro-batch id
+    /// (`runtime::shard`). Because the reduction order is a pure function of
+    /// the step plan, `shards = K` is bit-identical to `shards = 1` for
+    /// every K. 1 = the single-threaded learn stage.
+    pub shards: usize,
 }
 
 impl Default for TrainCfg {
     fn default() -> Self {
-        TrainCfg { packer: Packer::Budget, token_budget: 0, auto_buckets: false }
+        TrainCfg { packer: Packer::Budget, token_budget: 0, auto_buckets: false, shards: 1 }
     }
 }
 
@@ -324,6 +331,7 @@ impl RunConfig {
             cfg.train.packer = Packer::parse(name)?;
         }
         setnum!("train", "token_budget", cfg.train.token_budget, usize);
+        setnum!("train", "shards", cfg.train.shards, usize);
         if let Some(b) = get("train", "auto_buckets").and_then(Json::as_bool) {
             cfg.train.auto_buckets = b;
         }
@@ -394,6 +402,7 @@ impl RunConfig {
             "rollout.engine" => self.rollout.engine = RolloutEngine::parse(value)?,
             "train.packer" => self.train.packer = Packer::parse(value)?,
             "train.token_budget" => self.train.token_budget = value.parse()?,
+            "train.shards" => self.train.shards = value.parse()?,
             "train.auto_buckets" => {
                 self.train.auto_buckets = match value {
                     "true" | "1" | "on" => true,
@@ -470,6 +479,9 @@ impl RunConfig {
         }
         if self.pipeline.queue_depth == 0 {
             bail!("pipeline.queue_depth must be >= 1");
+        }
+        if self.train.shards == 0 || self.train.shards > 64 {
+            bail!("train.shards must be in 1..=64, got {}", self.train.shards);
         }
         if self.pipeline.workers > 64 {
             bail!("pipeline.workers {} is unreasonable (max 64)", self.pipeline.workers);
@@ -576,7 +588,7 @@ mod tests {
         // budget packing is the default; fixed remains selectable for parity
         assert_eq!(
             cfg.train,
-            TrainCfg { packer: Packer::Budget, token_budget: 0, auto_buckets: false }
+            TrainCfg { packer: Packer::Budget, token_budget: 0, auto_buckets: false, shards: 1 }
         );
         cfg.set("train.packer", "fixed").unwrap();
         assert_eq!(cfg.train.packer, Packer::Fixed);
@@ -587,6 +599,28 @@ mod tests {
         assert!(cfg.train.auto_buckets);
         assert!(cfg.set("train.packer", "bogus").is_err());
         assert!(cfg.set("train.auto_buckets", "maybe").is_err());
+    }
+
+    #[test]
+    fn train_shards_overrides_and_validation() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.train.shards, 1, "single-threaded learn stage is the default");
+        cfg.set("train.shards", "4").unwrap();
+        assert_eq!(cfg.train.shards, 4);
+        assert!(cfg.set("train.shards", "0").is_err());
+        assert!(cfg.set("train.shards", "65").is_err());
+        assert!(cfg.set("train.shards", "many").is_err());
+    }
+
+    #[test]
+    fn train_shards_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_shards_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.toml");
+        std::fs::write(&path, "[train]\nshards = 3\n").unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.train.shards, 3);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

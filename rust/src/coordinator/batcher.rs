@@ -257,6 +257,89 @@ fn pack_one(rows: &[&LearnItem], bucket: usize, prompt_len: usize, alloc: usize)
     mb
 }
 
+/// Allocated token cost of one micro-batch: what the device pays for it
+/// regardless of padding rows (`rows × (P + bucket)`).
+pub fn micro_batch_cost(mb: &MicroBatch, prompt_len: usize) -> usize {
+    mb.rows * (prompt_len + mb.bucket)
+}
+
+/// Shard-aware assignment of packed micro-batches to `shards` data-parallel
+/// learner workers, balancing **allocated token cost** — not micro-batch or
+/// row counts, which would let one shard hoard the long-bucket batches and
+/// cap the step on the slowest worker (LPT greedy: heaviest first onto the
+/// least-loaded shard, every tie broken by index).
+///
+/// The plan is a pure function of the micro-batch list: it never looks at
+/// timing, thread ids, or the shard count's interaction with completion
+/// order. Combined with the id-keyed tree reduction (`runtime::shard`),
+/// that is what makes `shards = K` bit-identical to `shards = 1`.
+///
+/// Returns `min(shards, #micro-batches)` non-empty shards (padded with
+/// empty ones up to `shards` so callers can index by worker), each listing
+/// its micro-batch ids in ascending order.
+pub fn plan_shards(mbs: &[MicroBatch], prompt_len: usize, shards: usize) -> Vec<Vec<usize>> {
+    let k = shards.max(1);
+    let mut plan: Vec<Vec<usize>> = vec![Vec::new(); k];
+    let mut load = vec![0usize; k];
+    let mut order: Vec<usize> = (0..mbs.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(micro_batch_cost(&mbs[i], prompt_len)), i));
+    for &i in &order {
+        let j = (0..k).min_by_key(|&j| (load[j], j)).expect("k >= 1");
+        load[j] += micro_batch_cost(&mbs[i], prompt_len);
+        plan[j].push(i);
+    }
+    for ids in &mut plan {
+        ids.sort_unstable();
+    }
+    plan
+}
+
+/// The default sharded-learner workload: 32 RPC-shaped responses over the
+/// sim runtime's bucket grid. ONE definition shared by
+/// `benches/bench_train_step.rs` (which measures wall-clock and writes
+/// `BENCH_train_step.json`) and the tier-1 cost-balance gate in
+/// `tests/sharding.rs`, so the perf record and the CI assertion always
+/// describe the same workload — the `sim_workload` pattern from the
+/// rollout scheduler, learner-side.
+pub mod shard_workload {
+    use super::{pack_budget, LearnItem, MicroBatch};
+    use crate::util::rng::Rng;
+
+    pub const SEED: u64 = 0x5EED;
+    pub const ITEMS: usize = 32;
+    pub const PROMPT_LEN: usize = 32;
+    pub const MAX_RESP: usize = 16;
+    pub const BUCKETS: [usize; 3] = [4, 8, 16];
+    pub const ROW_GRID: [usize; 3] = [1, 2, 4];
+
+    /// 32 responses with RPC-shaped `learn_len` spread (at this seed the
+    /// budget packer yields 10 micro-batches across all three buckets).
+    pub fn items() -> Vec<LearnItem> {
+        let mut rng = Rng::new(SEED);
+        (0..ITEMS)
+            .map(|_| {
+                let t = 1 + rng.below(MAX_RESP as u64) as usize;
+                let ll = 1 + rng.below(t as u64) as usize;
+                LearnItem {
+                    tokens: (0..(PROMPT_LEN + MAX_RESP) as i32).map(|x| 3 + x % 50).collect(),
+                    pad_len: 4,
+                    resp_len: t,
+                    ht_w: (0..t).map(|i| if i < ll { 1.25 } else { 0.0 }).collect(),
+                    learn_len: ll,
+                    adv: 0.75,
+                    old_lp: (0..t).map(|i| -0.1 - 0.05 * (i % 7) as f32).collect(),
+                }
+            })
+            .collect()
+    }
+
+    /// The workload packed by the token-budget packer (auto budget).
+    pub fn micro_batches() -> Vec<MicroBatch> {
+        pack_budget(&items(), &BUCKETS, PROMPT_LEN, &ROW_GRID, 0)
+            .expect("shard workload packs within the top bucket")
+    }
+}
+
 /// Split items into (contributing, dropped-count): rows with no kept token
 /// or zero advantage contribute exactly nothing to the accumulated gradient
 /// but burn a full forward/backward if packed. The caller must keep the
@@ -551,6 +634,55 @@ mod tests {
         assert_eq!(dropped, 2);
         assert_eq!(kept.len() + dropped, n);
         assert!(kept.iter().all(|i| !i.is_zero_contribution()));
+    }
+
+    #[test]
+    fn plan_shards_partitions_all_ids_and_balances_token_cost() {
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let n = 1 + rng.below(20) as usize;
+            let items: Vec<LearnItem> = (0..n)
+                .map(|_| {
+                    let t = 1 + rng.below(16) as usize;
+                    let ll = 1 + rng.below(t as u64) as usize;
+                    item(t, ll, 1.0)
+                })
+                .collect();
+            let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+            for k in [1usize, 2, 3, 4, 7] {
+                let plan = plan_shards(&mbs, P, k);
+                assert_eq!(plan.len(), k);
+                // exact partition of 0..mbs.len()
+                let mut seen: Vec<usize> = plan.iter().flatten().copied().collect();
+                seen.sort_unstable();
+                assert_eq!(seen, (0..mbs.len()).collect::<Vec<_>>());
+                // ids ascend within each shard (execution = id order)
+                for ids in &plan {
+                    assert!(ids.windows(2).all(|w| w[0] < w[1]));
+                }
+                // LPT guarantee: max load <= min load + max single cost
+                let cost = |ids: &[usize]| -> usize {
+                    ids.iter().map(|&i| micro_batch_cost(&mbs[i], P)).sum()
+                };
+                let loads: Vec<usize> = plan.iter().map(|ids| cost(ids)).collect();
+                let biggest =
+                    mbs.iter().map(|m| micro_batch_cost(m, P)).max().unwrap_or(0);
+                let (lo, hi) =
+                    (loads.iter().min().unwrap(), loads.iter().max().unwrap());
+                assert!(hi - lo <= biggest, "k={k}: loads {loads:?}, biggest {biggest}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_shards_is_deterministic() {
+        let items: Vec<LearnItem> =
+            (0..9).map(|i| item(16, 1 + (i * 5) % 16, 1.0)).collect();
+        let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+        assert_eq!(plan_shards(&mbs, P, 3), plan_shards(&mbs, P, 3));
+        // k beyond the micro-batch count leaves the tail shards empty
+        let plan = plan_shards(&mbs, P, mbs.len() + 2);
+        assert_eq!(plan.iter().filter(|ids| !ids.is_empty()).count(), mbs.len());
     }
 
     #[test]

@@ -61,7 +61,13 @@ pub fn sample_ctx(
     old_lp: Option<&[f32]>,
     rng: &mut Rng,
 ) -> MaskSample {
-    assert!(t_i > 0, "empty response reached the masker");
+    if t_i == 0 {
+        // Degenerate empty response (`trim_at_eos` floors real rollouts at
+        // 1, but a zero-width response window can produce 0): nothing to
+        // select, nothing to forward, and — crucially — no RNG draws, so
+        // the mask stream stays aligned with the non-degenerate case.
+        return MaskSample { ht_w: Vec::new(), kept: 0, learn_len: 0 };
+    }
     match *method {
         Method::Grpo => MaskSample { ht_w: vec![1.0; t_i], kept: t_i, learn_len: t_i },
         Method::Urs { p } => {
@@ -375,6 +381,31 @@ mod tests {
         }
         assert!(kept7 > 1950, "{kept7}");
         assert!(kept0 < 600, "{kept0}");
+    }
+
+    #[test]
+    fn zero_length_response_yields_empty_sample() {
+        // Regression (issue satellite): an empty response after
+        // `trim_at_eos` must produce an empty, zero-ratio sample — not a
+        // panic — for every method, without consuming any RNG draws.
+        let mut rng = Rng::new(12);
+        let before = rng.clone();
+        for method in [
+            Method::Grpo,
+            Method::Urs { p: 0.5 },
+            Method::DetTrunc { frac: 0.5 },
+            Method::Rpc { min_cut: 8 },
+            Method::Saliency { floor: 0.25 },
+        ] {
+            let s = sample_ctx(&method, 0, Some(&[]), &mut rng);
+            assert!(s.ht_w.is_empty(), "{method:?}");
+            assert_eq!(s.kept, 0);
+            assert_eq!(s.learn_len, 0);
+            assert_eq!(s.selected_ratio(), 0.0);
+        }
+        // the RNG stream is untouched
+        let mut a = before;
+        assert_eq!(a.next_u64(), rng.next_u64());
     }
 
     #[test]

@@ -32,6 +32,14 @@
 //! model sizes this is microseconds against a multi-second step, and it
 //! keeps workers lock-free on the fast path (they share `Arc`s, never the
 //! live mutable params).
+//!
+//! The learn stage itself may additionally be data-parallel: with
+//! `--train.shards K` the consumed group's micro-batches execute across K
+//! grad workers inside `learn_stage` (scoped threads, joined before the
+//! apply), composing with rollout pipelining — rollout workers keep
+//! producing while the learner's shards crunch the current step. Because
+//! the shard reduction order is derived from the step plan, pipelined runs
+//! stay bit-identical across shard counts exactly like serial runs.
 
 pub mod engine;
 pub mod sync;
@@ -147,8 +155,8 @@ impl<'rt> PipelineTrainer<'rt> {
         let end = start + n as u64;
         if verbose {
             println!(
-                "pipeline: {} rollout worker(s), queue {}, max staleness {}",
-                opts.workers, opts.queue_depth, opts.max_staleness
+                "pipeline: {} rollout worker(s), queue {}, max staleness {}, {} learner shard(s)",
+                opts.workers, opts.queue_depth, opts.max_staleness, self.cfg.train.shards
             );
         }
 

@@ -5,7 +5,11 @@
 //!   rollout (G completions per prompt) → verify rewards → group-relative
 //!   advantages → NAT mask sampling + HT weights → micro-batching (fixed
 //!   or token-budget packer; see `--train.packer`) → per-(bucket, rows)
-//!   grad artifacts with host-side accumulation → AdamW apply.
+//!   grad artifacts executed across `--train.shards` data-parallel workers
+//!   → fixed-order tree reduction keyed by micro-batch id → AdamW apply.
+//!   The reduction order is a pure function of the step plan, so any shard
+//!   count produces bit-identical parameters and statistics
+//!   (`runtime::shard`; proptested in `tests/sharding.rs`).
 //!
 //! The step is split into two reusable stage functions so the serial
 //! [`Trainer`] and the pipelined trainer (`coordinator::pipeline`) share one
@@ -32,8 +36,8 @@ use anyhow::Result;
 
 use crate::config::{Packer, RolloutEngine, RunConfig};
 use crate::coordinator::batcher::{
-    allocated_tokens, ideal_tokens, micro_shapes, pack, pack_budget, split_zero_contribution,
-    LearnItem, MicroBatch,
+    allocated_tokens, ideal_tokens, micro_shapes, pack, pack_budget, plan_shards,
+    split_zero_contribution, LearnItem, MicroBatch,
 };
 use crate::coordinator::bucket_tuner::{BucketTuner, TunerState};
 use crate::coordinator::rollout::scheduler::RolloutScheduler;
@@ -41,6 +45,7 @@ use crate::coordinator::rollout::RolloutSeq;
 use crate::coordinator::{advantage, masking, rollout};
 use crate::metrics::Recorder;
 use crate::model::memory;
+use crate::runtime::shard::{execute_shards, tree_reduce_into};
 use crate::runtime::{Checkpoint, GradAccum, GradMetrics, OptState, ParamStore, Runtime, TrainMeta};
 use crate::tasks::{Task, TaskSampler};
 use crate::tokenizer::Tokenizer;
@@ -170,9 +175,11 @@ pub fn rollout_stage(
     Ok(RolloutGroup { step: plan.step, seqs, t_rollout_s: t0.elapsed().as_secs_f64() })
 }
 
-/// Stage 2+3 — learner (forward + backward + apply). `step1` is the 1-based
-/// step number reported in the stats; `t_total_s` is left at 0 for the
-/// caller to fill (serial: elapsed incl. rollout; pipeline: apply-to-apply).
+/// Stage 2+3 — learner (forward + backward + apply), internally split into
+/// shard plan → concurrent execute → fixed-order reduce → apply when
+/// `cfg.train.shards > 1`. `step1` is the 1-based step number reported in
+/// the stats; `t_total_s` is left at 0 for the caller to fill (serial:
+/// elapsed incl. rollout; pipeline: apply-to-apply).
 ///
 /// ppo_epochs >= 2 re-uses the rollout for multiple optimizer updates
 /// (DAPO-style mini-batching): the first epoch is on-policy (ratio 1), later
@@ -218,6 +225,7 @@ pub fn learn_stage(
     let mut n_micro = 0usize;
     for _epoch in 0..cfg.rl.ppo_epochs {
         let mut items = Vec::with_capacity(seqs.len());
+        let mut empty_rows = 0usize;
         for (seq, &adv) in seqs.iter().zip(&advs) {
             let m = masking::sample_ctx(
                 &cfg.method,
@@ -225,6 +233,14 @@ pub fn learn_stage(
                 Some(&seq.old_lp),
                 rng_mask,
             );
+            if seq.resp_len == 0 {
+                // Degenerate empty response: nothing to select or forward
+                // (the masker returned the empty sample without touching the
+                // RNG stream), but the row stays in the 1/sequences apply
+                // denominator like any other zero-contribution row.
+                empty_rows += 1;
+                continue;
+            }
             sel_tokens += m.kept;
             tot_tokens += seq.resp_len;
             items.push(LearnItem {
@@ -265,17 +281,22 @@ pub fn learn_stage(
         alloc_toks += allocated_tokens(&mbs, d.prompt_len);
         ideal_toks += ideal_tokens(&items, d.prompt_len);
         acc.reset();
-        // Dropped inert rows still count toward the 1/sequences apply
-        // scale: they contributed zero gradient but a real denominator row.
-        acc.sequences += dropped;
+        // Dropped inert and empty rows still count toward the 1/sequences
+        // apply scale: they contributed zero gradient but a real
+        // denominator row.
+        acc.sequences += dropped + empty_rows;
         if !mbs.is_empty() {
             // §Perf opt-2: parameters are immutable within the epoch; build
-            // the literals once and share across every bucket micro-batch.
+            // the literals once and share across every shard worker.
             let param_lits = params.to_literals(&rt.manifest)?;
-            for mb in &mbs {
-                let m = rt.grad_cached(mb, &param_lits, acc)?;
-                metrics.add(&m);
-            }
+            // Shard plan → concurrent execute → fixed-order tree reduce.
+            // The plan balances allocated token cost across
+            // `cfg.train.shards` workers and the reduction order is keyed
+            // by micro-batch id, so the summed gradient (and with it every
+            // downstream stat) is bit-identical for every shard count.
+            let plan = plan_shards(&mbs, d.prompt_len, cfg.train.shards);
+            let leaves = execute_shards(rt, &mbs, &param_lits, &plan)?;
+            tree_reduce_into(acc, &mut metrics, leaves);
         }
         grad_norm = rt.apply(params, opt, acc)?;
         all_shapes.extend(micro_shapes(&mbs, d.prompt_len));
@@ -413,6 +434,7 @@ pub(crate) fn maybe_checkpoint(
             step: completed_step,
             seed: cfg.seed,
             tuner: tuner.map(BucketTuner::state),
+            shards: cfg.train.shards,
         },
     )?;
     Ok(Some(path))

@@ -75,7 +75,13 @@ fn print_help() {
                                       (0 = auto: batch_train*(P+top bucket))\n\
            --train.auto_buckets true  EMA-tune bucket routing edges to the\n\
                                       observed learn_len distribution (state\n\
-                                      is checkpointed; resume is exact)"
+                                      is checkpointed; resume is exact)\n\
+           --train.shards K           data-parallel learner shards: packed\n\
+                                      micro-batches split across K concurrent\n\
+                                      grad workers, recombined by a fixed-order\n\
+                                      tree reduction keyed by micro-batch id —\n\
+                                      bit-identical to K=1 for every K (resume\n\
+                                      across different K is exact)"
     );
 }
 
@@ -161,6 +167,15 @@ fn cmd_train(args: &Args) -> Result<()> {
                                 t.seed, cfg.seed, t.seed
                             );
                         }
+                        if t.shards != cfg.train.shards {
+                            println!(
+                                "note: checkpoint was written with train.shards {} and \
+                                 this run uses {}; the continuation is still exact — the \
+                                 shard reduction order derives from the step plan, not \
+                                 from K",
+                                t.shards, cfg.train.shards
+                            );
+                        }
                         (t.step, t.tuner)
                     }
                     None => {
@@ -201,7 +216,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let remaining = (cfg.rl.steps as u64).saturating_sub(start_step) as usize;
     println!(
         "RL: model={} method={} steps={} (from {start_step}) prompts/step={} G={} seed={} \
-         pipeline={}",
+         pipeline={} shards={}",
         cfg.model,
         cfg.method.label(),
         cfg.rl.steps,
@@ -212,7 +227,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             format!("{}w", cfg.pipeline.workers)
         } else {
             "off".into()
-        }
+        },
+        cfg.train.shards
     );
     if remaining == 0 {
         println!("nothing to do: checkpoint already at {} >= rl.steps", start_step);
@@ -222,6 +238,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let method_id = cfg.method.id();
     let model = cfg.model.clone();
     let seed = cfg.seed;
+    let shards = cfg.train.shards;
     let eval_cfg = cfg.eval.clone();
     let temperature = cfg.rl.temperature;
     let engine = cfg.rollout.engine;
@@ -270,7 +287,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             &rt.manifest,
             &final_params,
             &final_opt,
-            &TrainMeta { step: start_step + remaining as u64, seed, tuner: tuner_fin },
+            &TrainMeta {
+                step: start_step + remaining as u64,
+                seed,
+                tuner: tuner_fin,
+                shards,
+            },
         )?;
         println!("saved trained checkpoint to {out}");
     }

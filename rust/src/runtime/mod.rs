@@ -7,6 +7,8 @@
 //! see python/compile/aot.py for why.
 
 pub mod params;
+pub mod shard;
+pub mod sim;
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -17,6 +19,7 @@ use anyhow::{bail, Context, Result};
 use crate::coordinator::batcher::MicroBatch;
 use crate::model::Manifest;
 pub use params::{Checkpoint, GradAccum, OptState, ParamStore, TrainMeta};
+pub use sim::SimSpec;
 
 /// Scalar metrics returned by one grad micro-batch (sums over the batch).
 #[derive(Clone, Copy, Debug, Default)]
@@ -54,12 +57,21 @@ pub struct GenerateOut {
     pub lp: Vec<f32>,
 }
 
+/// Execution engine behind [`Runtime`]: real PJRT artifacts, or the
+/// deterministic host-side simulation (`runtime::sim`) used by tests and
+/// benches in builds with no device.
+enum Engine {
+    Pjrt(xla::PjRtClient),
+    Sim(sim::SimSpec),
+}
+
 /// Shareable across threads: the pipelined trainer hands `&Runtime` to N
-/// rollout workers plus the learner, so the lazily-populated executable
-/// cache is behind a `Mutex` and entries are `Arc`s (the lock covers lookup
-/// and compile; execution runs on the cloned handle outside the lock).
+/// rollout workers plus the learner (and the sharded learn stage hands it
+/// to K grad workers), so the lazily-populated executable cache is behind a
+/// `Mutex` and entries are `Arc`s (the lock covers lookup and compile;
+/// execution runs on the cloned handle outside the lock).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    engine: Engine,
     pub manifest: Manifest,
     exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
@@ -68,10 +80,30 @@ impl Runtime {
     pub fn load(artifact_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, exes: Mutex::new(HashMap::new()) })
+        Ok(Runtime { engine: Engine::Pjrt(client), manifest, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// A runtime over the deterministic host-side simulated kernels — no
+    /// artifacts, no PJRT. See `runtime::sim` for the contracts it keeps.
+    pub fn sim(manifest: Manifest) -> Runtime {
+        Runtime::sim_with(manifest, sim::SimSpec::default())
+    }
+
+    /// [`Runtime::sim`] with explicit sim knobs (benches set per-token
+    /// busy-work so shard overlap has real cost to hide).
+    pub fn sim_with(manifest: Manifest, spec: sim::SimSpec) -> Runtime {
+        Runtime { engine: Engine::Sim(spec), manifest, exes: Mutex::new(HashMap::new()) }
+    }
+
+    /// True when this runtime executes the simulated kernel set.
+    pub fn is_sim(&self) -> bool {
+        matches!(self.engine, Engine::Sim(_))
     }
 
     fn exe(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let Engine::Pjrt(client) = &self.engine else {
+            bail!("sim runtime has no compiled executables (requested {file})");
+        };
         let mut exes = self.exes.lock().expect("executable cache poisoned");
         if let Some(e) = exes.get(file) {
             return Ok(e.clone());
@@ -83,7 +115,7 @@ impl Runtime {
         .with_context(|| format!("parsing {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = Arc::new(
-            self.client.compile(&comp).with_context(|| format!("compiling {file}"))?,
+            client.compile(&comp).with_context(|| format!("compiling {file}"))?,
         );
         exes.insert(file.to_string(), exe.clone());
         Ok(exe)
@@ -92,6 +124,9 @@ impl Runtime {
     /// Pre-compile a set of artifacts (startup warmup; avoids first-step
     /// compile latency polluting timing benchmarks).
     pub fn warmup(&self, grad_buckets: &[usize]) -> Result<()> {
+        if self.is_sim() {
+            return Ok(());
+        }
         self.exe(&self.manifest.generate_file.clone())?;
         self.exe(&self.manifest.apply_file.clone())?;
         for &(b, ref f) in &self.manifest.grad_files.clone() {
@@ -115,6 +150,9 @@ impl Runtime {
     /// legacy manifests). Separate from [`Runtime::warmup`] so runs on
     /// `--rollout.engine fixed` never pay compilations they will not use.
     pub fn warmup_generate_buckets(&self) -> Result<()> {
+        if self.is_sim() {
+            return Ok(());
+        }
         for (_, f) in &self.manifest.generate_files {
             self.exe(f)?;
         }
@@ -196,6 +234,9 @@ impl Runtime {
             );
         }
         let file = self.manifest.generate_file_for(bucket)?.to_string();
+        if let Engine::Sim(_) = &self.engine {
+            return sim::generate_bucket(&self.manifest, bucket, prompts, pad_len, seeds, temp);
+        }
         let mut inputs = params.to_literals(&self.manifest)?;
         inputs.push(xla::Literal::vec1(prompts).reshape(&[b as i64, p as i64])?);
         inputs.push(xla::Literal::vec1(pad_len));
@@ -221,6 +262,9 @@ impl Runtime {
         let (b, p) = (d.batch_rollout, d.prompt_len);
         if prompts.len() != b * p || pad_len.len() != b {
             bail!("generate: bad input shapes ({} vs {})", prompts.len(), b * p);
+        }
+        if let Engine::Sim(_) = &self.engine {
+            return sim::generate_fixed(&self.manifest, prompts, pad_len, seed, temp);
         }
         let mut inputs = params.to_literals(&self.manifest)?;
         inputs.push(xla::Literal::vec1(prompts).reshape(&[b as i64, p as i64])?);
@@ -261,6 +305,9 @@ impl Runtime {
         // batch_train, which maps to the legacy full-row artifacts.
         let (b, p, t) = (mb.rows, d.prompt_len, mb.bucket);
         let file = self.manifest.grad_file_for(t, b)?.to_string();
+        if let Engine::Sim(spec) = &self.engine {
+            return sim::grad(&self.manifest, spec, mb, param_lits, acc);
+        }
         let s = (p + t) as i64;
         let batch_lits = [
             xla::Literal::vec1(&mb.tokens).reshape(&[b as i64, s])?,
@@ -296,6 +343,9 @@ impl Runtime {
         acc: &GradAccum,
     ) -> Result<f64> {
         opt.step += 1;
+        if let Engine::Sim(_) = &self.engine {
+            return sim::apply(&self.manifest, params, opt, acc);
+        }
         let mut inputs = params.to_literals(&self.manifest)?;
         inputs.extend(opt.m.to_literals(&self.manifest)?);
         inputs.extend(opt.v.to_literals(&self.manifest)?);
@@ -330,6 +380,9 @@ impl Runtime {
         let (b, s) = (d.batch_pretrain, d.pretrain_len);
         if tokens.len() != b * s || loss_mask.len() != b * (s - 1) || pad_len.len() != b {
             bail!("pretrain: bad input shapes");
+        }
+        if self.is_sim() {
+            bail!("pretrain_step is not implemented by the sim runtime");
         }
         opt.step += 1;
         let mut inputs = params.to_literals(&self.manifest)?;
@@ -383,6 +436,9 @@ impl Runtime {
         bucket: usize,
         pallas: bool,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if self.is_sim() {
+            bail!("score is not implemented by the sim runtime");
+        }
         let d = &self.manifest.dims;
         let (b, p) = (d.batch_rollout, d.prompt_len);
         let files =

@@ -132,6 +132,17 @@ impl GradAccum {
         Ok(())
     }
 
+    /// Element-wise combine with another accumulator — the reduction
+    /// operator of the sharded learner's fixed-order tree
+    /// (`runtime::shard::tree_reduce_into`).
+    pub fn merge(&mut self, other: &GradAccum) {
+        debug_assert_eq!(self.flat.len(), other.flat.len());
+        for (d, s) in self.flat.iter_mut().zip(&other.flat) {
+            *d += *s;
+        }
+        self.sequences += other.sequences;
+    }
+
     /// 1 / sequences — the `scale` fed to the apply artifact.
     pub fn scale(&self) -> f32 {
         if self.sequences == 0 {
@@ -158,6 +169,10 @@ pub struct TrainMeta {
     /// `BucketTuner` EMA state at checkpoint time (None when the run does
     /// not use `--train.auto_buckets`).
     pub tuner: Option<TunerState>,
+    /// `--train.shards` at checkpoint time. Informational: the sharded
+    /// learner's reduction order is derived from the step plan, not from
+    /// the shard count, so resuming under a different K is exact.
+    pub shards: usize,
 }
 
 /// Checkpoint = params (+ optional opt state) + JSON sidecar.
@@ -218,6 +233,7 @@ impl Checkpoint {
             // Decimal string: a u64 seed does not survive an f64 JSON number
             // round-trip above 2^53.
             fields.push(("run_seed", Json::Str(t.seed.to_string())));
+            fields.push(("train_shards", Json::Num(t.shards as f64)));
             if let Some(ts) = &t.tuner {
                 // f64 values round-trip exactly: the JSON writer uses Rust's
                 // shortest-roundtrip Display for non-integral floats.
@@ -300,6 +316,9 @@ impl Checkpoint {
             step: step as u64,
             seed: seed.unwrap_or(0),
             tuner,
+            // Legacy checkpoints predate the sharded learner: treat them as
+            // written by the single-threaded learn stage.
+            shards: meta.get("train_shards").and_then(Json::as_usize).unwrap_or(1),
         });
         Ok((params, opt, train))
     }
@@ -392,7 +411,7 @@ mod tests {
         opt.step = 12;
         opt.v.flat[1] = 0.5;
         // seed above 2^53: must survive the JSON sidecar round-trip exactly
-        let meta = TrainMeta { step: 6, seed: u64::MAX - 41, tuner: None };
+        let meta = TrainMeta { step: 6, seed: u64::MAX - 41, tuner: None, shards: 4 };
         Checkpoint::save_train(&path, &m, &ps, &opt, &meta).unwrap();
         let (ps2, opt2, train2) = Checkpoint::load_full(&path, &m).unwrap();
         assert_eq!(ps.flat, ps2.flat);
@@ -426,7 +445,7 @@ mod tests {
         tuner.observe(&[1, 3, 3, 7]);
         tuner.observe(&[2, 5, 6]);
         tuner.observe(&[8, 8, 1, 4, 4, 4, 9]);
-        let meta = TrainMeta { step: 3, seed: 17, tuner: Some(tuner.state()) };
+        let meta = TrainMeta { step: 3, seed: 17, tuner: Some(tuner.state()), shards: 1 };
         Checkpoint::save_train(&path, &m, &ps, &opt, &meta).unwrap();
         let (_, _, train2) = Checkpoint::load_full(&path, &m).unwrap();
         let train2 = train2.expect("train meta must survive");
@@ -436,6 +455,41 @@ mod tests {
         tuner.observe(&[2, 2, 6]);
         resumed.observe(&[2, 2, 6]);
         assert_eq!(resumed.state(), tuner.state());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn grad_accum_merge_is_elementwise_add() {
+        let mut a = GradAccum::zeros(4);
+        let mut b = GradAccum::zeros(4);
+        a.flat.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        a.sequences = 3;
+        b.flat.copy_from_slice(&[0.5, -2.0, 0.25, 1.0]);
+        b.sequences = 2;
+        a.merge(&b);
+        assert_eq!(a.flat, vec![1.5, 0.0, 3.25, 5.0]);
+        assert_eq!(a.sequences, 5);
+    }
+
+    #[test]
+    fn legacy_sidecar_without_shards_loads_as_one() {
+        // Checkpoints written before the sharded learner carry no
+        // `train_shards` field; they must load as shards = 1.
+        let m = toy_manifest();
+        let dir = std::env::temp_dir().join("nat_rl_ckpt_legacy_shards_test");
+        let path = dir.join("legacy.bin");
+        let ps = ParamStore::zeros_like(&m);
+        let opt = OptState::zeros(&m);
+        let meta = TrainMeta { step: 2, seed: 5, tuner: None, shards: 3 };
+        Checkpoint::save_train(&path, &m, &ps, &opt, &meta).unwrap();
+        // strip the field from the sidecar to simulate a legacy checkpoint
+        let side = path.with_extension("json");
+        let text = std::fs::read_to_string(&side).unwrap();
+        assert!(text.contains("train_shards"));
+        let stripped = text.replace("\"train_shards\":3,", "").replace("\"train_shards\":3", "");
+        std::fs::write(&side, stripped).unwrap();
+        let (_, _, train) = Checkpoint::load_full(&path, &m).unwrap();
+        assert_eq!(train.unwrap().shards, 1);
         let _ = std::fs::remove_dir_all(dir);
     }
 

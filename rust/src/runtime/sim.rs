@@ -1,0 +1,495 @@
+//! Deterministic host-side execution engine for [`Runtime`](super::Runtime).
+//!
+//! The offline build cannot execute PJRT artifacts, yet the learner-side
+//! orchestration — packing, shard planning, concurrent grad execution, the
+//! fixed-order tree reduction, AdamW bookkeeping — is exactly the code whose
+//! correctness properties (bit-identity across `--train.shards`, golden-trace
+//! stability, HT unbiasedness through the full path) must hold in tier-1.
+//! This module mirrors the rollout scheduler's `SimBackend` precedent one
+//! level down: a simulated kernel set behind the same `Runtime` entry points
+//! (`generate`, `generate_bucketed`, `grad_cached`, `apply`), so trainers,
+//! the pipeline, benches and tests drive the REAL coordinator code paths
+//! end-to-end with no device.
+//!
+//! Contracts the simulation preserves:
+//!
+//! * **Purity.** Every kernel is a pure function of its inputs. Rollout
+//!   rows derive from a per-row key (prompt ⊕ seed), so bucketed generation
+//!   is scheduling-invariant exactly like the real `generate_T<b>` grid.
+//! * **Inertness.** Rows with all-zero HT weights or zero advantage
+//!   contribute exactly 0.0 to the gradient, like the real NAT loss.
+//! * **Cross-platform bit-stability.** Only IEEE-exact float operations
+//!   (+, −, ×, ÷, sqrt) and integer mixing are used — no transcendentals —
+//!   so committed golden traces replay bit-identically on any host.
+//! * **Sensitivity.** The gradient depends on every micro-batch field
+//!   (tokens, HT weights, advantages, behaviour logprobs, inverse lengths)
+//!   and on the parameters, so semantic drift anywhere in the
+//!   mask → pack → shard → reduce → apply chain changes the trace.
+//!
+//! The first parameter's gradient is *linear* in the HT weights
+//! (`grad[0] = Σ_rows adv · inv_len · Σ_t w_t · (old_lp_t + tok_t/1024)`),
+//! which is what lets the Monte-Carlo test assert Horvitz-Thompson
+//! unbiasedness through the full packing/sharding/reduction path against a
+//! closed-form expectation.
+
+use std::hint::black_box;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::batcher::MicroBatch;
+use crate::model::Manifest;
+use crate::tokenizer::{EOS, PAD};
+use crate::util::json::Json;
+
+use super::{GenerateOut, GradAccum, GradMetrics, OptState, ParamStore};
+
+/// Simulated-kernel knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimSpec {
+    /// Busy-work iterations per allocated learner token in [`grad`] — models
+    /// device forward/backward cost so shard-speedup benches have something
+    /// real to overlap. 0 (the default) keeps tests fast.
+    pub spin_per_token: u64,
+}
+
+/// SplitMix64 finalizer: full avalanche over one word.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Uniform in [0, 1) from a key, via an exact power-of-two divide.
+fn frac(key: u64) -> f32 {
+    ((mix(key) >> 40) as f32) / 16_777_216.0
+}
+
+/// Deterministic busy-work (shared shape with `benches/bench_pipeline.rs`).
+fn spin(units: u64) -> u64 {
+    let mut x = 0x9E37_79B9_7F4A_7C15u64;
+    for i in 0..units {
+        x = x.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(i);
+    }
+    black_box(x)
+}
+
+/// Token id of '#' in the fixed alphabet (answer marker the verifier reads).
+const HASH_TOK: i32 = 23;
+
+/// The manifest the sim runtime executes against: a small 2-tensor model
+/// with the full artifact surface (3 sequence buckets × {1, 2, full} row
+/// grid, per-bucket generate artifacts), so every routing path the real
+/// manifests exercise exists here too. File names are never opened.
+pub fn sim_manifest() -> Manifest {
+    let j = Json::parse(
+        r#"{
+      "config": {"name":"sim","vocab":64,"d_model":8,"n_layers":1,"n_heads":1,
+        "d_ff":16,"prompt_len":32,"max_resp":16,"buckets":[4,8,16],
+        "batch_rollout":4,"batch_train":4,"pretrain_len":16,
+        "batch_pretrain":2,"lr":0.01,"clip_eps":0.2,"grad_clip":1.0,
+        "pretrain_lr":0.01},
+      "param_count": 96,
+      "params": [
+        {"name":"w0","shape":[8,8],"size":64,"offset":0},
+        {"name":"w1","shape":[8,4],"size":32,"offset":64}],
+      "artifacts": {
+        "generate":"sim://generate",
+        "generate_buckets":{"4":"sim://gen4","8":"sim://gen8","16":"sim://gen16"},
+        "apply":"sim://apply",
+        "pretrain":"sim://pretrain",
+        "grad":{"4":"sim://g4","8":"sim://g8","16":"sim://g16"},
+        "grad_rows":{"4x1":"sim://g4r1","4x2":"sim://g4r2",
+                     "8x1":"sim://g8r1","8x2":"sim://g8r2",
+                     "16x1":"sim://g16r1","16x2":"sim://g16r2"},
+        "score":{"16":"sim://s16"}
+      }
+    }"#,
+    )
+    .expect("sim manifest JSON is well-formed");
+    Manifest::from_json(Path::new("sim://"), &j).expect("sim manifest is consistent")
+}
+
+/// Deterministic non-trivial initial parameters (the sim counterpart of
+/// `artifacts/<cfg>/init_params.bin`).
+pub fn init_params(manifest: &Manifest) -> ParamStore {
+    let flat = (0..manifest.param_count)
+        .map(|i| (frac(0x494E_4954 ^ i as u64) - 0.5) * 0.2)
+        .collect();
+    ParamStore { flat }
+}
+
+/// Per-row sampling key: a pure mix of the prompt row and the row's seed —
+/// independent of batch placement, matching the `generate_T<b>` contract.
+fn row_key(prompt: &[i32], seed: i64) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64 ^ seed as u64;
+    for &t in prompt {
+        h = mix(h ^ t as u64);
+    }
+    h
+}
+
+/// Simulated response length in `1..=(top + top/2)`: the overflow tail
+/// (length > top bucket) exercises escalation and the no-EOS path.
+fn row_len(key: u64, top: usize) -> usize {
+    1 + (mix(key ^ 0x4C45_4E) % (top as u64 + top as u64 / 2)) as usize
+}
+
+/// Token at response position `t` of a row stream. The last three positions
+/// spell `# <digit> EOS` so a deterministic fraction of rollouts parse as
+/// answers and verifiable rewards vary within groups; body tokens stay in
+/// the printable alphabet and never collide with EOS.
+fn row_token(key: u64, t: usize, len: usize) -> i32 {
+    if t + 1 == len {
+        EOS
+    } else if t + 2 == len {
+        3 + (mix(key ^ 0x414E_53) % 10) as i32 // digit 0-9
+    } else if t + 3 == len {
+        HASH_TOK
+    } else {
+        3 + (mix(key ^ (t as u64).wrapping_mul(0x9E37_79B9)) % 50) as i32
+    }
+}
+
+/// Behaviour logprob at response position `t` (in [-1.02, -0.02)).
+fn row_lp(key: u64, t: usize) -> f32 {
+    -0.02 - frac(key ^ (t as u64).wrapping_mul(0xA24B_AED4) ^ 0x4C50)
+}
+
+/// Fill one row's `[P + window]` token slice and `[window]` logprob slice.
+/// The row's true length derives from `top` (the model's full response
+/// window), NEVER from the calling bucket — that is what keeps a row's
+/// stream bit-identical under any bucket cap that covers it.
+fn fill_row(
+    tokens: &mut [i32],
+    lp: &mut [f32],
+    prompt: &[i32],
+    key: u64,
+    window: usize,
+    top: usize,
+) {
+    let p = prompt.len();
+    tokens[..p].copy_from_slice(prompt);
+    let len = row_len(key, top.max(1));
+    for t in 0..window.min(len) {
+        tokens[p + t] = row_token(key, t, len);
+        lp[t] = row_lp(key, t);
+    }
+}
+
+/// Bucketed generate: per-row seeds, `[B, P + bucket]` window. Each row is
+/// a pure function of `(prompt, seed)` — the scheduling-invariance contract.
+pub fn generate_bucket(
+    manifest: &Manifest,
+    bucket: usize,
+    prompts: &[i32],
+    _pads: &[i32],
+    seeds: &[i32],
+    _temp: f32,
+) -> Result<GenerateOut> {
+    let d = &manifest.dims;
+    let (b, p) = (d.batch_rollout, d.prompt_len);
+    let s = p + bucket;
+    let mut tokens = vec![PAD; b * s];
+    let mut lp = vec![0.0f32; b * bucket];
+    for row in 0..b {
+        let prompt = &prompts[row * p..(row + 1) * p];
+        let key = row_key(prompt, seeds[row] as i64);
+        fill_row(
+            &mut tokens[row * s..(row + 1) * s],
+            &mut lp[row * bucket..(row + 1) * bucket],
+            prompt,
+            key,
+            bucket,
+            d.max_resp,
+        );
+    }
+    Ok(GenerateOut { tokens, lp })
+}
+
+/// Legacy fixed-engine generate: full `[B, P + max_resp]` window with ONE
+/// scalar seed per call; rows decorrelate via their batch position, exactly
+/// like the legacy artifact's batched sampling streams.
+pub fn generate_fixed(
+    manifest: &Manifest,
+    prompts: &[i32],
+    _pads: &[i32],
+    seed: i32,
+    _temp: f32,
+) -> Result<GenerateOut> {
+    let d = &manifest.dims;
+    let (b, p, t_max) = (d.batch_rollout, d.prompt_len, d.max_resp);
+    let s = p + t_max;
+    let mut tokens = vec![PAD; b * s];
+    let mut lp = vec![0.0f32; b * t_max];
+    for row in 0..b {
+        let prompt = &prompts[row * p..(row + 1) * p];
+        let key = mix(row_key(prompt, seed as i64) ^ (row as u64).wrapping_mul(0xBF58_476D));
+        fill_row(
+            &mut tokens[row * s..(row + 1) * s],
+            &mut lp[row * t_max..(row + 1) * t_max],
+            prompt,
+            key,
+            t_max,
+            t_max,
+        );
+    }
+    Ok(GenerateOut { tokens, lp })
+}
+
+/// Simulated NAT grad over one micro-batch, accumulated into `acc` with the
+/// same contract as the artifact path (`GradAccum::add_literals`): gradient
+/// sums plus `sequences += real_rows`. See the module docs for the formula;
+/// padding rows (zero weights, zero advantage) contribute exactly 0.0.
+pub fn grad(
+    manifest: &Manifest,
+    spec: &SimSpec,
+    mb: &MicroBatch,
+    param_lits: &[xla::Literal],
+    acc: &mut GradAccum,
+) -> Result<GradMetrics> {
+    let d = &manifest.dims;
+    let (rows, p, t) = (mb.rows, d.prompt_len, mb.bucket);
+    let s = p + t;
+    let n = manifest.param_count;
+    let mut params_flat: Vec<f32> = Vec::with_capacity(n);
+    for lit in param_lits {
+        params_flat.extend(lit.to_vec::<f32>()?);
+    }
+    if params_flat.len() != n {
+        bail!("sim grad: {} param values, expected {n}", params_flat.len());
+    }
+    if spec.spin_per_token > 0 {
+        spin(spec.spin_per_token * (rows * s) as u64);
+    }
+    let mut grads = vec![0.0f32; n];
+    let mut met = GradMetrics::default();
+    for r in 0..rows {
+        let row_toks = &mb.tokens[r * s..(r + 1) * s];
+        let key = row_key(row_toks, mb.pad_len[r] as i64);
+        let mut row_acc = 0.0f32;
+        for tt in 0..t {
+            let w = mb.ht_w[r * t + tt];
+            if w == 0.0 {
+                continue;
+            }
+            let tok = row_toks[p + tt] as f32;
+            let lp = mb.old_lp[r * t + tt];
+            row_acc += w * (lp + tok / 1024.0);
+            met.tokens += 1.0;
+            met.entropy_sum += frac(key ^ (tt as u64) ^ 0x454E_54) as f64;
+            met.kl_sum += (lp * lp / 1024.0) as f64;
+            if mix(key ^ (tt as u64) ^ 0x434C_50) % 100 < 5 {
+                met.clip_sum += 1.0;
+            }
+        }
+        let g_r = mb.adv[r] * mb.inv_len[r] * row_acc;
+        met.loss_sum += (g_r * g_r) as f64;
+        if g_r == 0.0 {
+            continue;
+        }
+        grads[0] += g_r;
+        for (j, slot) in grads.iter_mut().enumerate().skip(1) {
+            let basis = frac(key ^ (j as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)) - 0.5;
+            *slot += g_r * (basis + params_flat[j] / 128.0);
+        }
+    }
+    for (dst, g) in acc.flat.iter_mut().zip(&grads) {
+        *dst += *g;
+    }
+    acc.sequences += mb.real_rows;
+    Ok(met)
+}
+
+/// `x^n` by square-and-multiply: deterministic (fixed multiplication tree
+/// per `n`), no transcendental `powf`.
+fn powi(x: f32, mut n: u64) -> f32 {
+    let mut base = x;
+    let mut out = 1.0f32;
+    while n > 0 {
+        if n & 1 == 1 {
+            out *= base;
+        }
+        base *= base;
+        n >>= 1;
+    }
+    out
+}
+
+/// Simulated AdamW apply, matching the artifact contract: consumes the
+/// host-accumulated gradient (scaled by `1/sequences`), updates params and
+/// both moments in place, and returns the PRE-clip gradient norm.
+pub fn apply(
+    manifest: &Manifest,
+    params: &mut ParamStore,
+    opt: &mut OptState,
+    acc: &GradAccum,
+) -> Result<f64> {
+    let d = &manifest.dims;
+    let n = manifest.param_count;
+    if acc.flat.len() != n {
+        bail!("sim apply: {} grad values, expected {n}", acc.flat.len());
+    }
+    let scale = acc.scale();
+    let mut sq = 0.0f64;
+    for &g in &acc.flat {
+        let gs = (g * scale) as f64;
+        sq += gs * gs;
+    }
+    let norm = sq.sqrt();
+    let clip = if norm > d.grad_clip && norm > 0.0 { (d.grad_clip / norm) as f32 } else { 1.0 };
+    let (b1, b2, eps, wd) = (0.9f32, 0.999f32, 1e-8f32, 0.01f32);
+    let lr = d.lr as f32;
+    let bc1 = 1.0 - powi(b1, opt.step);
+    let bc2 = 1.0 - powi(b2, opt.step);
+    for i in 0..n {
+        let g = acc.flat[i] * scale * clip;
+        let m = b1 * opt.m.flat[i] + (1.0 - b1) * g;
+        let v = b2 * opt.v.flat[i] + (1.0 - b2) * g * g;
+        opt.m.flat[i] = m;
+        opt.v.flat[i] = v;
+        let update = (m / bc1) / ((v / bc2).sqrt() + eps);
+        params.flat[i] -= lr * (update + wd * params.flat[i]);
+    }
+    Ok(norm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    #[test]
+    fn sim_manifest_has_full_artifact_surface() {
+        let m = sim_manifest();
+        assert_eq!(m.dims.buckets, vec![4, 8, 16]);
+        assert_eq!(m.row_grid(), vec![1, 2, 4]);
+        assert_eq!(m.param_count, 96);
+        assert!(m.generate_file_for(4).is_ok());
+        assert!(m.grad_file_for(8, 2).is_ok());
+        assert!(m.grad_file_for(8, 3).is_err());
+    }
+
+    #[test]
+    fn bucketed_rows_are_pure_functions_of_prompt_and_seed() {
+        let m = sim_manifest();
+        let d = m.dims.clone();
+        let p = d.prompt_len;
+        let prompt_a: Vec<i32> = (0..p as i32).map(|t| 3 + t % 40).collect();
+        let prompt_b: Vec<i32> = (0..p as i32).map(|t| 5 + t % 30).collect();
+        // prompt A in row 0 of one batch, row 2 of another; same seed.
+        let mk_batch = |slot: usize| -> (Vec<i32>, Vec<i32>) {
+            let mut prompts = Vec::new();
+            let mut seeds = Vec::new();
+            for row in 0..d.batch_rollout {
+                if row == slot {
+                    prompts.extend_from_slice(&prompt_a);
+                    seeds.push(77);
+                } else {
+                    prompts.extend_from_slice(&prompt_b);
+                    seeds.push(100 + row as i32);
+                }
+            }
+            (prompts, seeds)
+        };
+        let pads = vec![0i32; d.batch_rollout];
+        for bucket in [8usize, 16] {
+            let (pr0, sd0) = mk_batch(0);
+            let (pr2, sd2) = mk_batch(2);
+            let a = generate_bucket(&m, bucket, &pr0, &pads, &sd0, 1.0).unwrap();
+            let b = generate_bucket(&m, bucket, &pr2, &pads, &sd2, 1.0).unwrap();
+            let s = p + bucket;
+            assert_eq!(
+                a.tokens[..s],
+                b.tokens[2 * s..3 * s],
+                "row stream depends on batch placement (bucket {bucket})"
+            );
+            assert_eq!(a.lp[..bucket], b.lp[2 * bucket..3 * bucket]);
+        }
+        // ...and a longer bucket extends the stream with an identical prefix.
+        let (pr, sd) = mk_batch(0);
+        let short = generate_bucket(&m, 8, &pr, &pads, &sd, 1.0).unwrap();
+        let long = generate_bucket(&m, 16, &pr, &pads, &sd, 1.0).unwrap();
+        let resp_s = &short.tokens[p..p + 8];
+        let resp_l = &long.tokens[p..p + 8];
+        if !resp_s.contains(&EOS) {
+            assert_eq!(resp_s, resp_l, "bucket cap changed the sampled prefix");
+        }
+    }
+
+    #[test]
+    fn grad_is_inert_for_zero_weight_rows_and_linear_probe_matches() {
+        let m = sim_manifest();
+        let rt = Runtime::sim(sim_manifest());
+        let d = m.dims.clone();
+        let (p, t) = (d.prompt_len, 8usize);
+        let s = p + t;
+        let rows = 2usize;
+        let mut mb = MicroBatch {
+            bucket: t,
+            rows,
+            real_rows: 1,
+            tokens: (0..(rows * s) as i32).map(|x| 3 + x % 40).collect(),
+            ht_w: vec![0.0; rows * t],
+            adv: vec![0.0; rows],
+            old_lp: vec![-0.5; rows * t],
+            inv_len: vec![0.0; rows],
+            pad_len: vec![4; rows],
+        };
+        // row 0 scores three tokens; row 1 is inert padding
+        mb.ht_w[0] = 2.0;
+        mb.ht_w[1] = 1.0;
+        mb.ht_w[3] = 4.0;
+        mb.adv[0] = 0.5;
+        mb.inv_len[0] = 1.0 / 8.0;
+        let params = init_params(&m);
+        let lits = params.to_literals(&m).unwrap();
+        let mut acc = GradAccum::zeros(m.param_count);
+        let met = rt.grad_cached(&mb, &lits, &mut acc).unwrap();
+        assert_eq!(met.tokens, 3.0);
+        assert_eq!(acc.sequences, 1);
+        // linear probe: grad[0] = adv * inv_len * Σ w (lp + tok/1024)
+        let expect: f32 = {
+            let row = &mb.tokens[..s];
+            let terms = [(0usize, 2.0f32), (1, 1.0), (3, 4.0)];
+            let mut sum = 0.0f32;
+            for (tt, w) in terms {
+                sum += w * (mb.old_lp[tt] + row[p + tt] as f32 / 1024.0);
+            }
+            0.5 * (1.0 / 8.0) * sum
+        };
+        assert!((acc.flat[0] - expect).abs() < 1e-6, "{} vs {expect}", acc.flat[0]);
+        assert!(acc.flat.iter().skip(1).any(|&g| g != 0.0));
+
+        // all-inert micro-batch contributes exactly nothing
+        mb.ht_w.iter_mut().for_each(|w| *w = 0.0);
+        mb.adv[0] = 0.0;
+        let mut acc0 = GradAccum::zeros(m.param_count);
+        rt.grad_cached(&mb, &lits, &mut acc0).unwrap();
+        assert!(acc0.flat.iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn apply_is_deterministic_and_moves_params() {
+        let m = sim_manifest();
+        let rt = Runtime::sim(sim_manifest());
+        let run = || {
+            let mut params = init_params(&m);
+            let mut opt = OptState::zeros(&m);
+            let mut acc = GradAccum::zeros(m.param_count);
+            acc.flat.iter_mut().enumerate().for_each(|(i, g)| *g = 0.01 * (i as f32 - 40.0));
+            acc.sequences = 4;
+            let n1 = rt.apply(&mut params, &mut opt, &acc).unwrap();
+            let n2 = rt.apply(&mut params, &mut opt, &acc).unwrap();
+            (params.flat, opt.step, n1, n2)
+        };
+        let (pa, step_a, n1, n2) = run();
+        let (pb, step_b, m1, m2) = run();
+        assert_eq!(pa, pb);
+        assert_eq!((step_a, step_b), (2, 2));
+        assert_eq!(n1.to_bits(), m1.to_bits());
+        assert_eq!(n2.to_bits(), m2.to_bits());
+        assert!(n1 > 0.0);
+        assert_ne!(pa, init_params(&m).flat);
+    }
+}

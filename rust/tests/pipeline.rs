@@ -163,7 +163,7 @@ fn mid_run_checkpoint_roundtrips_full_training_state() {
     opt.step = 34; // 17 trainer steps x 2 ppo epochs
     opt.m.flat[5] = 0.25;
     opt.v.flat[7] = 1.5;
-    let meta = TrainMeta { step: 17, seed: 123, tuner: None };
+    let meta = TrainMeta { step: 17, seed: 123, tuner: None, shards: 2 };
 
     Checkpoint::save_train(&path, &m, &params, &opt, &meta).unwrap();
     let (p2, o2, t2) = Checkpoint::load_full(&path, &m).unwrap();
@@ -193,6 +193,7 @@ fn pipeline_cli_style_overrides() {
         ("pipeline.queue_depth", "3"),
         ("pipeline.max_staleness", "2"),
         ("rl.ckpt_every", "5"),
+        ("train.shards", "4"),
     ] {
         cfg.set(k, v).unwrap();
     }
@@ -200,4 +201,5 @@ fn pipeline_cli_style_overrides() {
     assert_eq!(cfg.pipeline.queue_depth, 3);
     assert_eq!(cfg.pipeline.max_staleness, 2);
     assert_eq!(cfg.rl.ckpt_every, 5);
+    assert_eq!(cfg.train.shards, 4);
 }

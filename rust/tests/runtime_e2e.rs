@@ -356,6 +356,36 @@ fn fixed_and_budget_packers_agree_for_seeds_0_and_1() {
     }
 }
 
+/// Acceptance (sharded learner tentpole, real artifacts): the fixed-order
+/// tree reduction is keyed by micro-batch id, so `--train.shards K` must be
+/// BIT-identical to `shards = 1` — parameters and every recorded series —
+/// for any K, on the real PJRT grad artifacts exactly as in the sim tier.
+#[test]
+fn sharded_learner_is_bit_identical_on_real_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let base = ParamStore::load_init(&rt.manifest).unwrap();
+    let run = |k: usize| {
+        let mut cfg = tiny_cfg(Method::Rpc { min_cut: 4 }, 11);
+        cfg.train.shards = k;
+        let mut tr = Trainer::new(&rt, cfg, base.clone(), OptState::zeros(&rt.manifest));
+        tr.train(2, false).unwrap();
+        (
+            tr.params.flat,
+            tr.recorder.values("grad_norm"),
+            tr.recorder.values("entropy"),
+            tr.recorder.values("kl"),
+        )
+    };
+    let (p1, g1, e1, k1) = run(1);
+    for k in [2usize, 3, 4] {
+        let (pk, gk, ek, kk) = run(k);
+        assert_eq!(p1, pk, "shards={k}: parameters diverged from shards=1");
+        assert_eq!(g1, gk, "shards={k}: grad_norm series diverged");
+        assert_eq!(e1, ek, "shards={k}: entropy series diverged");
+        assert_eq!(k1, kk, "shards={k}: kl series diverged");
+    }
+}
+
 /// Acceptance: the single-worker pipeline is forced synchronous, so for the
 /// same seed it must be BIT-identical to the serial trainer — parameters
 /// and every metric series.
