@@ -41,3 +41,27 @@ def det_trunc_mask(t_i: int, frac: float = 0.5):
 def full_mask(t_i: int):
     m = np.ones(t_i, np.float32)
     return m, m.copy()
+
+
+def stratified_mask(rng: np.random.Generator, t_i: int, p: float):
+    """Systematic (stratified) sampling at rate p (mirrors
+    rust selection::stratified): ONE uniform offset u places an
+    equally-spaced grid over the cumulative rate; token t is selected iff
+    floor(p*(t+1) + u) > floor(p*t + u). Marginal inclusion is exactly p
+    (HT weight 1/p like URS) but the realized sample size is pinned to
+    floor(p*t_i) or ceil(p*t_i) — URS's kept-count variance collapses."""
+    u = float(rng.random())
+    cum = np.floor(p * np.arange(1, t_i + 1) + u)
+    prev = np.concatenate(([0.0], cum[:-1]))  # floor(p*0 + u) == 0 for u < 1
+    m = (cum > prev).astype(np.float32)
+    return m, m / p
+
+
+def poisson_mask(rng: np.random.Generator, t_i: int, k: float):
+    """Length-aware Poisson sampling (mirrors rust selection::poisson):
+    independent Bernoulli at rate min(1, k / t_i), so every sequence
+    contributes ~k selected tokens regardless of length; HT weight is the
+    inverse rate (t_i / k for long sequences)."""
+    rate = min(1.0, k / t_i)
+    m = (rng.random(t_i) < rate).astype(np.float32)
+    return m, m / rate

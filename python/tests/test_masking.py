@@ -66,3 +66,71 @@ def test_det_trunc_suffix_never_selected():
     m, w = mk.det_trunc_mask(100, 0.5)
     assert m[:50].all() and not m[50:].any()
     np.testing.assert_array_equal(m, w)
+
+
+# --- stratified / poisson parity with the rust selection subsystem -------
+
+
+@given(t=st.integers(1, 200), seed=st.integers(0, 999), p=st.floats(0.05, 1.0))
+def test_stratified_sample_size_is_pinned(t, seed, p):
+    """Kept count is floor(p*t) or ceil(p*t) — the variance-reduction
+    contract the rust Stratified selector asserts too."""
+    rng = np.random.default_rng(seed)
+    m, w = mk.stratified_mask(rng, t, p)
+    kept = int(m.sum())
+    assert kept in (int(np.floor(p * t)), int(np.ceil(p * t)))
+    np.testing.assert_allclose(w, m / p, rtol=1e-6)
+    assert set(np.unique(m)).issubset({0.0, 1.0})
+
+
+def test_stratified_marginal_inclusion_is_exactly_p():
+    """MC check of the HT premise E[m_t] = p per position (parity with the
+    rust test selection::stratified::marginal_inclusion_is_exactly_p)."""
+    t, p, n = 30, 0.4, 20000
+    rng = np.random.default_rng(2)
+    acc = np.zeros(t)
+    for _ in range(n):
+        m, _ = mk.stratified_mask(rng, t, p)
+        acc += m
+    np.testing.assert_allclose(acc / n, p, atol=0.02)
+
+
+def test_stratified_variance_collapses_vs_urs():
+    t, p, n = 160, 0.35, 3000
+    rng = np.random.default_rng(3)
+    kept_u = [mk.urs_mask(rng, t, p)[0].sum() for _ in range(n)]
+    kept_s = [mk.stratified_mask(rng, t, p)[0].sum() for _ in range(n)]
+    assert abs(np.mean(kept_u) - p * t) < 1.0
+    assert abs(np.mean(kept_s) - p * t) < 0.5
+    assert np.var(kept_s) < 0.05 * np.var(kept_u)
+
+
+@given(t=st.integers(1, 200), seed=st.integers(0, 999),
+       k=st.floats(0.5, 64.0))
+def test_poisson_weights_are_inverse_rate(t, seed, k):
+    rng = np.random.default_rng(seed)
+    m, w = mk.poisson_mask(rng, t, k)
+    rate = min(1.0, k / t)
+    np.testing.assert_allclose(w, m / rate, rtol=1e-6)
+    if t <= k:  # short sequences keep everything
+        assert m.all()
+
+
+def test_poisson_expected_kept_is_length_aware():
+    """E[kept] ≈ min(t, k) for every length — the length-aware contract."""
+    k, n = 6.0, 20000
+    rng = np.random.default_rng(4)
+    for t in (3, 10, 40, 120):
+        tot = sum(mk.poisson_mask(rng, t, k)[0].sum() for _ in range(n)) / n
+        assert abs(tot - min(t, k)) < max(0.05 * min(t, k), 0.1), (t, tot)
+
+
+def test_poisson_and_stratified_ht_sums_are_unbiased():
+    """Σ w_t must average to t_i — the unbiasedness the rust budget
+    controller relies on when it rescales rates."""
+    t, n = 50, 20000
+    rng = np.random.default_rng(5)
+    for mask in (lambda r: mk.poisson_mask(r, t, 6.0)[1],
+                 lambda r: mk.stratified_mask(r, t, 0.3)[1]):
+        mean = sum(mask(rng).sum() for _ in range(n)) / n
+        assert abs(mean - t) < 0.5, mean

@@ -21,6 +21,14 @@ fn main() {
             sample(&Method::Rpc { min_cut: 8 }, t_i, &mut rng)
         });
         b.iter(&format!("rpc_survival/T={t_i}"), || rpc_survival(t_i, 8));
+        // the selection-subsystem plug-ins: stratified should beat URS
+        // (one RNG draw per sequence instead of T)
+        b.iter(&format!("stratified_p0.5/T={t_i}"), || {
+            sample(&Method::Stratified { p: 0.5 }, t_i, &mut rng)
+        });
+        b.iter(&format!("poisson_k8/T={t_i}"), || {
+            sample(&Method::Poisson { k: 8 }, t_i, &mut rng)
+        });
     }
     b.report();
 }

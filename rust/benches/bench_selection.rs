@@ -1,0 +1,178 @@
+//! Selection-subsystem bench (sim tier — always runs, no artifacts).
+//!
+//! Measures the batch budget controller and the plug-in selectors on the
+//! ONE shared workload (`selection::bench_workload`, the same population
+//! the tier-1 gate in `tests/selection.rs` asserts on) and writes the
+//! machine-readable `BENCH_selection.json` record:
+//!
+//! * controller solve cost per scheme (ns/solve on the 64-row population);
+//! * the budget acceptance: for every adaptive scheme the achieved
+//!   expectation lands within 2% of the target — asserted here too, AFTER
+//!   the JSON is on disk so a failure still leaves the measurements;
+//! * end-to-end `learn_stage` steps under `--train.budget_mode batch` on
+//!   the sim runtime, checked against a full-token GRPO step for matching
+//!   `StepStats` shape (same step/sequence accounting, finite metrics) —
+//!   the controller changes *how much* is selected, never the step's
+//!   observable structure.
+
+use nat_rl::config::{BudgetMode, Method, RunConfig};
+use nat_rl::coordinator::selection::{self, bench_workload};
+use nat_rl::coordinator::trainer::{learn_stage, StepStats};
+use nat_rl::runtime::sim::{init_params, sim_manifest};
+use nat_rl::runtime::{GradAccum, OptState, Runtime};
+use nat_rl::util::bench::Bench;
+use nat_rl::util::json::{obj, Json};
+use nat_rl::util::rng::Rng;
+
+fn controller_bench(b: &mut Bench, records: &mut Vec<Json>) {
+    let lens = bench_workload::lens();
+    let lps: Vec<Vec<f32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| bench_workload::old_lp(i, t))
+        .collect();
+    let rows: Vec<(usize, Option<&[f32]>)> =
+        lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
+    let total: f64 = lens.iter().map(|&t| t as f64).sum();
+
+    for (method, frac) in [
+        (Method::Urs { p: 0.9 }, 0.4f64),
+        (Method::Stratified { p: 0.9 }, 0.4),
+        (Method::Poisson { k: 4 }, 0.4),
+        (Method::Saliency { floor: 0.25 }, 0.4),
+        (Method::Rpc { min_cut: 8 }, 0.65),
+    ] {
+        let target = (total * frac).round() as usize;
+        b.iter(&format!("solve/{}", method.id()), || {
+            selection::solve_batch(&method, &rows, target)
+        });
+        let out = selection::solve_batch(&method, &rows, target);
+        let rel = (out.expected - target as f64).abs() / target as f64;
+        records.push(obj(vec![
+            ("scheme", Json::Str(method.id().into())),
+            ("target", Json::Num(target as f64)),
+            ("expected", Json::Num(out.expected)),
+            ("rel_err", Json::Num(rel)),
+        ]));
+    }
+}
+
+fn step_with(
+    rt: &Runtime,
+    method: Method,
+    budget: usize,
+    seqs: &[nat_rl::coordinator::rollout::RolloutSeq],
+) -> StepStats {
+    let mut cfg = RunConfig::default();
+    cfg.method = method;
+    cfg.rl.group_size = bench_workload::GROUP_SIZE;
+    if budget > 0 {
+        cfg.train.token_budget = budget;
+        cfg.train.budget_mode = BudgetMode::Batch;
+    }
+    let mut params = init_params(&rt.manifest);
+    let mut opt = OptState::zeros(&rt.manifest);
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    let mut rng_mask = Rng::new(0xBE9C);
+    learn_stage(rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, seqs)
+        .unwrap()
+}
+
+/// "Same StepStats shape as full-token GRPO": identical step/sequence
+/// accounting, live micro-batching, every float finite — the controller
+/// must not change the step's observable structure, only its token count.
+fn assert_shape_matches(grpo: &StepStats, s: &StepStats, scheme: &str) {
+    assert_eq!(s.step, grpo.step, "{scheme}");
+    assert_eq!(s.sequences, grpo.sequences, "{scheme}");
+    assert!(s.micro_batches > 0, "{scheme}");
+    for (name, v) in [
+        ("reward_mean", s.reward_mean),
+        ("entropy", s.entropy),
+        ("clip_frac", s.clip_frac),
+        ("kl", s.kl),
+        ("grad_norm", s.grad_norm),
+        ("selected_ratio", s.selected_ratio),
+        ("budget_realized", s.budget_realized),
+        ("sel_var", s.sel_var),
+        ("padding_waste", s.padding_waste),
+        ("mem_gb", s.mem_gb),
+        ("peak_mem_gb", s.peak_mem_gb),
+    ] {
+        assert!(v.is_finite(), "{scheme}: {name} not finite");
+    }
+    assert_eq!(s.reward_mean.to_bits(), grpo.reward_mean.to_bits(), "{scheme}");
+    assert!(s.selected_ratio <= 1.0 + 1e-12, "{scheme}");
+}
+
+fn main() {
+    let mut b = Bench::new("selection");
+    let mut solve_records = Vec::new();
+    controller_bench(&mut b, &mut solve_records);
+
+    // End-to-end sim steps: GRPO reference vs budget-controlled schemes.
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let seqs = bench_workload::seqs(d.prompt_len, d.max_resp);
+    let total: usize = seqs.iter().map(|s| s.resp_len).sum();
+    let budget = (total as f64 * 0.4).round() as usize;
+
+    let grpo = step_with(&rt, Method::Grpo, 0, &seqs);
+    let mut step_records = vec![obj(vec![
+        ("scheme", Json::Str("grpo".into())),
+        ("selected_ratio", Json::Num(grpo.selected_ratio)),
+        ("budget_realized", Json::Num(grpo.budget_realized)),
+    ])];
+    let mut worst_rel = 0.0f64;
+    for method in [
+        Method::Urs { p: 0.9 },
+        Method::Stratified { p: 0.9 },
+        Method::Poisson { k: 4 },
+        Method::Saliency { floor: 0.25 },
+    ] {
+        b.iter(&format!("step_budget/{}", method.id()), || {
+            step_with(&rt, method, budget, &seqs)
+        });
+        let s = step_with(&rt, method, budget, &seqs);
+        assert_shape_matches(&grpo, &s, method.id());
+        let rel = (s.budget_realized - budget as f64).abs() / budget as f64;
+        worst_rel = worst_rel.max(rel);
+        step_records.push(obj(vec![
+            ("scheme", Json::Str(method.id().into())),
+            ("target", Json::Num(budget as f64)),
+            ("budget_realized", Json::Num(s.budget_realized)),
+            ("rel_err", Json::Num(rel)),
+            ("selected_ratio", Json::Num(s.selected_ratio)),
+            ("sel_var", Json::Num(s.sel_var)),
+        ]));
+    }
+
+    let record = obj(vec![
+        (
+            "workload",
+            obj(vec![
+                ("controller_rows", Json::Num(bench_workload::N_LENS as f64)),
+                ("sim_seqs", Json::Num(seqs.len() as f64)),
+                ("sim_total_tokens", Json::Num(total as f64)),
+                ("sim_budget", Json::Num(budget as f64)),
+            ]),
+        ),
+        ("controller", Json::Arr(solve_records.clone())),
+        ("steps", Json::Arr(step_records)),
+        ("worst_step_rel_err", Json::Num(worst_rel)),
+    ]);
+    std::fs::write("BENCH_selection.json", record.to_string()).unwrap();
+    println!("wrote BENCH_selection.json");
+
+    // Acceptance gates, AFTER the JSON record is on disk.
+    for r in &solve_records {
+        let rel = r.get("rel_err").and_then(Json::as_f64).unwrap();
+        assert!(rel <= 0.02, "controller off target: {}", r.to_string());
+    }
+    assert!(
+        worst_rel <= 0.02,
+        "acceptance: budget_mode=batch must land within 2% of --train.token_budget \
+         at the shared sim workload (worst rel err {worst_rel:.4})"
+    );
+
+    b.report();
+}

@@ -6,6 +6,6 @@
 mod run;
 
 pub use run::{
-    EvalCfg, Method, Packer, PipelineCfg, PretrainCfg, RlCfg, RolloutCfg, RolloutEngine,
-    RunConfig, TrainCfg,
+    BudgetMode, EvalCfg, Method, Packer, PipelineCfg, PretrainCfg, RlCfg, RolloutCfg,
+    RolloutEngine, RunConfig, TrainCfg,
 };

@@ -6,7 +6,10 @@ use crate::tasks::{Kind, TaskMix, Tier};
 use crate::util::json::Json;
 use crate::util::tomlite;
 
-/// NAT token-selection strategy (paper §3-4).
+/// NAT token-selection strategy (paper §3-4). Each variant names a
+/// [`Selector`](crate::coordinator::selection::Selector) implementation in
+/// `coordinator::selection`; the enum is only the *configuration* of a
+/// scheme, the sampling logic lives in the per-scheme modules.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Method {
     /// Vanilla GRPO: every response token backpropagates.
@@ -22,17 +25,42 @@ pub enum Method {
     /// surprisal, HT-corrected. Allocates compute to high-information
     /// tokens; forward savings only past the last scored token (like URS).
     Saliency { floor: f64 },
+    /// Systematic (stratified) sampling at rate p: one uniform grid offset
+    /// per sequence fixes the realized sample size to ⌊p·T⌋ or ⌈p·T⌉, so the
+    /// per-token marginal inclusion stays exactly p (HT weight 1/p) while
+    /// the selected-count variance collapses versus URS — at *lower* host
+    /// cost (one RNG draw per sequence instead of T).
+    Stratified { p: f64 },
+    /// Length-aware Poisson sampling: independent Bernoulli with per-token
+    /// rate min(1, k / T), so every sequence contributes ~k selected tokens
+    /// regardless of length (long CoTs are thinned harder), HT weight T/k.
+    Poisson { k: usize },
 }
 
 impl Method {
-    pub fn parse(name: &str, p: f64, frac: f64, min_cut: usize) -> Result<Method> {
+    /// `sal_floor` is the dedicated saliency-floor argument; `None` falls
+    /// back to the deprecated legacy spelling that overloaded the URS `p`
+    /// slot (still accepted — callers print the deprecation note).
+    pub fn parse(
+        name: &str,
+        p: f64,
+        frac: f64,
+        min_cut: usize,
+        sal_floor: Option<f64>,
+        k: usize,
+    ) -> Result<Method> {
         Ok(match name {
             "grpo" | "full" => Method::Grpo,
             "urs" => Method::Urs { p },
             "det" | "det_trunc" => Method::DetTrunc { frac },
             "rpc" => Method::Rpc { min_cut },
-            "saliency" | "sal" => Method::Saliency { floor: p },
-            other => bail!("unknown method '{other}' (grpo|urs|det_trunc|rpc|saliency)"),
+            "saliency" | "sal" => Method::Saliency { floor: sal_floor.unwrap_or(p) },
+            "stratified" | "strat" => Method::Stratified { p },
+            "poisson" => Method::Poisson { k },
+            other => bail!(
+                "unknown method '{other}' \
+                 (grpo|urs|det_trunc|rpc|saliency|stratified|poisson)"
+            ),
         })
     }
 
@@ -43,6 +71,8 @@ impl Method {
             Method::DetTrunc { frac } => format!("DetTrunc({frac})"),
             Method::Rpc { min_cut } => format!("RPC(C={min_cut})"),
             Method::Saliency { floor } => format!("SAL(floor={floor})"),
+            Method::Stratified { p } => format!("STRAT(p={p})"),
+            Method::Poisson { k } => format!("POI(k={k})"),
         }
     }
 
@@ -54,6 +84,8 @@ impl Method {
             Method::DetTrunc { .. } => "det",
             Method::Rpc { .. } => "rpc",
             Method::Saliency { .. } => "sal",
+            Method::Stratified { .. } => "strat",
+            Method::Poisson { .. } => "poisson",
         }
     }
 }
@@ -139,14 +171,52 @@ impl Default for RolloutCfg {
     }
 }
 
+/// Batch-level adaptive token-budget controller
+/// (`coordinator::selection::budget`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BudgetMode {
+    /// Selection keep-parameters are whatever the method literal says
+    /// (URS `p`, RPC `min_cut`, ...) — the legacy, bit-exact behaviour.
+    None,
+    /// Per optimizer step, the controller re-solves the method's keep
+    /// parameter from the batch's actual response lengths so the *expected*
+    /// selected-token count hits `--train.token_budget`, recomputing the
+    /// inclusion probabilities (and with them the HT weights) so the
+    /// estimator stays exactly unbiased.
+    Batch,
+}
+
+impl BudgetMode {
+    pub fn parse(name: &str) -> Result<BudgetMode> {
+        Ok(match name {
+            "none" => BudgetMode::None,
+            "batch" => BudgetMode::Batch,
+            other => bail!("unknown budget mode '{other}' (none|batch)"),
+        })
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            BudgetMode::None => "none",
+            BudgetMode::Batch => "batch",
+        }
+    }
+}
+
 /// Learner batching configuration (`--train.*`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TrainCfg {
     pub packer: Packer,
-    /// Max allocated learner tokens per micro-batch, `rows × (P + bucket)`.
-    /// 0 = auto: the fixed packer's allocation, `batch_train × (P + top
-    /// bucket)`. Only consulted by the budget packer.
+    /// Under `budget_mode = none` (default): max allocated learner tokens
+    /// per micro-batch, `rows × (P + bucket)`; 0 = auto, the fixed packer's
+    /// allocation `batch_train × (P + top bucket)`; only consulted by the
+    /// budget packer. Under `budget_mode = batch` the SAME flag is
+    /// repurposed as the batch-level expected selected-token target the
+    /// selection controller solves for (the packer then runs on its auto
+    /// cap) and must be > 0.
     pub token_budget: usize,
+    /// Batch-level adaptive budget controller (`--train.budget_mode`).
+    pub budget_mode: BudgetMode,
     /// Auto-tune the sequence-bucket routing edges from an EMA histogram of
     /// observed `learn_len` (`coordinator::bucket_tuner`). Budget packer
     /// only. The tuner's EMA state is serialized into resumable checkpoints
@@ -164,7 +234,13 @@ pub struct TrainCfg {
 
 impl Default for TrainCfg {
     fn default() -> Self {
-        TrainCfg { packer: Packer::Budget, token_budget: 0, auto_buckets: false, shards: 1 }
+        TrainCfg {
+            packer: Packer::Budget,
+            token_budget: 0,
+            budget_mode: BudgetMode::None,
+            auto_buckets: false,
+            shards: 1,
+        }
     }
 }
 
@@ -299,7 +375,23 @@ impl RunConfig {
         let p = get("method", "p").and_then(Json::as_f64).unwrap_or(0.5);
         let frac = get("method", "frac").and_then(Json::as_f64).unwrap_or(0.5);
         let min_cut = get("method", "min_cut").and_then(Json::as_usize).unwrap_or(8);
-        cfg.method = Method::parse(name, p, frac, min_cut)?;
+        // The saliency floor has its own key ([rl] sal_floor, or
+        // [method] sal_floor); the legacy spelling overloading `p` is still
+        // accepted with a deprecation note.
+        let sal_floor = get("rl", "sal_floor")
+            .and_then(Json::as_f64)
+            .or_else(|| get("method", "sal_floor").and_then(Json::as_f64));
+        let k = get("method", "k").and_then(Json::as_usize).unwrap_or(8);
+        if matches!(name, "saliency" | "sal")
+            && sal_floor.is_none()
+            && get("method", "p").is_some()
+        {
+            eprintln!(
+                "note: [method] p as the saliency floor is deprecated; \
+                 use sal_floor ([rl] or [method] section)"
+            );
+        }
+        cfg.method = Method::parse(name, p, frac, min_cut, sal_floor, k)?;
         // rl / pretrain / eval sections
         macro_rules! setnum {
             ($sec:literal, $key:literal, $slot:expr, $ty:ty) => {
@@ -330,6 +422,9 @@ impl RunConfig {
         if let Some(name) = get("train", "packer").and_then(Json::as_str) {
             cfg.train.packer = Packer::parse(name)?;
         }
+        if let Some(name) = get("train", "budget_mode").and_then(Json::as_str) {
+            cfg.train.budget_mode = BudgetMode::parse(name)?;
+        }
         setnum!("train", "token_budget", cfg.train.token_budget, usize);
         setnum!("train", "shards", cfg.train.shards, usize);
         if let Some(b) = get("train", "auto_buckets").and_then(Json::as_bool) {
@@ -348,8 +443,25 @@ impl RunConfig {
         Ok(cfg)
     }
 
-    /// Apply a single `--key value` override (dotted path).
+    /// Apply a single `--key value` override (dotted path) and re-validate.
+    /// Transactional: a failed parse OR a failed validation leaves `self`
+    /// untouched (the new cross-field invariants made the old
+    /// mutate-then-validate order observable: a rejected key must not leave
+    /// the config in the state it just rejected).
     pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let mut next = self.clone();
+        next.set_unvalidated(key, value)?;
+        next.validate()?;
+        *self = next;
+        Ok(())
+    }
+
+    /// The override itself, without validation: `from_args` applies the
+    /// whole override set through this and validates ONCE at the end, so
+    /// cross-field invariants (e.g. `budget_mode batch` needs a positive
+    /// `token_budget`) cannot fail on an intermediate state — the options
+    /// map iterates in alphabetical, not command-line, order.
+    fn set_unvalidated(&mut self, key: &str, value: &str) -> Result<()> {
         match key {
             "model" => self.model = value.into(),
             "seed" => self.seed = value.parse()?,
@@ -362,15 +474,25 @@ impl RunConfig {
                     self.method_p(),
                     self.method_frac(),
                     self.method_min_cut(),
+                    self.method_sal_floor(),
+                    self.method_k(),
                 )?
             }
-            "method.p" => {
-                if let Method::Urs { ref mut p } = self.method {
+            "method.p" => match self.method {
+                Method::Urs { ref mut p } | Method::Stratified { ref mut p } => {
                     *p = value.parse()?;
-                } else {
-                    self.method = Method::Urs { p: value.parse()? };
                 }
-            }
+                // Legacy spelling: --method.p used to double as the saliency
+                // floor. Still accepted, with a note.
+                Method::Saliency { ref mut floor } => {
+                    eprintln!(
+                        "note: --method.p as the saliency floor is deprecated; \
+                         use --rl.sal_floor"
+                    );
+                    *floor = value.parse()?;
+                }
+                _ => self.method = Method::Urs { p: value.parse()? },
+            },
             "method.frac" => {
                 if let Method::DetTrunc { ref mut frac } = self.method {
                     *frac = value.parse()?;
@@ -399,8 +521,27 @@ impl RunConfig {
             "rl.temperature" => self.rl.temperature = value.parse()?,
             "rl.ppo_epochs" => self.rl.ppo_epochs = value.parse()?,
             "rl.ckpt_every" => self.rl.ckpt_every = value.parse()?,
+            "method.k" => {
+                if let Method::Poisson { ref mut k } = self.method {
+                    *k = value.parse()?;
+                } else {
+                    self.method = Method::Poisson { k: value.parse()? };
+                }
+            }
+            // The saliency floor's dedicated flag (issue satellite): the new
+            // spelling lives beside the other RL hyperparameters;
+            // `method.sal_floor` is the `[method]`-section alias and
+            // `method.floor` the pre-existing spelling.
+            "rl.sal_floor" | "method.sal_floor" | "method.floor" => {
+                if let Method::Saliency { ref mut floor } = self.method {
+                    *floor = value.parse()?;
+                } else {
+                    self.method = Method::Saliency { floor: value.parse()? };
+                }
+            }
             "rollout.engine" => self.rollout.engine = RolloutEngine::parse(value)?,
             "train.packer" => self.train.packer = Packer::parse(value)?,
+            "train.budget_mode" => self.train.budget_mode = BudgetMode::parse(value)?,
             "train.token_budget" => self.train.token_budget = value.parse()?,
             "train.shards" => self.train.shards = value.parse()?,
             "train.auto_buckets" => {
@@ -413,13 +554,6 @@ impl RunConfig {
             "pipeline.workers" => self.pipeline.workers = value.parse()?,
             "pipeline.queue_depth" => self.pipeline.queue_depth = value.parse()?,
             "pipeline.max_staleness" => self.pipeline.max_staleness = value.parse()?,
-            "method.floor" => {
-                if let Method::Saliency { ref mut floor } = self.method {
-                    *floor = value.parse()?;
-                } else {
-                    self.method = Method::Saliency { floor: value.parse()? };
-                }
-            }
             "pretrain.steps" => self.pretrain.steps = value.parse()?,
             "pretrain.corpus_size" => self.pretrain.corpus_size = value.parse()?,
             "pretrain.noise" => self.pretrain.noise = value.parse()?,
@@ -428,13 +562,27 @@ impl RunConfig {
             "eval.k" => self.eval.k = value.parse()?,
             other => bail!("unknown config key '{other}'"),
         }
-        self.validate()
+        Ok(())
     }
 
     fn method_p(&self) -> f64 {
         match self.method {
-            Method::Urs { p } => p,
+            Method::Urs { p } | Method::Stratified { p } => p,
             _ => 0.5,
+        }
+    }
+
+    fn method_sal_floor(&self) -> Option<f64> {
+        match self.method {
+            Method::Saliency { floor } => Some(floor),
+            _ => None,
+        }
+    }
+
+    fn method_k(&self) -> usize {
+        match self.method {
+            Method::Poisson { k } => k,
+            _ => 8,
         }
     }
 
@@ -472,6 +620,33 @@ impl RunConfig {
         if let Method::Saliency { floor } = self.method {
             if !(0.0 < floor && floor <= 1.0) {
                 bail!("Saliency floor must be in (0, 1], got {floor}");
+            }
+        }
+        if let Method::Stratified { p } = self.method {
+            if !(0.0 < p && p <= 1.0) {
+                bail!("Stratified p must be in (0, 1], got {p}");
+            }
+        }
+        if let Method::Poisson { k } = self.method {
+            if k == 0 {
+                bail!("Poisson k must be >= 1");
+            }
+        }
+        if self.train.budget_mode == BudgetMode::Batch {
+            if self.train.token_budget == 0 {
+                bail!(
+                    "train.budget_mode batch needs a positive --train.token_budget \
+                     (the expected selected-token target)"
+                );
+            }
+            // The fixed-cost baselines have no keep parameter to solve —
+            // accepting them would silently ignore the configured budget.
+            if matches!(self.method, Method::Grpo | Method::DetTrunc { .. }) {
+                bail!(
+                    "train.budget_mode batch cannot adapt {}: it has no keep \
+                     parameter to solve (use urs|stratified|poisson|rpc|saliency)",
+                    self.method.label()
+                );
             }
         }
         if self.rl.ppo_epochs == 0 {
@@ -524,9 +699,14 @@ impl RunConfig {
             if SKIP.contains(&k.as_str()) {
                 continue;
             }
-            cfg.set(k, v)
+            // Per-key application without validation: the options map
+            // iterates alphabetically, so cross-field invariants (like
+            // budget_mode ↔ token_budget) must only be checked once the
+            // whole override set is in.
+            cfg.set_unvalidated(k, v)
                 .map_err(|e| anyhow!("applying override --{k} {v}: {e}"))?;
         }
+        cfg.validate()?;
         Ok(cfg)
     }
 }
@@ -542,14 +722,142 @@ mod tests {
 
     #[test]
     fn method_parsing() {
-        assert_eq!(Method::parse("grpo", 0.5, 0.5, 8).unwrap(), Method::Grpo);
-        assert_eq!(Method::parse("urs", 0.3, 0.5, 8).unwrap(), Method::Urs { p: 0.3 });
+        assert_eq!(Method::parse("grpo", 0.5, 0.5, 8, None, 8).unwrap(), Method::Grpo);
+        assert_eq!(Method::parse("urs", 0.3, 0.5, 8, None, 8).unwrap(), Method::Urs { p: 0.3 });
         assert_eq!(
-            Method::parse("det_trunc", 0.5, 0.4, 8).unwrap(),
+            Method::parse("det_trunc", 0.5, 0.4, 8, None, 8).unwrap(),
             Method::DetTrunc { frac: 0.4 }
         );
-        assert_eq!(Method::parse("rpc", 0.5, 0.5, 100).unwrap(), Method::Rpc { min_cut: 100 });
-        assert!(Method::parse("nope", 0.5, 0.5, 8).is_err());
+        assert_eq!(
+            Method::parse("rpc", 0.5, 0.5, 100, None, 8).unwrap(),
+            Method::Rpc { min_cut: 100 }
+        );
+        assert_eq!(
+            Method::parse("stratified", 0.25, 0.5, 8, None, 8).unwrap(),
+            Method::Stratified { p: 0.25 }
+        );
+        assert_eq!(
+            Method::parse("poisson", 0.5, 0.5, 8, None, 12).unwrap(),
+            Method::Poisson { k: 12 }
+        );
+        assert!(Method::parse("nope", 0.5, 0.5, 8, None, 8).is_err());
+    }
+
+    #[test]
+    fn saliency_floor_prefers_dedicated_flag_over_legacy_p() {
+        // New spelling wins when both are present...
+        assert_eq!(
+            Method::parse("saliency", 0.5, 0.5, 8, Some(0.2), 8).unwrap(),
+            Method::Saliency { floor: 0.2 }
+        );
+        // ...and the legacy p-overload still works without it.
+        assert_eq!(
+            Method::parse("sal", 0.35, 0.5, 8, None, 8).unwrap(),
+            Method::Saliency { floor: 0.35 }
+        );
+        let mut cfg = RunConfig::default();
+        cfg.set("rl.sal_floor", "0.4").unwrap();
+        assert_eq!(cfg.method, Method::Saliency { floor: 0.4 });
+        cfg.set("method.sal_floor", "0.3").unwrap();
+        assert_eq!(cfg.method, Method::Saliency { floor: 0.3 });
+        // deprecated spelling mutates the floor in place instead of
+        // switching the method to URS
+        cfg.set("method.p", "0.25").unwrap();
+        assert_eq!(cfg.method, Method::Saliency { floor: 0.25 });
+        assert!(cfg.set("rl.sal_floor", "1.5").is_err());
+    }
+
+    #[test]
+    fn new_selector_methods_parse_and_validate() {
+        let mut cfg = RunConfig::default();
+        cfg.set("method", "stratified").unwrap();
+        assert_eq!(cfg.method, Method::Stratified { p: 0.5 });
+        cfg.set("method.p", "0.2").unwrap();
+        assert_eq!(cfg.method, Method::Stratified { p: 0.2 });
+        assert!(cfg.set("method.p", "1.5").is_err());
+        cfg.set("method", "poisson").unwrap();
+        assert_eq!(cfg.method, Method::Poisson { k: 8 });
+        cfg.set("method.k", "16").unwrap();
+        assert_eq!(cfg.method, Method::Poisson { k: 16 });
+        assert!(cfg.set("method.k", "0").is_err());
+        assert_eq!(Method::Stratified { p: 0.2 }.id(), "strat");
+        assert_eq!(Method::Poisson { k: 16 }.id(), "poisson");
+    }
+
+    #[test]
+    fn budget_mode_overrides_and_validation() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.train.budget_mode, BudgetMode::None);
+        // batch mode without a target is a config error, and the failed set
+        // is transactional — the rejected state must not stick
+        assert!(cfg.set("train.budget_mode", "batch").is_err());
+        assert_eq!(cfg.train.budget_mode, BudgetMode::None);
+        // with a target set, batch mode is accepted
+        cfg.set("train.token_budget", "512").unwrap();
+        cfg.set("train.budget_mode", "batch").unwrap();
+        assert_eq!(cfg.train.budget_mode, BudgetMode::Batch);
+        // the fixed-cost baselines have nothing to solve: rejected, and the
+        // config stays on its previous (valid) method
+        assert!(cfg.set("method", "grpo").is_err());
+        assert!(cfg.set("method", "det_trunc").is_err());
+        assert_eq!(cfg.method, RunConfig::default().method);
+        cfg.set("train.budget_mode", "none").unwrap();
+        assert_eq!(cfg.train.budget_mode, BudgetMode::None);
+        cfg.set("method", "grpo").unwrap();
+        assert!(cfg.set("train.budget_mode", "bogus").is_err());
+        assert_eq!(BudgetMode::Batch.id(), "batch");
+        assert_eq!(BudgetMode::None.id(), "none");
+    }
+
+    #[test]
+    fn budget_mode_is_order_independent_from_the_cli() {
+        // Regression: `args.options` is a BTreeMap, so "train.budget_mode"
+        // is always applied before "train.token_budget" regardless of the
+        // flag order the user typed — from_args must therefore validate the
+        // cross-field invariant only after ALL overrides are in.
+        let argv: Vec<String> =
+            ["train", "--train.budget_mode", "batch", "--train.token_budget", "4096"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let args = crate::util::cli::Args::parse(&argv).unwrap();
+        let cfg = RunConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.train.budget_mode, BudgetMode::Batch);
+        assert_eq!(cfg.train.token_budget, 4096);
+        // ...while a genuinely inconsistent override set still fails.
+        let argv: Vec<String> = ["train", "--train.budget_mode", "batch"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let args = crate::util::cli::Args::parse(&argv).unwrap();
+        assert!(RunConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn budget_mode_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_budget_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.toml");
+        std::fs::write(&path, "[train]\nbudget_mode = \"batch\"\ntoken_budget = 640\n").unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.train.budget_mode, BudgetMode::Batch);
+        assert_eq!(cfg.train.token_budget, 640);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn sal_floor_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_salfloor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.toml");
+        std::fs::write(
+            &path,
+            "[method]\nname = \"saliency\"\np = 0.9\n[rl]\nsal_floor = 0.15\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.method, Method::Saliency { floor: 0.15 });
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]
@@ -588,7 +896,13 @@ mod tests {
         // budget packing is the default; fixed remains selectable for parity
         assert_eq!(
             cfg.train,
-            TrainCfg { packer: Packer::Budget, token_budget: 0, auto_buckets: false, shards: 1 }
+            TrainCfg {
+                packer: Packer::Budget,
+                token_budget: 0,
+                budget_mode: BudgetMode::None,
+                auto_buckets: false,
+                shards: 1
+            }
         );
         cfg.set("train.packer", "fixed").unwrap();
         assert_eq!(cfg.train.packer, Packer::Fixed);

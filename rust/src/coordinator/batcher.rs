@@ -35,6 +35,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::rollout::RolloutSeq;
+use crate::coordinator::selection::SelectionPlan;
 use crate::tokenizer::PAD;
 
 /// One response ready for the learner.
@@ -57,6 +59,24 @@ pub struct LearnItem {
 }
 
 impl LearnItem {
+    /// Build a learner item from a rollout row and its drawn
+    /// [`SelectionPlan`] — this is the seam between the selection subsystem
+    /// and the batcher: packing routes on `SelectionPlan::learn_len`, and
+    /// the plan's HT weights are the only selection state the learner
+    /// tensors carry.
+    pub fn from_plan(seq: &RolloutSeq, plan: SelectionPlan, adv: f32) -> LearnItem {
+        debug_assert_eq!(plan.ht_w.len(), seq.resp_len);
+        LearnItem {
+            tokens: seq.tokens.clone(),
+            pad_len: seq.pad_len,
+            resp_len: seq.resp_len,
+            ht_w: plan.ht_w,
+            learn_len: plan.learn_len,
+            adv,
+            old_lp: seq.old_lp.clone(),
+        }
+    }
+
     /// True if the row contributes nothing to the accumulated gradient:
     /// no kept token (all-Bernoulli-miss URS/Saliency draws) or zero
     /// advantage (zero-variance reward groups). Such rows still burn a
@@ -255,6 +275,19 @@ fn pack_one(rows: &[&LearnItem], bucket: usize, prompt_len: usize, alloc: usize)
         mb.pad_len[r] = item.pad_len as i32;
     }
     mb
+}
+
+/// The per-micro-batch token cap the budget packer should run with. Under
+/// `--train.budget_mode batch` the `token_budget` flag is repurposed as the
+/// selection controller's expected-selected-token target, NOT a packing
+/// cap — the packer then falls back to its auto budget (0); under
+/// `budget_mode none` the flag means what it always did.
+pub fn packer_token_budget(train: &crate::config::TrainCfg) -> usize {
+    if train.budget_mode == crate::config::BudgetMode::Batch {
+        0
+    } else {
+        train.token_budget
+    }
 }
 
 /// Allocated token cost of one micro-batch: what the device pays for it
@@ -683,6 +716,42 @@ mod tests {
         // k beyond the micro-batch count leaves the tail shards empty
         let plan = plan_shards(&mbs, P, mbs.len() + 2);
         assert_eq!(plan.iter().filter(|ids| !ids.is_empty()).count(), mbs.len());
+    }
+
+    #[test]
+    fn learn_item_from_plan_packs_off_the_plan_learn_len() {
+        use crate::coordinator::rollout::RolloutSeq;
+        use crate::coordinator::selection::{Selector, Urs};
+
+        let seq = RolloutSeq {
+            task_idx: 0,
+            tokens: (0..(P + 16) as i32).collect(),
+            pad_len: 2,
+            resp_len: 12,
+            old_lp: (0..12).map(|t| -(t as f32)).collect(),
+            reward: 1.0,
+        };
+        let mut rng = Rng::new(5);
+        let plan = Urs { p: 0.5 }.sample(seq.resp_len, None, &mut rng);
+        let (ll, w) = (plan.learn_len, plan.ht_w.clone());
+        let it = LearnItem::from_plan(&seq, plan, 0.7);
+        assert_eq!(it.learn_len, ll);
+        assert_eq!(it.ht_w, w);
+        assert_eq!(it.resp_len, 12);
+        assert_eq!(it.adv, 0.7);
+        assert_eq!(it.old_lp, seq.old_lp);
+        let mbs = pack_budget(&[it], &BUCKETS, P, &GRID, 0).unwrap();
+        assert!(mbs[0].bucket >= ll);
+    }
+
+    #[test]
+    fn packer_budget_is_auto_under_batch_budget_mode() {
+        use crate::config::{BudgetMode, TrainCfg};
+        let mut train = TrainCfg::default();
+        train.token_budget = 512;
+        assert_eq!(packer_token_budget(&train), 512);
+        train.budget_mode = BudgetMode::Batch;
+        assert_eq!(packer_token_budget(&train), 0);
     }
 
     #[test]

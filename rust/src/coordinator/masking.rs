@@ -1,14 +1,19 @@
-//! NAT token selection — the paper's core contribution (§3-4).
+//! Legacy NAT token-selection façade — a thin shim over the first-class
+//! [`selection`](crate::coordinator::selection) subsystem.
 //!
-//! Given a response of true length `t_i`, each strategy produces a
-//! Horvitz-Thompson weight vector `w_t = m_t / p_t` (zero where the token is
-//! excluded) plus the *learner length*: the forward prefix the gradient
-//! computation actually needs — the causal prefix up to the last scored
-//! token. The learner length is what the bucketed batcher routes on: RPC's
-//! prefix cuts shorten it deterministically, while URS/Saliency only save
-//! whatever tail their Bernoulli draws happen to leave unscored.
+//! The original implementation lived here as one enum-matched function;
+//! it now delegates to the per-scheme [`Selector`] modules. The contract
+//! is **bit-identical RNG streams and outputs**: for every method, `t_i`
+//! and seed, `sample_ctx` consumes exactly the draws the pre-refactor code
+//! consumed and returns the same `ht_w` / `kept` / `learn_len` bits
+//! (proptested against a frozen copy of the old code in
+//! `tests/selection.rs`). New call sites should use the subsystem directly
+//! — it additionally exposes the per-token inclusion probabilities
+//! ([`SelectionPlan`](crate::coordinator::selection::SelectionPlan)) that
+//! the batch budget controller and the selection metrics need.
 
 use crate::config::Method;
+use crate::coordinator::selection::{self, rpc, saliency};
 use crate::util::rng::Rng;
 
 /// One sampled selection for one response.
@@ -35,16 +40,7 @@ impl MaskSample {
 /// Survival function of RPC with minimum cutoff C (paper Eq. after (8)):
 /// p_t = 1 for t <= C, (T - t + 1) / (T - C + 1) for t > C (1-based t).
 pub fn rpc_survival(t_i: usize, min_cut: usize) -> Vec<f32> {
-    let c = min_cut.clamp(1, t_i);
-    (1..=t_i)
-        .map(|t| {
-            if t <= c {
-                1.0
-            } else {
-                (t_i - t + 1) as f32 / (t_i - c + 1) as f32
-            }
-        })
-        .collect()
+    rpc::survival(t_i, min_cut)
 }
 
 /// Sample a token selection for a response of length `t_i`.
@@ -61,111 +57,20 @@ pub fn sample_ctx(
     old_lp: Option<&[f32]>,
     rng: &mut Rng,
 ) -> MaskSample {
-    if t_i == 0 {
-        // Degenerate empty response (`trim_at_eos` floors real rollouts at
-        // 1, but a zero-width response window can produce 0): nothing to
-        // select, nothing to forward, and — crucially — no RNG draws, so
-        // the mask stream stays aligned with the non-degenerate case.
-        return MaskSample { ht_w: Vec::new(), kept: 0, learn_len: 0 };
-    }
-    match *method {
-        Method::Grpo => MaskSample { ht_w: vec![1.0; t_i], kept: t_i, learn_len: t_i },
-        Method::Urs { p } => {
-            let w = (1.0 / p) as f32;
-            let mut ht_w = vec![0.0f32; t_i];
-            let mut kept = 0;
-            let mut last_kept = 0usize;
-            for (t, slot) in ht_w.iter_mut().enumerate() {
-                if rng.bernoulli(p) {
-                    *slot = w;
-                    kept += 1;
-                    last_kept = t + 1;
-                }
-            }
-            // Causal attention only needs the prefix up to the last *scored*
-            // token: positions past it contribute nothing to the update, so
-            // the forward may stop there (floor 1 so empty draws still
-            // produce a valid artifact shape). In expectation this is close
-            // to t_i for moderate p — URS keeps near-full forward cost, as
-            // the paper notes — but the realised tail savings are real and
-            // let short draws land in smaller buckets.
-            MaskSample { ht_w, kept, learn_len: last_kept.max(1) }
-        }
-        Method::DetTrunc { frac } => {
-            let k = ((frac * t_i as f64).floor() as usize).clamp(1, t_i);
-            let mut ht_w = vec![0.0f32; t_i];
-            for slot in ht_w.iter_mut().take(k) {
-                *slot = 1.0; // no HT correction exists: p = 0 on the suffix
-            }
-            MaskSample { ht_w, kept: k, learn_len: k }
-        }
-        Method::Rpc { min_cut } => {
-            let c = min_cut.clamp(1, t_i);
-            let cut = rng.range_inclusive(c as u64, t_i as u64) as usize;
-            let p = rpc_survival(t_i, min_cut);
-            let mut ht_w = vec![0.0f32; t_i];
-            for t in 0..cut {
-                ht_w[t] = 1.0 / p[t];
-            }
-            MaskSample { ht_w, kept: cut, learn_len: cut }
-        }
-        Method::Saliency { floor } => {
-            let p = saliency_probs(
-                old_lp.expect("Saliency masking needs behaviour logprobs"),
-                floor,
-            );
-            debug_assert_eq!(p.len(), t_i);
-            let mut ht_w = vec![0.0f32; t_i];
-            let mut kept = 0;
-            let mut last_kept = 0usize;
-            for (t, (slot, &pt)) in ht_w.iter_mut().zip(&p).enumerate() {
-                if rng.bernoulli(pt as f64) {
-                    *slot = 1.0 / pt;
-                    kept += 1;
-                    last_kept = t + 1;
-                }
-            }
-            // independent masking: forward only up to the last scored token
-            // (same realised-tail savings as URS; floor 1 for empty draws)
-            MaskSample { ht_w, kept, learn_len: last_kept.max(1) }
-        }
-    }
+    let plan = selection::selector_for(method).sample(t_i, old_lp, rng);
+    MaskSample { ht_w: plan.ht_w, kept: plan.kept, learn_len: plan.learn_len }
 }
 
-/// Inclusion probabilities for information-aware selection: behaviour
-/// surprisal u_t = -log pi_old(o_t) normalised to [0, 1] per sequence, then
-/// p_t = floor + (1 - floor) * u_t. High-surprisal ("high-entropy
-/// minority") tokens are (almost) always kept; boilerplate tokens are kept
-/// with probability ~floor and up-weighted by 1/p_t when they are — the
-/// paper's §7 future-work scheme inside the same HT framework.
+/// Inclusion probabilities for information-aware selection (see
+/// [`selection::saliency::probs`]).
 pub fn saliency_probs(old_lp: &[f32], floor: f64) -> Vec<f32> {
-    let max_u = old_lp.iter().map(|&lp| -lp).fold(1e-6f32, f32::max);
-    old_lp
-        .iter()
-        .map(|&lp| {
-            let u = (-lp / max_u).clamp(0.0, 1.0);
-            (floor as f32 + (1.0 - floor as f32) * u).clamp(floor as f32, 1.0)
-        })
-        .collect()
+    saliency::probs(old_lp, floor)
 }
 
 /// Expected selected-token ratio (paper Fig. 3 prediction): RPC with
 /// minimum cutoff keeps E[L]/T = 1/2 + C/(2T).
 pub fn expected_ratio(method: &Method, t_i: usize) -> f64 {
-    match *method {
-        Method::Grpo => 1.0,
-        Method::Urs { p } => p,
-        Method::DetTrunc { frac } => {
-            ((frac * t_i as f64).floor().max(1.0)) / t_i as f64
-        }
-        Method::Rpc { min_cut } => {
-            let c = min_cut.clamp(1, t_i) as f64;
-            let t = t_i as f64;
-            (c + t) / (2.0 * t)
-        }
-        // depends on the realised surprisal profile; floor is a lower bound
-        Method::Saliency { floor } => floor,
-    }
+    selection::expected_ratio(method, t_i)
 }
 
 #[cfg(test)]
@@ -315,6 +220,9 @@ mod tests {
         assert_eq!(expected_ratio(&Method::Grpo, 100), 1.0);
         assert_eq!(expected_ratio(&Method::Urs { p: 0.5 }, 100), 0.5);
         assert_eq!(expected_ratio(&Method::DetTrunc { frac: 0.5 }, 100), 0.5);
+        assert_eq!(expected_ratio(&Method::Stratified { p: 0.5 }, 100), 0.5);
+        assert_eq!(expected_ratio(&Method::Poisson { k: 25 }, 100), 0.25);
+        assert_eq!(expected_ratio(&Method::Poisson { k: 200 }, 100), 1.0);
         // paper Fig. 3: C=100, T~3000 -> ratio slightly above 0.5
         let r = expected_ratio(&Method::Rpc { min_cut: 10 }, 100);
         assert!((r - 0.55).abs() < 1e-9);
@@ -385,9 +293,9 @@ mod tests {
 
     #[test]
     fn zero_length_response_yields_empty_sample() {
-        // Regression (issue satellite): an empty response after
-        // `trim_at_eos` must produce an empty, zero-ratio sample — not a
-        // panic — for every method, without consuming any RNG draws.
+        // Regression: an empty response after `trim_at_eos` must produce an
+        // empty, zero-ratio sample — not a panic — for every method,
+        // without consuming any RNG draws.
         let mut rng = Rng::new(12);
         let before = rng.clone();
         for method in [
@@ -396,6 +304,8 @@ mod tests {
             Method::DetTrunc { frac: 0.5 },
             Method::Rpc { min_cut: 8 },
             Method::Saliency { floor: 0.25 },
+            Method::Stratified { p: 0.5 },
+            Method::Poisson { k: 8 },
         ] {
             let s = sample_ctx(&method, 0, Some(&[]), &mut rng);
             assert!(s.ht_w.is_empty(), "{method:?}");
@@ -416,11 +326,16 @@ mod tests {
             Method::Urs { p: 0.5 },
             Method::DetTrunc { frac: 0.5 },
             Method::Rpc { min_cut: 8 },
+            Method::Stratified { p: 0.5 },
+            Method::Poisson { k: 8 },
         ] {
             let s = sample(&method, 1, &mut rng);
             assert_eq!(s.ht_w.len(), 1);
             assert!(s.learn_len >= 1);
-            assert!(s.kept >= 1 || matches!(method, Method::Urs { .. }));
+            assert!(
+                s.kept >= 1
+                    || matches!(method, Method::Urs { .. } | Method::Stratified { .. }),
+            );
         }
     }
 }

@@ -1,17 +1,25 @@
 //! L3 coordinator: the paper's system contribution.
 //!
-//! * [`masking`]   — NAT token selection (URS / RPC / DetTrunc / full) with
-//!                   Horvitz-Thompson weights: the core algorithm.
+//! * [`selection`] — first-class NAT token selection: the [`Selector`]
+//!                   trait (per-token inclusion probabilities + HT weights
+//!                   + `learn_len`), one module per scheme (full / URS /
+//!                   DetTrunc / RPC / saliency / stratified / poisson) and
+//!                   the batch-level adaptive token-budget controller.
+//! * [`masking`]   — legacy façade over [`selection`] (bit-identical RNG
+//!                   streams; kept for the pre-refactor call sites).
 //! * [`advantage`] — group-relative advantages (GRPO Eq. 2).
 //! * [`rollout`]   — grouped sampling through the AOT generate artifact.
 //! * [`batcher`]   — 2-D (length × rows) bucketed micro-batching with a
-//!                   token-budget packer (RPC's compute savings).
+//!                   token-budget packer (RPC's compute savings), packing
+//!                   off `SelectionPlan::learn_len`.
 //! * [`bucket_tuner`] — EMA auto-tuning of sequence-bucket routing edges.
 //! * [`trainer`]   — the NAT×GRPO optimizer loop with paper-aligned metrics.
 //! * [`pipeline`]  — async pipelined rollout/learner orchestration with
 //!                   bounded staleness (the serial loop, overlapped).
 //! * [`pretrainer`]— SFT base-model phase.
 //! * [`evaluator`] — Acc@k / pass@k benchmark evaluation.
+//!
+//! [`Selector`]: selection::Selector
 pub mod advantage;
 pub mod batcher;
 pub mod bucket_tuner;
@@ -20,4 +28,5 @@ pub mod masking;
 pub mod pipeline;
 pub mod pretrainer;
 pub mod rollout;
+pub mod selection;
 pub mod trainer;

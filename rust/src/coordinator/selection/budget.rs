@@ -1,0 +1,338 @@
+//! Batch-level adaptive token-budget controller (`--train.budget_mode
+//! batch`).
+//!
+//! NAT's framing makes the token budget a first-class optimization
+//! primitive, yet fixed per-sequence keep parameters (URS `p`, RPC
+//! `min_cut`, ...) spend a *length-distribution-dependent* amount of
+//! compute: the same `p = 0.5` selects twice the tokens when responses run
+//! twice as long. This controller inverts that: given the batch's actual
+//! response lengths (and, for saliency, its surprisal profiles), it
+//! re-solves the scheme's keep parameter each optimizer step so the
+//! **expected** selected-token count hits the global target
+//! `--train.token_budget`.
+//!
+//! Unbiasedness is free by construction: every scheme samples with the
+//! *adjusted* inclusion probabilities and HT-weights by their inverse, so
+//! E[Σ w_t x_t] = Σ x_t for any solved parameter — the estimator never
+//! learns that the controller exists (Monte-Carlo-verified through the full
+//! pack → shard → reduce path in `tests/selection.rs`).
+//!
+//! Per-scheme solves (all deterministic, all O(n log n) or better):
+//!
+//! * URS / Stratified — expected kept is p·Σt, linear in p: p* = B / Σt.
+//! * Poisson — expected kept is Σ min(t_i, k), piecewise-linear and
+//!   monotone in k: exact waterfill over the sorted lengths.
+//! * RPC — expected kept is Σ (clamp(C, 1, t_i) + t_i)/2, monotone in the
+//!   integer cutoff: binary search, then the closer of the two neighbours.
+//!   Granularity is at most n/2 tokens per cutoff step.
+//! * Saliency — expected kept is Σ min(1, s·p_t), monotone in the scale s:
+//!   bisection to machine precision.
+//! * GRPO / DetTrunc — fixed-cost baselines: no free parameter to solve;
+//!   returned unadapted (`adapted = false`). The config layer rejects
+//!   `budget_mode batch` for them up front (`RunConfig::validate`); direct
+//!   API callers get the unadapted selector and can inspect `adapted`.
+//!
+//! Attainability: a solve can only promise targets inside the scheme's
+//! reachable range (RPC cannot select fewer than Σ(1 + t_i)/2 tokens, no
+//! unbiased scheme can select more than Σ t_i). Outside it the controller
+//! clamps to the nearest endpoint and reports the achieved expectation in
+//! `BudgetOutcome::expected` — which also feeds the `budget_realized`
+//! metric series, so a clamped run is visible in the step stats.
+
+use crate::config::Method;
+
+use super::{selector_for, Poisson, Rpc, Saliency, Selector, Stratified, Urs};
+
+/// The solved batch plan: an adjusted selector shared by every sequence in
+/// the step, plus the solve's bookkeeping.
+pub struct BudgetOutcome {
+    pub selector: Box<dyn Selector>,
+    /// The requested expected-selected-token target (`--train.token_budget`).
+    pub target: f64,
+    /// The achieved expectation Σ_i E[kept_i] under the adjusted
+    /// probabilities (== target whenever the target is attainable).
+    pub expected: f64,
+    /// False for the fixed-cost baselines (GRPO, DetTrunc) the controller
+    /// cannot adapt.
+    pub adapted: bool,
+}
+
+/// Solve the batch's keep parameter. `rows` carries `(resp_len, behaviour
+/// logprobs)` per sequence — zero-length rows contribute nothing and are
+/// ignored by every solve.
+pub fn solve_batch(
+    method: &Method,
+    rows: &[(usize, Option<&[f32]>)],
+    budget: usize,
+) -> BudgetOutcome {
+    let target = budget as f64;
+    let total: f64 = rows.iter().map(|&(t, _)| t as f64).sum();
+    match *method {
+        Method::Grpo | Method::DetTrunc { .. } => {
+            let selector = selector_for(method);
+            let expected = expected_sum(&*selector, rows);
+            BudgetOutcome { selector, target, expected, adapted: false }
+        }
+        Method::Urs { .. } => {
+            let p = rate_for(target, total);
+            let selector: Box<dyn Selector> = Box::new(Urs { p });
+            let expected = expected_sum(&*selector, rows);
+            BudgetOutcome { selector, target, expected, adapted: true }
+        }
+        Method::Stratified { .. } => {
+            let p = rate_for(target, total);
+            let selector: Box<dyn Selector> = Box::new(Stratified { p });
+            let expected = expected_sum(&*selector, rows);
+            BudgetOutcome { selector, target, expected, adapted: true }
+        }
+        Method::Poisson { .. } => {
+            let k = solve_poisson_k(rows, target);
+            let selector: Box<dyn Selector> = Box::new(Poisson { k });
+            let expected = expected_sum(&*selector, rows);
+            BudgetOutcome { selector, target, expected, adapted: true }
+        }
+        Method::Rpc { .. } => {
+            let min_cut = solve_rpc_cut(rows, target);
+            let selector: Box<dyn Selector> = Box::new(Rpc { min_cut });
+            let expected = expected_sum(&*selector, rows);
+            BudgetOutcome { selector, target, expected, adapted: true }
+        }
+        Method::Saliency { floor } => {
+            let scale = solve_saliency_scale(rows, floor, target);
+            let selector: Box<dyn Selector> = Box::new(Saliency { floor, scale });
+            let expected = expected_sum(&*selector, rows);
+            BudgetOutcome { selector, target, expected, adapted: true }
+        }
+    }
+}
+
+/// Σ_i E[kept_i] for a selector over the batch (zero-length rows are 0).
+pub fn expected_sum(sel: &dyn Selector, rows: &[(usize, Option<&[f32]>)]) -> f64 {
+    rows.iter()
+        .filter(|&&(t, _)| t > 0)
+        .map(|&(t, ctx)| sel.expected_kept(t, ctx))
+        .sum()
+}
+
+/// Shared URS/Stratified solve: expected kept = p · Σt ⇒ p* = B / Σt,
+/// clamped into (0, 1].
+fn rate_for(target: f64, total: f64) -> f64 {
+    if total <= 0.0 {
+        return 1.0; // empty batch: nothing to select, any rate is vacuous
+    }
+    (target / total).clamp(1e-6, 1.0)
+}
+
+/// Waterfill: the k with Σ min(t_i, k) = target (piecewise linear, knots at
+/// the sorted lengths), clamped to [tiny, max t].
+fn solve_poisson_k(rows: &[(usize, Option<&[f32]>)], target: f64) -> f64 {
+    let mut lens: Vec<usize> = rows.iter().map(|&(t, _)| t).filter(|&t| t > 0).collect();
+    if lens.is_empty() {
+        return 1.0;
+    }
+    lens.sort_unstable();
+    let n = lens.len();
+    let max_t = *lens.last().unwrap() as f64;
+    let total: f64 = lens.iter().map(|&t| t as f64).sum();
+    if target >= total {
+        return max_t; // saturated: every token of every sequence
+    }
+    // Below the smallest knot the sum is n·k; between knots i-1 and i it is
+    // prefix(i) + k·(n - i).
+    let mut prefix = 0.0f64; // Σ of lens[..i]
+    for (i, &t) in lens.iter().enumerate() {
+        let hi = t as f64;
+        let remaining = (n - i) as f64;
+        // sum at k = hi with this segment's slope:
+        let at_hi = prefix + hi * remaining;
+        if target <= at_hi {
+            // k lands in (lo, hi] by construction; guard the positive floor
+            // only (probabilities must stay > 0).
+            let k = (target - prefix) / remaining;
+            return k.max(1e-9);
+        }
+        prefix += hi;
+    }
+    max_t
+}
+
+/// Monotone integer solve: the cutoff whose expectation is closest to the
+/// target (ties prefer the smaller cutoff).
+fn solve_rpc_cut(rows: &[(usize, Option<&[f32]>)], target: f64) -> usize {
+    let lens: Vec<usize> = rows.iter().map(|&(t, _)| t).filter(|&t| t > 0).collect();
+    let max_t = lens.iter().copied().max().unwrap_or(1);
+    let expect = |c: usize| -> f64 {
+        lens.iter().map(|&t| (c.clamp(1, t) as f64 + t as f64) / 2.0).sum()
+    };
+    // first c in [1, max_t] with expect(c) >= target (expect is monotone
+    // non-decreasing in c)
+    let (mut lo, mut hi) = (1usize, max_t);
+    if expect(lo) >= target {
+        return lo;
+    }
+    if expect(hi) < target {
+        return hi;
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if expect(mid) >= target {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    // hi is the first cutoff at/above target; lo = hi - 1 undershoots.
+    if (expect(hi) - target).abs() < (target - expect(lo)).abs() {
+        hi
+    } else {
+        lo
+    }
+}
+
+/// Bisection on the probability scale s: f(s) = Σ min(1, s·p_t) is
+/// continuous and monotone, so 64 halvings reach machine precision.
+fn solve_saliency_scale(rows: &[(usize, Option<&[f32]>)], floor: f64, target: f64) -> f64 {
+    let base: Vec<Vec<f32>> = rows
+        .iter()
+        .filter(|&&(t, _)| t > 0)
+        .map(|&(t, ctx)| {
+            let lp = ctx.expect("budget controller: saliency needs behaviour logprobs");
+            debug_assert_eq!(lp.len(), t);
+            super::saliency::probs(lp, floor)
+        })
+        .collect();
+    let f = |s: f64| -> f64 {
+        base.iter()
+            .flat_map(|p| p.iter())
+            .map(|&p| (s * p as f64).min(1.0))
+            .sum()
+    };
+    // s_hi = 1/floor saturates every probability at 1 (p_t >= floor).
+    let s_hi = 1.0 / floor.max(1e-6);
+    if f(s_hi) <= target {
+        return s_hi;
+    }
+    let (mut lo, mut hi) = (0.0f64, s_hi);
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // hi's expectation >= target by loop invariant; the interval is ~1 ulp
+    // wide. Never return exactly 0 (probabilities must stay positive).
+    hi.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn plain_rows(lens: &[usize]) -> Vec<(usize, Option<&'static [f32]>)> {
+        lens.iter().map(|&t| (t, None)).collect()
+    }
+
+    #[test]
+    fn urs_and_stratified_hit_the_target_exactly() {
+        let rows = plain_rows(&[10, 20, 30, 40]);
+        for method in [Method::Urs { p: 0.9 }, Method::Stratified { p: 0.9 }] {
+            let out = solve_batch(&method, &rows, 50);
+            assert!(out.adapted);
+            assert_eq!(out.target, 50.0);
+            // f32 probability rounding keeps this to ~1e-5 relative
+            assert!((out.expected - 50.0).abs() < 0.01, "{}", out.expected);
+        }
+    }
+
+    #[test]
+    fn poisson_waterfill_equalises_long_sequences() {
+        // lens 10/20/30/40, target 60 ⇒ k=15: 10 + 15·3 = 55 ≠ 60... solve:
+        // k ≤ 10: 4k; k=10→40. 10..20: 10+3k; k=50/3≈16.67 → sum 60. ✔
+        let rows = plain_rows(&[10, 20, 30, 40]);
+        let out = solve_batch(&Method::Poisson { k: 8 }, &rows, 60);
+        assert!(out.adapted);
+        assert!((out.expected - 60.0).abs() < 0.01, "{}", out.expected);
+        // saturated target clamps to the full token count
+        let out = solve_batch(&Method::Poisson { k: 8 }, &rows, 1000);
+        assert!((out.expected - 100.0).abs() < 0.01, "{}", out.expected);
+    }
+
+    #[test]
+    fn rpc_integer_cut_lands_within_half_batch_granularity() {
+        let mut rng = Rng::new(40);
+        let lens: Vec<usize> = (0..64).map(|_| 1 + rng.below(256) as usize).collect();
+        let rows = plain_rows(&lens);
+        let total: f64 = lens.iter().map(|&t| t as f64).sum();
+        let floor_e: f64 = lens.iter().map(|&t| (1.0 + t as f64) / 2.0).sum();
+        // attainable band: [Σ(1+t)/2, Σt]
+        for frac in [0.55f64, 0.65, 0.8, 0.95] {
+            let target = total * frac;
+            if target < floor_e {
+                continue;
+            }
+            let out = solve_batch(&Method::Rpc { min_cut: 8 }, &rows, target as usize);
+            assert!(out.adapted);
+            // worst case: half an integer-cut step = n/4 tokens
+            assert!(
+                (out.expected - target).abs() <= lens.len() as f64 / 2.0 + 1.0,
+                "target {target}: expected {}",
+                out.expected
+            );
+        }
+        // unattainably low target clamps to the C=1 floor
+        let out = solve_batch(&Method::Rpc { min_cut: 8 }, &rows, 1);
+        assert!((out.expected - floor_e).abs() < 1e-6);
+        // unattainably high target clamps to full length
+        let out = solve_batch(&Method::Rpc { min_cut: 8 }, &rows, total as usize * 2);
+        assert!((out.expected - total).abs() < 1e-6);
+    }
+
+    #[test]
+    fn saliency_scale_bisection_hits_target() {
+        let mut rng = Rng::new(41);
+        let lens: Vec<usize> = (0..16).map(|_| 4 + rng.below(60) as usize).collect();
+        let lps: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|&t| (0..t).map(|_| -0.02 - rng.uniform() as f32).collect())
+            .collect();
+        let rows: Vec<(usize, Option<&[f32]>)> =
+            lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
+        let total: f64 = lens.iter().map(|&t| t as f64).sum();
+        let target = (0.4 * total) as usize;
+        let out = solve_batch(&Method::Saliency { floor: 0.25 }, &rows, target);
+        assert!(out.adapted);
+        assert!(
+            (out.expected - target as f64).abs() < 0.01 * target as f64,
+            "target {target}: expected {}",
+            out.expected
+        );
+        // saturated: every probability clamps at 1
+        let out = solve_batch(&Method::Saliency { floor: 0.25 }, &rows, total as usize * 2);
+        assert!((out.expected - total).abs() < 1e-6);
+    }
+
+    #[test]
+    fn baselines_are_not_adapted() {
+        let rows = plain_rows(&[10, 20, 30]);
+        let out = solve_batch(&Method::Grpo, &rows, 10);
+        assert!(!out.adapted);
+        assert_eq!(out.expected, 60.0);
+        let out = solve_batch(&Method::DetTrunc { frac: 0.5 }, &rows, 10);
+        assert!(!out.adapted);
+        assert_eq!(out.expected, 30.0);
+    }
+
+    #[test]
+    fn empty_and_zero_length_rows_are_ignored() {
+        let out = solve_batch(&Method::Urs { p: 0.5 }, &[], 10);
+        assert_eq!(out.expected, 0.0);
+        let rows = [(0usize, None), (10usize, None)];
+        let out = solve_batch(&Method::Poisson { k: 4 }, &rows, 5);
+        assert!((out.expected - 5.0).abs() < 0.01);
+        let out = solve_batch(&Method::Rpc { min_cut: 8 }, &rows, 8);
+        assert!(out.expected >= 5.5 - 1e-9); // C=1 floor on the single row
+    }
+}

@@ -1,0 +1,66 @@
+//! Deterministic prefix truncation — the paper's *biased* baseline: keep
+//! the first ⌊frac·T⌋ tokens with weight 1 and drop the suffix outright.
+//! No HT correction exists (inclusion probability 0 on the suffix), which
+//! is exactly the bias the unbiased schemes are measured against. Consumes
+//! no RNG draws.
+
+use super::{SelectionPlan, Selector};
+use crate::util::rng::Rng;
+
+pub struct DetTrunc {
+    pub frac: f64,
+}
+
+impl DetTrunc {
+    fn cut(&self, t_i: usize) -> usize {
+        ((self.frac * t_i as f64).floor() as usize).clamp(1, t_i)
+    }
+}
+
+impl Selector for DetTrunc {
+    fn label(&self) -> String {
+        format!("det_trunc(frac={})", self.frac)
+    }
+
+    fn probs(&self, t_i: usize, _ctx: Option<&[f32]>) -> Vec<f32> {
+        let k = self.cut(t_i);
+        let mut p = vec![0.0f32; t_i];
+        for slot in p.iter_mut().take(k) {
+            *slot = 1.0;
+        }
+        p
+    }
+
+    fn expected_kept(&self, t_i: usize, _ctx: Option<&[f32]>) -> f64 {
+        self.cut(t_i) as f64
+    }
+
+    fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, _rng: &mut Rng) -> SelectionPlan {
+        let k = self.cut(t_i);
+        let mut ht_w = vec![0.0f32; t_i];
+        for slot in ht_w.iter_mut().take(k) {
+            *slot = 1.0; // no HT correction exists: p = 0 on the suffix
+        }
+        SelectionPlan { probs: self.probs(t_i, None), ht_w, kept: k, learn_len: k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_deterministic_prefix() {
+        let mut rng = Rng::new(3);
+        let a = DetTrunc { frac: 0.5 }.sample(101, None, &mut rng);
+        let b = DetTrunc { frac: 0.5 }.sample(101, None, &mut rng);
+        assert_eq!(a.kept, 50);
+        assert_eq!(a.learn_len, 50);
+        assert_eq!(a.ht_w, b.ht_w);
+        assert!(a.ht_w[..50].iter().all(|&w| w == 1.0));
+        assert!(a.ht_w[50..].iter().all(|&w| w == 0.0));
+        // the suffix has zero inclusion probability — the documented bias
+        assert!(a.probs[50..].iter().all(|&p| p == 0.0));
+        assert_eq!(DetTrunc { frac: 0.5 }.expected_kept(101, None), 50.0);
+    }
+}

@@ -1,0 +1,49 @@
+//! Full selection — the vanilla GRPO baseline: every response token
+//! backpropagates with weight 1 (inclusion probability 1 everywhere, so the
+//! "HT estimator" is the plain sum). Consumes no RNG draws.
+
+use super::{SelectionPlan, Selector};
+use crate::util::rng::Rng;
+
+pub struct Full;
+
+impl Selector for Full {
+    fn label(&self) -> String {
+        "full".into()
+    }
+
+    fn probs(&self, t_i: usize, _ctx: Option<&[f32]>) -> Vec<f32> {
+        vec![1.0; t_i]
+    }
+
+    fn expected_kept(&self, t_i: usize, _ctx: Option<&[f32]>) -> f64 {
+        t_i as f64
+    }
+
+    fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, _rng: &mut Rng) -> SelectionPlan {
+        SelectionPlan {
+            probs: vec![1.0; t_i],
+            ht_w: vec![1.0; t_i],
+            kept: t_i,
+            learn_len: t_i,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_everything_without_touching_the_rng() {
+        let mut rng = Rng::new(0);
+        let before = rng.clone();
+        let plan = Full.sample(37, None, &mut rng);
+        assert_eq!(plan.kept, 37);
+        assert_eq!(plan.learn_len, 37);
+        assert!(plan.ht_w.iter().all(|&w| w == 1.0));
+        assert!(plan.probs.iter().all(|&p| p == 1.0));
+        let mut a = before;
+        assert_eq!(a.next_u64(), rng.next_u64());
+    }
+}

@@ -1,0 +1,318 @@
+//! First-class token-selection subsystem — NAT's core primitive, promoted
+//! from a single enum-matched file into a pluggable architecture.
+//!
+//! Every scheme implements [`Selector`]: given a response length (and, for
+//! information-aware schemes, the behaviour logprobs) it can report its
+//! per-token **inclusion probabilities** and draw a [`SelectionPlan`] — the
+//! realized Horvitz-Thompson weights `w_t = m_t / p_t`, the kept count, and
+//! the `learn_len` forward prefix the batcher packs on. Keeping the
+//! probabilities in the plan (not just the realized weights) is what makes
+//! the subsystem composable: the batch-level budget controller
+//! ([`budget`]) can *re-solve* a scheme's keep parameter against the
+//! batch's actual length distribution and the estimator stays exactly
+//! unbiased, because the weights are always `1 / (probability actually
+//! sampled with)`.
+//!
+//! Scheme modules (one per file):
+//!
+//! * [`full`]       — GRPO baseline: every token, weight 1.
+//! * [`urs`]        — uniform Bernoulli(p), weight 1/p.
+//! * [`det_trunc`]  — deterministic prefix truncation (biased baseline).
+//! * [`rpc`]        — random prefix cutting with survival-probability HT
+//!                    weights (the paper's headline scheme).
+//! * [`saliency`]   — behaviour-surprisal-proportional inclusion (§7).
+//! * [`stratified`] — systematic sampling: URS's marginals with a fixed
+//!                    realized sample size (variance reduction at equal —
+//!                    actually lower — host cost).
+//! * [`poisson`]    — length-aware Poisson rates: ~k selected tokens per
+//!                    sequence regardless of length.
+//! * [`budget`]     — the batch-level adaptive token-budget controller
+//!                    (`--train.budget_mode batch`).
+//!
+//! The legacy `coordinator::masking` API (`sample_ctx` et al.) is a thin
+//! shim over this module; its RNG streams are bit-identical to the
+//! pre-refactor implementation (proptested against a frozen copy in
+//! `tests/selection.rs`).
+
+pub mod budget;
+pub mod det_trunc;
+pub mod full;
+pub mod poisson;
+pub mod rpc;
+pub mod saliency;
+pub mod stratified;
+pub mod urs;
+
+pub use budget::{solve_batch, BudgetOutcome};
+pub use det_trunc::DetTrunc;
+pub use full::Full;
+pub use poisson::Poisson;
+pub use rpc::Rpc;
+pub use saliency::Saliency;
+pub use stratified::Stratified;
+pub use urs::Urs;
+
+use crate::config::Method;
+use crate::util::rng::Rng;
+
+/// One sampled selection for one response: the per-token inclusion
+/// probabilities that were *actually used* to draw the mask, the realized
+/// HT weights, and the forward prefix the learner must process.
+#[derive(Clone, Debug)]
+pub struct SelectionPlan {
+    /// Inclusion probability per token over 0..t_i (the HT denominators).
+    /// For the biased DetTrunc baseline the suffix is 0.0 — no unbiased
+    /// weight exists there, which is exactly its documented bias.
+    pub probs: Vec<f32>,
+    /// HT weights over 0..t_i (0.0 = excluded from the update).
+    pub ht_w: Vec<f32>,
+    /// Number of selected tokens.
+    pub kept: usize,
+    /// Forward prefix length the learner must process (<= t_i).
+    pub learn_len: usize,
+}
+
+impl SelectionPlan {
+    /// The degenerate plan for an empty response.
+    pub fn empty() -> SelectionPlan {
+        SelectionPlan { probs: Vec::new(), ht_w: Vec::new(), kept: 0, learn_len: 0 }
+    }
+
+    /// Expected selected-token count under this plan's probabilities.
+    pub fn expected_kept(&self) -> f64 {
+        self.probs.iter().map(|&p| p as f64).sum()
+    }
+
+    pub fn selected_ratio(&self) -> f64 {
+        if self.ht_w.is_empty() {
+            0.0
+        } else {
+            self.kept as f64 / self.ht_w.len() as f64
+        }
+    }
+}
+
+/// A pluggable token-selection scheme.
+///
+/// Implementations must keep `draw` a deterministic function of
+/// `(self, t_i, ctx, rng)` with a *fixed RNG draw pattern* per `(scheme,
+/// t_i)` — the trainer derives mask streams from `(seed, step)` and every
+/// replay/resume/parity guarantee rides on the draw count never depending
+/// on the realized mask.
+pub trait Selector: Send + Sync {
+    /// Human-readable label (diagnostics only).
+    fn label(&self) -> String;
+
+    /// Per-token inclusion probabilities for a length-`t_i` response.
+    /// `ctx` carries the behaviour logprobs over 0..t_i where available
+    /// (required by information-aware schemes).
+    fn probs(&self, t_i: usize, ctx: Option<&[f32]>) -> Vec<f32>;
+
+    /// Closed-form expected selected-token count (exact, f64 — the budget
+    /// controller's solve target).
+    fn expected_kept(&self, t_i: usize, ctx: Option<&[f32]>) -> f64;
+
+    /// Draw one selection for `t_i >= 1` (implementations may assume a
+    /// non-empty response; use [`Selector::sample`] from call sites).
+    fn draw(&self, t_i: usize, ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan;
+
+    /// Guarded entry point: a degenerate empty response (`trim_at_eos`
+    /// floors real rollouts at 1, but a zero-width response window can
+    /// produce 0) yields the empty plan WITHOUT consuming any RNG draws, so
+    /// the mask stream stays aligned with the non-degenerate case.
+    fn sample(&self, t_i: usize, ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
+        if t_i == 0 {
+            SelectionPlan::empty()
+        } else {
+            self.draw(t_i, ctx, rng)
+        }
+    }
+}
+
+/// The selector configured by a [`Method`] literal (no budget adaptation —
+/// see [`budget::solve_batch`] for the batch-controlled variant).
+pub fn selector_for(method: &Method) -> Box<dyn Selector> {
+    match *method {
+        Method::Grpo => Box::new(Full),
+        Method::Urs { p } => Box::new(Urs { p }),
+        Method::DetTrunc { frac } => Box::new(DetTrunc { frac }),
+        Method::Rpc { min_cut } => Box::new(Rpc { min_cut }),
+        Method::Saliency { floor } => Box::new(Saliency::new(floor)),
+        Method::Stratified { p } => Box::new(Stratified { p }),
+        Method::Poisson { k } => Box::new(Poisson { k: k as f64 }),
+    }
+}
+
+/// Expected selected-token ratio (paper Fig. 3 prediction), in the exact
+/// closed forms the legacy `masking::expected_ratio` promised (RPC with
+/// minimum cutoff keeps E[L]/T = 1/2 + C/(2T)).
+pub fn expected_ratio(method: &Method, t_i: usize) -> f64 {
+    match *method {
+        Method::Grpo => 1.0,
+        Method::Urs { p } | Method::Stratified { p } => p,
+        Method::DetTrunc { frac } => ((frac * t_i as f64).floor().max(1.0)) / t_i as f64,
+        Method::Rpc { min_cut } => {
+            let c = min_cut.clamp(1, t_i) as f64;
+            let t = t_i as f64;
+            (c + t) / (2.0 * t)
+        }
+        // depends on the realised surprisal profile; floor is a lower bound
+        Method::Saliency { floor } => floor,
+        Method::Poisson { k } => (k as f64 / t_i as f64).min(1.0),
+    }
+}
+
+/// Shared tail bookkeeping for independent-masking schemes (URS, Saliency,
+/// Poisson, Stratified): causal attention only needs the prefix up to the
+/// last *scored* token, floored at 1 so empty draws still produce a valid
+/// artifact shape.
+pub(crate) fn tail_learn_len(last_kept: usize) -> usize {
+    last_kept.max(1)
+}
+
+/// The selection bench/test workload: one deterministic population shared
+/// by `benches/bench_selection.rs` (which writes `BENCH_selection.json`)
+/// and the tier-1 budget-controller gate in `tests/selection.rs`, so the
+/// perf record and the CI assertion describe the same workload — the
+/// `shard_workload` pattern, selection-side.
+pub mod bench_workload {
+    use crate::coordinator::rollout::RolloutSeq;
+    use crate::tokenizer::PAD;
+    use crate::util::rng::Rng;
+
+    pub const SEED: u64 = 0x5E1E_C701;
+
+    /// Controller-level length population: 64 responses, RPC-shaped lengths
+    /// in 1..=256 — large enough that RPC's integer-cut granularity
+    /// (≤ n/2 tokens per cut step) stays well under the 2% budget gate.
+    pub const N_LENS: usize = 64;
+    pub const T_MAX: usize = 256;
+
+    pub fn lens() -> Vec<usize> {
+        let mut rng = Rng::new(SEED);
+        (0..N_LENS).map(|_| 1 + rng.below(T_MAX as u64) as usize).collect()
+    }
+
+    /// Synthetic behaviour logprobs for a response of length `t` (the
+    /// saliency controller's context), deterministic per (SEED, index).
+    pub fn old_lp(idx: usize, t: usize) -> Vec<f32> {
+        let mut rng = Rng::new(SEED ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        (0..t).map(|_| -0.02 - rng.uniform() as f32).collect()
+    }
+
+    /// End-to-end population for `learn_stage` on the sim runtime: 6 prompt
+    /// groups × G=4 rollouts with varied lengths, logprobs, pads and binary
+    /// rewards (group variance guaranteed by construction).
+    pub const GROUPS: usize = 6;
+    pub const GROUP_SIZE: usize = 4;
+
+    pub fn seqs(prompt_len: usize, max_resp: usize) -> Vec<RolloutSeq> {
+        let mut rng = Rng::new(SEED ^ 0x5EED);
+        (0..GROUPS * GROUP_SIZE)
+            .map(|flat| {
+                let resp_len = 1 + rng.below(max_resp as u64) as usize;
+                let mut tokens = vec![PAD; prompt_len + max_resp];
+                for (i, slot) in tokens.iter_mut().enumerate().take(prompt_len) {
+                    *slot = 3 + ((flat * 7 + i * 3) % 50) as i32;
+                }
+                for t in 0..resp_len {
+                    tokens[prompt_len + t] = 3 + ((flat * 11 + t * 5) % 50) as i32;
+                }
+                let old_lp: Vec<f32> =
+                    (0..resp_len).map(|_| -0.02 - rng.uniform() as f32).collect();
+                RolloutSeq {
+                    task_idx: flat / GROUP_SIZE,
+                    tokens,
+                    pad_len: rng.below(8) as usize,
+                    resp_len,
+                    old_lp,
+                    // alternate within each group so every group has reward
+                    // variance (nonzero advantages)
+                    reward: if flat % 2 == 0 { 1.0 } else { 0.0 },
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selector_for_dispatches_every_method() {
+        let methods = [
+            Method::Grpo,
+            Method::Urs { p: 0.5 },
+            Method::DetTrunc { frac: 0.5 },
+            Method::Rpc { min_cut: 8 },
+            Method::Saliency { floor: 0.25 },
+            Method::Stratified { p: 0.5 },
+            Method::Poisson { k: 8 },
+        ];
+        let old_lp: Vec<f32> = (0..32).map(|t| -0.1 - 0.05 * (t % 9) as f32).collect();
+        let mut rng = Rng::new(1);
+        for m in methods {
+            let sel = selector_for(&m);
+            let plan = sel.sample(32, Some(&old_lp), &mut rng);
+            assert_eq!(plan.probs.len(), 32, "{m:?}");
+            assert_eq!(plan.ht_w.len(), 32, "{m:?}");
+            assert!(plan.learn_len >= 1 && plan.learn_len <= 32, "{m:?}");
+            assert_eq!(
+                plan.kept,
+                plan.ht_w.iter().filter(|&&w| w > 0.0).count(),
+                "{m:?}"
+            );
+            // weights and probabilities are consistent: w_t = m_t / p_t
+            for (t, (&w, &p)) in plan.ht_w.iter().zip(&plan.probs).enumerate() {
+                if w > 0.0 {
+                    assert!(p > 0.0, "{m:?} t={t}");
+                    assert!((w - 1.0 / p).abs() < 1e-5, "{m:?} t={t}: {w} vs 1/{p}");
+                }
+            }
+            assert!(!sel.label().is_empty());
+            // guarded empty sample consumes no draws
+            let before = rng.clone();
+            let empty = sel.sample(0, Some(&[]), &mut rng);
+            assert_eq!(empty.learn_len, 0);
+            assert_eq!(empty.kept, 0);
+            let mut a = before;
+            assert_eq!(a.next_u64(), rng.clone().next_u64(), "{m:?} consumed draws at t=0");
+        }
+    }
+
+    #[test]
+    fn plan_expected_kept_sums_probs() {
+        let plan = SelectionPlan {
+            probs: vec![1.0, 0.5, 0.25],
+            ht_w: vec![1.0, 2.0, 0.0],
+            kept: 2,
+            learn_len: 2,
+        };
+        assert!((plan.expected_kept() - 1.75).abs() < 1e-12);
+        assert!((plan.selected_ratio() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(SelectionPlan::empty().expected_kept(), 0.0);
+    }
+
+    #[test]
+    fn bench_workload_is_deterministic_and_nontrivial() {
+        assert_eq!(bench_workload::lens(), bench_workload::lens());
+        let lens = bench_workload::lens();
+        assert_eq!(lens.len(), bench_workload::N_LENS);
+        assert!(lens.iter().all(|&t| t >= 1 && t <= bench_workload::T_MAX));
+        let total: usize = lens.iter().sum();
+        assert!(total > 64, "degenerate workload: {total} tokens");
+        let seqs = bench_workload::seqs(32, 16);
+        assert_eq!(seqs.len(), bench_workload::GROUPS * bench_workload::GROUP_SIZE);
+        for s in &seqs {
+            assert!(s.resp_len >= 1 && s.resp_len <= 16);
+            assert_eq!(s.old_lp.len(), s.resp_len);
+            assert_eq!(s.tokens.len(), 32 + 16);
+        }
+        // every group mixes rewards → nonzero advantages
+        for g in 0..bench_workload::GROUPS {
+            let grp = &seqs[g * bench_workload::GROUP_SIZE..(g + 1) * bench_workload::GROUP_SIZE];
+            assert!(grp.iter().any(|s| s.reward > 0.5) && grp.iter().any(|s| s.reward < 0.5));
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Length-aware Poisson sampling: independent Bernoulli with per-token
+//! rate min(1, k / T), so every sequence contributes ~k selected tokens
+//! *regardless of its length* (HT weight T/k on long sequences). Where URS
+//! thins every response by the same factor — long chains of thought still
+//! dominate the step's selected-token mass — the length-aware rate
+//! equalises per-sequence contribution, which is also what makes it the
+//! natural scheme for the batch budget controller: the expected step cost
+//! is just k × (number of non-empty sequences), independent of the length
+//! distribution.
+//!
+//! `k` is f64 so the controller can solve it exactly (a fractional rate is
+//! perfectly valid Poisson sampling); the `--method poisson --method.k N`
+//! literal is an integer.
+
+use super::{tail_learn_len, SelectionPlan, Selector};
+use crate::util::rng::Rng;
+
+pub struct Poisson {
+    pub k: f64,
+}
+
+impl Poisson {
+    fn rate(&self, t_i: usize) -> f64 {
+        (self.k / t_i as f64).min(1.0)
+    }
+}
+
+impl Selector for Poisson {
+    fn label(&self) -> String {
+        format!("poisson(k={})", self.k)
+    }
+
+    fn probs(&self, t_i: usize, _ctx: Option<&[f32]>) -> Vec<f32> {
+        vec![self.rate(t_i) as f32; t_i]
+    }
+
+    fn expected_kept(&self, t_i: usize, _ctx: Option<&[f32]>) -> f64 {
+        self.rate(t_i) * t_i as f64
+    }
+
+    fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
+        let rate = self.rate(t_i);
+        let w = (1.0 / rate) as f32;
+        let mut ht_w = vec![0.0f32; t_i];
+        let mut kept = 0;
+        let mut last_kept = 0usize;
+        for (t, slot) in ht_w.iter_mut().enumerate() {
+            if rng.bernoulli(rate) {
+                *slot = w;
+                kept += 1;
+                last_kept = t + 1;
+            }
+        }
+        SelectionPlan {
+            probs: vec![rate as f32; t_i],
+            ht_w,
+            kept,
+            learn_len: tail_learn_len(last_kept),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_sequences_keep_everything_long_ones_thin_to_k() {
+        let sel = Poisson { k: 8.0 };
+        let mut rng = Rng::new(30);
+        // t <= k: rate 1, every token kept
+        let plan = sel.sample(5, None, &mut rng);
+        assert_eq!(plan.kept, 5);
+        assert!(plan.ht_w.iter().all(|&w| w == 1.0));
+        // t >> k: expected kept ≈ k with weight t/k
+        assert!((sel.expected_kept(64, None) - 8.0).abs() < 1e-9);
+        let n = 20_000;
+        let mut acc = 0usize;
+        for _ in 0..n {
+            let p = sel.sample(64, None, &mut rng);
+            acc += p.kept;
+            for &w in &p.ht_w {
+                assert!(w == 0.0 || (w - 8.0).abs() < 1e-6); // 64/8
+            }
+        }
+        let mean = acc as f64 / n as f64;
+        assert!((mean - 8.0).abs() < 0.1, "{mean}");
+    }
+
+    #[test]
+    fn ht_weight_sums_are_unbiased_across_lengths() {
+        let sel = Poisson { k: 6.0 };
+        let mut rng = Rng::new(31);
+        for t_i in [3usize, 10, 40, 120] {
+            let n = 20_000;
+            let mut acc = 0.0f64;
+            for _ in 0..n {
+                acc += sel
+                    .sample(t_i, None, &mut rng)
+                    .ht_w
+                    .iter()
+                    .map(|&w| w as f64)
+                    .sum::<f64>();
+            }
+            let mean = acc / n as f64;
+            let tol = (t_i as f64 * 0.02).max(0.2);
+            assert!((mean - t_i as f64).abs() < tol, "t={t_i}: {mean}");
+        }
+    }
+
+    #[test]
+    fn fractional_k_is_valid() {
+        let sel = Poisson { k: 2.5 };
+        assert!((sel.expected_kept(10, None) - 2.5).abs() < 1e-12);
+        let mut rng = Rng::new(32);
+        let plan = sel.sample(10, None, &mut rng);
+        assert_eq!(plan.probs.len(), 10);
+        assert!(plan.probs.iter().all(|&p| (p - 0.25).abs() < 1e-6));
+    }
+}

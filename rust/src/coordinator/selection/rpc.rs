@@ -1,0 +1,99 @@
+//! Random Prefix Cutting — the paper's headline scheme: draw a cut
+//! L ~ Uniform({C..T}) and keep the prefix, HT-weighting each kept token by
+//! the inverse of its survival probability so the estimator stays unbiased
+//! while the forward prefix (and with it learner time and memory) shrinks
+//! deterministically. Exactly one `range_inclusive` draw per sequence, the
+//! same stream as the legacy `masking::sample_ctx` RPC arm.
+
+use super::{SelectionPlan, Selector};
+use crate::util::rng::Rng;
+
+/// Survival function of RPC with minimum cutoff C (paper Eq. after (8)):
+/// p_t = 1 for t <= C, (T - t + 1) / (T - C + 1) for t > C (1-based t).
+pub fn survival(t_i: usize, min_cut: usize) -> Vec<f32> {
+    let c = min_cut.clamp(1, t_i);
+    (1..=t_i)
+        .map(|t| {
+            if t <= c {
+                1.0
+            } else {
+                (t_i - t + 1) as f32 / (t_i - c + 1) as f32
+            }
+        })
+        .collect()
+}
+
+pub struct Rpc {
+    pub min_cut: usize,
+}
+
+impl Selector for Rpc {
+    fn label(&self) -> String {
+        format!("rpc(C={})", self.min_cut)
+    }
+
+    fn probs(&self, t_i: usize, _ctx: Option<&[f32]>) -> Vec<f32> {
+        survival(t_i, self.min_cut)
+    }
+
+    fn expected_kept(&self, t_i: usize, _ctx: Option<&[f32]>) -> f64 {
+        // E[L] for L ~ Uniform({C..T}) is (C + T) / 2.
+        let c = self.min_cut.clamp(1, t_i) as f64;
+        (c + t_i as f64) / 2.0
+    }
+
+    fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
+        let c = self.min_cut.clamp(1, t_i);
+        let cut = rng.range_inclusive(c as u64, t_i as u64) as usize;
+        let p = survival(t_i, self.min_cut);
+        let mut ht_w = vec![0.0f32; t_i];
+        for t in 0..cut {
+            ht_w[t] = 1.0 / p[t];
+        }
+        SelectionPlan { probs: p, ht_w, kept: cut, learn_len: cut }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_is_prefix_with_ht_weights() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100 {
+            let t_i = 1 + rng.below(150) as usize;
+            let c = 1 + rng.below(30) as usize;
+            let plan = Rpc { min_cut: c }.sample(t_i, None, &mut rng);
+            let p = survival(t_i, c);
+            assert!(plan.kept >= c.min(t_i));
+            assert_eq!(plan.learn_len, plan.kept);
+            for t in 0..t_i {
+                if t < plan.kept {
+                    assert!((plan.ht_w[t] - 1.0 / p[t]).abs() < 1e-6);
+                } else {
+                    assert_eq!(plan.ht_w[t], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn survival_properties() {
+        for (t_i, c) in [(1, 1), (10, 3), (100, 100), (64, 1), (200, 50)] {
+            let p = survival(t_i, c);
+            assert_eq!(p.len(), t_i);
+            assert_eq!(p[0], 1.0);
+            assert!(p.iter().all(|&x| x > 0.0)); // HT requirement
+            assert!(p.windows(2).all(|w| w[1] <= w[0] + 1e-7)); // monotone
+            let cc = c.clamp(1, t_i);
+            assert!(p[..cc].iter().all(|&x| x == 1.0));
+        }
+    }
+
+    #[test]
+    fn expected_kept_is_half_c_plus_t() {
+        assert_eq!(Rpc { min_cut: 10 }.expected_kept(100, None), 55.0);
+        assert_eq!(Rpc { min_cut: 200 }.expected_kept(100, None), 100.0);
+    }
+}

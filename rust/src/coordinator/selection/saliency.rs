@@ -1,0 +1,154 @@
+//! Information-aware selection (paper §7 future work, implemented):
+//! behaviour surprisal u_t = -log pi_old(o_t) normalised to [0, 1] per
+//! sequence, then p_t = floor + (1 - floor) * u_t. High-surprisal
+//! ("high-entropy minority") tokens are (almost) always kept; boilerplate
+//! tokens are kept with probability ~floor and up-weighted by 1/p_t when
+//! they are — the same HT framework as URS/RPC.
+//!
+//! The budget controller's hook is `scale`: inclusion probabilities become
+//! min(1, scale · p_t), and because the HT weights always divide by the
+//! probability actually sampled with, any scale keeps the estimator exactly
+//! unbiased. `scale == 1` takes the verbatim legacy path (bit-identical
+//! probabilities and draws).
+
+use super::{tail_learn_len, SelectionPlan, Selector};
+use crate::util::rng::Rng;
+
+/// Base inclusion probabilities (the legacy `masking::saliency_probs`).
+pub fn probs(old_lp: &[f32], floor: f64) -> Vec<f32> {
+    let max_u = old_lp.iter().map(|&lp| -lp).fold(1e-6f32, f32::max);
+    old_lp
+        .iter()
+        .map(|&lp| {
+            let u = (-lp / max_u).clamp(0.0, 1.0);
+            (floor as f32 + (1.0 - floor as f32) * u).clamp(floor as f32, 1.0)
+        })
+        .collect()
+}
+
+pub struct Saliency {
+    pub floor: f64,
+    /// Batch-budget multiplier on the base probabilities (1.0 = off).
+    pub scale: f64,
+}
+
+impl Saliency {
+    pub fn new(floor: f64) -> Saliency {
+        Saliency { floor, scale: 1.0 }
+    }
+
+    fn inclusion(&self, old_lp: &[f32]) -> Vec<f32> {
+        let base = probs(old_lp, self.floor);
+        if self.scale == 1.0 {
+            base
+        } else {
+            base.iter()
+                .map(|&p| ((self.scale * p as f64).min(1.0) as f32).max(f32::MIN_POSITIVE))
+                .collect()
+        }
+    }
+}
+
+impl Selector for Saliency {
+    fn label(&self) -> String {
+        format!("saliency(floor={}, scale={})", self.floor, self.scale)
+    }
+
+    fn probs(&self, t_i: usize, ctx: Option<&[f32]>) -> Vec<f32> {
+        let lp = ctx.expect("Saliency selection needs behaviour logprobs");
+        debug_assert_eq!(lp.len(), t_i);
+        self.inclusion(lp)
+    }
+
+    fn expected_kept(&self, t_i: usize, ctx: Option<&[f32]>) -> f64 {
+        match ctx {
+            Some(lp) => self.inclusion(lp).iter().map(|&p| p as f64).sum(),
+            // without the surprisal profile the floor is the lower bound
+            None => self.floor * t_i as f64,
+        }
+    }
+
+    fn draw(&self, t_i: usize, ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
+        let p = self.probs(t_i, ctx);
+        let mut ht_w = vec![0.0f32; t_i];
+        let mut kept = 0;
+        let mut last_kept = 0usize;
+        for (t, (slot, &pt)) in ht_w.iter_mut().zip(&p).enumerate() {
+            if rng.bernoulli(pt as f64) {
+                *slot = 1.0 / pt;
+                kept += 1;
+                last_kept = t + 1;
+            }
+        }
+        // independent masking: forward only up to the last scored token
+        SelectionPlan { probs: p, ht_w, kept, learn_len: tail_learn_len(last_kept) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probs_are_floored_and_monotone_in_surprisal() {
+        let old_lp = [-0.1f32, -1.0, -5.0, -0.01];
+        let p = probs(&old_lp, 0.25);
+        assert!(p.iter().all(|&x| (0.25..=1.0).contains(&x)));
+        assert!((p[2] - 1.0).abs() < 1e-6);
+        assert!(p[3] < p[0] && p[0] < p[1] && p[1] < p[2]);
+    }
+
+    #[test]
+    fn scale_one_is_the_identity_and_scaling_clamps_at_one() {
+        let old_lp: Vec<f32> = (0..40).map(|t| -0.2 - 0.1 * (t % 7) as f32).collect();
+        let base = Saliency::new(0.3).probs(40, Some(&old_lp));
+        assert_eq!(base, probs(&old_lp, 0.3));
+        let scaled = Saliency { floor: 0.3, scale: 0.5 }.probs(40, Some(&old_lp));
+        for (&s, &b) in scaled.iter().zip(&base) {
+            assert!(s > 0.0 && s <= 1.0);
+            assert!(s <= b + 1e-7);
+        }
+        let up = Saliency { floor: 0.3, scale: 10.0 }.probs(40, Some(&old_lp));
+        assert!(up.iter().all(|&p| (p - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn scaled_draws_stay_ht_unbiased() {
+        // Σ w_t must average to t_i under ANY scale — the controller's
+        // correctness hinges on this.
+        let old_lp: Vec<f32> = (0..40).map(|t| -0.2 - 0.1 * (t % 7) as f32).collect();
+        let mut rng = Rng::new(10);
+        for scale in [0.5, 1.0, 1.7] {
+            let sel = Saliency { floor: 0.3, scale };
+            let n = 30_000;
+            let mut acc = 0.0f64;
+            for _ in 0..n {
+                let plan = sel.sample(40, Some(&old_lp), &mut rng);
+                acc += plan.ht_w.iter().map(|&w| w as f64).sum::<f64>();
+                assert!(plan.learn_len >= 1 && plan.learn_len <= 40);
+            }
+            let mean = acc / n as f64;
+            assert!((mean - 40.0).abs() < 0.5, "scale {scale}: {mean}");
+        }
+    }
+
+    #[test]
+    fn keeps_surprising_tokens_more_often() {
+        let mut old_lp = vec![-0.05f32; 30];
+        old_lp[7] = -6.0; // one very surprising token
+        let sel = Saliency::new(0.2);
+        let mut rng = Rng::new(11);
+        let (mut kept7, mut kept0) = (0, 0);
+        for _ in 0..2000 {
+            let plan = sel.sample(30, Some(&old_lp), &mut rng);
+            if plan.ht_w[7] > 0.0 {
+                kept7 += 1;
+            }
+            if plan.ht_w[0] > 0.0 {
+                kept0 += 1;
+            }
+        }
+        assert!(kept7 > 1950, "{kept7}");
+        assert!(kept0 < 600, "{kept0}");
+    }
+}

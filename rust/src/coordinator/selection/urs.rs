@@ -1,0 +1,81 @@
+//! Uniform Random Sampling: independent Bernoulli(p) per token, HT weight
+//! 1/p (paper §3). The draw loop is byte-for-byte the legacy
+//! `masking::sample_ctx` URS arm — exactly one `bernoulli(p)` draw per
+//! token, with `p` kept in f64 — so mask streams are bit-identical across
+//! the refactor (proptested in `tests/selection.rs`).
+
+use super::{tail_learn_len, SelectionPlan, Selector};
+use crate::util::rng::Rng;
+
+pub struct Urs {
+    pub p: f64,
+}
+
+impl Selector for Urs {
+    fn label(&self) -> String {
+        format!("urs(p={})", self.p)
+    }
+
+    fn probs(&self, t_i: usize, _ctx: Option<&[f32]>) -> Vec<f32> {
+        vec![self.p as f32; t_i]
+    }
+
+    fn expected_kept(&self, t_i: usize, _ctx: Option<&[f32]>) -> f64 {
+        self.p * t_i as f64
+    }
+
+    fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
+        let w = (1.0 / self.p) as f32;
+        let mut ht_w = vec![0.0f32; t_i];
+        let mut kept = 0;
+        let mut last_kept = 0usize;
+        for (t, slot) in ht_w.iter_mut().enumerate() {
+            if rng.bernoulli(self.p) {
+                *slot = w;
+                kept += 1;
+                last_kept = t + 1;
+            }
+        }
+        // Causal attention only needs the prefix up to the last *scored*
+        // token. In expectation this is close to t_i for moderate p — URS
+        // keeps near-full forward cost, as the paper notes — but the
+        // realised tail savings are real and let short draws land in
+        // smaller buckets.
+        SelectionPlan {
+            probs: vec![self.p as f32; t_i],
+            ht_w,
+            kept,
+            learn_len: tail_learn_len(last_kept),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_is_inverse_p_and_learn_len_stops_at_last_kept() {
+        let mut rng = Rng::new(1);
+        let plan = Urs { p: 0.25 }.sample(200, None, &mut rng);
+        let last = plan.ht_w.iter().rposition(|&w| w > 0.0).map(|t| t + 1).unwrap_or(0);
+        assert_eq!(plan.learn_len, last.max(1));
+        for &w in &plan.ht_w {
+            assert!(w == 0.0 || (w - 4.0).abs() < 1e-6);
+        }
+        assert_eq!(plan.kept, plan.ht_w.iter().filter(|&&w| w > 0.0).count());
+        assert!((Urs { p: 0.25 }.expected_kept(200, None) - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn consumes_exactly_t_draws() {
+        let sel = Urs { p: 0.3 };
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        sel.sample(64, None, &mut a);
+        for _ in 0..64 {
+            b.bernoulli(0.3);
+        }
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+}

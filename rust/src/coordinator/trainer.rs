@@ -3,10 +3,14 @@
 //!
 //! One optimizer step:
 //!   rollout (G completions per prompt) → verify rewards → group-relative
-//!   advantages → NAT mask sampling + HT weights → micro-batching (fixed
-//!   or token-budget packer; see `--train.packer`) → per-(bucket, rows)
-//!   grad artifacts executed across `--train.shards` data-parallel workers
-//!   → fixed-order tree reduction keyed by micro-batch id → AdamW apply.
+//!   advantages → token selection (`coordinator::selection`: a `Selector`
+//!   per method; under `--train.budget_mode batch` the batch controller
+//!   first re-solves the keep parameter so expected selected tokens hit
+//!   `--train.token_budget`) → micro-batching off `SelectionPlan::learn_len`
+//!   (fixed or token-budget packer; see `--train.packer`) → per-(bucket,
+//!   rows) grad artifacts executed across `--train.shards` data-parallel
+//!   workers → fixed-order tree reduction keyed by micro-batch id → AdamW
+//!   apply.
 //!   The reduction order is a pure function of the step plan, so any shard
 //!   count produces bit-identical parameters and statistics
 //!   (`runtime::shard`; proptested in `tests/sharding.rs`).
@@ -34,15 +38,16 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{Packer, RolloutEngine, RunConfig};
+use crate::config::{BudgetMode, Packer, RolloutEngine, RunConfig};
 use crate::coordinator::batcher::{
-    allocated_tokens, ideal_tokens, micro_shapes, pack, pack_budget, plan_shards,
-    split_zero_contribution, LearnItem, MicroBatch,
+    allocated_tokens, ideal_tokens, micro_shapes, pack, pack_budget, packer_token_budget,
+    plan_shards, split_zero_contribution, LearnItem, MicroBatch,
 };
 use crate::coordinator::bucket_tuner::{BucketTuner, TunerState};
 use crate::coordinator::rollout::scheduler::RolloutScheduler;
 use crate::coordinator::rollout::RolloutSeq;
-use crate::coordinator::{advantage, masking, rollout};
+use crate::coordinator::selection::{self, Selector};
+use crate::coordinator::{advantage, rollout};
 use crate::metrics::Recorder;
 use crate::model::memory;
 use crate::runtime::shard::{execute_shards, tree_reduce_into};
@@ -62,6 +67,17 @@ pub struct StepStats {
     pub grad_norm: f64,
     /// Fraction of response tokens selected for the update (Fig. 3).
     pub selected_ratio: f64,
+    /// Batch budget controller target: the expected selected-token count
+    /// per epoch the controller solved for (`--train.token_budget` under
+    /// `--train.budget_mode batch`; 0 when the controller is off).
+    pub budget_target: f64,
+    /// Achieved expectation Σ_i E[kept_i] under the (possibly adjusted)
+    /// inclusion probabilities, per epoch — the realized-vs-target series.
+    pub budget_realized: f64,
+    /// Selection variance: mean squared deviation of each sequence's
+    /// realized kept-token count from its expectation. Stratified collapses
+    /// this versus URS at the same rate.
+    pub sel_var: f64,
     pub resp_len_mean: f64,
     /// Fraction of allocated learner tokens that were padding (bucket slack
     /// + inert rows). The budget packer exists to push this down.
@@ -203,15 +219,31 @@ pub fn learn_stage(
     let rewards: Vec<f32> = seqs.iter().map(|s| s.reward).collect();
     let advs = advantage::grouped_advantages(&rewards, g);
 
+    // Token selection for this step: either the method literal's selector
+    // (budget_mode none — bit-identical to the pre-subsystem code) or the
+    // batch controller's adjusted selector, solved once per step from the
+    // group's actual response lengths (lengths don't change across ppo
+    // epochs, so one solve covers them all).
+    let budget_on = cfg.train.budget_mode == BudgetMode::Batch;
+    let (sel, budget_target): (Box<dyn Selector>, f64) = if budget_on {
+        let rows: Vec<(usize, Option<&[f32]>)> =
+            seqs.iter().map(|s| (s.resp_len, Some(s.old_lp.as_slice()))).collect();
+        let out = selection::solve_batch(&cfg.method, &rows, cfg.train.token_budget);
+        (out.selector, out.target)
+    } else {
+        (selection::selector_for(&cfg.method), 0.0)
+    };
+
     // Budget-packer routing state for this step. The tuned edges are a
     // function of PREVIOUS steps' observations only, so the step stays a
-    // pure function of (params, group, tuner-state-in).
+    // pure function of (params, group, tuner-state-in). Under budget_mode
+    // batch the packer runs on its auto cap (`token_budget` is the
+    // selection target there, not a packing cap).
     let budget = cfg.train.packer == Packer::Budget;
+    let pack_cap = packer_token_budget(&cfg.train);
     let row_grid = rt.manifest.row_grid();
     let edges: Vec<usize> = match tuner.as_deref() {
-        Some(t) if budget => {
-            t.edges(&d.buckets, d.prompt_len, &row_grid, cfg.train.token_budget)
-        }
+        Some(t) if budget => t.edges(&d.buckets, d.prompt_len, &row_grid, pack_cap),
         _ => d.buckets.clone(),
     };
 
@@ -219,6 +251,8 @@ pub fn learn_stage(
     let mut grad_norm = 0.0;
     let mut sel_tokens = 0usize;
     let mut tot_tokens = 0usize;
+    let mut exp_kept = 0.0f64;
+    let mut sel_var_acc = 0.0f64;
     let mut alloc_toks = 0usize;
     let mut ideal_toks = 0usize;
     let mut all_shapes: Vec<(usize, usize)> = Vec::new();
@@ -227,31 +261,21 @@ pub fn learn_stage(
         let mut items = Vec::with_capacity(seqs.len());
         let mut empty_rows = 0usize;
         for (seq, &adv) in seqs.iter().zip(&advs) {
-            let m = masking::sample_ctx(
-                &cfg.method,
-                seq.resp_len,
-                Some(&seq.old_lp),
-                rng_mask,
-            );
+            let plan = sel.sample(seq.resp_len, Some(&seq.old_lp), rng_mask);
             if seq.resp_len == 0 {
                 // Degenerate empty response: nothing to select or forward
-                // (the masker returned the empty sample without touching the
+                // (the selector returned the empty plan without touching the
                 // RNG stream), but the row stays in the 1/sequences apply
                 // denominator like any other zero-contribution row.
                 empty_rows += 1;
                 continue;
             }
-            sel_tokens += m.kept;
+            let e = plan.expected_kept();
+            exp_kept += e;
+            sel_var_acc += (plan.kept as f64 - e) * (plan.kept as f64 - e);
+            sel_tokens += plan.kept;
             tot_tokens += seq.resp_len;
-            items.push(LearnItem {
-                tokens: seq.tokens.clone(),
-                pad_len: seq.pad_len,
-                resp_len: seq.resp_len,
-                ht_w: m.ht_w,
-                learn_len: m.learn_len,
-                adv,
-                old_lp: seq.old_lp.clone(),
-            });
+            items.push(LearnItem::from_plan(seq, plan, adv));
         }
         // Zero-contribution rows (no kept token / zero advantage) burn a
         // full forward for exactly nothing — drop them before packing.
@@ -274,7 +298,7 @@ pub fn learn_stage(
             t.observe(&lens);
         }
         let mbs: Vec<MicroBatch> = if budget {
-            pack_budget(&items, &edges, d.prompt_len, &row_grid, cfg.train.token_budget)?
+            pack_budget(&items, &edges, d.prompt_len, &row_grid, pack_cap)?
         } else {
             pack(&items, &d.buckets, d.prompt_len, d.batch_train)?
         };
@@ -320,6 +344,13 @@ pub fn learn_stage(
         } else {
             0.0
         },
+        budget_target,
+        budget_realized: exp_kept / cfg.rl.ppo_epochs as f64,
+        sel_var: if seqs.is_empty() {
+            0.0
+        } else {
+            sel_var_acc / (seqs.len() * cfg.rl.ppo_epochs) as f64
+        },
         resp_len_mean: tot_tokens as f64 / (seqs.len() * cfg.rl.ppo_epochs) as f64,
         padding_waste: if alloc_toks > 0 {
             1.0 - ideal_toks as f64 / alloc_toks as f64
@@ -343,6 +374,9 @@ pub fn record_step(r: &mut Recorder, s: &StepStats, t_rollout_s: f64) {
     r.push("kl", s.step, s.kl);
     r.push("grad_norm", s.step, s.grad_norm);
     r.push("selected_ratio", s.step, s.selected_ratio);
+    r.push("budget_target", s.step, s.budget_target);
+    r.push("budget_realized", s.step, s.budget_realized);
+    r.push("sel_var", s.step, s.sel_var);
     r.push("resp_len", s.step, s.resp_len_mean);
     r.push("padding_waste", s.step, s.padding_waste);
     r.push("mem_gb", s.step, s.mem_gb);

@@ -48,7 +48,8 @@ fn print_help() {
          SUBCOMMANDS:\n\
            info      print model/artifact information (--model tiny)\n\
            pretrain  SFT base model -> checkpoint (--model small --pretrain.steps 300)\n\
-           train     NAT RL from a checkpoint (--method rpc|urs|det_trunc|grpo)\n\
+           train     NAT RL from a checkpoint\n\
+                     (--method rpc|urs|det_trunc|grpo|saliency|stratified|poisson)\n\
            eval      Acc@16/pass@16 over MATH-S/AIME24-S/AIME25-S (--ckpt path)\n\
            repro     regenerate paper tables and figures (--what table2|table3|figures|all)\n\n\
          CONFIG: --config configs/file.toml, then dotted overrides, e.g.\n\
@@ -67,12 +68,22 @@ fn print_help() {
                                       scheduling-invariant rollouts; fixed =\n\
                                       legacy full-window chunked generate\n\
                                       (auto-fallback for legacy artifacts)\n\n\
+         SELECTION (train):\n\
+           --method.p / .frac / .min_cut / .k   per-scheme keep parameters\n\
+           --rl.sal_floor F           saliency floor (dedicated flag; the old\n\
+                                      --method.p overload still works)\n\
+           --train.budget_mode M      none (default) = method literals as-is;\n\
+                                      batch = re-solve keep parameters per step\n\
+                                      so expected selected tokens hit\n\
+                                      --train.token_budget (HT stays unbiased)\n\n\
          PACKING (train):\n\
            --train.packer P           budget (default) = token-budget packing in\n\
                                       the 2-D (bucket x rows) artifact grid;\n\
                                       fixed = legacy full-row micro-batches\n\
            --train.token_budget B     max rows*(P+bucket) tokens per micro-batch\n\
-                                      (0 = auto: batch_train*(P+top bucket))\n\
+                                      (0 = auto: batch_train*(P+top bucket));\n\
+                                      under budget_mode batch: the step's\n\
+                                      expected selected-token target\n\
            --train.auto_buckets true  EMA-tune bucket routing edges to the\n\
                                       observed learn_len distribution (state\n\
                                       is checkpointed; resume is exact)\n\

@@ -45,8 +45,8 @@ fn trace_cfg(shards: usize, workers: usize) -> RunConfig {
 
 fn line(s: &StepStats, param_hash: u64) -> String {
     format!(
-        "step {} hash {:016x} reward {} entropy {} clip {} kl {} gnorm {} sel {} rlen {} \
-         waste {} mem {} peak {} mb {} seqs {}",
+        "step {} hash {:016x} reward {} entropy {} clip {} kl {} gnorm {} sel {} btgt {} \
+         breal {} svar {} rlen {} waste {} mem {} peak {} mb {} seqs {}",
         s.step,
         param_hash,
         s.reward_mean,
@@ -55,6 +55,9 @@ fn line(s: &StepStats, param_hash: u64) -> String {
         s.kl,
         s.grad_norm,
         s.selected_ratio,
+        s.budget_target,
+        s.budget_realized,
+        s.sel_var,
         s.resp_len_mean,
         s.padding_waste,
         s.mem_gb,

@@ -1,0 +1,464 @@
+//! Selection-subsystem acceptance tests (tier-1, no artifacts needed).
+//!
+//! * **Legacy parity** — the tentpole's compatibility contract: every
+//!   `Selector` must reproduce the pre-refactor `masking::sample_ctx`
+//!   bit-for-bit (outputs AND RNG draw counts) across method × t_i × seed.
+//!   The reference is a frozen copy of the old code, kept in this file so
+//!   the shim can never drift to "parity with itself".
+//! * **Budget controller** — `budget_mode=batch` hits the expected
+//!   selected-token target within 2% on the shared bench workload
+//!   (`selection::bench_workload`, the same population
+//!   `benches/bench_selection.rs` measures), both at the controller level
+//!   and end-to-end through `learn_stage` on the sim runtime.
+//! * **New selectors** — stratified sampling's variance reduction over URS
+//!   and poisson's length-aware rates.
+//! * **HT unbiasedness under the controller** — the ignored Monte-Carlo
+//!   lane proves the reweighted estimator stays unbiased through the FULL
+//!   pack → shard → reduce path with controller-adjusted probabilities.
+
+use nat_rl::config::{BudgetMode, Method, RunConfig};
+use nat_rl::coordinator::batcher::{pack_budget, plan_shards, split_zero_contribution, LearnItem};
+use nat_rl::coordinator::masking;
+use nat_rl::coordinator::selection::{self, bench_workload, Selector, Stratified, Urs};
+use nat_rl::coordinator::trainer::learn_stage;
+use nat_rl::runtime::shard::{execute_shards, tree_reduce_into};
+use nat_rl::runtime::sim::{init_params, sim_manifest};
+use nat_rl::runtime::{GradAccum, GradMetrics, OptState, Runtime};
+use nat_rl::tokenizer::PAD;
+use nat_rl::util::rng::Rng;
+
+/// Frozen pre-refactor implementation of `masking::sample_ctx` (verbatim
+/// copy of the code the `selection/` subsystem replaced). DO NOT "fix" or
+/// modernise this module: its entire value is being a fossil.
+mod legacy {
+    use nat_rl::config::Method;
+    use nat_rl::util::rng::Rng;
+
+    pub struct Sample {
+        pub ht_w: Vec<f32>,
+        pub kept: usize,
+        pub learn_len: usize,
+    }
+
+    fn rpc_survival(t_i: usize, min_cut: usize) -> Vec<f32> {
+        let c = min_cut.clamp(1, t_i);
+        (1..=t_i)
+            .map(|t| {
+                if t <= c {
+                    1.0
+                } else {
+                    (t_i - t + 1) as f32 / (t_i - c + 1) as f32
+                }
+            })
+            .collect()
+    }
+
+    fn saliency_probs(old_lp: &[f32], floor: f64) -> Vec<f32> {
+        let max_u = old_lp.iter().map(|&lp| -lp).fold(1e-6f32, f32::max);
+        old_lp
+            .iter()
+            .map(|&lp| {
+                let u = (-lp / max_u).clamp(0.0, 1.0);
+                (floor as f32 + (1.0 - floor as f32) * u).clamp(floor as f32, 1.0)
+            })
+            .collect()
+    }
+
+    pub fn sample_ctx(
+        method: &Method,
+        t_i: usize,
+        old_lp: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> Sample {
+        if t_i == 0 {
+            return Sample { ht_w: Vec::new(), kept: 0, learn_len: 0 };
+        }
+        match *method {
+            Method::Grpo => Sample { ht_w: vec![1.0; t_i], kept: t_i, learn_len: t_i },
+            Method::Urs { p } => {
+                let w = (1.0 / p) as f32;
+                let mut ht_w = vec![0.0f32; t_i];
+                let mut kept = 0;
+                let mut last_kept = 0usize;
+                for (t, slot) in ht_w.iter_mut().enumerate() {
+                    if rng.bernoulli(p) {
+                        *slot = w;
+                        kept += 1;
+                        last_kept = t + 1;
+                    }
+                }
+                Sample { ht_w, kept, learn_len: last_kept.max(1) }
+            }
+            Method::DetTrunc { frac } => {
+                let k = ((frac * t_i as f64).floor() as usize).clamp(1, t_i);
+                let mut ht_w = vec![0.0f32; t_i];
+                for slot in ht_w.iter_mut().take(k) {
+                    *slot = 1.0;
+                }
+                Sample { ht_w, kept: k, learn_len: k }
+            }
+            Method::Rpc { min_cut } => {
+                let c = min_cut.clamp(1, t_i);
+                let cut = rng.range_inclusive(c as u64, t_i as u64) as usize;
+                let p = rpc_survival(t_i, min_cut);
+                let mut ht_w = vec![0.0f32; t_i];
+                for t in 0..cut {
+                    ht_w[t] = 1.0 / p[t];
+                }
+                Sample { ht_w, kept: cut, learn_len: cut }
+            }
+            Method::Saliency { floor } => {
+                let p = saliency_probs(
+                    old_lp.expect("Saliency masking needs behaviour logprobs"),
+                    floor,
+                );
+                let mut ht_w = vec![0.0f32; t_i];
+                let mut kept = 0;
+                let mut last_kept = 0usize;
+                for (t, (slot, &pt)) in ht_w.iter_mut().zip(&p).enumerate() {
+                    if rng.bernoulli(pt as f64) {
+                        *slot = 1.0 / pt;
+                        kept += 1;
+                        last_kept = t + 1;
+                    }
+                }
+                Sample { ht_w, kept, learn_len: last_kept.max(1) }
+            }
+            _ => unreachable!("legacy reference only covers the pre-refactor methods"),
+        }
+    }
+}
+
+/// THE parity proptest: for every legacy method × random t_i × random
+/// parameters × random seed, the new `Selector` path (via the
+/// `masking::sample_ctx` shim) must return identical `ht_w` bits, `kept`
+/// and `learn_len`, AND leave the RNG in the identical state (same number
+/// of draws consumed — resume/replay ride on this).
+#[test]
+fn selectors_match_frozen_legacy_bit_for_bit_including_rng_streams() {
+    for case in 0..400u64 {
+        let mut meta = Rng::new(0x1E6A_C7 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let t_i = meta.below(301) as usize; // 0 included: the degenerate path
+        let old_lp: Vec<f32> =
+            (0..t_i).map(|_| -0.02 - meta.uniform() as f32).collect();
+        let methods = [
+            Method::Grpo,
+            Method::Urs { p: 0.05 + 0.95 * meta.uniform() },
+            Method::DetTrunc { frac: 0.05 + 0.95 * meta.uniform() },
+            Method::Rpc { min_cut: 1 + meta.below(64) as usize },
+            Method::Saliency { floor: 0.05 + 0.9 * meta.uniform() },
+        ];
+        for method in methods {
+            let seed = meta.next_u64();
+            let mut ra = Rng::new(seed);
+            let mut rb = Rng::new(seed);
+            let old = legacy::sample_ctx(&method, t_i, Some(&old_lp), &mut ra);
+            let new = masking::sample_ctx(&method, t_i, Some(&old_lp), &mut rb);
+            assert_eq!(
+                old.ht_w.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+                new.ht_w.iter().map(|w| w.to_bits()).collect::<Vec<_>>(),
+                "case {case} {method:?} t={t_i}: ht_w diverged"
+            );
+            assert_eq!(old.kept, new.kept, "case {case} {method:?} t={t_i}");
+            assert_eq!(old.learn_len, new.learn_len, "case {case} {method:?} t={t_i}");
+            // identical post-state ⇒ identical draw count ⇒ downstream
+            // streams (later sequences in the step) stay aligned
+            assert_eq!(
+                ra.next_u64(),
+                rb.next_u64(),
+                "case {case} {method:?} t={t_i}: RNG stream diverged"
+            );
+        }
+    }
+}
+
+/// Budget gate (acceptance criterion): on the shared bench workload the
+/// controller's achieved expectation is within 2% of the target for every
+/// adaptive scheme, at an attainable target.
+#[test]
+fn budget_controller_hits_target_within_2pct_on_shared_workload() {
+    let lens = bench_workload::lens();
+    let lps: Vec<Vec<f32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| bench_workload::old_lp(i, t))
+        .collect();
+    let rows: Vec<(usize, Option<&[f32]>)> =
+        lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
+    let total: f64 = lens.iter().map(|&t| t as f64).sum();
+
+    // RPC cannot go below Σ(1+t)/2 ≈ 0.5·Σt, so it gets a 0.65 target;
+    // the Bernoulli-family schemes get a 0.4 target.
+    for (method, frac) in [
+        (Method::Urs { p: 0.9 }, 0.4),
+        (Method::Stratified { p: 0.9 }, 0.4),
+        (Method::Poisson { k: 4 }, 0.4),
+        (Method::Saliency { floor: 0.25 }, 0.4),
+        (Method::Rpc { min_cut: 8 }, 0.65),
+    ] {
+        let target = (total * frac).round() as usize;
+        let out = selection::solve_batch(&method, &rows, target);
+        assert!(out.adapted, "{method:?}");
+        let rel = (out.expected - target as f64).abs() / target as f64;
+        assert!(
+            rel <= 0.02,
+            "{method:?}: expected {} vs target {target} (rel err {rel:.4})",
+            out.expected
+        );
+    }
+}
+
+/// End-to-end: `--train.budget_mode batch` through the real `learn_stage`
+/// on the sim runtime — `budget_realized` lands within 2% of
+/// `--train.token_budget`, the stats record the target, and the whole
+/// thing stays bit-identical across shard counts.
+#[test]
+fn budget_mode_batch_flows_through_learn_stage_and_stays_shard_invariant() {
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let seqs = bench_workload::seqs(d.prompt_len, d.max_resp);
+    let total: usize = seqs.iter().map(|s| s.resp_len).sum();
+    let budget = (total as f64 * 0.4).round() as usize;
+
+    for method in [
+        Method::Urs { p: 0.9 },
+        Method::Stratified { p: 0.9 },
+        Method::Poisson { k: 4 },
+        Method::Saliency { floor: 0.25 },
+    ] {
+        let run = |shards: usize| {
+            let mut cfg = RunConfig::default();
+            cfg.method = method;
+            cfg.rl.group_size = bench_workload::GROUP_SIZE;
+            cfg.train.token_budget = budget;
+            cfg.train.budget_mode = BudgetMode::Batch;
+            cfg.train.shards = shards;
+            let mut params = init_params(&rt.manifest);
+            let mut opt = OptState::zeros(&rt.manifest);
+            let mut acc = GradAccum::zeros(rt.manifest.param_count);
+            let mut rng_mask = Rng::new(0xB0D6E7);
+            let s = learn_stage(
+                &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
+            )
+            .unwrap();
+            (s, params.flat)
+        };
+        let (stats, params1) = run(1);
+        assert_eq!(stats.budget_target, budget as f64, "{method:?}");
+        let rel = (stats.budget_realized - budget as f64).abs() / budget as f64;
+        assert!(
+            rel <= 0.02,
+            "{method:?}: budget_realized {} vs target {budget} (rel err {rel:.4})",
+            stats.budget_realized
+        );
+        assert!(stats.sel_var.is_finite() && stats.sel_var >= 0.0);
+        assert!(stats.grad_norm.is_finite());
+        // controller composes with the sharded learner bit-identically
+        let (stats3, params3) = run(3);
+        assert_eq!(params1, params3, "{method:?}: shards=3 diverged under budget mode");
+        assert_eq!(stats.budget_realized.to_bits(), stats3.budget_realized.to_bits());
+        assert_eq!(stats.sel_var.to_bits(), stats3.sel_var.to_bits());
+    }
+}
+
+/// `budget_mode=none` leaves the step bit-identical to the legacy path:
+/// same parameters, and the budget series report "controller off"
+/// (target 0) while still exposing the expected-kept diagnostic.
+#[test]
+fn budget_mode_none_matches_legacy_masking_streams_exactly() {
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let seqs = bench_workload::seqs(d.prompt_len, d.max_resp);
+    let mut cfg = RunConfig::default();
+    cfg.method = Method::Rpc { min_cut: 4 };
+    cfg.rl.group_size = bench_workload::GROUP_SIZE;
+    let mut params = init_params(&rt.manifest);
+    let mut opt = OptState::zeros(&rt.manifest);
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    let mut rng_mask = Rng::new(0x0FF);
+    let s = learn_stage(
+        &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
+    )
+    .unwrap();
+    assert_eq!(s.budget_target, 0.0);
+    assert!(s.budget_realized > 0.0, "expected-kept diagnostic should be live");
+
+    // Replicate the legacy item construction by hand (frozen masking module
+    // above) and verify the packed population is identical.
+    let mut rng_mask = Rng::new(0x0FF);
+    let mut legacy_kept = Vec::new();
+    for seq in &seqs {
+        let m = legacy::sample_ctx(&cfg.method, seq.resp_len, Some(&seq.old_lp), &mut rng_mask);
+        legacy_kept.push((m.kept, m.learn_len));
+    }
+    let mut rng_mask = Rng::new(0x0FF);
+    for (seq, &(kept, ll)) in seqs.iter().zip(&legacy_kept) {
+        let plan = selection::selector_for(&cfg.method).sample(
+            seq.resp_len,
+            Some(&seq.old_lp),
+            &mut rng_mask,
+        );
+        assert_eq!((plan.kept, plan.learn_len), (kept, ll));
+    }
+}
+
+/// Stratified sampling: URS's marginals (same expected kept count) with the
+/// realized kept-count variance collapsed — the variance-reduction claim —
+/// at one RNG draw per sequence instead of T.
+#[test]
+fn stratified_reduces_selection_variance_at_equal_expected_cost() {
+    let (t_i, p, n) = (160usize, 0.35f64, 4000);
+    let mut rng = Rng::new(0x57A7);
+    let stats = |sel: &dyn Selector, rng: &mut Rng| -> (f64, f64) {
+        let mut mean = 0.0f64;
+        let mut m2 = 0.0f64;
+        for _ in 0..n {
+            let kept = sel.sample(t_i, None, rng).kept as f64;
+            mean += kept;
+            m2 += kept * kept;
+        }
+        mean /= n as f64;
+        (mean, m2 / n as f64 - mean * mean)
+    };
+    let (mean_u, var_u) = stats(&Urs { p }, &mut rng);
+    let (mean_s, var_s) = stats(&Stratified { p }, &mut rng);
+    let expect = p * t_i as f64;
+    assert!((mean_u - expect).abs() < 1.0, "URS mean {mean_u}");
+    assert!((mean_s - expect).abs() < 0.5, "stratified mean {mean_s}");
+    // URS kept-count variance is T·p·(1-p) ≈ 36.4; stratified is ≤ 1/4.
+    assert!(var_u > 20.0, "URS variance degenerate: {var_u}");
+    assert!(
+        var_s < 0.05 * var_u,
+        "stratified variance {var_s} not ≪ URS {var_u}"
+    );
+    // the per-step `sel_var` metric sees exactly this collapse
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let seqs = bench_workload::seqs(d.prompt_len, d.max_resp);
+    let run = |method: Method| {
+        let mut cfg = RunConfig::default();
+        cfg.method = method;
+        cfg.rl.group_size = bench_workload::GROUP_SIZE;
+        let mut params = init_params(&rt.manifest);
+        let mut opt = OptState::zeros(&rt.manifest);
+        let mut acc = GradAccum::zeros(rt.manifest.param_count);
+        let mut rng_mask = Rng::new(0x5E1);
+        learn_stage(&rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs)
+            .unwrap()
+    };
+    let s_urs = run(Method::Urs { p: 0.5 });
+    let s_str = run(Method::Stratified { p: 0.5 });
+    assert!(
+        s_str.sel_var < s_urs.sel_var,
+        "sel_var: stratified {} vs urs {}",
+        s_str.sel_var,
+        s_urs.sel_var
+    );
+}
+
+struct PopRow {
+    t_r: usize,
+    tokens: Vec<i32>,
+    old_lp: Vec<f32>,
+    adv: f32,
+    pad_len: usize,
+}
+
+/// Monte-Carlo HT-unbiasedness of the CONTROLLER-REWEIGHTED estimator,
+/// measured through the FULL pack → shard → reduce path: the sim grad's
+/// first parameter is linear in the HT weights, so its expectation over
+/// mask draws has the closed form `Σ_r adv_r / t_r · Σ_t (old_lp_t +
+/// tok_t / 1024)` — independent of the inclusion probabilities, which is
+/// precisely the unbiasedness claim for the adjusted probabilities. Slow:
+/// runs in the CI `cargo test -- --ignored` lane.
+#[test]
+#[ignore = "slow Monte-Carlo lane: cargo test -q -- --ignored"]
+fn budget_adjusted_estimator_is_ht_unbiased_through_pack_shard_reduce_path() {
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let (p, top) = (d.prompt_len, *d.buckets.last().unwrap());
+    let row_grid = rt.manifest.row_grid();
+
+    // Fixed population: 8 responses, varied lengths, positive advantages so
+    // the expectation is safely away from zero.
+    let mut pop_rng = Rng::new(0xB0D6_E7A1);
+    let rows: Vec<PopRow> = (0..8)
+        .map(|r| {
+            let t_r = 2 + pop_rng.below((top - 1) as u64) as usize; // 2..=top
+            let mut tokens = vec![PAD; p + top];
+            for (i, slot) in tokens.iter_mut().enumerate().take(p + t_r) {
+                *slot = 3 + ((r * 13 + i * 7) % 50) as i32;
+            }
+            let old_lp: Vec<f32> =
+                (0..t_r).map(|_| -0.02 - pop_rng.uniform() as f32).collect();
+            PopRow { t_r, tokens, old_lp, adv: 0.5 + 0.25 * r as f32, pad_len: r % 5 }
+        })
+        .collect();
+    let expected: f64 = rows
+        .iter()
+        .map(|row| {
+            let sum: f64 = (0..row.t_r)
+                .map(|t| row.old_lp[t] as f64 + row.tokens[p + t] as f64 / 1024.0)
+                .sum();
+            row.adv as f64 * sum / row.t_r as f64
+        })
+        .sum();
+    assert!(expected.abs() > 0.5, "degenerate population: E = {expected}");
+
+    // Controller-adjusted selectors at a 50% batch budget — every trial
+    // samples with the ADJUSTED inclusion probabilities.
+    let total: usize = rows.iter().map(|r| r.t_r).sum();
+    let budget = total / 2;
+    let ctl_rows: Vec<(usize, Option<&[f32]>)> =
+        rows.iter().map(|r| (r.t_r, Some(r.old_lp.as_slice()))).collect();
+
+    let params = init_params(&rt.manifest);
+    let lits = params.to_literals(&rt.manifest).unwrap();
+    for method in [
+        Method::Urs { p: 0.9 },
+        Method::Poisson { k: 3 },
+        Method::Saliency { floor: 0.3 },
+    ] {
+        let out = selection::solve_batch(&method, &ctl_rows, budget);
+        assert!(out.adapted);
+        let rel = (out.expected - budget as f64).abs() / budget as f64;
+        assert!(rel <= 0.02, "{method:?}: controller off target ({rel:.4})");
+        let sel = out.selector;
+        let trials = 4000u64;
+        let mut est_sum = 0.0f64;
+        for trial in 0..trials {
+            let mut rng =
+                Rng::new(0x7B1A_u64 ^ trial.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let items: Vec<LearnItem> = rows
+                .iter()
+                .map(|row| {
+                    let plan = sel.sample(row.t_r, Some(&row.old_lp), &mut rng);
+                    LearnItem {
+                        tokens: row.tokens.clone(),
+                        pad_len: row.pad_len,
+                        resp_len: row.t_r,
+                        ht_w: plan.ht_w,
+                        learn_len: plan.learn_len,
+                        adv: row.adv,
+                        old_lp: row.old_lp.clone(),
+                    }
+                })
+                .collect();
+            let (items, _dropped) = split_zero_contribution(items);
+            let mbs = pack_budget(&items, &d.buckets, p, &row_grid, 0).unwrap();
+            let plan = plan_shards(&mbs, p, 1 + (trial % 4) as usize);
+            let leaves = execute_shards(&rt, &mbs, &lits, &plan).unwrap();
+            let mut acc = GradAccum::zeros(rt.manifest.param_count);
+            let mut met = GradMetrics::default();
+            tree_reduce_into(&mut acc, &mut met, leaves);
+            est_sum += acc.flat[0] as f64;
+        }
+        let mean = est_sum / trials as f64;
+        let rel = ((mean - expected) / expected).abs();
+        assert!(
+            rel < 0.05,
+            "{method:?}: HT estimate biased through pack/shard/reduce under the \
+             budget controller: mean {mean:.4} vs E {expected:.4} (rel err {rel:.4})"
+        );
+    }
+}

@@ -5,8 +5,9 @@
 //! a fixed-order tree reduction keyed by micro-batch id, so the summation
 //! order — and therefore every float in the step — is a pure function of
 //! the step plan. The proptest here sweeps K ∈ {1,2,3,4} × packer
-//! {fixed,budget} × method {URS,RPC,Saliency} over randomized rollout
-//! groups through the REAL `learn_stage` (on the deterministic sim
+//! {fixed,budget} × method {URS,RPC,Saliency,Stratified,Poisson} over
+//! randomized rollout groups through the REAL `learn_stage` (on the
+//! deterministic sim
 //! runtime) and asserts identical `StepStats` and post-step parameter
 //! hashes. A second test composes sharding with the full `Trainer` and the
 //! pipelined trainer; the Monte-Carlo test (ignored by default, run in the
@@ -39,6 +40,9 @@ fn stats_bits(s: &StepStats) -> Vec<u64> {
         s.kl.to_bits(),
         s.grad_norm.to_bits(),
         s.selected_ratio.to_bits(),
+        s.budget_target.to_bits(),
+        s.budget_realized.to_bits(),
+        s.sel_var.to_bits(),
         s.resp_len_mean.to_bits(),
         s.padding_waste.to_bits(),
         s.mem_gb.to_bits(),
@@ -141,6 +145,9 @@ fn shards_k_is_bit_identical_to_shards_1_for_all_methods_and_packers() {
         Method::Urs { p: 0.4 },
         Method::Rpc { min_cut: 4 },
         Method::Saliency { floor: 0.3 },
+        // the selection-subsystem plug-ins compose with sharding too
+        Method::Stratified { p: 0.4 },
+        Method::Poisson { k: 6 },
     ];
     for case in 0..10u64 {
         let mut rng = Rng::new(0x5348_4152_4421 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
@@ -181,7 +188,16 @@ fn sharded_trainer_composes_with_pipeline_bit_identically() {
         cfg.pipeline.workers = workers;
         cfg
     };
-    let series = ["reward", "entropy", "selected_ratio", "grad_norm", "kl", "padding_waste"];
+    let series = [
+        "reward",
+        "entropy",
+        "selected_ratio",
+        "budget_realized",
+        "sel_var",
+        "grad_norm",
+        "kl",
+        "padding_waste",
+    ];
 
     let mut serial1 =
         Trainer::new(&rt, cfg_for(1, 0), base.clone(), OptState::zeros(&rt.manifest));
