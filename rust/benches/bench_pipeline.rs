@@ -23,7 +23,7 @@ use nat_rl::coordinator::pipeline::PipelineTrainer;
 use nat_rl::coordinator::trainer::Trainer;
 use nat_rl::runtime::{OptState, ParamStore, Runtime};
 use nat_rl::tasks::Tier;
-use nat_rl::util::bench::Bench;
+use nat_rl::util::bench::{write_record, Bench};
 use nat_rl::util::json::{obj, Json};
 
 /// Deterministic busy-work: ~`units` multiply-add kernels.
@@ -92,6 +92,7 @@ fn sim_bench(b: &mut Bench) {
     // BENCH_rollout.json / BENCH_train_step.json (CI keeps
     // `cargo bench --no-run` green; a full run refreshes this file).
     let record = obj(vec![
+        ("bench", Json::Str("pipeline".into())),
         (
             "workload",
             obj(vec![
@@ -106,8 +107,8 @@ fn sim_bench(b: &mut Bench) {
         ("pipelined_w2_steps_per_s", Json::Num(SIM_STEPS as f64 / piped_s)),
         ("w2_speedup", Json::Num(serial_s / piped_s)),
     ]);
-    std::fs::write("BENCH_pipeline.json", record.to_string()).unwrap();
-    println!("wrote BENCH_pipeline.json");
+    let path = write_record("pipeline", &record).unwrap();
+    println!("wrote {path}");
 }
 
 fn tiny_cfg(workers: usize) -> RunConfig {

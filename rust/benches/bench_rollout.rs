@@ -20,7 +20,7 @@ use nat_rl::coordinator::rollout::encode_prompt;
 use nat_rl::coordinator::rollout::scheduler::{sim_workload, RolloutScheduler, SchedStats};
 use nat_rl::runtime::{ParamStore, Runtime};
 use nat_rl::tokenizer::Tokenizer;
-use nat_rl::util::bench::Bench;
+use nat_rl::util::bench::{write_record, Bench};
 use nat_rl::util::json::{obj, Json};
 
 /// One bucketed run over the shared default workload; returns accumulated
@@ -94,6 +94,7 @@ fn sim_bench(b: &mut Bench) {
         &sim_workload::BUCKETS.iter().map(|&b| b as f64).collect::<Vec<_>>(),
     );
     let record = obj(vec![
+        ("bench", Json::Str("rollout".into())),
         (
             "workload",
             obj(vec![
@@ -110,8 +111,8 @@ fn sim_bench(b: &mut Bench) {
         ("bucketed", side(&bucketed, bucketed_wall_s)),
         ("decode_step_saving", Json::Num(saving)),
     ]);
-    std::fs::write("BENCH_rollout.json", record.to_string()).unwrap();
-    println!("wrote BENCH_rollout.json");
+    let path = write_record("rollout", &record).unwrap();
+    println!("wrote {path}");
 }
 
 fn generate_bench(b: &mut Bench) {

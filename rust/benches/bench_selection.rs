@@ -18,9 +18,10 @@
 use nat_rl::config::{BudgetMode, Method, RunConfig};
 use nat_rl::coordinator::selection::{self, bench_workload};
 use nat_rl::coordinator::trainer::{learn_stage, StepStats};
+use nat_rl::obs::Tracer;
 use nat_rl::runtime::sim::{init_params, sim_manifest};
 use nat_rl::runtime::{GradAccum, OptState, Runtime};
-use nat_rl::util::bench::Bench;
+use nat_rl::util::bench::{write_record, Bench};
 use nat_rl::util::json::{obj, Json};
 use nat_rl::util::rng::Rng;
 
@@ -74,8 +75,19 @@ fn step_with(
     let mut opt = OptState::zeros(&rt.manifest);
     let mut acc = GradAccum::zeros(rt.manifest.param_count);
     let mut rng_mask = Rng::new(0xBE9C);
-    learn_stage(rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, seqs)
-        .unwrap()
+    learn_stage(
+        rt,
+        &cfg,
+        &mut params,
+        &mut opt,
+        &mut acc,
+        None,
+        &mut rng_mask,
+        1,
+        seqs,
+        &Tracer::off(),
+    )
+    .unwrap()
 }
 
 /// "Same StepStats shape as full-token GRPO": identical step/sequence
@@ -136,6 +148,9 @@ fn main() {
         assert_shape_matches(&grpo, &s, method.id());
         let rel = (s.budget_realized - budget as f64).abs() / budget as f64;
         worst_rel = worst_rel.max(rel);
+        // The savings ledger gives each scheme its token/FLOP story vs the
+        // full-token GRPO counterfactual — the same numbers `nat trace`
+        // reports from a live run.
         step_records.push(obj(vec![
             ("scheme", Json::Str(method.id().into())),
             ("target", Json::Num(budget as f64)),
@@ -143,10 +158,23 @@ fn main() {
             ("rel_err", Json::Num(rel)),
             ("selected_ratio", Json::Num(s.selected_ratio)),
             ("sel_var", Json::Num(s.sel_var)),
+            (
+                "ledger",
+                obj(vec![
+                    ("gen_tokens", Json::Num(s.ledger.gen_tokens)),
+                    ("sel_tokens_exp", Json::Num(s.ledger.sel_tokens_exp)),
+                    ("backprop_tokens", Json::Num(s.ledger.backprop_tokens)),
+                    ("alloc_tokens", Json::Num(s.ledger.alloc_tokens)),
+                    ("flop_saving", Json::Num(s.ledger.flop_saving())),
+                    ("mem_saving", Json::Num(s.ledger.mem_saving())),
+                    ("ht_ess", Json::Num(s.ledger.ht_ess)),
+                ]),
+            ),
         ]));
     }
 
     let record = obj(vec![
+        ("bench", Json::Str("selection".into())),
         (
             "workload",
             obj(vec![
@@ -160,8 +188,8 @@ fn main() {
         ("steps", Json::Arr(step_records)),
         ("worst_step_rel_err", Json::Num(worst_rel)),
     ]);
-    std::fs::write("BENCH_selection.json", record.to_string()).unwrap();
-    println!("wrote BENCH_selection.json");
+    let path = write_record("selection", &record).unwrap();
+    println!("wrote {path}");
 
     // Acceptance gates, AFTER the JSON record is on disk.
     for r in &solve_records {

@@ -22,11 +22,12 @@ use nat_rl::coordinator::batcher::{
     allocated_tokens, pack, plan_shards, shard_workload, LearnItem,
 };
 use nat_rl::coordinator::trainer::Trainer;
+use nat_rl::obs::Tracer;
 use nat_rl::runtime::shard::{execute_shards, tree_reduce_into};
 use nat_rl::runtime::sim::{init_params, sim_manifest};
 use nat_rl::runtime::{GradAccum, GradMetrics, OptState, ParamStore, Runtime, SimSpec};
 use nat_rl::tasks::Tier;
-use nat_rl::util::bench::Bench;
+use nat_rl::util::bench::{write_record, Bench};
 use nat_rl::util::json::{obj, Json};
 use nat_rl::util::rng::Rng;
 
@@ -49,7 +50,7 @@ fn sim_shard_bench(b: &mut Bench) {
     let lits = params.to_literals(&rt.manifest).unwrap();
     let run_k = |k: usize| -> GradAccum {
         let plan = plan_shards(&mbs, d.prompt_len, k);
-        let leaves = execute_shards(&rt, &mbs, &lits, &plan).unwrap();
+        let leaves = execute_shards(&rt, &mbs, &lits, &plan, &Tracer::off(), 1).unwrap();
         let mut acc = GradAccum::zeros(rt.manifest.param_count);
         let mut met = GradMetrics::default();
         tree_reduce_into(&mut acc, &mut met, leaves);
@@ -87,7 +88,20 @@ fn sim_shard_bench(b: &mut Bench) {
         mbs.len()
     );
 
+    // Stage breakdown at K=4 — the same plan/grad/reduce decomposition the
+    // `shard.grad` / `learn.reduce` trace spans report during training.
+    let plan4 = plan_shards(&mbs, d.prompt_len, 4);
+    let t0 = Instant::now();
+    let leaves = execute_shards(&rt, &mbs, &lits, &plan4, &Tracer::off(), 1).unwrap();
+    let grad_s = t0.elapsed().as_secs_f64();
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    let mut met = GradMetrics::default();
+    let t0 = Instant::now();
+    tree_reduce_into(&mut acc, &mut met, leaves);
+    let reduce_s = t0.elapsed().as_secs_f64();
+
     let record = obj(vec![
+        ("bench", Json::Str("train_step".into())),
         (
             "workload",
             obj(vec![
@@ -100,13 +114,20 @@ fn sim_shard_bench(b: &mut Bench) {
                 ("spin_per_token", Json::Num(SPIN_PER_TOKEN as f64)),
             ]),
         ),
+        (
+            "stages",
+            obj(vec![
+                ("grad_s", Json::Num(grad_s)),
+                ("reduce_s", Json::Num(reduce_s)),
+            ]),
+        ),
         ("k1_wall_s", Json::Num(w1)),
         ("k2_wall_s", Json::Num(w2)),
         ("k4_wall_s", Json::Num(w4)),
         ("k4_speedup", Json::Num(speedup)),
     ]);
-    std::fs::write("BENCH_train_step.json", record.to_string()).unwrap();
-    println!("wrote BENCH_train_step.json");
+    let path = write_record("train_step", &record).unwrap();
+    println!("wrote {path}");
 
     // Wall-clock acceptance gate, AFTER the JSON record is on disk so a
     // failure still leaves the measurements. Only meaningful when the host

@@ -6,6 +6,6 @@
 mod run;
 
 pub use run::{
-    BudgetMode, EvalCfg, Method, Packer, PipelineCfg, PretrainCfg, RlCfg, RolloutCfg,
+    BudgetMode, EvalCfg, Method, ObsCfg, Packer, PipelineCfg, PretrainCfg, RlCfg, RolloutCfg,
     RolloutEngine, RunConfig, TrainCfg,
 };

@@ -286,6 +286,31 @@ impl Default for PipelineCfg {
     }
 }
 
+/// Observability configuration (`--obs.*`) — see `crate::obs`.
+///
+/// Tracing is strictly observational: with both paths empty the trainer
+/// holds a no-op `Tracer` and takes the `None` branch before any clock
+/// read or allocation, so golden traces and param hashes are bit-identical
+/// to a build that never heard of tracing. `ledger` only gates whether the
+/// per-step savings ledger is *exported* as Recorder series — the ledger
+/// itself is always computed (it is deterministic and feeds `StepStats`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ObsCfg {
+    /// NDJSON trace output path; empty = tracing off.
+    pub trace: String,
+    /// Chrome-trace (chrome://tracing / Perfetto) output path; empty = off.
+    pub chrome: String,
+    /// Export the savings ledger as Recorder series (`gen_tokens`,
+    /// `flop_saving`, ...).
+    pub ledger: bool,
+}
+
+impl Default for ObsCfg {
+    fn default() -> Self {
+        ObsCfg { trace: String::new(), chrome: String::new(), ledger: true }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct PretrainCfg {
     pub steps: usize,
@@ -316,6 +341,7 @@ pub struct RunConfig {
     pub pretrain: PretrainCfg,
     pub eval: EvalCfg,
     pub pipeline: PipelineCfg,
+    pub obs: ObsCfg,
 }
 
 impl Default for RunConfig {
@@ -341,6 +367,7 @@ impl Default for RunConfig {
             pretrain: PretrainCfg { steps: 300, corpus_size: 2048, noise: 0.25 },
             eval: EvalCfg { every: 0, tasks_per_tier: 16, k: 16 },
             pipeline: PipelineCfg::default(),
+            obs: ObsCfg::default(),
         }
     }
 }
@@ -439,6 +466,15 @@ impl RunConfig {
         setnum!("eval", "every", cfg.eval.every, usize);
         setnum!("eval", "tasks_per_tier", cfg.eval.tasks_per_tier, usize);
         setnum!("eval", "k", cfg.eval.k, usize);
+        if let Some(v) = get("obs", "trace").and_then(Json::as_str) {
+            cfg.obs.trace = v.into();
+        }
+        if let Some(v) = get("obs", "chrome").and_then(Json::as_str) {
+            cfg.obs.chrome = v.into();
+        }
+        if let Some(b) = get("obs", "ledger").and_then(Json::as_bool) {
+            cfg.obs.ledger = b;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -560,6 +596,15 @@ impl RunConfig {
             "eval.every" => self.eval.every = value.parse()?,
             "eval.tasks_per_tier" => self.eval.tasks_per_tier = value.parse()?,
             "eval.k" => self.eval.k = value.parse()?,
+            "obs.trace" => self.obs.trace = value.into(),
+            "obs.chrome" => self.obs.chrome = value.into(),
+            "obs.ledger" => {
+                self.obs.ledger = match value {
+                    "true" | "1" | "on" => true,
+                    "false" | "0" | "off" => false,
+                    other => bail!("--obs.ledger '{other}' (true|false)"),
+                }
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -1011,6 +1056,39 @@ mod tests {
         assert_eq!(cfg.pipeline.queue_depth, 5);
         assert_eq!(cfg.pipeline.max_staleness, 2);
         assert_eq!(cfg.rl.ckpt_every, 25);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn obs_overrides_and_defaults() {
+        let mut cfg = RunConfig::default();
+        // tracing is off by default; ledger series are on by default
+        assert_eq!(cfg.obs, ObsCfg { trace: String::new(), chrome: String::new(), ledger: true });
+        cfg.set("obs.trace", "out/t.ndjson").unwrap();
+        cfg.set("obs.chrome", "out/t.json").unwrap();
+        cfg.set("obs.ledger", "false").unwrap();
+        assert_eq!(cfg.obs.trace, "out/t.ndjson");
+        assert_eq!(cfg.obs.chrome, "out/t.json");
+        assert!(!cfg.obs.ledger);
+        cfg.set("obs.ledger", "on").unwrap();
+        assert!(cfg.obs.ledger);
+        assert!(cfg.set("obs.ledger", "maybe").is_err());
+    }
+
+    #[test]
+    fn obs_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("o.toml");
+        std::fs::write(
+            &path,
+            "[obs]\ntrace = \"run.ndjson\"\nchrome = \"run.chrome.json\"\nledger = false\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.obs.trace, "run.ndjson");
+        assert_eq!(cfg.obs.chrome, "run.chrome.json");
+        assert!(!cfg.obs.ledger);
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -86,6 +86,28 @@ impl LearnItem {
     }
 }
 
+/// The full-token-GRPO counterfactual of a rollout group: every response at
+/// `learn_len = resp_len`, unit HT weights, unit advantage. The savings
+/// ledger (`obs::ledger`) packs these through the *same* packer config as
+/// the real step to price what the step would have cost without selection —
+/// advantages and weights are irrelevant to that cost, only the shape
+/// routing matters. Zero-length responses are skipped, mirroring the learn
+/// loop's `empty_rows` guard.
+pub fn full_length_items(seqs: &[RolloutSeq]) -> Vec<LearnItem> {
+    seqs.iter()
+        .filter(|s| s.resp_len > 0)
+        .map(|s| LearnItem {
+            tokens: s.tokens.clone(),
+            pad_len: s.pad_len,
+            resp_len: s.resp_len,
+            ht_w: vec![1.0; s.resp_len],
+            learn_len: s.resp_len,
+            adv: 1.0,
+            old_lp: s.old_lp.clone(),
+        })
+        .collect()
+}
+
 /// A packed micro-batch for one (sequence bucket, row bucket) grad artifact.
 #[derive(Clone, Debug)]
 pub struct MicroBatch {
@@ -431,6 +453,28 @@ mod tests {
             adv,
             old_lp: (0..resp_len).map(|t| -(t as f32)).collect(),
         }
+    }
+
+    #[test]
+    fn full_length_items_build_the_grpo_counterfactual() {
+        let seqs = crate::coordinator::selection::bench_workload::seqs(P, 16);
+        let items = full_length_items(&seqs);
+        assert_eq!(items.len(), seqs.len()); // workload has no empty responses
+        for (it, s) in items.iter().zip(&seqs) {
+            assert_eq!(it.learn_len, s.resp_len);
+            assert_eq!(it.ht_w.len(), s.resp_len);
+            assert!(it.ht_w.iter().all(|&w| w == 1.0));
+            assert_eq!(it.adv, 1.0);
+            assert!(!it.is_zero_contribution());
+        }
+        // counterfactual cost dominates any selected-prefix packing
+        let mbs = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+        assert!(allocated_tokens(&mbs, P) >= ideal_tokens(&items, P));
+        // a zero-length response is skipped, matching the learn loop
+        let mut with_empty = seqs;
+        with_empty[0].resp_len = 0;
+        with_empty[0].old_lp.clear();
+        assert_eq!(full_length_items(&with_empty).len(), items.len() - 1);
     }
 
     #[test]

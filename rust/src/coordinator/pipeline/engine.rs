@@ -54,6 +54,10 @@ pub struct GroupMeta {
     pub behaviour_version: u64,
     /// Wall-clock seconds the producer spent on this group.
     pub produce_s: f64,
+    /// Wall-clock seconds the consumer blocked waiting for this group
+    /// (filled in by the consumer loop; 0 when the group was already
+    /// queued or stashed in the reorder buffer).
+    pub wait_s: f64,
 }
 
 impl GroupMeta {
@@ -125,6 +129,7 @@ where
                         step: k,
                         behaviour_version: v,
                         produce_s: t0.elapsed().as_secs_f64(),
+                        wait_s: 0.0,
                     };
                     if chan.send((meta, res)).is_err() || failed {
                         break;
@@ -152,7 +157,8 @@ where
         let mut pending: BTreeMap<u64, (GroupMeta, Result<G>)> = BTreeMap::new();
         let mut expected = start;
         while expected < end {
-            let (meta, group) = loop {
+            let t_wait = Instant::now();
+            let (mut meta, group) = loop {
                 if let Some(item) = pending.remove(&expected) {
                     break item;
                 }
@@ -170,6 +176,7 @@ where
                     }
                 }
             };
+            meta.wait_s = t_wait.elapsed().as_secs_f64();
             debug_assert!(meta.staleness() <= opts.max_staleness);
             let snap = group.and_then(|g| consume(&meta, g))?;
             expected += 1;

@@ -59,6 +59,7 @@ use crate::coordinator::trainer::{
     rollout_stage, RolloutGroup,
 };
 use crate::metrics::Recorder;
+use crate::obs::Tracer;
 use crate::runtime::{GradAccum, OptState, ParamStore, Runtime};
 use crate::tokenizer::Tokenizer;
 
@@ -79,6 +80,10 @@ pub struct PipelineTrainer<'rt> {
     /// Eval-scoped routing state (see `Trainer::eval_sched`): in-training
     /// evaluation must not fold its lengths into the training predictor.
     eval_sched: RolloutScheduler,
+    /// Structured-trace emitter (off by default). `Tracer` is `Sync`, so
+    /// rollout workers share it with the learner thread; producer spans
+    /// land on worker time anyway because spans carry their own clocks.
+    tracer: Tracer,
     step: u64,
 }
 
@@ -99,9 +104,17 @@ impl<'rt> PipelineTrainer<'rt> {
             tuner: make_tuner(rt, &cfg),
             sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
             eval_sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
+            tracer: Tracer::off(),
             cfg,
             step: 0,
         }
+    }
+
+    /// Install a tracer built from `--obs.trace` / `--obs.chrome` (see
+    /// `Tracer::from_cfg`). Purely observational: spans never alter the
+    /// training computation.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     /// Number of optimizer steps completed so far.
@@ -168,6 +181,7 @@ impl<'rt> PipelineTrainer<'rt> {
         let cfg = &self.cfg;
         let tok = &self.tok;
         let sched = &self.sched;
+        let tracer = &self.tracer;
         let eval_sched =
             (cfg.rollout.engine == RolloutEngine::Bucketed).then_some(&self.eval_sched);
         struct LearnerState<'s> {
@@ -195,12 +209,23 @@ impl<'rt> PipelineTrainer<'rt> {
 
         let produce = |step: u64, snap: &ParamStore| -> Result<RolloutGroup> {
             let mut plan = plan_step(cfg, step);
-            rollout_stage(rt, snap, tok, cfg, sched, &mut plan)
+            rollout_stage(rt, snap, tok, cfg, sched, &mut plan, tracer)
         };
         let consume = |meta: &GroupMeta, group: RolloutGroup| -> Result<ParamStore> {
             let mut guard = state.borrow_mut();
             let st = &mut *guard;
             let mut rng_mask = mask_rng(cfg, meta.step);
+            // Queue health as a trace event: how deep the learner's wait ran
+            // and how stale the group's behaviour snapshot was.
+            tracer.event(
+                "pipeline.consume",
+                meta.step + 1,
+                &[
+                    ("staleness", meta.staleness() as f64),
+                    ("wait_s", meta.wait_s),
+                    ("produce_s", meta.produce_s),
+                ],
+            );
             let mut stats = learn_stage(
                 rt,
                 cfg,
@@ -211,17 +236,20 @@ impl<'rt> PipelineTrainer<'rt> {
                 &mut rng_mask,
                 meta.step + 1,
                 &group.seqs,
+                tracer,
             )?;
             // Learner throughput: wall-clock between consecutive applies
             // (rollout ran concurrently, so serial-style "rollout + learn"
             // would double-count overlapped time).
             stats.t_total_s = st.last_apply.elapsed().as_secs_f64();
             st.last_apply = Instant::now();
-            record_step(st.recorder, &stats, group.t_rollout_s);
+            record_step(st.recorder, &stats, group.t_rollout_s, cfg.obs.ledger);
             st.recorder.push("staleness", stats.step, meta.staleness() as f64);
             // Worker-side wall-clock for the whole produce stage (planning +
             // generation); `t_rollout_s` above is the generate call alone.
             st.recorder.push("t_produce_s", stats.step, meta.produce_s);
+            // Learner-side block time waiting on the queue for this group.
+            st.recorder.push("t_wait_s", stats.step, meta.wait_s);
             *st.step += 1;
             let snap = st.params.clone();
             st.pending = Some(stats);

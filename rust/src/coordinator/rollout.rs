@@ -154,6 +154,10 @@ pub fn run_group_rollouts(
 /// engine. Per-slot seeds derive from `(run_seed, step, flat_id)`, so the
 /// returned sequences are a pure function of the plan — independent of the
 /// scheduler's routing, refill order, and worker count.
+///
+/// Also returns the scheduler's [`scheduler::SchedStats`] so the trainer's
+/// `rollout` trace span can report generate calls, decode-token steps,
+/// escalations, and padded rows without a second bookkeeping path.
 pub fn run_group_rollouts_bucketed(
     rt: &Runtime,
     params: &ParamStore,
@@ -164,7 +168,7 @@ pub fn run_group_rollouts_bucketed(
     run_seed: u64,
     step: u64,
     sched: &RolloutScheduler,
-) -> Result<Vec<RolloutSeq>> {
+) -> Result<(Vec<RolloutSeq>, scheduler::SchedStats)> {
     let d = &rt.manifest.dims;
     let encoded = encode_tasks(tok, tasks, d.prompt_len)?;
     let slots: Vec<SlotSpec> = (0..tasks.len() * g)
@@ -175,8 +179,8 @@ pub fn run_group_rollouts_bucketed(
         })
         .collect();
     let backend = RuntimeBackend { rt, params };
-    let (outs, _stats) = sched.run(&backend, &encoded, &slots, temp)?;
-    Ok(finish_slots(outs, tok, tasks, g, d.prompt_len, &encoded))
+    let (outs, stats) = sched.run(&backend, &encoded, &slots, temp)?;
+    Ok((finish_slots(outs, tok, tasks, g, d.prompt_len, &encoded), stats))
 }
 
 #[cfg(test)]

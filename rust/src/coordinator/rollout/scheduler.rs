@@ -159,6 +159,18 @@ pub struct SchedStats {
     pub padded_rows: usize,
 }
 
+impl SchedStats {
+    /// The stats as named span args for the trainer's `rollout` trace span.
+    pub fn trace_args(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("calls", self.calls as f64),
+            ("decode_token_steps", self.decode_token_steps as f64),
+            ("escalations", self.escalations as f64),
+            ("padded_rows", self.padded_rows as f64),
+        ]
+    }
+}
+
 /// Run every slot to completion through bucketed generate calls.
 ///
 /// `routes[i]` is slot i's initial routing hint (any length; snapped to the

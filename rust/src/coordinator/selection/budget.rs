@@ -57,6 +57,18 @@ pub struct BudgetOutcome {
     pub adapted: bool,
 }
 
+impl BudgetOutcome {
+    /// The solve's bookkeeping as span args for the `learn.select` trace
+    /// (target, achieved expectation, and whether anything was solved).
+    pub fn trace_args(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("budget_target", self.target),
+            ("budget_expected", self.expected),
+            ("adapted", if self.adapted { 1.0 } else { 0.0 }),
+        ]
+    }
+}
+
 /// Solve the batch's keep parameter. `rows` carries `(resp_len, behaviour
 /// logprobs)` per sequence — zero-length rows contribute nothing and are
 /// ignored by every solve.
@@ -323,6 +335,19 @@ mod tests {
         let out = solve_batch(&Method::DetTrunc { frac: 0.5 }, &rows, 10);
         assert!(!out.adapted);
         assert_eq!(out.expected, 30.0);
+    }
+
+    #[test]
+    fn trace_args_report_the_solve() {
+        let rows = plain_rows(&[10, 20, 30, 40]);
+        let out = solve_batch(&Method::Urs { p: 0.9 }, &rows, 50);
+        let args = out.trace_args();
+        assert_eq!(args[0], ("budget_target", 50.0));
+        assert_eq!(args[1].0, "budget_expected");
+        assert!((args[1].1 - 50.0).abs() < 0.01);
+        assert_eq!(args[2], ("adapted", 1.0));
+        let out = solve_batch(&Method::Grpo, &rows, 50);
+        assert_eq!(out.trace_args()[2], ("adapted", 0.0));
     }
 
     #[test]

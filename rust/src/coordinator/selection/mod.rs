@@ -162,6 +162,51 @@ pub fn expected_ratio(method: &Method, t_i: usize) -> f64 {
     }
 }
 
+/// Running Horvitz-Thompson weight diagnostics over a step's realized
+/// selection plans — the ledger's `ht_w_max` / `ht_ess` inputs and the
+/// raw material for the ROADMAP's variance-optimal-allocation item.
+///
+/// `ess()` is the standard importance-sampling effective sample size
+/// (Σw)²/Σw²: it equals the kept count when all weights agree (GRPO,
+/// stratified at fixed p) and collapses toward 1 when a few tokens carry
+/// extreme 1/π weights — exactly the degeneracy the budget controller must
+/// not be allowed to hide.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HtMoments {
+    /// Largest realized HT weight (max 1/π over kept tokens).
+    pub w_max: f64,
+    /// Σ w over kept tokens.
+    pub w_sum: f64,
+    /// Σ w² over kept tokens.
+    pub w2_sum: f64,
+    /// Kept-token count observed.
+    pub kept: u64,
+}
+
+impl HtMoments {
+    /// Fold one realized plan's kept-token weights into the moments.
+    pub fn observe(&mut self, plan: &SelectionPlan) {
+        for &w in &plan.ht_w {
+            if w > 0.0 {
+                let w = w as f64;
+                self.w_max = self.w_max.max(w);
+                self.w_sum += w;
+                self.w2_sum += w * w;
+                self.kept += 1;
+            }
+        }
+    }
+
+    /// Effective sample size (Σw)²/Σw²; 0 when nothing was kept.
+    pub fn ess(&self) -> f64 {
+        if self.w2_sum > 0.0 {
+            self.w_sum * self.w_sum / self.w2_sum
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Shared tail bookkeeping for independent-masking schemes (URS, Saliency,
 /// Poisson, Stratified): causal attention only needs the prefix up to the
 /// last *scored* token, floored at 1 so empty draws still produce a valid
@@ -292,6 +337,33 @@ mod tests {
         assert!((plan.expected_kept() - 1.75).abs() < 1e-12);
         assert!((plan.selected_ratio() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(SelectionPlan::empty().expected_kept(), 0.0);
+    }
+
+    #[test]
+    fn ht_moments_track_max_and_ess() {
+        let mut m = HtMoments::default();
+        assert_eq!(m.ess(), 0.0);
+        // uniform weights: ESS == kept count
+        m.observe(&SelectionPlan {
+            probs: vec![0.5; 4],
+            ht_w: vec![2.0, 2.0, 0.0, 2.0],
+            kept: 3,
+            learn_len: 4,
+        });
+        assert_eq!(m.kept, 3);
+        assert_eq!(m.w_max, 2.0);
+        assert!((m.ess() - 3.0).abs() < 1e-12);
+        // one extreme weight drags ESS toward 1 and raises the max
+        m.observe(&SelectionPlan {
+            probs: vec![0.01],
+            ht_w: vec![100.0],
+            kept: 1,
+            learn_len: 1,
+        });
+        assert_eq!(m.w_max, 100.0);
+        assert_eq!(m.kept, 4);
+        let ess = m.ess();
+        assert!(ess > 1.0 && ess < 2.0, "ESS should collapse toward 1, got {ess}");
     }
 
     #[test]

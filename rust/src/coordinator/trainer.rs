@@ -40,16 +40,18 @@ use anyhow::Result;
 
 use crate::config::{BudgetMode, Packer, RolloutEngine, RunConfig};
 use crate::coordinator::batcher::{
-    allocated_tokens, ideal_tokens, micro_shapes, pack, pack_budget, packer_token_budget,
-    plan_shards, split_zero_contribution, LearnItem, MicroBatch,
+    allocated_tokens, full_length_items, ideal_tokens, micro_shapes, pack, pack_budget,
+    packer_token_budget, plan_shards, split_zero_contribution, LearnItem, MicroBatch,
 };
 use crate::coordinator::bucket_tuner::{BucketTuner, TunerState};
-use crate::coordinator::rollout::scheduler::RolloutScheduler;
+use crate::coordinator::rollout::scheduler::{RolloutScheduler, SchedStats};
 use crate::coordinator::rollout::RolloutSeq;
-use crate::coordinator::selection::{self, Selector};
+use crate::coordinator::selection::{self, HtMoments, Selector};
 use crate::coordinator::{advantage, rollout};
 use crate::metrics::Recorder;
 use crate::model::memory;
+use crate::obs::ledger::StepLedger;
+use crate::obs::Tracer;
 use crate::runtime::shard::{execute_shards, tree_reduce_into};
 use crate::runtime::{Checkpoint, GradAccum, GradMetrics, OptState, ParamStore, Runtime, TrainMeta};
 use crate::tasks::{Task, TaskSampler};
@@ -94,6 +96,11 @@ pub struct StepStats {
     pub t_total_s: f64,
     pub micro_batches: usize,
     pub sequences: usize,
+    /// Per-step token/compute savings accounting (`obs::ledger`). Always
+    /// computed — every input is a deterministic function of the step plan —
+    /// so tracing on/off cannot perturb it; `--obs.ledger` only gates
+    /// whether it is exported as Recorder series.
+    pub ledger: StepLedger,
 }
 
 /// Stream tags for [`stream_seed`]; distinct per consumer so forked streams
@@ -161,11 +168,14 @@ pub fn rollout_stage(
     cfg: &RunConfig,
     sched: &RolloutScheduler,
     plan: &mut StepPlan,
+    tracer: &Tracer,
 ) -> Result<RolloutGroup> {
     let t0 = Instant::now();
+    // span step is the 1-based optimizer step, matching `learn.step`
+    let mut sp = tracer.span("rollout", plan.step + 1);
     let bucketed = cfg.rollout.engine == RolloutEngine::Bucketed
         && !rt.manifest.generate_files.is_empty();
-    let seqs = if bucketed {
+    let (seqs, sched_stats) = if bucketed {
         rollout::run_group_rollouts_bucketed(
             rt,
             params,
@@ -178,7 +188,7 @@ pub fn rollout_stage(
             sched,
         )?
     } else {
-        rollout::run_group_rollouts(
+        let seqs = rollout::run_group_rollouts(
             rt,
             params,
             tok,
@@ -186,8 +196,16 @@ pub fn rollout_stage(
             cfg.rl.group_size,
             cfg.rl.temperature,
             &mut plan.rng_rollout,
-        )?
+        )?;
+        // the fixed engine has no scheduler cost accounting
+        (seqs, SchedStats::default())
     };
+    for (k, v) in sched_stats.trace_args() {
+        sp.arg(k, v);
+    }
+    sp.arg("seqs", seqs.len() as f64);
+    sp.arg("gen_tokens", seqs.iter().map(|s| s.resp_len as f64).sum());
+    drop(sp);
     Ok(RolloutGroup { step: plan.step, seqs, t_rollout_s: t0.elapsed().as_secs_f64() })
 }
 
@@ -212,8 +230,10 @@ pub fn learn_stage(
     rng_mask: &mut Rng,
     step1: u64,
     seqs: &[RolloutSeq],
+    tracer: &Tracer,
 ) -> Result<StepStats> {
     let t_learn_start = Instant::now();
+    let mut sp_step = tracer.span("learn.step", step1);
     let d = &rt.manifest.dims;
     let g = cfg.rl.group_size;
     let rewards: Vec<f32> = seqs.iter().map(|s| s.reward).collect();
@@ -224,15 +244,25 @@ pub fn learn_stage(
     // batch controller's adjusted selector, solved once per step from the
     // group's actual response lengths (lengths don't change across ppo
     // epochs, so one solve covers them all).
+    let rows_ctx: Vec<(usize, Option<&[f32]>)> =
+        seqs.iter().map(|s| (s.resp_len, Some(s.old_lp.as_slice()))).collect();
     let budget_on = cfg.train.budget_mode == BudgetMode::Batch;
+    let mut sp_solve = tracer.span("learn.select", step1);
     let (sel, budget_target): (Box<dyn Selector>, f64) = if budget_on {
-        let rows: Vec<(usize, Option<&[f32]>)> =
-            seqs.iter().map(|s| (s.resp_len, Some(s.old_lp.as_slice()))).collect();
-        let out = selection::solve_batch(&cfg.method, &rows, cfg.train.token_budget);
+        let out = selection::solve_batch(&cfg.method, &rows_ctx, cfg.train.token_budget);
+        for (k, v) in out.trace_args() {
+            sp_solve.arg(k, v);
+        }
         (out.selector, out.target)
     } else {
         (selection::selector_for(&cfg.method), 0.0)
     };
+    // Ledger: the closed-form per-epoch expectation Σ_i E[kept_i], through
+    // `expected_sum` — an independent path from the per-plan probability
+    // sums that feed `budget_realized`, which is what `nat trace --check`
+    // compares it against (1% gate, no sampling noise on either side).
+    let sel_tokens_exp = selection::budget::expected_sum(sel.as_ref(), &rows_ctx);
+    drop(sp_solve);
 
     // Budget-packer routing state for this step. The tuned edges are a
     // function of PREVIOUS steps' observations only, so the step stays a
@@ -255,9 +285,13 @@ pub fn learn_stage(
     let mut sel_var_acc = 0.0f64;
     let mut alloc_toks = 0usize;
     let mut ideal_toks = 0usize;
+    let mut backprop_toks = 0usize;
+    let mut ht = HtMoments::default();
+    let mut grad_flops = 0.0f64;
     let mut all_shapes: Vec<(usize, usize)> = Vec::new();
     let mut n_micro = 0usize;
     for _epoch in 0..cfg.rl.ppo_epochs {
+        let mut sp_sel = tracer.span("learn.select", step1);
         let mut items = Vec::with_capacity(seqs.len());
         let mut empty_rows = 0usize;
         for (seq, &adv) in seqs.iter().zip(&advs) {
@@ -275,6 +309,8 @@ pub fn learn_stage(
             sel_var_acc += (plan.kept as f64 - e) * (plan.kept as f64 - e);
             sel_tokens += plan.kept;
             tot_tokens += seq.resp_len;
+            backprop_toks += plan.learn_len;
+            ht.observe(&plan);
             items.push(LearnItem::from_plan(seq, plan, adv));
         }
         // Zero-contribution rows (no kept token / zero advantage) burn a
@@ -293,6 +329,10 @@ pub fn learn_stage(
         } else {
             (items, 0)
         };
+        sp_sel.arg("items", items.len() as f64);
+        sp_sel.arg("dropped", (dropped + empty_rows) as f64);
+        drop(sp_sel);
+        let mut sp_pack = tracer.span("learn.pack", step1);
         if let Some(t) = tuner.as_deref_mut() {
             let lens: Vec<usize> = items.iter().map(|i| i.learn_len).collect();
             t.observe(&lens);
@@ -302,8 +342,12 @@ pub fn learn_stage(
         } else {
             pack(&items, &d.buckets, d.prompt_len, d.batch_train)?
         };
-        alloc_toks += allocated_tokens(&mbs, d.prompt_len);
+        let epoch_alloc = allocated_tokens(&mbs, d.prompt_len);
+        alloc_toks += epoch_alloc;
         ideal_toks += ideal_tokens(&items, d.prompt_len);
+        sp_pack.arg("micro_batches", mbs.len() as f64);
+        sp_pack.arg("alloc_tokens", epoch_alloc as f64);
+        drop(sp_pack);
         acc.reset();
         // Dropped inert and empty rows still count toward the 1/sequences
         // apply scale: they contributed zero gradient but a real
@@ -312,6 +356,7 @@ pub fn learn_stage(
         if !mbs.is_empty() {
             // §Perf opt-2: parameters are immutable within the epoch; build
             // the literals once and share across every shard worker.
+            let sp_grad = tracer.span("learn.grad", step1);
             let param_lits = params.to_literals(&rt.manifest)?;
             // Shard plan → concurrent execute → fixed-order tree reduce.
             // The plan balances allocated token cost across
@@ -319,10 +364,16 @@ pub fn learn_stage(
             // by micro-batch id, so the summed gradient (and with it every
             // downstream stat) is bit-identical for every shard count.
             let plan = plan_shards(&mbs, d.prompt_len, cfg.train.shards);
-            let leaves = execute_shards(rt, &mbs, &param_lits, &plan)?;
+            let leaves = execute_shards(rt, &mbs, &param_lits, &plan, tracer, step1)?;
+            drop(sp_grad);
+            let sp_reduce = tracer.span("learn.reduce", step1);
             tree_reduce_into(acc, &mut metrics, leaves);
+            drop(sp_reduce);
         }
+        let sp_apply = tracer.span("learn.apply", step1);
         grad_norm = rt.apply(params, opt, acc)?;
+        drop(sp_apply);
+        grad_flops += StepLedger::flops_of(d, &mbs);
         all_shapes.extend(micro_shapes(&mbs, d.prompt_len));
         n_micro += mbs.len();
     }
@@ -330,7 +381,46 @@ pub fn learn_stage(
 
     let pc = rt.manifest.param_count;
     let mem_gb = memory::step_mean_bytes(d, pc, &all_shapes) as f64 / 1e9;
-    let peak_mem_gb = memory::step_peak_bytes(d, pc, &all_shapes) as f64 / 1e9;
+    let peak_bytes = memory::step_peak_bytes(d, pc, &all_shapes) as f64;
+
+    // Savings ledger: price the full-token-GRPO counterfactual by re-packing
+    // the SAME rollout group at `learn_len = resp_len` through the same
+    // packer family on the manifest's bucket grid and auto token cap (the
+    // baseline has no selection target to repurpose as a packing cap), so
+    // `flop_saving`/`mem_saving` isolate what token selection bought.
+    // Deterministic — always computed, tracing on or off.
+    let mut sp_ledger = tracer.span("learn.ledger", step1);
+    let cf_items = full_length_items(seqs);
+    let cf_mbs: Vec<MicroBatch> = if budget {
+        pack_budget(&cf_items, &d.buckets, d.prompt_len, &row_grid, 0)?
+    } else {
+        pack(&cf_items, &d.buckets, d.prompt_len, d.batch_train)?
+    };
+    let eps = cfg.rl.ppo_epochs as f64;
+    let budget_realized = exp_kept / eps;
+    let ledger = StepLedger {
+        gen_tokens: seqs.iter().map(|s| s.resp_len as f64).sum(),
+        sel_tokens: sel_tokens as f64 / eps,
+        sel_tokens_exp,
+        backprop_tokens: backprop_toks as f64 / eps,
+        alloc_tokens: alloc_toks as f64 / eps,
+        ideal_tokens: ideal_toks as f64 / eps,
+        grad_flops: grad_flops / eps,
+        grad_flops_full: StepLedger::flops_of(d, &cf_mbs),
+        peak_bytes,
+        peak_bytes_full: memory::step_peak_bytes(d, pc, &micro_shapes(&cf_mbs, d.prompt_len))
+            as f64,
+        ht_w_max: ht.w_max,
+        ht_ess: ht.ess(),
+        budget_realized,
+    };
+    sp_ledger.arg("backprop_frac", ledger.backprop_frac());
+    sp_ledger.arg("flop_saving", ledger.flop_saving());
+    drop(sp_ledger);
+    tracer.event("ledger", step1, &ledger.trace_args());
+    sp_step.arg("micro_batches", n_micro as f64);
+    sp_step.arg("sequences", seqs.len() as f64);
+    drop(sp_step);
 
     Ok(StepStats {
         step: step1,
@@ -345,7 +435,7 @@ pub fn learn_stage(
             0.0
         },
         budget_target,
-        budget_realized: exp_kept / cfg.rl.ppo_epochs as f64,
+        budget_realized,
         sel_var: if seqs.is_empty() {
             0.0
         } else {
@@ -358,16 +448,19 @@ pub fn learn_stage(
             0.0
         },
         mem_gb,
-        peak_mem_gb,
+        peak_mem_gb: peak_bytes / 1e9,
         t_learn_s: t_learn,
         t_total_s: 0.0,
         micro_batches: n_micro,
         sequences: seqs.len(),
+        ledger,
     })
 }
 
-/// Push one step's stats into the shared metric series.
-pub fn record_step(r: &mut Recorder, s: &StepStats, t_rollout_s: f64) {
+/// Push one step's stats into the shared metric series. `ledger` gates the
+/// savings-ledger series (`--obs.ledger`); the core series are unaffected so
+/// existing exports stay schema-stable when it is off.
+pub fn record_step(r: &mut Recorder, s: &StepStats, t_rollout_s: f64, ledger: bool) {
     r.push("reward", s.step, s.reward_mean);
     r.push("entropy", s.step, s.entropy);
     r.push("clip_frac", s.step, s.clip_frac);
@@ -384,6 +477,11 @@ pub fn record_step(r: &mut Recorder, s: &StepStats, t_rollout_s: f64) {
     r.push("t_learn_s", s.step, s.t_learn_s);
     r.push("t_rollout_s", s.step, t_rollout_s);
     r.push("t_total_s", s.step, s.t_total_s);
+    if ledger {
+        for (name, v) in s.ledger.series() {
+            r.push(name, s.step, v);
+        }
+    }
 }
 
 /// Shared post-step bookkeeping: in-training evaluation every
@@ -488,6 +586,10 @@ pub struct Trainer<'rt> {
     /// lengths (different task mix, k samples) must not fold into the
     /// TRAINING predictor's EMA and skew rollout routing cost.
     eval_sched: RolloutScheduler,
+    /// Structured-trace emitter (`--obs.trace`/`--obs.chrome`); off by
+    /// default — the off tracer is a `None` branch taken before any clock
+    /// read, so an untraced run is bit-identical to a no-obs build.
+    tracer: Tracer,
     step: u64,
 }
 
@@ -518,9 +620,16 @@ impl<'rt> Trainer<'rt> {
             tuner: make_tuner(rt, &cfg),
             sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
             eval_sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
+            tracer: Tracer::off(),
             cfg,
             step: 0,
         }
+    }
+
+    /// Install a trace emitter (built by the caller from `cfg.obs`, or
+    /// injected directly in tests). The default is the no-op tracer.
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 
     /// Number of optimizer steps completed so far.
@@ -560,8 +669,15 @@ impl<'rt> Trainer<'rt> {
     pub fn step(&mut self) -> Result<StepStats> {
         let t_start = Instant::now();
         let mut plan = plan_step(&self.cfg, self.step);
-        let group =
-            rollout_stage(self.rt, &self.params, &self.tok, &self.cfg, &self.sched, &mut plan)?;
+        let group = rollout_stage(
+            self.rt,
+            &self.params,
+            &self.tok,
+            &self.cfg,
+            &self.sched,
+            &mut plan,
+            &self.tracer,
+        )?;
         let mut stats = learn_stage(
             self.rt,
             &self.cfg,
@@ -572,10 +688,11 @@ impl<'rt> Trainer<'rt> {
             &mut plan.rng_mask,
             self.step + 1,
             &group.seqs,
+            &self.tracer,
         )?;
         self.step += 1;
         stats.t_total_s = t_start.elapsed().as_secs_f64();
-        record_step(&mut self.recorder, &stats, group.t_rollout_s);
+        record_step(&mut self.recorder, &stats, group.t_rollout_s, self.cfg.obs.ledger);
         Ok(stats)
     }
 

@@ -283,12 +283,15 @@ pub fn table3(sweep: &Sweep) -> String {
 
 // ---------------------------------------------------------------- Figures
 
-const FIG_SERIES: [(&str, &str); 5] = [
+const FIG_SERIES: [(&str, &str); 6] = [
     ("fig2_entropy", "entropy"),
     ("fig3_selected_ratio", "selected_ratio"),
     ("fig4_grad_norm", "grad_norm"),
     ("fig5_time_per_step", "t_learn_s"),
     ("fig6_memory", "mem_gb"),
+    // savings-ledger curve (empty for runs recorded with --obs.ledger off;
+    // the aggregators skip runs missing a series)
+    ("fig7_flop_saving", "flop_saving"),
 ];
 
 pub fn write_figures(sweep: &Sweep) -> Result<String> {
@@ -306,6 +309,11 @@ pub fn write_figures(sweep: &Sweep) -> Result<String> {
                 ("total_time_s", "t_total_s", 1.0),
                 ("mem_gb", "mem_gb", 1.0),
                 ("peak_mem_gb", "peak_mem_gb", 1.0),
+                // savings-ledger headline bars (`--obs.ledger`, on by
+                // default): what selection saved vs full-token GRPO
+                ("flop_saving", "flop_saving", 1.0),
+                ("mem_saving", "mem_saving", 1.0),
+                ("ht_ess", "ht_ess", 0.2),
             ] {
                 let v = tail_mean_then_ci(&recs, series, frac);
                 let _ = writeln!(csv, "{},{},{},{},{}", m.id(), metric, v.mean, v.ci95, v.n);

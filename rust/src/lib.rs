@@ -21,6 +21,7 @@ pub mod coordinator;
 pub mod exp;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod stats;
 pub mod tasks;

@@ -6,8 +6,9 @@
 //!   train     — NAT×GRPO RL from a checkpoint
 //!   eval      — Acc@16 / pass@16 on the benchmark tiers
 //!   repro     — regenerate paper tables/figures (see rust/src/exp)
+//!   trace     — analyze an --obs.trace NDJSON file (stage table + savings)
 //!
-//! Common options: --model tiny|small|base|xl, --config configs/x.toml,
+//! Common options: --model tiny|small|base|xl|sim, --config configs/x.toml,
 //! plus any dotted config key as --key value (e.g. --rl.steps 100).
 
 use std::path::Path;
@@ -21,6 +22,8 @@ use nat_rl::coordinator::rollout::scheduler::RolloutScheduler;
 use nat_rl::coordinator::{evaluator, pretrainer, trainer::Trainer};
 use nat_rl::exp;
 use nat_rl::metrics::Recorder;
+use nat_rl::obs::{analyze, Tracer};
+use nat_rl::runtime::sim::{init_params, sim_manifest};
 use nat_rl::runtime::{Checkpoint, OptState, ParamStore, Runtime, TrainMeta};
 use nat_rl::util::cli::Args;
 
@@ -33,6 +36,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "repro" => exp::cmd_repro(&args),
+        "trace" => analyze::cmd_trace(&args),
         "" | "help" => {
             print_help();
             Ok(())
@@ -51,7 +55,8 @@ fn print_help() {
            train     NAT RL from a checkpoint\n\
                      (--method rpc|urs|det_trunc|grpo|saliency|stratified|poisson)\n\
            eval      Acc@16/pass@16 over MATH-S/AIME24-S/AIME25-S (--ckpt path)\n\
-           repro     regenerate paper tables and figures (--what table2|table3|figures|all)\n\n\
+           repro     regenerate paper tables and figures (--what table2|table3|figures|all)\n\
+           trace     analyze an --obs.trace NDJSON file (--in trace.ndjson [--check])\n\n\
          CONFIG: --config configs/file.toml, then dotted overrides, e.g.\n\
            --model base --method urs --method.p 0.5 --rl.steps 100 --seed 3\n\n\
          PIPELINE / RESUME (train):\n\
@@ -92,7 +97,16 @@ fn print_help() {
                                       grad workers, recombined by a fixed-order\n\
                                       tree reduction keyed by micro-batch id —\n\
                                       bit-identical to K=1 for every K (resume\n\
-                                      across different K is exact)"
+                                      across different K is exact)\n\n\
+         OBSERVABILITY (train):\n\
+           --obs.trace path.ndjson    structured spans (rollout, select, pack,\n\
+                                      shard grad, reduce, apply) + per-step\n\
+                                      savings-ledger events; read with\n\
+                                      `nat trace --in path.ndjson`\n\
+           --obs.chrome path.json     same spans as a Chrome/Perfetto trace\n\
+           --obs.ledger false         drop ledger series from the recorder\n\
+                                      (the ledger itself always computes;\n\
+                                      tracing never changes training output)"
     );
 }
 
@@ -100,9 +114,20 @@ fn config_from_args(args: &Args) -> Result<RunConfig> {
     RunConfig::from_args(args)
 }
 
+/// `--model sim` maps to the in-process simulated runtime (no artifacts on
+/// disk) — the same backend the deterministic test-suite and CI smoke lanes
+/// run against; every other model name loads compiled artifacts.
+fn load_runtime(cfg: &RunConfig) -> Result<Runtime> {
+    if cfg.model == "sim" {
+        Ok(Runtime::sim(sim_manifest()))
+    } else {
+        Runtime::load(&cfg.artifact_dir())
+    }
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::load(&cfg.artifact_dir())?;
+    let rt = load_runtime(&cfg)?;
     let d = &rt.manifest.dims;
     println!("model: {} ({} params)", d.name, rt.manifest.param_count);
     println!(
@@ -150,6 +175,9 @@ fn load_ckpt_or_init(args: &Args, cfg: &RunConfig, rt: &Runtime) -> Result<Param
             if Path::new(&default).exists() {
                 println!("using checkpoint {default}");
                 Ok(Checkpoint::load(Path::new(&default), &rt.manifest)?.0)
+            } else if cfg.model == "sim" {
+                println!("sim model: deterministic synthetic init");
+                Ok(init_params(&rt.manifest))
             } else {
                 println!("no checkpoint found; starting from random init");
                 ParamStore::load_init(&rt.manifest)
@@ -160,7 +188,19 @@ fn load_ckpt_or_init(args: &Args, cfg: &RunConfig, rt: &Runtime) -> Result<Param
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::load(&cfg.artifact_dir())?;
+    let rt = load_runtime(&cfg)?;
+    let tracer = Tracer::from_cfg(&cfg.obs)?;
+    if tracer.enabled() {
+        println!(
+            "tracing: spans -> {}{}",
+            if cfg.obs.trace.is_empty() { "(none)" } else { &cfg.obs.trace },
+            if cfg.obs.chrome.is_empty() {
+                String::new()
+            } else {
+                format!(", chrome -> {}", cfg.obs.chrome)
+            }
+        );
+    }
 
     // Starting state: --resume beats --ckpt beats the default SFT checkpoint.
     let (params, opt, start_step, tuner0): (_, _, u64, Option<TunerState>) =
@@ -263,6 +303,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         Option<TunerState>,
     ) = if cfg.pipeline.workers > 0 {
         let mut tr = PipelineTrainer::new(&rt, cfg, params, opt);
+        tr.set_tracer(tracer.clone());
         tr.set_start_step(start_step);
         tr.restore_tuner(tuner0.as_ref());
         tr.train(remaining, true)?;
@@ -270,12 +311,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         (tr.params, tr.opt, tr.recorder, ts)
     } else {
         let mut tr = Trainer::new(&rt, cfg, params, opt);
+        tr.set_tracer(tracer.clone());
         tr.set_start_step(start_step);
         tr.restore_tuner(tuner0.as_ref());
         tr.train(remaining, true)?;
         let ts = tr.tuner_state();
         (tr.params, tr.opt, tr.recorder, ts)
     };
+    tracer.flush()?;
 
     // A continuation only holds steps start+1.., so it must not clobber the
     // original run's metric files (and an already-complete run writes none).
@@ -307,7 +350,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         )?;
         println!("saved trained checkpoint to {out}");
     }
-    // final eval
+    // final eval (skipped for the synthetic sim runtime: benchmark prompts
+    // are not guaranteed to fit its tiny prompt window, and its rewards are
+    // synthetic anyway — the smoke lanes only need the training path)
+    if model == "sim" {
+        println!("sim model: skipping final benchmark eval");
+        return Ok(());
+    }
     let eval_sched = (engine == RolloutEngine::Bucketed)
         .then(|| RolloutScheduler::new(rt.manifest.dims.max_resp));
     let evals = evaluator::evaluate_all_tiers(
@@ -330,7 +379,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = config_from_args(args)?;
-    let rt = Runtime::load(&cfg.artifact_dir())?;
+    let rt = load_runtime(&cfg)?;
     let params = load_ckpt_or_init(args, &cfg, &rt)?;
     let sched = (cfg.rollout.engine == RolloutEngine::Bucketed)
         .then(|| RolloutScheduler::new(rt.manifest.dims.max_resp));

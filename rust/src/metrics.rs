@@ -141,6 +141,30 @@ mod tests {
     }
 
     #[test]
+    fn tail_mean_edge_cases() {
+        let mut r = Recorder::new();
+        // empty recorder / missing series: no statistic, not a panic
+        assert_eq!(r.tail_mean("x", 0.5), None);
+        assert_eq!(r.mean("x"), None);
+        for i in 0..4 {
+            r.push("x", i, i as f64); // 0 1 2 3
+        }
+        // frac = 0 clamps to a single (last) sample
+        assert_eq!(r.tail_mean("x", 0.0), Some(3.0));
+        // frac > 1 clamps to the whole series
+        assert_eq!(r.tail_mean("x", 2.5), Some(1.5));
+        // negative frac saturates to the single-sample floor
+        assert_eq!(r.tail_mean("x", -1.0), Some(3.0));
+        // a tiny positive frac still averages at least one sample
+        assert_eq!(r.tail_mean("x", 1e-9), Some(3.0));
+        // single-point series: every frac yields that point
+        r.push("y", 0, 7.0);
+        for frac in [0.0, 0.5, 1.0, 10.0] {
+            assert_eq!(r.tail_mean("y", frac), Some(7.0));
+        }
+    }
+
+    #[test]
     fn json_roundtrip() {
         let mut r = Recorder::new();
         r.push("a", 0, 1.5);
@@ -149,6 +173,72 @@ mod tests {
         let j2 = Json::parse(&j.to_string()).unwrap();
         assert_eq!(j, j2);
         assert_eq!(j2.idx(0).unwrap().get("name").unwrap().as_str(), Some("a"));
+    }
+
+    #[test]
+    fn json_file_roundtrip_recovers_series() {
+        let mut r = Recorder::new();
+        r.push("reward", 0, 0.25);
+        r.push("reward", 1, 0.5);
+        r.push("flop_saving", 1, 0.62);
+        let dir = std::env::temp_dir()
+            .join(format!("nat_rl_metrics_json_{}", std::process::id()));
+        let path = dir.join("m.json");
+        r.write_json(&path).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        // series come back sorted by name with aligned steps/values
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("flop_saving"));
+        let rewards = &arr[1];
+        assert_eq!(rewards.get("name").unwrap().as_str(), Some("reward"));
+        let steps: Vec<i64> = rewards
+            .get("steps")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.as_i64().unwrap())
+            .collect();
+        let vals: Vec<f64> = rewards
+            .get("values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(steps, vec![0, 1]);
+        assert_eq!(vals, vec![0.25, 0.5]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn csv_roundtrip_recovers_values() {
+        let mut r = Recorder::new();
+        r.push("a", 0, 1.5);
+        r.push("a", 1, -2.0);
+        r.push("b", 0, 0.125);
+        let dir = std::env::temp_dir()
+            .join(format!("nat_rl_metrics_csv_{}", std::process::id()));
+        let path = dir.join("m.csv");
+        r.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some("step,a,b"));
+        let mut r2 = Recorder::new();
+        for line in lines {
+            let cells: Vec<&str> = line.split(',').collect();
+            let step: u64 = cells[0].parse().unwrap();
+            for (name, cell) in ["a", "b"].into_iter().zip(&cells[1..]) {
+                if !cell.is_empty() {
+                    r2.push(name, step, cell.parse().unwrap());
+                }
+            }
+        }
+        assert_eq!(r2.get("a"), r.get("a"));
+        assert_eq!(r2.get("b"), r.get("b"));
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

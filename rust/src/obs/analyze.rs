@@ -1,0 +1,366 @@
+//! `nat trace` — offline analyzer for NDJSON traces written by
+//! `--obs.trace`.
+//!
+//! Reads one trace file, aggregates spans by stage name, and prints:
+//!
+//! * a per-stage wall-clock/token table (calls, total ms, share of the
+//!   `learn.step` parent for learner stages),
+//! * the stage *coverage* — how much of `learn.step`'s wall-clock the
+//!   child stages account for (the acceptance gate asks ≥ 90%: anything
+//!   less means a hot region is untraced),
+//! * the savings ledger's headline ratios (fraction of tokens selected /
+//!   backpropped, estimated grad-FLOP time saving and peak-memory saving
+//!   vs the full-token-GRPO counterfactual, HT-weight extremes).
+//!
+//! `--check` turns the report into an assertion (used by the CI
+//! trace-smoke lane): stage coverage ≥ 90% of `learn.step`, and the
+//! ledger's expected-selected-token fraction agrees with the trainer's
+//! `budget_realized` within 1% of generated tokens. The two sides of that
+//! comparison are computed by independent code paths (closed-form
+//! `expected_sum` vs per-plan probability sums), so the gate is
+//! deterministic — no sampling noise.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Aggregate of all spans sharing one stage name.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageAgg {
+    pub calls: u64,
+    pub wall_us: f64,
+    /// Sum of the spans' `tokens` arg where present.
+    pub tokens: f64,
+}
+
+/// Sums/extremes of the per-step `"ledger"` events.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LedgerAgg {
+    pub steps: u64,
+    pub gen_tokens: f64,
+    pub sel_tokens: f64,
+    pub sel_tokens_exp: f64,
+    pub backprop_tokens: f64,
+    pub alloc_tokens: f64,
+    pub ideal_tokens: f64,
+    pub grad_flops: f64,
+    pub grad_flops_full: f64,
+    pub peak_bytes: f64,
+    pub peak_bytes_full: f64,
+    pub ht_w_max: f64,
+    pub ht_ess_sum: f64,
+    pub budget_realized: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    /// Stage name → aggregate, iteration-ordered by name.
+    pub stages: BTreeMap<String, StageAgg>,
+    pub ledger: LedgerAgg,
+}
+
+impl Report {
+    fn learn_wall_us(&self) -> f64 {
+        self.stages.get("learn.step").map_or(0.0, |s| s.wall_us)
+    }
+
+    /// Summed wall-clock of the `learn.*` child stages (everything under
+    /// the `learn.step` parent except the parent itself and the per-shard
+    /// `shard.grad` spans, which run concurrently inside `learn.grad` and
+    /// would double-count).
+    fn covered_us(&self) -> f64 {
+        self.stages
+            .iter()
+            .filter(|(name, _)| {
+                name.starts_with("learn.") && name.as_str() != "learn.step"
+            })
+            .map(|(_, s)| s.wall_us)
+            .sum()
+    }
+
+    /// Fraction of `learn.step` wall-clock the child stages cover; `None`
+    /// when the trace has no learner spans.
+    pub fn coverage(&self) -> Option<f64> {
+        let learn = self.learn_wall_us();
+        (learn > 0.0).then(|| self.covered_us() / learn)
+    }
+
+    /// |E[selected] − budget_realized| as a fraction of generated tokens.
+    pub fn budget_gap(&self) -> f64 {
+        if self.ledger.gen_tokens > 0.0 {
+            (self.ledger.sel_tokens_exp - self.ledger.budget_realized).abs()
+                / self.ledger.gen_tokens
+        } else {
+            0.0
+        }
+    }
+
+    /// The CI gate: stage coverage ≥ 90% and budget agreement within 1%.
+    pub fn check(&self) -> Result<()> {
+        if let Some(cov) = self.coverage() {
+            if cov < 0.90 {
+                bail!(
+                    "stage coverage {:.1}% of learn.step is below the 90% gate \
+                     — a hot learner region is untraced",
+                    100.0 * cov
+                );
+            }
+        } else {
+            bail!("trace has no learn.step spans — was --obs.trace enabled?");
+        }
+        if self.ledger.steps == 0 {
+            bail!("trace has no ledger events");
+        }
+        let gap = self.budget_gap();
+        if gap > 0.01 {
+            bail!(
+                "ledger E[selected] vs budget_realized disagree by {:.2}% of \
+                 generated tokens (gate 1%)",
+                100.0 * gap
+            );
+        }
+        Ok(())
+    }
+
+    /// Human-readable per-stage table + savings summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let learn = self.learn_wall_us();
+        let _ = writeln!(
+            s,
+            "{:<16} {:>7} {:>12} {:>8} {:>12}",
+            "stage", "calls", "wall_ms", "%learn", "tokens"
+        );
+        for (name, agg) in &self.stages {
+            let pct = if learn > 0.0 && name.starts_with("learn.") && name != "learn.step" {
+                format!("{:.1}", 100.0 * agg.wall_us / learn)
+            } else {
+                "-".to_string()
+            };
+            let toks =
+                if agg.tokens > 0.0 { format!("{:.0}", agg.tokens) } else { "-".to_string() };
+            let _ = writeln!(
+                s,
+                "{:<16} {:>7} {:>12.3} {:>8} {:>12}",
+                name,
+                agg.calls,
+                agg.wall_us / 1e3,
+                pct,
+                toks
+            );
+        }
+        match self.coverage() {
+            Some(cov) => {
+                let _ = writeln!(
+                    s,
+                    "\nstage coverage: {:.1}% of learn.step wall-clock",
+                    100.0 * cov
+                );
+            }
+            None => {
+                let _ = writeln!(s, "\nstage coverage: no learn.step spans in trace");
+            }
+        }
+        let l = &self.ledger;
+        if l.steps == 0 {
+            let _ = writeln!(s, "no ledger events in trace");
+            return s;
+        }
+        let n = l.steps as f64;
+        let pct = |num: f64, den: f64| if den > 0.0 { 100.0 * num / den } else { 0.0 };
+        let _ = writeln!(s, "\nsavings ledger ({} steps, per-step means):", l.steps);
+        let _ = writeln!(s, "  generated tokens      {:>12.1}", l.gen_tokens / n);
+        let _ = writeln!(
+            s,
+            "  selected tokens (E)   {:>12.1}   {:.1}% of generated (realized {:.1})",
+            l.sel_tokens_exp / n,
+            pct(l.sel_tokens_exp, l.gen_tokens),
+            l.sel_tokens / n
+        );
+        let _ = writeln!(
+            s,
+            "  backprop prefix       {:>12.1}   {:.1}% of generated",
+            l.backprop_tokens / n,
+            pct(l.backprop_tokens, l.gen_tokens)
+        );
+        let _ = writeln!(
+            s,
+            "  allocated (padded)    {:>12.1}   padding waste {:.1}%",
+            l.alloc_tokens / n,
+            pct(l.alloc_tokens - l.ideal_tokens, l.alloc_tokens)
+        );
+        let _ = writeln!(
+            s,
+            "  grad FLOPs            {:>12.3e}   vs full-GRPO {:.3e} → est. time saving {:.1}%",
+            l.grad_flops / n,
+            l.grad_flops_full / n,
+            pct(l.grad_flops_full - l.grad_flops, l.grad_flops_full)
+        );
+        let _ = writeln!(
+            s,
+            "  peak memory           {:>9.4} GB   vs full-GRPO {:.4} GB → est. memory saving {:.1}%",
+            l.peak_bytes / 1e9,
+            l.peak_bytes_full / 1e9,
+            pct(l.peak_bytes_full - l.peak_bytes, l.peak_bytes_full)
+        );
+        let _ = writeln!(
+            s,
+            "  HT weights            max {:.3}, mean ESS {:.1}",
+            l.ht_w_max,
+            l.ht_ess_sum / n
+        );
+        let _ = writeln!(
+            s,
+            "  budget agreement      |E[sel] − realized| = {:.3}% of generated (gate 1%)",
+            100.0 * self.budget_gap()
+        );
+        s
+    }
+}
+
+/// Parse an NDJSON trace into the aggregate report.
+pub fn analyze(text: &str) -> Result<Report> {
+    let mut report = Report::default();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+        let name = ev
+            .get("name")
+            .and_then(Json::as_str)
+            .with_context(|| format!("trace line {}: missing name", i + 1))?;
+        let args = ev.get("args");
+        let arg = |key: &str| -> f64 {
+            args.and_then(|a| a.get(key)).and_then(Json::as_f64).unwrap_or(0.0)
+        };
+        if name == "ledger" {
+            let l = &mut report.ledger;
+            l.steps += 1;
+            l.gen_tokens += arg("gen_tokens");
+            l.sel_tokens += arg("sel_tokens");
+            l.sel_tokens_exp += arg("sel_tokens_exp");
+            l.backprop_tokens += arg("backprop_tokens");
+            l.alloc_tokens += arg("alloc_tokens");
+            l.ideal_tokens += arg("ideal_tokens");
+            l.grad_flops += arg("grad_flops");
+            l.grad_flops_full += arg("grad_flops_full");
+            l.peak_bytes = l.peak_bytes.max(arg("peak_bytes"));
+            l.peak_bytes_full = l.peak_bytes_full.max(arg("peak_bytes_full"));
+            l.ht_w_max = l.ht_w_max.max(arg("ht_w_max"));
+            l.ht_ess_sum += arg("ht_ess");
+            l.budget_realized += arg("budget_realized");
+            continue;
+        }
+        let dur = ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+        let agg = report.stages.entry(name.to_string()).or_default();
+        agg.calls += 1;
+        agg.wall_us += dur;
+        agg.tokens += arg("tokens");
+    }
+    Ok(report)
+}
+
+/// `nat trace --in path.ndjson [--check]`.
+pub fn cmd_trace(args: &Args) -> Result<()> {
+    let path = args
+        .get("in")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .context("nat trace: pass the NDJSON file as --in <path> (or positionally)")?;
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading trace {path}"))?;
+    let report = analyze(&text)?;
+    println!("{}", report.render());
+    if args.has_flag("check") {
+        report.check()?;
+        println!("trace check passed (coverage ≥ 90%, budget agreement ≤ 1%)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(name: &str, dur: f64, args: &[(&str, f64)]) -> String {
+        let inner: Vec<String> =
+            args.iter().map(|(k, v)| format!("\"{k}\":{v}")).collect();
+        format!(
+            "{{\"name\":\"{name}\",\"ph\":\"X\",\"step\":1,\"tid\":0,\"ts\":0,\
+             \"dur\":{dur},\"args\":{{{}}}}}",
+            inner.join(",")
+        )
+    }
+
+    fn sample_trace(covered: f64) -> String {
+        [
+            line("rollout", 500.0, &[("tokens", 128.0)]),
+            line("learn.step", 1000.0, &[]),
+            line("learn.select", 100.0, &[("tokens", 64.0)]),
+            line("learn.grad", covered - 100.0, &[]),
+            line(
+                "ledger",
+                0.0,
+                &[
+                    ("gen_tokens", 128.0),
+                    ("sel_tokens", 66.0),
+                    ("sel_tokens_exp", 64.0),
+                    ("backprop_tokens", 100.0),
+                    ("alloc_tokens", 300.0),
+                    ("ideal_tokens", 250.0),
+                    ("grad_flops", 5e8),
+                    ("grad_flops_full", 1e9),
+                    ("peak_bytes", 8e6),
+                    ("peak_bytes_full", 1e7),
+                    ("ht_w_max", 2.0),
+                    ("ht_ess", 50.0),
+                    ("budget_realized", 64.2),
+                ],
+            ),
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn aggregates_stages_and_ledger() {
+        let r = analyze(&sample_trace(950.0)).unwrap();
+        assert_eq!(r.stages["rollout"].calls, 1);
+        assert_eq!(r.stages["learn.step"].wall_us, 1000.0);
+        assert!((r.coverage().unwrap() - 0.95).abs() < 1e-9);
+        assert_eq!(r.ledger.steps, 1);
+        assert!((r.budget_gap() - 0.2 / 128.0).abs() < 1e-9);
+        let rendered = r.render();
+        assert!(rendered.contains("learn.grad"), "{rendered}");
+        assert!(rendered.contains("savings ledger"), "{rendered}");
+        r.check().unwrap();
+    }
+
+    #[test]
+    fn check_fails_below_coverage_gate() {
+        let r = analyze(&sample_trace(500.0)).unwrap();
+        let err = r.check().unwrap_err().to_string();
+        assert!(err.contains("coverage"), "{err}");
+    }
+
+    #[test]
+    fn check_fails_on_budget_disagreement() {
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.budget_realized = r.ledger.sel_tokens_exp + 0.02 * r.ledger.gen_tokens;
+        let err = r.check().unwrap_err().to_string();
+        assert!(err.contains("budget_realized"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(analyze("{not json").is_err());
+        assert!(analyze("{\"dur\":1}").is_err()); // missing name
+        assert!(analyze("").unwrap().stages.is_empty()); // empty trace is fine
+    }
+}

@@ -1,0 +1,186 @@
+//! Per-step token/compute savings ledger — the paper's efficiency claims
+//! ("as few as 50% of tokens, 29% faster, 18% less memory") as measured
+//! per-step accounting instead of assumptions.
+//!
+//! The ledger is computed by `learn_stage` on every step, tracing on or
+//! off: all of its inputs (token counts, packed shapes, analytic FLOP and
+//! byte models) are deterministic functions of the step plan, so it can
+//! live inside `StepStats` without perturbing any replay/parity guarantee.
+//! Token fields are per-PPO-epoch means so they compare directly with
+//! `budget_target`/`budget_realized` (which are per-epoch by contract).
+//!
+//! Two token counts deserve care:
+//!
+//! * `sel_tokens` is the *realized* kept count (sampling noise included);
+//!   `sel_tokens_exp` is the closed-form expectation Σ_i E[kept_i] under
+//!   the step's actual selector, computed through
+//!   `selection::budget::expected_sum` — an independent path from the
+//!   plan-probability sums behind `budget_realized`, which is what lets
+//!   `nat trace --check` assert the two agree within 1% without sampling
+//!   noise in the gate.
+//! * `backprop_tokens` is Σ learn_len — the forward-prefix positions the
+//!   grad kernels actually compute — which exceeds the kept count for
+//!   scattered-mask schemes (URS keeps 50% of tokens but still pays the
+//!   prefix up to the last kept one). The gap is exactly the headroom the
+//!   ROADMAP's sparse-token-compaction item wants to reclaim.
+//!
+//! The FLOP/memory counterfactual prices full-token GRPO on the *same*
+//! rollout group and packer configuration (`batcher::full_length_items`
+//! re-packed at `learn_len = resp_len`), so `flop_saving`/`mem_saving`
+//! isolate what selection bought, not what the packer or the length
+//! distribution happened to do.
+
+use crate::coordinator::batcher::MicroBatch;
+use crate::model::manifest::ModelDims;
+use crate::model::memory;
+
+/// Deterministic per-step savings accounting (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepLedger {
+    /// Generated response tokens (Σ resp_len over the group).
+    pub gen_tokens: f64,
+    /// Realized selected (kept) tokens, per-epoch mean.
+    pub sel_tokens: f64,
+    /// Closed-form expected selected tokens under the step's selector.
+    pub sel_tokens_exp: f64,
+    /// Forward-prefix tokens the grad kernels compute (Σ learn_len).
+    pub backprop_tokens: f64,
+    /// Allocated (padded) learner tokens, Σ rows × (P + bucket).
+    pub alloc_tokens: f64,
+    /// Ideal learner tokens with zero padding, Σ (P + learn_len).
+    pub ideal_tokens: f64,
+    /// Estimated grad FLOPs of the packed step (analytic model).
+    pub grad_flops: f64,
+    /// Counterfactual grad FLOPs: full-token GRPO on the same group.
+    pub grad_flops_full: f64,
+    /// Peak live learner bytes (static state + largest micro-batch).
+    pub peak_bytes: f64,
+    /// Counterfactual peak bytes under full-token GRPO packing.
+    pub peak_bytes_full: f64,
+    /// Largest realized HT weight (max 1/π over kept tokens).
+    pub ht_w_max: f64,
+    /// Effective sample size (Σw)²/Σw² over kept tokens.
+    pub ht_ess: f64,
+    /// Copy of `StepStats::budget_realized` so a trace event is
+    /// self-contained for `nat trace --check`.
+    pub budget_realized: f64,
+}
+
+impl StepLedger {
+    /// Fraction of generated tokens selected for the update (expected).
+    pub fn sel_frac(&self) -> f64 {
+        frac(self.sel_tokens_exp, self.gen_tokens)
+    }
+
+    /// Fraction of generated tokens the backward pass computes over.
+    pub fn backprop_frac(&self) -> f64 {
+        frac(self.backprop_tokens, self.gen_tokens)
+    }
+
+    /// Estimated grad-FLOP saving vs full-token GRPO (the paper's "29%
+    /// faster" analogue; time ∝ FLOPs in this analytic model).
+    pub fn flop_saving(&self) -> f64 {
+        saving(self.grad_flops, self.grad_flops_full)
+    }
+
+    /// Estimated peak-memory saving vs full-token GRPO ("18% less memory").
+    pub fn mem_saving(&self) -> f64 {
+        saving(self.peak_bytes, self.peak_bytes_full)
+    }
+
+    /// Estimated grad FLOPs of a packed micro-batch set (Σ over batches of
+    /// the fwd+bwd cost at the allocated [rows, P + bucket] shape).
+    pub fn flops_of(d: &ModelDims, mbs: &[MicroBatch]) -> f64 {
+        mbs.iter()
+            .map(|mb| memory::train_flops(d, mb.rows, d.prompt_len + mb.bucket) as f64)
+            .sum()
+    }
+
+    /// All fields as named args — the per-step `"ledger"` trace event and
+    /// the bench stage-breakdown records share this one flattening.
+    pub fn trace_args(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("gen_tokens", self.gen_tokens),
+            ("sel_tokens", self.sel_tokens),
+            ("sel_tokens_exp", self.sel_tokens_exp),
+            ("backprop_tokens", self.backprop_tokens),
+            ("alloc_tokens", self.alloc_tokens),
+            ("ideal_tokens", self.ideal_tokens),
+            ("grad_flops", self.grad_flops),
+            ("grad_flops_full", self.grad_flops_full),
+            ("peak_bytes", self.peak_bytes),
+            ("peak_bytes_full", self.peak_bytes_full),
+            ("ht_w_max", self.ht_w_max),
+            ("ht_ess", self.ht_ess),
+            ("budget_realized", self.budget_realized),
+        ]
+    }
+
+    /// Recorder series (`--obs.ledger`): the raw token/FLOP trajectory plus
+    /// the derived headline ratios.
+    pub fn series(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("gen_tokens", self.gen_tokens),
+            ("sel_tokens_exp", self.sel_tokens_exp),
+            ("backprop_tokens", self.backprop_tokens),
+            ("alloc_tokens", self.alloc_tokens),
+            ("grad_flops", self.grad_flops),
+            ("grad_flops_full", self.grad_flops_full),
+            ("flop_saving", self.flop_saving()),
+            ("mem_saving", self.mem_saving()),
+            ("ht_w_max", self.ht_w_max),
+            ("ht_ess", self.ht_ess),
+        ]
+    }
+}
+
+fn frac(num: f64, den: f64) -> f64 {
+    if den > 0.0 { num / den } else { 0.0 }
+}
+
+fn saving(actual: f64, full: f64) -> f64 {
+    if full > 0.0 { 1.0 - actual / full } else { 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_ratios_guard_zero_denominators() {
+        let l = StepLedger::default();
+        assert_eq!(l.sel_frac(), 0.0);
+        assert_eq!(l.backprop_frac(), 0.0);
+        assert_eq!(l.flop_saving(), 0.0);
+        assert_eq!(l.mem_saving(), 0.0);
+    }
+
+    #[test]
+    fn derived_ratios_match_fields() {
+        let l = StepLedger {
+            gen_tokens: 200.0,
+            sel_tokens: 101.0,
+            sel_tokens_exp: 100.0,
+            backprop_tokens: 150.0,
+            grad_flops: 70.0,
+            grad_flops_full: 100.0,
+            peak_bytes: 82.0,
+            peak_bytes_full: 100.0,
+            ..StepLedger::default()
+        };
+        assert!((l.sel_frac() - 0.5).abs() < 1e-12);
+        assert!((l.backprop_frac() - 0.75).abs() < 1e-12);
+        assert!((l.flop_saving() - 0.3).abs() < 1e-12);
+        assert!((l.mem_saving() - 0.18).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_args_cover_every_field() {
+        let l = StepLedger { gen_tokens: 1.0, ..StepLedger::default() };
+        let args = l.trace_args();
+        assert_eq!(args.len(), 13);
+        assert_eq!(args[0], ("gen_tokens", 1.0));
+        // series is a subset plus the derived ratios
+        assert_eq!(l.series().len(), 10);
+    }
+}

@@ -1,0 +1,374 @@
+//! Structured tracing + savings accounting for the step path.
+//!
+//! Three pieces:
+//!
+//! * [`Tracer`] / [`TraceSink`] — lightweight span/event emission threaded
+//!   through rollout scheduling, selection, packing, shard execution, the
+//!   tree reduction, the optimizer apply, and the pipeline queue. The
+//!   tracer is a cheap-clonable handle around `Option<Arc<..>>`: with
+//!   tracing off (the default) every call is a branch on `None` — no clock
+//!   reads, no allocation, no RNG, no float work — so golden traces and
+//!   param hashes are bit-identical to a build with no obs layer at all
+//!   (asserted in `tests/obs.rs`).
+//! * Sinks: NDJSON (`--obs.trace path`, one JSON object per line, the
+//!   format `nat trace` analyzes) and Chrome trace format (`--obs.chrome
+//!   path`, open in `chrome://tracing` or <https://ui.perfetto.dev>).
+//! * [`ledger::StepLedger`] — the per-step token/FLOP/memory savings
+//!   ledger (generated vs selected vs allocated vs backpropped tokens,
+//!   grad FLOPs vs the full-token-GRPO counterfactual, HT-weight
+//!   extremes). The ledger is *always* computed — it is deterministic and
+//!   cheap — so enabling tracing cannot perturb `StepStats`; `--obs.ledger`
+//!   only gates the recorder series.
+//!
+//! NDJSON line schema (all spans are Chrome-style "X" complete events):
+//! `{"name":"learn.grad","ph":"X","step":3,"tid":1,"ts":123,"dur":456,
+//!   "args":{"rows":4,"tokens":192}}` — `ts`/`dur` in microseconds since
+//! the tracer's epoch; `tid` is 0 for the coordinator thread and
+//! `1 + shard_id` for shard workers. The per-step ledger is emitted as a
+//! zero-duration `"ledger"` event whose args are the ledger fields.
+
+pub mod analyze;
+pub mod ledger;
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::ObsCfg;
+use crate::util::json::Json;
+
+/// One emitted span or instant event (borrowed; sinks serialize it).
+pub struct TraceEvent<'a> {
+    pub name: &'a str,
+    pub step: u64,
+    pub tid: u64,
+    /// Microseconds since the tracer epoch.
+    pub ts_us: u64,
+    /// Span duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    pub args: &'a [(&'a str, f64)],
+}
+
+impl TraceEvent<'_> {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.to_string()));
+        m.insert("ph".to_string(), Json::Str("X".to_string()));
+        m.insert("step".to_string(), Json::Num(self.step as f64));
+        m.insert("tid".to_string(), Json::Num(self.tid as f64));
+        m.insert("ts".to_string(), Json::Num(self.ts_us as f64));
+        m.insert("dur".to_string(), Json::Num(self.dur_us as f64));
+        let args: BTreeMap<String, Json> =
+            self.args.iter().map(|&(k, v)| (k.to_string(), Json::Num(v))).collect();
+        m.insert("args".to_string(), Json::Obj(args));
+        Json::Obj(m)
+    }
+}
+
+/// Receives every event; implementations must be thread-safe (shard
+/// workers emit concurrently with the coordinator).
+pub trait TraceSink: Send + Sync {
+    fn event(&self, ev: &TraceEvent<'_>);
+    fn flush(&self) -> Result<()>;
+}
+
+struct Inner {
+    epoch: Instant,
+    sinks: Vec<Box<dyn TraceSink>>,
+}
+
+/// Cheap-clonable tracing handle. `Tracer::off()` (the `Default`) is the
+/// zero-cost no-op; `Tracer::from_cfg` builds the configured sinks.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<Inner>>);
+
+impl Tracer {
+    /// Tracing disabled: every span/event call is a no-op branch.
+    pub fn off() -> Tracer {
+        Tracer(None)
+    }
+
+    /// Build the sink set from the `--obs.*` config group. Empty paths
+    /// mean "no sink"; with no sinks at all the tracer is `off()`.
+    pub fn from_cfg(obs: &ObsCfg) -> Result<Tracer> {
+        let mut sinks: Vec<Box<dyn TraceSink>> = Vec::new();
+        if !obs.trace.is_empty() {
+            sinks.push(Box::new(NdjsonSink::create(Path::new(&obs.trace))?));
+        }
+        if !obs.chrome.is_empty() {
+            sinks.push(Box::new(ChromeSink::create(Path::new(&obs.chrome))?));
+        }
+        if sinks.is_empty() {
+            return Ok(Tracer::off());
+        }
+        Ok(Tracer(Some(Arc::new(Inner { epoch: Instant::now(), sinks }))))
+    }
+
+    /// A tracer over an arbitrary sink (tests, custom exporters).
+    pub fn with_sink(sink: Box<dyn TraceSink>) -> Tracer {
+        Tracer(Some(Arc::new(Inner { epoch: Instant::now(), sinks: vec![sink] })))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Zero-duration instant event (used for the per-step ledger).
+    pub fn event(&self, name: &str, step: u64, args: &[(&str, f64)]) {
+        if let Some(inner) = &self.0 {
+            let ev = TraceEvent {
+                name,
+                step,
+                tid: 0,
+                ts_us: inner.epoch.elapsed().as_micros() as u64,
+                dur_us: 0,
+                args,
+            };
+            for s in &inner.sinks {
+                s.event(&ev);
+            }
+        }
+    }
+
+    /// RAII span guard: the duration is measured and emitted when the
+    /// guard drops. Prefer the [`span!`](crate::span) macro for args.
+    pub fn span(&self, name: &'static str, step: u64) -> Span<'_> {
+        let start = self
+            .0
+            .as_ref()
+            .map(|i| (i.epoch.elapsed().as_micros() as u64, Instant::now()));
+        Span { tracer: self, name, step, tid: 0, start, args: Vec::new() }
+    }
+
+    pub fn flush(&self) -> Result<()> {
+        if let Some(inner) = &self.0 {
+            for s in &inner.sinks {
+                s.flush()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// RAII span guard returned by [`Tracer::span`]; emits on drop.
+pub struct Span<'a> {
+    tracer: &'a Tracer,
+    name: &'static str,
+    step: u64,
+    tid: u64,
+    start: Option<(u64, Instant)>,
+    args: Vec<(&'static str, f64)>,
+}
+
+impl Span<'_> {
+    /// Attach a numeric argument (no-op when tracing is off).
+    pub fn arg(&mut self, key: &'static str, value: f64) {
+        if self.start.is_some() {
+            self.args.push((key, value));
+        }
+    }
+
+    /// Chrome-trace lane id (shard workers use `1 + shard_id`).
+    pub fn set_tid(&mut self, tid: u64) {
+        self.tid = tid;
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let (Some((ts_us, t0)), Some(inner)) = (self.start.take(), self.tracer.0.as_deref()) {
+            let ev = TraceEvent {
+                name: self.name,
+                step: self.step,
+                tid: self.tid,
+                ts_us,
+                dur_us: t0.elapsed().as_micros() as u64,
+                args: &self.args,
+            };
+            for s in &inner.sinks {
+                s.event(&ev);
+            }
+        }
+    }
+}
+
+/// `span!(tracer, step, "learn.grad", {rows: r, tokens: t})` — an RAII
+/// span guard with named numeric args (each value cast `as f64`).
+#[macro_export]
+macro_rules! span {
+    ($tracer:expr, $step:expr, $name:expr) => {
+        $tracer.span($name, $step as u64)
+    };
+    ($tracer:expr, $step:expr, $name:expr, { $($k:ident : $v:expr),* $(,)? }) => {{
+        #[allow(unused_mut)]
+        let mut sp = $tracer.span($name, $step as u64);
+        $(sp.arg(stringify!($k), $v as f64);)*
+        sp
+    }};
+}
+
+// ------------------------------------------------------------------ sinks
+
+/// One JSON object per line, append-only; the format `nat trace` reads.
+pub struct NdjsonSink {
+    w: Mutex<std::io::BufWriter<std::fs::File>>,
+}
+
+impl NdjsonSink {
+    pub fn create(path: &Path) -> Result<NdjsonSink> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?;
+        Ok(NdjsonSink { w: Mutex::new(std::io::BufWriter::new(f)) })
+    }
+}
+
+impl TraceSink for NdjsonSink {
+    fn event(&self, ev: &TraceEvent<'_>) {
+        let line = ev.to_json().to_string();
+        let mut w = self.w.lock().expect("trace sink poisoned");
+        // Emission is best-effort: a full disk must not kill training.
+        let _ = writeln!(w, "{line}");
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.w.lock().expect("trace sink poisoned").flush()?;
+        Ok(())
+    }
+}
+
+/// Chrome trace format (catapult JSON object form): buffered in memory,
+/// written on flush. Open in `chrome://tracing` or ui.perfetto.dev.
+pub struct ChromeSink {
+    path: std::path::PathBuf,
+    events: Mutex<Vec<Json>>,
+}
+
+impl ChromeSink {
+    pub fn create(path: &Path) -> Result<ChromeSink> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(ChromeSink { path: path.to_path_buf(), events: Mutex::new(Vec::new()) })
+    }
+}
+
+impl TraceSink for ChromeSink {
+    fn event(&self, ev: &TraceEvent<'_>) {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(ev.name.to_string()));
+        m.insert("ph".to_string(), Json::Str("X".to_string()));
+        m.insert("pid".to_string(), Json::Num(0.0));
+        m.insert("tid".to_string(), Json::Num(ev.tid as f64));
+        m.insert("ts".to_string(), Json::Num(ev.ts_us as f64));
+        m.insert("dur".to_string(), Json::Num(ev.dur_us.max(1) as f64));
+        let mut args: BTreeMap<String, Json> =
+            ev.args.iter().map(|&(k, v)| (k.to_string(), Json::Num(v))).collect();
+        args.insert("step".to_string(), Json::Num(ev.step as f64));
+        m.insert("args".to_string(), Json::Obj(args));
+        self.events.lock().expect("trace sink poisoned").push(Json::Obj(m));
+    }
+
+    fn flush(&self) -> Result<()> {
+        let events = self.events.lock().expect("trace sink poisoned").clone();
+        let mut m = BTreeMap::new();
+        m.insert("traceEvents".to_string(), Json::Arr(events));
+        std::fs::write(&self.path, Json::Obj(m).to_string())
+            .with_context(|| format!("writing chrome trace {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Collects rendered NDJSON lines in memory.
+    struct MemSink(Mutex<Vec<String>>);
+
+    impl TraceSink for MemSink {
+        fn event(&self, ev: &TraceEvent<'_>) {
+            self.0.lock().unwrap().push(ev.to_json().to_string());
+        }
+        fn flush(&self) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn off_tracer_is_inert() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        {
+            let mut s = span!(t, 3, "learn.grad", { rows: 4, tokens: 128 });
+            s.arg("extra", 1.0);
+        }
+        t.event("ledger", 3, &[("gen_tokens", 10.0)]);
+        t.flush().unwrap();
+    }
+
+    #[test]
+    fn span_emits_on_drop_with_args() {
+        let lines = Arc::new(MemSink(Mutex::new(Vec::new())));
+        struct Shared(Arc<MemSink>);
+        impl TraceSink for Shared {
+            fn event(&self, ev: &TraceEvent<'_>) {
+                self.0.event(ev)
+            }
+            fn flush(&self) -> Result<()> {
+                self.0.flush()
+            }
+        }
+        let t = Tracer::with_sink(Box::new(Shared(lines.clone())));
+        {
+            let _sp = span!(t, 7, "learn.pack", { items: 5 });
+        }
+        t.event("ledger", 7, &[("gen_tokens", 64.0)]);
+        let got = lines.0.lock().unwrap().clone();
+        assert_eq!(got.len(), 2);
+        let sp = Json::parse(&got[0]).unwrap();
+        assert_eq!(sp.get("name").unwrap().as_str(), Some("learn.pack"));
+        assert_eq!(sp.get("step").unwrap().as_i64(), Some(7));
+        assert_eq!(sp.get("args").unwrap().get("items").unwrap().as_i64(), Some(5));
+        let ev = Json::parse(&got[1]).unwrap();
+        assert_eq!(ev.get("dur").unwrap().as_i64(), Some(0));
+        assert_eq!(ev.get("args").unwrap().get("gen_tokens").unwrap().as_i64(), Some(64));
+    }
+
+    #[test]
+    fn ndjson_and_chrome_sinks_write_parseable_output() {
+        let dir = std::env::temp_dir().join(format!("nat_obs_test_{}", std::process::id()));
+        let nd = dir.join("t.ndjson");
+        let ch = dir.join("t.chrome.json");
+        let cfg = ObsCfg {
+            trace: nd.to_str().unwrap().to_string(),
+            chrome: ch.to_str().unwrap().to_string(),
+            ledger: true,
+        };
+        let t = Tracer::from_cfg(&cfg).unwrap();
+        assert!(t.enabled());
+        {
+            let _sp = span!(t, 0, "rollout", { seqs: 8 });
+        }
+        t.flush().unwrap();
+        let text = std::fs::read_to_string(&nd).unwrap();
+        for line in text.lines() {
+            Json::parse(line).unwrap();
+        }
+        let chrome = Json::parse(&std::fs::read_to_string(&ch).unwrap()).unwrap();
+        assert!(!chrome.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_obs_cfg_is_off() {
+        let t = Tracer::from_cfg(&ObsCfg::default()).unwrap();
+        assert!(!t.enabled());
+    }
+}

@@ -33,6 +33,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::batcher::MicroBatch;
+use crate::obs::Tracer;
 
 use super::{GradAccum, GradMetrics, Runtime};
 
@@ -59,30 +60,46 @@ impl Runtime {
 /// computes (every id exactly once). Returns the leaves in id order.
 /// A single active shard runs inline on the caller's thread — the
 /// `shards = 1` configuration has no thread overhead at all.
+///
+/// Tracing: each micro-batch emits a `shard.grad` span on thread id
+/// `1 + shard` (tid 0 is the coordinator) carrying its id, bucket, and row
+/// count — the Perfetto lane view of shard balance. Spans are observational
+/// only: the off tracer skips every clock read, and the leaf values never
+/// depend on tracing.
 pub fn execute_shards(
     rt: &Runtime,
     mbs: &[MicroBatch],
     param_lits: &[xla::Literal],
     plan: &[Vec<usize>],
+    tracer: &Tracer,
+    step: u64,
 ) -> Result<Vec<GradLeaf>> {
+    let traced_leaf = |i: usize, shard: usize| -> Result<GradLeaf> {
+        let mut sp = tracer.span("shard.grad", step);
+        sp.set_tid(1 + shard as u64);
+        sp.arg("mb", i as f64);
+        sp.arg("bucket", mbs[i].bucket as f64);
+        sp.arg("rows", mbs[i].rows as f64);
+        rt.grad_leaf(&mbs[i], param_lits)
+    };
     let mut slots: Vec<Option<GradLeaf>> = Vec::new();
     slots.resize_with(mbs.len(), || None);
     let active: Vec<&Vec<usize>> = plan.iter().filter(|ids| !ids.is_empty()).collect();
     if active.len() <= 1 {
         for ids in active {
             for &i in ids {
-                slots[i] = Some(rt.grad_leaf(&mbs[i], param_lits)?);
+                slots[i] = Some(traced_leaf(i, 0)?);
             }
         }
     } else {
         let results: Vec<Result<Vec<(usize, GradLeaf)>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = active
                 .iter()
-                .map(|ids| {
+                .enumerate()
+                .map(|(shard, ids)| {
+                    let traced_leaf = &traced_leaf;
                     scope.spawn(move || -> Result<Vec<(usize, GradLeaf)>> {
-                        ids.iter()
-                            .map(|&i| Ok((i, rt.grad_leaf(&mbs[i], param_lits)?)))
-                            .collect()
+                        ids.iter().map(|&i| Ok((i, traced_leaf(i, shard)?))).collect()
                     })
                 })
                 .collect();

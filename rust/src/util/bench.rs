@@ -124,6 +124,32 @@ impl Bench {
     }
 }
 
+/// Write one `BENCH_<name>.json` record at the repository root (the parent
+/// of the `rust/` crate), so every bench target lands its artifact in the
+/// same place no matter which directory cargo was invoked from.
+///
+/// Record schema (all benches share it):
+/// ```json
+/// {
+///   "bench": "<name>",              // target name, matches BENCH_<name>.json
+///   "cases": [ { ... } ],           // per-case results (bench-specific keys)
+///   ...                             // optional bench-specific sections, e.g.
+///                                   // "ledger": {...} stage/savings breakdown
+/// }
+/// ```
+/// The top-level object always carries "bench"; callers add their sections
+/// before handing the record over. Returns the path written.
+pub fn write_record(name: &str, record: &crate::util::json::Json) -> std::io::Result<String> {
+    // CARGO_MANIFEST_DIR = <repo>/rust at compile time for this crate.
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let path = root.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, record.to_string())?;
+    Ok(path.display().to_string())
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns < 1_000.0 {
         format!("{ns:.0} ns")

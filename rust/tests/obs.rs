@@ -1,0 +1,197 @@
+//! Observability contract tests (issue satellite).
+//!
+//! Two promises the `obs` subsystem makes:
+//!
+//! 1. **Zero observer effect** — running the exact same 3-step sim training
+//!    run with `--obs.trace`/`--obs.chrome` on vs off yields bit-identical
+//!    `StepStats` (including the savings ledger) and bit-identical
+//!    post-step parameter hashes. Tracing is allowed to cost wall-clock,
+//!    never semantics.
+//! 2. **The trace is honest** — the NDJSON the run produced, fed through
+//!    the same `nat trace` analyzer CI uses, passes the gates: learner
+//!    stage coverage ≥ 90% of `learn.step`, and the ledger's closed-form
+//!    E[selected tokens] agrees with the realized `budget_realized` within
+//!    1% of generated tokens.
+
+use std::path::PathBuf;
+
+use nat_rl::config::{BudgetMode, Method, ObsCfg, RunConfig};
+use nat_rl::coordinator::trainer::{StepStats, Trainer};
+use nat_rl::obs::{analyze, Tracer};
+use nat_rl::runtime::sim::{init_params, sim_manifest};
+use nat_rl::runtime::{OptState, Runtime};
+use nat_rl::tasks::Tier;
+use nat_rl::util::json::Json;
+
+mod common;
+use common::fnv1a;
+
+/// The CI trace-smoke configuration: URS under a batch token budget on the
+/// deterministic sim runtime — the regime where the ledger's budget gate
+/// is a real statement (GRPO would make it vacuous).
+fn smoke_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "sim".into();
+    cfg.seed = 0;
+    cfg.method = Method::Urs { p: 0.9 };
+    cfg.rl.tiers = vec![Tier::Easy];
+    cfg.rl.prompts_per_step = 2;
+    cfg.rl.group_size = 4;
+    cfg.train.token_budget = 64;
+    cfg.train.budget_mode = BudgetMode::Batch;
+    cfg
+}
+
+/// Every non-timing `StepStats` field in shortest-roundtrip decimal, plus
+/// the full ledger (`StepLedger` is all-f64 and deterministic, so its Debug
+/// form is canonical). Timing fields are excluded on purpose — they differ
+/// run to run regardless of tracing.
+fn line(s: &StepStats) -> String {
+    format!(
+        "step {} reward {} entropy {} clip {} kl {} gnorm {} sel {} btgt {} breal {} \
+         svar {} rlen {} waste {} mem {} peak {} mb {} seqs {} ledger {:?}",
+        s.step,
+        s.reward_mean,
+        s.entropy,
+        s.clip_frac,
+        s.kl,
+        s.grad_norm,
+        s.selected_ratio,
+        s.budget_target,
+        s.budget_realized,
+        s.sel_var,
+        s.resp_len_mean,
+        s.padding_waste,
+        s.mem_gb,
+        s.peak_mem_gb,
+        s.micro_batches,
+        s.sequences,
+        s.ledger,
+    )
+}
+
+/// Run 3 steps from the fixed seed, with the given tracer (or the no-op
+/// default), returning the canonical step lines and the final param hash.
+fn run3(tracer: Option<Tracer>) -> (Vec<String>, u64) {
+    let rt = Runtime::sim(sim_manifest());
+    let mut tr = Trainer::new(
+        &rt,
+        smoke_cfg(),
+        init_params(&rt.manifest),
+        OptState::zeros(&rt.manifest),
+    );
+    if let Some(t) = tracer {
+        tr.set_tracer(t);
+    }
+    let mut lines = Vec::new();
+    for _ in 0..3 {
+        let s = tr.step().unwrap();
+        lines.push(line(&s));
+    }
+    (lines, fnv1a(&tr.params.flat))
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nat_rl_obs_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn tracing_on_vs_off_is_bit_identical_and_trace_passes_gates() {
+    let dir = tmp_dir("smoke");
+    let nd = dir.join("trace.ndjson");
+    let ch = dir.join("trace.chrome.json");
+    let tracer = Tracer::from_cfg(&ObsCfg {
+        trace: nd.display().to_string(),
+        chrome: ch.display().to_string(),
+        ledger: true,
+    })
+    .unwrap();
+    assert!(tracer.enabled());
+
+    let (on_lines, on_hash) = run3(Some(tracer.clone()));
+    tracer.flush().unwrap();
+    let (off_lines, off_hash) = run3(None);
+
+    // 1) zero observer effect: StepStats (incl. ledger) and parameters are
+    //    bit-identical with tracing on vs off.
+    assert_eq!(on_lines, off_lines, "tracing perturbed StepStats");
+    assert_eq!(
+        format!("{on_hash:016x}"),
+        format!("{off_hash:016x}"),
+        "tracing perturbed the trained parameters"
+    );
+
+    // 2) the produced NDJSON passes the analyzer's CI gates.
+    let text = std::fs::read_to_string(&nd).unwrap();
+    let report = analyze::analyze(&text).unwrap();
+    let cov = report.coverage().expect("trace has learn.step spans");
+    assert!(cov >= 0.90, "stage coverage {:.1}% below the 90% gate", 100.0 * cov);
+    assert_eq!(report.ledger.steps, 3);
+    assert!(
+        report.budget_gap() <= 0.01,
+        "E[selected] vs budget_realized gap {:.4} above 1%",
+        report.budget_gap()
+    );
+    if let Err(e) = report.check() {
+        panic!("analyzer check failed: {e}");
+    }
+    // the rendered table names every pipeline stage
+    let table = report.render();
+    for stage in ["rollout", "learn.select", "learn.pack", "learn.grad", "learn.apply"] {
+        assert!(table.contains(stage), "report table missing stage {stage}:\n{table}");
+    }
+
+    // 3) the Chrome export is well-formed and non-empty.
+    let chrome = Json::parse(&std::fs::read_to_string(&ch).unwrap()).unwrap();
+    let events = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!events.is_empty(), "chrome trace has no events");
+    assert!(events
+        .iter()
+        .any(|e| e.get("name").and_then(Json::as_str) == Some("learn.step")));
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn ledger_tracks_the_budget_per_step() {
+    // Independent of the analyzer: straight from StepStats, the ledger's
+    // closed-form expectation must agree with the realized budget within 1%
+    // of generated tokens on every step, and the savings story must be
+    // internally consistent (selected ⊆ backpropped ⊆ allocated tokens,
+    // both sides of the FLOP/memory counterfactual priced and positive).
+    let rt = Runtime::sim(sim_manifest());
+    let mut tr = Trainer::new(
+        &rt,
+        smoke_cfg(),
+        init_params(&rt.manifest),
+        OptState::zeros(&rt.manifest),
+    );
+    for _ in 0..3 {
+        let s = tr.step().unwrap();
+        let l = &s.ledger;
+        assert!(l.gen_tokens > 0.0);
+        let gap = (l.sel_tokens_exp - s.budget_realized).abs() / l.gen_tokens;
+        assert!(gap <= 0.01, "step {}: budget gap {gap:.4} above 1%", s.step);
+        // the controller respected the cap: expected selection never
+        // exceeds min(budget, generated) — when the rollout generated
+        // fewer tokens than the budget, the solve saturates at p = 1
+        let cap = l.gen_tokens.min(64.0);
+        assert!(
+            l.sel_tokens_exp <= cap * 1.02 + 1e-9,
+            "step {}: E[selected] {} exceeds cap {cap}",
+            s.step,
+            l.sel_tokens_exp
+        );
+        assert!(l.sel_tokens <= l.backprop_tokens + 1e-9, "kept tokens exceed backprop");
+        assert!(l.backprop_tokens <= l.alloc_tokens + 1e-9, "backprop exceeds allocation");
+        // both sides of the counterfactual are priced (savings may be small
+        // for URS — spread-out kept positions keep full-length prefixes —
+        // but the comparison must exist and be finite)
+        assert!(l.grad_flops > 0.0 && l.grad_flops_full > 0.0);
+        assert!(l.peak_bytes > 0.0 && l.peak_bytes_full > 0.0);
+        assert!(l.flop_saving().is_finite() && l.flop_saving() <= 1.0);
+        assert!(l.mem_saving().is_finite() && l.mem_saving() <= 1.0);
+        assert!(l.ht_w_max >= 1.0, "HT weights are 1/π ≥ 1 for kept tokens");
+        assert!(l.ht_ess > 0.0);
+    }
+}

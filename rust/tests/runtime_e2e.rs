@@ -555,7 +555,7 @@ fn bucketed_rollouts_are_scheduling_invariant_on_real_artifacts() {
     let tasks = sampler.batch(2);
 
     let run = |sched: &RolloutScheduler| {
-        run_group_rollouts_bucketed(&rt, &params, &tok, &tasks, g, 1.0, 7, 3, sched).unwrap()
+        run_group_rollouts_bucketed(&rt, &params, &tok, &tasks, g, 1.0, 7, 3, sched).unwrap().0
     };
     let cold = RolloutScheduler::new(d.max_resp);
     let a = run(&cold);

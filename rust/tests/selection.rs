@@ -19,6 +19,7 @@
 use nat_rl::config::{BudgetMode, Method, RunConfig};
 use nat_rl::coordinator::batcher::{pack_budget, plan_shards, split_zero_contribution, LearnItem};
 use nat_rl::coordinator::masking;
+use nat_rl::obs::Tracer;
 use nat_rl::coordinator::selection::{self, bench_workload, Selector, Stratified, Urs};
 use nat_rl::coordinator::trainer::learn_stage;
 use nat_rl::runtime::shard::{execute_shards, tree_reduce_into};
@@ -239,6 +240,7 @@ fn budget_mode_batch_flows_through_learn_stage_and_stays_shard_invariant() {
             let mut rng_mask = Rng::new(0xB0D6E7);
             let s = learn_stage(
                 &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
+                &Tracer::off(),
             )
             .unwrap();
             (s, params.flat)
@@ -278,6 +280,7 @@ fn budget_mode_none_matches_legacy_masking_streams_exactly() {
     let mut rng_mask = Rng::new(0x0FF);
     let s = learn_stage(
         &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
+                &Tracer::off(),
     )
     .unwrap();
     assert_eq!(s.budget_target, 0.0);
@@ -343,7 +346,7 @@ fn stratified_reduces_selection_variance_at_equal_expected_cost() {
         let mut opt = OptState::zeros(&rt.manifest);
         let mut acc = GradAccum::zeros(rt.manifest.param_count);
         let mut rng_mask = Rng::new(0x5E1);
-        learn_stage(&rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs)
+        learn_stage(&rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs, &Tracer::off())
             .unwrap()
     };
     let s_urs = run(Method::Urs { p: 0.5 });
@@ -447,7 +450,7 @@ fn budget_adjusted_estimator_is_ht_unbiased_through_pack_shard_reduce_path() {
             let (items, _dropped) = split_zero_contribution(items);
             let mbs = pack_budget(&items, &d.buckets, p, &row_grid, 0).unwrap();
             let plan = plan_shards(&mbs, p, 1 + (trial % 4) as usize);
-            let leaves = execute_shards(&rt, &mbs, &lits, &plan).unwrap();
+            let leaves = execute_shards(&rt, &mbs, &lits, &plan, &Tracer::off(), 1).unwrap();
             let mut acc = GradAccum::zeros(rt.manifest.param_count);
             let mut met = GradMetrics::default();
             tree_reduce_into(&mut acc, &mut met, leaves);

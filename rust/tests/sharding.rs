@@ -17,6 +17,7 @@
 use nat_rl::config::{Method, Packer, RunConfig};
 use nat_rl::coordinator::batcher::{pack_budget, plan_shards, split_zero_contribution, LearnItem};
 use nat_rl::coordinator::masking;
+use nat_rl::obs::Tracer;
 use nat_rl::coordinator::pipeline::PipelineTrainer;
 use nat_rl::coordinator::rollout::RolloutSeq;
 use nat_rl::coordinator::trainer::{learn_stage, StepStats, Trainer};
@@ -125,6 +126,7 @@ fn run_learn(
             &mut rng_mask,
             step + 1,
             seqs,
+            &Tracer::off(),
         )
         .unwrap();
         stats_out.push(stats_bits(&s));
@@ -248,6 +250,7 @@ fn degenerate_empty_response_row_flows_through_learn_stage() {
         let mut rng_mask = Rng::new(5);
         let s = learn_stage(
             &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
+                &Tracer::off(),
         )
         .unwrap();
         assert_eq!(s.sequences, 4, "{packer:?}");
@@ -363,7 +366,7 @@ fn saliency_ht_unbiased_through_pack_shard_reduce_path() {
         let (items, _dropped) = split_zero_contribution(items);
         let mbs = pack_budget(&items, &d.buckets, p, &row_grid, 0).unwrap();
         let plan = plan_shards(&mbs, p, 1 + (trial % 4) as usize);
-        let leaves = execute_shards(&rt, &mbs, &lits, &plan).unwrap();
+        let leaves = execute_shards(&rt, &mbs, &lits, &plan, &Tracer::off(), 1).unwrap();
         let mut acc = GradAccum::zeros(rt.manifest.param_count);
         let mut met = GradMetrics::default();
         tree_reduce_into(&mut acc, &mut met, leaves);
