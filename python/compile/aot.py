@@ -19,6 +19,12 @@ Outputs under ``<out-dir>/<config>/``:
   grad_T<b>.hlo.txt           NAT learner gradient, one per length bucket
   grad_T<b>_B<r>.hlo.txt      same, for the sub-batch row grid {1,2,4,...}
                               (the token-budget packer's 2-D artifact grid)
+  grad_K<k>_B<r>.hlo.txt      gather-compacted NAT gradient: rows carry only
+                              KEPT tokens (kept-count bucket K) plus a
+                              [B, K] gather list of original positions —
+                              the grid the packer routes scattered-selection
+                              micro-batches to (every (K, rows) cell is
+                              emitted explicitly; no full-row fallback)
   apply.hlo.txt               AdamW with global-norm clip
   pretrain.hlo.txt            fused SFT step
   init_params.bin             raw little-endian f32, manifest order
@@ -107,6 +113,24 @@ def lower_grad(cfg, bucket, rows=None):
         _spec((B,), jnp.int32))
 
 
+def lower_grad_compact(cfg, kbucket, rows=None):
+    """Lower the gather-compacted NAT grad for one (kept bucket, rows) cell.
+
+    Input arity/order matches ``lower_grad`` plus a trailing [B, K] int32
+    gather operand — the Rust runtime appends the gather literal as the
+    final batch input when a micro-batch carries one. Kept-count buckets
+    reuse the sequence bucket edges, so the two grids share their K axis.
+    """
+    fn = lambda params, tokens, ht_w, adv, old_lp, inv_len, pad_len, gather: \
+        M.nat_grad_compact(cfg, params, tokens, ht_w, adv, old_lp, inv_len,
+                           pad_len, gather, kbucket)
+    B, P = rows or cfg.batch_train, cfg.prompt_len
+    return jax.jit(fn).lower(
+        _param_specs(cfg), _spec((B, P + kbucket), jnp.int32),
+        _spec((B, kbucket)), _spec((B,)), _spec((B, kbucket)), _spec((B,)),
+        _spec((B,), jnp.int32), _spec((B, kbucket), jnp.int32))
+
+
 def row_grid(batch_train):
     """Compiled batch dimensions below batch_train: powers of two, ascending.
 
@@ -173,6 +197,10 @@ def build_manifest(cfg):
             "grad_rows": {f"{b}x{r}": f"grad_T{b}_B{r}.hlo.txt"
                           for b in cfg.buckets
                           for r in row_grid(cfg.batch_train)},
+            "grad_compact": {f"{k}x{r}": f"grad_K{k}_B{r}.hlo.txt"
+                             for k in cfg.buckets
+                             for r in row_grid(cfg.batch_train)
+                             + [cfg.batch_train]},
             "apply": "apply.hlo.txt",
             "pretrain": "pretrain.hlo.txt",
         },
@@ -223,6 +251,10 @@ def build(cfg_name: str, out_dir: str, force: bool = False) -> None:
         # 2-D (bucket x rows) grid for the token-budget packer.
         for r in row_grid(cfg.batch_train):
             emit(f"grad_T{b}_B{r}.hlo.txt", lower_grad(cfg, b, rows=r))
+        # Gather-compacted kept-count grid: every (K, rows) cell explicit —
+        # the compact family has no legacy full-row artifact to fall back on.
+        for r in row_grid(cfg.batch_train) + [cfg.batch_train]:
+            emit(f"grad_K{b}_B{r}.hlo.txt", lower_grad_compact(cfg, b, rows=r))
     emit("apply.hlo.txt", lower_apply(cfg))
     emit("pretrain.hlo.txt", lower_pretrain(cfg))
 

@@ -1,1 +1,3 @@
-# L1: Pallas kernel(s) for the paper's compute hot-spot.
+# L1: Pallas kernels for the paper's compute hot-spots — fused NAT loss
+# (nat_loss), flash attention (attention), and the gather-compacted
+# kept-token layout (compact: gather/scatter transforms + compacted loss).

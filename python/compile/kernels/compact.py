@@ -1,0 +1,241 @@
+"""L1 Pallas kernels: gather-compacted NAT loss layout.
+
+The token-budget packer can re-key a scattered-selection micro-batch on its
+KEPT token count instead of its prefix length: each row carries only the
+selected response tokens, gathered left into a kept-count bucket K, with
+``gather [B, K] int32`` mapping slot j back to the original response
+position (-1 marks an empty slot past the row's kept count). These kernels
+are that layout's compute contract:
+
+  * ``gather_rows``      — compact full [B, T] rows to [B, K] via the gather
+                           list (the kernel-space image of the host-side
+                           row-gather Rust's ``batcher::pack_one_compact``
+                           performs when it builds the micro-batch buffers).
+  * ``scatter_rows``     — the linear adjoint: place compacted values back
+                           at their original response positions, zero
+                           elsewhere. ``scatter_rows(gather_rows(x, g), g,
+                           T)`` reproduces x on kept positions exactly.
+  * ``compact_nat_loss`` — the fused NAT surrogate of ``kernels.nat_loss``
+                           evaluated directly on the compacted layout. The
+                           slot-validity mask ``live`` (1.0 where gather >=
+                           0) rides along so empty slots contribute exactly
+                           zero to the loss, the clip statistic, and the
+                           gradient — independent of whatever padding values
+                           occupy them. Its custom_vjp backward is the same
+                           analytic PPO-clip gradient, emitted in compacted
+                           coordinates; scattering it back by position
+                           (``scatter_rows``) reproduces the kept-masked
+                           full-layout gradient, the round-trip equivalence
+                           python/tests/test_kernels.py asserts.
+
+The surrogate math is position-free (pointwise in new_lp/old_lp/ht_w), so
+compacting the rows commutes with the loss — which is exactly why the
+``grad_K<k>_B<r>`` artifact family can price micro-batches on kept tokens
+while the legacy ``grad_T<b>_B<r>`` grid prices prefixes.
+
+Like nat_loss, everything runs under interpret=True (Mosaic custom-calls
+cannot execute on the CPU PJRT plugin) and lowers to plain HLO inside the
+grad_K artifacts; numerics are validated against kernels.ref plus the
+full-layout nat_loss kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.nat_loss import BLOCK_B, BLOCK_T, _pad_b, _pad_bt, _tile_specs
+
+
+def _pad_rows(x, bb, val=0):
+    """Pad the batch axis of a 2-D array to a block multiple (gather lists
+    pad with -1 so added rows hold no live slots)."""
+    pb = (-x.shape[0]) % bb
+    if pb:
+        x = jnp.pad(x, ((0, pb), (0, 0)), constant_values=val)
+    return x
+
+
+# --------------------------------------------------------------------------
+# Layout transforms: gather / scatter over the response axis
+# --------------------------------------------------------------------------
+
+
+def _gather_kernel(x_ref, g_ref, out_ref):
+    """One batch-block: out[b, j] = x[b, g[b, j]] (0 where g < 0)."""
+    g = g_ref[...]
+    vals = jnp.take_along_axis(x_ref[...], jnp.maximum(g, 0), axis=1)
+    out_ref[...] = jnp.where(g >= 0, vals, jnp.zeros_like(vals))
+
+
+def _scatter_kernel(y_ref, g_ref, out_ref, *, t):
+    """One batch-block: out[b, p] = sum_j y[b, j] * [g[b, j] == p]."""
+    g = g_ref[...]
+    y = jnp.where(g >= 0, y_ref[...], jnp.zeros_like(y_ref[...]))
+    onehot = (g[..., None] == jnp.arange(t)[None, None, :]).astype(y.dtype)
+    out_ref[...] = jnp.einsum("bk,bkt->bt", y, onehot)
+
+
+def _row_specs(bb, widths):
+    return [pl.BlockSpec((bb, w), lambda i: (i, 0)) for w in widths]
+
+
+def gather_rows(x, gather, block_b=BLOCK_B):
+    """Compact rows: x [B, T] f32, gather [B, K] int32 -> [B, K] f32.
+
+    Slot j of row b takes x[b, gather[b, j]]; slots with gather < 0 read 0.
+    Blocked over the batch axis only — each block sees whole rows, so the
+    per-row dynamic gather stays inside one tile.
+    """
+    b, t = x.shape
+    k = gather.shape[1]
+    bb = min(block_b, max(b, 1))
+    xp = _pad_rows(x, bb)
+    gp = _pad_rows(gather, bb, val=-1)
+    pb = xp.shape[0]
+    in_specs = _row_specs(bb, [t, k])
+    (out_spec,) = _row_specs(bb, [k])
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid=(pb // bb,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((pb, k), x.dtype),
+        interpret=True,
+    )(xp, gp)
+    return out[:b]
+
+
+def scatter_rows(y, gather, t, block_b=BLOCK_B):
+    """Scatter back: y [B, K] f32, gather [B, K] int32 -> [B, T] f32.
+
+    The exact linear adjoint of ``gather_rows``: position gather[b, j]
+    receives y[b, j]; unreferenced positions are 0. Gather lists built by the
+    packer are strictly ascending (no duplicates), but duplicate indices
+    would sum — the correct adjoint semantics regardless.
+    """
+    b, k = y.shape
+    bb = min(block_b, max(b, 1))
+    yp = _pad_rows(y, bb)
+    gp = _pad_rows(gather, bb, val=-1)
+    pb = yp.shape[0]
+    in_specs = _row_specs(bb, [k, k])
+    (out_spec,) = _row_specs(bb, [t])
+    out = pl.pallas_call(
+        functools.partial(_scatter_kernel, t=t),
+        grid=(pb // bb,),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((pb, t), y.dtype),
+        interpret=True,
+    )(yp, gp)
+    return out[:b]
+
+
+# --------------------------------------------------------------------------
+# Fused NAT surrogate on the compacted layout
+# --------------------------------------------------------------------------
+
+
+def _fwd_kernel(new_lp_ref, old_lp_ref, ht_w_ref, live_ref, adv_ref,
+                inv_len_ref, loss_ref, clip_ref, *, clip_eps):
+    """One (BLOCK_B, BLOCK_T) tile of the compacted surrogate."""
+    live = live_ref[...]
+    ratio = jnp.exp(new_lp_ref[...] - old_lp_ref[...])
+    adv = adv_ref[...]          # [bb, 1] — broadcast over the slot tile
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    surrogate = jnp.minimum(unclipped, clipped)
+    loss_ref[...] = -ht_w_ref[...] * surrogate * inv_len_ref[...] * live
+    clip_ref[...] = (unclipped > clipped).astype(loss_ref.dtype) * live
+
+
+def _bwd_kernel(g_ref, new_lp_ref, old_lp_ref, ht_w_ref, live_ref, adv_ref,
+                inv_len_ref, d_new_lp_ref, *, clip_eps):
+    """Analytic tile: d(loss)/d new_lp = -live * w * (1/T) * A * r * 1[u<=c]."""
+    ratio = jnp.exp(new_lp_ref[...] - old_lp_ref[...])
+    adv = adv_ref[...]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    active = (unclipped <= clipped).astype(g_ref.dtype)
+    d_new_lp_ref[...] = (-g_ref[...] * ht_w_ref[...] * inv_len_ref[...]
+                         * adv * ratio * active * live_ref[...])
+
+
+def _run_fwd(new_lp, old_lp, ht_w, live, adv, inv_len, clip_eps, bb, bt):
+    b, t = new_lp.shape
+    bb = min(bb, max(b, 1))
+    bt = min(bt, max(t, 1))
+    args = [_pad_bt(x, bb, bt) for x in (new_lp, old_lp, ht_w, live)]
+    adv_p = _pad_b(adv, bb)[:, None]
+    inv_p = _pad_b(inv_len, bb)[:, None]
+    pb, ptt = args[0].shape
+    tile2, col = _tile_specs(bb, bt)
+    loss, clip_ind = pl.pallas_call(
+        functools.partial(_fwd_kernel, clip_eps=clip_eps),
+        grid=(pb // bb, ptt // bt),
+        in_specs=[tile2, tile2, tile2, tile2, col, col],
+        out_specs=[tile2, tile2],
+        out_shape=[
+            jax.ShapeDtypeStruct((pb, ptt), new_lp.dtype),
+            jax.ShapeDtypeStruct((pb, ptt), new_lp.dtype),
+        ],
+        interpret=True,
+    )(*args, adv_p, inv_p)
+    return loss[:b, :t], clip_ind[:b, :t]
+
+
+def _run_bwd(g, new_lp, old_lp, ht_w, live, adv, inv_len, clip_eps, bb, bt):
+    b, t = new_lp.shape
+    bb = min(bb, max(b, 1))
+    bt = min(bt, max(t, 1))
+    args = [_pad_bt(x, bb, bt) for x in (g, new_lp, old_lp, ht_w, live)]
+    adv_p = _pad_b(adv, bb)[:, None]
+    inv_p = _pad_b(inv_len, bb)[:, None]
+    pb, ptt = args[0].shape
+    tile2, col = _tile_specs(bb, bt)
+    d_new = pl.pallas_call(
+        functools.partial(_bwd_kernel, clip_eps=clip_eps),
+        grid=(pb // bb, ptt // bt),
+        in_specs=[tile2, tile2, tile2, tile2, tile2, col, col],
+        out_specs=tile2,
+        out_shape=jax.ShapeDtypeStruct((pb, ptt), new_lp.dtype),
+        interpret=True,
+    )(*args, adv_p, inv_p)
+    return d_new[:b, :t]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def compact_nat_loss(new_lp, old_lp, ht_w, live, adv, inv_len, clip_eps,
+                     block_b=BLOCK_B, block_t=BLOCK_T):
+    """Fused NAT loss on compacted [B, K] slots. Differentiable in ``new_lp``.
+
+    ``live`` is the slot-validity mask (1.0 where gather >= 0, 0.0 on empty
+    padding slots) as f32 — kept float so the custom_vjp signature stays
+    all-float. Returns (loss_tok [B, K], clip_ind [B, K]).
+    """
+    return _run_fwd(new_lp, old_lp, ht_w, live, adv, inv_len, clip_eps,
+                    block_b, block_t)
+
+
+def _vjp_fwd(new_lp, old_lp, ht_w, live, adv, inv_len, clip_eps,
+             block_b, block_t):
+    out = _run_fwd(new_lp, old_lp, ht_w, live, adv, inv_len, clip_eps,
+                   block_b, block_t)
+    return out, (new_lp, old_lp, ht_w, live, adv, inv_len)
+
+
+def _vjp_bwd(clip_eps, block_b, block_t, res, cts):
+    new_lp, old_lp, ht_w, live, adv, inv_len = res
+    g_loss, _g_clip = cts  # clip indicator is a non-differentiable statistic
+    d_new = _run_bwd(g_loss, new_lp, old_lp, ht_w, live, adv, inv_len,
+                     clip_eps, block_b, block_t)
+    zeros_like = jnp.zeros_like
+    return (d_new, zeros_like(old_lp), zeros_like(ht_w), zeros_like(live),
+            zeros_like(adv), zeros_like(inv_len))
+
+
+compact_nat_loss.defvjp(_vjp_fwd, _vjp_bwd)

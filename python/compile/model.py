@@ -10,6 +10,10 @@ jitted functions the Rust coordinator drives through PJRT:
   * ``nat_grad``       — the NAT learner: forward over a *length bucket*,
                          HT-masked clipped GRPO surrogate via the Pallas
                          nat_loss L1 kernel, grads w.r.t. all params.
+  * ``nat_grad_compact`` — the same learner on the gather-compacted layout:
+                         rows carry only KEPT tokens (a *kept-count bucket*),
+                         with a gather list mapping slots back to original
+                         positions (the ``grad_K<k>_B<r>`` artifact grid).
   * ``adamw_apply``    — decoupled-weight-decay Adam with global-norm clip.
   * ``pretrain_step``  — fused CE grad + AdamW update (SFT base-model phase).
 
@@ -31,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from compile.kernels.attention import flash_attention
+from compile.kernels.compact import compact_nat_loss
 from compile.kernels.nat_loss import nat_loss_tokens
 
 
@@ -183,14 +188,21 @@ def _rope(x, positions, theta):
     return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
 
 
-def _attention_dense(q, k, v, pad_len):
-    """jnp causal left-pad attention (default fwd/bwd path; XLA fuses this)."""
+def _attention_dense(q, k, v, pad_len, key_valid=None):
+    """jnp causal left-pad attention (default fwd/bwd path; XLA fuses this).
+
+    ``key_valid`` ([B, S] bool, optional) additionally masks scattered
+    invalid KEY slots — the gather-compacted layout's empty positions, which
+    the prefix-shaped ``pad_len`` mask cannot express.
+    """
     s = q.shape[2]
     scale = 1.0 / float(q.shape[-1]) ** 0.5
     scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
     pos = jnp.arange(s)
     causal = pos[None, :, None] >= pos[None, None, :]
     valid = pos[None, None, :] >= pad_len[:, None, None]
+    if key_valid is not None:
+        valid = jnp.logical_and(valid, key_valid[:, None, :])
     mask = jnp.logical_and(causal, valid)[:, None, :, :]
     scores = jnp.where(mask, scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
@@ -198,7 +210,7 @@ def _attention_dense(q, k, v, pad_len):
 
 
 def _block(cfg: ModelConfig, p: dict, prefix: str, x, pad_len, positions,
-           use_pallas_attn: bool):
+           use_pallas_attn: bool, key_valid=None):
     b, s, d = x.shape
     h, hd = cfg.n_heads, cfg.head_dim
     xn = _rmsnorm(x, p[prefix + "attn_norm"], cfg.norm_eps)
@@ -208,9 +220,10 @@ def _block(cfg: ModelConfig, p: dict, prefix: str, x, pad_len, positions,
     q = _rope(q, positions[:, None, :], cfg.rope_theta)
     k = _rope(k, positions[:, None, :], cfg.rope_theta)
     if use_pallas_attn:
+        assert key_valid is None, "flash_attention has no scattered key mask"
         o = flash_attention(q, k, v, pad_len)
     else:
-        o = _attention_dense(q, k, v, pad_len)
+        o = _attention_dense(q, k, v, pad_len, key_valid)
     o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
     x = x + o @ p[prefix + "wo"]
     xn = _rmsnorm(x, p[prefix + "mlp_norm"], cfg.norm_eps)
@@ -228,6 +241,42 @@ def forward(cfg: ModelConfig, flat_params, tokens, pad_len,
     positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     for l in range(cfg.n_layers):
         x = _block(cfg, p, f"layer{l}.", x, pad_len, positions, use_pallas_attn)
+    x = _rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return x @ p["head"]
+
+
+def forward_compact(cfg: ModelConfig, flat_params, tokens, gather, pad_len):
+    """Gather-compacted forward: tokens [B, P+K] -> logits [B, P+K, V].
+
+    Response slots hold only the KEPT tokens of each row, gathered left;
+    ``gather [B, K] int32`` maps slot j to its original response position
+    (-1 = empty slot past the row's kept count). Kept tokens keep their
+    ORIGINAL RoPE positions (P + gather[j]) and attend the prompt plus
+    earlier kept slots. Gather lists are strictly ascending per row, so
+    index-order causality in the compacted sequence coincides with
+    original-position causality, and the standard causal mask applies;
+    empty slots are excluded as attention KEYS via ``key_valid`` (their
+    query outputs are garbage and must be masked downstream, which the
+    gathered ht_w == 0 / live == 0 slots of the NAT loss do).
+
+    This is the compacted layout's defined semantics: dropped tokens are
+    absent from the conditioning context (their KV is never computed — the
+    source of the token saving), so scattered-selection logits differ from
+    the full-prefix forward. Prefix-shaped plans never route here
+    (``batcher::routes_compact``), keeping the legacy path bit-identical.
+    """
+    p = _unflatten(cfg, flat_params)
+    b, s = tokens.shape
+    P = cfg.prompt_len
+    x = p["embed"][tokens]
+    slot_pos = P + jnp.maximum(gather, 0)
+    positions = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(P)[None, :], (b, P)), slot_pos], axis=1)
+    key_valid = jnp.concatenate(
+        [jnp.ones((b, P), jnp.bool_), gather >= 0], axis=1)
+    for l in range(cfg.n_layers):
+        x = _block(cfg, p, f"layer{l}.", x, pad_len, positions, False,
+                   key_valid=key_valid)
     x = _rmsnorm(x, p["final_norm"], cfg.norm_eps)
     return x @ p["head"]
 
@@ -427,6 +476,44 @@ def nat_grad(cfg: ModelConfig, flat_params, tokens, ht_w, adv, old_lp,
         new_lp, ent = _resp_logprobs(cfg, logits, tokens, bucket)
         loss_tok, clip_ind = nat_loss_tokens(
             new_lp, old_lp, ht_w, adv, inv_len, cfg.clip_eps)
+        loss = jnp.sum(loss_tok)
+        tok = jnp.sum(mask)
+        ent_sum = jnp.sum(jax.lax.stop_gradient(ent) * mask)
+        clip_sum = jnp.sum(clip_ind * mask)
+        kl_sum = jnp.sum((old_lp - jax.lax.stop_gradient(new_lp)) * mask)
+        return loss, jnp.stack([loss, tok, ent_sum, clip_sum, kl_sum])
+
+    (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        list(flat_params))
+    return tuple(grads) + (metrics,)
+
+
+def nat_grad_compact(cfg: ModelConfig, flat_params, tokens, ht_w, adv,
+                     old_lp, inv_len, pad_len, gather, kbucket: int):
+    """NAT learner gradient on a gather-compacted micro-batch.
+
+    The ``grad_K<k>_B<r>`` artifact family: tokens [B, P+kbucket] hold the
+    prompt plus each row's KEPT response tokens gathered left; ht_w/old_lp
+    [B, kbucket] are gathered to the same slots (empty slots carry ht_w 0);
+    ``gather [B, kbucket] int32`` maps slot -> original response position
+    (-1 = empty). adv/inv_len/pad_len are per-row exactly as in ``nat_grad``.
+
+    The surrogate math is pointwise in (new_lp, old_lp, ht_w), so it is the
+    SAME loss as ``nat_grad`` evaluated on the gathered rows — the slot
+    coordinate is the compacted layout's native gradient coordinate, and
+    ``kernels.compact.scatter_rows`` maps d(new_lp) back to original
+    positions when a full-layout view is needed. Metrics order matches
+    ``nat_grad`` ([loss, tok, ent, clip, kl]) so the Rust runtime parses
+    both families identically.
+    """
+    live = (gather >= 0).astype(jnp.float32)
+    mask = (ht_w > 0.0).astype(jnp.float32) * live
+
+    def loss_fn(params):
+        logits = forward_compact(cfg, params, tokens, gather, pad_len)
+        new_lp, ent = _resp_logprobs(cfg, logits, tokens, kbucket)
+        loss_tok, clip_ind = compact_nat_loss(
+            new_lp, old_lp, ht_w, live, adv, inv_len, cfg.clip_eps)
         loss = jnp.sum(loss_tok)
         tok = jnp.sum(mask)
         ent_sum = jnp.sum(jax.lax.stop_gradient(ent) * mask)

@@ -39,6 +39,7 @@ class TestLowering:
             ("generate_bucket", aot.lower_generate_bucket(CFG, CFG.buckets[0])),
             ("score", aot.lower_score(CFG, CFG.buckets[-1])),
             ("grad", aot.lower_grad(CFG, CFG.buckets[0])),
+            ("grad_compact", aot.lower_grad_compact(CFG, CFG.buckets[0])),
             ("apply", aot.lower_apply(CFG)),
             ("pretrain", aot.lower_pretrain(CFG)),
         ]:
@@ -53,6 +54,14 @@ class TestLowering:
         n_params = len(M.param_spec(CFG))
         count = _entry_param_count(text)
         assert count == n_params + 6, (count, n_params)
+
+    def test_grad_compact_artifact_parameter_count(self):
+        """Legacy grad arity + 1: the trailing [B, K] int32 gather operand."""
+        lowered = aot.lower_grad_compact(CFG, CFG.buckets[0], rows=1)
+        text = aot.to_hlo_text(lowered)
+        n_params = len(M.param_spec(CFG))
+        count = _entry_param_count(text)
+        assert count == n_params + 7, (count, n_params)
 
     def test_apply_artifact_parameter_count(self):
         lowered = aot.lower_apply(CFG)
@@ -92,6 +101,18 @@ class TestManifest:
         keys = set(man["artifacts"]["grad_rows"])
         assert keys == {f"{b}x{r}" for b in CFG.buckets for r in grid}
 
+    def test_grad_compact_grid_covers_every_cell(self):
+        """Every (kept bucket, rows) cell is explicit — the compact family
+        has no legacy full-row artifact to fall back on, so the row axis
+        includes batch_train itself."""
+        man = aot.build_manifest(CFG)
+        rows = aot.row_grid(CFG.batch_train) + [CFG.batch_train]
+        keys = set(man["artifacts"]["grad_compact"])
+        assert keys == {f"{k}x{r}" for k in CFG.buckets for r in rows}
+        assert man["artifacts"]["grad_compact"][
+            f"{CFG.buckets[0]}x{CFG.batch_train}"] == \
+            f"grad_K{CFG.buckets[0]}_B{CFG.batch_train}.hlo.txt"
+
     def test_row_grid_is_powers_of_two(self):
         assert aot.row_grid(8) == [1, 2, 4]
         assert aot.row_grid(6) == [1, 2, 4]
@@ -129,6 +150,7 @@ class TestBuiltArtifacts:
         files = [arts["generate"], arts["apply"], arts["pretrain"]]
         files += list(arts["grad"].values()) + list(arts["score"].values())
         files += list(arts.get("grad_rows", {}).values())
+        files += list(arts.get("grad_compact", {}).values())
         for f in files:
             path = os.path.join(self.ART, f)
             assert os.path.exists(path), f

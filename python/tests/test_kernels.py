@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from compile.kernels import attention, nat_loss, ref
+from compile.kernels import attention, compact, nat_loss, ref
 
 settings.register_profile("kernels", max_examples=25, deadline=None)
 settings.load_profile("kernels")
@@ -108,6 +108,126 @@ class TestNatLossBackward:
         got = jax.grad(lambda nl: jnp.sum(nat_loss.nat_loss_tokens(
             nl, old_lp, ht_w, adv, inv_len, 0.2)[0]))(new_lp)
         np.testing.assert_allclose(got, np.zeros((b, t)), atol=1e-8)
+
+
+def _gather_of(ht_w):
+    """Per-row ascending gather list over kept (ht_w > 0) positions, -1
+    padded to the max kept count — the layout batcher::pack_one_compact
+    builds."""
+    mask = np.asarray(ht_w) > 0.0
+    b = mask.shape[0]
+    k = max(int(mask.sum(axis=1).max()), 1)
+    gather = np.full((b, k), -1, np.int32)
+    for i in range(b):
+        idx = np.flatnonzero(mask[i])
+        gather[i, :idx.size] = idx
+    return jnp.asarray(gather)
+
+
+class TestCompactLayout:
+    """Gather/scatter transforms + the compacted NAT loss vs the full
+    layout: compaction must commute with the (position-free) surrogate."""
+
+    @given(seed=st.integers(0, 10_000), b=st.integers(1, 9),
+           t=st.integers(1, 120))
+    def test_gather_scatter_round_trip(self, seed, b, t):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(0, 1, (b, t)).astype(np.float32))
+        keep = jnp.asarray((rng.random((b, t)) < 0.5).astype(np.float32))
+        g = _gather_of(keep)
+        y = compact.gather_rows(x, g)
+        back = compact.scatter_rows(y, g, t)
+        np.testing.assert_allclose(back, np.asarray(x) * np.asarray(keep))
+        # and gathering the scatter reproduces the compacted rows exactly
+        np.testing.assert_allclose(compact.gather_rows(back, g), y)
+
+    def test_gather_matches_numpy_oracle(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(0, 1, (5, 40)).astype(np.float32))
+        g = jnp.asarray([[0, 3, 39, -1], [1, 2, 4, 8],
+                         [-1, -1, -1, -1], [5, 6, 7, -1], [0, -1, -1, -1]],
+                        jnp.int32)
+        got = np.asarray(compact.gather_rows(x, g))
+        xn = np.asarray(x)
+        for i in range(5):
+            for j in range(4):
+                want = xn[i, g[i, j]] if int(g[i, j]) >= 0 else 0.0
+                assert got[i, j] == np.float32(want), (i, j)
+
+    @given(seed=st.integers(0, 10_000), b=st.integers(1, 6),
+           t=st.integers(1, 150))
+    def test_compact_loss_commutes_with_gather(self, seed, b, t):
+        """Loss on gathered rows == gathered loss on full rows (non-kept
+        full positions carry ht_w == 0, so their loss is already 0)."""
+        new_lp, old_lp, ht_w, adv, inv_len = _case(seed, b, t)
+        lt, ci = nat_loss.nat_loss_tokens(new_lp, old_lp, ht_w, adv,
+                                          inv_len, 0.2)
+        g = _gather_of(ht_w)
+        nl_c, ol_c, hw_c = (compact.gather_rows(x, g)
+                            for x in (new_lp, old_lp, ht_w))
+        live = (g >= 0).astype(jnp.float32)
+        lt_c, ci_c = compact.compact_nat_loss(nl_c, ol_c, hw_c, live, adv,
+                                              inv_len, 0.2)
+        kept = np.asarray(ht_w) > 0.0
+        np.testing.assert_allclose(compact.scatter_rows(lt_c, g, t),
+                                   np.asarray(lt) * kept,
+                                   rtol=1e-6, atol=1e-7)
+        # clip indicator: the full kernel reports it on every token; the
+        # compacted one only carries kept slots
+        np.testing.assert_allclose(compact.scatter_rows(ci_c, g, t),
+                                   np.asarray(ci) * kept)
+
+    @given(seed=st.integers(0, 10_000), b=st.integers(1, 5),
+           t=st.integers(1, 100))
+    def test_grad_scatters_back_to_masked_full_grad(self, seed, b, t):
+        """d(compact loss)/d new_lp, scattered by position, == the kept-
+        masked full-layout gradient — the round-trip contract that makes
+        grad_K and grad_T artifacts interchangeable on kept tokens."""
+        new_lp, old_lp, ht_w, adv, inv_len = _case(seed, b, t)
+        g = _gather_of(ht_w)
+        nl_c, ol_c, hw_c = (compact.gather_rows(x, g)
+                            for x in (new_lp, old_lp, ht_w))
+        live = (g >= 0).astype(jnp.float32)
+
+        d_full = jax.grad(lambda nl: jnp.sum(nat_loss.nat_loss_tokens(
+            nl, old_lp, ht_w, adv, inv_len, 0.2)[0]))(new_lp)
+        d_c = jax.grad(lambda nl: jnp.sum(compact.compact_nat_loss(
+            nl, ol_c, hw_c, live, adv, inv_len, 0.2)[0]))(nl_c)
+        np.testing.assert_allclose(compact.scatter_rows(d_c, g, t),
+                                   np.asarray(d_full),
+                                   rtol=1e-5, atol=1e-7)
+
+    def test_empty_slots_contribute_nothing(self):
+        """Garbage values in dead (gather < 0) slots must not reach the
+        loss, the clip statistic, or the gradient."""
+        b, k = 3, 12
+        rng = np.random.default_rng(0)
+        nl = jnp.asarray(rng.normal(-2, 1, (b, k)).astype(np.float32))
+        ol = jnp.asarray(rng.normal(-2, 1, (b, k)).astype(np.float32))
+        hw = jnp.asarray(rng.uniform(1, 3, (b, k)).astype(np.float32))
+        adv = jnp.asarray([1.0, -2.0, 0.5], jnp.float32)
+        inv_len = jnp.full((b,), 0.1, jnp.float32)
+        g = jnp.asarray(np.tile(np.arange(k, dtype=np.int32), (b, 1)))
+        g = g.at[:, 5:].set(-1)  # trailing empty slots, packer-shaped
+        live = (g >= 0).astype(jnp.float32)
+        lt, ci = compact.compact_nat_loss(nl, ol, hw, live, adv, inv_len, 0.2)
+        assert np.all(np.asarray(lt)[:, 5:] == 0.0)
+        assert np.all(np.asarray(ci)[:, 5:] == 0.0)
+        d = jax.grad(lambda x: jnp.sum(compact.compact_nat_loss(
+            x, ol, hw, live, adv, inv_len, 0.2)[0]))(nl)
+        assert np.all(np.asarray(d)[:, 5:] == 0.0)
+        assert np.any(np.asarray(d)[:, :5] != 0.0)
+
+    def test_full_keep_matches_nat_loss_exactly(self):
+        """With every slot live the compacted kernel IS nat_loss."""
+        args = _case(13, 6, 64)
+        new_lp, old_lp, ht_w, adv, inv_len = args
+        live = jnp.ones_like(ht_w)
+        lt, ci = nat_loss.nat_loss_tokens(*args, 0.2)
+        lt_c, ci_c = compact.compact_nat_loss(new_lp, old_lp, ht_w, live,
+                                              adv, inv_len, 0.2)
+        np.testing.assert_allclose(lt_c, lt, rtol=1e-7)
+        np.testing.assert_allclose(ci_c, ci)
 
 
 class TestFlashAttention:

@@ -213,6 +213,97 @@ class TestNatGrad:
             np.testing.assert_allclose(g, w, rtol=2e-3, atol=1e-6)
 
 
+class TestNatGradCompact:
+    """The gather-compacted learner (grad_K<k>_B<r> family)."""
+
+    def _compact_inputs(self, k, seed=0, kept=None):
+        """A compacted micro-batch: ``kept`` live slots per row (rest -1)."""
+        rng = np.random.default_rng(seed)
+        B = CFG.batch_train
+        S = CFG.prompt_len + k
+        kept = k if kept is None else kept
+        tokens = jnp.asarray(rng.integers(1, CFG.vocab, (B, S)), jnp.int32)
+        ht_w = jnp.asarray(rng.uniform(0.5, 2.0, (B, k)).astype(np.float32))
+        adv = jnp.asarray(rng.normal(0, 1, B).astype(np.float32))
+        old_lp = jnp.asarray(rng.normal(-3, 0.5, (B, k)).astype(np.float32))
+        inv_len = jnp.full((B,), 1.0 / k, jnp.float32)
+        pad = jnp.zeros((B,), jnp.int32)
+        # scattered ascending original positions out of a 2x response window
+        gather = np.full((B, k), -1, np.int32)
+        for i in range(B):
+            gather[i, :kept] = np.sort(
+                rng.choice(2 * k, size=kept, replace=False)).astype(np.int32)
+        if kept < k:
+            ht_w = ht_w * (jnp.asarray(gather) >= 0)
+        return tokens, ht_w, adv, old_lp, inv_len, pad, jnp.asarray(gather)
+
+    def test_shapes(self, params):
+        k = CFG.buckets[0]
+        outs = M.nat_grad_compact(CFG, params, *self._compact_inputs(k), k)
+        assert len(outs) == len(params) + 1
+        for g, p in zip(outs[:-1], params):
+            assert g.shape == p.shape
+        assert outs[-1].shape == (5,)
+
+    def test_identity_gather_matches_nat_grad(self, params):
+        """A fully-kept row set with gather == [0..k) is exactly the legacy
+        layout: same positions, same mask, same loss — the python mirror of
+        the batcher's routes-to-legacy rule for prefix-shaped plans."""
+        k = CFG.buckets[0]
+        tokens, ht_w, adv, old_lp, inv_len, pad, _ = self._compact_inputs(
+            k, seed=3)
+        gather = jnp.asarray(np.tile(np.arange(k, dtype=np.int32),
+                                     (CFG.batch_train, 1)))
+        got = M.nat_grad_compact(CFG, params, tokens, ht_w, adv, old_lp,
+                                 inv_len, pad, gather, k)
+        want = M.nat_grad(CFG, params, tokens, ht_w, adv, old_lp, inv_len,
+                          pad, k)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=2e-4, atol=1e-7)
+
+    def test_empty_slot_content_is_inert(self, params):
+        """Token values in dead (gather < 0) slots must not change any
+        gradient or metric — the key_valid attention mask plus the live
+        loss mask together guarantee the padding region is unobservable."""
+        k = CFG.buckets[0]
+        kept = k // 2
+        tokens, ht_w, adv, old_lp, inv_len, pad, gather = \
+            self._compact_inputs(k, seed=5, kept=kept)
+        o1 = M.nat_grad_compact(CFG, params, tokens, ht_w, adv, old_lp,
+                                inv_len, pad, gather, k)
+        P = CFG.prompt_len
+        mangled = tokens.at[:, P + kept:].set(
+            (tokens[:, P + kept:] + 7) % CFG.vocab)
+        o2 = M.nat_grad_compact(CFG, params, mangled, ht_w, adv, old_lp,
+                                inv_len, pad, gather, k)
+        for a, b in zip(o1, o2):
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+    def test_zero_weights_give_zero_grads(self, params):
+        k = CFG.buckets[0]
+        tokens, ht_w, adv, old_lp, inv_len, pad, gather = \
+            self._compact_inputs(k, seed=7)
+        outs = M.nat_grad_compact(CFG, params, tokens, jnp.zeros_like(ht_w),
+                                  adv, old_lp, inv_len, pad, gather, k)
+        for g in outs[:-1]:
+            np.testing.assert_allclose(g, np.zeros(g.shape), atol=1e-8)
+
+    def test_kept_tokens_use_original_rope_positions(self, params):
+        """The same kept slots with different original positions must score
+        differently: position identity comes from the gather list, not the
+        compacted slot index."""
+        k = CFG.buckets[0]
+        kept = k // 2
+        tokens, ht_w, adv, old_lp, inv_len, pad, gather = \
+            self._compact_inputs(k, seed=9, kept=kept)
+        l1 = M.forward_compact(CFG, params, tokens, gather, pad)
+        shifted = jnp.where(gather >= 0, gather + 3, gather)
+        l2 = M.forward_compact(CFG, params, tokens, shifted, pad)
+        P = CFG.prompt_len
+        assert float(jnp.max(jnp.abs(
+            l1[:, P:P + kept] - l2[:, P:P + kept]))) > 1e-4
+
+
 class TestOptimisers:
     def test_adamw_apply_moves_params(self, params):
         m = [jnp.zeros_like(p) for p in params]

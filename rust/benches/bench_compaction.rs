@@ -1,0 +1,205 @@
+//! Gather-compaction bench (sim tier — always runs, no artifacts).
+//!
+//! Prices the kept-count (`grad_K<k>_B<r>`) layout against prefix-packing
+//! on the ONE shared workload (`batcher::compaction_workload`, the same
+//! population the tier-1 gate in batcher's tests asserts on): scattered
+//! ~50%-keep selections (URS / stratified / Poisson) over 64..=128-token
+//! responses. Writes the machine-readable `BENCH_compaction.json` record:
+//!
+//! * per-method allocated grad tokens for both layouts, averaged over many
+//!   mask draws, plus the packer's kept/alloc/bound accounting;
+//! * the acceptance: every scattered method allocates >= 30% fewer grad
+//!   tokens compacted than prefix-packed — asserted AFTER the JSON is on
+//!   disk so a failure still leaves the measurements;
+//! * end-to-end sim `learn_stage` steps with `--train.compact` on vs off:
+//!   the realized `StepLedger::compact_saving()` the `nat trace` gate
+//!   reports, from the same code path a real run takes;
+//! * packing throughput for both layouts (the compact pass adds a gather
+//!   build per micro-batch; it must stay noise next to a grad execution).
+
+use nat_rl::config::{BudgetMode, Method, RunConfig};
+use nat_rl::coordinator::batcher::{
+    allocated_tokens, compact_stats, compaction_workload as w, pack_budget, pack_budget_with,
+    split_zero_contribution,
+};
+use nat_rl::coordinator::rollout::RolloutSeq;
+use nat_rl::coordinator::trainer::{learn_stage, StepStats};
+use nat_rl::obs::Tracer;
+use nat_rl::runtime::sim::{init_params, sim_manifest};
+use nat_rl::runtime::{GradAccum, OptState, Runtime};
+use nat_rl::util::bench::{write_record, Bench};
+use nat_rl::util::json::{obj, Json};
+use nat_rl::util::rng::Rng;
+
+const DRAWS: usize = 20;
+
+fn step_with(rt: &Runtime, method: Method, compact: bool, seqs: &[RolloutSeq]) -> StepStats {
+    let mut cfg = RunConfig::default();
+    cfg.method = method;
+    cfg.rl.group_size = 4;
+    cfg.train.budget_mode = BudgetMode::Batch;
+    cfg.train.token_budget = 40;
+    cfg.train.compact = compact;
+    let mut params = init_params(&rt.manifest);
+    let mut opt = OptState::zeros(&rt.manifest);
+    let mut acc = GradAccum::zeros(rt.manifest.param_count);
+    let mut rng_mask = Rng::new(0xC0FFEE);
+    learn_stage(
+        rt,
+        &cfg,
+        &mut params,
+        &mut opt,
+        &mut acc,
+        None,
+        &mut rng_mask,
+        1,
+        seqs,
+        &Tracer::off(),
+    )
+    .unwrap()
+}
+
+/// A deterministic sim-scale rollout group (the sim runtime's 16-token
+/// response window, scattered lengths) for the end-to-end leg.
+fn sim_seqs(prompt_len: usize, max_resp: usize) -> Vec<RolloutSeq> {
+    let mut rng = Rng::new(0x5EED);
+    (0..8)
+        .map(|i| {
+            let resp_len = 1 + rng.below(max_resp as u64) as usize;
+            RolloutSeq {
+                task_idx: i / 4,
+                tokens: (0..(prompt_len + max_resp) as i32).map(|x| 3 + x % 40).collect(),
+                pad_len: 2,
+                resp_len,
+                old_lp: (0..resp_len).map(|t| -0.2 - 0.01 * t as f32).collect(),
+                reward: if i % 2 == 0 { 1.0 } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("compaction");
+
+    // ---- Layout pricing on the shared workload (the acceptance metric).
+    println!("== allocated grad tokens: prefix-packed vs gather-compacted ==");
+    println!(
+        "{:<12} {:>10} {:>10} {:>9} {:>10} {:>10}",
+        "method", "prefix", "compact", "saving", "kept", "bound"
+    );
+    let mut layout_records = Vec::new();
+    for (name, method) in w::methods() {
+        let mut rng = Rng::new(w::SEED);
+        let (mut prefix_alloc, mut compact_alloc) = (0usize, 0usize);
+        let (mut kept_sum, mut bound_sum) = (0usize, 0usize);
+        for _ in 0..DRAWS {
+            let items = w::items(&method, &mut rng);
+            let (items, _) = split_zero_contribution(items);
+            let (prefix, compact) = w::both_layouts(&items);
+            prefix_alloc += allocated_tokens(&prefix, w::PROMPT_LEN);
+            compact_alloc += allocated_tokens(&compact, w::PROMPT_LEN);
+            let (kept, alloc, bound) =
+                compact_stats(&compact, &w::BUCKETS, &w::ROW_GRID, w::PROMPT_LEN);
+            assert!(kept <= alloc && alloc <= bound, "{name}: {kept}/{alloc}/{bound}");
+            kept_sum += kept;
+            bound_sum += bound;
+        }
+        let saving = 1.0 - compact_alloc as f64 / prefix_alloc as f64;
+        println!(
+            "{:<12} {:>10} {:>10} {:>8.1}% {:>10} {:>10}",
+            name,
+            prefix_alloc,
+            compact_alloc,
+            100.0 * saving,
+            kept_sum,
+            bound_sum
+        );
+        layout_records.push(obj(vec![
+            ("scheme", Json::Str(name.into())),
+            ("prefix_alloc", Json::Num(prefix_alloc as f64)),
+            ("compact_alloc", Json::Num(compact_alloc as f64)),
+            ("saving", Json::Num(saving)),
+            ("kept", Json::Num(kept_sum as f64)),
+            ("bound", Json::Num(bound_sum as f64)),
+        ]));
+    }
+
+    // ---- End-to-end: the realized ledger saving through learn_stage.
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let seqs = sim_seqs(d.prompt_len, d.max_resp);
+    let mut step_records = Vec::new();
+    for method in [Method::Urs { p: 0.9 }, Method::Stratified { p: 0.9 }] {
+        let on = step_with(&rt, method, true, &seqs);
+        let off = step_with(&rt, method, false, &seqs);
+        b.iter(&format!("step_compact/{}", method.id()), || {
+            step_with(&rt, method, true, &seqs)
+        });
+        // The off-path ledger must price compaction as inactive (saving 0),
+        // and the on-path counterfactual must reproduce the off-path
+        // allocation — same items, same packer, compact disabled.
+        assert_eq!(off.ledger.compact_saving(), 0.0, "{}", method.id());
+        assert!(on.ledger.compact_saving() >= 0.0, "{}", method.id());
+        if on.ledger.compact_alloc > 0.0 {
+            assert_eq!(
+                on.ledger.alloc_tokens_prefix.to_bits(),
+                off.ledger.alloc_tokens.to_bits(),
+                "{}: prefix counterfactual drifted from the real prefix step",
+                method.id()
+            );
+        }
+        step_records.push(obj(vec![
+            ("scheme", Json::Str(method.id().into())),
+            ("alloc_tokens", Json::Num(on.ledger.alloc_tokens)),
+            ("alloc_tokens_prefix", Json::Num(on.ledger.alloc_tokens_prefix)),
+            ("compact_saving", Json::Num(on.ledger.compact_saving())),
+            ("compact_kept", Json::Num(on.ledger.compact_kept)),
+            ("compact_alloc", Json::Num(on.ledger.compact_alloc)),
+            ("compact_bound", Json::Num(on.ledger.compact_bound)),
+        ]));
+    }
+
+    // ---- Packing throughput: the gather build must stay host-side noise.
+    let mut rng = Rng::new(w::SEED);
+    let items = {
+        let items = w::items(&w::methods()[0].1, &mut rng);
+        split_zero_contribution(items).0
+    };
+    b.iter("pack_prefix/urs", || {
+        pack_budget(&items, &w::BUCKETS, w::PROMPT_LEN, &w::ROW_GRID, 0).unwrap()
+    });
+    b.iter("pack_compact/urs", || {
+        pack_budget_with(&items, &w::BUCKETS, w::PROMPT_LEN, &w::ROW_GRID, 0, true).unwrap()
+    });
+
+    let record = obj(vec![
+        ("bench", Json::Str("compaction".into())),
+        (
+            "workload",
+            obj(vec![
+                ("items", Json::Num(w::ITEMS as f64)),
+                ("draws", Json::Num(DRAWS as f64)),
+                ("prompt_len", Json::Num(w::PROMPT_LEN as f64)),
+                ("max_resp", Json::Num(w::MAX_RESP as f64)),
+            ]),
+        ),
+        ("layouts", Json::Arr(layout_records.clone())),
+        ("steps", Json::Arr(step_records)),
+    ]);
+    let path = write_record("compaction", &record).unwrap();
+    println!("wrote {path}");
+
+    // Acceptance gate, AFTER the JSON record is on disk: every scattered
+    // ~50%-keep method must allocate >= 30% fewer grad tokens compacted.
+    for r in &layout_records {
+        let saving = r.get("saving").and_then(Json::as_f64).unwrap();
+        assert!(
+            saving >= 0.30,
+            "acceptance: compacted layout must save >= 30% allocated grad \
+             tokens vs prefix-packing ({})",
+            r.to_string()
+        );
+    }
+
+    b.report();
+}

@@ -230,6 +230,15 @@ pub struct TrainCfg {
     /// the step plan, `shards = K` is bit-identical to `shards = 1` for
     /// every K. 1 = the single-threaded learn stage.
     pub shards: usize,
+    /// Gather-compacted grad layout: when true (default), the budget packer
+    /// may re-key a micro-batch by KEPT-token count instead of prefix
+    /// length, routing scattered selection plans (URS/stratified/Poisson/
+    /// saliency) into the `grad_K<k>_B<r>` artifact family whenever that is
+    /// strictly cheaper. Prefix-shaped plans (GRPO/DetTrunc/RPC) always
+    /// stay on the legacy grid, so those runs are bit-identical under
+    /// either setting. Requires the manifest's `grad_compact` grid (absent
+    /// → the packer silently keeps everything on the prefix grid).
+    pub compact: bool,
 }
 
 impl Default for TrainCfg {
@@ -240,6 +249,7 @@ impl Default for TrainCfg {
             budget_mode: BudgetMode::None,
             auto_buckets: false,
             shards: 1,
+            compact: true,
         }
     }
 }
@@ -457,6 +467,9 @@ impl RunConfig {
         if let Some(b) = get("train", "auto_buckets").and_then(Json::as_bool) {
             cfg.train.auto_buckets = b;
         }
+        if let Some(b) = get("train", "compact").and_then(Json::as_bool) {
+            cfg.train.compact = b;
+        }
         setnum!("pipeline", "workers", cfg.pipeline.workers, usize);
         setnum!("pipeline", "queue_depth", cfg.pipeline.queue_depth, usize);
         setnum!("pipeline", "max_staleness", cfg.pipeline.max_staleness, u64);
@@ -585,6 +598,13 @@ impl RunConfig {
                     "true" | "1" | "on" => true,
                     "false" | "0" | "off" => false,
                     other => bail!("--train.auto_buckets '{other}' (true|false)"),
+                }
+            }
+            "train.compact" => {
+                self.train.compact = match value {
+                    "true" | "1" | "on" => true,
+                    "false" | "0" | "off" => false,
+                    other => bail!("--train.compact '{other}' (true|false)"),
                 }
             }
             "pipeline.workers" => self.pipeline.workers = value.parse()?,
@@ -946,7 +966,8 @@ mod tests {
                 token_budget: 0,
                 budget_mode: BudgetMode::None,
                 auto_buckets: false,
-                shards: 1
+                shards: 1,
+                compact: true
             }
         );
         cfg.set("train.packer", "fixed").unwrap();
@@ -958,6 +979,24 @@ mod tests {
         assert!(cfg.train.auto_buckets);
         assert!(cfg.set("train.packer", "bogus").is_err());
         assert!(cfg.set("train.auto_buckets", "maybe").is_err());
+        // compacted grad layout: on by default, switchable both ways
+        assert!(cfg.train.compact);
+        cfg.set("train.compact", "false").unwrap();
+        assert!(!cfg.train.compact);
+        cfg.set("train.compact", "on").unwrap();
+        assert!(cfg.train.compact);
+        assert!(cfg.set("train.compact", "maybe").is_err());
+    }
+
+    #[test]
+    fn train_compact_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_compact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.toml");
+        std::fs::write(&path, "[train]\ncompact = false\n").unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert!(!cfg.train.compact);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

@@ -84,6 +84,29 @@ impl LearnItem {
     pub fn is_zero_contribution(&self) -> bool {
         self.adv == 0.0 || self.ht_w.iter().all(|&w| w == 0.0)
     }
+
+    /// Number of kept (non-zero-weight) response tokens — the quantity the
+    /// compacted grad grid buckets on instead of `learn_len`.
+    pub fn kept(&self) -> usize {
+        self.ht_w.iter().filter(|&&w| w != 0.0).count()
+    }
+
+    /// Original response positions of the kept tokens, ascending — the dense
+    /// gather index list the compacted layout packs by (and that gradients
+    /// scatter back through).
+    pub fn kept_indices(&self) -> Vec<usize> {
+        (0..self.resp_len).filter(|&t| self.ht_w[t] != 0.0).collect()
+    }
+
+    /// True when the kept set is a contiguous prefix `0..kept()` of the
+    /// response (GRPO/DetTrunc/RPC plans). Prefix-shaped items gain nothing
+    /// from gather compaction — the prefix layout already pays exactly
+    /// `learn_len` — so the packer keeps routing them to the legacy
+    /// `grad_T<b>` grid.
+    pub fn is_prefix_shaped(&self) -> bool {
+        let k = self.kept();
+        self.ht_w[..k].iter().all(|&w| w != 0.0)
+    }
 }
 
 /// The full-token-GRPO counterfactual of a rollout group: every response at
@@ -109,9 +132,23 @@ pub fn full_length_items(seqs: &[RolloutSeq]) -> Vec<LearnItem> {
 }
 
 /// A packed micro-batch for one (sequence bucket, row bucket) grad artifact.
+///
+/// Two layouts share this struct, discriminated by `gather`:
+///
+/// * `gather == None` — the legacy **prefix** layout: response slot `t`
+///   holds the response token at position `t`, and `bucket` is a
+///   `learn_len` bucket (`grad_T<b>_B<r>` artifacts).
+/// * `gather == Some(..)` — the **compacted** layout: response slot `j`
+///   holds the `j`-th *kept* token of its row, `bucket` is a
+///   **kept-count** bucket (`grad_K<k>_B<r>` artifacts), and
+///   `gather[r * bucket + j]` records the token's original response
+///   position (−1 for empty slots) so gradients scatter back by position.
+///   `ht_w`/`old_lp` are gathered into the same slot order.
 #[derive(Clone, Debug)]
 pub struct MicroBatch {
-    /// Sequence bucket: response window length of the grad artifact.
+    /// Sequence bucket: response window length of the grad artifact
+    /// (a `learn_len` bucket in the prefix layout, a kept-count bucket in
+    /// the compacted layout).
     pub bucket: usize,
     /// Allocated rows (the artifact's batch dimension). Always `batch_train`
     /// under the fixed packer; a row-grid bucket under the budget packer.
@@ -124,6 +161,9 @@ pub struct MicroBatch {
     pub old_lp: Vec<f32>,   // [rows, bucket]
     pub inv_len: Vec<f32>,  // [rows] = 1 / t_i (FULL response length)
     pub pad_len: Vec<i32>,  // [rows]
+    /// Original response position per slot ([rows, bucket], −1 = empty);
+    /// `Some` selects the compacted `grad_K<k>_B<r>` artifact family.
+    pub gather: Option<Vec<i32>>,
 }
 
 /// Smallest bucket >= learn_len; hard error past the top bucket (silent
@@ -178,12 +218,22 @@ pub fn pack(
 
 /// Smallest row-grid entry >= `n`. The grid is the set of batch dimensions
 /// compiled grad artifacts exist for (ascending, max = batch_train).
+///
+/// Panics when `n` exceeds the top of a non-empty grid: silently clamping
+/// to `row_grid.last()` (the old behaviour) would under-allocate rows and
+/// truncate the group — the row-axis twin of the over-top-bucket bias both
+/// packers hard-error on. The budget packer's partition DP never forms a
+/// group larger than the top grid entry, so a panic here means a caller
+/// bug, not a data-dependent condition.
 pub fn alloc_rows(row_grid: &[usize], n: usize) -> usize {
-    row_grid
-        .iter()
-        .copied()
-        .find(|&r| r >= n)
-        .unwrap_or_else(|| row_grid.last().copied().unwrap_or(n))
+    match row_grid.iter().copied().find(|&r| r >= n) {
+        Some(r) => r,
+        None if row_grid.is_empty() => n,
+        None => panic!(
+            "alloc_rows: group of {n} rows exceeds the top of the row grid \
+             {row_grid:?} — packing it would silently truncate rows"
+        ),
+    }
 }
 
 /// Token-budget packer: sort by `learn_len`, then fill micro-batches in the
@@ -208,6 +258,38 @@ pub fn pack_budget(
     row_grid: &[usize],
     token_budget: usize,
 ) -> Result<Vec<MicroBatch>> {
+    pack_budget_with(items, buckets, prompt_len, row_grid, token_budget, false)
+}
+
+/// True when gather compaction is the cheaper layout for this item: its
+/// kept set is scattered (non-prefix) AND its kept count routes to a
+/// strictly smaller bucket than its `learn_len` would. Prefix-shaped plans
+/// (GRPO/DetTrunc/RPC) and scattered plans whose kept count lands in the
+/// same bucket keep the legacy layout — never pay the gather for nothing.
+fn routes_compact(item: &LearnItem, buckets: &[usize]) -> Result<bool> {
+    let k = item.kept();
+    if k == 0 || item.is_prefix_shaped() {
+        return Ok(false);
+    }
+    Ok(bucket_for(buckets, k)? < bucket_for(buckets, item.learn_len)?)
+}
+
+/// [`pack_budget`] with an explicit layout switch. `compact = false` is the
+/// legacy prefix-only packer, bit-for-bit. `compact = true` routes each item
+/// through [`routes_compact`] and packs the two pools separately — the
+/// prefix pool keyed (and bucketed) on `learn_len` into `grad_T<b>_B<r>`
+/// shapes, the compacted pool keyed on kept-token count into
+/// `grad_K<k>_B<r>` shapes — each with the same exact partition DP.
+/// Prefix-shaped plans therefore produce *identical* micro-batches under
+/// both switches.
+pub fn pack_budget_with(
+    items: &[LearnItem],
+    buckets: &[usize],
+    prompt_len: usize,
+    row_grid: &[usize],
+    token_budget: usize,
+    compact: bool,
+) -> Result<Vec<MicroBatch>> {
     validate(items, buckets)?;
     if row_grid.is_empty() || row_grid.windows(2).any(|w| w[0] >= w[1]) {
         bail!("row grid must be non-empty ascending: {row_grid:?}");
@@ -215,9 +297,35 @@ pub fn pack_budget(
     let max_rows = *row_grid.last().unwrap();
     let top = *buckets.last().unwrap();
     let budget = if token_budget == 0 { max_rows * (prompt_len + top) } else { token_budget };
-    let cost = |n: usize, bucket: usize| alloc_rows(row_grid, n) * (prompt_len + bucket);
+    let mut prefix_pool: Vec<&LearnItem> = Vec::new();
+    let mut compact_pool: Vec<&LearnItem> = Vec::new();
     for item in items {
-        let b = bucket_for(buckets, item.learn_len)?;
+        if compact && routes_compact(item, buckets)? {
+            compact_pool.push(item);
+        } else {
+            prefix_pool.push(item);
+        }
+    }
+    let mut out = pack_pool(&prefix_pool, buckets, prompt_len, row_grid, budget, false)?;
+    out.extend(pack_pool(&compact_pool, buckets, prompt_len, row_grid, budget, true)?);
+    Ok(out)
+}
+
+/// The exact partition DP over one layout pool. `compact` selects the
+/// grouping key (kept count vs `learn_len`) and the emitted layout.
+fn pack_pool(
+    pool: &[&LearnItem],
+    buckets: &[usize],
+    prompt_len: usize,
+    row_grid: &[usize],
+    budget: usize,
+    compact: bool,
+) -> Result<Vec<MicroBatch>> {
+    let max_rows = *row_grid.last().unwrap();
+    let key = |it: &LearnItem| if compact { it.kept() } else { it.learn_len };
+    let cost = |n: usize, bucket: usize| alloc_rows(row_grid, n) * (prompt_len + bucket);
+    for &item in pool {
+        let b = bucket_for(buckets, key(item))?;
         if cost(1, b) > budget {
             bail!(
                 "train.token_budget {budget} is below one row of bucket {b} \
@@ -227,10 +335,11 @@ pub fn pack_budget(
         }
     }
 
-    // Sort by learn_len (stable: ties keep arrival order) so every group of
-    // consecutive items shares the smallest viable bucket of its last item.
-    let mut order: Vec<usize> = (0..items.len()).collect();
-    order.sort_by_key(|&i| items[i].learn_len);
+    // Sort by the pool key (stable: ties keep arrival order) so every group
+    // of consecutive items shares the smallest viable bucket of its last
+    // item.
+    let mut order: Vec<usize> = (0..pool.len()).collect();
+    order.sort_by_key(|&i| key(pool[i]));
 
     // dp[i] = minimal allocated tokens packing the first i sorted items;
     // cut[i] = start of the last micro-batch in that optimum. Ties prefer
@@ -240,7 +349,7 @@ pub fn pack_budget(
     let mut cut = vec![0usize; n + 1];
     dp[0] = 0;
     for i in 1..=n {
-        let b_i = bucket_for(buckets, items[order[i - 1]].learn_len)?;
+        let b_i = bucket_for(buckets, key(pool[order[i - 1]]))?;
         for j in i.saturating_sub(max_rows)..i {
             let c = cost(i - j, b_i);
             if c > budget || dp[j] == usize::MAX {
@@ -263,10 +372,14 @@ pub fn pack_budget(
     bounds.reverse();
     let mut out = Vec::new();
     for (lo, hi) in bounds {
-        let group: Vec<&LearnItem> = order[lo..hi].iter().map(|&k| &items[k]).collect();
-        let bucket = bucket_for(buckets, items[order[hi - 1]].learn_len)?;
+        let group: Vec<&LearnItem> = order[lo..hi].iter().map(|&k| pool[k]).collect();
+        let bucket = bucket_for(buckets, key(pool[order[hi - 1]]))?;
         let rows = alloc_rows(row_grid, group.len());
-        out.push(pack_one(&group, bucket, prompt_len, rows));
+        out.push(if compact {
+            pack_one_compact(&group, bucket, prompt_len, rows)
+        } else {
+            pack_one(&group, bucket, prompt_len, rows)
+        });
     }
     Ok(out)
 }
@@ -284,6 +397,7 @@ fn pack_one(rows: &[&LearnItem], bucket: usize, prompt_len: usize, alloc: usize)
         old_lp: vec![0.0; alloc * bucket],
         inv_len: vec![0.0; alloc],
         pad_len: vec![prompt_len as i32; alloc],
+        gather: None,
     };
     for (r, item) in rows.iter().enumerate() {
         // token prefix: prompt window + first `bucket` response tokens
@@ -297,6 +411,82 @@ fn pack_one(rows: &[&LearnItem], bucket: usize, prompt_len: usize, alloc: usize)
         mb.pad_len[r] = item.pad_len as i32;
     }
     mb
+}
+
+/// Compacted layout: response slot `j` of a row holds the row's `j`-th kept
+/// token (gathered from original position `kept_indices()[j]`); `bucket` is
+/// a **kept-count** bucket. The gather list records each slot's original
+/// response position (−1 for empty slots) so the grad kernel can scatter
+/// per-token gradients back by position; `ht_w`/`old_lp` gather into the
+/// same slot order, and `inv_len` still reflects the FULL response length —
+/// the HT estimator is untouched, only the layout is dense.
+fn pack_one_compact(
+    rows: &[&LearnItem],
+    bucket: usize,
+    prompt_len: usize,
+    alloc: usize,
+) -> MicroBatch {
+    debug_assert!(rows.len() <= alloc);
+    let s = prompt_len + bucket;
+    let mut mb = MicroBatch {
+        bucket,
+        rows: alloc,
+        real_rows: rows.len(),
+        tokens: vec![PAD; alloc * s],
+        ht_w: vec![0.0; alloc * bucket],
+        adv: vec![0.0; alloc],
+        old_lp: vec![0.0; alloc * bucket],
+        inv_len: vec![0.0; alloc],
+        pad_len: vec![prompt_len as i32; alloc],
+        gather: None,
+    };
+    let mut gather = vec![-1i32; alloc * bucket];
+    for (r, item) in rows.iter().enumerate() {
+        mb.tokens[r * s..r * s + prompt_len].copy_from_slice(&item.tokens[..prompt_len]);
+        for (j, pos) in item.kept_indices().into_iter().enumerate() {
+            debug_assert!(j < bucket, "kept count exceeds the kept-count bucket");
+            mb.tokens[r * s + prompt_len + j] = item.tokens[prompt_len + pos];
+            mb.ht_w[r * bucket + j] = item.ht_w[pos];
+            mb.old_lp[r * bucket + j] = item.old_lp[pos];
+            gather[r * bucket + j] = pos as i32;
+        }
+        mb.adv[r] = item.adv;
+        mb.inv_len[r] = 1.0 / item.resp_len as f32;
+        mb.pad_len[r] = item.pad_len as i32;
+    }
+    mb.gather = Some(gather);
+    mb
+}
+
+/// Ledger accounting for the compacted layout: `(kept, alloc, bound)`
+/// summed over the COMPACTED micro-batches only — backpropped kept tokens,
+/// allocated tokens, and the minimal grid-legal allocation re-derived from
+/// each micro-batch's own contents (real rows rounded up on the row grid ×
+/// the max per-row kept count rounded up on the bucket grid, plus the
+/// prompt window). A healthy packer satisfies `kept ≤ alloc ≤ bound`:
+/// `bound − kept` is exactly the row-grid + bucket rounding slack, and an
+/// `alloc` above `bound` means some micro-batch allocated more than the
+/// minimal cover of its rows. `nat trace --check` enforces the invariant.
+pub fn compact_stats(
+    mbs: &[MicroBatch],
+    buckets: &[usize],
+    row_grid: &[usize],
+    prompt_len: usize,
+) -> (usize, usize, usize) {
+    let (mut kept, mut alloc, mut bound) = (0usize, 0usize, 0usize);
+    for mb in mbs {
+        let Some(g) = &mb.gather else { continue };
+        alloc += mb.rows * (prompt_len + mb.bucket);
+        let mut max_k = 0usize;
+        for r in 0..mb.real_rows {
+            let k = g[r * mb.bucket..(r + 1) * mb.bucket].iter().filter(|&&p| p >= 0).count();
+            kept += k;
+            max_k = max_k.max(k);
+        }
+        let b = buckets.iter().copied().find(|&b| b >= max_k).unwrap_or(mb.bucket);
+        bound += alloc_rows(row_grid, mb.real_rows) * (prompt_len + b);
+    }
+    (kept, alloc, bound)
 }
 
 /// The per-micro-batch token cap the budget packer should run with. Under
@@ -392,6 +582,66 @@ pub mod shard_workload {
     pub fn micro_batches() -> Vec<MicroBatch> {
         pack_budget(&items(), &BUCKETS, PROMPT_LEN, &ROW_GRID, 0)
             .expect("shard workload packs within the top bucket")
+    }
+}
+
+/// The compaction acceptance workload: long responses (64..=128 tokens)
+/// under scattered ~50%-keep selection — the case where prefix packing pays
+/// for nearly the full response while only half its tokens carry gradient.
+/// ONE definition shared by `benches/bench_compaction.rs` (which writes
+/// `BENCH_compaction.json`) and the tier-1 ≥30%-fewer-allocated-tokens gate
+/// in this module's tests, mirroring the `shard_workload` pattern.
+pub mod compaction_workload {
+    use super::{pack_budget, pack_budget_with, LearnItem, MicroBatch};
+    use crate::config::Method;
+    use crate::coordinator::masking::sample;
+    use crate::util::rng::Rng;
+
+    pub const SEED: u64 = 0xC0_4F_AC_7;
+    pub const ITEMS: usize = 24;
+    pub const PROMPT_LEN: usize = 16;
+    pub const MAX_RESP: usize = 128;
+    pub const BUCKETS: [usize; 8] = [16, 32, 48, 64, 80, 96, 112, 128];
+    pub const ROW_GRID: [usize; 4] = [1, 2, 4, 8];
+
+    /// The scattered ~50%-keep methods the acceptance gate covers. Poisson's
+    /// per-sequence rate targets ~48 of the 64..=128-token responses — about
+    /// half, like the two p = 0.5 schemes.
+    pub fn methods() -> Vec<(&'static str, Method)> {
+        vec![
+            ("urs", Method::Urs { p: 0.5 }),
+            ("stratified", Method::Stratified { p: 0.5 }),
+            ("poisson", Method::Poisson { k: 48 }),
+        ]
+    }
+
+    /// One draw of the workload: `ITEMS` responses of 64..=128 tokens with
+    /// the given method's selection applied.
+    pub fn items(method: &Method, rng: &mut Rng) -> Vec<LearnItem> {
+        (0..ITEMS)
+            .map(|_| {
+                let t = 64 + rng.below(65) as usize;
+                let m = sample(method, t, rng);
+                LearnItem {
+                    tokens: (0..(PROMPT_LEN + MAX_RESP) as i32).map(|x| 3 + x % 50).collect(),
+                    pad_len: 4,
+                    resp_len: t,
+                    ht_w: m.ht_w,
+                    learn_len: m.learn_len,
+                    adv: 0.75,
+                    old_lp: (0..t).map(|i| -0.1 - 0.05 * (i % 7) as f32).collect(),
+                }
+            })
+            .collect()
+    }
+
+    /// The same items packed prefix-only vs with gather compaction.
+    pub fn both_layouts(items: &[LearnItem]) -> (Vec<MicroBatch>, Vec<MicroBatch>) {
+        let prefix = pack_budget(items, &BUCKETS, PROMPT_LEN, &ROW_GRID, 0)
+            .expect("compaction workload packs within the top bucket");
+        let compact = pack_budget_with(items, &BUCKETS, PROMPT_LEN, &ROW_GRID, 0, true)
+            .expect("compaction workload packs within the top bucket");
+        (prefix, compact)
     }
 }
 
@@ -805,5 +1055,151 @@ mod tests {
         assert!(padding_waste(&mbs, &items, P) < 1e-9);
         assert_eq!(allocated_tokens(&mbs, P), ideal_tokens(&items, P));
         assert_eq!(padding_waste(&[], &[], P), 0.0);
+    }
+
+    /// A row with nonzero weights only at the given response positions.
+    fn scattered_item(resp_len: usize, kept: &[usize], adv: f32) -> LearnItem {
+        let mut ht_w = vec![0.0f32; resp_len];
+        for &pos in kept {
+            ht_w[pos] = 2.0 + pos as f32;
+        }
+        let learn_len = kept.iter().max().map_or(1, |&m| m + 1);
+        LearnItem { ht_w, learn_len, ..item(resp_len, learn_len, adv) }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the top of the row grid")]
+    fn alloc_rows_errors_past_grid_top() {
+        // Regression: the old fallback clamped to row_grid.last(), silently
+        // under-allocating rows for an oversized group.
+        alloc_rows(&[1, 2, 4], 5);
+    }
+
+    #[test]
+    fn kept_helpers_classify_prefix_and_scattered_shapes() {
+        let prefix = item(16, 6, 1.0);
+        assert_eq!(prefix.kept(), 6);
+        assert_eq!(prefix.kept_indices(), vec![0, 1, 2, 3, 4, 5]);
+        assert!(prefix.is_prefix_shaped());
+
+        let scattered = scattered_item(16, &[1, 7, 12], 1.0);
+        assert_eq!(scattered.kept(), 3);
+        assert_eq!(scattered.kept_indices(), vec![1, 7, 12]);
+        assert_eq!(scattered.learn_len, 13);
+        assert!(!scattered.is_prefix_shaped());
+
+        // empty kept set is (vacuously) prefix-shaped and never compacts
+        let empty = LearnItem { ht_w: vec![0.0; 16], ..item(16, 4, 1.0) };
+        assert_eq!(empty.kept(), 0);
+        assert!(empty.is_prefix_shaped());
+        assert!(!routes_compact(&empty, &BUCKETS).unwrap());
+    }
+
+    #[test]
+    fn compact_pack_gathers_kept_tokens_and_records_positions() {
+        let it = scattered_item(16, &[1, 7, 12], 0.5);
+        let mbs = pack_budget_with(&[it.clone()], &BUCKETS, P, &GRID, 0, true).unwrap();
+        assert_eq!(mbs.len(), 1);
+        let m = &mbs[0];
+        // 3 kept tokens bucket to 4, not learn_len 13's bucket 16
+        assert_eq!(m.bucket, 4);
+        assert_eq!(m.rows, 1);
+        let g = m.gather.as_ref().expect("compacted micro-batch carries gather");
+        assert_eq!(g, &vec![1, 7, 12, -1]);
+        // slot j holds the token/weight/logprob from original position g[j]
+        for (j, &pos) in [1usize, 7, 12].iter().enumerate() {
+            assert_eq!(m.tokens[P + j], it.tokens[P + pos]);
+            assert_eq!(m.ht_w[j], it.ht_w[pos]);
+            assert_eq!(m.old_lp[j], it.old_lp[pos]);
+        }
+        // prompt window and per-row scalars are layout-independent
+        assert_eq!(m.tokens[..P], it.tokens[..P]);
+        assert!((m.inv_len[0] - 1.0 / 16.0).abs() < 1e-7);
+        assert_eq!(m.pad_len[0], it.pad_len as i32);
+    }
+
+    #[test]
+    fn pack_budget_with_routes_only_cheaper_scattered_items() {
+        let items = vec![
+            item(16, 6, 1.0),                    // prefix-shaped -> legacy
+            scattered_item(16, &[1, 7, 12], 1.0), // kept 3 < learn_len 13 -> compact
+            scattered_item(16, &[0, 1, 3], 1.0),  // kept 3, learn_len 4: same bucket -> legacy
+        ];
+        let mbs = pack_budget_with(&items, &BUCKETS, P, &GRID, 0, true).unwrap();
+        let compacted: Vec<&MicroBatch> = mbs.iter().filter(|m| m.gather.is_some()).collect();
+        let legacy_rows: usize =
+            mbs.iter().filter(|m| m.gather.is_none()).map(|m| m.real_rows).sum();
+        assert_eq!(compacted.len(), 1);
+        assert_eq!(compacted[0].real_rows, 1);
+        assert_eq!(legacy_rows, 2);
+    }
+
+    #[test]
+    fn prefix_shaped_plans_identical_under_compact_switch() {
+        // RPC/DetTrunc/GRPO-shaped pools: compact=true must be bit-for-bit
+        // the legacy packer (every item routes to the prefix pool).
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let items: Vec<LearnItem> = (0..12)
+                .map(|_| {
+                    let t = 1 + rng.below(16) as usize;
+                    let m = sample(&Method::Rpc { min_cut: 4 }, t, &mut rng);
+                    LearnItem {
+                        ht_w: m.ht_w,
+                        learn_len: m.learn_len,
+                        ..item(t, 1, 1.0)
+                    }
+                })
+                .collect();
+            let legacy = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+            let with = pack_budget_with(&items, &BUCKETS, P, &GRID, 0, true).unwrap();
+            assert_eq!(format!("{legacy:?}"), format!("{with:?}"));
+        }
+    }
+
+    #[test]
+    fn compact_stats_invariants_hold() {
+        let items = vec![
+            scattered_item(16, &[1, 7, 12], 1.0),
+            scattered_item(16, &[0, 5, 9, 14], 1.0),
+            item(16, 6, 1.0),
+        ];
+        let mbs = pack_budget_with(&items, &BUCKETS, P, &GRID, 0, true).unwrap();
+        let (kept, alloc, bound) = compact_stats(&mbs, &BUCKETS, &GRID, P);
+        assert_eq!(kept, 7); // 3 + 4 kept tokens; the prefix row is excluded
+        assert!(kept <= alloc, "kept {kept} > alloc {alloc}");
+        assert!(alloc <= bound, "alloc {alloc} > bound {bound}");
+        // prefix-only packings report zeros
+        let legacy = pack_budget(&items, &BUCKETS, P, &GRID, 0).unwrap();
+        assert_eq!(compact_stats(&legacy, &BUCKETS, &GRID, P), (0, 0, 0));
+    }
+
+    #[test]
+    fn compaction_cuts_scattered_keep_allocation_by_30pct() {
+        // THE acceptance gate (tier-1 twin of benches/bench_compaction.rs):
+        // on the shared scattered ~50%-keep workload, gather compaction must
+        // allocate >= 30% fewer grad tokens than prefix packing for each of
+        // URS / stratified / Poisson.
+        use super::compaction_workload as w;
+        for (name, method) in w::methods() {
+            let mut rng = Rng::new(w::SEED);
+            let (mut prefix_alloc, mut compact_alloc) = (0usize, 0usize);
+            for _ in 0..20 {
+                let items = w::items(&method, &mut rng);
+                let (items, _) = split_zero_contribution(items);
+                let (prefix, compact) = w::both_layouts(&items);
+                prefix_alloc += allocated_tokens(&prefix, w::PROMPT_LEN);
+                compact_alloc += allocated_tokens(&compact, w::PROMPT_LEN);
+                // every allocation still covers all backpropped tokens
+                let (kept, alloc, bound) =
+                    compact_stats(&compact, &w::BUCKETS, &w::ROW_GRID, w::PROMPT_LEN);
+                assert!(kept <= alloc && alloc <= bound, "{name}: {kept}/{alloc}/{bound}");
+            }
+            assert!(
+                10 * compact_alloc <= 7 * prefix_alloc,
+                "{name}: compacted {compact_alloc} tokens not >=30% below \
+                 prefix-packed {prefix_alloc}"
+            );
+        }
     }
 }

@@ -90,6 +90,21 @@ impl SelectionPlan {
             self.kept as f64 / self.ht_w.len() as f64
         }
     }
+
+    /// Dense gather index list: the original response positions of the kept
+    /// tokens, ascending. This is the compacted grad layout's packing key —
+    /// `grad_K<k>_B<r>` micro-batches gather token/logprob/weight rows
+    /// through these indices and scatter gradients back by position.
+    pub fn gather_indices(&self) -> Vec<usize> {
+        (0..self.ht_w.len()).filter(|&t| self.ht_w[t] != 0.0).collect()
+    }
+
+    /// True when the kept set is a contiguous prefix `0..kept` (GRPO /
+    /// DetTrunc / RPC shapes) — such plans stay on the legacy prefix grid
+    /// because compaction cannot shrink them.
+    pub fn is_prefix_shaped(&self) -> bool {
+        self.ht_w[..self.kept.min(self.ht_w.len())].iter().all(|&w| w != 0.0)
+    }
 }
 
 /// A pluggable token-selection scheme.
@@ -337,6 +352,17 @@ mod tests {
         assert!((plan.expected_kept() - 1.75).abs() < 1e-12);
         assert!((plan.selected_ratio() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(SelectionPlan::empty().expected_kept(), 0.0);
+        assert_eq!(plan.gather_indices(), vec![0, 1]);
+        assert!(plan.is_prefix_shaped());
+        let scattered = SelectionPlan {
+            probs: vec![0.5; 4],
+            ht_w: vec![2.0, 0.0, 2.0, 0.0],
+            kept: 2,
+            learn_len: 3,
+        };
+        assert_eq!(scattered.gather_indices(), vec![0, 2]);
+        assert!(!scattered.is_prefix_shaped());
+        assert!(SelectionPlan::empty().is_prefix_shaped());
     }
 
     #[test]

@@ -7,10 +7,12 @@
 //!   per method; under `--train.budget_mode batch` the batch controller
 //!   first re-solves the keep parameter so expected selected tokens hit
 //!   `--train.token_budget`) → micro-batching off `SelectionPlan::learn_len`
-//!   (fixed or token-budget packer; see `--train.packer`) → per-(bucket,
-//!   rows) grad artifacts executed across `--train.shards` data-parallel
-//!   workers → fixed-order tree reduction keyed by micro-batch id → AdamW
-//!   apply.
+//!   (fixed or token-budget packer; see `--train.packer`; under
+//!   `--train.compact` the budget packer re-keys scattered plans by
+//!   KEPT-token count into gather-compacted `grad_K<k>_B<r>` micro-batches
+//!   when that is strictly cheaper) → per-(bucket, rows) grad artifacts
+//!   executed across `--train.shards` data-parallel workers → fixed-order
+//!   tree reduction keyed by micro-batch id → AdamW apply.
 //!   The reduction order is a pure function of the step plan, so any shard
 //!   count produces bit-identical parameters and statistics
 //!   (`runtime::shard`; proptested in `tests/sharding.rs`).
@@ -40,8 +42,9 @@ use anyhow::Result;
 
 use crate::config::{BudgetMode, Packer, RolloutEngine, RunConfig};
 use crate::coordinator::batcher::{
-    allocated_tokens, full_length_items, ideal_tokens, micro_shapes, pack, pack_budget,
-    packer_token_budget, plan_shards, split_zero_contribution, LearnItem, MicroBatch,
+    allocated_tokens, compact_stats, full_length_items, ideal_tokens, micro_shapes, pack,
+    pack_budget, pack_budget_with, packer_token_budget, plan_shards, split_zero_contribution,
+    LearnItem, MicroBatch,
 };
 use crate::coordinator::bucket_tuner::{BucketTuner, TunerState};
 use crate::coordinator::rollout::scheduler::{RolloutScheduler, SchedStats};
@@ -270,6 +273,12 @@ pub fn learn_stage(
     // batch the packer runs on its auto cap (`token_budget` is the
     // selection target there, not a packing cap).
     let budget = cfg.train.packer == Packer::Budget;
+    // Gather-compacted grad layout: re-key scattered plans by kept-token
+    // count when the config asks for it AND the manifest carries the
+    // `grad_K<k>_B<r>` grid. Prefix-shaped plans always stay on the legacy
+    // grid inside the packer, so prefix-method runs are bit-identical under
+    // either setting.
+    let compact = cfg.train.compact && budget && rt.manifest.has_compact();
     let pack_cap = packer_token_budget(&cfg.train);
     let row_grid = rt.manifest.row_grid();
     let edges: Vec<usize> = match tuner.as_deref() {
@@ -284,6 +293,10 @@ pub fn learn_stage(
     let mut exp_kept = 0.0f64;
     let mut sel_var_acc = 0.0f64;
     let mut alloc_toks = 0usize;
+    let mut alloc_prefix_toks = 0usize;
+    let mut compact_kept = 0usize;
+    let mut compact_alloc = 0usize;
+    let mut compact_bound = 0usize;
     let mut ideal_toks = 0usize;
     let mut backprop_toks = 0usize;
     let mut ht = HtMoments::default();
@@ -338,15 +351,30 @@ pub fn learn_stage(
             t.observe(&lens);
         }
         let mbs: Vec<MicroBatch> = if budget {
-            pack_budget(&items, &edges, d.prompt_len, &row_grid, pack_cap)?
+            pack_budget_with(&items, &edges, d.prompt_len, &row_grid, pack_cap, compact)?
         } else {
             pack(&items, &d.buckets, d.prompt_len, d.batch_train)?
         };
         let epoch_alloc = allocated_tokens(&mbs, d.prompt_len);
         alloc_toks += epoch_alloc;
+        // Realized-saving baseline: when anything actually compacted, price
+        // the SAME items prefix-packed through the same packer; otherwise
+        // the counterfactual IS the realized packing (saving reads 0).
+        let (ck, ca, cb) = compact_stats(&mbs, &edges, &row_grid, d.prompt_len);
+        compact_kept += ck;
+        compact_alloc += ca;
+        compact_bound += cb;
+        alloc_prefix_toks += if ca > 0 {
+            let prefix_mbs =
+                pack_budget_with(&items, &edges, d.prompt_len, &row_grid, pack_cap, false)?;
+            allocated_tokens(&prefix_mbs, d.prompt_len)
+        } else {
+            epoch_alloc
+        };
         ideal_toks += ideal_tokens(&items, d.prompt_len);
         sp_pack.arg("micro_batches", mbs.len() as f64);
         sp_pack.arg("alloc_tokens", epoch_alloc as f64);
+        sp_pack.arg("compact_alloc", ca as f64);
         drop(sp_pack);
         acc.reset();
         // Dropped inert and empty rows still count toward the 1/sequences
@@ -413,9 +441,14 @@ pub fn learn_stage(
         ht_w_max: ht.w_max,
         ht_ess: ht.ess(),
         budget_realized,
+        alloc_tokens_prefix: alloc_prefix_toks as f64 / eps,
+        compact_kept: compact_kept as f64 / eps,
+        compact_alloc: compact_alloc as f64 / eps,
+        compact_bound: compact_bound as f64 / eps,
     };
     sp_ledger.arg("backprop_frac", ledger.backprop_frac());
     sp_ledger.arg("flop_saving", ledger.flop_saving());
+    sp_ledger.arg("compact_saving", ledger.compact_saving());
     drop(sp_ledger);
     tracer.event("ledger", step1, &ledger.trace_args());
     sp_step.arg("micro_batches", n_micro as f64);

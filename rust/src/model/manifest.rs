@@ -60,6 +60,14 @@ pub struct Manifest {
     /// dimensions below `batch_train` (e.g. {1, 2, 4}); absent in legacy
     /// manifests, where only full-row micro-batches can execute.
     pub grad_row_files: Vec<((usize, usize), String)>,
+    /// ((kept-bucket, rows), filename): the gather-compacted grad grid.
+    /// Micro-batches here are keyed by KEPT-TOKEN count, not prefix
+    /// length — rows are gathered to the kept positions, the NAT loss
+    /// runs on the compacted layout, and gradients scatter back by the
+    /// recorded original positions. Kept buckets reuse the sequence
+    /// bucket edges. Absent in legacy manifests, where scattered plans
+    /// must pay their full prefix.
+    pub grad_compact_files: Vec<((usize, usize), String)>,
     pub score_files: Vec<(usize, String)>,
     /// Scorer variant whose forward runs the L1 Pallas flash-attention
     /// kernel (integration proof; may be absent in older artifact sets).
@@ -210,6 +218,31 @@ impl Manifest {
             }
             grad_row_files.sort();
         }
+        // Optional gather-compacted grid: {"<kept-bucket>x<rows>": file}.
+        // Kept buckets reuse the sequence bucket edges (a kept count is
+        // always <= its sequence's learn_len, so the same grid covers it).
+        // Unlike grad_rows there is no full-row legacy fallback — every
+        // (k, rows) cell the packer can route to must be listed.
+        let mut grad_compact_files: Vec<((usize, usize), String)> = Vec::new();
+        if let Some(obj) = arts.get("grad_compact").and_then(Json::as_obj) {
+            for (key, f) in obj {
+                let (k, r) = key
+                    .split_once('x')
+                    .and_then(|(k, r)| Some((k.parse::<usize>().ok()?, r.parse::<usize>().ok()?)))
+                    .ok_or_else(|| {
+                        anyhow!("bad grad_compact key '{key}' (want '<kept-bucket>x<rows>')")
+                    })?;
+                if !buckets.contains(&k) {
+                    bail!("grad_compact kept-bucket {k} is not a config bucket {buckets:?}");
+                }
+                if r == 0 || r > dims.batch_train {
+                    bail!("grad_compact rows {r} outside 1..={}", dims.batch_train);
+                }
+                let file = f.as_str().ok_or_else(|| anyhow!("bad grad_compact file"))?;
+                grad_compact_files.push(((k, r), file.to_string()));
+            }
+            grad_compact_files.sort();
+        }
         Ok(Manifest {
             dir: dir.to_path_buf(),
             dims,
@@ -225,6 +258,7 @@ impl Manifest {
             pretrain_file: file("pretrain")?,
             grad_files,
             grad_row_files,
+            grad_compact_files,
             score_files: bucket_map("score")?,
             score_pallas_files: bucket_map("score_pallas").unwrap_or_default(),
         })
@@ -279,6 +313,29 @@ impl Manifest {
                 anyhow!(
                     "no grad artifact for bucket {bucket} × rows {rows}; rebuild \
                      artifacts (make artifacts) or run with --train.packer fixed"
+                )
+            })
+    }
+
+    /// True when the manifest carries the gather-compacted grad grid —
+    /// the precondition for the batcher routing scattered plans to
+    /// kept-count micro-batches.
+    pub fn has_compact(&self) -> bool {
+        !self.grad_compact_files.is_empty()
+    }
+
+    /// Compacted grad artifact for a (kept-bucket, rows) micro-batch
+    /// shape. No full-row fallback: the compact grid must list every
+    /// cell explicitly.
+    pub fn grad_compact_file_for(&self, kept_bucket: usize, rows: usize) -> Result<&str> {
+        self.grad_compact_files
+            .iter()
+            .find(|&&((k, r), _)| k == kept_bucket && r == rows)
+            .map(|(_, f)| f.as_str())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no compacted grad artifact for kept-bucket {kept_bucket} × rows {rows}; \
+                     rebuild artifacts (make artifacts) or run with --train.compact false"
                 )
             })
     }
@@ -408,6 +465,47 @@ mod tests {
         assert_eq!(m.row_grid(), vec![2]);
         // but a direct (bucket, rows) lookup still finds the artifact
         assert_eq!(m.grad_file_for(4, 1).unwrap(), "g4b1.txt");
+    }
+
+    #[test]
+    fn parses_grad_compact_grid() {
+        let with = toy_manifest_json().replace(
+            r#""grad":{"4":"g4.txt","8":"g8.txt"}"#,
+            r#""grad":{"4":"g4.txt","8":"g8.txt"},
+               "grad_compact":{"4x1":"k4b1.txt","4x2":"k4b2.txt",
+                               "8x1":"k8b1.txt","8x2":"k8b2.txt"}"#,
+        );
+        let j = Json::parse(&with).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert!(m.has_compact());
+        assert_eq!(m.grad_compact_file_for(4, 2).unwrap(), "k4b2.txt");
+        assert_eq!(m.grad_compact_file_for(8, 1).unwrap(), "k8b1.txt");
+        // no legacy-grad fallback for full rows: every cell is explicit
+        assert!(m.grad_compact_file_for(8, 3).is_err());
+        // legacy manifest: no grad_compact → prefix path only
+        let j = Json::parse(&toy_manifest_json()).unwrap();
+        let legacy = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert!(!legacy.has_compact());
+        assert!(legacy.grad_compact_file_for(4, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_grad_compact() {
+        for grid in [
+            // rows beyond batch_train
+            r#""grad_compact":{"4x3":"k.txt"}"#,
+            // kept-bucket not in config
+            r#""grad_compact":{"5x1":"k.txt"}"#,
+            // malformed key
+            r#""grad_compact":{"4-1":"k.txt"}"#,
+        ] {
+            let bad = toy_manifest_json().replace(
+                r#""grad":{"4":"g4.txt","8":"g8.txt"}"#,
+                &format!(r#""grad":{{"4":"g4.txt","8":"g8.txt"}},{grid}"#),
+            );
+            let j = Json::parse(&bad).unwrap();
+            assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err(), "{grid}");
+        }
     }
 
     #[test]

@@ -54,6 +54,10 @@ pub struct LedgerAgg {
     pub ht_w_max: f64,
     pub ht_ess_sum: f64,
     pub budget_realized: f64,
+    pub alloc_tokens_prefix: f64,
+    pub compact_kept: f64,
+    pub compact_alloc: f64,
+    pub compact_bound: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -122,6 +126,33 @@ impl Report {
                  generated tokens (gate 1%)",
                 100.0 * gap
             );
+        }
+        // Compaction gate (active only when the compacted layout packed
+        // anything): the backpropped (gathered) tokens and the allocation
+        // must agree within the row-grid rounding bound — kept ≤ allocated
+        // ≤ bound, where the bound is re-derived from the gather contents.
+        // An allocation above the bound means the packer inflated compacted
+        // micro-batches; kept above the allocation means slots were lost.
+        let l = &self.ledger;
+        if l.compact_alloc > 0.0 {
+            let eps = 1e-6 * l.compact_alloc.max(1.0);
+            if l.compact_kept > l.compact_alloc + eps {
+                bail!(
+                    "compacted ledger: kept tokens {:.1} exceed allocated {:.1} \
+                     — gather slots were lost",
+                    l.compact_kept,
+                    l.compact_alloc
+                );
+            }
+            if l.compact_alloc > l.compact_bound + eps {
+                bail!(
+                    "compacted ledger: allocated tokens {:.1} exceed the row-grid \
+                     rounding bound {:.1} — the packer inflated compacted \
+                     micro-batches",
+                    l.compact_alloc,
+                    l.compact_bound
+                );
+            }
         }
         Ok(())
     }
@@ -193,6 +224,18 @@ impl Report {
             l.alloc_tokens / n,
             pct(l.alloc_tokens - l.ideal_tokens, l.alloc_tokens)
         );
+        if l.compact_alloc > 0.0 {
+            let _ = writeln!(
+                s,
+                "  compacted layout      {:>12.1}   vs prefix-packed {:.1} → realized saving {:.1}% \
+                 (kept {:.1}, bound {:.1})",
+                l.compact_alloc / n,
+                l.alloc_tokens_prefix / n,
+                pct(l.alloc_tokens_prefix - l.alloc_tokens, l.alloc_tokens_prefix),
+                l.compact_kept / n,
+                l.compact_bound / n
+            );
+        }
         let _ = writeln!(
             s,
             "  grad FLOPs            {:>12.3e}   vs full-GRPO {:.3e} → est. time saving {:.1}%",
@@ -256,6 +299,10 @@ pub fn analyze(text: &str) -> Result<Report> {
             l.ht_w_max = l.ht_w_max.max(arg("ht_w_max"));
             l.ht_ess_sum += arg("ht_ess");
             l.budget_realized += arg("budget_realized");
+            l.alloc_tokens_prefix += arg("alloc_tokens_prefix");
+            l.compact_kept += arg("compact_kept");
+            l.compact_alloc += arg("compact_alloc");
+            l.compact_bound += arg("compact_bound");
             continue;
         }
         let dur = ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
@@ -322,6 +369,10 @@ mod tests {
                     ("ht_w_max", 2.0),
                     ("ht_ess", 50.0),
                     ("budget_realized", 64.2),
+                    ("alloc_tokens_prefix", 360.0),
+                    ("compact_kept", 40.0),
+                    ("compact_alloc", 60.0),
+                    ("compact_bound", 60.0),
                 ],
             ),
         ]
@@ -355,6 +406,34 @@ mod tests {
         r.ledger.budget_realized = r.ledger.sel_tokens_exp + 0.02 * r.ledger.gen_tokens;
         let err = r.check().unwrap_err().to_string();
         assert!(err.contains("budget_realized"), "{err}");
+    }
+
+    #[test]
+    fn compaction_gate_enforces_rounding_bound() {
+        // healthy compacted step passes (sample_trace has kept 40 ≤ alloc 60
+        // ≤ bound 60) and renders the compacted line
+        let r = analyze(&sample_trace(950.0)).unwrap();
+        r.check().unwrap();
+        let rendered = r.render();
+        assert!(rendered.contains("compacted layout"), "{rendered}");
+        // allocation above the rounding bound = packer inflation
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.compact_alloc = r.ledger.compact_bound + 8.0;
+        let err = r.check().unwrap_err().to_string();
+        assert!(err.contains("rounding bound"), "{err}");
+        // kept tokens above the allocation = lost gather slots
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.compact_kept = r.ledger.compact_alloc + 1.0;
+        let err = r.check().unwrap_err().to_string();
+        assert!(err.contains("gather slots"), "{err}");
+        // inactive compaction (no compacted micro-batches) skips the gate
+        // and the render line
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.compact_alloc = 0.0;
+        r.ledger.compact_kept = 0.0;
+        r.ledger.compact_bound = 0.0;
+        r.check().unwrap();
+        assert!(!r.render().contains("compacted layout"));
     }
 
     #[test]

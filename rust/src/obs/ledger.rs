@@ -64,6 +64,22 @@ pub struct StepLedger {
     /// Copy of `StepStats::budget_realized` so a trace event is
     /// self-contained for `nat trace --check`.
     pub budget_realized: f64,
+    /// Counterfactual allocated tokens with the gather-compacted layout
+    /// DISABLED — the same items prefix-packed through the same packer.
+    /// Equals `alloc_tokens` when nothing was compacted, so
+    /// `compact_saving()` reads 0 rather than a fiction.
+    pub alloc_tokens_prefix: f64,
+    /// Kept (gathered) tokens inside compacted micro-batches, per-epoch
+    /// mean; 0 when the compacted layout is inactive.
+    pub compact_kept: f64,
+    /// Allocated tokens of the compacted micro-batches, Σ rows × (P + K).
+    pub compact_alloc: f64,
+    /// Row-grid rounding bound on `compact_alloc`: the allocation a healthy
+    /// packer cannot exceed, re-derived from the gather contents
+    /// (`batcher::compact_stats`). `nat trace --check` gates
+    /// `compact_kept ≤ compact_alloc ≤ compact_bound` when compaction is
+    /// active.
+    pub compact_bound: f64,
 }
 
 impl StepLedger {
@@ -86,6 +102,12 @@ impl StepLedger {
     /// Estimated peak-memory saving vs full-token GRPO ("18% less memory").
     pub fn mem_saving(&self) -> f64 {
         saving(self.peak_bytes, self.peak_bytes_full)
+    }
+
+    /// Realized allocated-token saving of the gather-compacted layout vs
+    /// prefix-packing the same step (0 when compaction is inactive).
+    pub fn compact_saving(&self) -> f64 {
+        saving(self.alloc_tokens, self.alloc_tokens_prefix)
     }
 
     /// Estimated grad FLOPs of a packed micro-batch set (Σ over batches of
@@ -113,6 +135,10 @@ impl StepLedger {
             ("ht_w_max", self.ht_w_max),
             ("ht_ess", self.ht_ess),
             ("budget_realized", self.budget_realized),
+            ("alloc_tokens_prefix", self.alloc_tokens_prefix),
+            ("compact_kept", self.compact_kept),
+            ("compact_alloc", self.compact_alloc),
+            ("compact_bound", self.compact_bound),
         ]
     }
 
@@ -130,6 +156,8 @@ impl StepLedger {
             ("mem_saving", self.mem_saving()),
             ("ht_w_max", self.ht_w_max),
             ("ht_ess", self.ht_ess),
+            ("alloc_tokens_prefix", self.alloc_tokens_prefix),
+            ("compact_saving", self.compact_saving()),
         ]
     }
 }
@@ -178,9 +206,31 @@ mod tests {
     fn trace_args_cover_every_field() {
         let l = StepLedger { gen_tokens: 1.0, ..StepLedger::default() };
         let args = l.trace_args();
-        assert_eq!(args.len(), 13);
+        assert_eq!(args.len(), 17);
         assert_eq!(args[0], ("gen_tokens", 1.0));
         // series is a subset plus the derived ratios
-        assert_eq!(l.series().len(), 10);
+        assert_eq!(l.series().len(), 12);
+    }
+
+    #[test]
+    fn compact_saving_reads_zero_when_inactive_and_real_when_on() {
+        // inactive: prefix counterfactual equals the realized allocation
+        let l = StepLedger {
+            alloc_tokens: 300.0,
+            alloc_tokens_prefix: 300.0,
+            ..StepLedger::default()
+        };
+        assert_eq!(l.compact_saving(), 0.0);
+        // active: 210 allocated vs 300 prefix-packed → 30% saving
+        let l = StepLedger {
+            alloc_tokens: 210.0,
+            alloc_tokens_prefix: 300.0,
+            compact_kept: 90.0,
+            compact_alloc: 120.0,
+            compact_bound: 120.0,
+            ..StepLedger::default()
+        };
+        assert!((l.compact_saving() - 0.3).abs() < 1e-12);
+        assert_eq!(StepLedger::default().compact_saving(), 0.0);
     }
 }

@@ -143,6 +143,14 @@ impl Runtime {
                 self.exe(f)?;
             }
         }
+        // Gather-compacted cells: a scattered plan's kept count can land in
+        // ANY kept-bucket at or below its sequence bucket, so warm every
+        // cell whose rows the packer can allocate.
+        for &((_, r), ref f) in &self.manifest.grad_compact_files.clone() {
+            if grid.contains(&r) || r == self.manifest.dims.batch_train {
+                self.exe(f)?;
+            }
+        }
         Ok(())
     }
 
@@ -300,16 +308,22 @@ impl Runtime {
         acc: &mut GradAccum,
     ) -> Result<GradMetrics> {
         let d = &self.manifest.dims;
-        // The micro-batch addresses one cell of the 2-D (bucket × rows)
-        // artifact grid; the fixed packer always produces rows ==
-        // batch_train, which maps to the legacy full-row artifacts.
+        // The micro-batch addresses one cell of a 2-D artifact grid: the
+        // legacy (bucket × rows) prefix grid, or — when `gather` is set —
+        // the (kept-bucket × rows) gather-compacted grid, whose artifacts
+        // take the scatter index matrix as an extra operand. The fixed
+        // packer always produces rows == batch_train on the legacy grid.
         let (b, p, t) = (mb.rows, d.prompt_len, mb.bucket);
-        let file = self.manifest.grad_file_for(t, b)?.to_string();
+        let file = if mb.gather.is_some() {
+            self.manifest.grad_compact_file_for(t, b)?.to_string()
+        } else {
+            self.manifest.grad_file_for(t, b)?.to_string()
+        };
         if let Engine::Sim(spec) = &self.engine {
             return sim::grad(&self.manifest, spec, mb, param_lits, acc);
         }
         let s = (p + t) as i64;
-        let batch_lits = [
+        let mut batch_lits = vec![
             xla::Literal::vec1(&mb.tokens).reshape(&[b as i64, s])?,
             xla::Literal::vec1(&mb.ht_w).reshape(&[b as i64, t as i64])?,
             xla::Literal::vec1(&mb.adv),
@@ -317,6 +331,9 @@ impl Runtime {
             xla::Literal::vec1(&mb.inv_len),
             xla::Literal::vec1(&mb.pad_len),
         ];
+        if let Some(g) = &mb.gather {
+            batch_lits.push(xla::Literal::vec1(g).reshape(&[b as i64, t as i64])?);
+        }
         let inputs: Vec<&xla::Literal> =
             param_lits.iter().chain(batch_lits.iter()).collect();
         let outs = self.run_refs(&file, &inputs)?;

@@ -13,7 +13,11 @@
 //! 1. **Leaves.** Each micro-batch's gradient is computed into its own
 //!    buffer ([`GradLeaf`]) instead of a shared accumulator. A leaf is a
 //!    pure function of `(micro-batch, params)`, so it is identical no matter
-//!    which shard worker computes it.
+//!    which shard worker computes it. Gather-compacted micro-batches
+//!    (`MicroBatch::gather`) are ordinary leaves: the layout is resolved
+//!    inside `grad_cached` (which routes to the `grad_K<k>_B<r>` artifact
+//!    family), so shard planning and the id-keyed reduction are
+//!    layout-oblivious and the `shards = K` bit-identity covers both grids.
 //! 2. **Execution.** [`execute_shards`] runs the shard plan (from
 //!    `coordinator::batcher::plan_shards`) on scoped threads — `Runtime` is
 //!    `Sync`, the same property the pipelined rollout workers rely on — and

@@ -102,6 +102,9 @@ pub fn sim_manifest() -> Manifest {
         "grad_rows":{"4x1":"sim://g4r1","4x2":"sim://g4r2",
                      "8x1":"sim://g8r1","8x2":"sim://g8r2",
                      "16x1":"sim://g16r1","16x2":"sim://g16r2"},
+        "grad_compact":{"4x1":"sim://k4r1","4x2":"sim://k4r2","4x4":"sim://k4r4",
+                        "8x1":"sim://k8r1","8x2":"sim://k8r2","8x4":"sim://k8r4",
+                        "16x1":"sim://k16r1","16x2":"sim://k16r2","16x4":"sim://k16r4"},
         "score":{"16":"sim://s16"}
       }
     }"#,
@@ -273,13 +276,28 @@ pub fn grad(
             if w == 0.0 {
                 continue;
             }
+            // Compacted layout: slot `tt` holds the token gathered from
+            // original response position `gather[tt]`; per-token hashes key
+            // on that ORIGINAL position, so the sim stays sensitive to the
+            // scatter indices while the legacy path (gather == None, where
+            // pos == tt) is bit-untouched.
+            let pos = match &mb.gather {
+                Some(g) => {
+                    let pos = g[r * t + tt];
+                    if pos < 0 {
+                        continue;
+                    }
+                    pos as u64
+                }
+                None => tt as u64,
+            };
             let tok = row_toks[p + tt] as f32;
             let lp = mb.old_lp[r * t + tt];
             row_acc += w * (lp + tok / 1024.0);
             met.tokens += 1.0;
-            met.entropy_sum += frac(key ^ (tt as u64) ^ 0x454E_54) as f64;
+            met.entropy_sum += frac(key ^ pos ^ 0x454E_54) as f64;
             met.kl_sum += (lp * lp / 1024.0) as f64;
-            if mix(key ^ (tt as u64) ^ 0x434C_50) % 100 < 5 {
+            if mix(key ^ pos ^ 0x434C_50) % 100 < 5 {
                 met.clip_sum += 1.0;
             }
         }
@@ -368,6 +386,15 @@ mod tests {
         assert!(m.generate_file_for(4).is_ok());
         assert!(m.grad_file_for(8, 2).is_ok());
         assert!(m.grad_file_for(8, 3).is_err());
+        // compacted grid: every kept-bucket × row-grid cell, full rows
+        // included explicitly (no legacy-grad fallback for this family)
+        assert!(m.has_compact());
+        for k in [4usize, 8, 16] {
+            for r in [1usize, 2, 4] {
+                assert!(m.grad_compact_file_for(k, r).is_ok(), "missing {k}x{r}");
+            }
+        }
+        assert!(m.grad_compact_file_for(8, 3).is_err());
     }
 
     #[test]
@@ -435,6 +462,7 @@ mod tests {
             old_lp: vec![-0.5; rows * t],
             inv_len: vec![0.0; rows],
             pad_len: vec![4; rows],
+            gather: None,
         };
         // row 0 scores three tokens; row 1 is inert padding
         mb.ht_w[0] = 2.0;
@@ -467,6 +495,71 @@ mod tests {
         let mut acc0 = GradAccum::zeros(m.param_count);
         rt.grad_cached(&mb, &lits, &mut acc0).unwrap();
         assert!(acc0.flat.iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn compacted_grad_probe_is_bit_identical_to_prefix_layout() {
+        // The same kept set {1, 7, 12} of one 16-token response, laid out
+        // two ways: prefix-packed in the 16-bucket vs gather-compacted in
+        // the 4-bucket. grad[0] (the HT linear probe) must agree BITWISE —
+        // it sums w·(lp + tok/1024) over kept tokens in ascending original
+        // position under both layouts, which is what keeps the MC
+        // HT-unbiasedness property layout-independent.
+        let m = sim_manifest();
+        let rt = Runtime::sim(sim_manifest());
+        let p = m.dims.prompt_len;
+        let (t_pref, t_comp) = (16usize, 4usize);
+        let kept = [1usize, 7, 12];
+        let toks: Vec<i32> = (0..(p + t_pref) as i32).map(|x| 3 + x % 40).collect();
+        let lp_at = |pos: usize| -0.1 - 0.05 * (pos % 3) as f32;
+        let w_at = |i: usize| 1.5 + i as f32;
+
+        let mut pref = MicroBatch {
+            bucket: t_pref,
+            rows: 1,
+            real_rows: 1,
+            tokens: toks.clone(),
+            ht_w: vec![0.0; t_pref],
+            adv: vec![0.75],
+            old_lp: vec![0.0; t_pref],
+            inv_len: vec![1.0 / 16.0],
+            pad_len: vec![4],
+            gather: None,
+        };
+        let mut comp = MicroBatch {
+            bucket: t_comp,
+            rows: 1,
+            real_rows: 1,
+            tokens: toks[..p + t_comp].to_vec(),
+            ht_w: vec![0.0; t_comp],
+            adv: vec![0.75],
+            old_lp: vec![0.0; t_comp],
+            inv_len: vec![1.0 / 16.0],
+            pad_len: vec![4],
+            gather: Some(vec![-1; t_comp]),
+        };
+        for (j, &pos) in kept.iter().enumerate() {
+            pref.ht_w[pos] = w_at(j);
+            pref.old_lp[pos] = lp_at(pos);
+            comp.ht_w[j] = w_at(j);
+            comp.old_lp[j] = lp_at(pos);
+            comp.tokens[p + j] = toks[p + pos];
+            comp.gather.as_mut().unwrap()[j] = pos as i32;
+        }
+        let params = init_params(&m);
+        let lits = params.to_literals(&m).unwrap();
+        let mut acc_p = GradAccum::zeros(m.param_count);
+        let mut acc_c = GradAccum::zeros(m.param_count);
+        let met_p = rt.grad_cached(&pref, &lits, &mut acc_p).unwrap();
+        let met_c = rt.grad_cached(&comp, &lits, &mut acc_c).unwrap();
+        assert_eq!(acc_p.flat[0].to_bits(), acc_c.flat[0].to_bits());
+        assert_eq!(met_p.tokens, met_c.tokens);
+        assert_eq!(met_p.tokens, 3.0);
+        assert_eq!((acc_p.sequences, acc_c.sequences), (1, 1));
+        // the compacted row hashes a different slice, so the sim gradient
+        // is NOT globally identical — only the linear probe is (by design)
+        assert!(acc_p.flat.iter().skip(1).any(|&g| g != 0.0));
+        assert!(acc_c.flat.iter().skip(1).any(|&g| g != 0.0));
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! through the full pack → shard → reduce path.
 
 use nat_rl::config::{Method, Packer, RunConfig};
-use nat_rl::coordinator::batcher::{pack_budget, plan_shards, split_zero_contribution, LearnItem};
+use nat_rl::coordinator::batcher::{
+    pack_budget, pack_budget_with, plan_shards, split_zero_contribution, LearnItem,
+};
 use nat_rl::coordinator::masking;
 use nat_rl::obs::Tracer;
 use nat_rl::coordinator::pipeline::PipelineTrainer;
@@ -289,6 +291,58 @@ fn shard_plan_cost_balance_supports_1p5x_speedup_at_k4() {
     );
 }
 
+/// Compaction round-trip (issue satellite): prefix-shaped methods never
+/// route to the `grad_K` grid (`routes_compact` requires a scattered plan),
+/// so toggling `--train.compact` must be bit-identical end to end — every
+/// StepStats field, the post-step parameter hash, and a ledger that prices
+/// compaction as inactive (saving exactly 0) in both runs.
+///
+/// (Scattered methods under the compacted layout are covered by the main
+/// proptest above: `RunConfig::default()` has `train.compact = true`, so
+/// its Budget-packer legs already shard-propcheck the compacted path.)
+#[test]
+fn compact_toggle_is_bit_identical_for_prefix_shaped_methods() {
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let methods = [Method::Grpo, Method::Rpc { min_cut: 4 }, Method::DetTrunc { frac: 0.6 }];
+    for case in 0..4u64 {
+        let mut rng = Rng::new(0xC0_4FAC ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let seqs = synth_seqs(&mut rng, 2, 4, d.prompt_len, d.max_resp, true);
+        for method in methods {
+            let run = |compact: bool| {
+                let mut cfg = RunConfig::default();
+                cfg.method = method;
+                cfg.train.packer = Packer::Budget;
+                cfg.train.compact = compact;
+                cfg.rl.group_size = 4;
+                cfg.rl.ppo_epochs = 2;
+                let mut params = init_params(&rt.manifest);
+                let mut opt = OptState::zeros(&rt.manifest);
+                let mut acc = GradAccum::zeros(rt.manifest.param_count);
+                let mut rng_mask = Rng::new(0x434F_4D50 ^ case);
+                let s = learn_stage(
+                    &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1,
+                    &seqs, &Tracer::off(),
+                )
+                .unwrap();
+                let saving = s.ledger.compact_saving();
+                (stats_bits(&s), fnv1a(&params.flat), saving.to_bits())
+            };
+            let on = run(true);
+            let off = run(false);
+            assert_eq!(
+                on, off,
+                "case {case} {method:?}: --train.compact changed a prefix-shaped run"
+            );
+            assert_eq!(
+                on.2,
+                0.0f64.to_bits(),
+                "case {case} {method:?}: prefix-shaped run priced a compaction saving"
+            );
+        }
+    }
+}
+
 struct PopRow {
     t_r: usize,
     tokens: Vec<i32>,
@@ -378,5 +432,95 @@ fn saliency_ht_unbiased_through_pack_shard_reduce_path() {
         rel < 0.05,
         "HT estimate biased through pack/shard/reduce: mean {mean:.4} vs E {expected:.4} \
          (rel err {rel:.4}, tolerance 0.05)"
+    );
+}
+
+/// Monte-Carlo HT-unbiasedness THROUGH the compacted layout (issue
+/// satellite): URS at 50% keep makes scattered plans, which the budget
+/// packer re-keys onto the `grad_K<k>_B<r>` kept-count grid. The sim grad's
+/// first parameter sums `adv · (1/T) · Σ w_t (old_lp_t + tok_t/1024)` over
+/// kept tokens in ascending original position in BOTH layouts (it is
+/// key-independent), so the prefix path's closed form must hold for the
+/// compacted pack → shard → reduce estimate too: E[w_t] = 1 under HT
+/// weighting regardless of which artifact grid executed the row. Slow:
+/// runs in the CI `cargo test -- --ignored` lane.
+#[test]
+#[ignore = "slow Monte-Carlo lane: cargo test -q -- --ignored"]
+fn urs_ht_unbiased_through_compacted_pack_shard_reduce_path() {
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let (p, top) = (d.prompt_len, *d.buckets.last().unwrap());
+    let row_grid = rt.manifest.row_grid();
+    let method = Method::Urs { p: 0.5 };
+
+    let mut pop_rng = Rng::new(0x4B45_5054);
+    let rows: Vec<PopRow> = (0..8)
+        .map(|r| {
+            let t_r = 2 + pop_rng.below((top - 1) as u64) as usize; // 2..=top
+            let mut tokens = vec![PAD; p + top];
+            for (i, slot) in tokens.iter_mut().enumerate().take(p + t_r) {
+                *slot = 3 + ((r * 13 + i * 7) % 50) as i32;
+            }
+            let old_lp: Vec<f32> =
+                (0..t_r).map(|_| -0.02 - pop_rng.uniform() as f32).collect();
+            PopRow { t_r, tokens, old_lp, adv: 0.5 + 0.25 * r as f32, pad_len: r % 5 }
+        })
+        .collect();
+    let expected: f64 = rows
+        .iter()
+        .map(|row| {
+            let sum: f64 = (0..row.t_r)
+                .map(|t| row.old_lp[t] as f64 + row.tokens[p + t] as f64 / 1024.0)
+                .sum();
+            row.adv as f64 * sum / row.t_r as f64
+        })
+        .sum();
+    assert!(expected.abs() > 0.5, "degenerate population: E = {expected}");
+
+    let params = init_params(&rt.manifest);
+    let lits = params.to_literals(&rt.manifest).unwrap();
+    let trials = 4000u64;
+    let mut est_sum = 0.0f64;
+    let mut compacted_mbs = 0usize;
+    for trial in 0..trials {
+        let mut rng = Rng::new(0x4B54 ^ trial.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let items: Vec<LearnItem> = rows
+            .iter()
+            .map(|row| {
+                let m = masking::sample(&method, row.t_r, &mut rng);
+                LearnItem {
+                    tokens: row.tokens.clone(),
+                    pad_len: row.pad_len,
+                    resp_len: row.t_r,
+                    ht_w: m.ht_w,
+                    learn_len: m.learn_len,
+                    adv: row.adv,
+                    old_lp: row.old_lp.clone(),
+                }
+            })
+            .collect();
+        let (items, _dropped) = split_zero_contribution(items);
+        let mbs = pack_budget_with(&items, &d.buckets, p, &row_grid, 0, true).unwrap();
+        compacted_mbs += mbs.iter().filter(|m| m.gather.is_some()).count();
+        let plan = plan_shards(&mbs, p, 1 + (trial % 4) as usize);
+        let leaves = execute_shards(&rt, &mbs, &lits, &plan, &Tracer::off(), 1).unwrap();
+        let mut acc = GradAccum::zeros(rt.manifest.param_count);
+        let mut met = GradMetrics::default();
+        tree_reduce_into(&mut acc, &mut met, leaves);
+        est_sum += acc.flat[0] as f64;
+    }
+    // The workload must genuinely exercise the compacted grid, not silently
+    // fall back to prefix rows: at 50% keep most scattered rows drop a
+    // kept-count bucket.
+    assert!(
+        compacted_mbs > trials as usize / 2,
+        "only {compacted_mbs} compacted micro-batches over {trials} trials"
+    );
+    let mean = est_sum / trials as f64;
+    let rel = ((mean - expected) / expected).abs();
+    assert!(
+        rel < 0.05,
+        "HT estimate biased through the COMPACTED pack/shard/reduce: mean {mean:.4} \
+         vs E {expected:.4} (rel err {rel:.4}, tolerance 0.05)"
     );
 }
