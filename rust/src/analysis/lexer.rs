@@ -1,0 +1,508 @@
+//! Minimal Rust lexer for the `nat lint` pass.
+//!
+//! This is not a general Rust parser — the rules only need a faithful token
+//! stream (identifiers, punctuation, literals) with everything that can
+//! *hide* code from a naive scan handled correctly: line comments, nested
+//! block comments, plain and raw strings (`r"…"`, `r#"…"#`, byte variants),
+//! char literals vs. lifetimes/labels (`'a'` vs. `'a` vs. `'outer:`), and
+//! numeric literals with exponents/suffixes. Comments are captured
+//! separately (the pragma system reads them), and a post-pass marks every
+//! token inside a `#[cfg(test)]` / `#[test]` item so rules can skip test
+//! code without a second parser.
+
+/// Token classes the rule engine distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Num,
+    Str,
+    Char,
+    Punct,
+}
+
+/// One lexed token. `line` is 1-based and refers to the token's first line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    /// True when the token sits inside a `#[cfg(test)]` / `#[test]` item.
+    pub in_test: bool,
+}
+
+/// One comment (line or block), verbatim including its `//` / `/*` markers.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Lex output: code tokens, comments, and the 1-based inclusive line spans
+/// of test items (used to ignore pragma errors inside test code).
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    pub test_spans: Vec<(u32, u32)>,
+}
+
+impl Lexed {
+    /// True when `line` falls inside a `#[cfg(test)]` / `#[test]` item.
+    pub fn line_in_test(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` and mark test regions.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < cs.len() && cs[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { line, text: cs[start..i].iter().collect() });
+            continue;
+        }
+        // Block comment — Rust block comments NEST.
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let (start, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < cs.len() && depth > 0 {
+                if cs[i] == '/' && cs.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && cs.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            comments.push(Comment { line: start_line, text: cs[start..i].iter().collect() });
+            continue;
+        }
+        // Raw strings: r"…", r#"…"#, br#"…"# — closed only by a quote
+        // followed by the same number of hashes.
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if cs[j] == 'b' {
+                j += 1;
+            }
+            if cs.get(j) == Some(&'r') {
+                j += 1;
+                let mut hashes = 0usize;
+                while cs.get(j) == Some(&'#') {
+                    hashes += 1;
+                    j += 1;
+                }
+                if cs.get(j) == Some(&'"') {
+                    let (start, start_line) = (i, line);
+                    j += 1;
+                    while j < cs.len() {
+                        if cs[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                        } else if cs[j] == '"' {
+                            let mut k = j + 1;
+                            let mut h = 0usize;
+                            while h < hashes && cs.get(k) == Some(&'#') {
+                                h += 1;
+                                k += 1;
+                            }
+                            j = k;
+                            if h == hashes {
+                                break;
+                            }
+                        } else {
+                            j += 1;
+                        }
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Str,
+                        text: cs[start..j].iter().collect(),
+                        line: start_line,
+                        in_test: false,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+        }
+        // Byte char b'x' — route to the char-literal scanner below.
+        if c == 'b' && cs.get(i + 1) == Some(&'\'') {
+            let (start, start_line) = (i, line);
+            let j = scan_char_literal(&cs, i + 1, &mut line);
+            toks.push(Tok {
+                kind: TokKind::Char,
+                text: cs[start..j].iter().collect(),
+                line: start_line,
+                in_test: false,
+            });
+            i = j;
+            continue;
+        }
+        // Plain or byte string.
+        if c == '"' || (c == 'b' && cs.get(i + 1) == Some(&'"')) {
+            let (start, start_line) = (i, line);
+            let mut j = if c == 'b' { i + 2 } else { i + 1 };
+            while j < cs.len() {
+                if cs[j] == '\\' {
+                    j += 2;
+                } else if cs[j] == '"' {
+                    j += 1;
+                    break;
+                } else {
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text: cs[start..j].iter().collect(),
+                line: start_line,
+                in_test: false,
+            });
+            i = j;
+            continue;
+        }
+        // Char literal vs. lifetime/label. After a quote: a backslash means
+        // a char escape; ident chars followed by a closing quote mean a char
+        // ('a'), without one a lifetime ('a, 'outer); any other single char
+        // followed by a quote is a char (' ', '(').
+        if c == '\'' {
+            let start_line = line;
+            let next = cs.get(i + 1).copied();
+            let is_char = match next {
+                Some('\\') => true,
+                Some(n) if is_ident_start(n) || n.is_ascii_digit() => {
+                    let mut k = i + 1;
+                    while k < cs.len() && is_ident_continue(cs[k]) {
+                        k += 1;
+                    }
+                    cs.get(k) == Some(&'\'')
+                }
+                Some(_) => cs.get(i + 2) == Some(&'\''),
+                None => false,
+            };
+            if is_char {
+                let start = i;
+                let j = scan_char_literal(&cs, i, &mut line);
+                toks.push(Tok {
+                    kind: TokKind::Char,
+                    text: cs[start..j].iter().collect(),
+                    line: start_line,
+                    in_test: false,
+                });
+                i = j;
+            } else {
+                let start = i;
+                let mut j = i + 1;
+                while j < cs.len() && is_ident_continue(cs[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: cs[start..j].iter().collect(),
+                    line: start_line,
+                    in_test: false,
+                });
+                i = j;
+            }
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let start = i;
+            let mut j = i + 1;
+            while j < cs.len() && is_ident_continue(cs[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: cs[start..j].iter().collect(),
+                line,
+                in_test: false,
+            });
+            i = j;
+            continue;
+        }
+        // Numeric literal (ints, floats, hex, exponents, suffixes).
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i + 1;
+            while j < cs.len() {
+                let d = cs[j];
+                if d.is_ascii_alphanumeric() || d == '_' {
+                    j += 1;
+                } else if d == '.'
+                    && cs.get(j + 1).is_some_and(|n| n.is_ascii_digit())
+                {
+                    // a dot starts a fraction only before a digit — `0..n`
+                    // and `1.max(2)` stay punct/method tokens
+                    j += 1;
+                } else if (d == '+' || d == '-')
+                    && matches!(cs[j - 1], 'e' | 'E')
+                {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: cs[start..j].iter().collect(),
+                line,
+                in_test: false,
+            });
+            i = j;
+            continue;
+        }
+        // Single-char punctuation (rules match multi-char operators as
+        // adjacent punct tokens, e.g. `::` = ':' ':').
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+            in_test: false,
+        });
+        i += 1;
+    }
+    let test_spans = mark_test_regions(&mut toks);
+    Lexed { toks, comments, test_spans }
+}
+
+/// Scan a char literal starting at the opening quote; returns the index
+/// just past the closing quote.
+fn scan_char_literal(cs: &[char], open: usize, line: &mut u32) -> usize {
+    let mut j = open + 1;
+    while j < cs.len() {
+        match cs[j] {
+            '\\' => j += 2,
+            '\'' => return j + 1,
+            c => {
+                if c == '\n' {
+                    *line += 1;
+                }
+                j += 1;
+            }
+        }
+    }
+    j
+}
+
+/// Mark every token belonging to a `#[cfg(test)]` / `#[test]` item (the
+/// attribute, any stacked attributes after it, and the item through its
+/// closing brace or semicolon). Returns the inclusive line spans marked.
+fn mark_test_regions(toks: &mut [Tok]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].text == "#" && toks.get(i + 1).map_or(false, |t| t.text == "[")) {
+            i += 1;
+            continue;
+        }
+        // Scan the attribute body for an ident `test` (covers `#[test]`,
+        // `#[cfg(test)]`, `#[cfg(all(test, …))]`).
+        let attr_start = i;
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut has_test = false;
+        while j < toks.len() && depth > 0 {
+            match toks[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                "test" if toks[j].kind == TokKind::Ident => has_test = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if !has_test {
+            i = j;
+            continue;
+        }
+        // Skip any further stacked attributes.
+        while j < toks.len()
+            && toks[j].text == "#"
+            && toks.get(j + 1).map_or(false, |t| t.text == "[")
+        {
+            let mut d = 1usize;
+            j += 2;
+            while j < toks.len() && d > 0 {
+                match toks[j].text.as_str() {
+                    "[" => d += 1,
+                    "]" => d -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        // Find the item's body: first `{` at bracket/paren depth 0 (then its
+        // matching `}`), or a `;` for brace-less items.
+        let mut d = 0isize;
+        let mut end = toks.len();
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => d += 1,
+                ")" | "]" => d -= 1,
+                ";" if d == 0 => {
+                    end = j + 1;
+                    break;
+                }
+                "{" if d == 0 => {
+                    let mut bd = 1usize;
+                    j += 1;
+                    while j < toks.len() && bd > 0 {
+                        match toks[j].text.as_str() {
+                            "{" => bd += 1,
+                            "}" => bd -= 1,
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    end = j;
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let lo = toks[attr_start].line;
+        let hi = toks[end.saturating_sub(1).max(attr_start)].line;
+        for t in toks[attr_start..end].iter_mut() {
+            t.in_test = true;
+        }
+        spans.push((lo, hi));
+        i = end;
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn raw_strings_hide_their_contents() {
+        // Idents inside raw strings (any hash depth) must not leak into the
+        // token stream — `Instant` here is data, not code.
+        let src = r##"let a = r"Instant::now()"; let b = r#"HashMap "quoted" inner"#; use x;"##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "a", "let", "b", "use", "x"]);
+        let l = lex(src);
+        assert_eq!(l.toks.iter().filter(|t| t.kind == TokKind::Str).count(), 2);
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let src = "a /* outer /* inner */ still comment */ b";
+        assert_eq!(idents(src), vec!["a", "b"]);
+        let l = lex("x /* line1\n/* line2 */\n*/ y");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.toks[1].text, "y");
+        assert_eq!(l.toks[1].line, 3);
+    }
+
+    #[test]
+    fn lifetimes_labels_and_char_literals_disambiguate() {
+        let src = "fn f<'a>(x: &'a str) { 'outer: loop { break 'outer; } let c = 'x'; \
+                   let n = '\\n'; let q = '\\''; let sp = ' '; }";
+        let l = lex(src);
+        let lifetimes: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a", "'outer", "'outer"]);
+        let chars = l.toks.iter().filter(|t| t.kind == TokKind::Char).count();
+        assert_eq!(chars, 4, "{:?}", l.toks);
+    }
+
+    #[test]
+    fn byte_literals_and_numbers() {
+        let l = lex("let x = b'q'; let s = b\"bytes\"; let f = 1.0e-3f64; let h = 0xCBF2_9CE4; \
+                     let r = 0..n; let m = 1.max(2);");
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Char && t.text == "b'q'"));
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Str && t.text == "b\"bytes\""));
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Num && t.text == "1.0e-3f64"));
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Num && t.text == "0xCBF2_9CE4"));
+        // `0..n` keeps the range as punctuation; `1.max` keeps the method.
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Num && t.text == "0"));
+        assert!(l.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "max"));
+    }
+
+    #[test]
+    fn comments_are_captured_with_lines() {
+        let l = lex("// first\nlet x = 1; // trailing\n/* block */\n");
+        assert_eq!(l.comments.len(), 3);
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 2);
+        assert_eq!(l.comments[2].line, 3);
+        assert!(l.comments[0].text.starts_with("// first"));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_marked_and_spanned() {
+        let src = "fn live() { hot(); }\n#[cfg(test)]\nmod tests {\n    use super::*;\n    \
+                   #[test]\n    fn t() { cold(); }\n}\nfn live2() {}\n";
+        let l = lex(src);
+        let hot = l.toks.iter().find(|t| t.text == "hot").unwrap();
+        let cold = l.toks.iter().find(|t| t.text == "cold").unwrap();
+        let live2 = l.toks.iter().find(|t| t.text == "live2").unwrap();
+        assert!(!hot.in_test);
+        assert!(cold.in_test);
+        assert!(!live2.in_test);
+        assert!(l.line_in_test(6));
+        assert!(!l.line_in_test(1));
+        assert!(!l.line_in_test(8));
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_items_stops_at_semicolon() {
+        let l = lex("#[cfg(test)]\nuse std::collections::HashMap;\nfn live() {}\n");
+        let hm = l.toks.iter().find(|t| t.text == "HashMap").unwrap();
+        assert!(hm.in_test);
+        let live = l.toks.iter().find(|t| t.text == "live").unwrap();
+        assert!(!live.in_test);
+    }
+}

@@ -1,0 +1,275 @@
+//! `nat lint` — in-repo static analysis for the determinism and
+//! HT-unbiasedness contracts.
+//!
+//! NAT's correctness rests on two source-level invariants that no type
+//! checker sees: the Horvitz-Thompson estimator stays unbiased only while
+//! RNG draws are a pure function of `(seed, step, stream/flat id)`, and
+//! `shards=K ≡ workers=N ≡ serial` bit-identity holds only while no
+//! packing/selection/reduction path iterates unordered containers, reads
+//! wall clocks outside the Tracer gate, or accumulates floats outside the
+//! blessed tree reduction. This module machine-checks those contracts:
+//!
+//! * [`lexer`]  — a small Rust lexer (raw strings, nested block comments,
+//!   char-vs-lifetime disambiguation, `#[cfg(test)]` region marking);
+//! * [`pragma`] — `// natlint: allow(<rule>, reason = "…")` waivers that
+//!   must name the rule and carry a written reason;
+//! * [`rules`]  — the R1–R6 rule set with module-path scoping;
+//! * [`report`] — findings, counts, human and `--json` renderings.
+//!
+//! The pass runs over the whole `rust/src` tree in tier-1
+//! (`tests/analysis.rs`) and as a CI lane (`nat lint --check`), so every
+//! future subsystem — elastic sharding, `nat serve` — lands contract-clean
+//! instead of hoping a proptest seed hits the regression.
+
+pub mod lexer;
+pub mod pragma;
+pub mod report;
+pub mod rules;
+
+pub use report::{Finding, Report};
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::bench;
+use crate::util::cli::Args;
+
+use rules::{registry, FileCtx, PRAGMA_RULE};
+
+/// Lint one file's source text. `rel_path` is the path under the lint root
+/// (it determines the module scope, e.g. `coordinator/selection/urs.rs` →
+/// `coordinator::selection::urs`).
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let ctx = FileCtx { module: module_of(rel_path), toks: &lexed.toks };
+
+    // Pragmas: well-formed ones suppress; malformed or unknown-rule ones
+    // are findings themselves (outside test regions).
+    let known: Vec<&str> = registry().iter().map(|r| r.slug).collect();
+    let mut pragmas: Vec<pragma::Pragma> = Vec::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    for c in &lexed.comments {
+        let Some(parsed) = pragma::parse(c.line, &c.text) else { continue };
+        if lexed.line_in_test(c.line) {
+            continue;
+        }
+        match parsed {
+            Ok(p) => {
+                let unknown: Vec<&String> =
+                    p.rules.iter().filter(|r| !known.contains(&r.as_str())).collect();
+                if unknown.is_empty() {
+                    pragmas.push(p);
+                } else {
+                    findings.push(pragma_finding(
+                        rel_path,
+                        c.line,
+                        format!(
+                            "pragma names unknown rule(s) {:?} — a waiver only ever \
+                             silences rules it names correctly",
+                            unknown
+                        ),
+                    ));
+                }
+            }
+            Err(msg) => {
+                findings.push(pragma_finding(rel_path, c.line, format!("malformed pragma: {msg}")));
+            }
+        }
+    }
+    // Resolve each pragma to the code line it covers: its own line if code
+    // shares it, otherwise the next line carrying a code token.
+    let covered: Vec<(u32, Vec<String>)> = pragmas
+        .iter()
+        .map(|p| {
+            let same_line = lexed.toks.iter().any(|t| t.line == p.line);
+            let target = if same_line {
+                p.line
+            } else {
+                lexed
+                    .toks
+                    .iter()
+                    .map(|t| t.line)
+                    .filter(|&l| l > p.line)
+                    .min()
+                    .unwrap_or(p.line)
+            };
+            (target, p.rules.clone())
+        })
+        .collect();
+
+    for rule in registry() {
+        for (line, message) in (rule.check)(&ctx) {
+            let waived = covered
+                .iter()
+                .any(|(l, slugs)| *l == line && slugs.iter().any(|s| s == rule.slug));
+            if !waived {
+                findings.push(Finding {
+                    rule_id: rule.id.to_string(),
+                    slug: rule.slug.to_string(),
+                    file: rel_path.to_string(),
+                    line,
+                    message,
+                });
+            }
+        }
+    }
+    findings.sort_by_key(|f| f.line);
+    findings
+}
+
+fn pragma_finding(rel_path: &str, line: u32, message: String) -> Finding {
+    Finding {
+        rule_id: PRAGMA_RULE.0.to_string(),
+        slug: PRAGMA_RULE.1.to_string(),
+        file: rel_path.to_string(),
+        line,
+        message,
+    }
+}
+
+/// Module path of a file relative to the lint root: strip `.rs`, split on
+/// separators, drop a trailing `mod` (and crate roots `lib`/`main`).
+fn module_of(rel_path: &str) -> Vec<String> {
+    let mut segs: Vec<String> = rel_path
+        .trim_end_matches(".rs")
+        .split(['/', '\\'])
+        .filter(|s| !s.is_empty())
+        .map(|s| s.to_string())
+        .collect();
+    if matches!(segs.last().map(String::as_str), Some("mod" | "lib" | "main")) {
+        segs.pop();
+    }
+    segs
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by path — the walk
+/// order must be deterministic (the pass dogfoods its own contract).
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("nat lint: cannot read {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            rs_files(&path, out)?;
+        } else if path.extension().map_or(false, |x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the full pass over every `.rs` file under `root`.
+pub fn run_lint(root: &Path) -> Result<Report> {
+    // natlint: allow(wallclock, reason = "lints its own wall time for BENCH_lint.json; no training-path output depends on it")
+    let t0 = Instant::now();
+    let mut files = Vec::new();
+    rs_files(root, &mut files)?;
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("nat lint: cannot read {}", path.display()))?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        findings,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// `nat lint [--root DIR] [--json] [--check]`
+///
+/// Human-readable findings by default; `--json` prints the machine record
+/// to stdout AND writes it as `BENCH_lint.json` through the shared bench
+/// recorder (rule counts, files scanned, wall time — the perf-trajectory
+/// tooling watches the pass stay fast). `--check` exits nonzero on any
+/// finding — the CI gate.
+pub fn cmd_lint(args: &Args) -> Result<()> {
+    let default_root = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let root = args.get_or("root", default_root);
+    let report = run_lint(Path::new(root))?;
+    if args.has_flag("json") {
+        println!("{}", report.to_json().to_string());
+        let path = bench::write_record("lint", &report.to_json())?;
+        eprintln!("nat lint: record written to {path}");
+    } else {
+        print!("{}", report.render_human());
+    }
+    if args.has_flag("check") && !report.findings.is_empty() {
+        bail!(
+            "nat lint --check: {} finding(s) in {} file(s) under {root}",
+            report.findings.len(),
+            report.files_scanned
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_on_own_line_covers_next_code_line() {
+        let src = "// natlint: allow(wallclock, reason = \"queue metric\")\n\
+                   let t = Instant::now();\n";
+        assert!(lint_source("coordinator/pipeline/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn trailing_pragma_covers_its_own_line() {
+        let src = "let t = Instant::now(); // natlint: allow(wallclock, reason = \"metric\")\n";
+        assert!(lint_source("coordinator/trainer.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pragma_does_not_silence_unnamed_rules() {
+        // wallclock waived, hot-panic on the same line still fires
+        let src = "// natlint: allow(wallclock, reason = \"metric\")\n\
+                   let t = Instant::now().elapsed().unwrap();\n";
+        let f = lint_source("coordinator/trainer.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].slug, "hot-panic");
+    }
+
+    #[test]
+    fn malformed_and_unknown_rule_pragmas_are_findings() {
+        let f = lint_source("a.rs", "// natlint: allow(wallclock)\nfn x() {}\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].slug, "pragma");
+        let f = lint_source("a.rs", "// natlint: allow(wallclok, reason = \"typo\")\nfn x() {}\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].slug, "pragma");
+        assert!(f[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn module_paths_resolve_mod_rs_and_crate_roots() {
+        assert_eq!(module_of("coordinator/selection/mod.rs"), vec!["coordinator", "selection"]);
+        assert_eq!(module_of("coordinator/trainer.rs"), vec!["coordinator", "trainer"]);
+        assert_eq!(module_of("lib.rs"), Vec::<String>::new());
+        assert_eq!(module_of("main.rs"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn findings_carry_rule_metadata_and_sort_by_line() {
+        let src = "fn a() { let x = v.iter().sum::<f32>(); }\n\
+                   fn b() { let y = w.iter().sum::<f64>(); }\n";
+        let f = lint_source("runtime/shard.rs", src);
+        assert_eq!(f.len(), 2);
+        assert_eq!((f[0].line, f[1].line), (1, 2));
+        assert_eq!(f[0].rule_id, "R4");
+        assert_eq!(f[0].slug, "float-accum");
+    }
+}

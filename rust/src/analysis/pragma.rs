@@ -1,0 +1,154 @@
+//! The `natlint` pragma: a per-line, per-rule escape hatch that must carry
+//! a written reason.
+//!
+//! Syntax (inside any `//` comment):
+//!
+//! ```text
+//! // natlint: allow(<rule>[, <rule>…], reason = "why this is sound")
+//! ```
+//!
+//! A pragma on its own line covers the next code line; a trailing pragma
+//! covers its own line. A pragma only ever silences the rules it names —
+//! unknown rule names and missing reasons are themselves findings (the
+//! `P0 pragma` meta-rule), so a typo can never turn into a silent blanket
+//! waiver.
+
+/// One parsed pragma. `line` is where the comment sits; the engine resolves
+/// the code line it covers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pragma {
+    pub line: u32,
+    /// Rule slugs named by `allow(…)`.
+    pub rules: Vec<String>,
+    /// The mandatory justification.
+    pub reason: String,
+}
+
+/// Parse one comment. Returns `None` for comments that are not natlint
+/// pragmas, `Some(Err(msg))` for malformed pragmas (the engine reports
+/// those), `Some(Ok(p))` for well-formed ones.
+pub fn parse(line: u32, comment: &str) -> Option<Result<Pragma, String>> {
+    let body = comment.trim_start_matches('/').trim();
+    let rest = body.strip_prefix("natlint:")?.trim();
+    Some(parse_body(line, rest))
+}
+
+fn parse_body(line: u32, rest: &str) -> Result<Pragma, String> {
+    let inner = rest
+        .strip_prefix("allow")
+        .map(str::trim_start)
+        .and_then(|s| s.strip_prefix('('))
+        .ok_or_else(|| "expected `allow(<rule>, reason = \"…\")`".to_string())?;
+    let inner = inner
+        .strip_suffix(')')
+        .ok_or_else(|| "unclosed `allow(`".to_string())?;
+    let mut rules = Vec::new();
+    let mut reason: Option<String> = None;
+    for part in split_top_level(inner) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some(value) = part.strip_prefix("reason") {
+            let value = value.trim_start();
+            let value = value
+                .strip_prefix('=')
+                .map(str::trim_start)
+                .ok_or_else(|| "expected `reason = \"…\"`".to_string())?;
+            let quoted = value
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+                .ok_or_else(|| "reason must be a double-quoted string".to_string())?;
+            if quoted.trim().is_empty() {
+                return Err("reason must not be empty".to_string());
+            }
+            reason = Some(quoted.to_string());
+        } else if part.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-')
+        {
+            rules.push(part.to_string());
+        } else {
+            return Err(format!("bad rule name '{part}' (slugs are kebab-case)"));
+        }
+    }
+    if rules.is_empty() {
+        return Err("allow(…) must name at least one rule".to_string());
+    }
+    let reason =
+        reason.ok_or_else(|| "missing `reason = \"…\"` — every waiver needs one".to_string())?;
+    Ok(Pragma { line, rules, reason })
+}
+
+/// Split on commas that are not inside the reason's double quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+/// Render a pragma back to canonical comment form (the round-trip target
+/// of the pragma proptest in `tests/analysis.rs`).
+pub fn render(rules: &[&str], reason: &str) -> String {
+    format!("// natlint: allow({}, reason = \"{}\")", rules.join(", "), reason)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_and_multi_rule_pragmas() {
+        let p = parse(3, "// natlint: allow(wallclock, reason = \"timing series only\")")
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.rules, vec!["wallclock"]);
+        assert_eq!(p.reason, "timing series only");
+        assert_eq!(p.line, 3);
+        let p = parse(1, "// natlint: allow(hot-panic, lossy-cast, reason = \"a, b, c\")")
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.rules, vec!["hot-panic", "lossy-cast"]);
+        assert_eq!(p.reason, "a, b, c");
+    }
+
+    #[test]
+    fn non_pragma_comments_are_ignored() {
+        assert!(parse(1, "// plain comment").is_none());
+        assert!(parse(1, "/// doc comment about natlint rules").is_none());
+    }
+
+    #[test]
+    fn malformed_pragmas_are_errors_not_waivers() {
+        for bad in [
+            "// natlint: allow(wallclock)",
+            "// natlint: allow(, reason = \"x\")",
+            "// natlint: allow(reason = \"x\")",
+            "// natlint: allow(wallclock, reason = )",
+            "// natlint: allow(wallclock, reason = \"\")",
+            "// natlint: deny(wallclock)",
+            "// natlint: allow(WallClock, reason = \"x\")",
+            "// natlint: allow(wallclock, reason = \"x\"",
+        ] {
+            assert!(parse(1, bad).unwrap().is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let text = render(&["rng-discipline", "float-accum"], "pre-mixed seed");
+        let p = parse(9, &text).unwrap().unwrap();
+        assert_eq!(p.rules, vec!["rng-discipline", "float-accum"]);
+        assert_eq!(p.reason, "pre-mixed seed");
+    }
+}

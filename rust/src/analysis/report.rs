@@ -1,0 +1,153 @@
+//! Findings, counts, and the human/JSON renderings of a lint run.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{obj, Json};
+
+use super::rules::{registry, PRAGMA_RULE};
+
+/// One lint finding at a source line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule id (`R1`…`R6`, or `P0` for pragma errors).
+    pub rule_id: String,
+    /// Rule slug (the name pragmas use).
+    pub slug: String,
+    /// Path relative to the lint root.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    pub message: String,
+}
+
+/// A whole-tree lint run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub root: String,
+    pub files_scanned: usize,
+    /// Findings in (file, line) order.
+    pub findings: Vec<Finding>,
+    pub wall_ms: f64,
+}
+
+impl Report {
+    /// Finding count per rule slug — every registered rule appears, rules
+    /// with zero findings included (the BENCH record's schema stability).
+    pub fn counts(&self) -> BTreeMap<String, usize> {
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for r in registry() {
+            counts.insert(r.slug.to_string(), 0);
+        }
+        counts.insert(PRAGMA_RULE.1.to_string(), 0);
+        for f in &self.findings {
+            *counts.entry(f.slug.clone()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Terminal rendering: one `path:line: [id slug] message` per finding
+    /// plus a one-line summary.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: [{} {}] {}\n",
+                f.file, f.line, f.rule_id, f.slug, f.message
+            ));
+        }
+        let nonzero: Vec<String> = self
+            .counts()
+            .iter()
+            .filter(|(_, &n)| n > 0)
+            .map(|(slug, n)| format!("{slug}={n}"))
+            .collect();
+        let breakdown = if nonzero.is_empty() {
+            "clean".to_string()
+        } else {
+            nonzero.join(", ")
+        };
+        out.push_str(&format!(
+            "nat lint: {} file(s), {} finding(s) ({breakdown}) in {:.1}ms\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.wall_ms
+        ));
+        out
+    }
+
+    /// Machine-readable record — the `--json` stdout document and the
+    /// `BENCH_lint.json` artifact share this schema.
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self
+            .findings
+            .iter()
+            .map(|f| {
+                obj(vec![
+                    ("rule", Json::Str(f.rule_id.clone())),
+                    ("slug", Json::Str(f.slug.clone())),
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        let mut counts_map: BTreeMap<String, Json> = BTreeMap::new();
+        for (slug, n) in self.counts() {
+            counts_map.insert(slug, Json::Num(n as f64));
+        }
+        obj(vec![
+            ("bench", Json::Str("lint".to_string())),
+            ("root", Json::Str(self.root.clone())),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("findings", Json::Arr(findings)),
+            ("counts", Json::Obj(counts_map)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(findings: Vec<Finding>) -> Report {
+        Report { root: "src".into(), files_scanned: 2, findings, wall_ms: 1.5 }
+    }
+
+    #[test]
+    fn clean_report_renders_and_counts_all_rules() {
+        let r = report_with(Vec::new());
+        let text = r.render_human();
+        assert!(text.contains("2 file(s), 0 finding(s) (clean)"), "{text}");
+        let counts = r.counts();
+        for slug in
+            ["unordered-iter", "wallclock", "rng-discipline", "float-accum", "hot-panic",
+             "lossy-cast", "pragma"]
+        {
+            assert_eq!(counts.get(slug), Some(&0), "{slug} missing from counts");
+        }
+    }
+
+    #[test]
+    fn json_record_carries_findings_and_counts() {
+        let r = report_with(vec![Finding {
+            rule_id: "R2".into(),
+            slug: "wallclock".into(),
+            file: "coordinator/trainer.rs".into(),
+            line: 42,
+            message: "clock read".into(),
+        }]);
+        let j = r.to_json();
+        assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("lint"));
+        assert_eq!(j.get("files_scanned").and_then(|v| v.as_usize()), Some(2));
+        let f0 = j.get("findings").and_then(|v| v.idx(0)).unwrap();
+        assert_eq!(f0.get("line").and_then(|v| v.as_usize()), Some(42));
+        assert_eq!(
+            j.get("counts").and_then(|c| c.get("wallclock")).and_then(|v| v.as_usize()),
+            Some(1)
+        );
+        // round-trips through the JSON substrate
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed, j);
+    }
+}

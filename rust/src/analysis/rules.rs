@@ -1,0 +1,455 @@
+//! The natlint rule set: lexical checks for the determinism and
+//! HT-unbiasedness contracts the NAT trainer's correctness rests on.
+//!
+//! Every rule is scoped by module path (derived from the file's position
+//! under the lint root, so `coordinator/selection/urs.rs` is
+//! `coordinator::selection::urs`) and skips `#[cfg(test)]` / `#[test]`
+//! regions — the contracts bind production code, not assertions about it.
+//!
+//! | id | slug           | contract                                        |
+//! |----|----------------|-------------------------------------------------|
+//! | R1 | unordered-iter | no `HashMap`/`HashSet` where iteration order    |
+//! |    |                | feeds packing, selection, reduction, or ledger  |
+//! | R2 | wallclock      | no `Instant::now`/`SystemTime::now` outside the |
+//! |    |                | `obs/` Tracer gate and `util::bench`            |
+//! | R3 | rng-discipline | `Rng::new` only via `util::rng` mixing helpers  |
+//! |    |                | (`stream_seed`/`xor_stream`), `slot_seed`,      |
+//! |    |                | `fork`, or constant seeds                       |
+//! | R4 | float-accum    | no `sum::<f32/f64>()` / `.fold(` float chains   |
+//! |    |                | in shard/reduce/apply paths — merges go through |
+//! |    |                | `tree_reduce_into`                              |
+//! | R5 | hot-panic      | no `unwrap`/`expect`/`panic!` (trainer+runtime) |
+//! |    |                | or bare slice indexing (trainer+shard)          |
+//! | R6 | lossy-cast     | no ad-hoc `as f32` where HT weights and         |
+//! |    |                | inclusion probabilities are computed            |
+
+use super::lexer::{Tok, TokKind};
+
+/// Per-file context handed to every rule.
+pub struct FileCtx<'a> {
+    /// Module path segments relative to the lint root.
+    pub module: Vec<String>,
+    pub toks: &'a [Tok],
+}
+
+/// One rule: metadata (shared by the report, README table, and pragma
+/// validation) plus its token-stream check.
+pub struct Rule {
+    pub id: &'static str,
+    pub slug: &'static str,
+    pub summary: &'static str,
+    pub check: fn(&FileCtx) -> Vec<(u32, String)>,
+}
+
+/// The id/slug of the always-on pragma meta-rule (malformed or unknown-rule
+/// pragmas — reported by the engine, not suppressible).
+pub const PRAGMA_RULE: (&str, &str) = ("P0", "pragma");
+
+/// The full rule registry, in report order.
+pub fn registry() -> &'static [Rule] {
+    &[
+        Rule {
+            id: "R1",
+            slug: "unordered-iter",
+            summary: "HashMap/HashSet in a bit-identity-scoped module \
+                      (batcher, selection, shard, ledger)",
+            check: r1_unordered_iter,
+        },
+        Rule {
+            id: "R2",
+            slug: "wallclock",
+            summary: "Instant::now/SystemTime::now outside obs/ and util::bench",
+            check: r2_wallclock,
+        },
+        Rule {
+            id: "R3",
+            slug: "rng-discipline",
+            summary: "Rng::new outside the util::rng seed-mixing helpers",
+            check: r3_rng_discipline,
+        },
+        Rule {
+            id: "R4",
+            slug: "float-accum",
+            summary: "float accumulation in runtime reduce/apply paths \
+                      outside tree_reduce_into",
+            check: r4_float_accum,
+        },
+        Rule {
+            id: "R5",
+            slug: "hot-panic",
+            summary: "unwrap/expect/panic!/bare indexing in the trainer/runtime hot path",
+            check: r5_hot_panic,
+        },
+        Rule {
+            id: "R6",
+            slug: "lossy-cast",
+            summary: "ad-hoc `as f32` in HT-weight / inclusion-probability code",
+            check: r6_lossy_cast,
+        },
+    ]
+}
+
+/// Modules where unordered-container iteration breaks `shards=K ≡ serial`
+/// bit-identity (packing order, selection order, reduction order, ledger
+/// aggregation order all feed golden traces).
+const R1_SCOPE: &[&str] =
+    &["coordinator::batcher", "coordinator::selection", "runtime::shard", "obs::ledger"];
+
+/// Modules allowed to read wall clocks: the Tracer gate lives in `obs` and
+/// the bench harness exists to time things.
+const R2_EXEMPT: &[&str] = &["obs", "util::bench"];
+
+/// `Rng::new` is the mixing primitive itself inside `util::rng`.
+const R3_EXEMPT: &[&str] = &["util::rng"];
+
+/// Seed-mixing helpers whose output is a pure function of
+/// `(seed, step, stream/flat id)` — calls through these keep HT draws
+/// independent of batch composition and chunk order.
+const R3_BLESSED: &[&str] = &["stream_seed", "xor_stream", "slot_seed", "fork"];
+
+/// Shard/reduce/apply float paths.
+const R4_SCOPE: &[&str] = &["runtime"];
+
+/// The hot path for panics: one poisoned step must surface as `Result`,
+/// not tear down workers mid-reduction.
+const R5_PANIC_SCOPE: &[&str] = &["coordinator::trainer", "runtime"];
+
+/// Bare indexing scope: the shard executor and trainer, where an
+/// out-of-bounds id would abort a scoped-thread worker.
+const R5_INDEX_SCOPE: &[&str] = &["coordinator::trainer", "runtime::shard"];
+
+/// Where HT weights and inclusion probabilities are produced.
+const R6_SCOPE: &[&str] = &["coordinator::selection", "coordinator::masking"];
+
+fn in_scope(module: &[String], prefixes: &[&str]) -> bool {
+    let m = module.join("::");
+    prefixes.iter().any(|p| m == *p || m.starts_with(&format!("{p}::")))
+}
+
+fn ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+/// `toks[i..]` starts with `::<name>` (a path segment).
+fn path_seg(toks: &[Tok], i: usize, name: &str) -> bool {
+    i + 2 < toks.len()
+        && punct(&toks[i], ":")
+        && punct(&toks[i + 1], ":")
+        && ident(&toks[i + 2], name)
+}
+
+fn live<'a>(ctx: &'a FileCtx) -> impl Iterator<Item = (usize, &'a Tok)> {
+    ctx.toks.iter().enumerate().filter(|(_, t)| !t.in_test)
+}
+
+fn r1_unordered_iter(ctx: &FileCtx) -> Vec<(u32, String)> {
+    if !in_scope(&ctx.module, R1_SCOPE) {
+        return Vec::new();
+    }
+    live(ctx)
+        .filter(|(_, t)| ident(t, "HashMap") || ident(t, "HashSet"))
+        .map(|(_, t)| {
+            (
+                t.line,
+                format!(
+                    "{} in a module under the shards=K bit-identity contract — iteration \
+                     order is nondeterministic; use BTreeMap/BTreeSet or a sorted collect",
+                    t.text
+                ),
+            )
+        })
+        .collect()
+}
+
+fn r2_wallclock(ctx: &FileCtx) -> Vec<(u32, String)> {
+    if in_scope(&ctx.module, R2_EXEMPT) {
+        return Vec::new();
+    }
+    live(ctx)
+        .filter(|&(i, t)| {
+            (ident(t, "Instant") || ident(t, "SystemTime")) && path_seg(ctx.toks, i + 1, "now")
+        })
+        .map(|(_, t)| {
+            (
+                t.line,
+                format!(
+                    "{}::now outside obs/ — clock reads must sit behind the zero-cost \
+                     Tracer gate so tracing off stays bit-identical",
+                    t.text
+                ),
+            )
+        })
+        .collect()
+}
+
+fn r3_rng_discipline(ctx: &FileCtx) -> Vec<(u32, String)> {
+    if in_scope(&ctx.module, R3_EXEMPT) {
+        return Vec::new();
+    }
+    let toks = ctx.toks;
+    let mut out = Vec::new();
+    for (i, t) in live(ctx) {
+        if !(ident(t, "Rng") && path_seg(toks, i + 1, "new")) {
+            continue;
+        }
+        if !toks.get(i + 4).map_or(false, |n| punct(n, "(")) {
+            continue;
+        }
+        // Collect the argument tokens up to the matching ')'.
+        let mut depth = 1usize;
+        let mut j = i + 5;
+        let mut args: Vec<&Tok> = Vec::new();
+        while j < toks.len() && depth > 0 {
+            if punct(&toks[j], "(") {
+                depth += 1;
+            } else if punct(&toks[j], ")") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            args.push(&toks[j]);
+            j += 1;
+        }
+        // Blessed: the seed flows through a util::rng mixing helper.
+        if args.iter().any(|a| R3_BLESSED.contains(&a.text.as_str())) {
+            continue;
+        }
+        // Blessed: a pure constant seed (literals and SCREAMING_CASE consts;
+        // lowercase idents that are path qualifiers, i.e. followed by `::`,
+        // don't count against it).
+        let const_seed = args.iter().enumerate().all(|(k, a)| {
+            if a.kind != TokKind::Ident {
+                return true;
+            }
+            if k + 2 < args.len() && punct(args[k + 1], ":") && punct(args[k + 2], ":") {
+                return true; // path qualifier (e.g. `w::SEED`)
+            }
+            !a.text.chars().any(|c| c.is_ascii_lowercase())
+        });
+        if const_seed {
+            continue;
+        }
+        out.push((
+            t.line,
+            "ad-hoc Rng::new seed — mix seeds through util::rng::stream_seed / xor_stream \
+             (or a blessed per-slot helper) so draws stay a pure function of \
+             (seed, step, stream id), never of batch composition or chunk order"
+                .to_string(),
+        ));
+    }
+    out
+}
+
+fn r4_float_accum(ctx: &FileCtx) -> Vec<(u32, String)> {
+    if !in_scope(&ctx.module, R4_SCOPE) {
+        return Vec::new();
+    }
+    let toks = ctx.toks;
+    let mut out = Vec::new();
+    for (i, t) in live(ctx) {
+        let sum_turbofish = ident(t, "sum")
+            && i + 4 < toks.len()
+            && punct(&toks[i + 1], ":")
+            && punct(&toks[i + 2], ":")
+            && punct(&toks[i + 3], "<")
+            && (ident(&toks[i + 4], "f32") || ident(&toks[i + 4], "f64"));
+        let fold_call = ident(t, "fold")
+            && i > 0
+            && punct(&toks[i - 1], ".")
+            && toks.get(i + 1).map_or(false, |n| punct(n, "("));
+        if sum_turbofish || fold_call {
+            out.push((
+                t.line,
+                "float accumulation in a shard/reduce/apply path — summation order must \
+                 be a pure function of the step plan; merge through tree_reduce_into \
+                 (or pragma a provably fixed-order reduction)"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+/// Keywords that legitimately precede `[` without being an indexing base
+/// (slice patterns, array types/literals).
+const NON_INDEX_PREV: &[&str] =
+    &["let", "mut", "ref", "in", "as", "return", "match", "if", "else", "box", "dyn"];
+
+fn r5_hot_panic(ctx: &FileCtx) -> Vec<(u32, String)> {
+    let panics = in_scope(&ctx.module, R5_PANIC_SCOPE);
+    let indexing = in_scope(&ctx.module, R5_INDEX_SCOPE);
+    if !panics && !indexing {
+        return Vec::new();
+    }
+    let toks = ctx.toks;
+    let mut out = Vec::new();
+    for (i, t) in live(ctx) {
+        if panics {
+            let method_call = |name: &str| {
+                ident(t, name)
+                    && i > 0
+                    && punct(&toks[i - 1], ".")
+                    && toks.get(i + 1).map_or(false, |n| punct(n, "("))
+            };
+            let macro_call = |name: &str| {
+                ident(t, name) && toks.get(i + 1).map_or(false, |n| punct(n, "!"))
+            };
+            if method_call("unwrap") || method_call("expect") {
+                out.push((
+                    t.line,
+                    format!(
+                        ".{}() in the hot path — a recoverable condition must surface as \
+                         Result, not tear down a shard worker mid-step",
+                        t.text
+                    ),
+                ));
+                continue;
+            }
+            if macro_call("panic") || macro_call("unreachable") || macro_call("todo")
+                || macro_call("unimplemented")
+            {
+                out.push((
+                    t.line,
+                    format!("{}! in the hot path — return an error instead", t.text),
+                ));
+                continue;
+            }
+        }
+        if indexing && punct(t, "[") && i > 0 {
+            let prev = &toks[i - 1];
+            let base = (prev.kind == TokKind::Ident
+                && !NON_INDEX_PREV.contains(&prev.text.as_str()))
+                || punct(prev, ")")
+                || punct(prev, "]");
+            if base && !bracket_is_range(toks, i) {
+                out.push((
+                    t.line,
+                    "bare slice indexing in the hot path — a bad id aborts the worker \
+                     thread; use get()/iterators or pragma the proven-in-bounds access"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// True when the bracket group opening at `toks[open]` contains a `..` at
+/// top level (range slicing, not element indexing).
+fn bracket_is_range(toks: &[Tok], open: usize) -> bool {
+    let mut depth = 1usize;
+    let mut j = open + 1;
+    while j < toks.len() && depth > 0 {
+        match toks[j].text.as_str() {
+            "[" | "(" | "{" => depth += 1,
+            "]" | ")" | "}" => depth -= 1,
+            "." if depth == 1 && toks.get(j + 1).map_or(false, |n| punct(n, ".")) => {
+                return true;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    false
+}
+
+fn r6_lossy_cast(ctx: &FileCtx) -> Vec<(u32, String)> {
+    if !in_scope(&ctx.module, R6_SCOPE) {
+        return Vec::new();
+    }
+    let toks = ctx.toks;
+    live(ctx)
+        .filter(|&(i, t)| {
+            ident(t, "as") && toks.get(i + 1).map_or(false, |n| ident(n, "f32"))
+        })
+        .map(|(_, t)| {
+            (
+                t.line,
+                "`as f32` where HT weights / inclusion probabilities are computed — \
+                 quantize through selection::pi_w32 so π and w = 1/π round at ONE \
+                 blessed point, or pragma with the precision argument"
+                    .to_string(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn run(rule_slug: &str, module: &[&str], src: &str) -> Vec<u32> {
+        let lexed = lex(src);
+        let ctx = FileCtx {
+            module: module.iter().map(|s| s.to_string()).collect(),
+            toks: &lexed.toks,
+        };
+        let rule = registry().iter().find(|r| r.slug == rule_slug).unwrap();
+        (rule.check)(&ctx).into_iter().map(|(l, _)| l).collect()
+    }
+
+    #[test]
+    fn rules_respect_module_scope() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(run("unordered-iter", &["coordinator", "batcher"], src), vec![1]);
+        assert_eq!(run("unordered-iter", &["coordinator", "rollout"], src), Vec::<u32>::new());
+        let clock = "let t = Instant::now();\n";
+        assert_eq!(run("wallclock", &["coordinator", "trainer"], clock), vec![1]);
+        assert!(run("wallclock", &["obs", "ledger"], clock).is_empty());
+        assert!(run("wallclock", &["util", "bench"], clock).is_empty());
+    }
+
+    #[test]
+    fn rng_rule_blesses_mixers_and_constants() {
+        let m = &["tasks", "dataset"];
+        assert!(run("rng-discipline", m, "let r = Rng::new(stream_seed(s, step, TAG));").is_empty());
+        assert!(run("rng-discipline", m, "let r = xor_stream(seed, 0x5EED);").is_empty());
+        assert!(run("rng-discipline", m, "let r = Rng::new(SEED ^ 0x5EED);").is_empty());
+        assert!(run("rng-discipline", m, "let r = Rng::new(w::SEED);").is_empty());
+        assert_eq!(run("rng-discipline", m, "let r = Rng::new(seed ^ 0xEAA1);"), vec![1]);
+        assert_eq!(run("rng-discipline", m, "let r = Rng::new(seed + idx as u64);"), vec![1]);
+    }
+
+    #[test]
+    fn float_accum_catches_sum_and_fold_in_runtime() {
+        let m = &["runtime", "params"];
+        assert_eq!(run("float-accum", m, "let n = v.iter().sum::<f64>();"), vec![1]);
+        assert_eq!(run("float-accum", m, "let n = v.iter().fold(0.0, |a, b| a + b);"), vec![1]);
+        assert!(run("float-accum", m, "let n: usize = v.iter().sum::<usize>();").is_empty());
+        assert!(run("float-accum", &["coordinator", "rollout"], "x.sum::<f32>();").is_empty());
+    }
+
+    #[test]
+    fn hot_panic_distinguishes_indexing_from_ranges_and_macros() {
+        let m = &["runtime", "shard"];
+        assert_eq!(run("hot-panic", m, "let x = slots[i];"), vec![1]);
+        assert!(run("hot-panic", m, "let x = &flat[a..b];").is_empty());
+        assert!(run("hot-panic", m, "let v = vec![0.0; n];").is_empty());
+        assert!(run("hot-panic", m, "#[derive(Clone)] struct S;").is_empty());
+        assert_eq!(run("hot-panic", m, "h.join().unwrap();"), vec![1]);
+        assert_eq!(run("hot-panic", m, "x.expect(\"poisoned\");"), vec![1]);
+        assert_eq!(run("hot-panic", m, "panic!(\"boom\");"), vec![1]);
+        // expect/indexing in non-scoped modules stay silent
+        assert!(run("hot-panic", &["exp", "tables"], "xs[0].unwrap();").is_empty());
+    }
+
+    #[test]
+    fn lossy_cast_only_fires_in_selection_scope() {
+        let src = "let p = x as f32;\n";
+        assert_eq!(run("lossy-cast", &["coordinator", "selection", "urs"], src), vec![1]);
+        assert!(run("lossy-cast", &["coordinator", "selection", "urs"], "y as f64;").is_empty());
+        assert!(run("lossy-cast", &["runtime", "sim"], src).is_empty());
+    }
+
+    #[test]
+    fn test_regions_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { let t = Instant::now(); }\n}\n";
+        assert!(run("wallclock", &["coordinator", "trainer"], src).is_empty());
+    }
+}

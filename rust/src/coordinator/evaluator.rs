@@ -23,7 +23,7 @@ use crate::runtime::{ParamStore, Runtime};
 use crate::tasks::verify::reward_tokens;
 use crate::tasks::{EvalSet, Task, Tier};
 use crate::tokenizer::Tokenizer;
-use crate::util::rng::Rng;
+use crate::util::rng::{xor_stream, Rng};
 
 #[derive(Clone, Copy, Debug)]
 pub struct EvalResult {
@@ -120,7 +120,7 @@ pub fn evaluate_all_tiers(
     sched: Option<&RolloutScheduler>,
 ) -> Result<Vec<EvalResult>> {
     let tok = Tokenizer::new();
-    let mut rng = Rng::new(seed ^ 0xEAA1);
+    let mut rng = xor_stream(seed, 0xEAA1);
     Tier::ALL
         .iter()
         .map(|&tier| {

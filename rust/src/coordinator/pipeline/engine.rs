@@ -122,6 +122,7 @@ where
                     }
                     let min_v = start.max(k.saturating_sub(opts.max_staleness));
                     let Ok((v, snap)) = board.wait_min(min_v) else { break };
+                    // natlint: allow(wallclock, reason = "produce_s is a queue-health metric; no training output reads it")
                     let t0 = Instant::now();
                     let res = produce(k, &snap);
                     let failed = res.is_err();
@@ -157,6 +158,7 @@ where
         let mut pending: BTreeMap<u64, (GroupMeta, Result<G>)> = BTreeMap::new();
         let mut expected = start;
         while expected < end {
+            // natlint: allow(wallclock, reason = "wait_s is a queue-health metric; no training output reads it")
             let t_wait = Instant::now();
             let (mut meta, group) = loop {
                 if let Some(item) = pending.remove(&expected) {

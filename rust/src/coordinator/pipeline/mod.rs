@@ -202,6 +202,7 @@ impl<'rt> PipelineTrainer<'rt> {
             recorder: &mut self.recorder,
             tuner: &mut self.tuner,
             step: &mut self.step,
+            // natlint: allow(wallclock, reason = "learner-throughput metric (t_total_s); excluded from golden traces and training math")
             last_apply: Instant::now(),
             pending: None,
         });
@@ -242,6 +243,7 @@ impl<'rt> PipelineTrainer<'rt> {
             // (rollout ran concurrently, so serial-style "rollout + learn"
             // would double-count overlapped time).
             stats.t_total_s = st.last_apply.elapsed().as_secs_f64();
+            // natlint: allow(wallclock, reason = "learner-throughput metric (t_total_s); excluded from golden traces and training math")
             st.last_apply = Instant::now();
             record_step(st.recorder, &stats, group.t_rollout_s, cfg.obs.ledger);
             st.recorder.push("staleness", stats.step, meta.staleness() as f64);

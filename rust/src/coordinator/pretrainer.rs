@@ -14,7 +14,7 @@ use crate::metrics::Recorder;
 use crate::runtime::{OptState, ParamStore, Runtime};
 use crate::tasks::SftCorpus;
 use crate::tokenizer::Tokenizer;
-use crate::util::rng::Rng;
+use crate::util::rng::xor_stream;
 
 pub struct PretrainResult {
     pub params: ParamStore,
@@ -26,7 +26,7 @@ pub struct PretrainResult {
 pub fn pretrain(rt: &Runtime, cfg: &RunConfig, verbose: bool) -> Result<PretrainResult> {
     let tok = Tokenizer::new();
     let d = &rt.manifest.dims;
-    let mut rng = Rng::new(cfg.seed ^ 0x5F7A_11CE);
+    let mut rng = xor_stream(cfg.seed, 0x5F7A_11CE);
     let corpus = SftCorpus::build(
         &tok,
         cfg.pretrain.corpus_size,
@@ -40,6 +40,7 @@ pub fn pretrain(rt: &Runtime, cfg: &RunConfig, verbose: bool) -> Result<Pretrain
     let mut opt = OptState::zeros(&rt.manifest);
     let mut recorder = Recorder::new();
     let mut step = 0u64;
+    // natlint: allow(wallclock, reason = "SFT progress-line throughput only; loss math never reads the clock")
     let t0 = Instant::now();
     'outer: loop {
         let batches = corpus.batches(d.batch_pretrain, &mut rng);

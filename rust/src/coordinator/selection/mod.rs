@@ -55,6 +55,18 @@ pub use urs::Urs;
 use crate::config::Method;
 use crate::util::rng::Rng;
 
+/// Quantize an inclusion probability for the f32 artifact boundary: returns
+/// `(π, w) = (p as f32, (1/p) as f32)` — THE one blessed rounding point for
+/// rate-style schemes (`nat lint` rule R6 flags any other `as f32` in
+/// selection code). Both values round from the same f64 `p`, so a plan's
+/// `probs` and `ht_w` can never disagree about which probability was
+/// sampled with; bit-identical to the historical per-site casts it
+/// replaced.
+pub fn pi_w32(p: f64) -> (f32, f32) {
+    // natlint: allow(lossy-cast, reason = "the single blessed quantization point: f64->f32 rounding happens once here, HT math upstream stays in f64")
+    (p as f32, (1.0 / p) as f32)
+}
+
 /// One sampled selection for one response: the per-token inclusion
 /// probabilities that were *actually used* to draw the mask, the realized
 /// HT weights, and the forward prefix the learner must process.
@@ -238,7 +250,7 @@ pub(crate) fn tail_learn_len(last_kept: usize) -> usize {
 pub mod bench_workload {
     use crate::coordinator::rollout::RolloutSeq;
     use crate::tokenizer::PAD;
-    use crate::util::rng::Rng;
+    use crate::util::rng::{xor_stream, Rng};
 
     pub const SEED: u64 = 0x5E1E_C701;
 
@@ -256,7 +268,8 @@ pub mod bench_workload {
     /// Synthetic behaviour logprobs for a response of length `t` (the
     /// saliency controller's context), deterministic per (SEED, index).
     pub fn old_lp(idx: usize, t: usize) -> Vec<f32> {
-        let mut rng = Rng::new(SEED ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = xor_stream(SEED, (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // natlint: allow(lossy-cast, reason = "synthetic bench logprobs, not HT quantities; precision is irrelevant to the workload shape")
         (0..t).map(|_| -0.02 - rng.uniform() as f32).collect()
     }
 
@@ -279,6 +292,7 @@ pub mod bench_workload {
                     tokens[prompt_len + t] = 3 + ((flat * 11 + t * 5) % 50) as i32;
                 }
                 let old_lp: Vec<f32> =
+                    // natlint: allow(lossy-cast, reason = "synthetic bench logprobs, not HT quantities; precision is irrelevant to the workload shape")
                     (0..resp_len).map(|_| -0.02 - rng.uniform() as f32).collect();
                 RolloutSeq {
                     task_idx: flat / GROUP_SIZE,

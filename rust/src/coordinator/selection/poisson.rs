@@ -12,7 +12,7 @@
 //! perfectly valid Poisson sampling); the `--method poisson --method.k N`
 //! literal is an integer.
 
-use super::{tail_learn_len, SelectionPlan, Selector};
+use super::{pi_w32, tail_learn_len, SelectionPlan, Selector};
 use crate::util::rng::Rng;
 
 pub struct Poisson {
@@ -31,7 +31,7 @@ impl Selector for Poisson {
     }
 
     fn probs(&self, t_i: usize, _ctx: Option<&[f32]>) -> Vec<f32> {
-        vec![self.rate(t_i) as f32; t_i]
+        vec![pi_w32(self.rate(t_i)).0; t_i]
     }
 
     fn expected_kept(&self, t_i: usize, _ctx: Option<&[f32]>) -> f64 {
@@ -40,7 +40,7 @@ impl Selector for Poisson {
 
     fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
         let rate = self.rate(t_i);
-        let w = (1.0 / rate) as f32;
+        let (pi, w) = pi_w32(rate);
         let mut ht_w = vec![0.0f32; t_i];
         let mut kept = 0;
         let mut last_kept = 0usize;
@@ -52,7 +52,7 @@ impl Selector for Poisson {
             }
         }
         SelectionPlan {
-            probs: vec![rate as f32; t_i],
+            probs: vec![pi; t_i],
             ht_w,
             kept,
             learn_len: tail_learn_len(last_kept),

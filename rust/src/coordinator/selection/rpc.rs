@@ -17,6 +17,7 @@ pub fn survival(t_i: usize, min_cut: usize) -> Vec<f32> {
             if t <= c {
                 1.0
             } else {
+                // natlint: allow(lossy-cast, reason = "integer survival counts are < 2^24 (bounded by max_resp), so both casts and the quotient are exact up to one f32 rounding — the same single rounding pi_w32 blesses")
                 (t_i - t + 1) as f32 / (t_i - c + 1) as f32
             }
         })

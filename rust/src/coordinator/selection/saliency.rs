@@ -21,6 +21,7 @@ pub fn probs(old_lp: &[f32], floor: f64) -> Vec<f32> {
         .iter()
         .map(|&lp| {
             let u = (-lp / max_u).clamp(0.0, 1.0);
+            // natlint: allow(lossy-cast, reason = "legacy saliency_probs arithmetic kept bit-identical; the whole blend is f32 by design and floor is a config literal far above f32 epsilon")
             (floor as f32 + (1.0 - floor as f32) * u).clamp(floor as f32, 1.0)
         })
         .collect()
@@ -43,6 +44,7 @@ impl Saliency {
             base
         } else {
             base.iter()
+                // natlint: allow(lossy-cast, reason = "scale solve runs in f64 and rounds once at the boundary, mirroring pi_w32; the MIN_POSITIVE clamp keeps 1/pi finite")
                 .map(|&p| ((self.scale * p as f64).min(1.0) as f32).max(f32::MIN_POSITIVE))
                 .collect()
         }

@@ -10,7 +10,7 @@
 //! (variance T·p·(1-p)) collapses to at most 1/4. Host cost is *lower*
 //! than URS: one RNG draw per sequence instead of T.
 
-use super::{tail_learn_len, SelectionPlan, Selector};
+use super::{pi_w32, tail_learn_len, SelectionPlan, Selector};
 use crate::util::rng::Rng;
 
 pub struct Stratified {
@@ -23,7 +23,7 @@ impl Selector for Stratified {
     }
 
     fn probs(&self, t_i: usize, _ctx: Option<&[f32]>) -> Vec<f32> {
-        vec![self.p as f32; t_i]
+        vec![pi_w32(self.p).0; t_i]
     }
 
     fn expected_kept(&self, t_i: usize, _ctx: Option<&[f32]>) -> f64 {
@@ -32,7 +32,7 @@ impl Selector for Stratified {
 
     fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
         let u = rng.uniform();
-        let w = (1.0 / self.p) as f32;
+        let (pi, w) = pi_w32(self.p);
         let mut ht_w = vec![0.0f32; t_i];
         let mut kept = 0;
         let mut last_kept = 0usize;
@@ -48,7 +48,7 @@ impl Selector for Stratified {
             prev = cum;
         }
         SelectionPlan {
-            probs: vec![self.p as f32; t_i],
+            probs: vec![pi; t_i],
             ht_w,
             kept,
             learn_len: tail_learn_len(last_kept),

@@ -4,7 +4,7 @@
 //! token, with `p` kept in f64 — so mask streams are bit-identical across
 //! the refactor (proptested in `tests/selection.rs`).
 
-use super::{tail_learn_len, SelectionPlan, Selector};
+use super::{pi_w32, tail_learn_len, SelectionPlan, Selector};
 use crate::util::rng::Rng;
 
 pub struct Urs {
@@ -17,7 +17,7 @@ impl Selector for Urs {
     }
 
     fn probs(&self, t_i: usize, _ctx: Option<&[f32]>) -> Vec<f32> {
-        vec![self.p as f32; t_i]
+        vec![pi_w32(self.p).0; t_i]
     }
 
     fn expected_kept(&self, t_i: usize, _ctx: Option<&[f32]>) -> f64 {
@@ -25,7 +25,7 @@ impl Selector for Urs {
     }
 
     fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
-        let w = (1.0 / self.p) as f32;
+        let (pi, w) = pi_w32(self.p);
         let mut ht_w = vec![0.0f32; t_i];
         let mut kept = 0;
         let mut last_kept = 0usize;
@@ -42,7 +42,7 @@ impl Selector for Urs {
         // realised tail savings are real and let short draws land in
         // smaller buckets.
         SelectionPlan {
-            probs: vec![self.p as f32; t_i],
+            probs: vec![pi; t_i],
             ht_w,
             kept,
             learn_len: tail_learn_len(last_kept),

@@ -59,7 +59,7 @@ use crate::runtime::shard::{execute_shards, tree_reduce_into};
 use crate::runtime::{Checkpoint, GradAccum, GradMetrics, OptState, ParamStore, Runtime, TrainMeta};
 use crate::tasks::{Task, TaskSampler};
 use crate::tokenizer::Tokenizer;
-use crate::util::rng::Rng;
+use crate::util::rng::{stream_seed, Rng};
 
 /// Per-step scalar statistics (the rows behind Figures 1-6).
 #[derive(Clone, Debug)]
@@ -107,17 +107,11 @@ pub struct StepStats {
 }
 
 /// Stream tags for [`stream_seed`]; distinct per consumer so forked streams
-/// at the same step stay decorrelated.
+/// at the same step stay decorrelated. The mixer itself lives in
+/// `util::rng` (the blessed helper `nat lint` rule R3 checks for).
 const TAG_TASKS: u64 = 0x5441_534B;
 const TAG_ROLLOUT: u64 = 0x524F_4C4C;
 const TAG_MASK: u64 = 0x4D41_534B;
-
-/// One-way mix of `(run seed, step, stream tag)` into a PRNG seed.
-fn stream_seed(seed: u64, step: u64, tag: u64) -> u64 {
-    seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-        ^ step.wrapping_add(1).wrapping_mul(0xBF58_476D_1CE4_E5B9)
-        ^ tag.wrapping_mul(0x94D0_49BB_1331_11EB)
-}
 
 /// Deterministic per-step context: tasks and RNG streams for optimizer step
 /// `step` (0-based), independent of any other step's state.
@@ -173,6 +167,7 @@ pub fn rollout_stage(
     plan: &mut StepPlan,
     tracer: &Tracer,
 ) -> Result<RolloutGroup> {
+    // natlint: allow(wallclock, reason = "feeds only the t_rollout_s timing stat, which is excluded from golden-trace lines and all training math")
     let t0 = Instant::now();
     // span step is the 1-based optimizer step, matching `learn.step`
     let mut sp = tracer.span("rollout", plan.step + 1);
@@ -235,6 +230,7 @@ pub fn learn_stage(
     seqs: &[RolloutSeq],
     tracer: &Tracer,
 ) -> Result<StepStats> {
+    // natlint: allow(wallclock, reason = "feeds only the t_learn_s timing stat, which is excluded from golden-trace lines and all training math")
     let t_learn_start = Instant::now();
     let mut sp_step = tracer.span("learn.step", step1);
     let d = &rt.manifest.dims;
@@ -700,6 +696,7 @@ impl<'rt> Trainer<'rt> {
 
     /// Run one optimizer step; returns its statistics.
     pub fn step(&mut self) -> Result<StepStats> {
+        // natlint: allow(wallclock, reason = "feeds only the steps/s progress line, which is excluded from golden-trace lines and all training math")
         let t_start = Instant::now();
         let mut plan = plan_step(&self.cfg, self.step);
         let group = rollout_stage(

@@ -1,0 +1,160 @@
+//! Golden-trace machinery shared by the tier-1 regression test and the
+//! `nat golden` subcommand.
+//!
+//! The golden lane pins a 3-step training trace from the seed configuration
+//! (sim runtime, seed 0, RPC(C=8), budget packer) as one canonical line per
+//! step: every non-timing `StepStats` field in shortest-roundtrip decimal
+//! plus an FNV-1a hash of the post-step parameter bits. The committed
+//! fixture at `tests/golden/sim_trace_v1.txt` must replay bit-exactly —
+//! any refactor that silently changes training semantics fails tier-1
+//! instead of shipping. The sim kernels use only IEEE-exact float ops (no
+//! transcendentals), so the fixture is portable across hosts.
+//!
+//! `nat golden --write` (re)generates the fixture; `nat golden --check`
+//! exits nonzero on drift or a missing fixture (the CI drift gate);
+//! `tests/golden_trace.rs` wraps the same functions.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunConfig;
+use crate::coordinator::pipeline::PipelineTrainer;
+use crate::coordinator::trainer::{StepStats, Trainer};
+use crate::runtime::sim::{init_params, sim_manifest};
+use crate::runtime::{OptState, Runtime};
+use crate::tasks::Tier;
+use crate::util::cli::Args;
+
+/// FNV-1a over parameter bit patterns — THE param-hash contract used by the
+/// sharding proptest, the golden-trace lines, and `nat golden`; one
+/// definition means they can never disagree about what "identical
+/// parameters" means.
+pub fn fnv1a(flat: &[f32]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &x in flat {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// The seed config of the trace (kept independent of `RunConfig` default
+/// drift for the documented fields: any change here invalidates the
+/// fixture on purpose).
+pub fn trace_cfg(shards: usize, workers: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = "sim".into();
+    cfg.seed = 0;
+    cfg.rl.tiers = vec![Tier::Easy];
+    cfg.rl.prompts_per_step = 2;
+    cfg.rl.group_size = 4;
+    cfg.train.shards = shards;
+    cfg.pipeline.workers = workers;
+    cfg
+}
+
+/// One canonical fixture line: every non-timing stat plus the param hash.
+pub fn stat_line(s: &StepStats, param_hash: u64) -> String {
+    format!(
+        "step {} hash {:016x} reward {} entropy {} clip {} kl {} gnorm {} sel {} btgt {} \
+         breal {} svar {} rlen {} waste {} mem {} peak {} mb {} seqs {}",
+        s.step,
+        param_hash,
+        s.reward_mean,
+        s.entropy,
+        s.clip_frac,
+        s.kl,
+        s.grad_norm,
+        s.selected_ratio,
+        s.budget_target,
+        s.budget_realized,
+        s.sel_var,
+        s.resp_len_mean,
+        s.padding_waste,
+        s.mem_gb,
+        s.peak_mem_gb,
+        s.micro_batches,
+        s.sequences
+    )
+}
+
+/// Run the 3-step serial seed trace with the given shard count; `shards`
+/// must not change a single bit of it (the sharded-learner invariance).
+pub fn serial_trace(shards: usize) -> Result<Vec<String>> {
+    let rt = Runtime::sim(sim_manifest());
+    let params = init_params(&rt.manifest);
+    let opt = OptState::zeros(&rt.manifest);
+    let mut tr = Trainer::new(&rt, trace_cfg(shards, 0), params, opt);
+    let mut out = Vec::new();
+    for _ in 0..3 {
+        let s = tr.step()?;
+        out.push(stat_line(&s, fnv1a(&tr.params.flat)));
+    }
+    Ok(out)
+}
+
+/// Final parameter hash after the same 3 steps under the pipelined trainer
+/// (the pipelined-scheduler invariance: must equal the serial final hash).
+pub fn pipelined_final_hash(shards: usize, workers: usize) -> Result<u64> {
+    let rt = Runtime::sim(sim_manifest());
+    let params = init_params(&rt.manifest);
+    let opt = OptState::zeros(&rt.manifest);
+    let mut tr = PipelineTrainer::new(&rt, trace_cfg(shards, workers), params, opt);
+    tr.train(3, false)?;
+    Ok(fnv1a(&tr.params.flat))
+}
+
+/// The committed fixture location.
+pub fn fixture_path() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/sim_trace_v1.txt"))
+}
+
+/// Render the full fixture document (trailing newline included).
+pub fn render_trace() -> Result<String> {
+    Ok(serial_trace(1)?.join("\n") + "\n")
+}
+
+/// `nat golden [--write] [--check]`
+///
+/// Default prints the freshly computed trace. `--write` saves it as the
+/// fixture (then commit the file). `--check` compares against the committed
+/// fixture and exits nonzero on drift or when no fixture is committed yet —
+/// the CI drift gate.
+pub fn cmd_golden(args: &Args) -> Result<()> {
+    let rendered = render_trace()?;
+    let path = fixture_path();
+    if args.has_flag("write") {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&path, &rendered)?;
+        println!("nat golden: fixture written to {} — commit this file", path.display());
+        return Ok(());
+    }
+    if args.has_flag("check") {
+        if !path.exists() {
+            bail!(
+                "nat golden --check: no fixture at {} — run `nat golden --write` \
+                 and commit the file",
+                path.display()
+            );
+        }
+        let committed = std::fs::read_to_string(&path)?;
+        if committed != rendered {
+            eprintln!("--- committed\n{committed}--- computed\n{rendered}");
+            bail!(
+                "nat golden --check: training semantics drifted from {}. If the \
+                 change is intentional, rerun with --write and commit the new \
+                 fixture with an explanation.",
+                path.display()
+            );
+        }
+        println!("nat golden: trace matches {}", path.display());
+        return Ok(());
+    }
+    print!("{rendered}");
+    Ok(())
+}

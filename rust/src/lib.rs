@@ -16,9 +16,11 @@
 //!
 //! Python never runs at training time: the coordinator drives the AOT
 //! artifacts through PJRT (`runtime` module).
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod exp;
+pub mod golden;
 pub mod metrics;
 pub mod model;
 pub mod obs;

@@ -7,6 +7,8 @@
 //!   eval      — Acc@16 / pass@16 on the benchmark tiers
 //!   repro     — regenerate paper tables/figures (see rust/src/exp)
 //!   trace     — analyze an --obs.trace NDJSON file (stage table + savings)
+//!   lint      — static analysis for the determinism/HT contracts
+//!   golden    — compute/write/check the golden-trace fixture
 //!
 //! Common options: --model tiny|small|base|xl|sim, --config configs/x.toml,
 //! plus any dotted config key as --key value (e.g. --rl.steps 100).
@@ -37,6 +39,8 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "repro" => exp::cmd_repro(&args),
         "trace" => analyze::cmd_trace(&args),
+        "lint" => nat_rl::analysis::cmd_lint(&args),
+        "golden" => nat_rl::golden::cmd_golden(&args),
         "" | "help" => {
             print_help();
             Ok(())
@@ -56,7 +60,11 @@ fn print_help() {
                      (--method rpc|urs|det_trunc|grpo|saliency|stratified|poisson)\n\
            eval      Acc@16/pass@16 over MATH-S/AIME24-S/AIME25-S (--ckpt path)\n\
            repro     regenerate paper tables and figures (--what table2|table3|figures|all)\n\
-           trace     analyze an --obs.trace NDJSON file (--in trace.ndjson [--check])\n\n\
+           trace     analyze an --obs.trace NDJSON file (--in trace.ndjson [--check])\n\
+           lint      static analysis enforcing the determinism & HT-unbiasedness\n\
+                     contracts ([--root DIR] [--json] [--check]); see README\n\
+           golden    compute the golden seed trace (--write saves the fixture,\n\
+                     --check is the CI drift gate)\n\n\
          CONFIG: --config configs/file.toml, then dotted overrides, e.g.\n\
            --model base --method urs --method.p 0.5 --rl.steps 100 --seed 3\n\n\
          PIPELINE / RESUME (train):\n\

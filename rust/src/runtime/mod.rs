@@ -104,6 +104,7 @@ impl Runtime {
         let Engine::Pjrt(client) = &self.engine else {
             bail!("sim runtime has no compiled executables (requested {file})");
         };
+        // natlint: allow(hot-panic, reason = "lock poisoning means a compile already panicked on another thread; propagating the poison is the policy, there is no recoverable state")
         let mut exes = self.exes.lock().expect("executable cache poisoned");
         if let Some(e) = exes.get(file) {
             return Ok(e.clone());
@@ -168,6 +169,7 @@ impl Runtime {
     }
 
     pub fn compiled_count(&self) -> usize {
+        // natlint: allow(hot-panic, reason = "lock poisoning means a compile already panicked on another thread; propagating the poison is the policy, there is no recoverable state")
         self.exes.lock().expect("executable cache poisoned").len()
     }
 

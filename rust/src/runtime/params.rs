@@ -69,6 +69,7 @@ impl ParamStore {
     }
 
     pub fn l2_norm(&self) -> f64 {
+        // natlint: allow(float-accum, reason = "left-to-right f64 sum over one contiguous slice — the order is the slice order, a pure function of the layout, never of K or scheduling")
         self.flat.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 }

@@ -79,12 +79,14 @@ pub fn execute_shards(
     step: u64,
 ) -> Result<Vec<GradLeaf>> {
     let traced_leaf = |i: usize, shard: usize| -> Result<GradLeaf> {
+        // natlint: allow(hot-panic, reason = "i comes from the validated shard plan (every id < mbs.len() exactly once, checked by plan_shards)")
+        let mb = &mbs[i];
         let mut sp = tracer.span("shard.grad", step);
         sp.set_tid(1 + shard as u64);
         sp.arg("mb", i as f64);
-        sp.arg("bucket", mbs[i].bucket as f64);
-        sp.arg("rows", mbs[i].rows as f64);
-        rt.grad_leaf(&mbs[i], param_lits)
+        sp.arg("bucket", mb.bucket as f64);
+        sp.arg("rows", mb.rows as f64);
+        rt.grad_leaf(mb, param_lits)
     };
     let mut slots: Vec<Option<GradLeaf>> = Vec::new();
     slots.resize_with(mbs.len(), || None);
@@ -92,6 +94,7 @@ pub fn execute_shards(
     if active.len() <= 1 {
         for ids in active {
             for &i in ids {
+                // natlint: allow(hot-panic, reason = "slot ids are the plan's micro-batch ids, all < slots.len() by construction")
                 slots[i] = Some(traced_leaf(i, 0)?);
             }
         }
@@ -117,7 +120,9 @@ pub fn execute_shards(
         });
         for r in results {
             for (i, leaf) in r? {
+                // natlint: allow(hot-panic, reason = "slot ids are the plan's micro-batch ids, all < slots.len() by construction")
                 debug_assert!(slots[i].is_none(), "micro-batch {i} computed twice");
+                // natlint: allow(hot-panic, reason = "slot ids are the plan's micro-batch ids, all < slots.len() by construction")
                 slots[i] = Some(leaf);
             }
         }

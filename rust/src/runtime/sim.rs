@@ -109,7 +109,9 @@ pub fn sim_manifest() -> Manifest {
       }
     }"#,
     )
+    // natlint: allow(hot-panic, reason = "parses a compile-time-constant embedded manifest; failure is a build defect caught by every test, not a runtime condition")
     .expect("sim manifest JSON is well-formed");
+    // natlint: allow(hot-panic, reason = "parses a compile-time-constant embedded manifest; failure is a build defect caught by every test, not a runtime condition")
     Manifest::from_json(Path::new("sim://"), &j).expect("sim manifest is consistent")
 }
 

@@ -2,7 +2,7 @@
 //! SFT corpus builder for the base-model phase.
 
 use crate::tokenizer::{Tokenizer, EOS, PAD};
-use crate::util::rng::Rng;
+use crate::util::rng::{xor_stream, Rng};
 
 use super::gen::gen_task;
 use super::render::{maybe_corrupt, render_cot};
@@ -33,6 +33,7 @@ impl TaskSampler {
     pub fn new(seed: u64, mix: TaskMix) -> Self {
         // Offset the stream so ids never collide with eval sets (eval ids
         // live in the top half of the u64 space).
+        // natlint: allow(rng-discipline, reason = "callers pass an already-mixed seed (trainer::plan_step mixes via util::rng::stream_seed); mixing again here would double-hash the trainer stream")
         TaskSampler { rng: Rng::new(seed), mix, next_id: 0 }
     }
 
@@ -58,7 +59,7 @@ pub struct EvalSet {
 
 impl EvalSet {
     pub fn build(tier: Tier, n: usize, seed: u64) -> EvalSet {
-        let mut rng = Rng::new(seed ^ 0xE7A1_5E7D_0000_0000);
+        let mut rng = xor_stream(seed, 0xE7A1_5E7D_0000_0000);
         let kinds = Kind::ALL;
         let tasks = (0..n)
             .map(|i| {
@@ -98,7 +99,7 @@ impl SftCorpus {
         seed: u64,
         mix: &TaskMix,
     ) -> SftCorpus {
-        let mut rng = Rng::new(seed ^ 0x5F7C_0000_0000_0000);
+        let mut rng = xor_stream(seed, 0x5F7C_0000_0000_0000);
         let mut examples = Vec::with_capacity(n);
         while examples.len() < n {
             let kind = mix.kinds[rng.below(mix.kinds.len() as u64) as usize];

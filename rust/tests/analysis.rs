@@ -1,0 +1,116 @@
+//! Tier-1 gate for `nat lint`: the repo's own source tree must be clean,
+//! the seeded fixture tree must trip every rule with exact counts, and the
+//! pragma system must round-trip without ever silencing an unnamed rule.
+
+use std::path::Path;
+
+use nat_rl::analysis::{lint_source, pragma, run_lint};
+use nat_rl::util::rng::Rng;
+
+/// The whole `rust/src` tree satisfies the determinism / HT-unbiasedness
+/// contracts. This is the test that makes "new subsystems land lint-clean"
+/// a property of tier-1 rather than a review convention.
+#[test]
+fn repo_src_tree_is_lint_clean() {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let report = run_lint(root).expect("lint pass runs over src");
+    assert!(
+        report.findings.is_empty(),
+        "nat lint found contract violations in the source tree:\n{}",
+        report.render_human()
+    );
+    assert!(report.files_scanned > 20, "suspiciously few files: {}", report.files_scanned);
+}
+
+/// The seeded fixture tree (never compiled) trips every rule R1–R6 plus the
+/// P0 pragma meta-rule, with exact per-rule counts — so a rule that silently
+/// stops firing breaks tier-1, not just CI.
+#[test]
+fn seeded_fixture_trips_every_rule() {
+    let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/natlint"));
+    let report = run_lint(root).expect("lint pass runs over the fixture tree");
+    let counts = report.counts();
+    for (slug, n) in [
+        ("unordered-iter", 1usize),
+        ("wallclock", 1),
+        ("rng-discipline", 1),
+        ("float-accum", 2),
+        ("hot-panic", 2),
+        ("lossy-cast", 1),
+        ("pragma", 1),
+    ] {
+        assert_eq!(
+            counts.get(slug),
+            Some(&n),
+            "rule {slug} count drifted:\n{}",
+            report.render_human()
+        );
+    }
+    assert_eq!(report.findings.len(), 9, "{}", report.render_human());
+    assert_eq!(report.files_scanned, 4);
+}
+
+/// Randomized pragma round-trip: any nonempty rule subset in any order with
+/// a random reason renders to a comment that parses back verbatim.
+#[test]
+fn randomized_pragma_render_parse_round_trip() {
+    const SLUGS: [&str; 6] = [
+        "unordered-iter",
+        "wallclock",
+        "rng-discipline",
+        "float-accum",
+        "hot-panic",
+        "lossy-cast",
+    ];
+    // reasons may contain spaces, commas, dashes — everything but a quote
+    const CHARSET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789 -,().";
+    let mut rng = Rng::new(0xA11A_57A7);
+    for _ in 0..300 {
+        let mut subset: Vec<&str> =
+            SLUGS.iter().copied().filter(|_| rng.bernoulli(0.4)).collect();
+        if subset.is_empty() {
+            subset.push(SLUGS[rng.below(SLUGS.len() as u64) as usize]);
+        }
+        let len = 1 + rng.below(24) as usize;
+        let mut reason: String = (0..len)
+            .map(|_| CHARSET[rng.below(CHARSET.len() as u64) as usize] as char)
+            .collect();
+        if reason.trim().is_empty() {
+            reason = "fixture".to_string();
+        }
+        let text = pragma::render(&subset, &reason);
+        let parsed = pragma::parse(7, &text)
+            .expect("rendered pragma is recognized")
+            .expect("rendered pragma is well-formed");
+        assert_eq!(parsed.rules, subset, "rules drifted through render/parse: {text}");
+        assert_eq!(parsed.reason, reason, "reason drifted through render/parse: {text}");
+        assert_eq!(parsed.line, 7);
+    }
+}
+
+/// A pragma never silences a rule it does not name: one line tripping both
+/// wallclock and hot-panic, waived for a random one of the two — the other
+/// must still fire. Naming both is the only way to clear the line.
+#[test]
+fn pragma_never_silences_unnamed_rules() {
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..50 {
+        let (named, other) = if rng.bernoulli(0.5) {
+            ("wallclock", "hot-panic")
+        } else {
+            ("hot-panic", "wallclock")
+        };
+        let src = format!(
+            "{}\nlet t = Instant::now().elapsed().unwrap();\n",
+            pragma::render(&[named], "fixture waiver")
+        );
+        let findings = lint_source("coordinator/trainer.rs", &src);
+        assert_eq!(findings.len(), 1, "waiving {named} left: {findings:?}");
+        assert_eq!(findings[0].slug, other);
+    }
+    let both = format!(
+        "{}\nlet t = Instant::now().elapsed().unwrap();\n",
+        pragma::render(&["wallclock", "hot-panic"], "fixture waiver")
+    );
+    assert!(lint_source("coordinator/trainer.rs", &both).is_empty());
+}

@@ -1,17 +1,7 @@
 //! Helpers shared across integration-test binaries (`mod common;` pattern —
 //! this directory is not compiled as a test target of its own).
 
-/// FNV-1a over parameter bit patterns — THE param-hash contract used by both
-/// the sharding proptest's "post-step param hash" and the golden-trace
-/// fixture lines; keeping one definition means the two tests can never
-/// disagree about what "identical parameters" means.
-pub fn fnv1a(flat: &[f32]) -> u64 {
-    let mut h = 0xCBF2_9CE4_8422_2325u64;
-    for &x in flat {
-        for b in x.to_bits().to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01B3);
-        }
-    }
-    h
-}
+// The param-hash contract moved into the library (`nat_rl::golden`) so the
+// `nat golden` subcommand and the tests share one definition; re-exported
+// here so every test keeps its `common::fnv1a` spelling.
+pub use nat_rl::golden::fnv1a;

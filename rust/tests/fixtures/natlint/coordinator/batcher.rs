@@ -1,0 +1,12 @@
+//! natlint self-test fixture (never compiled): one live R1 unordered-iter
+//! finding plus one correctly waived occurrence, proving that a pragma
+//! silences exactly the line and rule it names.
+
+use std::collections::HashMap;
+
+// natlint: allow(unordered-iter, reason = "fixture: demonstrates a correctly waived finding")
+pub type Waived = std::collections::HashSet<u64>;
+
+pub fn pack(order: &[u64]) -> usize {
+    order.len()
+}

@@ -1,0 +1,12 @@
+//! natlint self-test fixture (never compiled): one R3 rng-discipline
+//! finding (ad-hoc data-dependent seed) and one R6 lossy-cast finding
+//! (an `as f32` outside the blessed pi_w32 quantization point).
+
+use crate::util::rng::Rng;
+
+pub fn plan(seed: u64, idx: u64, p: f64) -> f32 {
+    let mut rng = Rng::new(seed + idx);
+    let pi = p as f32;
+    let _ = rng.next_u64();
+    pi
+}

@@ -1,0 +1,19 @@
+//! natlint self-test fixture (never compiled): R2 wallclock, two R5
+//! hot-panic findings (an `.unwrap()` and a bare slice index), and one
+//! malformed pragma that must surface as a P0 finding, not a waiver.
+
+use std::time::Instant;
+
+pub fn step(xs: &[f32], i: usize) -> f32 {
+    let t0 = Instant::now();
+    let y = xs[i];
+    let z = head(xs).unwrap();
+    y + z + t0.elapsed().as_secs_f32()
+}
+
+fn head(xs: &[f32]) -> Option<f32> {
+    xs.first().copied()
+}
+
+// natlint: allow(wallclock)
+pub fn noted() {}

@@ -1,0 +1,19 @@
+//! natlint self-test fixture (never compiled): two R4 float-accum findings
+//! (a `sum::<f32>` turbofish and a `.fold(` chain) in the reduce path,
+//! plus a `#[cfg(test)]` duplicate that the pass must leave silent.
+
+pub fn reduce(xs: &[f32]) -> f32 {
+    let a = xs.iter().sum::<f32>();
+    let b = xs.iter().fold(0.0f32, |m, &x| m + x);
+    a + b
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_region_duplicate_stays_silent() {
+        let xs = [1.0f32, 2.0];
+        let s = xs.iter().sum::<f32>();
+        assert!(s > 0.0);
+    }
+}

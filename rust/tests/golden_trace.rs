@@ -1,139 +1,54 @@
-//! Golden-trace regression fixture (issue satellite).
+//! Golden-trace regression fixture (tier-1).
 //!
-//! A 3-step training trace from the seed configuration (default method
-//! RPC(C=8), budget packer, bucketed rollout engine, seed 0) run on the
-//! deterministic sim runtime, serialized as one canonical line per step:
-//! every non-timing `StepStats` field in shortest-roundtrip decimal plus an
-//! FNV-1a hash of the post-step parameter bits. The committed fixture at
-//! `tests/golden/sim_trace_v1.txt` must replay bit-exactly, so any future
-//! refactor that silently changes training semantics — masking streams,
-//! packing, reduction order, apply math — fails tier-1 here instead of
-//! shipping.
-//!
-//! Bootstrap contract: if the fixture file is absent (first run on a fresh
-//! feature branch), the test writes it and still asserts in-process replay
-//! determinism; the generated file is then committed. The sim kernels use
-//! only IEEE-exact float ops (no transcendentals), so the fixture is
-//! portable across hosts.
+//! The trace logic lives in `nat_rl::golden` and is shared with the
+//! `nat golden` subcommand (`--write` regenerates the fixture, `--check` is
+//! the CI drift gate). This test asserts the three determinism invariants
+//! on the fixture workload — replay, shards=K, pipelined-final-hash — and
+//! then replays the committed fixture at `tests/golden/sim_trace_v1.txt`
+//! bit-exactly. Bootstrap contract: if the fixture is absent (fresh
+//! branch), the test writes it and the generated file is then committed.
 
-use std::path::Path;
-
-use nat_rl::config::RunConfig;
-use nat_rl::coordinator::pipeline::PipelineTrainer;
-use nat_rl::coordinator::trainer::{StepStats, Trainer};
-use nat_rl::runtime::sim::{init_params, sim_manifest};
-use nat_rl::runtime::{OptState, Runtime};
-use nat_rl::tasks::Tier;
-
-mod common;
-use common::fnv1a;
-
-/// The seed config of the trace (kept independent of `RunConfig` default
-/// drift for the documented fields: any change here invalidates the
-/// fixture on purpose).
-fn trace_cfg(shards: usize, workers: usize) -> RunConfig {
-    let mut cfg = RunConfig::default();
-    cfg.model = "sim".into();
-    cfg.seed = 0;
-    cfg.rl.tiers = vec![Tier::Easy];
-    cfg.rl.prompts_per_step = 2;
-    cfg.rl.group_size = 4;
-    cfg.train.shards = shards;
-    cfg.pipeline.workers = workers;
-    cfg
-}
-
-fn line(s: &StepStats, param_hash: u64) -> String {
-    format!(
-        "step {} hash {:016x} reward {} entropy {} clip {} kl {} gnorm {} sel {} btgt {} \
-         breal {} svar {} rlen {} waste {} mem {} peak {} mb {} seqs {}",
-        s.step,
-        param_hash,
-        s.reward_mean,
-        s.entropy,
-        s.clip_frac,
-        s.kl,
-        s.grad_norm,
-        s.selected_ratio,
-        s.budget_target,
-        s.budget_realized,
-        s.sel_var,
-        s.resp_len_mean,
-        s.padding_waste,
-        s.mem_gb,
-        s.peak_mem_gb,
-        s.micro_batches,
-        s.sequences
-    )
-}
-
-/// Run the 3-step seed trace; `shards`/`workers` must not change a single
-/// bit of it (the sharded-learner and pipelined-scheduler invariants).
-fn trace(shards: usize, workers: usize) -> Vec<String> {
-    let rt = Runtime::sim(sim_manifest());
-    let params = init_params(&rt.manifest);
-    let opt = OptState::zeros(&rt.manifest);
-    if workers > 0 {
-        let mut tr = PipelineTrainer::new(&rt, trace_cfg(shards, workers), params, opt);
-        tr.train(3, false).unwrap();
-        // Reconstruct the per-step lines from the recorder (the pipelined
-        // trainer returns stats via its recorder series) — only the FINAL
-        // param hash is asserted for the pipelined leg.
-        vec![format!("final hash {:016x}", fnv1a(&tr.params.flat))]
-    } else {
-        let mut tr = Trainer::new(&rt, trace_cfg(shards, workers), params, opt);
-        let mut out = Vec::new();
-        for _ in 0..3 {
-            let s = tr.step().unwrap();
-            out.push(line(&s, fnv1a(&tr.params.flat)));
-        }
-        out
-    }
-}
+use nat_rl::golden::{fixture_path, pipelined_final_hash, serial_trace};
 
 #[test]
 fn golden_trace_replays_bit_exactly() {
-    let a = trace(1, 0);
-    let b = trace(1, 0);
+    let a = serial_trace(1).unwrap();
+    let b = serial_trace(1).unwrap();
     assert_eq!(a, b, "3-step seed trace is not replay-deterministic");
 
     // The sharded learner must reproduce the identical trace (K-invariance
     // on the exact committed fixture workload)...
-    let sharded = trace(4, 0);
+    let sharded = serial_trace(4).unwrap();
     assert_eq!(a, sharded, "shards=4 changed the golden trace");
     // ...and the pipelined trainer must land on the same parameters.
-    let piped = trace(2, 1);
-    let rt = Runtime::sim(sim_manifest());
-    let mut serial = Trainer::new(
-        &rt,
-        trace_cfg(1, 0),
-        init_params(&rt.manifest),
-        OptState::zeros(&rt.manifest),
+    let serial_final = a
+        .last()
+        .and_then(|l| l.split_whitespace().nth(3).map(String::from))
+        .expect("trace has a final hash field");
+    let piped = pipelined_final_hash(2, 1).unwrap();
+    assert_eq!(
+        format!("{piped:016x}"),
+        serial_final,
+        "pipelined trainer diverged from the serial parameters"
     );
-    serial.train(3, false).unwrap();
-    let serial_final = fnv1a(&serial.params.flat);
-    assert_eq!(piped, vec![format!("final hash {serial_final:016x}")]);
 
     let rendered = a.join("\n") + "\n";
-    let path = Path::new(concat!(
-        env!("CARGO_MANIFEST_DIR"),
-        "/tests/golden/sim_trace_v1.txt"
-    ));
+    let path = fixture_path();
     if path.exists() {
-        let committed = std::fs::read_to_string(path).unwrap();
+        let committed = std::fs::read_to_string(&path).unwrap();
         assert_eq!(
             committed, rendered,
             "training semantics drifted from the committed golden trace \
-             ({}). If the change is intentional, delete the fixture, rerun \
-             this test to regenerate it, and commit the new file with an \
-             explanation.",
+             ({}). If the change is intentional, rerun `nat golden --write` \
+             and commit the new fixture with an explanation.",
             path.display()
         );
     } else {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-        std::fs::write(path, &rendered).unwrap();
+        std::fs::write(&path, &rendered).unwrap();
         eprintln!(
-            "bootstrapped golden trace fixture at {} — commit this file",
+            "bootstrapped golden trace fixture at {} — commit this file \
+             (or run `nat golden --write`)",
             path.display()
         );
     }
