@@ -9,14 +9,19 @@
 //! * the budget acceptance: for every adaptive scheme the achieved
 //!   expectation lands within 2% of the target — asserted here too, AFTER
 //!   the JSON is on disk so a failure still leaves the measurements;
-//! * end-to-end `learn_stage` steps under `--train.budget_mode batch` on
-//!   the sim runtime, checked against a full-token GRPO step for matching
-//!   `StepStats` shape (same step/sequence accounting, finite metrics) —
-//!   the controller changes *how much* is selected, never the step's
-//!   observable structure.
+//! * the selection-v2 variance story: the Neyman per-sequence allocation
+//!   vs the Poisson batch controller at EQUAL realized budget on the same
+//!   population — mean HT effective sample size and per-row selection
+//!   variance over 32 deterministic draws, with the "neyman raises ht_ess
+//!   and lowers sel_var" acceptance asserted after the JSON is written;
+//! * end-to-end `learn_stage` steps under `--train.budget_mode batch` (and
+//!   one `neyman` step) on the sim runtime, checked against a full-token
+//!   GRPO step for matching `StepStats` shape (same step/sequence
+//!   accounting, finite metrics) — the controller changes *how much* is
+//!   selected, never the step's observable structure.
 
 use nat_rl::config::{BudgetMode, Method, RunConfig};
-use nat_rl::coordinator::selection::{self, bench_workload};
+use nat_rl::coordinator::selection::{self, bench_workload, HtMoments, SelectionPlan};
 use nat_rl::coordinator::trainer::{learn_stage, StepStats};
 use nat_rl::obs::Tracer;
 use nat_rl::runtime::sim::{init_params, sim_manifest};
@@ -45,9 +50,9 @@ fn controller_bench(b: &mut Bench, records: &mut Vec<Json>) {
     ] {
         let target = (total * frac).round() as usize;
         b.iter(&format!("solve/{}", method.id()), || {
-            selection::solve_batch(&method, &rows, target)
+            selection::solve_batch(&method, &rows, target, PI_FLOOR).unwrap()
         });
-        let out = selection::solve_batch(&method, &rows, target);
+        let out = selection::solve_batch(&method, &rows, target, PI_FLOOR).unwrap();
         let rel = (out.expected - target as f64).abs() / target as f64;
         records.push(obj(vec![
             ("scheme", Json::Str(method.id().into())),
@@ -56,11 +61,103 @@ fn controller_bench(b: &mut Bench, records: &mut Vec<Json>) {
             ("rel_err", Json::Num(rel)),
         ]));
     }
+
+    let abs_adv = vec![1.0f64; rows.len()];
+    let target = (total * 0.4).round() as usize;
+    b.iter("solve/neyman", || {
+        selection::solve_neyman(&rows, &abs_adv, target, PI_FLOOR)
+    });
+    let alloc = selection::solve_neyman(&rows, &abs_adv, target, PI_FLOOR);
+    let rel = (alloc.expected_sum() - target as f64).abs() / target as f64;
+    records.push(obj(vec![
+        ("scheme", Json::Str("neyman".into())),
+        ("target", Json::Num(target as f64)),
+        ("expected", Json::Num(alloc.expected_sum())),
+        ("rel_err", Json::Num(rel)),
+    ]));
+}
+
+/// `--train.pi_floor` default — the bench measures the production guard.
+const PI_FLOOR: f64 = 1e-3;
+
+/// Mean (HT effective sample size, per-row selection variance) over
+/// `draws` deterministic draws of a full 64-row selection round.
+fn mc_stats<F>(
+    rows: &[(usize, Option<&[f32]>)],
+    draws: usize,
+    seed: u64,
+    mut sample: F,
+) -> (f64, f64)
+where
+    F: FnMut(usize, usize, Option<&[f32]>, &mut Rng) -> SelectionPlan,
+{
+    let mut rng = Rng::new(seed);
+    let (mut ess_acc, mut var_acc) = (0.0f64, 0.0f64);
+    for _ in 0..draws {
+        let mut ht = HtMoments::default();
+        let mut var = 0.0f64;
+        for (i, &(t, lp)) in rows.iter().enumerate() {
+            let plan = sample(i, t, lp, &mut rng);
+            let e = plan.expected_kept();
+            var += (plan.kept as f64 - e) * (plan.kept as f64 - e);
+            ht.observe(&plan);
+        }
+        ess_acc += ht.ess();
+        var_acc += var / rows.len() as f64;
+    }
+    (ess_acc / draws as f64, var_acc / draws as f64)
+}
+
+/// Neyman allocation vs the Poisson batch controller at EQUAL realized
+/// budget on the shared controller workload — the selection-v2 acceptance
+/// numbers (`ht_ess` up, `sel_var` down). Returns the JSON record plus the
+/// gate inputs `(batch_ess, neyman_ess, batch_var, neyman_var)`.
+fn allocation_comparison() -> (Json, (f64, f64, f64, f64)) {
+    let lens = bench_workload::lens();
+    let lps: Vec<Vec<f32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| bench_workload::old_lp(i, t))
+        .collect();
+    let rows: Vec<(usize, Option<&[f32]>)> =
+        lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
+    let total: f64 = lens.iter().map(|&t| t as f64).sum();
+    let target = (total * 0.4).round() as usize;
+
+    let batch =
+        selection::solve_batch(&Method::Poisson { k: 4 }, &rows, target, PI_FLOOR).unwrap();
+    // the workload's groups alternate rewards, so every |advantage| is equal
+    // — the Neyman solve then allocates on length × surprisal alone
+    let abs_adv = vec![1.0f64; rows.len()];
+    let neyman = selection::solve_neyman(&rows, &abs_adv, target, PI_FLOOR);
+
+    const DRAWS: usize = 32;
+    let (b_ess, b_var) =
+        mc_stats(&rows, DRAWS, 0xA110_C001, |_, t, lp, rng| batch.selector.sample(t, lp, rng));
+    let (n_ess, n_var) =
+        mc_stats(&rows, DRAWS, 0xA110_C002, |i, t, _, rng| neyman.sample_row(i, t, rng));
+
+    let record = obj(vec![
+        ("comparison", Json::Str("neyman_vs_poisson_batch".into())),
+        ("target", Json::Num(target as f64)),
+        ("draws", Json::Num(DRAWS as f64)),
+        ("pi_floor", Json::Num(PI_FLOOR)),
+        ("batch_expected", Json::Num(batch.expected)),
+        ("neyman_expected", Json::Num(neyman.expected_sum())),
+        ("batch_ht_ess", Json::Num(b_ess)),
+        ("neyman_ht_ess", Json::Num(n_ess)),
+        ("batch_sel_var", Json::Num(b_var)),
+        ("neyman_sel_var", Json::Num(n_var)),
+        ("ht_ess_gain", Json::Num(n_ess / b_ess - 1.0)),
+        ("sel_var_ratio", Json::Num(n_var / b_var)),
+    ]);
+    (record, (b_ess, n_ess, b_var, n_var))
 }
 
 fn step_with(
     rt: &Runtime,
     method: Method,
+    mode: BudgetMode,
     budget: usize,
     seqs: &[nat_rl::coordinator::rollout::RolloutSeq],
 ) -> StepStats {
@@ -69,7 +166,7 @@ fn step_with(
     cfg.rl.group_size = bench_workload::GROUP_SIZE;
     if budget > 0 {
         cfg.train.token_budget = budget;
-        cfg.train.budget_mode = BudgetMode::Batch;
+        cfg.train.budget_mode = mode;
     }
     let mut params = init_params(&rt.manifest);
     let mut opt = OptState::zeros(&rt.manifest);
@@ -128,7 +225,9 @@ fn main() {
     let total: usize = seqs.iter().map(|s| s.resp_len).sum();
     let budget = (total as f64 * 0.4).round() as usize;
 
-    let grpo = step_with(&rt, Method::Grpo, 0, &seqs);
+    let (alloc_record, (b_ess, n_ess, b_var, n_var)) = allocation_comparison();
+
+    let grpo = step_with(&rt, Method::Grpo, BudgetMode::None, 0, &seqs);
     let mut step_records = vec![obj(vec![
         ("scheme", Json::Str("grpo".into())),
         ("selected_ratio", Json::Num(grpo.selected_ratio)),
@@ -142,9 +241,9 @@ fn main() {
         Method::Saliency { floor: 0.25 },
     ] {
         b.iter(&format!("step_budget/{}", method.id()), || {
-            step_with(&rt, method, budget, &seqs)
+            step_with(&rt, method, BudgetMode::Batch, budget, &seqs)
         });
-        let s = step_with(&rt, method, budget, &seqs);
+        let s = step_with(&rt, method, BudgetMode::Batch, budget, &seqs);
         assert_shape_matches(&grpo, &s, method.id());
         let rel = (s.budget_realized - budget as f64).abs() / budget as f64;
         worst_rel = worst_rel.max(rel);
@@ -173,6 +272,27 @@ fn main() {
         ]));
     }
 
+    // End-to-end selection-v2 step: the Neyman allocation through the full
+    // learn_stage path, same shape/accuracy contract as the batch schemes
+    // (the per-row allocation changes the rates, not the step structure).
+    b.iter("step_budget/neyman", || {
+        step_with(&rt, Method::Stratified { p: 0.9 }, BudgetMode::Neyman, budget, &seqs)
+    });
+    let ney = step_with(&rt, Method::Stratified { p: 0.9 }, BudgetMode::Neyman, budget, &seqs);
+    assert_shape_matches(&grpo, &ney, "neyman");
+    let ney_rel = (ney.budget_realized - budget as f64).abs() / budget as f64;
+    worst_rel = worst_rel.max(ney_rel);
+    step_records.push(obj(vec![
+        ("scheme", Json::Str("neyman".into())),
+        ("target", Json::Num(budget as f64)),
+        ("budget_realized", Json::Num(ney.budget_realized)),
+        ("rel_err", Json::Num(ney_rel)),
+        ("selected_ratio", Json::Num(ney.selected_ratio)),
+        ("sel_var", Json::Num(ney.sel_var)),
+        ("ht_w_max", Json::Num(ney.ledger.ht_w_max)),
+        ("pi_floor", Json::Num(ney.ledger.pi_floor)),
+    ]));
+
     let record = obj(vec![
         ("bench", Json::Str("selection".into())),
         (
@@ -185,6 +305,7 @@ fn main() {
             ]),
         ),
         ("controller", Json::Arr(solve_records.clone())),
+        ("allocation", alloc_record),
         ("steps", Json::Arr(step_records)),
         ("worst_step_rel_err", Json::Num(worst_rel)),
     ]);
@@ -198,8 +319,30 @@ fn main() {
     }
     assert!(
         worst_rel <= 0.02,
-        "acceptance: budget_mode=batch must land within 2% of --train.token_budget \
-         at the shared sim workload (worst rel err {worst_rel:.4})"
+        "acceptance: budget-solved selection must land within 2% of \
+         --train.token_budget at the shared sim workload (worst rel err {worst_rel:.4})"
+    );
+    // Selection v2 acceptance: at equal realized budget the Neyman
+    // allocation must beat the Poisson batch controller on both variance
+    // axes — higher kept-token effective sample size, lower per-row
+    // selection variance.
+    assert!(
+        n_ess > b_ess,
+        "acceptance: neyman ht_ess {n_ess:.1} must exceed poisson-batch {b_ess:.1} \
+         at equal realized budget"
+    );
+    assert!(
+        n_var < b_var,
+        "acceptance: neyman sel_var {n_var:.3} must undercut poisson-batch {b_var:.3} \
+         at equal realized budget"
+    );
+    // HT-weight health through the end-to-end step: the floor bounds 1/π.
+    assert!(
+        ney.ledger.pi_floor > 0.0
+            && ney.ledger.ht_w_max <= (1.0 + 1e-6) / ney.ledger.pi_floor,
+        "acceptance: neyman step ht_w_max {:.1} must respect 1/pi_floor {:.1}",
+        ney.ledger.ht_w_max,
+        1.0 / ney.ledger.pi_floor
     );
 
     b.report();

@@ -184,6 +184,13 @@ pub enum BudgetMode {
     /// inclusion probabilities (and with them the HT weights) so the
     /// estimator stays exactly unbiased.
     Batch,
+    /// Variance-optimal (Neyman) allocation: per-sequence systematic
+    /// sampling rates proportional to an estimated contribution scale
+    /// (|advantage| × RMS behaviour surprisal), clamped into
+    /// `[pi_floor, 1]` and re-solved each step so the expected selected
+    /// count hits `--train.token_budget` — minimizing HT-estimator variance
+    /// at equal budget (`coordinator::selection::neyman`).
+    Neyman,
 }
 
 impl BudgetMode {
@@ -191,7 +198,8 @@ impl BudgetMode {
         Ok(match name {
             "none" => BudgetMode::None,
             "batch" => BudgetMode::Batch,
-            other => bail!("unknown budget mode '{other}' (none|batch)"),
+            "neyman" => BudgetMode::Neyman,
+            other => bail!("unknown budget mode '{other}' (none|batch|neyman)"),
         })
     }
 
@@ -199,12 +207,14 @@ impl BudgetMode {
         match self {
             BudgetMode::None => "none",
             BudgetMode::Batch => "batch",
+            BudgetMode::Neyman => "neyman",
         }
     }
 }
 
 /// Learner batching configuration (`--train.*`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// (`Eq` is off: `pi_floor` is an f64 threshold, compared via `PartialEq`.)
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TrainCfg {
     pub packer: Packer,
     /// Under `budget_mode = none` (default): max allocated learner tokens
@@ -217,6 +227,16 @@ pub struct TrainCfg {
     pub token_budget: usize,
     /// Batch-level adaptive budget controller (`--train.budget_mode`).
     pub budget_mode: BudgetMode,
+    /// Low-probability guard (`--train.pi_floor`, default 1e-3): every
+    /// budget-*solved* inclusion probability is clamped to at least this
+    /// value at selection time, so realized 1/π HT weights are bounded by
+    /// `1/pi_floor` by construction and no single rare token can dominate a
+    /// step. Sampling uses the floored probability, so the estimator stays
+    /// exactly HT-unbiased. 0 disables the guard (legacy tiny clamps).
+    /// Only budget-solved selectors are floored — `budget_mode none` keeps
+    /// the method literal's bit-exact legacy behaviour, and RPC's
+    /// prefix-survival weights are bounded by `t_i − C + 1` without it.
+    pub pi_floor: f64,
     /// Auto-tune the sequence-bucket routing edges from an EMA histogram of
     /// observed `learn_len` (`coordinator::bucket_tuner`). Budget packer
     /// only. The tuner's EMA state is serialized into resumable checkpoints
@@ -247,6 +267,7 @@ impl Default for TrainCfg {
             packer: Packer::Budget,
             token_budget: 0,
             budget_mode: BudgetMode::None,
+            pi_floor: 1e-3,
             auto_buckets: false,
             shards: 1,
             compact: true,
@@ -463,6 +484,7 @@ impl RunConfig {
             cfg.train.budget_mode = BudgetMode::parse(name)?;
         }
         setnum!("train", "token_budget", cfg.train.token_budget, usize);
+        setnum!("train", "pi_floor", cfg.train.pi_floor, f64);
         setnum!("train", "shards", cfg.train.shards, usize);
         if let Some(b) = get("train", "auto_buckets").and_then(Json::as_bool) {
             cfg.train.auto_buckets = b;
@@ -592,6 +614,7 @@ impl RunConfig {
             "train.packer" => self.train.packer = Packer::parse(value)?,
             "train.budget_mode" => self.train.budget_mode = BudgetMode::parse(value)?,
             "train.token_budget" => self.train.token_budget = value.parse()?,
+            "train.pi_floor" => self.train.pi_floor = value.parse()?,
             "train.shards" => self.train.shards = value.parse()?,
             "train.auto_buckets" => {
                 self.train.auto_buckets = match value {
@@ -697,10 +720,11 @@ impl RunConfig {
                 bail!("Poisson k must be >= 1");
             }
         }
-        if self.train.budget_mode == BudgetMode::Batch {
+        if matches!(self.train.budget_mode, BudgetMode::Batch | BudgetMode::Neyman) {
+            let mode = self.train.budget_mode.id();
             if self.train.token_budget == 0 {
                 bail!(
-                    "train.budget_mode batch needs a positive --train.token_budget \
+                    "train.budget_mode {mode} needs a positive --train.token_budget \
                      (the expected selected-token target)"
                 );
             }
@@ -708,11 +732,17 @@ impl RunConfig {
             // accepting them would silently ignore the configured budget.
             if matches!(self.method, Method::Grpo | Method::DetTrunc { .. }) {
                 bail!(
-                    "train.budget_mode batch cannot adapt {}: it has no keep \
+                    "train.budget_mode {mode} cannot adapt {}: it has no keep \
                      parameter to solve (use urs|stratified|poisson|rpc|saliency)",
                     self.method.label()
                 );
             }
+        }
+        if !(0.0..=0.5).contains(&self.train.pi_floor) {
+            bail!(
+                "train.pi_floor must be in [0, 0.5] (0 disables the guard), got {}",
+                self.train.pi_floor
+            );
         }
         if self.rl.ppo_epochs == 0 {
             bail!("rl.ppo_epochs must be >= 1");
@@ -872,6 +902,48 @@ mod tests {
         assert!(cfg.set("train.budget_mode", "bogus").is_err());
         assert_eq!(BudgetMode::Batch.id(), "batch");
         assert_eq!(BudgetMode::None.id(), "none");
+        assert_eq!(BudgetMode::Neyman.id(), "neyman");
+    }
+
+    #[test]
+    fn neyman_mode_and_pi_floor_overrides_and_validation() {
+        let mut cfg = RunConfig::default();
+        // pi_floor guard defaults on
+        assert_eq!(cfg.train.pi_floor, 1e-3);
+        // neyman mode shares batch's cross-field invariants: needs a target
+        assert!(cfg.set("train.budget_mode", "neyman").is_err());
+        assert_eq!(cfg.train.budget_mode, BudgetMode::None);
+        cfg.set("train.token_budget", "512").unwrap();
+        cfg.set("train.budget_mode", "neyman").unwrap();
+        assert_eq!(cfg.train.budget_mode, BudgetMode::Neyman);
+        // ...and rejects the fixed-cost baselines
+        assert!(cfg.set("method", "grpo").is_err());
+        assert!(cfg.set("method", "det_trunc").is_err());
+        // pi_floor range: [0, 0.5], 0 = guard off
+        cfg.set("train.pi_floor", "0.01").unwrap();
+        assert_eq!(cfg.train.pi_floor, 0.01);
+        cfg.set("train.pi_floor", "0").unwrap();
+        assert_eq!(cfg.train.pi_floor, 0.0);
+        assert!(cfg.set("train.pi_floor", "0.9").is_err());
+        assert!(cfg.set("train.pi_floor", "-0.1").is_err());
+        assert_eq!(cfg.train.pi_floor, 0.0);
+    }
+
+    #[test]
+    fn neyman_and_pi_floor_from_file() {
+        let dir = std::env::temp_dir().join("nat_rl_cfg_neyman_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("n.toml");
+        std::fs::write(
+            &path,
+            "[train]\nbudget_mode = \"neyman\"\ntoken_budget = 640\npi_floor = 0.005\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_file(&path).unwrap();
+        assert_eq!(cfg.train.budget_mode, BudgetMode::Neyman);
+        assert_eq!(cfg.train.token_budget, 640);
+        assert_eq!(cfg.train.pi_floor, 0.005);
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]
@@ -965,6 +1037,7 @@ mod tests {
                 packer: Packer::Budget,
                 token_budget: 0,
                 budget_mode: BudgetMode::None,
+                pi_floor: 1e-3,
                 auto_buckets: false,
                 shards: 1,
                 compact: true

@@ -490,12 +490,13 @@ pub fn compact_stats(
 }
 
 /// The per-micro-batch token cap the budget packer should run with. Under
-/// `--train.budget_mode batch` the `token_budget` flag is repurposed as the
-/// selection controller's expected-selected-token target, NOT a packing
-/// cap — the packer then falls back to its auto budget (0); under
+/// `--train.budget_mode batch|neyman` the `token_budget` flag is repurposed
+/// as the selection controller's expected-selected-token target, NOT a
+/// packing cap — the packer then falls back to its auto budget (0); under
 /// `budget_mode none` the flag means what it always did.
 pub fn packer_token_budget(train: &crate::config::TrainCfg) -> usize {
-    if train.budget_mode == crate::config::BudgetMode::Batch {
+    use crate::config::BudgetMode;
+    if matches!(train.budget_mode, BudgetMode::Batch | BudgetMode::Neyman) {
         0
     } else {
         train.token_budget
@@ -1045,6 +1046,8 @@ mod tests {
         train.token_budget = 512;
         assert_eq!(packer_token_budget(&train), 512);
         train.budget_mode = BudgetMode::Batch;
+        assert_eq!(packer_token_budget(&train), 0);
+        train.budget_mode = BudgetMode::Neyman;
         assert_eq!(packer_token_budget(&train), 0);
     }
 

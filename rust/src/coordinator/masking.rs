@@ -69,8 +69,20 @@ pub fn saliency_probs(old_lp: &[f32], floor: f64) -> Vec<f32> {
 
 /// Expected selected-token ratio (paper Fig. 3 prediction): RPC with
 /// minimum cutoff keeps E[L]/T = 1/2 + C/(2T).
+///
+/// Saliency has no closed form without the surprisal profile: this ctx-less
+/// shim returns its `floor` parameter, which is a **lower bound** on the
+/// true ratio, not the inclusion probability. Callers holding the
+/// behaviour logprobs should use [`expected_ratio_ctx`] — the form the
+/// `budget_realized` accounting agrees with.
 pub fn expected_ratio(method: &Method, t_i: usize) -> f64 {
     selection::expected_ratio(method, t_i)
+}
+
+/// Honest expected ratio: exact for every scheme when `ctx` carries the
+/// behaviour logprobs (matches `Selector::expected_kept / t_i`).
+pub fn expected_ratio_ctx(method: &Method, t_i: usize, ctx: Option<&[f32]>) -> f64 {
+    selection::expected_ratio_ctx(method, t_i, ctx)
 }
 
 #[cfg(test)]
@@ -226,6 +238,30 @@ mod tests {
         // paper Fig. 3: C=100, T~3000 -> ratio slightly above 0.5
         let r = expected_ratio(&Method::Rpc { min_cut: 10 }, 100);
         assert!((r - 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saliency_expected_ratio_is_a_lower_bound_and_ctx_form_is_honest() {
+        // Regression for the `budget_realized` accounting: the ctx-less
+        // Saliency arm returns the floor (a lower bound, NOT the inclusion
+        // probability), while the ctx form must agree exactly with what the
+        // selection plan's expected_kept sums — the quantity the budget
+        // controller realizes.
+        use crate::coordinator::selection::{selector_for, Selector};
+        let old_lp: Vec<f32> = (0..50).map(|t| -0.1 - 0.12 * (t % 11) as f32).collect();
+        let method = Method::Saliency { floor: 0.25 };
+        let lower = expected_ratio(&method, 50);
+        assert_eq!(lower, 0.25);
+        let honest = expected_ratio_ctx(&method, 50, Some(&old_lp));
+        assert!(honest > lower, "surprisal profile must lift the ratio: {honest}");
+        let sel = selector_for(&method);
+        let from_probs: f64 =
+            sel.probs(50, Some(&old_lp)).iter().map(|&p| p as f64).sum::<f64>() / 50.0;
+        assert!((honest - from_probs).abs() < 1e-12, "{honest} vs {from_probs}");
+        assert!((honest - sel.expected_kept(50, Some(&old_lp)) / 50.0).abs() < 1e-12);
+        // ctx-less falls back to the closed forms for every other scheme
+        assert_eq!(expected_ratio_ctx(&Method::Urs { p: 0.5 }, 100, None), 0.5);
+        assert_eq!(expected_ratio_ctx(&Method::Grpo, 0, None), 0.0);
     }
 
     #[test]

@@ -38,10 +38,21 @@
 //! clamps to the nearest endpoint and reports the achieved expectation in
 //! `BudgetOutcome::expected` — which also feeds the `budget_realized`
 //! metric series, so a clamped run is visible in the step stats.
+//!
+//! π floor: every rate-style solve clamps its solved probabilities through
+//! the shared [`super::solve_floor`] (`--train.pi_floor`), so an
+//! unattainably low target floors the probabilities instead of letting the
+//! 1/π HT weights run away — `w_max ≤ 1/pi_floor` by construction, still
+//! exactly unbiased because sampling uses the floored probabilities. RPC is
+//! the exception by design: its prefix-survival law keeps every weight
+//! ≤ t_i − C + 1 without any probability clamp, and flooring survival
+//! probabilities independently would change the sampling law.
+
+use anyhow::{bail, Result};
 
 use crate::config::Method;
 
-use super::{selector_for, Poisson, Rpc, Saliency, Selector, Stratified, Urs};
+use super::{selector_for, solve_floor, Poisson, Rpc, Saliency, Selector, Stratified, Urs};
 
 /// The solved batch plan: an adjusted selector shared by every sequence in
 /// the step, plus the solve's bookkeeping.
@@ -71,34 +82,39 @@ impl BudgetOutcome {
 
 /// Solve the batch's keep parameter. `rows` carries `(resp_len, behaviour
 /// logprobs)` per sequence — zero-length rows contribute nothing and are
-/// ignored by every solve.
+/// ignored by every solve. `pi_floor` is the shared solve-clamp floor
+/// (`--train.pi_floor`; 0 disables the guard and falls back to the legacy
+/// per-solve tiny clamps). Errors are configuration-shaped — e.g. a
+/// saliency solve over rows missing behaviour logprobs — and surface
+/// before any step math runs.
 pub fn solve_batch(
     method: &Method,
     rows: &[(usize, Option<&[f32]>)],
     budget: usize,
-) -> BudgetOutcome {
+    pi_floor: f64,
+) -> Result<BudgetOutcome> {
     let target = budget as f64;
     let total: f64 = rows.iter().map(|&(t, _)| t as f64).sum();
-    match *method {
+    Ok(match *method {
         Method::Grpo | Method::DetTrunc { .. } => {
             let selector = selector_for(method);
             let expected = expected_sum(&*selector, rows);
             BudgetOutcome { selector, target, expected, adapted: false }
         }
         Method::Urs { .. } => {
-            let p = rate_for(target, total);
+            let p = rate_for(target, total, pi_floor);
             let selector: Box<dyn Selector> = Box::new(Urs { p });
             let expected = expected_sum(&*selector, rows);
             BudgetOutcome { selector, target, expected, adapted: true }
         }
         Method::Stratified { .. } => {
-            let p = rate_for(target, total);
+            let p = rate_for(target, total, pi_floor);
             let selector: Box<dyn Selector> = Box::new(Stratified { p });
             let expected = expected_sum(&*selector, rows);
             BudgetOutcome { selector, target, expected, adapted: true }
         }
         Method::Poisson { .. } => {
-            let k = solve_poisson_k(rows, target);
+            let k = solve_poisson_k(rows, target, pi_floor);
             let selector: Box<dyn Selector> = Box::new(Poisson { k });
             let expected = expected_sum(&*selector, rows);
             BudgetOutcome { selector, target, expected, adapted: true }
@@ -110,12 +126,13 @@ pub fn solve_batch(
             BudgetOutcome { selector, target, expected, adapted: true }
         }
         Method::Saliency { floor } => {
-            let scale = solve_saliency_scale(rows, floor, target);
-            let selector: Box<dyn Selector> = Box::new(Saliency { floor, scale });
+            let scale = solve_saliency_scale(rows, floor, target, pi_floor)?;
+            let selector: Box<dyn Selector> =
+                Box::new(Saliency { floor, scale, pi_floor });
             let expected = expected_sum(&*selector, rows);
             BudgetOutcome { selector, target, expected, adapted: true }
         }
-    }
+    })
 }
 
 /// Σ_i E[kept_i] for a selector over the batch (zero-length rows are 0).
@@ -127,17 +144,19 @@ pub fn expected_sum(sel: &dyn Selector, rows: &[(usize, Option<&[f32]>)]) -> f64
 }
 
 /// Shared URS/Stratified solve: expected kept = p · Σt ⇒ p* = B / Σt,
-/// clamped into (0, 1].
-fn rate_for(target: f64, total: f64) -> f64 {
+/// clamped into [π floor, 1].
+fn rate_for(target: f64, total: f64, pi_floor: f64) -> f64 {
     if total <= 0.0 {
         return 1.0; // empty batch: nothing to select, any rate is vacuous
     }
-    (target / total).clamp(1e-6, 1.0)
+    (target / total).clamp(solve_floor(pi_floor, 1e-6), 1.0)
 }
 
 /// Waterfill: the k with Σ min(t_i, k) = target (piecewise linear, knots at
-/// the sorted lengths), clamped to [tiny, max t].
-fn solve_poisson_k(rows: &[(usize, Option<&[f32]>)], target: f64) -> f64 {
+/// the sorted lengths), clamped to [π floor · max t, max t] — the longest
+/// sequence has the smallest rate k/t, so flooring k at `pi_floor · max_t`
+/// keeps every per-token rate ≥ `pi_floor`.
+fn solve_poisson_k(rows: &[(usize, Option<&[f32]>)], target: f64, pi_floor: f64) -> f64 {
     let mut lens: Vec<usize> = rows.iter().map(|&(t, _)| t).filter(|&t| t > 0).collect();
     if lens.is_empty() {
         return 1.0;
@@ -146,6 +165,7 @@ fn solve_poisson_k(rows: &[(usize, Option<&[f32]>)], target: f64) -> f64 {
     let n = lens.len();
     let max_t = *lens.last().unwrap() as f64;
     let total: f64 = lens.iter().map(|&t| t as f64).sum();
+    let k_min = solve_floor(pi_floor * max_t, 1e-9);
     if target >= total {
         return max_t; // saturated: every token of every sequence
     }
@@ -158,10 +178,10 @@ fn solve_poisson_k(rows: &[(usize, Option<&[f32]>)], target: f64) -> f64 {
         // sum at k = hi with this segment's slope:
         let at_hi = prefix + hi * remaining;
         if target <= at_hi {
-            // k lands in (lo, hi] by construction; guard the positive floor
-            // only (probabilities must stay > 0).
+            // k lands in (lo, hi] by construction; clamp through the shared
+            // floor so min rate k/max_t stays ≥ pi_floor (legacy: > 0).
             let k = (target - prefix) / remaining;
-            return k.max(1e-9);
+            return k.max(k_min);
         }
         prefix += hi;
     }
@@ -201,28 +221,43 @@ fn solve_rpc_cut(rows: &[(usize, Option<&[f32]>)], target: f64) -> usize {
     }
 }
 
-/// Bisection on the probability scale s: f(s) = Σ min(1, s·p_t) is
-/// continuous and monotone, so 64 halvings reach machine precision.
-fn solve_saliency_scale(rows: &[(usize, Option<&[f32]>)], floor: f64, target: f64) -> f64 {
-    let base: Vec<Vec<f32>> = rows
-        .iter()
-        .filter(|&&(t, _)| t > 0)
-        .map(|&(t, ctx)| {
-            let lp = ctx.expect("budget controller: saliency needs behaviour logprobs");
-            debug_assert_eq!(lp.len(), t);
-            super::saliency::probs(lp, floor)
-        })
-        .collect();
+/// Bisection on the probability scale s: f(s) = Σ clamp(s·p_t, π floor, 1)
+/// is continuous and monotone, so 64 halvings reach machine precision. A
+/// row missing its behaviour logprobs is a configuration error (a rollout
+/// path that never recorded them), surfaced here as a hard `Err` before
+/// any step math runs rather than a hot-path panic.
+fn solve_saliency_scale(
+    rows: &[(usize, Option<&[f32]>)],
+    floor: f64,
+    target: f64,
+    pi_floor: f64,
+) -> Result<f64> {
+    let mut base: Vec<Vec<f32>> = Vec::with_capacity(rows.len());
+    for &(t, ctx) in rows.iter().filter(|&&(t, _)| t > 0) {
+        let Some(lp) = ctx else {
+            bail!(
+                "budget controller: saliency selection needs behaviour logprobs for \
+                 every sequence, but a length-{t} row has none — the rollout path \
+                 feeding budget_mode batch/neyman must record old_lp"
+            );
+        };
+        debug_assert_eq!(lp.len(), t);
+        base.push(super::saliency::probs(lp, floor));
+    }
+    // The inclusion clamp (mirrored by `Saliency::inclusion`) keeps every
+    // probability ≥ pf, so targets below pf·N floor out instead of driving
+    // the scale (and the 1/π weights) through the tiny legacy clamp.
+    let pf = solve_floor(pi_floor, 0.0);
     let f = |s: f64| -> f64 {
         base.iter()
             .flat_map(|p| p.iter())
-            .map(|&p| (s * p as f64).min(1.0))
+            .map(|&p| (s * p as f64).min(1.0).max(pf))
             .sum()
     };
     // s_hi = 1/floor saturates every probability at 1 (p_t >= floor).
     let s_hi = 1.0 / floor.max(1e-6);
     if f(s_hi) <= target {
-        return s_hi;
+        return Ok(s_hi);
     }
     let (mut lo, mut hi) = (0.0f64, s_hi);
     for _ in 0..64 {
@@ -234,8 +269,9 @@ fn solve_saliency_scale(rows: &[(usize, Option<&[f32]>)], floor: f64, target: f6
         }
     }
     // hi's expectation >= target by loop invariant; the interval is ~1 ulp
-    // wide. Never return exactly 0 (probabilities must stay positive).
-    hi.max(1e-12)
+    // wide. Never return exactly 0 (probabilities must stay positive even
+    // with the guard off).
+    Ok(hi.max(1e-12))
 }
 
 #[cfg(test)]
@@ -247,11 +283,17 @@ mod tests {
         lens.iter().map(|&t| (t, None)).collect()
     }
 
+    /// Legacy-floor solve (guard off) — the pre-π-floor behaviour every
+    /// historical assertion in this module was written against.
+    fn solve(method: &Method, rows: &[(usize, Option<&[f32]>)], budget: usize) -> BudgetOutcome {
+        solve_batch(method, rows, budget, 0.0).unwrap()
+    }
+
     #[test]
     fn urs_and_stratified_hit_the_target_exactly() {
         let rows = plain_rows(&[10, 20, 30, 40]);
         for method in [Method::Urs { p: 0.9 }, Method::Stratified { p: 0.9 }] {
-            let out = solve_batch(&method, &rows, 50);
+            let out = solve(&method, &rows, 50);
             assert!(out.adapted);
             assert_eq!(out.target, 50.0);
             // f32 probability rounding keeps this to ~1e-5 relative
@@ -264,11 +306,11 @@ mod tests {
         // lens 10/20/30/40, target 60 ⇒ k=15: 10 + 15·3 = 55 ≠ 60... solve:
         // k ≤ 10: 4k; k=10→40. 10..20: 10+3k; k=50/3≈16.67 → sum 60. ✔
         let rows = plain_rows(&[10, 20, 30, 40]);
-        let out = solve_batch(&Method::Poisson { k: 8 }, &rows, 60);
+        let out = solve(&Method::Poisson { k: 8 }, &rows, 60);
         assert!(out.adapted);
         assert!((out.expected - 60.0).abs() < 0.01, "{}", out.expected);
         // saturated target clamps to the full token count
-        let out = solve_batch(&Method::Poisson { k: 8 }, &rows, 1000);
+        let out = solve(&Method::Poisson { k: 8 }, &rows, 1000);
         assert!((out.expected - 100.0).abs() < 0.01, "{}", out.expected);
     }
 
@@ -285,7 +327,7 @@ mod tests {
             if target < floor_e {
                 continue;
             }
-            let out = solve_batch(&Method::Rpc { min_cut: 8 }, &rows, target as usize);
+            let out = solve(&Method::Rpc { min_cut: 8 }, &rows, target as usize);
             assert!(out.adapted);
             // worst case: half an integer-cut step = n/4 tokens
             assert!(
@@ -295,10 +337,10 @@ mod tests {
             );
         }
         // unattainably low target clamps to the C=1 floor
-        let out = solve_batch(&Method::Rpc { min_cut: 8 }, &rows, 1);
+        let out = solve(&Method::Rpc { min_cut: 8 }, &rows, 1);
         assert!((out.expected - floor_e).abs() < 1e-6);
         // unattainably high target clamps to full length
-        let out = solve_batch(&Method::Rpc { min_cut: 8 }, &rows, total as usize * 2);
+        let out = solve(&Method::Rpc { min_cut: 8 }, &rows, total as usize * 2);
         assert!((out.expected - total).abs() < 1e-6);
     }
 
@@ -314,7 +356,7 @@ mod tests {
             lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
         let total: f64 = lens.iter().map(|&t| t as f64).sum();
         let target = (0.4 * total) as usize;
-        let out = solve_batch(&Method::Saliency { floor: 0.25 }, &rows, target);
+        let out = solve(&Method::Saliency { floor: 0.25 }, &rows, target);
         assert!(out.adapted);
         assert!(
             (out.expected - target as f64).abs() < 0.01 * target as f64,
@@ -322,17 +364,17 @@ mod tests {
             out.expected
         );
         // saturated: every probability clamps at 1
-        let out = solve_batch(&Method::Saliency { floor: 0.25 }, &rows, total as usize * 2);
+        let out = solve(&Method::Saliency { floor: 0.25 }, &rows, total as usize * 2);
         assert!((out.expected - total).abs() < 1e-6);
     }
 
     #[test]
     fn baselines_are_not_adapted() {
         let rows = plain_rows(&[10, 20, 30]);
-        let out = solve_batch(&Method::Grpo, &rows, 10);
+        let out = solve(&Method::Grpo, &rows, 10);
         assert!(!out.adapted);
         assert_eq!(out.expected, 60.0);
-        let out = solve_batch(&Method::DetTrunc { frac: 0.5 }, &rows, 10);
+        let out = solve(&Method::DetTrunc { frac: 0.5 }, &rows, 10);
         assert!(!out.adapted);
         assert_eq!(out.expected, 30.0);
     }
@@ -340,24 +382,85 @@ mod tests {
     #[test]
     fn trace_args_report_the_solve() {
         let rows = plain_rows(&[10, 20, 30, 40]);
-        let out = solve_batch(&Method::Urs { p: 0.9 }, &rows, 50);
+        let out = solve(&Method::Urs { p: 0.9 }, &rows, 50);
         let args = out.trace_args();
         assert_eq!(args[0], ("budget_target", 50.0));
         assert_eq!(args[1].0, "budget_expected");
         assert!((args[1].1 - 50.0).abs() < 0.01);
         assert_eq!(args[2], ("adapted", 1.0));
-        let out = solve_batch(&Method::Grpo, &rows, 50);
+        let out = solve(&Method::Grpo, &rows, 50);
         assert_eq!(out.trace_args()[2], ("adapted", 0.0));
     }
 
     #[test]
+    fn pathologically_low_targets_mint_runaway_weights_only_without_the_guard() {
+        // The historical failure mode: a budget far below the reachable
+        // range drives the solved probabilities into the legacy tiny
+        // clamps (1e-6 / 1e-9 / 1e-12) and the 1/π weights explode.
+        use crate::coordinator::selection::HtMoments;
+        let lens: Vec<usize> = vec![64, 128, 256, 512, 1024];
+        let lps: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|&t| (0..t).map(|i| -0.05 - 0.01 * (i % 13) as f32).collect())
+            .collect();
+        let rows: Vec<(usize, Option<&[f32]>)> =
+            lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
+        let methods = [
+            Method::Urs { p: 0.5 },
+            Method::Stratified { p: 0.5 },
+            Method::Poisson { k: 8 },
+            Method::Saliency { floor: 0.25 },
+        ];
+        let mut rng = Rng::new(0x9F10);
+        for method in &methods {
+            // guard on: every solved probability ≥ pi_floor, so every
+            // realized weight ≤ 1/pi_floor — even at budget 1
+            let pf = 1e-3;
+            let out = solve_batch(method, &rows, 1, pf).unwrap();
+            let mut ht = HtMoments::default();
+            for &(t, ctx) in &rows {
+                for &p in &out.selector.probs(t, ctx) {
+                    assert!(p as f64 >= pf - 1e-9, "{method:?}: solved π {p} below floor");
+                }
+                ht.observe(&out.selector.sample(t, ctx, &mut rng));
+            }
+            assert!(
+                ht.w_max <= 1.0 / pf * (1.0 + 1e-6),
+                "{method:?}: w_max {} above 1/pi_floor",
+                ht.w_max
+            );
+            // guard off: probabilities stay positive (legacy clamp), but
+            // the weights are allowed to run away — the documented bug
+            // this PR caps
+            let out = solve_batch(method, &rows, 1, 0.0).unwrap();
+            for &(t, ctx) in &rows {
+                assert!(out.selector.probs(t, ctx).iter().all(|&p| p > 0.0), "{method:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn saliency_rows_without_logprobs_error_instead_of_panicking() {
+        let lp: Vec<f32> = vec![-0.5; 10];
+        let rows: Vec<(usize, Option<&[f32]>)> =
+            vec![(10, Some(lp.as_slice())), (20, None)];
+        let err = solve_batch(&Method::Saliency { floor: 0.25 }, &rows, 10, 1e-3)
+            .err()
+            .expect("missing logprobs must be a hard error");
+        assert!(err.to_string().contains("behaviour logprobs"), "{err}");
+        // zero-length rows without logprobs are fine (ignored by the solve)
+        let rows: Vec<(usize, Option<&[f32]>)> = vec![(0, None), (10, Some(lp.as_slice()))];
+        assert!(solve_batch(&Method::Saliency { floor: 0.25 }, &rows, 5, 1e-3).is_ok());
+    }
+
+    #[test]
     fn empty_and_zero_length_rows_are_ignored() {
-        let out = solve_batch(&Method::Urs { p: 0.5 }, &[], 10);
+        let out = solve(&Method::Urs { p: 0.5 }, &[], 10);
         assert_eq!(out.expected, 0.0);
         let rows = [(0usize, None), (10usize, None)];
-        let out = solve_batch(&Method::Poisson { k: 4 }, &rows, 5);
+        let out = solve(&Method::Poisson { k: 4 }, &rows, 5);
         assert!((out.expected - 5.0).abs() < 0.01);
-        let out = solve_batch(&Method::Rpc { min_cut: 8 }, &rows, 8);
+        let out = solve(&Method::Rpc { min_cut: 8 }, &rows, 8);
         assert!(out.expected >= 5.5 - 1e-9); // C=1 floor on the single row
     }
 }

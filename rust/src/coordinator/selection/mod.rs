@@ -28,6 +28,11 @@
 //!                    sequence regardless of length.
 //! * [`budget`]     — the batch-level adaptive token-budget controller
 //!                    (`--train.budget_mode batch`).
+//! * [`neyman`]     — variance-optimal per-sequence budget allocation
+//!                    (`--train.budget_mode neyman`, selection v2): rates
+//!                    `∝ |advantage| × surprisal`, floored at
+//!                    `--train.pi_floor`, drawn by within-sequence
+//!                    systematic sampling.
 //!
 //! The legacy `coordinator::masking` API (`sample_ctx` et al.) is a thin
 //! shim over this module; its RNG streams are bit-identical to the
@@ -37,6 +42,7 @@
 pub mod budget;
 pub mod det_trunc;
 pub mod full;
+pub mod neyman;
 pub mod poisson;
 pub mod rpc;
 pub mod saliency;
@@ -46,6 +52,7 @@ pub mod urs;
 pub use budget::{solve_batch, BudgetOutcome};
 pub use det_trunc::DetTrunc;
 pub use full::Full;
+pub use neyman::{solve_neyman, NeymanAllocation};
 pub use poisson::Poisson;
 pub use rpc::Rpc;
 pub use saliency::Saliency;
@@ -65,6 +72,22 @@ use crate::util::rng::Rng;
 pub fn pi_w32(p: f64) -> (f32, f32) {
     // natlint: allow(lossy-cast, reason = "the single blessed quantization point: f64->f32 rounding happens once here, HT math upstream stays in f64")
     (p as f32, (1.0 / p) as f32)
+}
+
+/// The shared solve-clamp floor (`--train.pi_floor`): every budget-solved
+/// inclusion probability is clamped to at least this value *before*
+/// quantization through [`pi_w32`], and sampling uses the floored
+/// probability — so the estimator stays exactly HT-unbiased while every
+/// realized weight is `≤ 1/pi_floor` by construction. With the guard off
+/// (`pi_floor == 0`) the historical per-solve tiny clamp applies instead:
+/// enough to keep 1/π finite, not enough to stop an unattainably low
+/// `--train.token_budget` from minting ~1e6+ f32 HT weights.
+pub fn solve_floor(pi_floor: f64, legacy_tiny: f64) -> f64 {
+    if pi_floor > 0.0 {
+        pi_floor
+    } else {
+        legacy_tiny
+    }
 }
 
 /// One sampled selection for one response: the per-token inclusion
@@ -173,6 +196,12 @@ pub fn selector_for(method: &Method) -> Box<dyn Selector> {
 /// Expected selected-token ratio (paper Fig. 3 prediction), in the exact
 /// closed forms the legacy `masking::expected_ratio` promised (RPC with
 /// minimum cutoff keeps E[L]/T = 1/2 + C/(2T)).
+///
+/// **Saliency caveat:** its true expectation depends on the realised
+/// surprisal profile, which this ctx-less form does not have — the `floor`
+/// returned here is a *lower bound*, not the inclusion probability. Callers
+/// holding the behaviour logprobs should use [`expected_ratio_ctx`], which
+/// is exact for every scheme.
 pub fn expected_ratio(method: &Method, t_i: usize) -> f64 {
     match *method {
         Method::Grpo => 1.0,
@@ -183,9 +212,25 @@ pub fn expected_ratio(method: &Method, t_i: usize) -> f64 {
             let t = t_i as f64;
             (c + t) / (2.0 * t)
         }
-        // depends on the realised surprisal profile; floor is a lower bound
+        // lower bound only — see the doc caveat / expected_ratio_ctx
         Method::Saliency { floor } => floor,
         Method::Poisson { k } => (k as f64 / t_i as f64).min(1.0),
+    }
+}
+
+/// Honest expected selected-token ratio: identical to [`expected_ratio`]
+/// for the closed-form schemes, but uses the realised surprisal profile for
+/// Saliency when `ctx` carries the behaviour logprobs — matching what the
+/// `budget_realized` accounting actually sums (`Selector::expected_kept`).
+pub fn expected_ratio_ctx(method: &Method, t_i: usize, ctx: Option<&[f32]>) -> f64 {
+    if t_i == 0 {
+        return 0.0;
+    }
+    match (method, ctx) {
+        (&Method::Saliency { floor }, Some(lp)) => {
+            Saliency::new(floor).expected_kept(t_i, Some(lp)) / t_i as f64
+        }
+        _ => expected_ratio(method, t_i),
     }
 }
 

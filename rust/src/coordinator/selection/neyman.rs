@@ -1,0 +1,359 @@
+//! Variance-optimal (Neyman) budget allocation across sequences
+//! (`--train.budget_mode neyman`) — ROADMAP's "selection v2".
+//!
+//! The batch controller ([`super::budget`]) hits an *expected token count*
+//! but says nothing about where the budget buys signal: every sequence gets
+//! the same solved keep parameter. This module spends the budget where it
+//! reduces estimator variance. Treat each sequence as a stratum sampled at
+//! its own rate `p_i` with systematic (stratified-grid) sampling inside the
+//! sequence; the HT gradient estimator's variance then decomposes as
+//!
+//! ```text
+//!   Var ≈ Σ_i t_i · σ_i² · (1/p_i − 1)
+//! ```
+//!
+//! where `σ_i` is the per-token contribution scale of sequence `i`.
+//! Minimizing over the budget constraint `Σ_i t_i·p_i = B` (Lagrange /
+//! Cauchy–Schwarz) gives the classic Neyman solution `p_i ∝ σ_i`, clamped
+//! into `[π_floor, 1]`, with the multiplier `λ` re-solved by bisection so
+//! the expected kept count still hits the budget wherever it is attainable.
+//!
+//! `σ_i` is estimated from data the rollout already produced: |advantage_i|
+//! (every token's policy-gradient term carries the sequence advantage as a
+//! factor) times the RMS behaviour surprisal `−log π_old` of the response —
+//! the token-significance signal of PAPERS.md "Not All Tokens Matter" at
+//! sequence granularity. Zero-advantage sequences carry no gradient; they
+//! sit at the floor rate so every token keeps a positive inclusion
+//! probability and the estimator stays unbiased for *any* integrand, not
+//! just the gradient that happens to vanish there.
+//!
+//! Unbiasedness is inherited from the systematic draw: marginal inclusion
+//! is exactly `p_i` and weights divide by the probability actually sampled
+//! with, so E[Σ w_t x_t] = Σ x_t for any solved allocation (MC-verified
+//! through the full pack → shard → reduce path in `tests/selection.rs`).
+//! With the guard on, every solved rate is ≥ `π_floor`, so realized HT
+//! weights are bounded by `1/π_floor` by construction.
+
+use super::stratified::systematic_plan;
+use super::{solve_floor, SelectionPlan};
+use crate::util::rng::Rng;
+
+/// The historical tiny clamp used when the π-floor guard is disabled
+/// (`--train.pi_floor 0`): enough to keep 1/π finite, not enough to keep it
+/// sane — the failure mode the guard exists to prevent.
+const LEGACY_TINY: f64 = 1e-6;
+
+/// Per-sequence contribution scale `σ_i = |adv_i| · rms(−log π_old)`.
+/// Without a behaviour-logprob profile the surprisal factor defaults to 1,
+/// degrading gracefully to an |advantage|-proportional allocation.
+pub fn sigma(abs_adv: f64, old_lp: Option<&[f32]>) -> f64 {
+    let rms = match old_lp {
+        Some(lp) if !lp.is_empty() => {
+            let ss: f64 = lp
+                .iter()
+                .map(|&l| {
+                    let u = -(l as f64);
+                    u * u
+                })
+                .sum();
+            (ss / lp.len() as f64).sqrt()
+        }
+        _ => 1.0,
+    };
+    abs_adv.abs() * rms
+}
+
+/// The solved per-sequence allocation: one inclusion rate per input row,
+/// aligned with the `rows` slice passed to [`solve_neyman`].
+pub struct NeymanAllocation {
+    /// Solved inclusion rate per row (f64 — quantized once through
+    /// `pi_w32` at draw time). Zero-length rows carry the floor rate but
+    /// never sample.
+    rates: Vec<f64>,
+    lens: Vec<usize>,
+    /// The requested expected-selected-token target.
+    pub target: f64,
+    /// Achieved expectation `Σ_i t_i·p_i` (== target when attainable).
+    pub expected: f64,
+    /// The effective floor every rate was clamped to (`--train.pi_floor`,
+    /// or the legacy tiny clamp when the guard is off).
+    pub floor: f64,
+    /// The solved Neyman multiplier (`p_i = clamp(λ·σ_i, floor, 1)`).
+    pub lambda: f64,
+}
+
+impl NeymanAllocation {
+    /// The solved rate for row `i` (0.0 for an out-of-range index — such a
+    /// row was never part of the solve and must not be sampled).
+    pub fn rate(&self, i: usize) -> f64 {
+        self.rates.get(i).copied().unwrap_or(0.0)
+    }
+
+    /// Expected kept tokens for row `i`.
+    pub fn expected_kept(&self, i: usize) -> f64 {
+        self.rate(i) * self.lens.get(i).copied().unwrap_or(0) as f64
+    }
+
+    /// Achieved batch expectation (the `budget_realized` input).
+    pub fn expected_sum(&self) -> f64 {
+        self.expected
+    }
+
+    /// Draw row `i`'s selection: one systematic-grid pass at the solved
+    /// rate — exactly one uniform RNG draw per non-empty row (bit-identical
+    /// to [`super::Stratified`] at an equal rate), zero draws for an empty
+    /// row, so mask streams stay aligned across replay/resume/sharding.
+    pub fn sample_row(&self, i: usize, t_i: usize, rng: &mut Rng) -> SelectionPlan {
+        debug_assert_eq!(Some(&t_i), self.lens.get(i), "allocation/row misalignment");
+        if t_i == 0 {
+            SelectionPlan::empty()
+        } else {
+            systematic_plan(self.rate(i), t_i, rng)
+        }
+    }
+
+    /// Solve bookkeeping as trace args, mirroring
+    /// [`super::BudgetOutcome::trace_args`].
+    pub fn trace_args(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("budget_target", self.target),
+            ("budget_expected", self.expected),
+            ("adapted", 1.0),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        format!("neyman(lambda={}, floor={})", self.lambda, self.floor)
+    }
+}
+
+/// Solve the variance-optimal allocation: rates `p_i = clamp(λ·σ_i, pf, 1)`
+/// with `λ` bisected so `Σ t_i·p_i` hits `budget`. `rows` carries
+/// `(resp_len, behaviour logprobs)` and `abs_adv` the per-sequence
+/// |advantage|, both in rollout order. Targets below `pf·Σt` or above the
+/// reachable maximum clamp to the nearest endpoint (reported in
+/// `expected`, like the batch controller's attainability contract).
+pub fn solve_neyman(
+    rows: &[(usize, Option<&[f32]>)],
+    abs_adv: &[f64],
+    budget: usize,
+    pi_floor: f64,
+) -> NeymanAllocation {
+    let pf = solve_floor(pi_floor, LEGACY_TINY);
+    let target = budget as f64;
+    let lens: Vec<usize> = rows.iter().map(|&(t, _)| t).collect();
+    let sig: Vec<f64> = rows
+        .iter()
+        .zip(abs_adv.iter().chain(std::iter::repeat(&0.0)))
+        .map(|(&(_, ctx), &a)| sigma(a, ctx))
+        .collect();
+    // Expected kept count at multiplier λ — monotone non-decreasing, so a
+    // doubling search brackets the root and bisection pins it.
+    let g = |lambda: f64| -> f64 {
+        lens.iter()
+            .zip(&sig)
+            .filter(|&(&t, _)| t > 0)
+            .map(|(&t, &s)| t as f64 * (lambda * s).clamp(pf, 1.0))
+            .sum()
+    };
+    // Reachable band: [g(0), g(∞)] — zero-σ rows never leave the floor.
+    let reach_max: f64 = lens
+        .iter()
+        .zip(&sig)
+        .filter(|&(&t, _)| t > 0)
+        .map(|(&t, &s)| t as f64 * if s > 0.0 { 1.0 } else { pf })
+        .sum();
+    let lambda = if target <= g(0.0) {
+        0.0
+    } else if target >= reach_max {
+        f64::MAX
+    } else {
+        let mut hi = 1.0f64;
+        while g(hi) < target && hi < 1e30 {
+            hi *= 2.0;
+        }
+        let mut lo = 0.0f64;
+        for _ in 0..128 {
+            let mid = 0.5 * (lo + hi);
+            if g(mid) < target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    };
+    let rates: Vec<f64> =
+        sig.iter().map(|&s| (lambda * s).clamp(pf, 1.0)).collect();
+    let expected: f64 = lens
+        .iter()
+        .zip(&rates)
+        .filter(|&(&t, _)| t > 0)
+        .map(|(&t, &p)| t as f64 * p)
+        .sum();
+    NeymanAllocation { rates, lens, target, expected, floor: pf, lambda }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows_of(lens: &[usize]) -> Vec<(usize, Option<&'static [f32]>)> {
+        lens.iter().map(|&t| (t, None)).collect()
+    }
+
+    #[test]
+    fn rates_lie_in_floor_one_and_hit_attainable_budgets() {
+        let lens = [10usize, 20, 30, 40];
+        let advs = [0.2f64, 1.0, 0.5, 1.5];
+        let rows = rows_of(&lens);
+        for budget in [20usize, 40, 60, 90] {
+            let alloc = solve_neyman(&rows, &advs, budget, 1e-3);
+            for i in 0..lens.len() {
+                let p = alloc.rate(i);
+                assert!((1e-3..=1.0).contains(&p), "budget {budget} row {i}: {p}");
+            }
+            assert!(
+                (alloc.expected - budget as f64).abs() < 1e-6 * budget as f64,
+                "budget {budget}: expected {}",
+                alloc.expected
+            );
+        }
+    }
+
+    #[test]
+    fn higher_sigma_rows_get_higher_rates() {
+        let lens = [25usize; 4];
+        let advs = [0.1f64, 0.4, 0.9, 1.6];
+        let alloc = solve_neyman(&rows_of(&lens), &advs, 40, 1e-3);
+        for i in 1..4 {
+            assert!(
+                alloc.rate(i) >= alloc.rate(i - 1) - 1e-12,
+                "rates not monotone in sigma: {} vs {}",
+                alloc.rate(i),
+                alloc.rate(i - 1)
+            );
+        }
+        assert!(alloc.rate(3) > alloc.rate(0));
+    }
+
+    #[test]
+    fn zero_sigma_rows_sit_at_the_floor_and_unattainable_targets_clamp() {
+        let lens = [10usize, 20, 30];
+        let advs = [0.0f64, 1.0, 1.0];
+        let alloc = solve_neyman(&rows_of(&lens), &advs, 40, 1e-2);
+        assert_eq!(alloc.rate(0), 1e-2);
+        assert!(alloc.rate(1) > 1e-2 && alloc.rate(2) > 1e-2);
+        // above the reachable maximum (σ>0 rows saturate at 1, σ=0 stays
+        // at the floor): clamp and report
+        let alloc = solve_neyman(&rows_of(&lens), &advs, 1000, 1e-2);
+        assert_eq!(alloc.rate(0), 1e-2);
+        assert_eq!(alloc.rate(1), 1.0);
+        assert_eq!(alloc.rate(2), 1.0);
+        assert!((alloc.expected - (0.1 + 50.0)).abs() < 1e-9);
+        // below the floor cost: every rate pinned at the floor
+        let alloc = solve_neyman(&rows_of(&lens), &advs, 0, 1e-2);
+        assert!((0..3).all(|i| alloc.rate(i) == 1e-2));
+        assert!(alloc.expected > 0.0);
+    }
+
+    #[test]
+    fn allocation_is_variance_optimal_vs_uniform_at_equal_cost() {
+        // The Neyman objective Σ t·σ²·(1/p − 1) must not exceed the
+        // uniform allocation's at the same expected cost (uniform is
+        // feasible for the same constraint set, so optimality is testable
+        // as a deterministic inequality).
+        let lens = [12usize, 48, 31, 80, 5, 64];
+        let advs = [1.4f64, 0.3, 0.0, 0.9, 2.0, 0.6];
+        let total: usize = lens.iter().sum();
+        let budget = total * 2 / 5;
+        let alloc = solve_neyman(&rows_of(&lens), &advs, budget, 1e-3);
+        let u = budget as f64 / total as f64;
+        assert!(u >= 1e-3, "uniform rate must be feasible for the comparison");
+        let var = |rates: &dyn Fn(usize) -> f64| -> f64 {
+            lens.iter()
+                .enumerate()
+                .map(|(i, &t)| {
+                    let s = advs[i];
+                    t as f64 * s * s * (1.0 / rates(i) - 1.0)
+                })
+                .sum()
+        };
+        let v_neyman = var(&|i| alloc.rate(i));
+        let v_uniform = var(&|_| u);
+        assert!(
+            v_neyman <= v_uniform + 1e-9,
+            "neyman {v_neyman} worse than uniform {v_uniform}"
+        );
+    }
+
+    #[test]
+    fn surprisal_profile_scales_sigma() {
+        let flat = [-0.1f32; 16];
+        let spiky = [-2.0f32; 16];
+        assert!(sigma(1.0, Some(&spiky)) > sigma(1.0, Some(&flat)));
+        assert_eq!(sigma(1.0, None), 1.0);
+        assert_eq!(sigma(-2.0, None), 2.0);
+        assert_eq!(sigma(0.0, Some(&spiky)), 0.0);
+    }
+
+    #[test]
+    fn sample_row_is_systematic_with_one_draw_and_pinned_kept() {
+        let lens = [40usize, 0, 17];
+        let advs = [1.0f64, 1.0, 0.5];
+        let alloc = solve_neyman(&rows_of(&lens), &advs, 30, 1e-3);
+        let mut rng = Rng::new(30);
+        for (i, &t) in lens.iter().enumerate() {
+            let before = rng.clone();
+            let plan = alloc.sample_row(i, t, &mut rng);
+            assert_eq!(plan.ht_w.len(), t);
+            let e = alloc.expected_kept(i);
+            assert!(
+                plan.kept == e.floor() as usize || plan.kept == e.ceil() as usize,
+                "row {i}: kept {} vs expected {e}",
+                plan.kept
+            );
+            // draw-pattern contract: 1 uniform for t>0, none for t=0
+            let mut replay = before;
+            if t > 0 {
+                replay.uniform();
+            }
+            assert_eq!(replay.next_u64(), rng.clone().next_u64(), "row {i} draw count");
+        }
+        // out-of-range rate is 0 (never sampled)
+        assert_eq!(alloc.rate(99), 0.0);
+    }
+
+    #[test]
+    fn ht_weight_sums_stay_unbiased_per_row() {
+        let lens = [33usize, 50];
+        let advs = [0.7f64, 1.3];
+        let alloc = solve_neyman(&rows_of(&lens), &advs, 35, 1e-3);
+        let mut rng = Rng::new(31);
+        let n = 30_000;
+        for (i, &t) in lens.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for _ in 0..n {
+                acc += alloc
+                    .sample_row(i, t, &mut rng)
+                    .ht_w
+                    .iter()
+                    .map(|&w| w as f64)
+                    .sum::<f64>();
+            }
+            let mean = acc / n as f64;
+            assert!((mean - t as f64).abs() < 0.25, "row {i}: {mean} vs {t}");
+        }
+    }
+
+    #[test]
+    fn trace_args_mirror_the_batch_controller() {
+        let alloc = solve_neyman(&rows_of(&[10, 20]), &[1.0, 1.0], 12, 1e-3);
+        let args = alloc.trace_args();
+        assert_eq!(args[0], ("budget_target", 12.0));
+        assert_eq!(args[1].0, "budget_expected");
+        assert!((args[1].1 - 12.0).abs() < 1e-6);
+        assert_eq!(args[2], ("adapted", 1.0));
+        assert!(!alloc.label().is_empty());
+    }
+}

@@ -11,7 +11,7 @@
 //! unbiased. `scale == 1` takes the verbatim legacy path (bit-identical
 //! probabilities and draws).
 
-use super::{tail_learn_len, SelectionPlan, Selector};
+use super::{pi_w32, tail_learn_len, SelectionPlan, Selector};
 use crate::util::rng::Rng;
 
 /// Base inclusion probabilities (the legacy `masking::saliency_probs`).
@@ -31,21 +31,27 @@ pub struct Saliency {
     pub floor: f64,
     /// Batch-budget multiplier on the base probabilities (1.0 = off).
     pub scale: f64,
+    /// Shared solve-clamp π floor (`--train.pi_floor`; 0 = guard off).
+    /// Applied to the *scaled* probabilities, mirroring the budget solve's
+    /// clamp, so sampling and 1/π reweighting agree and `w_max ≤ 1/pi_floor`
+    /// by construction.
+    pub pi_floor: f64,
 }
 
 impl Saliency {
     pub fn new(floor: f64) -> Saliency {
-        Saliency { floor, scale: 1.0 }
+        Saliency { floor, scale: 1.0, pi_floor: 0.0 }
     }
 
     fn inclusion(&self, old_lp: &[f32]) -> Vec<f32> {
         let base = probs(old_lp, self.floor);
-        if self.scale == 1.0 {
+        if self.scale == 1.0 && self.pi_floor <= 0.0 {
             base
         } else {
+            let pf = self.pi_floor.max(0.0);
             base.iter()
-                // natlint: allow(lossy-cast, reason = "scale solve runs in f64 and rounds once at the boundary, mirroring pi_w32; the MIN_POSITIVE clamp keeps 1/pi finite")
-                .map(|&p| ((self.scale * p as f64).min(1.0) as f32).max(f32::MIN_POSITIVE))
+                // clamp in f64, quantize once through the blessed point
+                .map(|&p| pi_w32((self.scale * p as f64).min(1.0).max(pf)).0.max(f32::MIN_POSITIVE))
                 .collect()
         }
     }
@@ -105,12 +111,12 @@ mod tests {
         let old_lp: Vec<f32> = (0..40).map(|t| -0.2 - 0.1 * (t % 7) as f32).collect();
         let base = Saliency::new(0.3).probs(40, Some(&old_lp));
         assert_eq!(base, probs(&old_lp, 0.3));
-        let scaled = Saliency { floor: 0.3, scale: 0.5 }.probs(40, Some(&old_lp));
+        let scaled = Saliency { floor: 0.3, scale: 0.5, pi_floor: 0.0 }.probs(40, Some(&old_lp));
         for (&s, &b) in scaled.iter().zip(&base) {
             assert!(s > 0.0 && s <= 1.0);
             assert!(s <= b + 1e-7);
         }
-        let up = Saliency { floor: 0.3, scale: 10.0 }.probs(40, Some(&old_lp));
+        let up = Saliency { floor: 0.3, scale: 10.0, pi_floor: 0.0 }.probs(40, Some(&old_lp));
         assert!(up.iter().all(|&p| (p - 1.0).abs() < 1e-6));
     }
 
@@ -121,7 +127,7 @@ mod tests {
         let old_lp: Vec<f32> = (0..40).map(|t| -0.2 - 0.1 * (t % 7) as f32).collect();
         let mut rng = Rng::new(10);
         for scale in [0.5, 1.0, 1.7] {
-            let sel = Saliency { floor: 0.3, scale };
+            let sel = Saliency { floor: 0.3, scale, pi_floor: 0.0 };
             let n = 30_000;
             let mut acc = 0.0f64;
             for _ in 0..n {
@@ -132,6 +138,26 @@ mod tests {
             let mean = acc / n as f64;
             assert!((mean - 40.0).abs() < 0.5, "scale {scale}: {mean}");
         }
+    }
+
+    #[test]
+    fn pi_floor_bounds_scaled_probabilities_and_weights() {
+        let old_lp: Vec<f32> = (0..48).map(|t| -0.1 - 0.15 * (t % 5) as f32).collect();
+        // a crushing down-scale would send probabilities toward 0; the
+        // guard pins them at pi_floor so 1/π stays ≤ 1/pi_floor
+        let sel = Saliency { floor: 0.25, scale: 1e-9, pi_floor: 1e-3 };
+        let p = sel.probs(48, Some(&old_lp));
+        assert!(p.iter().all(|&x| x >= 1e-3 - 1e-9 && x <= 1.0), "{p:?}");
+        let mut rng = Rng::new(12);
+        for _ in 0..200 {
+            let plan = sel.sample(48, Some(&old_lp), &mut rng);
+            for &w in &plan.ht_w {
+                assert!(w as f64 <= 1.0 / 1e-3 * (1.0 + 1e-6), "runaway weight {w}");
+            }
+        }
+        // guard off reproduces the legacy (tiny-but-positive) behaviour
+        let legacy = Saliency { floor: 0.25, scale: 1e-9, pi_floor: 0.0 };
+        assert!(legacy.probs(48, Some(&old_lp)).iter().all(|&x| x > 0.0 && x < 1e-3));
     }
 
     #[test]

@@ -13,6 +13,32 @@
 use super::{pi_w32, tail_learn_len, SelectionPlan, Selector};
 use crate::util::rng::Rng;
 
+/// One systematic-grid draw at rate `p` over `t_i` tokens: a single uniform
+/// offset places the equally-spaced grid, marginal inclusion is exactly `p`
+/// and the kept count is pinned to ⌊p·t_i⌋ or ⌈p·t_i⌉. Shared by
+/// [`Stratified`] (one rate per scheme) and the per-sequence Neyman
+/// allocation ([`super::neyman`], one rate per row), so their draw streams
+/// are bit-identical at equal rates.
+pub(crate) fn systematic_plan(p: f64, t_i: usize, rng: &mut Rng) -> SelectionPlan {
+    let u = rng.uniform();
+    let (pi, w) = pi_w32(p);
+    let mut ht_w = vec![0.0f32; t_i];
+    let mut kept = 0;
+    let mut last_kept = 0usize;
+    // ⌊p·0 + u⌋ = 0 because u ∈ [0, 1).
+    let mut prev = 0.0f64;
+    for (t, slot) in ht_w.iter_mut().enumerate() {
+        let cum = (p * (t + 1) as f64 + u).floor();
+        if cum > prev {
+            *slot = w;
+            kept += 1;
+            last_kept = t + 1;
+        }
+        prev = cum;
+    }
+    SelectionPlan { probs: vec![pi; t_i], ht_w, kept, learn_len: tail_learn_len(last_kept) }
+}
+
 pub struct Stratified {
     pub p: f64,
 }
@@ -31,28 +57,7 @@ impl Selector for Stratified {
     }
 
     fn draw(&self, t_i: usize, _ctx: Option<&[f32]>, rng: &mut Rng) -> SelectionPlan {
-        let u = rng.uniform();
-        let (pi, w) = pi_w32(self.p);
-        let mut ht_w = vec![0.0f32; t_i];
-        let mut kept = 0;
-        let mut last_kept = 0usize;
-        // ⌊p·0 + u⌋ = 0 because u ∈ [0, 1).
-        let mut prev = 0.0f64;
-        for (t, slot) in ht_w.iter_mut().enumerate() {
-            let cum = (self.p * (t + 1) as f64 + u).floor();
-            if cum > prev {
-                *slot = w;
-                kept += 1;
-                last_kept = t + 1;
-            }
-            prev = cum;
-        }
-        SelectionPlan {
-            probs: vec![pi; t_i],
-            ht_w,
-            kept,
-            learn_len: tail_learn_len(last_kept),
-        }
+        systematic_plan(self.p, t_i, rng)
     }
 }
 

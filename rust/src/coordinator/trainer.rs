@@ -6,7 +6,10 @@
 //!   advantages → token selection (`coordinator::selection`: a `Selector`
 //!   per method; under `--train.budget_mode batch` the batch controller
 //!   first re-solves the keep parameter so expected selected tokens hit
-//!   `--train.token_budget`) → micro-batching off `SelectionPlan::learn_len`
+//!   `--train.token_budget`, and under `neyman` a variance-optimal
+//!   per-sequence allocation replaces the shared selector, both with every
+//!   solved π floored at `--train.pi_floor`) → micro-batching off
+//!   `SelectionPlan::learn_len`
 //!   (fixed or token-budget packer; see `--train.packer`; under
 //!   `--train.compact` the budget packer re-keys scattered plans by
 //!   KEPT-token count into gather-compacted `grad_K<k>_B<r>` micro-batches
@@ -40,7 +43,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{BudgetMode, Packer, RolloutEngine, RunConfig};
+use crate::config::{BudgetMode, Method, Packer, RolloutEngine, RunConfig};
 use crate::coordinator::batcher::{
     allocated_tokens, compact_stats, full_length_items, ideal_tokens, micro_shapes, pack,
     pack_budget, pack_budget_with, packer_token_budget, plan_shards, split_zero_contribution,
@@ -49,7 +52,7 @@ use crate::coordinator::batcher::{
 use crate::coordinator::bucket_tuner::{BucketTuner, TunerState};
 use crate::coordinator::rollout::scheduler::{RolloutScheduler, SchedStats};
 use crate::coordinator::rollout::RolloutSeq;
-use crate::coordinator::selection::{self, HtMoments, Selector};
+use crate::coordinator::selection::{self, HtMoments, SelectionPlan, Selector};
 use crate::coordinator::{advantage, rollout};
 use crate::metrics::Recorder;
 use crate::model::memory;
@@ -74,7 +77,7 @@ pub struct StepStats {
     pub selected_ratio: f64,
     /// Batch budget controller target: the expected selected-token count
     /// per epoch the controller solved for (`--train.token_budget` under
-    /// `--train.budget_mode batch`; 0 when the controller is off).
+    /// `--train.budget_mode batch|neyman`; 0 when the controller is off).
     pub budget_target: f64,
     /// Achieved expectation Σ_i E[kept_i] under the (possibly adjusted)
     /// inclusion probabilities, per epoch — the realized-vs-target series.
@@ -207,6 +210,42 @@ pub fn rollout_stage(
     Ok(RolloutGroup { step: plan.step, seqs, t_rollout_s: t0.elapsed().as_secs_f64() })
 }
 
+/// The step's solved token selection. `budget_mode none|batch` share one
+/// selector across every row (the per-row inputs flow through `ctx`);
+/// `budget_mode neyman` solves a distinct inclusion rate per sequence from
+/// `(|advantage|, length, behaviour surprisal)`, so sampling is dispatched
+/// by row index against the solved allocation. Both arms draw in rollout
+/// row order with the fixed per-row RNG consumption contract (zero draws
+/// for empty rows), keeping the mask stream shard/replay-invariant.
+enum StepSelection {
+    Shared(Box<dyn Selector>),
+    PerRow(selection::NeymanAllocation),
+}
+
+impl StepSelection {
+    fn sample_row(
+        &self,
+        i: usize,
+        t_i: usize,
+        ctx: Option<&[f32]>,
+        rng: &mut Rng,
+    ) -> SelectionPlan {
+        match self {
+            StepSelection::Shared(sel) => sel.sample(t_i, ctx, rng),
+            StepSelection::PerRow(alloc) => alloc.sample_row(i, t_i, rng),
+        }
+    }
+
+    /// Closed-form per-epoch expectation Σ_i E[kept_i] — the
+    /// `sel_tokens_exp` ledger input, independent of the realized draws.
+    fn expected_sum(&self, rows: &[(usize, Option<&[f32]>)]) -> f64 {
+        match self {
+            StepSelection::Shared(sel) => selection::budget::expected_sum(sel.as_ref(), rows),
+            StepSelection::PerRow(alloc) => alloc.expected_sum(),
+        }
+    }
+}
+
 /// Stage 2+3 — learner (forward + backward + apply), internally split into
 /// shard plan → concurrent execute → fixed-order reduce → apply when
 /// `cfg.train.shards > 1`. `step1` is the 1-based step number reported in
@@ -238,35 +277,66 @@ pub fn learn_stage(
     let rewards: Vec<f32> = seqs.iter().map(|s| s.reward).collect();
     let advs = advantage::grouped_advantages(&rewards, g);
 
-    // Token selection for this step: either the method literal's selector
-    // (budget_mode none — bit-identical to the pre-subsystem code) or the
-    // batch controller's adjusted selector, solved once per step from the
-    // group's actual response lengths (lengths don't change across ppo
-    // epochs, so one solve covers them all).
+    // Token selection for this step: the method literal's selector
+    // (budget_mode none — bit-identical to the pre-subsystem code), the
+    // batch controller's adjusted selector, or the Neyman per-sequence
+    // allocation — each solved once per step from the group's actual
+    // response lengths (lengths don't change across ppo epochs, so one
+    // solve covers them all). Budget-solved π are floored at
+    // `cfg.train.pi_floor`, which bounds every HT weight at `1/pi_floor`.
     let rows_ctx: Vec<(usize, Option<&[f32]>)> =
         seqs.iter().map(|s| (s.resp_len, Some(s.old_lp.as_slice()))).collect();
-    let budget_on = cfg.train.budget_mode == BudgetMode::Batch;
     let mut sp_solve = tracer.span("learn.select", step1);
-    let (sel, budget_target): (Box<dyn Selector>, f64) = if budget_on {
-        let out = selection::solve_batch(&cfg.method, &rows_ctx, cfg.train.token_budget);
-        for (k, v) in out.trace_args() {
-            sp_solve.arg(k, v);
+    let (sel, budget_target): (StepSelection, f64) = match cfg.train.budget_mode {
+        BudgetMode::Batch => {
+            let out = selection::solve_batch(
+                &cfg.method,
+                &rows_ctx,
+                cfg.train.token_budget,
+                cfg.train.pi_floor,
+            )?;
+            for (k, v) in out.trace_args() {
+                sp_solve.arg(k, v);
+            }
+            let target = out.target;
+            (StepSelection::Shared(out.selector), target)
         }
-        (out.selector, out.target)
-    } else {
-        (selection::selector_for(&cfg.method), 0.0)
+        BudgetMode::Neyman => {
+            let abs_adv: Vec<f64> = advs.iter().map(|&a| (a as f64).abs()).collect();
+            let alloc = selection::solve_neyman(
+                &rows_ctx,
+                &abs_adv,
+                cfg.train.token_budget,
+                cfg.train.pi_floor,
+            );
+            for (k, v) in alloc.trace_args() {
+                sp_solve.arg(k, v);
+            }
+            let target = alloc.target;
+            (StepSelection::PerRow(alloc), target)
+        }
+        BudgetMode::None => (StepSelection::Shared(selection::selector_for(&cfg.method)), 0.0),
+    };
+    // The π floor actually in force this step, for the ledger/trace gate
+    // (`w_max ≤ 1/pi_floor`). RPC is exempt by design: its prefix-survival
+    // weights are bounded by `t - C + 1` already, and flooring survival
+    // probabilities independently would change the sampling law.
+    let pi_floor = match cfg.train.budget_mode {
+        BudgetMode::Neyman => cfg.train.pi_floor,
+        BudgetMode::Batch if !matches!(cfg.method, Method::Rpc { .. }) => cfg.train.pi_floor,
+        _ => 0.0,
     };
     // Ledger: the closed-form per-epoch expectation Σ_i E[kept_i], through
     // `expected_sum` — an independent path from the per-plan probability
     // sums that feed `budget_realized`, which is what `nat trace --check`
     // compares it against (1% gate, no sampling noise on either side).
-    let sel_tokens_exp = selection::budget::expected_sum(sel.as_ref(), &rows_ctx);
+    let sel_tokens_exp = sel.expected_sum(&rows_ctx);
     drop(sp_solve);
 
     // Budget-packer routing state for this step. The tuned edges are a
     // function of PREVIOUS steps' observations only, so the step stays a
     // pure function of (params, group, tuner-state-in). Under budget_mode
-    // batch the packer runs on its auto cap (`token_budget` is the
+    // batch/neyman the packer runs on its auto cap (`token_budget` is the
     // selection target there, not a packing cap).
     let budget = cfg.train.packer == Packer::Budget;
     // Gather-compacted grad layout: re-key scattered plans by kept-token
@@ -303,8 +373,8 @@ pub fn learn_stage(
         let mut sp_sel = tracer.span("learn.select", step1);
         let mut items = Vec::with_capacity(seqs.len());
         let mut empty_rows = 0usize;
-        for (seq, &adv) in seqs.iter().zip(&advs) {
-            let plan = sel.sample(seq.resp_len, Some(&seq.old_lp), rng_mask);
+        for (i, (seq, &adv)) in seqs.iter().zip(&advs).enumerate() {
+            let plan = sel.sample_row(i, seq.resp_len, Some(&seq.old_lp), rng_mask);
             if seq.resp_len == 0 {
                 // Degenerate empty response: nothing to select or forward
                 // (the selector returned the empty plan without touching the
@@ -436,6 +506,7 @@ pub fn learn_stage(
             as f64,
         ht_w_max: ht.w_max,
         ht_ess: ht.ess(),
+        pi_floor,
         budget_realized,
         alloc_tokens_prefix: alloc_prefix_toks as f64 / eps,
         compact_kept: compact_kept as f64 / eps,

@@ -88,15 +88,22 @@ fn print_help() {
            --train.budget_mode M      none (default) = method literals as-is;\n\
                                       batch = re-solve keep parameters per step\n\
                                       so expected selected tokens hit\n\
-                                      --train.token_budget (HT stays unbiased)\n\n\
+                                      --train.token_budget (HT stays unbiased);\n\
+                                      neyman = variance-optimal per-sequence\n\
+                                      rates from |advantage| x surprisal at the\n\
+                                      same expected budget (selection v2)\n\
+           --train.pi_floor F         floor every budget-solved inclusion\n\
+                                      probability at F (default 1e-3; 0 = off)\n\
+                                      so HT weights stay <= 1/F by construction\n\
+                                      (`nat trace --check` gates this)\n\n\
          PACKING (train):\n\
            --train.packer P           budget (default) = token-budget packing in\n\
                                       the 2-D (bucket x rows) artifact grid;\n\
                                       fixed = legacy full-row micro-batches\n\
            --train.token_budget B     max rows*(P+bucket) tokens per micro-batch\n\
                                       (0 = auto: batch_train*(P+top bucket));\n\
-                                      under budget_mode batch: the step's\n\
-                                      expected selected-token target\n\
+                                      under budget_mode batch/neyman: the\n\
+                                      step's expected selected-token target\n\
            --train.auto_buckets true  EMA-tune bucket routing edges to the\n\
                                       observed learn_len distribution (state\n\
                                       is checkpointed; resume is exact)\n\

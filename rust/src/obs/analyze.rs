@@ -13,12 +13,15 @@
 //!   vs the full-token-GRPO counterfactual, HT-weight extremes).
 //!
 //! `--check` turns the report into an assertion (used by the CI
-//! trace-smoke lane): stage coverage ≥ 90% of `learn.step`, and the
+//! trace-smoke lane): stage coverage ≥ 90% of `learn.step`, the
 //! ledger's expected-selected-token fraction agrees with the trainer's
-//! `budget_realized` within 1% of generated tokens. The two sides of that
-//! comparison are computed by independent code paths (closed-form
-//! `expected_sum` vs per-plan probability sums), so the gate is
-//! deterministic — no sampling noise.
+//! `budget_realized` within 1% of generated tokens, and — whenever a π
+//! floor was in force (`--train.pi_floor` under a budget-solved selection
+//! mode) — the largest realized HT weight respects the `1/pi_floor` bound
+//! the floor guarantees by construction. The budget comparison's two sides
+//! are computed by independent code paths (closed-form `expected_sum` vs
+//! per-plan probability sums), so the gate is deterministic — no sampling
+//! noise.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -53,6 +56,13 @@ pub struct LedgerAgg {
     pub peak_bytes_full: f64,
     pub ht_w_max: f64,
     pub ht_ess_sum: f64,
+    /// Largest per-step π floor seen in the trace (0 = no floor in force).
+    pub pi_floor: f64,
+    /// Worst per-step `ht_w_max · pi_floor` over steps where a floor was in
+    /// force — the floor contract says each step's weights obey
+    /// `w_max ≤ 1/pi_floor`, so any value above 1 is a violation (checked
+    /// per step, which stays exact even if the floor changed mid-trace).
+    pub ht_w_excess: f64,
     pub budget_realized: f64,
     pub alloc_tokens_prefix: f64,
     pub compact_kept: f64,
@@ -154,6 +164,20 @@ impl Report {
                 );
             }
         }
+        // HT-weight-health gate (active whenever a π floor was in force):
+        // flooring every budget-solved π at selection time bounds the
+        // largest 1/π weight at 1/pi_floor by construction, so a violation
+        // means some selector sampled with a probability below the floor it
+        // solved with — exactly the runaway-weight bug the floor exists to
+        // make impossible.
+        if l.ht_w_excess > 1.0 + 1e-6 {
+            bail!(
+                "HT weight max {:.3} exceeds the 1/pi_floor bound {:.3} — a \
+                 budget-solved selector sampled below its π floor",
+                l.ht_w_max,
+                1.0 / l.pi_floor
+            );
+        }
         Ok(())
     }
 
@@ -250,12 +274,22 @@ impl Report {
             l.peak_bytes_full / 1e9,
             pct(l.peak_bytes_full - l.peak_bytes, l.peak_bytes_full)
         );
-        let _ = writeln!(
-            s,
-            "  HT weights            max {:.3}, mean ESS {:.1}",
-            l.ht_w_max,
-            l.ht_ess_sum / n
-        );
+        if l.pi_floor > 0.0 {
+            let _ = writeln!(
+                s,
+                "  HT weights            max {:.3}, mean ESS {:.1}   (bound 1/pi_floor = {:.1})",
+                l.ht_w_max,
+                l.ht_ess_sum / n,
+                1.0 / l.pi_floor
+            );
+        } else {
+            let _ = writeln!(
+                s,
+                "  HT weights            max {:.3}, mean ESS {:.1}",
+                l.ht_w_max,
+                l.ht_ess_sum / n
+            );
+        }
         let _ = writeln!(
             s,
             "  budget agreement      |E[sel] − realized| = {:.3}% of generated (gate 1%)",
@@ -298,6 +332,11 @@ pub fn analyze(text: &str) -> Result<Report> {
             l.peak_bytes_full = l.peak_bytes_full.max(arg("peak_bytes_full"));
             l.ht_w_max = l.ht_w_max.max(arg("ht_w_max"));
             l.ht_ess_sum += arg("ht_ess");
+            let pf = arg("pi_floor");
+            if pf > 0.0 {
+                l.pi_floor = l.pi_floor.max(pf);
+                l.ht_w_excess = l.ht_w_excess.max(arg("ht_w_max") * pf);
+            }
             l.budget_realized += arg("budget_realized");
             l.alloc_tokens_prefix += arg("alloc_tokens_prefix");
             l.compact_kept += arg("compact_kept");
@@ -368,6 +407,7 @@ mod tests {
                     ("peak_bytes_full", 1e7),
                     ("ht_w_max", 2.0),
                     ("ht_ess", 50.0),
+                    ("pi_floor", 0.02),
                     ("budget_realized", 64.2),
                     ("alloc_tokens_prefix", 360.0),
                     ("compact_kept", 40.0),
@@ -387,6 +427,8 @@ mod tests {
         assert!((r.coverage().unwrap() - 0.95).abs() < 1e-9);
         assert_eq!(r.ledger.steps, 1);
         assert!((r.budget_gap() - 0.2 / 128.0).abs() < 1e-9);
+        assert!((r.ledger.pi_floor - 0.02).abs() < 1e-12);
+        assert!((r.ledger.ht_w_excess - 2.0 * 0.02).abs() < 1e-12);
         let rendered = r.render();
         assert!(rendered.contains("learn.grad"), "{rendered}");
         assert!(rendered.contains("savings ledger"), "{rendered}");
@@ -434,6 +476,29 @@ mod tests {
         r.ledger.compact_bound = 0.0;
         r.check().unwrap();
         assert!(!r.render().contains("compacted layout"));
+    }
+
+    #[test]
+    fn check_gates_ht_weights_against_the_pi_floor() {
+        // sample trace: pi_floor 0.02 bounds weights at 50; max 2.0 passes
+        // and the render advertises the bound
+        let r = analyze(&sample_trace(950.0)).unwrap();
+        r.check().unwrap();
+        assert!(r.render().contains("1/pi_floor"), "{}", r.render());
+        // a weight above the per-step bound is a broken floor contract
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.ht_w_max = 51.0;
+        r.ledger.ht_w_excess = 51.0 * 0.02;
+        let err = r.check().unwrap_err().to_string();
+        assert!(err.contains("pi_floor"), "{err}");
+        // no floor in force (budget_mode none / RPC): gate off, legacy
+        // traces with huge weights keep passing
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.pi_floor = 0.0;
+        r.ledger.ht_w_excess = 0.0;
+        r.ledger.ht_w_max = 1e9;
+        r.check().unwrap();
+        assert!(!r.render().contains("1/pi_floor"));
     }
 
     #[test]

@@ -61,6 +61,12 @@ pub struct StepLedger {
     pub ht_w_max: f64,
     /// Effective sample size (Σw)²/Σw² over kept tokens.
     pub ht_ess: f64,
+    /// The π floor in force for this step's budget-solved selection
+    /// (`--train.pi_floor`; 0 when no floor applies — `budget_mode none`,
+    /// or RPC under the batch controller, whose prefix-survival weights are
+    /// bounded by construction). When positive, `nat trace --check` gates
+    /// `ht_w_max ≤ 1/pi_floor`.
+    pub pi_floor: f64,
     /// Copy of `StepStats::budget_realized` so a trace event is
     /// self-contained for `nat trace --check`.
     pub budget_realized: f64,
@@ -134,6 +140,7 @@ impl StepLedger {
             ("peak_bytes_full", self.peak_bytes_full),
             ("ht_w_max", self.ht_w_max),
             ("ht_ess", self.ht_ess),
+            ("pi_floor", self.pi_floor),
             ("budget_realized", self.budget_realized),
             ("alloc_tokens_prefix", self.alloc_tokens_prefix),
             ("compact_kept", self.compact_kept),
@@ -156,6 +163,7 @@ impl StepLedger {
             ("mem_saving", self.mem_saving()),
             ("ht_w_max", self.ht_w_max),
             ("ht_ess", self.ht_ess),
+            ("pi_floor", self.pi_floor),
             ("alloc_tokens_prefix", self.alloc_tokens_prefix),
             ("compact_saving", self.compact_saving()),
         ]
@@ -206,10 +214,10 @@ mod tests {
     fn trace_args_cover_every_field() {
         let l = StepLedger { gen_tokens: 1.0, ..StepLedger::default() };
         let args = l.trace_args();
-        assert_eq!(args.len(), 17);
+        assert_eq!(args.len(), 18);
         assert_eq!(args[0], ("gen_tokens", 1.0));
         // series is a subset plus the derived ratios
-        assert_eq!(l.series().len(), 12);
+        assert_eq!(l.series().len(), 13);
     }
 
     #[test]

@@ -12,15 +12,22 @@
 //!   and end-to-end through `learn_stage` on the sim runtime.
 //! * **New selectors** — stratified sampling's variance reduction over URS
 //!   and poisson's length-aware rates.
+//! * **π-floor guard** — every budget-solved inclusion probability lies in
+//!   `[pi_floor, 1]` across schemes × random populations (the runaway
+//!   1/π-weight regression), and `HtMoments` matches brute-force
+//!   recomputation from the realized plans.
+//! * **Selection v2 (`budget_mode neyman`)** — the per-sequence allocation
+//!   flows through `learn_stage` shard-invariantly and hits the budget.
 //! * **HT unbiasedness under the controller** — the ignored Monte-Carlo
 //!   lane proves the reweighted estimator stays unbiased through the FULL
-//!   pack → shard → reduce path with controller-adjusted probabilities.
+//!   pack → shard → reduce path with controller-adjusted probabilities
+//!   (batch and neyman).
 
 use nat_rl::config::{BudgetMode, Method, RunConfig};
 use nat_rl::coordinator::batcher::{pack_budget, plan_shards, split_zero_contribution, LearnItem};
 use nat_rl::coordinator::masking;
 use nat_rl::obs::Tracer;
-use nat_rl::coordinator::selection::{self, bench_workload, Selector, Stratified, Urs};
+use nat_rl::coordinator::selection::{self, bench_workload, HtMoments, Selector, Stratified, Urs};
 use nat_rl::coordinator::trainer::learn_stage;
 use nat_rl::runtime::shard::{execute_shards, tree_reduce_into};
 use nat_rl::runtime::sim::{init_params, sim_manifest};
@@ -198,7 +205,7 @@ fn budget_controller_hits_target_within_2pct_on_shared_workload() {
         (Method::Rpc { min_cut: 8 }, 0.65),
     ] {
         let target = (total * frac).round() as usize;
-        let out = selection::solve_batch(&method, &rows, target);
+        let out = selection::solve_batch(&method, &rows, target, 1e-3).unwrap();
         assert!(out.adapted, "{method:?}");
         let rel = (out.expected - target as f64).abs() / target as f64;
         assert!(
@@ -422,7 +429,7 @@ fn budget_adjusted_estimator_is_ht_unbiased_through_pack_shard_reduce_path() {
         Method::Poisson { k: 3 },
         Method::Saliency { floor: 0.3 },
     ] {
-        let out = selection::solve_batch(&method, &ctl_rows, budget);
+        let out = selection::solve_batch(&method, &ctl_rows, budget, 1e-3).unwrap();
         assert!(out.adapted);
         let rel = (out.expected - budget as f64).abs() / budget as f64;
         assert!(rel <= 0.02, "{method:?}: controller off target ({rel:.4})");
@@ -464,4 +471,310 @@ fn budget_adjusted_estimator_is_ht_unbiased_through_pack_shard_reduce_path() {
              budget controller: mean {mean:.4} vs E {expected:.4} (rel err {rel:.4})"
         );
     }
+}
+
+/// π-floor proptest (the runaway-weight regression): across every adaptable
+/// scheme × random length populations × random (often unattainably low)
+/// targets, every solved inclusion probability lies in `[pi_floor, 1]` —
+/// which is exactly the `w_max ≤ 1/pi_floor` guarantee, since HT weights
+/// divide by the probability sampled with. The Neyman allocation honours
+/// the same contract through its solved rates.
+#[test]
+fn solved_inclusion_probabilities_always_lie_in_pi_floor_one() {
+    for case in 0..60u64 {
+        let mut meta = Rng::new(0xF1_0072 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let n_rows = 3 + meta.below(14) as usize;
+        let lens: Vec<usize> = (0..n_rows)
+            .map(|_| if meta.uniform() < 0.1 { 0 } else { 1 + meta.below(300) as usize })
+            .collect();
+        let lps: Vec<Vec<f32>> = lens
+            .iter()
+            .map(|&t| (0..t).map(|_| -0.02 - meta.uniform() as f32).collect())
+            .collect();
+        let rows: Vec<(usize, Option<&[f32]>)> =
+            lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
+        let total: usize = lens.iter().sum();
+        let pi_floor = 10f64.powf(-1.3 - 2.7 * meta.uniform()); // ~[5e-5, 0.05]
+        // targets from pathologically low (1 token) up to over-ask
+        let target = match case % 3 {
+            0 => 1,
+            1 => 1 + meta.below(1 + total as u64 / 2) as usize,
+            _ => total + 1 + meta.below(64) as usize,
+        };
+        let methods = [
+            Method::Urs { p: 0.05 + 0.9 * meta.uniform() },
+            Method::Stratified { p: 0.05 + 0.9 * meta.uniform() },
+            Method::Poisson { k: 1 + meta.below(16) as usize },
+            Method::Saliency { floor: 0.05 + 0.9 * meta.uniform() },
+        ];
+        let eps = 1e-6;
+        for method in methods {
+            let out = selection::solve_batch(&method, &rows, target, pi_floor).unwrap();
+            for (&t, lp) in lens.iter().zip(&lps) {
+                for &p in &out.selector.probs(t, Some(lp.as_slice())) {
+                    assert!(
+                        p as f64 >= pi_floor * (1.0 - eps) && p as f64 <= 1.0 + eps,
+                        "case {case} {method:?} target {target} pf {pi_floor:.2e}: \
+                         solved π {p} outside [pi_floor, 1]"
+                    );
+                }
+            }
+        }
+        let abs_adv: Vec<f64> = (0..n_rows).map(|_| meta.uniform() * 2.0).collect();
+        let alloc = selection::solve_neyman(&rows, &abs_adv, target, pi_floor);
+        for i in 0..n_rows {
+            let r = alloc.rate(i);
+            assert!(
+                r >= pi_floor * (1.0 - eps) && r <= 1.0 + eps,
+                "case {case} neyman target {target} pf {pi_floor:.2e}: rate {r}"
+            );
+        }
+    }
+}
+
+/// `HtMoments` (the `ht_w_max`/`ht_ess` ledger inputs) must agree with a
+/// brute-force recomputation from the realized plans' weight vectors.
+#[test]
+fn ht_moments_match_brute_force_recomputation_from_plans() {
+    let lens = bench_workload::lens();
+    let lps: Vec<Vec<f32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| bench_workload::old_lp(i, t))
+        .collect();
+    let rows: Vec<(usize, Option<&[f32]>)> =
+        lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
+    let total: f64 = lens.iter().map(|&t| t as f64).sum();
+    let target = (total * 0.4).round() as usize;
+
+    let mut rng = Rng::new(0x47E5);
+    let abs_adv = vec![1.0f64; rows.len()];
+    let alloc = selection::solve_neyman(&rows, &abs_adv, target, 1e-3);
+    let batch =
+        selection::solve_batch(&Method::Poisson { k: 4 }, &rows, target, 1e-3).unwrap();
+    for per_row in [true, false] {
+        let mut ht = HtMoments::default();
+        let mut weights: Vec<f64> = Vec::new();
+        for (i, &(t, lp)) in rows.iter().enumerate() {
+            let plan = if per_row {
+                alloc.sample_row(i, t, &mut rng)
+            } else {
+                batch.selector.sample(t, lp, &mut rng)
+            };
+            weights.extend(plan.ht_w.iter().filter(|&&w| w > 0.0).map(|&w| w as f64));
+            ht.observe(&plan);
+        }
+        let w_max = weights.iter().copied().fold(0.0f64, f64::max);
+        let w_sum: f64 = weights.iter().sum();
+        let w2_sum: f64 = weights.iter().map(|w| w * w).sum();
+        let ess = if w2_sum > 0.0 { w_sum * w_sum / w2_sum } else { 0.0 };
+        assert_eq!(ht.kept as usize, weights.len(), "per_row={per_row}");
+        assert!((ht.w_max - w_max).abs() <= 1e-12, "per_row={per_row}");
+        assert!((ht.w_sum - w_sum).abs() <= 1e-9 * w_sum.max(1.0), "per_row={per_row}");
+        assert!((ht.w2_sum - w2_sum).abs() <= 1e-9 * w2_sum.max(1.0), "per_row={per_row}");
+        assert!((ht.ess() - ess).abs() <= 1e-9 * ess.max(1.0), "per_row={per_row}");
+        assert!(ht.w_max <= 1e3 * (1.0 + 1e-6), "per_row={per_row}: floor breached");
+    }
+}
+
+/// Tier-1 mirror of the `BENCH_selection.json` acceptance: at equal
+/// realized budget on the shared controller workload, the Neyman
+/// allocation beats the Poisson batch controller on both variance axes —
+/// higher kept-token effective sample size (its near-uniform rates keep
+/// the 1/π weights tight, where Poisson's `k/t` rates spread them across
+/// the length distribution) and lower per-row selection variance
+/// (systematic sampling pins each row's kept count to ⌊pT⌋/⌈pT⌉).
+#[test]
+fn neyman_beats_poisson_batch_on_ess_and_sel_var_at_equal_budget() {
+    let lens = bench_workload::lens();
+    let lps: Vec<Vec<f32>> = lens
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| bench_workload::old_lp(i, t))
+        .collect();
+    let rows: Vec<(usize, Option<&[f32]>)> =
+        lens.iter().zip(&lps).map(|(&t, lp)| (t, Some(lp.as_slice()))).collect();
+    let total: f64 = lens.iter().map(|&t| t as f64).sum();
+    let target = (total * 0.4).round() as usize;
+
+    let batch =
+        selection::solve_batch(&Method::Poisson { k: 4 }, &rows, target, 1e-3).unwrap();
+    let abs_adv = vec![1.0f64; rows.len()];
+    let alloc = selection::solve_neyman(&rows, &abs_adv, target, 1e-3);
+    // equal realized budget: both solves hit the same target within 2%
+    let gap = (batch.expected - alloc.expected_sum()).abs() / target as f64;
+    assert!(gap <= 0.02, "unequal realized budgets: {gap:.4}");
+
+    let mut rng = Rng::new(0x0E55_C0DE);
+    let draws = 8;
+    let (mut b_ess, mut b_var, mut n_ess, mut n_var) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for _ in 0..draws {
+        let mut ht = HtMoments::default();
+        let mut var = 0.0;
+        for &(t, lp) in &rows {
+            let plan = batch.selector.sample(t, lp, &mut rng);
+            let e = plan.expected_kept();
+            var += (plan.kept as f64 - e) * (plan.kept as f64 - e);
+            ht.observe(&plan);
+        }
+        b_ess += ht.ess() / draws as f64;
+        b_var += var / (rows.len() * draws) as f64;
+        let mut ht = HtMoments::default();
+        let mut var = 0.0;
+        for (i, &(t, _)) in rows.iter().enumerate() {
+            let plan = alloc.sample_row(i, t, &mut rng);
+            let e = plan.expected_kept();
+            var += (plan.kept as f64 - e) * (plan.kept as f64 - e);
+            ht.observe(&plan);
+        }
+        n_ess += ht.ess() / draws as f64;
+        n_var += var / (rows.len() * draws) as f64;
+    }
+    assert!(
+        n_ess > b_ess,
+        "neyman ht_ess {n_ess:.1} must exceed poisson-batch {b_ess:.1}"
+    );
+    assert!(
+        n_var < b_var,
+        "neyman sel_var {n_var:.3} must undercut poisson-batch {b_var:.3}"
+    );
+}
+
+/// End-to-end selection v2: `--train.budget_mode neyman` through the real
+/// `learn_stage` — `budget_realized` within 2% of the target, the ledger
+/// records the π floor with `ht_w_max` under its bound, and the whole step
+/// stays bit-identical across shard counts.
+#[test]
+fn budget_mode_neyman_flows_through_learn_stage_and_stays_shard_invariant() {
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let seqs = bench_workload::seqs(d.prompt_len, d.max_resp);
+    let total: usize = seqs.iter().map(|s| s.resp_len).sum();
+    let budget = (total as f64 * 0.4).round() as usize;
+
+    let run = |shards: usize| {
+        let mut cfg = RunConfig::default();
+        cfg.method = Method::Stratified { p: 0.9 };
+        cfg.rl.group_size = bench_workload::GROUP_SIZE;
+        cfg.train.token_budget = budget;
+        cfg.train.budget_mode = BudgetMode::Neyman;
+        cfg.train.shards = shards;
+        let mut params = init_params(&rt.manifest);
+        let mut opt = OptState::zeros(&rt.manifest);
+        let mut acc = GradAccum::zeros(rt.manifest.param_count);
+        let mut rng_mask = Rng::new(0x4E59_4D41);
+        let s = learn_stage(
+            &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
+            &Tracer::off(),
+        )
+        .unwrap();
+        (s, params.flat)
+    };
+    let (stats, params1) = run(1);
+    assert_eq!(stats.budget_target, budget as f64);
+    let rel = (stats.budget_realized - budget as f64).abs() / budget as f64;
+    assert!(
+        rel <= 0.02,
+        "neyman budget_realized {} vs target {budget} (rel err {rel:.4})",
+        stats.budget_realized
+    );
+    assert!(stats.sel_var.is_finite() && stats.sel_var >= 0.0);
+    assert!(stats.grad_norm.is_finite());
+    // ledger contract: the default π floor is recorded and honoured
+    assert_eq!(stats.ledger.pi_floor, 1e-3);
+    assert!(
+        stats.ledger.ht_w_max <= (1.0 + 1e-6) / 1e-3,
+        "ht_w_max {} breaches 1/pi_floor",
+        stats.ledger.ht_w_max
+    );
+    // the per-row allocation composes with the sharded learner bit-identically
+    let (stats3, params3) = run(3);
+    assert_eq!(params1, params3, "neyman: shards=3 diverged");
+    assert_eq!(stats.budget_realized.to_bits(), stats3.budget_realized.to_bits());
+    assert_eq!(stats.sel_var.to_bits(), stats3.sel_var.to_bits());
+}
+
+/// Monte-Carlo HT-unbiasedness for `budget_mode neyman` through the FULL
+/// pack → shard → reduce path — same closed-form expectation and estimator
+/// as the batch-controller MC test above, with the per-sequence Neyman
+/// rates (solved from the rows' own |advantages|) driving selection.
+#[test]
+#[ignore = "slow Monte-Carlo lane: cargo test -q -- --ignored"]
+fn neyman_estimator_is_ht_unbiased_through_pack_shard_reduce_path() {
+    let rt = Runtime::sim(sim_manifest());
+    let d = rt.manifest.dims.clone();
+    let (p, top) = (d.prompt_len, *d.buckets.last().unwrap());
+    let row_grid = rt.manifest.row_grid();
+
+    let mut pop_rng = Rng::new(0xB0D6_E7A1);
+    let rows: Vec<PopRow> = (0..8)
+        .map(|r| {
+            let t_r = 2 + pop_rng.below((top - 1) as u64) as usize;
+            let mut tokens = vec![PAD; p + top];
+            for (i, slot) in tokens.iter_mut().enumerate().take(p + t_r) {
+                *slot = 3 + ((r * 13 + i * 7) % 50) as i32;
+            }
+            let old_lp: Vec<f32> =
+                (0..t_r).map(|_| -0.02 - pop_rng.uniform() as f32).collect();
+            PopRow { t_r, tokens, old_lp, adv: 0.5 + 0.25 * r as f32, pad_len: r % 5 }
+        })
+        .collect();
+    let expected: f64 = rows
+        .iter()
+        .map(|row| {
+            let sum: f64 = (0..row.t_r)
+                .map(|t| row.old_lp[t] as f64 + row.tokens[p + t] as f64 / 1024.0)
+                .sum();
+            row.adv as f64 * sum / row.t_r as f64
+        })
+        .sum();
+    assert!(expected.abs() > 0.5, "degenerate population: E = {expected}");
+
+    let total: usize = rows.iter().map(|r| r.t_r).sum();
+    let budget = total / 2;
+    let ctl_rows: Vec<(usize, Option<&[f32]>)> =
+        rows.iter().map(|r| (r.t_r, Some(r.old_lp.as_slice()))).collect();
+    let abs_adv: Vec<f64> = rows.iter().map(|r| r.adv.abs() as f64).collect();
+    let alloc = selection::solve_neyman(&ctl_rows, &abs_adv, budget, 1e-3);
+    let rel = (alloc.expected_sum() - budget as f64).abs() / budget as f64;
+    assert!(rel <= 0.02, "neyman solve off target ({rel:.4})");
+
+    let params = init_params(&rt.manifest);
+    let lits = params.to_literals(&rt.manifest).unwrap();
+    let trials = 4000u64;
+    let mut est_sum = 0.0f64;
+    for trial in 0..trials {
+        let mut rng = Rng::new(0x7B1A_u64 ^ trial.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let items: Vec<LearnItem> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let plan = alloc.sample_row(i, row.t_r, &mut rng);
+                LearnItem {
+                    tokens: row.tokens.clone(),
+                    pad_len: row.pad_len,
+                    resp_len: row.t_r,
+                    ht_w: plan.ht_w,
+                    learn_len: plan.learn_len,
+                    adv: row.adv,
+                    old_lp: row.old_lp.clone(),
+                }
+            })
+            .collect();
+        let (items, _dropped) = split_zero_contribution(items);
+        let mbs = pack_budget(&items, &d.buckets, p, &row_grid, 0).unwrap();
+        let plan = plan_shards(&mbs, p, 1 + (trial % 4) as usize);
+        let leaves = execute_shards(&rt, &mbs, &lits, &plan, &Tracer::off(), 1).unwrap();
+        let mut acc = GradAccum::zeros(rt.manifest.param_count);
+        let mut met = GradMetrics::default();
+        tree_reduce_into(&mut acc, &mut met, leaves);
+        est_sum += acc.flat[0] as f64;
+    }
+    let mean = est_sum / trials as f64;
+    let rel = ((mean - expected) / expected).abs();
+    assert!(
+        rel < 0.05,
+        "neyman: HT estimate biased through pack/shard/reduce: mean {mean:.4} vs \
+         E {expected:.4} (rel err {rel:.4})"
+    );
 }
