@@ -45,7 +45,7 @@ fn main() -> Result<()> {
 
     // Both evals use the fixed engine (None) so the before->after delta
     // reflects training, not a change of eval sampling stream.
-    let before = evaluator::evaluate_all_tiers(&rt, &base.params, 8, 8, 1.0, 0, None)?;
+    let before = evaluator::evaluate_all_tiers(&rt, &base.params, 8, 8, 1.0, 0, None, 0)?;
 
     // 4. NAT RL: only ~55% of tokens backpropagate, yet the gradient is an
     //    unbiased estimate of the full-token GRPO gradient (HT reweighting).
@@ -54,7 +54,7 @@ fn main() -> Result<()> {
     tr.train(30, true)?;
 
     // 5. Before/after evaluation.
-    let after = evaluator::evaluate_all_tiers(&rt, &tr.params, 8, 8, 1.0, 0, None)?;
+    let after = evaluator::evaluate_all_tiers(&rt, &tr.params, 8, 8, 1.0, 0, None, 0)?;
     println!("\nbenchmark     Acc@8 before -> after");
     for (b, a) in before.iter().zip(&after) {
         println!(

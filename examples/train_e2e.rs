@@ -67,6 +67,7 @@ fn main() -> Result<()> {
         1.0,
         0,
         None,
+        0,
     )?;
     for e in &before {
         println!(
@@ -92,7 +93,8 @@ fn main() -> Result<()> {
     tr.train(steps, true)?;
 
     println!("\nevaluating trained model ...");
-    let after = evaluator::evaluate_all_tiers(&rt, &tr.params, tasks_per_tier, k, 1.0, 0, None)?;
+    let after =
+        evaluator::evaluate_all_tiers(&rt, &tr.params, tasks_per_tier, k, 1.0, 0, None, 0)?;
     println!("\n=== E2E RESULT (record in EXPERIMENTS.md) ===");
     println!("benchmark     Acc@{k} before -> after | pass@{k} before -> after");
     for (b, a) in before.iter().zip(&after) {

@@ -15,6 +15,15 @@ Outputs under ``<out-dir>/<config>/``:
                               with PER-ROW sampling seeds (the continuous-
                               batching scheduler's grid; a row's stream is
                               independent of batch placement and bucket cap)
+  prefill.hlo.txt             per-prompt prefill half of the split rollout:
+                              B=1 prompt forward pass -> one flat KV row
+                              (bucket-independent, so the shared-prefix
+                              cache prefills each prompt ONCE per param
+                              version and decodes all G siblings from it)
+  decode_T<b>.hlo.txt         KV-consuming bucketed decode, one per bucket:
+                              same decode loop as generate_T<b> but resumes
+                              from cached prefill rows instead of re-running
+                              the prompt forward pass
   score_T<b>.hlo.txt          logprob/entropy diagnostics (top bucket)
   grad_T<b>.hlo.txt           NAT learner gradient, one per length bucket
   grad_T<b>_B<r>.hlo.txt      same, for the sub-batch row grid {1,2,4,...}
@@ -84,6 +93,43 @@ def lower_generate_bucket(cfg, bucket):
     B, P = cfg.batch_rollout, cfg.prompt_len
     return jax.jit(fn).lower(
         _param_specs(cfg), _spec((B, P), jnp.int32), _spec((B,), jnp.int32),
+        _spec((B,), jnp.int32), _spec((), jnp.float32))
+
+
+def lower_prefill(cfg, use_pallas_attn=False):
+    """Per-prompt prefill artifact: the B=1 half of the split rollout.
+
+    Lowered at batch 1 because the rollout cache's unit of work is one
+    prompt: ``Runtime::prefill`` runs it once per (param_version, prompt)
+    miss and caches the single flat output row as the ``KvBlock`` every
+    group sibling decodes from. The row layout is ``model.kv_flatten``'s
+    ([layers, 2, heads, P, head_dim] then logits0); Rust never parses it —
+    only ``decode_T<b>`` does.
+    """
+    fn = lambda params, prompt, pad_len: M.prefill_flat(
+        cfg, params, prompt, pad_len, use_pallas_attn)
+    P = cfg.prompt_len
+    return jax.jit(fn).lower(
+        _param_specs(cfg), _spec((1, P), jnp.int32), _spec((1,), jnp.int32))
+
+
+def lower_decode_bucket(cfg, bucket):
+    """KV-consuming decode capped at ``bucket`` steps.
+
+    Input order matches ``lower_generate_bucket`` with one extra operand:
+    the [B, W] flat KV matrix (W = ``model.kv_flat_width``) the Rust
+    runtime assembles by concatenating cached per-prompt blocks. Seeds are
+    per-row, so the scheduler's scheduling-invariance contract carries
+    over: a row's output is a pure function of (prompt, seed) whether its
+    prompt context came from a cache hit or a fresh prefill.
+    """
+    fn = lambda params, prompts, pad_len, kv, seeds, temp: \
+        M.decode_from_flat_kv(cfg, params, prompts, pad_len, kv, seeds,
+                              temp, bucket)
+    B, P = cfg.batch_rollout, cfg.prompt_len
+    return jax.jit(fn).lower(
+        _param_specs(cfg), _spec((B, P), jnp.int32), _spec((B,), jnp.int32),
+        _spec((B, M.kv_flat_width(cfg)), jnp.float32),
         _spec((B,), jnp.int32), _spec((), jnp.float32))
 
 
@@ -189,6 +235,10 @@ def build_manifest(cfg):
             "generate_full": "generate_full.hlo.txt",
             "generate_buckets": {str(b): f"generate_T{b}.hlo.txt"
                                  for b in cfg.buckets},
+            "prefill": "prefill.hlo.txt",
+            "prefill_pallas": "prefill_pallas.hlo.txt",
+            "decode_buckets": {str(b): f"decode_T{b}.hlo.txt"
+                               for b in cfg.buckets},
             "score": {str(cfg.buckets[-1]):
                       f"score_T{cfg.buckets[-1]}.hlo.txt"},
             "score_pallas": {str(cfg.buckets[-1]):
@@ -241,6 +291,14 @@ def build(cfg_name: str, out_dir: str, force: bool = False) -> None:
     # rollout scheduler (one artifact per response bucket).
     for b in cfg.buckets:
         emit(f"generate_T{b}.hlo.txt", lower_generate_bucket(cfg, b))
+    # Prefill/decode split for the shared-prefix rollout cache: one
+    # bucket-independent B=1 prefill, one KV-consuming decode per bucket.
+    emit("prefill.hlo.txt", lower_prefill(cfg))
+    for b in cfg.buckets:
+        emit(f"decode_T{b}.hlo.txt", lower_decode_bucket(cfg, b))
+    # Pallas prompt-window variant, mirroring score_pallas: proves the L1
+    # attention kernel composes with the split rollout through rust PJRT.
+    emit("prefill_pallas.hlo.txt", lower_prefill(cfg, use_pallas_attn=True))
     emit(f"score_T{cfg.buckets[-1]}.hlo.txt", lower_score(cfg, cfg.buckets[-1]))
     # same scorer with the L1 Pallas flash-attention kernel in the forward —
     # proves the attention kernel lowers and executes through rust PJRT.

@@ -101,3 +101,21 @@ def flash_attention(q, k, v, pad_len, block_q=BLOCK_Q, block_k=BLOCK_K):
         interpret=True,
     )(pad_len.astype(jnp.int32), q, k, v)
     return out[:, :, :s, :]
+
+
+def prefill_attention(q, k, v, pad_len):
+    """Prompt-window attention for the split-rollout ``prefill`` artifact.
+
+    Same blocked causal kernel, shaped to the prefill call: S here is the
+    prompt window P (48–128 across the preset configs), so clamping both
+    block sizes to S gives one q-block per (batch, head) program and a
+    single-pass K/V stream — the whole window lives in VMEM at once, the
+    online-softmax state never carries across blocks, and the lcm padding
+    in ``flash_attention`` becomes a no-op. Forward-only, like ``score``:
+    the prefill artifact is never differentiated. The default ``prefill``
+    lowering uses the dense jnp attention (the bit-identity path shared
+    with fused generate); this variant backs ``prefill_pallas.hlo.txt``,
+    proving the L1 kernel composes with the split rollout under rust PJRT.
+    """
+    s = q.shape[2]
+    return flash_attention(q, k, v, pad_len, block_q=s, block_k=s)

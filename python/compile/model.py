@@ -34,7 +34,7 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from compile.kernels.attention import flash_attention
+from compile.kernels.attention import flash_attention, prefill_attention
 from compile.kernels.compact import compact_nat_loss
 from compile.kernels.nat_loss import nat_loss_tokens
 
@@ -312,43 +312,30 @@ def _decode_attention(q, k_cache, v_cache, pos, pad_len):
     return jnp.einsum("bhqk,bhkd->bhqd", w, v_cache)
 
 
-def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
-             early_exit: bool = True, t_max=None):
-    """Sample up to ``t_max or cfg.max_resp`` tokens after the prompt window.
+def prefill(cfg: ModelConfig, flat_params, prompts, pad_len,
+            use_pallas_attn: bool = False):
+    """Prompt-window prefill: per-layer prompt K/V plus the first logits.
 
-    Args:
-      prompts: [B, P] int32 left-padded prompts.
-      pad_len: [B] int32 (P - true prompt length).
-      seed:    int32 scalar (per-call fresh randomness, the legacy layout)
-               OR int32 [B] vector of PER-ROW seeds. With per-row seeds each
-               row's sampling stream is a pure function of its own seed —
-               independent of batch placement and of ``t_max`` (a longer cap
-               extends the stream with a bit-identical prefix), which is the
-               rollout scheduler's scheduling-invariance contract.
-      temp:    f32 scalar sampling temperature (behaviour logprobs are always
-               recorded at temperature 1.0 — the policy's own distribution).
-      early_exit: lower the decode loop as a `while` that stops as soon as
-        every row has emitted EOS (§Perf opt-1: rollouts whose longest
-        response is L cost O(L) decode steps instead of O(T)). Produces
-        bit-identical sampled prefixes to the fixed-trip scan because the
-        per-step key is fold_in(key, t).
-      t_max: response window cap (the bucketed ``generate_T<b>`` artifacts;
-        None = cfg.max_resp).
+    This is the per-prompt half of the prefill/decode split (the ``prefill``
+    artifact). Its output is bucket-independent — caches cover only the
+    prompt window [B, H, P, Hd] — so ONE prefill serves every decode bucket,
+    which is what lets the rollout engine's shared-prefix cache prefill each
+    prompt once and decode all G group siblings from the cached block.
 
-    Returns:
-      tokens [B, P+T] int32 (positions past each row's stop point stay PAD),
-      behaviour_lp [B, T] f32.
+    ``use_pallas_attn`` swaps the dense jnp attention for the L1 Pallas
+    prompt-window kernel (``kernels.attention.prefill_attention``) — the
+    ``prefill_pallas`` artifact, off the bit-identity path exactly like
+    ``score_pallas``.
+
+    Returns k_0..k_{L-1}, v_0..v_{L-1} ([B, H, P, Hd] each), then
+    logits0 [B, V] (the distribution predicting position P).
     """
     p = _unflatten(cfg, flat_params)
     B, P = prompts.shape
-    T = cfg.max_resp if t_max is None else t_max
-    S = P + T
     h, hd, L = cfg.n_heads, cfg.head_dim, cfg.n_layers
-
-    # ---- Prefill over the prompt window, building full-size caches.
     x = p["embed"][prompts]
     positions = jnp.broadcast_to(jnp.arange(P)[None, :], (B, P))
-    k_caches, v_caches = [], []
+    ks, vs = [], []
     for l in range(L):
         pre = f"layer{l}."
         xn = _rmsnorm(x, p[pre + "attn_norm"], cfg.norm_eps)
@@ -357,18 +344,56 @@ def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
         v = (xn @ p[pre + "wv"]).reshape(B, P, h, hd).transpose(0, 2, 1, 3)
         q = _rope(q, positions[:, None, :], cfg.rope_theta)
         k = _rope(k, positions[:, None, :], cfg.rope_theta)
-        o = _attention_dense(q, k, v, pad_len)
+        if use_pallas_attn:
+            o = prefill_attention(q, k, v, pad_len)
+        else:
+            o = _attention_dense(q, k, v, pad_len)
         o = o.transpose(0, 2, 1, 3).reshape(B, P, cfg.d_model)
         x = x + o @ p[pre + "wo"]
         xn = _rmsnorm(x, p[pre + "mlp_norm"], cfg.norm_eps)
         gate = jax.nn.silu(xn @ p[pre + "w_gate"])
         x = x + (gate * (xn @ p[pre + "w_up"])) @ p[pre + "w_down"]
-        kc = jnp.zeros((B, h, S, hd), jnp.float32).at[:, :, :P, :].set(k)
-        vc = jnp.zeros((B, h, S, hd), jnp.float32).at[:, :, :P, :].set(v)
-        k_caches.append(kc)
-        v_caches.append(vc)
+        ks.append(k)
+        vs.append(v)
     xn = _rmsnorm(x, p["final_norm"], cfg.norm_eps)
     logits0 = (xn @ p["head"])[:, -1, :]  # predicts position P
+    return tuple(ks) + tuple(vs) + (logits0,)
+
+
+def decode_from_kv(cfg: ModelConfig, flat_params, prompts, pad_len,
+                   k_prompt, v_prompt, logits0, seed, temp,
+                   early_exit: bool = True, t_max=None):
+    """KV-consuming decode: the ``decode_T<b>`` artifact family.
+
+    Resumes sampling from a prefilled prompt block — ``k_prompt``/``v_prompt``
+    are the per-layer [B, H, P, Hd] caches and ``logits0`` the [B, V] first
+    distribution, exactly as ``prefill`` returns them. The decode loop is the
+    same code ``generate`` runs, so for any prompt block produced by
+    ``prefill`` on the same parameters, decode-from-KV is bit-identical to
+    the fused call (the prefix cache's determinism contract).
+
+    Args:
+      prompts: [B, P] int32 left-padded prompts (copied into the token
+        buffer; attention reads the caches, not the prompt).
+      pad_len: [B] int32 (P - true prompt length).
+      seed:    int32 scalar OR int32 [B] per-row seeds (see ``generate``).
+      temp:    f32 scalar sampling temperature.
+      early_exit / t_max: as in ``generate``.
+
+    Returns:
+      tokens [B, P+T] int32, behaviour_lp [B, T] f32.
+    """
+    p = _unflatten(cfg, flat_params)
+    B, P = prompts.shape
+    T = cfg.max_resp if t_max is None else t_max
+    S = P + T
+    h, hd, L = cfg.n_heads, cfg.head_dim, cfg.n_layers
+
+    # Widen the prompt-window caches into the bucket's full-size buffers.
+    k_caches = [jnp.zeros((B, h, S, hd), jnp.float32).at[:, :, :P, :].set(k)
+                for k in k_prompt]
+    v_caches = [jnp.zeros((B, h, S, hd), jnp.float32).at[:, :, :P, :].set(v)
+                for v in v_prompt]
 
     per_row = jnp.ndim(seed) == 1
     if per_row:
@@ -445,6 +470,111 @@ def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
     _, _, lps, carry = jax.lax.while_loop(
         cond, body, (jnp.int32(0), done0, lps0, carry0))
     return carry[3], lps
+
+
+def generate(cfg: ModelConfig, flat_params, prompts, pad_len, seed, temp,
+             early_exit: bool = True, t_max=None):
+    """Sample up to ``t_max or cfg.max_resp`` tokens after the prompt window.
+
+    Composed as ``prefill`` followed by ``decode_from_kv`` — the fused
+    artifact and the split prefill/decode pair therefore share every op, so
+    routing a row through the prefix cache can never change its tokens.
+
+    Args:
+      prompts: [B, P] int32 left-padded prompts.
+      pad_len: [B] int32 (P - true prompt length).
+      seed:    int32 scalar (per-call fresh randomness, the legacy layout)
+               OR int32 [B] vector of PER-ROW seeds. With per-row seeds each
+               row's sampling stream is a pure function of its own seed —
+               independent of batch placement and of ``t_max`` (a longer cap
+               extends the stream with a bit-identical prefix), which is the
+               rollout scheduler's scheduling-invariance contract.
+      temp:    f32 scalar sampling temperature (behaviour logprobs are always
+               recorded at temperature 1.0 — the policy's own distribution).
+      early_exit: lower the decode loop as a `while` that stops as soon as
+        every row has emitted EOS (§Perf opt-1: rollouts whose longest
+        response is L cost O(L) decode steps instead of O(T)). Produces
+        bit-identical sampled prefixes to the fixed-trip scan because the
+        per-step key is fold_in(key, t).
+      t_max: response window cap (the bucketed ``generate_T<b>`` artifacts;
+        None = cfg.max_resp).
+
+    Returns:
+      tokens [B, P+T] int32 (positions past each row's stop point stay PAD),
+      behaviour_lp [B, T] f32.
+    """
+    out = prefill(cfg, flat_params, prompts, pad_len)
+    L = cfg.n_layers
+    return decode_from_kv(cfg, flat_params, prompts, pad_len,
+                          out[:L], out[L:2 * L], out[2 * L], seed, temp,
+                          early_exit, t_max)
+
+
+def kv_flat_width(cfg: ModelConfig) -> int:
+    """Per-row width of the flattened prefill block (see ``kv_flatten``)."""
+    return (cfg.n_layers * 2 * cfg.n_heads * cfg.prompt_len * cfg.head_dim
+            + cfg.vocab)
+
+
+def kv_flatten(cfg: ModelConfig, out):
+    """Pack a ``prefill`` output tuple into one [B, W] f32 row per prompt.
+
+    Row layout (W = ``kv_flat_width``): per layer K then V, each
+    [H, P, Hd] row-major — i.e. [layers, 2, heads, P, head_dim] — followed
+    by logits0 [V]. The Rust runtime treats the row as an opaque blob
+    (``KvBlock.kv``): it caches, concatenates, and hands it back to the
+    decode artifact without inspecting the layout, so flatten and split
+    only have to agree with each other.
+    """
+    L = cfg.n_layers
+    ks, vs, logits0 = out[:L], out[L:2 * L], out[2 * L]
+    B = logits0.shape[0]
+    parts = []
+    for k, v in zip(ks, vs):
+        parts.append(k.reshape(B, -1))
+        parts.append(v.reshape(B, -1))
+    parts.append(logits0)
+    return jnp.concatenate(parts, axis=1)
+
+
+def kv_split(cfg: ModelConfig, prompt_len: int, kv_flat):
+    """Inverse of ``kv_flatten``: [B, W] -> (k list, v list, logits0)."""
+    B = kv_flat.shape[0]
+    h, hd, L, P = cfg.n_heads, cfg.head_dim, cfg.n_layers, prompt_len
+    sz = h * P * hd
+    ks, vs = [], []
+    for l in range(L):
+        base = l * 2 * sz
+        ks.append(kv_flat[:, base:base + sz].reshape(B, h, P, hd))
+        vs.append(kv_flat[:, base + sz:base + 2 * sz].reshape(B, h, P, hd))
+    logits0 = kv_flat[:, 2 * L * sz:]
+    return ks, vs, logits0
+
+
+def prefill_flat(cfg: ModelConfig, flat_params, prompts, pad_len,
+                 use_pallas_attn: bool = False):
+    """Single-output prefill: the ``prefill`` artifact ABI.
+
+    ``Runtime::prefill`` expects exactly ONE output whose flattened f32
+    vector is the cacheable per-prompt block, so the artifact lowers this
+    wrapper (at B=1) rather than the tuple-returning ``prefill``.
+    """
+    return kv_flatten(
+        cfg, prefill(cfg, flat_params, prompts, pad_len, use_pallas_attn))
+
+
+def decode_from_flat_kv(cfg: ModelConfig, flat_params, prompts, pad_len,
+                        kv_flat, seeds, temp, t_max):
+    """Bucketed decode from flat blocks: the ``decode_T<b>`` artifact ABI.
+
+    ``kv_flat`` is [B, W] — one ``prefill_flat`` row per batch row, exactly
+    as the Rust runtime concatenates cached ``KvBlock.kv`` blobs. Delegates
+    to ``decode_from_kv`` after ``kv_split``, so it inherits the
+    bit-identity-with-fused-generate contract.
+    """
+    ks, vs, logits0 = kv_split(cfg, prompts.shape[1], kv_flat)
+    return decode_from_kv(cfg, flat_params, prompts, pad_len, ks, vs,
+                          logits0, seeds, temp, True, t_max=t_max)
 
 
 # --------------------------------------------------------------------------

@@ -37,6 +37,8 @@ class TestLowering:
         for name, lowered in [
             ("generate", aot.lower_generate(CFG)),
             ("generate_bucket", aot.lower_generate_bucket(CFG, CFG.buckets[0])),
+            ("prefill", aot.lower_prefill(CFG)),
+            ("decode_bucket", aot.lower_decode_bucket(CFG, CFG.buckets[0])),
             ("score", aot.lower_score(CFG, CFG.buckets[-1])),
             ("grad", aot.lower_grad(CFG, CFG.buckets[0])),
             ("grad_compact", aot.lower_grad_compact(CFG, CFG.buckets[0])),
@@ -68,6 +70,18 @@ class TestLowering:
         text = aot.to_hlo_text(lowered)
         n = len(M.param_spec(CFG))
         assert _entry_param_count(text) == 4 * n + 2
+
+    def test_prefill_artifact_parameter_count(self):
+        """params + (prompt [1,P], pad [1]): the per-prompt B=1 ABI
+        ``Runtime::prefill`` drives once per cache miss."""
+        text = aot.to_hlo_text(aot.lower_prefill(CFG))
+        assert _entry_param_count(text) == len(M.param_spec(CFG)) + 2
+
+    def test_decode_artifact_parameter_count(self):
+        """params + (prompts, pads, kv, seeds, temp): generate_bucket's
+        arity + 1 for the flat KV matrix ``generate_bucketed_kv`` sends."""
+        text = aot.to_hlo_text(aot.lower_decode_bucket(CFG, CFG.buckets[0]))
+        assert _entry_param_count(text) == len(M.param_spec(CFG)) + 5
 
 
 class TestManifest:
@@ -127,6 +141,16 @@ class TestManifest:
         assert str(CFG.max_resp) in gb
         assert gb[str(CFG.max_resp)] == f"generate_T{CFG.max_resp}.hlo.txt"
 
+    def test_prefill_decode_split_is_paired_and_covers_buckets(self):
+        """Mirrors the Rust manifest validation: prefill and decode_buckets
+        present together, decode keys == config buckets (top included)."""
+        man = aot.build_manifest(CFG)
+        arts = man["artifacts"]
+        assert arts["prefill"] == "prefill.hlo.txt"
+        db = arts["decode_buckets"]
+        assert sorted(int(b) for b in db) == sorted(CFG.buckets)
+        assert db[str(CFG.max_resp)] == f"decode_T{CFG.max_resp}.hlo.txt"
+
 
 class TestBuiltArtifacts:
     """Validate the on-disk artifact set if `make artifacts` has run."""
@@ -151,6 +175,10 @@ class TestBuiltArtifacts:
         files += list(arts["grad"].values()) + list(arts["score"].values())
         files += list(arts.get("grad_rows", {}).values())
         files += list(arts.get("grad_compact", {}).values())
+        # the split family (absent from manifests built before it existed)
+        files += list(arts.get("decode_buckets", {}).values())
+        if "prefill" in arts:
+            files.append(arts["prefill"])
         for f in files:
             path = os.path.join(self.ART, f)
             assert os.path.exists(path), f

@@ -164,6 +164,63 @@ class TestGenerate:
         np.testing.assert_array_equal(t1, t2)  # seed-independent at temp->0
 
 
+class TestPrefillDecodeSplit:
+    """The split-rollout artifacts' contract with the fused generate."""
+
+    def test_flat_blocks_decode_bit_identical_to_generate(self, params):
+        """Per-prompt B=1 prefill rows, concatenated and decoded as a
+        batch, must reproduce the fused batch generate exactly — the
+        determinism contract the Rust shared-prefix cache rides on (cache
+        on/off can change cost, never output). This mirrors the artifact
+        path end to end: ``Runtime::prefill`` runs the B=1 prefill per
+        cache miss; ``generate_bucketed_kv`` concatenates the cached rows
+        and drives ``decode_T<b>``."""
+        B, P = CFG.batch_rollout, CFG.prompt_len
+        prompts, pad = _prompts(B, seed=11)
+        seeds = jnp.arange(21, 21 + B, dtype=jnp.int32)
+        cap = CFG.buckets[0]
+        rows = [M.prefill_flat(CFG, params, prompts[i:i + 1], pad[i:i + 1])
+                for i in range(B)]
+        kv_flat = jnp.concatenate(rows, axis=0)
+        t1, l1 = M.decode_from_flat_kv(CFG, params, prompts, pad, kv_flat,
+                                       seeds, jnp.float32(1.0), cap)
+        t2, l2 = M.generate(CFG, params, prompts, pad, seeds,
+                            jnp.float32(1.0), t_max=cap)
+        np.testing.assert_array_equal(t1, t2)
+        np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-7)
+
+    def test_kv_flatten_split_roundtrip(self, params):
+        prompts, pad = _prompts(2, seed=12)
+        out = M.prefill(CFG, params, prompts, pad)
+        flat = M.kv_flatten(CFG, out)
+        assert flat.shape == (2, M.kv_flat_width(CFG))
+        ks, vs, logits0 = M.kv_split(CFG, CFG.prompt_len, flat)
+        L = CFG.n_layers
+        for a, b in zip(ks, out[:L]):
+            np.testing.assert_array_equal(a, b)
+        for a, b in zip(vs, out[L:2 * L]):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(logits0, out[2 * L])
+
+    def test_pallas_prefill_matches_dense(self, params):
+        """The prefill_pallas variant, like score_pallas: kernel-tolerance
+        agreement with the dense path on REAL positions (pad-position K/V
+        are never attended to — valid keys satisfy k_pos >= pad)."""
+        prompts, pad = _prompts(2, seed=13)
+        dense = M.prefill(CFG, params, prompts, pad)
+        pallas = M.prefill(CFG, params, prompts, pad, use_pallas_attn=True)
+        L = CFG.n_layers
+        valid = (np.arange(CFG.prompt_len)[None, :]
+                 >= np.asarray(pad)[:, None])
+        m = valid[:, None, :, None]  # broadcast over [B, H, P, Hd]
+        for a, b in zip(pallas[:2 * L], dense[:2 * L]):
+            np.testing.assert_allclose(np.where(m, np.asarray(a), 0),
+                                       np.where(m, np.asarray(b), 0),
+                                       rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(pallas[2 * L], dense[2 * L],
+                                   rtol=2e-4, atol=2e-4)
+
+
 class TestNatGrad:
     def _grad_inputs(self, bucket, seed=0):
         rng = np.random.default_rng(seed)

@@ -22,6 +22,7 @@ use nat_rl::coordinator::batcher::{
     allocated_tokens, compact_stats, compaction_workload as w, pack_budget, pack_budget_with,
     split_zero_contribution,
 };
+use nat_rl::coordinator::rollout::scheduler::SchedStats;
 use nat_rl::coordinator::rollout::RolloutSeq;
 use nat_rl::coordinator::trainer::{learn_stage, StepStats};
 use nat_rl::obs::Tracer;
@@ -54,6 +55,7 @@ fn step_with(rt: &Runtime, method: Method, compact: bool, seqs: &[RolloutSeq]) -
         &mut rng_mask,
         1,
         seqs,
+        &SchedStats::default(),
         &Tracer::off(),
     )
     .unwrap()

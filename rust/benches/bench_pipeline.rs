@@ -56,7 +56,7 @@ fn sim_pipelined(workers: usize, max_staleness: u64) -> u64 {
         0,
         SIM_STEPS,
         0u64,
-        |k, _snap: &u64| Ok(spin(ROLLOUT_UNITS).wrapping_add(k)),
+        |k, _version, _snap: &u64| Ok(spin(ROLLOUT_UNITS).wrapping_add(k)),
         |_meta, g: u64| {
             acc ^= g;
             acc ^= spin(LEARN_UNITS);

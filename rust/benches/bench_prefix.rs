@@ -1,0 +1,150 @@
+//! Shared-prefix prefill cache bench: fused prefill-per-row vs
+//! prefill-once-per-prompt with KV-consuming bucketed decode.
+//!
+//! Runs the GRPO-shaped default workload (`sim_workload::grouped_slots`,
+//! G=8: 8 group siblings per prompt) through the real scheduler twice —
+//! uncached (every generate call re-prefills its whole `B × P` window) and
+//! with the prefix cache on — and compares prefill token-steps. This is the
+//! acceptance metric: the cached engine must pay >= 60% fewer prefill
+//! token-steps at G=8 (the tier-1 test
+//! `cached_run_cuts_prefill_steps_over_60pct_at_g8` gates the same
+//! workload, so this record and CI can never disagree about the claim).
+//! Outputs are asserted byte-identical on both paths before any number is
+//! reported. Results land in `BENCH_prefix.json`.
+
+use std::time::Instant;
+
+use nat_rl::coordinator::rollout::scheduler::{sim_workload, RolloutScheduler, SchedStats, SlotOut};
+use nat_rl::util::bench::{write_record, Bench};
+use nat_rl::util::json::{arr_f64, obj, Json};
+
+const G: usize = 8;
+const CACHE_BYTES: usize = 64 << 20;
+
+/// One full multi-step run of the grouped workload; the snapshot version
+/// advances with the step exactly as in serial training.
+fn run_engine(sched: &RolloutScheduler) -> (Vec<Vec<SlotOut>>, SchedStats) {
+    let backend = sim_workload::backend();
+    let encoded = sim_workload::prompts();
+    let mut outs = Vec::new();
+    let mut total = SchedStats::default();
+    for step in 0..sim_workload::STEPS {
+        let slots = sim_workload::grouped_slots(step, G);
+        let (o, stats) = sched.run(&backend, &encoded, &slots, 1.0, step).unwrap();
+        outs.push(o);
+        total.calls += stats.calls;
+        total.decode_token_steps += stats.decode_token_steps;
+        total.escalations += stats.escalations;
+        total.padded_rows += stats.padded_rows;
+        total.prefill_token_steps += stats.prefill_token_steps;
+        total.prefill_hits += stats.prefill_hits;
+        total.prefill_lookups += stats.prefill_lookups;
+        total.prefill_steps_saved += stats.prefill_steps_saved;
+        total.cache_bytes = total.cache_bytes.max(stats.cache_bytes);
+    }
+    (outs, total)
+}
+
+fn canon(outs: &[Vec<SlotOut>]) -> Vec<(usize, usize, Vec<i32>, Vec<u32>)> {
+    let mut v: Vec<_> = outs
+        .iter()
+        .enumerate()
+        .flat_map(|(s, os)| {
+            os.iter().map(move |o| {
+                (
+                    s * sim_workload::SLOTS_PER_STEP + o.flat_id,
+                    o.resp_len,
+                    o.tokens.clone(),
+                    o.lp.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                )
+            })
+        })
+        .collect();
+    v.sort();
+    v
+}
+
+fn main() {
+    let mut b = Bench::new("prefix").slow();
+    b.iter("sim/uncached/schedule", || run_engine(&RolloutScheduler::new(128)));
+    b.iter("sim/prefix_cache/schedule", || {
+        run_engine(&RolloutScheduler::with_cache(128, CACHE_BYTES))
+    });
+
+    let t0 = Instant::now();
+    let (base_outs, base) = run_engine(&RolloutScheduler::new(128));
+    let base_wall_s = t0.elapsed().as_secs_f64();
+    let cached_sched = RolloutScheduler::with_cache(128, CACHE_BYTES);
+    let t1 = Instant::now();
+    let (opt_outs, opt) = run_engine(&cached_sched);
+    let opt_wall_s = t1.elapsed().as_secs_f64();
+
+    // Bit-identity first: a saving measured on diverging outputs is void.
+    assert_eq!(canon(&base_outs), canon(&opt_outs), "cache on/off rollouts diverged");
+    assert_eq!(
+        base.decode_token_steps, opt.decode_token_steps,
+        "the cache must not change decode scheduling"
+    );
+
+    let saving = 1.0 - opt.prefill_token_steps as f64 / base.prefill_token_steps as f64;
+    let hit_rate = opt.prefill_hits as f64 / opt.prefill_lookups.max(1) as f64;
+    println!(
+        "sim prefill-token-steps at G={G}: fused {} | prefix cache {} | saving {:.1}% \
+         (hit rate {:.1}%, {} steps saved, peak cache {} B)",
+        base.prefill_token_steps,
+        opt.prefill_token_steps,
+        100.0 * saving,
+        100.0 * hit_rate,
+        opt.prefill_steps_saved,
+        opt.cache_bytes,
+    );
+    assert!(
+        saving >= 0.60,
+        "acceptance: the prefix cache must cut prefill token-steps >= 60% at G={G} \
+         on the default workload (got {:.1}%)",
+        100.0 * saving
+    );
+    assert!(
+        hit_rate > 0.5,
+        "acceptance: group siblings must mostly hit (hit rate {:.1}%)",
+        100.0 * hit_rate
+    );
+
+    let side = |s: &SchedStats, wall_s: f64| {
+        obj(vec![
+            ("calls", Json::Num(s.calls as f64)),
+            ("prefill_token_steps", Json::Num(s.prefill_token_steps as f64)),
+            ("prefill_hits", Json::Num(s.prefill_hits as f64)),
+            ("prefill_lookups", Json::Num(s.prefill_lookups as f64)),
+            ("prefill_steps_saved", Json::Num(s.prefill_steps_saved as f64)),
+            ("decode_token_steps", Json::Num(s.decode_token_steps as f64)),
+            ("cache_bytes", Json::Num(s.cache_bytes as f64)),
+            ("wall_s", Json::Num(wall_s)),
+        ])
+    };
+    let record = obj(vec![
+        ("bench", Json::Str("prefix".into())),
+        (
+            "workload",
+            obj(vec![
+                ("batch", Json::Num(sim_workload::BATCH as f64)),
+                ("prompt_len", Json::Num(sim_workload::PROMPT_LEN as f64)),
+                (
+                    "buckets",
+                    arr_f64(&sim_workload::BUCKETS.iter().map(|&b| b as f64).collect::<Vec<_>>()),
+                ),
+                ("group_size", Json::Num(G as f64)),
+                ("slots_per_step", Json::Num(sim_workload::SLOTS_PER_STEP as f64)),
+                ("steps", Json::Num(sim_workload::STEPS as f64)),
+                ("cache_bytes", Json::Num(CACHE_BYTES as f64)),
+            ]),
+        ),
+        ("fused", side(&base, base_wall_s)),
+        ("prefix_cache", side(&opt, opt_wall_s)),
+        ("prefill_step_saving", Json::Num(saving)),
+        ("hit_rate", Json::Num(hit_rate)),
+    ]);
+    let path = write_record("prefix", &record).unwrap();
+    println!("wrote {path}");
+    b.report();
+}

@@ -32,7 +32,7 @@ fn run_bucketed() -> SchedStats {
     let mut total = SchedStats::default();
     for step in 0..sim_workload::STEPS {
         let slots = sim_workload::slots(step);
-        let (_, stats) = sched.run(&backend, &encoded, &slots, 1.0).unwrap();
+        let (_, stats) = sched.run(&backend, &encoded, &slots, 1.0, step).unwrap();
         total.calls += stats.calls;
         total.decode_token_steps += stats.decode_token_steps;
         total.escalations += stats.escalations;
@@ -51,6 +51,7 @@ fn fixed_stats() -> SchedStats {
         escalations: 0,
         padded_rows: (calls_per_step * sim_workload::BATCH - sim_workload::SLOTS_PER_STEP)
             * sim_workload::STEPS as usize,
+        ..SchedStats::default()
     }
 }
 

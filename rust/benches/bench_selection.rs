@@ -21,6 +21,7 @@
 //!   selected, never the step's observable structure.
 
 use nat_rl::config::{BudgetMode, Method, RunConfig};
+use nat_rl::coordinator::rollout::scheduler::SchedStats;
 use nat_rl::coordinator::selection::{self, bench_workload, HtMoments, SelectionPlan};
 use nat_rl::coordinator::trainer::{learn_stage, StepStats};
 use nat_rl::obs::Tracer;
@@ -182,6 +183,7 @@ fn step_with(
         &mut rng_mask,
         1,
         seqs,
+        &SchedStats::default(),
         &Tracer::off(),
     )
     .unwrap()

@@ -52,7 +52,7 @@ pub fn registry() -> &'static [Rule] {
             id: "R1",
             slug: "unordered-iter",
             summary: "HashMap/HashSet in a bit-identity-scoped module \
-                      (batcher, selection, shard, ledger)",
+                      (batcher, selection, prefix_cache, shard, ledger)",
             check: r1_unordered_iter,
         },
         Rule {
@@ -92,8 +92,13 @@ pub fn registry() -> &'static [Rule] {
 /// Modules where unordered-container iteration breaks `shards=K ≡ serial`
 /// bit-identity (packing order, selection order, reduction order, ledger
 /// aggregation order all feed golden traces).
-const R1_SCOPE: &[&str] =
-    &["coordinator::batcher", "coordinator::selection", "runtime::shard", "obs::ledger"];
+const R1_SCOPE: &[&str] = &[
+    "coordinator::batcher",
+    "coordinator::selection",
+    "coordinator::rollout::prefix_cache",
+    "runtime::shard",
+    "obs::ledger",
+];
 
 /// Modules allowed to read wall clocks: the Tracer gate lives in `obs` and
 /// the bench harness exists to time things.

@@ -163,11 +163,21 @@ pub struct RolloutCfg {
     /// Engine selection. `Bucketed` (default) falls back to the fixed path
     /// when the artifact set predates the `generate_buckets` grid.
     pub engine: RolloutEngine,
+    /// Shared-prefix prefill cache (default on): prefill each distinct
+    /// `(param version, prompt)` once and decode group siblings from the
+    /// cached KV block. Requires the manifest's prefill/decode split —
+    /// without it the scheduler silently keeps fused generate. Cache on/off
+    /// is bit-identical by contract; only cost changes.
+    pub prefix_cache: bool,
+    /// Prefix-cache byte budget in MiB (LRU-evicted above it). 0 is legal:
+    /// every entry is oversized and the engine degrades to per-call
+    /// prefill.
+    pub cache_mb: usize,
 }
 
 impl Default for RolloutCfg {
     fn default() -> Self {
-        RolloutCfg { engine: RolloutEngine::Bucketed }
+        RolloutCfg { engine: RolloutEngine::Bucketed, prefix_cache: true, cache_mb: 64 }
     }
 }
 
@@ -477,6 +487,10 @@ impl RunConfig {
         if let Some(name) = get("rollout", "engine").and_then(Json::as_str) {
             cfg.rollout.engine = RolloutEngine::parse(name)?;
         }
+        if let Some(b) = get("rollout", "prefix_cache").and_then(Json::as_bool) {
+            cfg.rollout.prefix_cache = b;
+        }
+        setnum!("rollout", "cache_mb", cfg.rollout.cache_mb, usize);
         if let Some(name) = get("train", "packer").and_then(Json::as_str) {
             cfg.train.packer = Packer::parse(name)?;
         }
@@ -611,6 +625,14 @@ impl RunConfig {
                 }
             }
             "rollout.engine" => self.rollout.engine = RolloutEngine::parse(value)?,
+            "rollout.prefix_cache" => {
+                self.rollout.prefix_cache = match value {
+                    "true" | "1" | "on" => true,
+                    "false" | "0" | "off" => false,
+                    other => bail!("--rollout.prefix_cache '{other}' (true|false)"),
+                }
+            }
+            "rollout.cache_mb" => self.rollout.cache_mb = value.parse()?,
             "train.packer" => self.train.packer = Packer::parse(value)?,
             "train.budget_mode" => self.train.budget_mode = BudgetMode::parse(value)?,
             "train.token_budget" => self.train.token_budget = value.parse()?,
@@ -737,6 +759,12 @@ impl RunConfig {
                     self.method.label()
                 );
             }
+        }
+        // cache_mb = 0 is legal (graceful degrade to uncached prefill);
+        // only absurd budgets are rejected — 64 GiB already exceeds any
+        // host this runs on and catches unit mistakes (bytes vs MiB).
+        if self.rollout.cache_mb > 65536 {
+            bail!("rollout.cache_mb {} is over the 65536 MiB cap", self.rollout.cache_mb);
         }
         if !(0.0..=0.5).contains(&self.train.pi_floor) {
             bail!(
@@ -1097,8 +1125,12 @@ mod tests {
     #[test]
     fn rollout_engine_overrides_and_parsing() {
         let mut cfg = RunConfig::default();
-        // bucketed scheduling is the default; fixed remains the parity mode
-        assert_eq!(cfg.rollout, RolloutCfg { engine: RolloutEngine::Bucketed });
+        // bucketed scheduling + prefix cache on are the defaults; fixed
+        // remains the parity mode
+        assert_eq!(
+            cfg.rollout,
+            RolloutCfg { engine: RolloutEngine::Bucketed, prefix_cache: true, cache_mb: 64 }
+        );
         cfg.set("rollout.engine", "fixed").unwrap();
         assert_eq!(cfg.rollout.engine, RolloutEngine::Fixed);
         cfg.set("rollout.engine", "bucketed").unwrap();
@@ -1109,13 +1141,37 @@ mod tests {
     }
 
     #[test]
+    fn rollout_prefix_cache_flags() {
+        let mut cfg = RunConfig::default();
+        cfg.set("rollout.prefix_cache", "off").unwrap();
+        assert!(!cfg.rollout.prefix_cache);
+        cfg.set("rollout.prefix_cache", "true").unwrap();
+        assert!(cfg.rollout.prefix_cache);
+        assert!(cfg.set("rollout.prefix_cache", "maybe").is_err());
+        cfg.set("rollout.cache_mb", "128").unwrap();
+        assert_eq!(cfg.rollout.cache_mb, 128);
+        assert!(cfg.set("rollout.cache_mb", "lots").is_err());
+        // 0 is valid (graceful degrade); absurd budgets are not
+        cfg.set("rollout.cache_mb", "0").unwrap();
+        cfg.validate().unwrap();
+        cfg.set("rollout.cache_mb", "70000").unwrap();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn rollout_section_from_file() {
         let dir = std::env::temp_dir().join("nat_rl_cfg_rollout_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("r.toml");
-        std::fs::write(&path, "[rollout]\nengine = \"fixed\"\n").unwrap();
+        std::fs::write(
+            &path,
+            "[rollout]\nengine = \"fixed\"\nprefix_cache = false\ncache_mb = 16\n",
+        )
+        .unwrap();
         let cfg = RunConfig::from_file(&path).unwrap();
         assert_eq!(cfg.rollout.engine, RolloutEngine::Fixed);
+        assert!(!cfg.rollout.prefix_cache);
+        assert_eq!(cfg.rollout.cache_mb, 16);
         let _ = std::fs::remove_dir_all(dir);
     }
 

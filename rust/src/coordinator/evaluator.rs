@@ -40,7 +40,10 @@ pub struct EvalResult {
 /// Count correct completions for every task with k samples each. `sched`
 /// selects the engine: Some(_) runs the bucketed scheduler (falling back to
 /// the fixed path when the artifact set has no `generate_buckets` grid);
-/// None replays the legacy fixed loop exactly.
+/// None replays the legacy fixed loop exactly. `param_version` names the
+/// snapshot behind `params` for the scheduler's prefix cache; eval prompts
+/// repeat each task k times, so the cache collapses their prefills too.
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate(
     rt: &Runtime,
     params: &ParamStore,
@@ -50,6 +53,7 @@ pub fn evaluate(
     temp: f32,
     rng: &mut Rng,
     sched: Option<&RolloutScheduler>,
+    param_version: u64,
 ) -> Result<EvalResult> {
     let d = &rt.manifest.dims;
     let n = eval.tasks.len();
@@ -70,7 +74,7 @@ pub fn evaluate(
             .map(|f| SlotSpec { flat_id: f, prompt_idx: f / k, seed: rng.next_i32_seed() })
             .collect();
         let backend = RuntimeBackend { rt, params };
-        sched.expect("use_bucketed").run(&backend, &encoded, &specs, temp)?.0
+        sched.expect("use_bucketed").run(&backend, &encoded, &specs, temp, param_version)?.0
     } else {
         let prompt_idx: Vec<usize> = (0..total).map(|f| f / k).collect();
         run_slots_fixed(
@@ -110,6 +114,7 @@ pub fn evaluate(
 }
 
 /// Evaluate all three benchmark tiers.
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate_all_tiers(
     rt: &Runtime,
     params: &ParamStore,
@@ -118,6 +123,7 @@ pub fn evaluate_all_tiers(
     temp: f32,
     seed: u64,
     sched: Option<&RolloutScheduler>,
+    param_version: u64,
 ) -> Result<Vec<EvalResult>> {
     let tok = Tokenizer::new();
     let mut rng = xor_stream(seed, 0xEAA1);
@@ -125,7 +131,7 @@ pub fn evaluate_all_tiers(
         .iter()
         .map(|&tier| {
             let set = EvalSet::build(tier, tasks_per_tier, 1234);
-            evaluate(rt, params, &tok, &set, k, temp, &mut rng, sched)
+            evaluate(rt, params, &tok, &set, k, temp, &mut rng, sched, param_version)
         })
         .collect()
 }

@@ -69,8 +69,10 @@ impl GroupMeta {
 
 /// Run steps `start..end` through the pipeline.
 ///
-/// * `produce(step, &snapshot)` runs on worker threads; the snapshot is
-///   guaranteed to satisfy `version >= max(start, step - max_staleness)`.
+/// * `produce(step, version, &snapshot)` runs on worker threads; the
+///   snapshot is guaranteed to satisfy
+///   `version >= max(start, step - max_staleness)`, and `version` names it
+///   (so producers can key snapshot-scoped caches without hashing `S`).
 /// * `consume(&meta, group)` runs on the calling thread, strictly in step
 ///   order, and returns the snapshot to publish as `version = step + 1`.
 /// * `after_publish(&meta)` runs on the calling thread AFTER the snapshot
@@ -92,7 +94,7 @@ pub fn run<S, G, P, C, A>(
 where
     S: Send + Sync,
     G: Send,
-    P: Fn(u64, &S) -> Result<G> + Sync,
+    P: Fn(u64, u64, &S) -> Result<G> + Sync,
     C: FnMut(&GroupMeta, G) -> Result<S>,
     A: FnMut(&GroupMeta) -> Result<()>,
 {
@@ -124,7 +126,7 @@ where
                     let Ok((v, snap)) = board.wait_min(min_v) else { break };
                     // natlint: allow(wallclock, reason = "produce_s is a queue-health metric; no training output reads it")
                     let t0 = Instant::now();
-                    let res = produce(k, &snap);
+                    let res = produce(k, v, &snap);
                     let failed = res.is_err();
                     let meta = GroupMeta {
                         step: k,
@@ -218,7 +220,7 @@ mod tests {
             0,
             20,
             1u64,
-            |k, snap: &u64| Ok((k, *snap)),
+            |k, _v, snap: &u64| Ok((k, *snap)),
             |meta, (k, snap): (u64, u64)| {
                 assert_eq!(meta.step, k);
                 assert_eq!(meta.behaviour_version, k, "staleness 0 must be on-policy");
@@ -244,7 +246,10 @@ mod tests {
             5,
             60,
             0u64,
-            |k, _snap: &u64| Ok(k),
+            |k, v, _snap: &u64| {
+                assert!(v <= k, "snapshot version cannot be from the future");
+                Ok(k)
+            },
             |meta, k: u64| {
                 assert_eq!(k, next_expected, "groups must arrive in step order");
                 assert!(meta.behaviour_version <= meta.step);
@@ -272,7 +277,7 @@ mod tests {
             0,
             100,
             0u64,
-            |k, _snap: &u64| {
+            |k, _v, _snap: &u64| {
                 if k == 7 {
                     Err(anyhow!("rollout worker exploded at step {k}"))
                 } else {
@@ -293,7 +298,7 @@ mod tests {
             0,
             100,
             0u64,
-            |k, _snap: &u64| Ok(k),
+            |k, _v, _snap: &u64| Ok(k),
             |_meta, k: u64| {
                 if k == 5 {
                     Err(anyhow!("learner rejected step {k}"))
@@ -315,7 +320,7 @@ mod tests {
             3,
             3,
             0u64,
-            |_, _: &u64| Ok(()),
+            |_, _, _: &u64| Ok(()),
             |_, _: ()| Ok(0u64),
             |_| Ok(()),
         )
@@ -329,7 +334,7 @@ mod tests {
             10,
             14,
             0u64,
-            |k, _: &u64| Ok(k),
+            |k, _v, _: &u64| Ok(k),
             |meta, k: u64| {
                 assert!(meta.behaviour_version >= 10);
                 steps.push(k);

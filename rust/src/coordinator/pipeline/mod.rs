@@ -102,8 +102,8 @@ impl<'rt> PipelineTrainer<'rt> {
             recorder: Recorder::new(),
             acc: GradAccum::zeros(rt.manifest.param_count),
             tuner: make_tuner(rt, &cfg),
-            sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
-            eval_sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
+            sched: RolloutScheduler::from_cfg(rt.manifest.dims.max_resp, &cfg.rollout),
+            eval_sched: RolloutScheduler::from_cfg(rt.manifest.dims.max_resp, &cfg.rollout),
             tracer: Tracer::off(),
             cfg,
             step: 0,
@@ -208,9 +208,13 @@ impl<'rt> PipelineTrainer<'rt> {
         });
         let init = state.borrow().params.clone();
 
-        let produce = |step: u64, snap: &ParamStore| -> Result<RolloutGroup> {
+        // `version` is the engine's snapshot version for `snap` — the prefix
+        // cache keys KV blocks by it, so groups rolled out against different
+        // published snapshots never share prefills while concurrent workers
+        // on the SAME snapshot do.
+        let produce = |step: u64, version: u64, snap: &ParamStore| -> Result<RolloutGroup> {
             let mut plan = plan_step(cfg, step);
-            rollout_stage(rt, snap, tok, cfg, sched, &mut plan, tracer)
+            rollout_stage(rt, snap, tok, cfg, sched, version, &mut plan, tracer)
         };
         let consume = |meta: &GroupMeta, group: RolloutGroup| -> Result<ParamStore> {
             let mut guard = state.borrow_mut();
@@ -237,6 +241,7 @@ impl<'rt> PipelineTrainer<'rt> {
                 &mut rng_mask,
                 meta.step + 1,
                 &group.seqs,
+                &group.sched_stats,
                 tracer,
             )?;
             // Learner throughput: wall-clock between consecutive applies

@@ -16,6 +16,7 @@
 //!   of padding, and overflow escalation. Output is a pure function of the
 //!   plan — bit-identical across batch composition and refill order.
 
+pub mod prefix_cache;
 pub mod scheduler;
 
 use anyhow::{bail, Result};
@@ -153,11 +154,17 @@ pub fn run_group_rollouts(
 /// Sample G completions per task with the bucketed continuous-batching
 /// engine. Per-slot seeds derive from `(run_seed, step, flat_id)`, so the
 /// returned sequences are a pure function of the plan — independent of the
-/// scheduler's routing, refill order, and worker count.
+/// scheduler's routing, refill order, worker count, and prefix-cache state.
+///
+/// `param_version` keys the scheduler's shared-prefix prefill cache: the
+/// pipeline passes the snapshot version the rollout runs against, the serial
+/// trainer passes the step, so KV blocks from retired snapshots can never
+/// serve a fresh lookup.
 ///
 /// Also returns the scheduler's [`scheduler::SchedStats`] so the trainer's
 /// `rollout` trace span can report generate calls, decode-token steps,
-/// escalations, and padded rows without a second bookkeeping path.
+/// escalations, padded rows, and prefix-cache accounting without a second
+/// bookkeeping path.
 pub fn run_group_rollouts_bucketed(
     rt: &Runtime,
     params: &ParamStore,
@@ -168,6 +175,7 @@ pub fn run_group_rollouts_bucketed(
     run_seed: u64,
     step: u64,
     sched: &RolloutScheduler,
+    param_version: u64,
 ) -> Result<(Vec<RolloutSeq>, scheduler::SchedStats)> {
     let d = &rt.manifest.dims;
     let encoded = encode_tasks(tok, tasks, d.prompt_len)?;
@@ -179,7 +187,7 @@ pub fn run_group_rollouts_bucketed(
         })
         .collect();
     let backend = RuntimeBackend { rt, params };
-    let (outs, stats) = sched.run(&backend, &encoded, &slots, temp)?;
+    let (outs, stats) = sched.run(&backend, &encoded, &slots, temp, param_version)?;
     Ok((finish_slots(outs, tok, tasks, g, d.prompt_len, &encoded), stats))
 }
 

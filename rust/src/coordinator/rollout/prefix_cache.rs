@@ -1,0 +1,452 @@
+//! Shared-prefix prefill cache: prefill each distinct `(param version,
+//! prompt)` once, decode every group sibling from the cached KV block.
+//!
+//! In GRPO every prompt is decoded G times — the group — and again on every
+//! refill round, escalation re-decode, tail-padding row, and eval pass. The
+//! prompt forward pass (prefill) is pure per-prompt work being paid per-row.
+//! This cache sits under the bucketed rollout scheduler and turns prefill
+//! into per-prompt work again: the first row to need a prompt under a given
+//! parameter snapshot builds its [`KvBlock`]; everyone else decodes from the
+//! shared, ref-counted (`Arc`) block.
+//!
+//! Contracts:
+//!
+//! * **Determinism.** The cache can change *cost*, never *output*: a
+//!   [`KvBlock`] is a pure function of `(params, prompt)` and decode-from-KV
+//!   is bit-identical to fused generate by construction, so cache on/off —
+//!   and any eviction schedule — produce byte-identical rollouts. All
+//!   internal state lives in `BTreeMap`s: iteration and eviction follow the
+//!   insertion-epoch order, never a hasher's (lint R1 covers this module).
+//! * **Keying.** Entries are keyed `(param_version, prompt_hash)`. A new
+//!   parameter snapshot changes the version half, so stale blocks can never
+//!   serve a fresh lookup; they are dropped by [`PrefixCache::evict_before`]
+//!   at snapshot turnover and by LRU pressure otherwise.
+//! * **Byte-budget LRU.** Ready entries are indexed by a monotonically
+//!   increasing touch epoch; when the resident bytes exceed the budget the
+//!   smallest epoch (least recently used) is evicted first. A block larger
+//!   than the whole budget — including the degenerate capacity-0 cache — is
+//!   served to the caller but never stored: graceful degrade to per-call
+//!   prefill, not an error.
+//! * **Single-flight.** Concurrent pipeline workers asking for the same key
+//!   never duplicate the prefill: the first caller installs a `Pending`
+//!   marker and builds outside the lock; everyone else blocks on a condvar
+//!   until the block is published (the check → lock → re-check → build →
+//!   publish idiom).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::runtime::KvBlock;
+
+/// FNV-1a over a left-padded prompt row plus its pad length — the prompt
+/// half of the cache key. Pure integer mixing: stable across runs and
+/// platforms, like every other key in the determinism contract.
+pub fn prompt_key(tokens: &[i32], pad: i32) -> u64 {
+    const PRIME: u64 = 0x100_0000_01B3;
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &t in tokens {
+        h = (h ^ t as u32 as u64).wrapping_mul(PRIME);
+    }
+    (h ^ pad as u32 as u64).wrapping_mul(PRIME)
+}
+
+/// Aggregate cache counters. `hits`/`misses`/`evictions` are monotonic over
+/// the cache's lifetime; `bytes`/`entries` are point-in-time gauges.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub bytes: usize,
+    pub entries: usize,
+}
+
+/// One cache slot: a block being built by some caller, or the published
+/// result (with its current recency epoch, mirrored in the LRU index).
+enum Slot {
+    Pending,
+    Ready { block: Arc<KvBlock>, epoch: u64 },
+}
+
+struct Inner {
+    /// `(param_version, prompt_hash)` → slot.
+    slots: BTreeMap<(u64, u64), Slot>,
+    /// Recency index: touch epoch → key. The smallest epoch is the LRU
+    /// victim; a hit re-inserts its entry under a fresh epoch. Only Ready
+    /// entries appear here (Pending holds no bytes and is never evicted).
+    lru: BTreeMap<u64, (u64, u64)>,
+    epoch: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// The cache. One instance lives inside each `RolloutScheduler`, shared by
+/// every pipeline worker that scheduler serves.
+pub struct PrefixCache {
+    inner: Mutex<Inner>,
+    ready: Condvar,
+    capacity: usize,
+}
+
+impl std::fmt::Debug for PrefixCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("PrefixCache")
+            .field("capacity", &self.capacity)
+            .field("stats", &s)
+            .finish()
+    }
+}
+
+impl PrefixCache {
+    pub fn new(capacity_bytes: usize) -> PrefixCache {
+        PrefixCache {
+            inner: Mutex::new(Inner {
+                slots: BTreeMap::new(),
+                lru: BTreeMap::new(),
+                epoch: 0,
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            ready: Condvar::new(),
+            capacity: capacity_bytes,
+        }
+    }
+
+    /// Byte budget this cache evicts down to.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Look up `(version, key)`; on a miss run `build` exactly once across
+    /// all concurrent callers (single-flight) and publish the result.
+    /// Returns the block and whether this call hit.
+    ///
+    /// A build error is returned to the caller that ran the build; waiters
+    /// wake, find the slot vacated, and retry the build themselves — an
+    /// error never wedges the key.
+    pub fn get_or_prefill<F>(
+        &self,
+        version: u64,
+        key: u64,
+        build: F,
+    ) -> Result<(Arc<KvBlock>, bool)>
+    where
+        F: FnOnce() -> Result<KvBlock>,
+    {
+        let k = (version, key);
+        let mut inner = self.inner.lock().expect("prefix cache poisoned");
+        loop {
+            match inner.slots.get(&k) {
+                Some(Slot::Ready { block, epoch }) => {
+                    let (block, old) = (block.clone(), *epoch);
+                    inner.epoch += 1;
+                    let e = inner.epoch;
+                    if let Some(Slot::Ready { epoch, .. }) = inner.slots.get_mut(&k) {
+                        *epoch = e;
+                    }
+                    inner.lru.remove(&old);
+                    inner.lru.insert(e, k);
+                    inner.hits += 1;
+                    return Ok((block, true));
+                }
+                Some(Slot::Pending) => {
+                    inner = self.ready.wait(inner).expect("prefix cache poisoned");
+                }
+                None => break,
+            }
+        }
+        inner.slots.insert(k, Slot::Pending);
+        inner.misses += 1;
+        drop(inner);
+
+        let built = build();
+
+        let mut inner = self.inner.lock().expect("prefix cache poisoned");
+        let block = match built {
+            Ok(b) => Arc::new(b),
+            Err(e) => {
+                inner.slots.remove(&k);
+                self.ready.notify_all();
+                return Err(e);
+            }
+        };
+        if block.bytes <= self.capacity {
+            inner.epoch += 1;
+            let e = inner.epoch;
+            inner.slots.insert(k, Slot::Ready { block: block.clone(), epoch: e });
+            inner.lru.insert(e, k);
+            inner.bytes += block.bytes;
+            // Byte-budget LRU: evict smallest-epoch entries until the budget
+            // holds. The fresh entry carries the largest epoch, so it is
+            // considered last and survives (it fits the budget on its own).
+            while inner.bytes > self.capacity {
+                let Some((&old, &victim)) = inner.lru.iter().next() else {
+                    break;
+                };
+                inner.lru.remove(&old);
+                if let Some(Slot::Ready { block, .. }) = inner.slots.remove(&victim) {
+                    inner.bytes -= block.bytes;
+                    inner.evictions += 1;
+                }
+            }
+        } else {
+            // Oversized for the whole budget (including capacity 0): serve
+            // the block uncached — graceful degrade to per-call prefill.
+            inner.slots.remove(&k);
+        }
+        self.ready.notify_all();
+        Ok((block, false))
+    }
+
+    /// Drop every Ready entry whose param version is below `min_version`.
+    /// Lookups always carry the caller's current version, so blocks from
+    /// retired snapshots can never hit again — they only occupy budget.
+    /// Pending markers are left alone (their builder owns their lifecycle).
+    pub fn evict_before(&self, min_version: u64) {
+        let mut inner = self.inner.lock().expect("prefix cache poisoned");
+        let stale: Vec<(u64, u64)> = inner
+            .slots
+            .range(..(min_version, 0))
+            .filter(|(_, s)| matches!(s, Slot::Ready { .. }))
+            .map(|(&k, _)| k)
+            .collect();
+        for k in stale {
+            if let Some(Slot::Ready { block, epoch }) = inner.slots.remove(&k) {
+                inner.lru.remove(&epoch);
+                inner.bytes -= block.bytes;
+                inner.evictions += 1;
+            }
+        }
+    }
+
+    /// Resident bytes (Ready entries only).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().expect("prefix cache poisoned").bytes
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().expect("prefix cache poisoned");
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            bytes: inner.bytes,
+            entries: inner.slots.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn block(tag: i32, bytes: usize) -> KvBlock {
+        KvBlock {
+            prompt: vec![tag; 4],
+            pad: 0,
+            kv: Vec::new(),
+            bytes,
+            prefill_steps: 4,
+        }
+    }
+
+    #[test]
+    fn prompt_key_is_stable_and_sensitive() {
+        let a = prompt_key(&[1, 2, 3], 0);
+        assert_eq!(a, prompt_key(&[1, 2, 3], 0));
+        assert_ne!(a, prompt_key(&[1, 2, 4], 0));
+        assert_ne!(a, prompt_key(&[1, 2, 3], 1));
+        assert_ne!(a, prompt_key(&[1, 2], 0));
+    }
+
+    #[test]
+    fn hit_returns_the_same_block_and_counts() {
+        let cache = PrefixCache::new(1 << 20);
+        let builds = AtomicUsize::new(0);
+        let mk = || {
+            builds.fetch_add(1, Ordering::SeqCst);
+            Ok(block(7, 100))
+        };
+        let (a, hit_a) = cache.get_or_prefill(1, 42, mk).unwrap();
+        let (b, hit_b) = cache.get_or_prefill(1, 42, mk).unwrap();
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(builds.load(Ordering::SeqCst), 1);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!((s.bytes, s.entries), (100, 1));
+    }
+
+    #[test]
+    fn versions_partition_the_key_space() {
+        let cache = PrefixCache::new(1 << 20);
+        let (_, h1) = cache.get_or_prefill(1, 42, || Ok(block(1, 10))).unwrap();
+        let (_, h2) = cache.get_or_prefill(2, 42, || Ok(block(2, 10))).unwrap();
+        assert!(!h1 && !h2, "a new param version must never hit stale KV");
+        cache.evict_before(2);
+        let s = cache.stats();
+        assert_eq!((s.entries, s.bytes, s.evictions), (1, 10, 1));
+        // the surviving entry still hits
+        let (_, h3) = cache.get_or_prefill(2, 42, || Ok(block(2, 10))).unwrap();
+        assert!(h3);
+    }
+
+    #[test]
+    fn lru_evicts_in_touch_epoch_order() {
+        // Budget fits two 100-byte blocks. Insert a, b; touch a; insert c —
+        // b (smallest touch epoch) must be the victim, not a.
+        let cache = PrefixCache::new(200);
+        cache.get_or_prefill(1, 1, || Ok(block(1, 100))).unwrap();
+        cache.get_or_prefill(1, 2, || Ok(block(2, 100))).unwrap();
+        let (_, hit) = cache.get_or_prefill(1, 1, || Ok(block(1, 100))).unwrap();
+        assert!(hit);
+        cache.get_or_prefill(1, 3, || Ok(block(3, 100))).unwrap();
+        let (_, a_alive) = cache.get_or_prefill(1, 1, || Ok(block(1, 100))).unwrap();
+        let (_, b_alive) = cache.get_or_prefill(1, 2, || Ok(block(2, 100))).unwrap();
+        assert!(a_alive, "recently touched entry was evicted");
+        assert!(!b_alive, "LRU entry survived past the byte budget");
+    }
+
+    #[test]
+    fn capacity_zero_degrades_to_uncached_prefill() {
+        // Regression (satellite): a full cache must degrade gracefully —
+        // every call builds, nothing is stored, nothing errors.
+        let cache = PrefixCache::new(0);
+        let builds = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let (b, hit) = cache
+                .get_or_prefill(1, 42, || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    Ok(block(9, 64))
+                })
+                .unwrap();
+            assert!(!hit);
+            assert_eq!(b.prompt, vec![9; 4]);
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 3);
+        let s = cache.stats();
+        assert_eq!((s.bytes, s.entries), (0, 0));
+        assert_eq!(s.misses, 3);
+    }
+
+    #[test]
+    fn build_error_vacates_the_slot_instead_of_wedging_it() {
+        let cache = PrefixCache::new(1 << 20);
+        let err = cache.get_or_prefill(1, 5, || anyhow::bail!("device fell over"));
+        assert!(err.is_err());
+        // the key is free again: the next caller builds successfully
+        let (_, hit) = cache.get_or_prefill(1, 5, || Ok(block(5, 10))).unwrap();
+        assert!(!hit);
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn single_flight_builds_once_across_threads() {
+        let cache = Arc::new(PrefixCache::new(1 << 20));
+        let builds = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (cache, builds) = (cache.clone(), builds.clone());
+            handles.push(std::thread::spawn(move || {
+                let (b, _) = cache
+                    .get_or_prefill(3, 99, || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        // widen the race window so waiters actually wait
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        Ok(block(3, 50))
+                    })
+                    .unwrap();
+                assert_eq!(b.prompt, vec![3; 4]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "single-flight violated");
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 7);
+    }
+
+    /// Satellite proptest: for random key sequences, the eviction schedule
+    /// is a pure replay-deterministic function of the access order, and the
+    /// *returned blocks* are identical across every capacity (the cache can
+    /// change cost, never content) and across workers ∈ {1, 2}.
+    #[test]
+    fn prop_eviction_and_outputs_replay_identically_across_capacities() {
+        use crate::util::rng::Rng;
+        for case in 0..40u64 {
+            let mut rng = Rng::new(0x5EED_CAFE ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let accesses: Vec<(u64, u64)> = (0..60)
+                .map(|_| (1 + rng.below(3), rng.below(12)))
+                .collect();
+            let run = |capacity: usize| -> (Vec<Vec<i32>>, CacheStats) {
+                let cache = PrefixCache::new(capacity);
+                let mut outs = Vec::new();
+                for &(v, key) in &accesses {
+                    let (b, _) = cache
+                        .get_or_prefill(v, key, || {
+                            Ok(block((v * 100 + key) as i32, 40 + (key as usize % 3) * 20))
+                        })
+                        .unwrap();
+                    outs.push(b.prompt.clone());
+                }
+                (outs, cache.stats())
+            };
+            let capacities = [0usize, 50, 130, 1 << 20];
+            let reference = run(capacities[0]).0;
+            for &cap in &capacities {
+                let (outs, stats_a) = run(cap);
+                assert_eq!(outs, reference, "case {case}: capacity {cap} changed content");
+                // replay: the same access order reproduces the same stats
+                // (hits, misses, evictions, residency) bit-for-bit
+                let (_, stats_b) = run(cap);
+                assert_eq!(stats_a, stats_b, "case {case}: eviction not deterministic");
+            }
+            // two workers splitting the same sequence still return the same
+            // blocks (single-flight + pure builds); counters may interleave
+            let cache = Arc::new(PrefixCache::new(130));
+            let acc = Arc::new(accesses.clone());
+            let mut handles = Vec::new();
+            for w in 0..2usize {
+                let (cache, acc) = (cache.clone(), acc.clone());
+                handles.push(std::thread::spawn(move || {
+                    let mut outs = Vec::new();
+                    for &(v, key) in acc.iter().skip(w).step_by(2) {
+                        let (b, _) = cache
+                            .get_or_prefill(v, key, || {
+                                Ok(block(
+                                    (v * 100 + key) as i32,
+                                    40 + (key as usize % 3) * 20,
+                                ))
+                            })
+                            .unwrap();
+                        outs.push(b.prompt.clone());
+                    }
+                    outs
+                }));
+            }
+            let joined: Vec<Vec<Vec<i32>>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for (w, outs) in joined.iter().enumerate() {
+                let expect: Vec<Vec<i32>> = accesses
+                    .iter()
+                    .skip(w)
+                    .step_by(2)
+                    .map(|&(v, key)| vec![(v * 100 + key) as i32; 4])
+                    .collect();
+                assert_eq!(outs, &expect, "case {case}: worker {w} got wrong content");
+            }
+            let s = cache.stats();
+            assert_eq!(s.hits + s.misses, accesses.len() as u64, "case {case}");
+        }
+    }
+}

@@ -35,13 +35,15 @@
 //! `run_group_rollouts` and the evaluator both used to hand-roll.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::config::RolloutCfg;
 use crate::coordinator::bucket_tuner::EmaHist;
+use crate::coordinator::rollout::prefix_cache::{prompt_key, CacheStats, PrefixCache};
 use crate::coordinator::rollout::{plan_chunks, trim_at_eos};
-use crate::runtime::{GenerateOut, ParamStore, Runtime};
+use crate::runtime::{GenerateOut, KvBlock, ParamStore, Runtime};
 use crate::tokenizer::{EOS, PAD};
 use crate::util::rng::Rng;
 
@@ -112,6 +114,34 @@ pub trait RolloutBackend {
         seeds: &[i32],
         temp: f32,
     ) -> Result<GenerateOut>;
+
+    /// True when the backend carries the prefill/decode split, i.e.
+    /// [`RolloutBackend::prefill`] + [`RolloutBackend::generate_bucket_kv`]
+    /// can execute. Default false: legacy backends keep fused generate and
+    /// the scheduler never routes them through the prefix cache.
+    fn supports_prefill(&self) -> bool {
+        false
+    }
+
+    /// Prefill one prompt into its KV block. Must be a pure function of
+    /// `(params, prompt)` — the block is shared across slots with
+    /// different seeds.
+    fn prefill(&self, _prompt: &[i32], _pad: i32) -> Result<KvBlock> {
+        bail!("backend has no prefill artifact")
+    }
+
+    /// Bucketed decode from per-row KV blocks. Contract: bit-identical to
+    /// [`RolloutBackend::generate_bucket`] over the blocks' prompts for the
+    /// same seeds — the split changes cost, never output.
+    fn generate_bucket_kv(
+        &self,
+        bucket: usize,
+        _kvs: &[&KvBlock],
+        _seeds: &[i32],
+        _temp: f32,
+    ) -> Result<GenerateOut> {
+        bail!("backend has no decode_T{bucket} artifact")
+    }
 }
 
 /// [`RolloutBackend`] over the runtime's per-bucket generate artifacts.
@@ -143,6 +173,24 @@ impl RolloutBackend for RuntimeBackend<'_> {
     ) -> Result<GenerateOut> {
         self.rt.generate_bucketed(self.params, bucket, prompts, pads, seeds, temp)
     }
+
+    fn supports_prefill(&self) -> bool {
+        self.rt.manifest.has_prefill_split()
+    }
+
+    fn prefill(&self, prompt: &[i32], pad: i32) -> Result<KvBlock> {
+        self.rt.prefill(self.params, prompt, pad)
+    }
+
+    fn generate_bucket_kv(
+        &self,
+        bucket: usize,
+        kvs: &[&KvBlock],
+        seeds: &[i32],
+        temp: f32,
+    ) -> Result<GenerateOut> {
+        self.rt.generate_bucketed_kv(self.params, bucket, kvs, seeds, temp)
+    }
 }
 
 /// Cost accounting for one scheduled run (benches + perf tracking).
@@ -157,6 +205,18 @@ pub struct SchedStats {
     pub escalations: usize,
     /// Allocated rows that carried no real slot (tail padding).
     pub padded_rows: usize,
+    /// Σ prompt-window token-steps prefill actually paid: allocated_rows × P
+    /// per fused generate call, or P per prefill-cache miss. The quantity
+    /// `bench_prefix` gates the ≥60% reduction on.
+    pub prefill_token_steps: usize,
+    /// Prefix-cache lookups that found a ready KV block.
+    pub prefill_hits: usize,
+    /// Prefix-cache lookups issued (one per allocated row).
+    pub prefill_lookups: usize,
+    /// Σ prefill token-steps hits avoided re-paying (= hits × P).
+    pub prefill_steps_saved: usize,
+    /// Resident prefix-cache bytes after the run (gauge, not a counter).
+    pub cache_bytes: usize,
 }
 
 impl SchedStats {
@@ -167,6 +227,11 @@ impl SchedStats {
             ("decode_token_steps", self.decode_token_steps as f64),
             ("escalations", self.escalations as f64),
             ("padded_rows", self.padded_rows as f64),
+            ("prefill_token_steps", self.prefill_token_steps as f64),
+            ("prefill_hits", self.prefill_hits as f64),
+            ("prefill_lookups", self.prefill_lookups as f64),
+            ("prefill_steps_saved", self.prefill_steps_saved as f64),
+            ("cache_bytes", self.cache_bytes as f64),
         ]
     }
 }
@@ -184,6 +249,25 @@ pub fn schedule<B: RolloutBackend + ?Sized>(
     slots: &[SlotSpec],
     routes: &[usize],
     temp: f32,
+) -> Result<(Vec<SlotOut>, SchedStats)> {
+    schedule_cached(backend, encoded, slots, routes, temp, None)
+}
+
+/// [`schedule`] with an optional shared-prefix prefill cache.
+///
+/// With `cache = Some((cache, param_version))` each allocated row resolves
+/// its prompt through the cache (single-flight prefill on a miss) and the
+/// batch decodes via `generate_bucket_kv`; without it every call is a fused
+/// `generate_bucket` that re-prefills its prompt window. The two paths are
+/// **bit-identical** — decode-from-KV reproduces fused generate for the
+/// same `(prompt, seed)` rows — so the cache shapes `SchedStats` only.
+pub fn schedule_cached<B: RolloutBackend + ?Sized>(
+    backend: &B,
+    encoded: &[(Vec<i32>, usize)],
+    slots: &[SlotSpec],
+    routes: &[usize],
+    temp: f32,
+    cache: Option<(&PrefixCache, u64)>,
 ) -> Result<(Vec<SlotOut>, SchedStats)> {
     let buckets = backend.gen_buckets();
     if buckets.is_empty() || buckets.windows(2).any(|w| w[0] >= w[1]) {
@@ -212,6 +296,13 @@ pub fn schedule<B: RolloutBackend + ?Sized>(
 
     let mut out: Vec<Option<SlotOut>> = slots.iter().map(|_| None).collect();
     let mut stats = SchedStats::default();
+    // Per-call staging buffers, hoisted out of the refill loop and cleared
+    // per batch instead of reallocated per generate call.
+    let mut batch: Vec<usize> = Vec::with_capacity(b_roll);
+    let mut prompts: Vec<i32> = Vec::with_capacity(b_roll * p);
+    let mut pads: Vec<i32> = Vec::with_capacity(b_roll);
+    let mut seeds: Vec<i32> = Vec::with_capacity(b_roll);
+    let mut kvs: Vec<Arc<KvBlock>> = Vec::with_capacity(if cache.is_some() { b_roll } else { 0 });
     // Drain smallest bucket first so escalations cascade upward into
     // batches that have not formed yet.
     while let Some(bi) = (0..buckets.len()).find(|&i| !queues[i].is_empty()) {
@@ -232,7 +323,7 @@ pub fn schedule<B: RolloutBackend + ?Sized>(
                 }
             }
         }
-        let mut batch: Vec<usize> = Vec::with_capacity(b_roll);
+        batch.clear();
         while batch.len() < b_roll {
             match queues[bi].pop_front() {
                 Some(s) => batch.push(s),
@@ -240,19 +331,50 @@ pub fn schedule<B: RolloutBackend + ?Sized>(
             }
         }
 
-        let mut prompts = Vec::with_capacity(b_roll * p);
-        let mut pads = Vec::with_capacity(b_roll);
-        let mut seeds = Vec::with_capacity(b_roll);
-        for row in 0..b_roll {
-            // Padding rows repeat the first slot; their output is never
-            // scattered back (the loop below iterates real slots only).
-            let si = batch.get(row).copied().unwrap_or(batch[0]);
-            let (ref ids, pad) = encoded[slots[si].prompt_idx];
-            prompts.extend_from_slice(ids);
-            pads.push(pad as i32);
-            seeds.push(slots[si].seed);
-        }
-        let gen = backend.generate_bucket(b, &prompts, &pads, &seeds, temp)?;
+        seeds.clear();
+        let gen = if let Some((cache, version)) = cache {
+            // Cached path: resolve each row's prompt to its shared KV block
+            // (group siblings, refill rounds, escalation re-decodes, and
+            // tail-padding rows all hit after the first build), then decode
+            // from KV — the prompt window is paid once per distinct prompt.
+            kvs.clear();
+            for row in 0..b_roll {
+                // Padding rows repeat the first slot; their output is never
+                // scattered back (the loop below iterates real slots only).
+                let si = batch.get(row).copied().unwrap_or(batch[0]);
+                let (ref ids, pad) = encoded[slots[si].prompt_idx];
+                stats.prefill_lookups += 1;
+                let (block, hit) = cache.get_or_prefill(
+                    version,
+                    prompt_key(ids, pad as i32),
+                    || backend.prefill(ids, pad as i32),
+                )?;
+                if hit {
+                    stats.prefill_hits += 1;
+                    stats.prefill_steps_saved += block.prefill_steps;
+                } else {
+                    stats.prefill_token_steps += block.prefill_steps;
+                }
+                kvs.push(block);
+                seeds.push(slots[si].seed);
+            }
+            let refs: Vec<&KvBlock> = kvs.iter().map(Arc::as_ref).collect();
+            backend.generate_bucket_kv(b, &refs, &seeds, temp)?
+        } else {
+            // Fused path: every generate call re-prefills its whole prompt
+            // window (allocated rows × P token-steps), padding included.
+            prompts.clear();
+            pads.clear();
+            for row in 0..b_roll {
+                let si = batch.get(row).copied().unwrap_or(batch[0]);
+                let (ref ids, pad) = encoded[slots[si].prompt_idx];
+                prompts.extend_from_slice(ids);
+                pads.push(pad as i32);
+                seeds.push(slots[si].seed);
+            }
+            stats.prefill_token_steps += b_roll * p;
+            backend.generate_bucket(b, &prompts, &pads, &seeds, temp)?
+        };
         let s_len = p + b;
         if gen.tokens.len() != b_roll * s_len || gen.lp.len() != b_roll * b {
             bail!(
@@ -343,36 +465,79 @@ impl LenPredictor {
     }
 }
 
-/// The production scheduler: routing state (EMA predictor) behind a mutex
-/// so pipelined rollout workers share one instance. Routing only shapes
-/// cost — output stays a pure function of the slot plan — so cross-thread
-/// observation order is benign.
+/// The production scheduler: routing state (EMA predictor) and the
+/// shared-prefix prefill cache behind locks so pipelined rollout workers
+/// share one instance. Neither shapes output — routing and cache state
+/// only shape cost — so cross-thread observation order is benign.
 #[derive(Debug)]
 pub struct RolloutScheduler {
     predictor: Mutex<LenPredictor>,
+    /// `--rollout.prefix_cache`: None when disabled; the scheduler then
+    /// always takes the fused-generate path.
+    cache: Option<PrefixCache>,
 }
 
 impl RolloutScheduler {
+    /// A scheduler with the prefix cache disabled (fused generate only).
     pub fn new(max_resp: usize) -> RolloutScheduler {
-        RolloutScheduler { predictor: Mutex::new(LenPredictor::new(max_resp)) }
+        RolloutScheduler { predictor: Mutex::new(LenPredictor::new(max_resp)), cache: None }
+    }
+
+    /// A scheduler with a shared-prefix prefill cache of `capacity_bytes`.
+    /// The cache only engages against backends with the prefill/decode
+    /// split (`supports_prefill`); legacy backends run fused regardless.
+    pub fn with_cache(max_resp: usize, capacity_bytes: usize) -> RolloutScheduler {
+        RolloutScheduler {
+            predictor: Mutex::new(LenPredictor::new(max_resp)),
+            cache: Some(PrefixCache::new(capacity_bytes)),
+        }
+    }
+
+    /// Construct from `--rollout.*` config: cache on/off and its byte
+    /// budget (`cache_mb`).
+    pub fn from_cfg(max_resp: usize, cfg: &RolloutCfg) -> RolloutScheduler {
+        if cfg.prefix_cache {
+            RolloutScheduler::with_cache(max_resp, cfg.cache_mb << 20)
+        } else {
+            RolloutScheduler::new(max_resp)
+        }
+    }
+
+    /// Prefix-cache counters (None when the cache is disabled).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(PrefixCache::stats)
     }
 
     /// Route, schedule, and fold the realised lengths back into the
-    /// predictor. Returned slots are in input order.
+    /// predictor. `param_version` keys prefix-cache entries to the
+    /// parameter snapshot the rollout runs against; entries more than one
+    /// version stale are evicted up front (lookups never match them anyway
+    /// — eviction only frees budget). Returned slots are in input order.
     pub fn run<B: RolloutBackend + ?Sized>(
         &self,
         backend: &B,
         encoded: &[(Vec<i32>, usize)],
         slots: &[SlotSpec],
         temp: f32,
+        param_version: u64,
     ) -> Result<(Vec<SlotOut>, SchedStats)> {
         let buckets = backend.gen_buckets();
         if buckets.is_empty() {
             bail!("bucketed scheduling needs generate_T<b> artifacts (rebuild artifacts)");
         }
+        let cache = self.cache.as_ref().filter(|_| backend.supports_prefill());
+        if let Some(c) = cache {
+            // The pipeline's staleness bound keeps at most the previous
+            // snapshot in flight alongside the current one.
+            c.evict_before(param_version.saturating_sub(1));
+        }
         let route = self.predictor.lock().expect("predictor poisoned").route(&buckets);
         let routes = vec![route; slots.len()];
-        let (outs, stats) = schedule(backend, encoded, slots, &routes, temp)?;
+        let (outs, mut stats) =
+            schedule_cached(backend, encoded, slots, &routes, temp, cache.map(|c| (c, param_version)))?;
+        if let Some(c) = cache {
+            stats.cache_bytes = c.bytes();
+        }
         let lens: Vec<usize> = outs.iter().map(|o| o.resp_len).collect();
         self.predictor.lock().expect("predictor poisoned").observe(&lens);
         Ok((outs, stats))
@@ -400,9 +565,12 @@ where
     let (p, t_max) = (prompt_len, max_resp);
     let total = prompt_idx.len();
     let mut out: Vec<Option<SlotOut>> = (0..total).map(|_| None).collect();
+    // Per-call staging, hoisted out of the chunk loop and cleared per call.
+    let mut prompts: Vec<i32> = Vec::with_capacity(batch * p);
+    let mut pads: Vec<i32> = Vec::with_capacity(batch);
     for chunk in plan_chunks(total, batch) {
-        let mut prompts = Vec::with_capacity(batch * p);
-        let mut pads = Vec::with_capacity(batch);
+        prompts.clear();
+        pads.clear();
         for row in 0..batch {
             let flat_id = chunk.get(row).copied().unwrap_or(chunk[0]);
             let (ref ids, pad) = encoded[prompt_idx[flat_id]];
@@ -510,6 +678,46 @@ impl RolloutBackend for SimBackend {
         }
         Ok(GenerateOut { tokens, lp })
     }
+
+    fn supports_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill(&self, prompt: &[i32], pad: i32) -> Result<KvBlock> {
+        if prompt.len() != self.prompt_len {
+            bail!("sim prefill: prompt of {} tokens, window {}", prompt.len(), self.prompt_len);
+        }
+        Ok(KvBlock {
+            prompt: prompt.to_vec(),
+            pad,
+            kv: Vec::new(),
+            // modeled footprint: 4 bytes per prompt position plus the pad
+            bytes: 4 * (prompt.len() + 1),
+            prefill_steps: self.prompt_len,
+        })
+    }
+
+    fn generate_bucket_kv(
+        &self,
+        bucket: usize,
+        kvs: &[&KvBlock],
+        seeds: &[i32],
+        temp: f32,
+    ) -> Result<GenerateOut> {
+        // Materialize the prompt matrix from the blocks and delegate —
+        // decode-from-KV is bit-identical to fused generate by construction.
+        let (b_roll, p) = (self.batch, self.prompt_len);
+        if kvs.len() != b_roll {
+            bail!("sim decode_T{bucket}: {} kv blocks, batch {b_roll}", kvs.len());
+        }
+        let mut prompts = Vec::with_capacity(b_roll * p);
+        let mut pads = Vec::with_capacity(b_roll);
+        for block in kvs {
+            prompts.extend_from_slice(&block.prompt);
+            pads.push(block.pad);
+        }
+        self.generate_bucket(bucket, &prompts, &pads, seeds, temp)
+    }
 }
 
 /// The default simulated rollout workload: the paper's post-RL regime
@@ -560,6 +768,27 @@ pub mod sim_workload {
                 seed: slot_seed(RUN_SEED, step, f as u64),
             })
             .collect()
+    }
+
+    /// GRPO-shaped slot plan: `SLOTS_PER_STEP` slots as groups of G
+    /// siblings per prompt (`flat_id / g` picks the prompt), the workload
+    /// `bench_prefix` and the tier-1 prefill-saving gate measure on.
+    pub fn grouped_slots(step: u64, g: usize) -> Vec<SlotSpec> {
+        (0..SLOTS_PER_STEP)
+            .map(|f| SlotSpec {
+                flat_id: f,
+                prompt_idx: (f / g) % N_PROMPTS,
+                seed: slot_seed(RUN_SEED, step, f as u64),
+            })
+            .collect()
+    }
+
+    /// Prefill token-steps the FUSED engine pays for one scheduled run:
+    /// every generate call re-prefills its whole `BATCH × PROMPT_LEN`
+    /// window. (`SchedStats::prefill_token_steps` reports exactly this on
+    /// the uncached path; the helper exists for bench-record context.)
+    pub fn fused_prefill_steps(calls: usize) -> usize {
+        calls * BATCH * PROMPT_LEN
     }
 
     /// The fixed engine's allocation for the same workload: every chunk
@@ -765,7 +994,7 @@ mod tests {
         let mut warm_steps = 0usize;
         for step in 0..6u64 {
             let slots = slots_for(8, 2, 11, step);
-            let (outs, stats) = sched.run(&backend, &encoded, &slots, 1.0).unwrap();
+            let (outs, stats) = sched.run(&backend, &encoded, &slots, 1.0, step).unwrap();
             assert_eq!(outs.len(), 16);
             if step >= 2 {
                 warm_steps += stats.decode_token_steps;
@@ -838,6 +1067,103 @@ mod tests {
         }
         // identical rng consumption: both streams are at the same point
         assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn prefix_cache_on_off_is_bit_identical() {
+        // The acceptance contract: --rollout.prefix_cache on|off produce
+        // identical rollouts. Exercised across group sizes and steps so
+        // hits survive siblings, refill promotion, and escalation rounds.
+        let backend = sim(4, &[8, 16, 32], 10);
+        let encoded = encoded_prompts(5, 6);
+        for g in [1usize, 2, 4] {
+            let off = RolloutScheduler::new(32);
+            let on = RolloutScheduler::with_cache(32, 1 << 20);
+            for step in 0..4u64 {
+                let slots = slots_for(5, g, 21, step);
+                let (a, sa) = off.run(&backend, &encoded, &slots, 1.0, step).unwrap();
+                let (b, sb) = on.run(&backend, &encoded, &slots, 1.0, step).unwrap();
+                assert_eq!(canon(&a), canon(&b), "g={g} step={step}");
+                // identical decode cost, identical call structure
+                assert_eq!(sa.decode_token_steps, sb.decode_token_steps);
+                assert_eq!(sa.calls, sb.calls);
+                assert_eq!(sa.escalations, sb.escalations);
+                // accounting invariants
+                assert_eq!(sb.prefill_lookups, sa.calls * 4, "one lookup per allocated row");
+                assert!(sb.prefill_hits <= sb.prefill_lookups);
+                assert!(sa.prefill_token_steps >= sb.prefill_token_steps);
+                assert_eq!(sa.prefill_hits, 0);
+                assert_eq!(sa.cache_bytes, 0);
+            }
+            // the cache saw every lookup and only 5 prompts × steps missed
+            let cs = on.cache_stats().unwrap();
+            assert!(cs.hits > 0 && cs.misses > 0);
+        }
+    }
+
+    #[test]
+    fn cached_run_cuts_prefill_steps_over_60pct_at_g8() {
+        // Tier-1 mirror of the BENCH_prefix gate, on the same shared
+        // workload: at G=8 the cache must cut prefill token-steps by ≥60%.
+        let backend = sim_workload::backend();
+        let encoded = sim_workload::prompts();
+        let uncached = RolloutScheduler::new(*sim_workload::BUCKETS.last().unwrap());
+        let cached =
+            RolloutScheduler::with_cache(*sim_workload::BUCKETS.last().unwrap(), 64 << 20);
+        let (mut base, mut opt) = (0usize, 0usize);
+        for step in 0..sim_workload::STEPS {
+            let slots = sim_workload::grouped_slots(step, 8);
+            let (a, sa) = uncached.run(&backend, &encoded, &slots, 1.0, step).unwrap();
+            let (b, sb) = cached.run(&backend, &encoded, &slots, 1.0, step).unwrap();
+            assert_eq!(canon(&a), canon(&b), "step {step}");
+            base += sa.prefill_token_steps;
+            opt += sb.prefill_token_steps;
+        }
+        assert!(base > 0);
+        let saving = 1.0 - opt as f64 / base as f64;
+        assert!(
+            saving >= 0.60,
+            "prefill saving {saving:.3} below the 60% gate ({opt} vs {base} steps)"
+        );
+    }
+
+    #[test]
+    fn full_cache_degrades_to_uncached_prefill() {
+        // Regression (satellite): capacity 0 means every insert is
+        // oversized — the scheduler must keep working, every lookup a
+        // miss, outputs unchanged.
+        let backend = sim(4, &[8, 16], 6);
+        let encoded = encoded_prompts(3, 6);
+        let slots = slots_for(3, 4, 5, 2);
+        let off = RolloutScheduler::new(16);
+        let zero = RolloutScheduler::with_cache(16, 0);
+        let (a, _) = off.run(&backend, &encoded, &slots, 1.0, 0).unwrap();
+        let (b, sb) = zero.run(&backend, &encoded, &slots, 1.0, 0).unwrap();
+        assert_eq!(canon(&a), canon(&b));
+        assert_eq!(sb.prefill_hits, 0, "nothing can hit a zero-budget cache");
+        assert!(sb.prefill_lookups > 0);
+        assert_eq!(sb.cache_bytes, 0);
+        let cs = zero.cache_stats().unwrap();
+        assert_eq!((cs.entries, cs.bytes), (0, 0));
+    }
+
+    #[test]
+    fn stale_param_versions_evict_but_current_survive() {
+        let backend = sim(4, &[8, 16], 6);
+        let encoded = encoded_prompts(4, 6);
+        let sched = RolloutScheduler::with_cache(16, 1 << 20);
+        let slots = slots_for(4, 2, 13, 0);
+        sched.run(&backend, &encoded, &slots, 1.0, 5).unwrap();
+        let after_v5 = sched.cache_stats().unwrap();
+        assert!(after_v5.entries > 0);
+        // v6 keeps v5 entries resident (staleness bound of one)...
+        sched.run(&backend, &encoded, &slots, 1.0, 6).unwrap();
+        let after_v6 = sched.cache_stats().unwrap();
+        assert!(after_v6.entries >= after_v5.entries);
+        // ...but v8 evicts both v5 and v6 up front.
+        sched.run(&backend, &encoded, &slots, 1.0, 8).unwrap();
+        let after_v8 = sched.cache_stats().unwrap();
+        assert!(after_v8.evictions > after_v6.evictions, "{after_v8:?}");
     }
 
     #[test]

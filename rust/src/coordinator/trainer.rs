@@ -150,6 +150,10 @@ pub struct RolloutGroup {
     pub step: u64,
     pub seqs: Vec<RolloutSeq>,
     pub t_rollout_s: f64,
+    /// Scheduler cost accounting for the group's rollouts (zeroed under the
+    /// fixed engine). Carried so `learn_stage` can price the prefix-cache
+    /// savings into the step ledger without re-touching the scheduler.
+    pub sched_stats: SchedStats,
 }
 
 /// Stage 1 — inference. Pure with respect to `params`: the caller decides
@@ -161,12 +165,19 @@ pub struct RolloutGroup {
 /// regardless of routing or refill order. The fixed engine replays the
 /// legacy chunk-order scalar-seed stream (`plan.rng_rollout`); it is also
 /// the automatic fallback when the artifact set predates `generate_buckets`.
+///
+/// `param_version` identifies the parameter snapshot behind `params` for the
+/// scheduler's prefix cache (serial trainer: the step number, since params
+/// change every step; pipelined trainer: the published snapshot version).
+/// It never affects rollout content — only which cached KV blocks are
+/// shareable.
 pub fn rollout_stage(
     rt: &Runtime,
     params: &ParamStore,
     tok: &Tokenizer,
     cfg: &RunConfig,
     sched: &RolloutScheduler,
+    param_version: u64,
     plan: &mut StepPlan,
     tracer: &Tracer,
 ) -> Result<RolloutGroup> {
@@ -187,6 +198,7 @@ pub fn rollout_stage(
             cfg.seed,
             plan.step,
             sched,
+            param_version,
         )?
     } else {
         let seqs = rollout::run_group_rollouts(
@@ -207,7 +219,12 @@ pub fn rollout_stage(
     sp.arg("seqs", seqs.len() as f64);
     sp.arg("gen_tokens", seqs.iter().map(|s| s.resp_len as f64).sum());
     drop(sp);
-    Ok(RolloutGroup { step: plan.step, seqs, t_rollout_s: t0.elapsed().as_secs_f64() })
+    Ok(RolloutGroup {
+        step: plan.step,
+        seqs,
+        t_rollout_s: t0.elapsed().as_secs_f64(),
+        sched_stats,
+    })
 }
 
 /// The step's solved token selection. `budget_mode none|batch` share one
@@ -267,6 +284,7 @@ pub fn learn_stage(
     rng_mask: &mut Rng,
     step1: u64,
     seqs: &[RolloutSeq],
+    sched_stats: &SchedStats,
     tracer: &Tracer,
 ) -> Result<StepStats> {
     // natlint: allow(wallclock, reason = "feeds only the t_learn_s timing stat, which is excluded from golden-trace lines and all training math")
@@ -512,6 +530,13 @@ pub fn learn_stage(
         compact_kept: compact_kept as f64 / eps,
         compact_alloc: compact_alloc as f64 / eps,
         compact_bound: compact_bound as f64 / eps,
+        // Prefix-cache pricing for this group's rollouts — not divided by
+        // ppo_epochs: the rollout is generated once however many epochs
+        // re-use it.
+        prefill_steps_saved: sched_stats.prefill_steps_saved as f64,
+        prefix_hits: sched_stats.prefill_hits as f64,
+        prefix_lookups: sched_stats.prefill_lookups as f64,
+        cache_bytes: sched_stats.cache_bytes as f64,
     };
     sp_ledger.arg("backprop_frac", ledger.backprop_frac());
     sp_ledger.arg("flop_saving", ledger.flop_saving());
@@ -605,6 +630,7 @@ pub(crate) fn post_step(
             cfg.rl.temperature,
             cfg.seed ^ s.step,
             sched,
+            s.step,
         )?;
         for e in &evals {
             recorder.push(&format!("acc_{}", e.tier.benchmark_name()), s.step, e.acc_at_k);
@@ -718,8 +744,8 @@ impl<'rt> Trainer<'rt> {
             recorder: Recorder::new(),
             acc: GradAccum::zeros(rt.manifest.param_count),
             tuner: make_tuner(rt, &cfg),
-            sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
-            eval_sched: RolloutScheduler::new(rt.manifest.dims.max_resp),
+            sched: RolloutScheduler::from_cfg(rt.manifest.dims.max_resp, &cfg.rollout),
+            eval_sched: RolloutScheduler::from_cfg(rt.manifest.dims.max_resp, &cfg.rollout),
             tracer: Tracer::off(),
             cfg,
             step: 0,
@@ -770,12 +796,15 @@ impl<'rt> Trainer<'rt> {
         // natlint: allow(wallclock, reason = "feeds only the steps/s progress line, which is excluded from golden-trace lines and all training math")
         let t_start = Instant::now();
         let mut plan = plan_step(&self.cfg, self.step);
+        // Serial trainer: parameters change every step, so the step number
+        // IS the snapshot version for the scheduler's prefix cache.
         let group = rollout_stage(
             self.rt,
             &self.params,
             &self.tok,
             &self.cfg,
             &self.sched,
+            self.step,
             &mut plan,
             &self.tracer,
         )?;
@@ -789,6 +818,7 @@ impl<'rt> Trainer<'rt> {
             &mut plan.rng_mask,
             self.step + 1,
             &group.seqs,
+            &group.sched_stats,
             &self.tracer,
         )?;
         self.step += 1;

@@ -31,6 +31,8 @@ pub fn run_rl(
         cfg.rl.temperature,
         cfg.seed,
         tr.eval_sched(),
+        // final-params snapshot: one version past the last optimizer step
+        cfg.rl.steps as u64,
     )?;
     Ok(RunResult { method: cfg.method, seed: cfg.seed, recorder: tr.recorder, evals })
 }

@@ -80,7 +80,16 @@ fn print_help() {
                                       derived from (seed, step, flat_id) —\n\
                                       scheduling-invariant rollouts; fixed =\n\
                                       legacy full-window chunked generate\n\
-                                      (auto-fallback for legacy artifacts)\n\n\
+                                      (auto-fallback for legacy artifacts)\n\
+           --rollout.prefix_cache B   on (default) = prefill each distinct\n\
+                                      prompt once per parameter snapshot and\n\
+                                      decode all G group siblings from the\n\
+                                      cached KV block (bit-identical on/off;\n\
+                                      needs the prefill/decode artifact split,\n\
+                                      auto-fallback to fused generate without)\n\
+           --rollout.cache_mb M       KV cache byte budget in MiB (default 64;\n\
+                                      0 = degrade to uncached prefill); LRU\n\
+                                      eviction in deterministic epoch order\n\n\
          SELECTION (train):\n\
            --method.p / .frac / .min_cut / .k   per-scheme keep parameters\n\
            --rl.sal_floor F           saliency floor (dedicated flag; the old\n\
@@ -307,7 +316,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let shards = cfg.train.shards;
     let eval_cfg = cfg.eval.clone();
     let temperature = cfg.rl.temperature;
-    let engine = cfg.rollout.engine;
+    let rollout_cfg = cfg.rollout;
+    let engine = rollout_cfg.engine;
 
     // Serial and pipelined trainers share the stage functions and metric
     // series; which one runs is purely a scheduling choice.
@@ -373,7 +383,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         return Ok(());
     }
     let eval_sched = (engine == RolloutEngine::Bucketed)
-        .then(|| RolloutScheduler::new(rt.manifest.dims.max_resp));
+        .then(|| RolloutScheduler::from_cfg(rt.manifest.dims.max_resp, &rollout_cfg));
     let evals = evaluator::evaluate_all_tiers(
         &rt,
         &final_params,
@@ -382,6 +392,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         temperature,
         seed,
         eval_sched.as_ref(),
+        start_step + remaining as u64,
     )?;
     for e in evals {
         println!(
@@ -397,7 +408,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let rt = load_runtime(&cfg)?;
     let params = load_ckpt_or_init(args, &cfg, &rt)?;
     let sched = (cfg.rollout.engine == RolloutEngine::Bucketed)
-        .then(|| RolloutScheduler::new(rt.manifest.dims.max_resp));
+        .then(|| RolloutScheduler::from_cfg(rt.manifest.dims.max_resp, &cfg.rollout));
+    // One fixed parameter snapshot for the whole eval — version 0.
     let evals = evaluator::evaluate_all_tiers(
         &rt,
         &params,
@@ -406,6 +418,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         cfg.rl.temperature,
         cfg.seed,
         sched.as_ref(),
+        0,
     )?;
     println!("benchmark     Acc@{:<3} pass@{:<3} len", cfg.eval.k, cfg.eval.k);
     for e in evals {

@@ -36,6 +36,17 @@ pub struct ModelDims {
     pub pretrain_lr: f64,
 }
 
+impl ModelDims {
+    /// Modeled resident footprint of one prompt's prefill KV block: f32
+    /// K and V over the prompt window for every layer and head. The prefix
+    /// cache's byte-budget LRU prices entries with this when the engine
+    /// (e.g. the sim) does not materialize host KV.
+    pub fn kv_block_bytes(&self) -> usize {
+        let head_dim = self.d_model / self.n_heads.max(1);
+        self.prompt_len * self.n_layers * 2 * self.n_heads * head_dim * 4
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
@@ -50,6 +61,17 @@ pub struct Manifest {
     /// the bucketed rollout scheduler's grid. Empty in legacy manifests,
     /// where only the fixed engine can run.
     pub generate_files: Vec<(usize, String)>,
+    /// Prompt-window prefill artifact (`prefill_P`): one forward pass over
+    /// a single left-padded prompt row, returning its KV block. Half of the
+    /// prefill/decode split the shared-prefix cache rides on; absent in
+    /// manifests built before the split.
+    pub prefill_file: Option<String>,
+    /// (bucket, filename), ascending by bucket: KV-consuming bucketed
+    /// decode artifacts (`decode_T<b>`) — the other half of the split. Same
+    /// grid contract as `generate_files` (keys ⊆ config buckets, a
+    /// non-empty grid includes the top bucket). Empty when the manifest
+    /// predates the split; the scheduler then keeps fused generate.
+    pub decode_files: Vec<(usize, String)>,
     pub apply_file: String,
     pub pretrain_file: String,
     /// (bucket, filename), ascending by bucket. Full-row (`batch_train`)
@@ -198,6 +220,33 @@ impl Manifest {
         } else {
             Vec::new()
         };
+        // Optional prefill/decode split. The decode grid obeys the same
+        // rules as generate_buckets (keys are config buckets, the top
+        // bucket terminates escalation), and the two halves come together:
+        // a decode grid with no prefill artifact (or vice versa) can never
+        // execute, so it is a build defect, not a degraded mode.
+        let prefill_file =
+            arts.get("prefill").and_then(Json::as_str).map(str::to_string);
+        let decode_files = if arts.get("decode_buckets").is_some() {
+            let files = bucket_map("decode_buckets")?;
+            for &(b, _) in &files {
+                if !buckets.contains(&b) {
+                    bail!("decode bucket {b} is not a config bucket {buckets:?}");
+                }
+            }
+            if files.last().map(|&(b, _)| b) != Some(dims.max_resp) {
+                bail!(
+                    "decode_buckets must include the top bucket {} (max_resp)",
+                    dims.max_resp
+                );
+            }
+            files
+        } else {
+            Vec::new()
+        };
+        if prefill_file.is_some() != !decode_files.is_empty() {
+            bail!("prefill and decode_buckets must be present together");
+        }
         // Optional 2-D grid: {"<bucket>x<rows>": file}. Every key must name
         // a real sequence bucket and a batch dimension <= batch_train.
         let mut grad_row_files: Vec<((usize, usize), String)> = Vec::new();
@@ -254,6 +303,8 @@ impl Manifest {
                 .and_then(Json::as_str)
                 .map(str::to_string),
             generate_files,
+            prefill_file,
+            decode_files,
             apply_file: file("apply")?,
             pretrain_file: file("pretrain")?,
             grad_files,
@@ -354,6 +405,27 @@ impl Manifest {
             })
     }
 
+    /// True when the manifest carries the prefill/decode split — the
+    /// precondition for the rollout scheduler routing through the
+    /// shared-prefix prefill cache.
+    pub fn has_prefill_split(&self) -> bool {
+        self.prefill_file.is_some() && !self.decode_files.is_empty()
+    }
+
+    /// KV-consuming decode artifact for one response bucket.
+    pub fn decode_file_for(&self, bucket: usize) -> Result<&str> {
+        self.decode_files
+            .iter()
+            .find(|&&(b, _)| b == bucket)
+            .map(|(_, f)| f.as_str())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no decode artifact for bucket {bucket}; rebuild artifacts \
+                     (make artifacts) or run with --rollout.prefix_cache off"
+                )
+            })
+    }
+
     pub fn seq_total(&self) -> usize {
         self.dims.prompt_len + self.dims.max_resp
     }
@@ -415,6 +487,51 @@ mod tests {
         assert_eq!(m.generate_file_for(4).unwrap(), "gen4.txt");
         assert_eq!(m.generate_file_for(8).unwrap(), "gen8.txt");
         assert!(m.generate_file_for(5).is_err());
+    }
+
+    #[test]
+    fn parses_prefill_decode_split() {
+        let with = toy_manifest_json().replace(
+            r#""generate":"g.txt""#,
+            r#""generate":"g.txt",
+               "prefill":"pf.txt",
+               "decode_buckets":{"4":"dec4.txt","8":"dec8.txt"}"#,
+        );
+        let j = Json::parse(&with).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert!(m.has_prefill_split());
+        assert_eq!(m.prefill_file.as_deref(), Some("pf.txt"));
+        assert_eq!(m.decode_file_for(4).unwrap(), "dec4.txt");
+        assert_eq!(m.decode_file_for(8).unwrap(), "dec8.txt");
+        assert!(m.decode_file_for(5).is_err());
+        // dims-modeled KV footprint: P * layers * 2 * heads * head_dim * 4
+        assert_eq!(m.dims.kv_block_bytes(), 4 * 1 * 2 * 1 * 4 * 4);
+        // legacy manifest: no split → fused generate only
+        let j = Json::parse(&toy_manifest_json()).unwrap();
+        let legacy = Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        assert!(!legacy.has_prefill_split());
+        assert!(legacy.decode_file_for(8).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_prefill_decode_split() {
+        for grid in [
+            // decode grid without the prefill artifact
+            r#""decode_buckets":{"4":"d4.txt","8":"d8.txt"}"#,
+            // prefill without a decode grid
+            r#""prefill":"pf.txt""#,
+            // missing the top bucket: escalation cannot terminate
+            r#""prefill":"pf.txt","decode_buckets":{"4":"d4.txt"}"#,
+            // bucket not in the config set
+            r#""prefill":"pf.txt","decode_buckets":{"5":"d5.txt","8":"d8.txt"}"#,
+        ] {
+            let bad = toy_manifest_json().replace(
+                r#""generate":"g.txt""#,
+                &format!(r#""generate":"g.txt",{grid}"#),
+            );
+            let j = Json::parse(&bad).unwrap();
+            assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err(), "{grid}");
+        }
     }
 
     #[test]

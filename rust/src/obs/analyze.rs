@@ -68,6 +68,13 @@ pub struct LedgerAgg {
     pub compact_kept: f64,
     pub compact_alloc: f64,
     pub compact_bound: f64,
+    /// Prefill token-steps the shared-prefix cache avoided (summed).
+    pub prefill_steps_saved: f64,
+    /// Prefix-cache hits / lookups (summed); `check()` gates hits ≤ lookups.
+    pub prefix_hits: f64,
+    pub prefix_lookups: f64,
+    /// Largest resident cache size seen in the trace.
+    pub cache_bytes: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -176,6 +183,26 @@ impl Report {
                  budget-solved selector sampled below its π floor",
                 l.ht_w_max,
                 1.0 / l.pi_floor
+            );
+        }
+        // Prefix-cache hit accounting (active whenever the cache did any
+        // lookups): a hit count above the lookup count, or savings reported
+        // with zero hits, means the scheduler's accounting drifted from the
+        // cache's — the exact bug class that would silently inflate the
+        // BENCH_prefix saving claim.
+        if l.prefix_hits > l.prefix_lookups {
+            bail!(
+                "prefix cache: {} hits exceed {} lookups — hit accounting is \
+                 broken",
+                l.prefix_hits,
+                l.prefix_lookups
+            );
+        }
+        if l.prefill_steps_saved > 0.0 && l.prefix_hits == 0.0 {
+            bail!(
+                "prefix cache: {} prefill steps saved with zero hits — savings \
+                 must come from hits",
+                l.prefill_steps_saved
             );
         }
         Ok(())
@@ -290,6 +317,16 @@ impl Report {
                 l.ht_ess_sum / n
             );
         }
+        if l.prefix_lookups > 0.0 {
+            let _ = writeln!(
+                s,
+                "  prefix cache          {:>12.1} prefill steps saved/step   hit rate {:.1}% \
+                 (peak {:.2} MiB)",
+                l.prefill_steps_saved / n,
+                pct(l.prefix_hits, l.prefix_lookups),
+                l.cache_bytes / (1 << 20) as f64
+            );
+        }
         let _ = writeln!(
             s,
             "  budget agreement      |E[sel] − realized| = {:.3}% of generated (gate 1%)",
@@ -342,6 +379,10 @@ pub fn analyze(text: &str) -> Result<Report> {
             l.compact_kept += arg("compact_kept");
             l.compact_alloc += arg("compact_alloc");
             l.compact_bound += arg("compact_bound");
+            l.prefill_steps_saved += arg("prefill_steps_saved");
+            l.prefix_hits += arg("prefix_hits");
+            l.prefix_lookups += arg("prefix_lookups");
+            l.cache_bytes = l.cache_bytes.max(arg("cache_bytes"));
             continue;
         }
         let dur = ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
@@ -413,6 +454,10 @@ mod tests {
                     ("compact_kept", 40.0),
                     ("compact_alloc", 60.0),
                     ("compact_bound", 60.0),
+                    ("prefill_steps_saved", 48.0),
+                    ("prefix_hits", 6.0),
+                    ("prefix_lookups", 8.0),
+                    ("cache_bytes", 4096.0),
                 ],
             ),
         ]
@@ -499,6 +544,32 @@ mod tests {
         r.ledger.ht_w_max = 1e9;
         r.check().unwrap();
         assert!(!r.render().contains("1/pi_floor"));
+    }
+
+    #[test]
+    fn check_gates_prefix_cache_hit_accounting() {
+        // sample trace: 6 hits of 8 lookups, 48 steps saved — healthy
+        let r = analyze(&sample_trace(950.0)).unwrap();
+        r.check().unwrap();
+        assert!(r.render().contains("prefix cache"), "{}", r.render());
+        assert!((r.ledger.prefill_steps_saved - 48.0).abs() < 1e-12);
+        // hits above lookups = broken accounting
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.prefix_hits = r.ledger.prefix_lookups + 1.0;
+        let err = r.check().unwrap_err().to_string();
+        assert!(err.contains("hit accounting"), "{err}");
+        // savings without hits = phantom savings
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.prefix_hits = 0.0;
+        let err = r.check().unwrap_err().to_string();
+        assert!(err.contains("zero hits"), "{err}");
+        // cache off (no lookups, no savings): gate inert, render line absent
+        let mut r = analyze(&sample_trace(950.0)).unwrap();
+        r.ledger.prefix_hits = 0.0;
+        r.ledger.prefix_lookups = 0.0;
+        r.ledger.prefill_steps_saved = 0.0;
+        r.check().unwrap();
+        assert!(!r.render().contains("prefix cache"));
     }
 
     #[test]

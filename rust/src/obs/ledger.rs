@@ -86,6 +86,17 @@ pub struct StepLedger {
     /// `compact_kept ≤ compact_alloc ≤ compact_bound` when compaction is
     /// active.
     pub compact_bound: f64,
+    /// Prefill token-steps the shared-prefix cache avoided this step
+    /// (Σ prompt_len over cache hits). 0 with the cache off or no
+    /// prefill/decode split in the manifest.
+    pub prefill_steps_saved: f64,
+    /// Prefix-cache hits among this step's rollout rows.
+    pub prefix_hits: f64,
+    /// Prefix-cache lookups (== rollout rows when the cache is active).
+    /// `nat trace --check` gates `prefix_hits ≤ prefix_lookups`.
+    pub prefix_lookups: f64,
+    /// Resident KV bytes in the prefix cache after the step's rollouts.
+    pub cache_bytes: f64,
 }
 
 impl StepLedger {
@@ -114,6 +125,12 @@ impl StepLedger {
     /// prefix-packing the same step (0 when compaction is inactive).
     pub fn compact_saving(&self) -> f64 {
         saving(self.alloc_tokens, self.alloc_tokens_prefix)
+    }
+
+    /// Fraction of rollout rows served from the shared-prefix cache
+    /// (0 when the cache is off).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        frac(self.prefix_hits, self.prefix_lookups)
     }
 
     /// Estimated grad FLOPs of a packed micro-batch set (Σ over batches of
@@ -146,6 +163,10 @@ impl StepLedger {
             ("compact_kept", self.compact_kept),
             ("compact_alloc", self.compact_alloc),
             ("compact_bound", self.compact_bound),
+            ("prefill_steps_saved", self.prefill_steps_saved),
+            ("prefix_hits", self.prefix_hits),
+            ("prefix_lookups", self.prefix_lookups),
+            ("cache_bytes", self.cache_bytes),
         ]
     }
 
@@ -166,6 +187,9 @@ impl StepLedger {
             ("pi_floor", self.pi_floor),
             ("alloc_tokens_prefix", self.alloc_tokens_prefix),
             ("compact_saving", self.compact_saving()),
+            ("prefill_steps_saved", self.prefill_steps_saved),
+            ("prefix_hit_rate", self.prefix_hit_rate()),
+            ("cache_bytes", self.cache_bytes),
         ]
     }
 }
@@ -214,10 +238,22 @@ mod tests {
     fn trace_args_cover_every_field() {
         let l = StepLedger { gen_tokens: 1.0, ..StepLedger::default() };
         let args = l.trace_args();
-        assert_eq!(args.len(), 18);
+        assert_eq!(args.len(), 22);
         assert_eq!(args[0], ("gen_tokens", 1.0));
         // series is a subset plus the derived ratios
-        assert_eq!(l.series().len(), 13);
+        assert_eq!(l.series().len(), 16);
+    }
+
+    #[test]
+    fn prefix_hit_rate_guards_zero_and_matches_counts() {
+        assert_eq!(StepLedger::default().prefix_hit_rate(), 0.0);
+        let l = StepLedger {
+            prefix_hits: 21.0,
+            prefix_lookups: 28.0,
+            prefill_steps_saved: 21.0 * 16.0,
+            ..StepLedger::default()
+        };
+        assert!((l.prefix_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

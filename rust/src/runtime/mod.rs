@@ -57,6 +57,30 @@ pub struct GenerateOut {
     pub lp: Vec<f32>,
 }
 
+/// One prompt's prefill result: the per-prompt KV state the bucketed decode
+/// artifacts consume. Produced once per `(param_version, prompt)` by
+/// [`Runtime::prefill`] and shared (ref-counted) across all G group
+/// siblings, refill rounds, and escalation re-decodes by the scheduler's
+/// prefix cache.
+pub struct KvBlock {
+    /// The [P] left-padded prompt row the block was prefilled from. Decode
+    /// artifacts re-take the tokens (sampling keys mix seed and prompt), so
+    /// the block carries them alongside the KV.
+    pub prompt: Vec<i32>,
+    /// Left-pad length of `prompt`.
+    pub pad: i32,
+    /// Host copy of the prompt-window KV from the prefill artifact,
+    /// [layers, 2, heads, P, head_dim] flattened; empty under the sim
+    /// engine, which re-derives decode state from the prompt tokens.
+    pub kv: Vec<f32>,
+    /// Modeled resident footprint used for the cache's byte-budget LRU
+    /// (`ModelDims::kv_block_bytes`, or the actual host KV size when the
+    /// artifact returned one).
+    pub bytes: usize,
+    /// Token-steps the prefill paid (= P). What a cache hit saves.
+    pub prefill_steps: usize,
+}
+
 /// Execution engine behind [`Runtime`]: real PJRT artifacts, or the
 /// deterministic host-side simulation (`runtime::sim`) used by tests and
 /// benches in builds with no device.
@@ -255,6 +279,92 @@ impl Runtime {
         let outs = self.run(&file, &inputs)?;
         if outs.len() != 2 {
             bail!("generate_T{bucket}: expected 2 outputs, got {}", outs.len());
+        }
+        Ok(GenerateOut { tokens: outs[0].to_vec()?, lp: outs[1].to_vec()? })
+    }
+
+    /// Prefill one prompt: run the prompt-window forward pass once and
+    /// return its KV block. `prompt`: [P] left-padded. The block is a pure
+    /// function of `(params, prompt)` — no seed, no temperature — which is
+    /// what lets the prefix cache share it across group siblings without
+    /// touching the per-slot sampling contract.
+    pub fn prefill(&self, params: &ParamStore, prompt: &[i32], pad: i32) -> Result<KvBlock> {
+        let d = &self.manifest.dims;
+        if prompt.len() != d.prompt_len {
+            bail!("prefill: prompt of {} tokens, window {}", prompt.len(), d.prompt_len);
+        }
+        if let Engine::Sim(_) = &self.engine {
+            return sim::prefill(&self.manifest, prompt, pad);
+        }
+        let file = self
+            .manifest
+            .prefill_file
+            .clone()
+            .context("no prefill artifact (rebuild artifacts with the prefill split)")?;
+        let mut inputs = params.to_literals(&self.manifest)?;
+        inputs.push(xla::Literal::vec1(prompt).reshape(&[1, d.prompt_len as i64])?);
+        inputs.push(xla::Literal::vec1(&[pad]));
+        let outs = self.run(&file, &inputs)?;
+        if outs.len() != 1 {
+            bail!("prefill: expected 1 output, got {}", outs.len());
+        }
+        let kv: Vec<f32> = outs[0].to_vec()?;
+        let bytes = kv.len() * 4 + prompt.len() * 4;
+        Ok(KvBlock {
+            prompt: prompt.to_vec(),
+            pad,
+            kv,
+            bytes,
+            prefill_steps: d.prompt_len,
+        })
+    }
+
+    /// Bucketed decode from cached prefill state: sample up to `bucket`
+    /// tokens per row, with each row's prompt context supplied as a
+    /// [`KvBlock`] instead of being re-prefilled in the fused generate.
+    /// Keeps the scheduling-invariance contract of [`Runtime::generate_bucketed`]:
+    /// row output is a pure function of `(prompt, seed)`, so decode-from-KV
+    /// is bit-identical to fused generate for the same rows.
+    /// kvs/seeds: [B].
+    pub fn generate_bucketed_kv(
+        &self,
+        params: &ParamStore,
+        bucket: usize,
+        kvs: &[&KvBlock],
+        seeds: &[i32],
+        temp: f32,
+    ) -> Result<GenerateOut> {
+        let d = &self.manifest.dims;
+        let (b, p) = (d.batch_rollout, d.prompt_len);
+        if kvs.len() != b || seeds.len() != b {
+            bail!(
+                "decode_T{bucket}: bad input shapes ({} kv blocks, {} seeds)",
+                kvs.len(),
+                seeds.len()
+            );
+        }
+        let file = self.manifest.decode_file_for(bucket)?.to_string();
+        if let Engine::Sim(_) = &self.engine {
+            return sim::decode_bucket_kv(&self.manifest, bucket, kvs, seeds, temp);
+        }
+        let mut prompts = Vec::with_capacity(b * p);
+        let mut pads = Vec::with_capacity(b);
+        let mut kv_flat = Vec::new();
+        for block in kvs {
+            prompts.extend_from_slice(&block.prompt);
+            pads.push(block.pad);
+            kv_flat.extend_from_slice(&block.kv);
+        }
+        let per_row = kv_flat.len() / b;
+        let mut inputs = params.to_literals(&self.manifest)?;
+        inputs.push(xla::Literal::vec1(&prompts).reshape(&[b as i64, p as i64])?);
+        inputs.push(xla::Literal::vec1(&pads));
+        inputs.push(xla::Literal::vec1(&kv_flat).reshape(&[b as i64, per_row as i64])?);
+        inputs.push(xla::Literal::vec1(seeds));
+        inputs.push(xla::Literal::from(temp));
+        let outs = self.run(&file, &inputs)?;
+        if outs.len() != 2 {
+            bail!("decode_T{bucket}: expected 2 outputs, got {}", outs.len());
         }
         Ok(GenerateOut { tokens: outs[0].to_vec()?, lp: outs[1].to_vec()? })
     }

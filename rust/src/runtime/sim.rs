@@ -42,7 +42,7 @@ use crate::model::Manifest;
 use crate::tokenizer::{EOS, PAD};
 use crate::util::json::Json;
 
-use super::{GenerateOut, GradAccum, GradMetrics, OptState, ParamStore};
+use super::{GenerateOut, GradAccum, GradMetrics, KvBlock, OptState, ParamStore};
 
 /// Simulated-kernel knobs.
 #[derive(Clone, Copy, Debug, Default)]
@@ -96,6 +96,8 @@ pub fn sim_manifest() -> Manifest {
       "artifacts": {
         "generate":"sim://generate",
         "generate_buckets":{"4":"sim://gen4","8":"sim://gen8","16":"sim://gen16"},
+        "prefill":"sim://prefill",
+        "decode_buckets":{"4":"sim://dec4","8":"sim://dec8","16":"sim://dec16"},
         "apply":"sim://apply",
         "pretrain":"sim://pretrain",
         "grad":{"4":"sim://g4","8":"sim://g8","16":"sim://g16"},
@@ -210,6 +212,56 @@ pub fn generate_bucket(
         );
     }
     Ok(GenerateOut { tokens, lp })
+}
+
+/// Prefill split, host-side: one prompt forward pass producing the per-row
+/// decode state. The sim keeps no hidden state — a row's sampling stream
+/// re-derives from `(prompt, seed)` — so the block carries the prompt
+/// tokens and an EXACT prefill-step cost model (`prefill_steps = P`, one
+/// token-step per prompt position, matching what the fused generate pays
+/// for its prompt window). That cost model is what makes the prefix
+/// cache's saving measurable and gateable in tier-1 with no device.
+pub fn prefill(manifest: &Manifest, prompt: &[i32], pad: i32) -> Result<KvBlock> {
+    let d = &manifest.dims;
+    if prompt.len() != d.prompt_len {
+        bail!("sim prefill: prompt of {} tokens, window {}", prompt.len(), d.prompt_len);
+    }
+    Ok(KvBlock {
+        prompt: prompt.to_vec(),
+        pad,
+        kv: Vec::new(),
+        bytes: d.kv_block_bytes(),
+        prefill_steps: d.prompt_len,
+    })
+}
+
+/// Bucketed decode from cached prefill blocks, host-side. Materializes the
+/// `[B, P]` prompt matrix from the blocks and delegates to
+/// [`generate_bucket`] — decode-from-KV is bit-identical to fused generate
+/// *by construction*, which is the determinism contract the prefix cache
+/// rides on (cache on/off can change cost, never output).
+pub fn decode_bucket_kv(
+    manifest: &Manifest,
+    bucket: usize,
+    kvs: &[&KvBlock],
+    seeds: &[i32],
+    temp: f32,
+) -> Result<GenerateOut> {
+    let d = &manifest.dims;
+    let (b, p) = (d.batch_rollout, d.prompt_len);
+    if kvs.len() != b {
+        bail!("sim decode_T{bucket}: {} kv blocks, batch {b}", kvs.len());
+    }
+    let mut prompts = Vec::with_capacity(b * p);
+    let mut pads = Vec::with_capacity(b);
+    for block in kvs {
+        if block.prompt.len() != p {
+            bail!("sim decode_T{bucket}: kv block prompt of {} tokens, window {p}", block.prompt.len());
+        }
+        prompts.extend_from_slice(&block.prompt);
+        pads.push(block.pad);
+    }
+    generate_bucket(manifest, bucket, &prompts, &pads, seeds, temp)
 }
 
 /// Legacy fixed-engine generate: full `[B, P + max_resp]` window with ONE
@@ -386,6 +438,13 @@ mod tests {
         assert_eq!(m.row_grid(), vec![1, 2, 4]);
         assert_eq!(m.param_count, 96);
         assert!(m.generate_file_for(4).is_ok());
+        // prefill/decode split: full bucket grid plus the prefill artifact
+        assert!(m.has_prefill_split());
+        assert!(m.prefill_file.is_some());
+        for b in [4usize, 8, 16] {
+            assert!(m.decode_file_for(b).is_ok(), "missing decode bucket {b}");
+        }
+        assert!(m.decode_file_for(5).is_err());
         assert!(m.grad_file_for(8, 2).is_ok());
         assert!(m.grad_file_for(8, 3).is_err());
         // compacted grid: every kept-bucket × row-grid cell, full rows
@@ -443,6 +502,40 @@ mod tests {
         let resp_l = &long.tokens[p..p + 8];
         if !resp_s.contains(&EOS) {
             assert_eq!(resp_s, resp_l, "bucket cap changed the sampled prefix");
+        }
+    }
+
+    #[test]
+    fn decode_from_kv_is_bit_identical_to_fused_generate() {
+        // The prefix cache's whole determinism contract: prefill + decode
+        // must reproduce the fused generate stream bit-for-bit for the
+        // same (prompt, seed) rows, under every bucket.
+        let m = sim_manifest();
+        let d = m.dims.clone();
+        let p = d.prompt_len;
+        let mut prompts = Vec::new();
+        let mut pads = Vec::new();
+        let mut seeds = Vec::new();
+        for row in 0..d.batch_rollout {
+            let prompt: Vec<i32> = (0..p as i32).map(|t| 3 + (t + row as i32) % 40).collect();
+            prompts.extend_from_slice(&prompt);
+            pads.push(row as i32 % 3);
+            seeds.push(1000 + 7 * row as i32);
+        }
+        for bucket in [4usize, 8, 16] {
+            let fused = generate_bucket(&m, bucket, &prompts, &pads, &seeds, 1.0).unwrap();
+            let blocks: Vec<KvBlock> = (0..d.batch_rollout)
+                .map(|r| prefill(&m, &prompts[r * p..(r + 1) * p], pads[r]).unwrap())
+                .collect();
+            assert!(blocks.iter().all(|b| b.prefill_steps == p && b.bytes > 0));
+            let refs: Vec<&KvBlock> = blocks.iter().collect();
+            let split = decode_bucket_kv(&m, bucket, &refs, &seeds, 1.0).unwrap();
+            assert_eq!(fused.tokens, split.tokens, "bucket {bucket}");
+            assert_eq!(
+                fused.lp.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                split.lp.iter().map(|x| x.to_bits()).collect::<Vec<u32>>(),
+                "bucket {bucket}"
+            );
         }
     }
 

@@ -80,7 +80,7 @@ fn engine_with_paramstore_snapshots_matches_serial_bitwise() {
         0,
         steps,
         piped.clone(),
-        |k, snap: &ParamStore| {
+        |k, _version, snap: &ParamStore| {
             trace.lock().unwrap().push(k);
             Ok(fake_rollout(k, snap))
         },
@@ -109,7 +109,7 @@ fn engine_with_paramstore_snapshots_bounds_staleness_under_overlap() {
         0,
         steps,
         params.clone(),
-        |k, snap: &ParamStore| Ok(snap.flat[0] + k as f32),
+        |k, _version, snap: &ParamStore| Ok(snap.flat[0] + k as f32),
         |meta, _g: f32| {
             assert!(meta.staleness() <= stal);
             version_log.push((meta.step, meta.behaviour_version));

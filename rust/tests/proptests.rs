@@ -11,7 +11,7 @@ use nat_rl::coordinator::batcher::{
 };
 use nat_rl::coordinator::masking::{expected_ratio, rpc_survival, sample};
 use nat_rl::coordinator::rollout::scheduler::{
-    schedule, sim_workload, slot_seed, RolloutScheduler, SimBackend, SlotSpec,
+    schedule, sim_workload, slot_seed, RolloutScheduler, SimBackend, SlotOut, SlotSpec,
 };
 use nat_rl::coordinator::rollout::trim_at_eos;
 use nat_rl::stats::MeanCi;
@@ -350,7 +350,7 @@ fn bucketed_engine_cuts_decode_steps_by_25pct_at_default_workload() {
     let mut bucketed_steps = 0usize;
     for step in 0..sim_workload::STEPS {
         let slots = sim_workload::slots(step);
-        let (outs, stats) = sched.run(&backend, &encoded, &slots, 1.0).unwrap();
+        let (outs, stats) = sched.run(&backend, &encoded, &slots, 1.0, step).unwrap();
         assert_eq!(outs.len(), sim_workload::SLOTS_PER_STEP);
         bucketed_steps += stats.decode_token_steps;
     }
@@ -361,6 +361,93 @@ fn bucketed_engine_cuts_decode_steps_by_25pct_at_default_workload() {
         "bucketed {bucketed_steps} vs fixed {fixed_steps}: saving {:.1}% < 25%",
         100.0 * saving
     );
+}
+
+/// Satellite: the shared-prefix prefill cache is a pure transparency layer.
+/// For any slot plan, rollout outputs are byte-identical to the uncached
+/// scheduler across cache capacities (zero, tight, unbounded), slot
+/// insertion orders, warm re-runs, and 1-vs-2-thread pipelining over one
+/// shared scheduler.
+#[test]
+fn prop_prefix_cache_is_output_invariant_across_capacity_order_and_workers() {
+    const P: usize = 8;
+    const TOP: usize = 32;
+    for_cases(40, |case, rng| {
+        let n_prompts = 1 + rng.below(4) as usize;
+        let g = 1 + rng.below(4) as usize;
+        let encoded: Vec<(Vec<i32>, usize)> = (0..n_prompts)
+            .map(|_| {
+                let pad = rng.below(P as u64 / 2) as usize;
+                let mut row = vec![0i32; P];
+                for slot in row.iter_mut().skip(pad) {
+                    *slot = 3 + rng.below(50) as i32;
+                }
+                (row, pad)
+            })
+            .collect();
+        let (run_seed, step) = (rng.next_u64(), rng.below(100));
+        let slots: Vec<SlotSpec> = (0..n_prompts * g)
+            .map(|f| SlotSpec {
+                flat_id: f,
+                prompt_idx: f / g,
+                seed: slot_seed(run_seed, step, f as u64),
+            })
+            .collect();
+        let backend =
+            SimBackend { batch: 3, prompt_len: P, buckets: vec![8, TOP], mean_len: 6 };
+        let canon = |outs: &[SlotOut]| {
+            let mut v: Vec<(usize, usize, Vec<i32>, Vec<u32>)> = outs
+                .iter()
+                .map(|o| {
+                    (
+                        o.flat_id,
+                        o.resp_len,
+                        o.tokens.clone(),
+                        o.lp.iter().map(|x| x.to_bits()).collect(),
+                    )
+                })
+                .collect();
+            v.sort();
+            v
+        };
+        let reference = {
+            let sched = RolloutScheduler::new(TOP);
+            canon(&sched.run(&backend, &encoded, &slots, 1.0, step).unwrap().0)
+        };
+        for cap in [0usize, 200, 1 << 20] {
+            let sched = RolloutScheduler::with_cache(TOP, cap);
+            // adversarial insertion order: the cache sees prompts in a
+            // shuffled sequence, so eviction/refcount epochs differ — the
+            // outputs must not
+            let mut shuffled = slots.clone();
+            for i in (1..shuffled.len()).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                shuffled.swap(i, j);
+            }
+            let (outs, stats) =
+                sched.run(&backend, &encoded, &shuffled, 1.0, step).unwrap();
+            assert_eq!(canon(&outs), reference, "case {case} cap {cap}");
+            assert!(stats.prefill_hits <= stats.prefill_lookups, "case {case} cap {cap}");
+            // one lookup per allocated row (padding + escalation re-decodes
+            // included): lookups = calls × device batch
+            assert_eq!(stats.prefill_lookups, stats.calls * 3, "case {case} cap {cap}");
+            // warm re-run on the same scheduler instance: same outputs again
+            let (outs2, _) = sched.run(&backend, &encoded, &slots, 1.0, step).unwrap();
+            assert_eq!(canon(&outs2), reference, "case {case} cap {cap} warm");
+        }
+        // two pipeline workers share one scheduler (and one cache), each
+        // producing a disjoint half of the slot plan concurrently
+        let sched = RolloutScheduler::with_cache(TOP, 1 << 20);
+        let h = slots.len() / 2;
+        let (lo, hi) = slots.split_at(h);
+        let (mut a, b) = std::thread::scope(|s| {
+            let ja = s.spawn(|| sched.run(&backend, &encoded, lo, 1.0, step).unwrap().0);
+            let jb = s.spawn(|| sched.run(&backend, &encoded, hi, 1.0, step).unwrap().0);
+            (ja.join().unwrap(), jb.join().unwrap())
+        });
+        a.extend(b);
+        assert_eq!(canon(&a), reference, "case {case}: 2-worker split diverged");
+    });
 }
 
 #[test]

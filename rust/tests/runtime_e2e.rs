@@ -276,7 +276,7 @@ fn evaluator_bounds_and_consistency() {
     let tok = Tokenizer::new();
     let set = EvalSet::build(Tier::Easy, 4, 99);
     let mut rng = Rng::new(3);
-    let e = evaluator::evaluate(&rt, &params, &tok, &set, 4, 1.0, &mut rng, None).unwrap();
+    let e = evaluator::evaluate(&rt, &params, &tok, &set, 4, 1.0, &mut rng, None, 0).unwrap();
     assert!(e.acc_at_k >= 0.0 && e.acc_at_k <= 1.0);
     assert!(e.pass_at_k >= e.acc_at_k - 1e-9); // pass@k dominates acc@k
     assert_eq!(e.tasks, 4);
@@ -555,7 +555,9 @@ fn bucketed_rollouts_are_scheduling_invariant_on_real_artifacts() {
     let tasks = sampler.batch(2);
 
     let run = |sched: &RolloutScheduler| {
-        run_group_rollouts_bucketed(&rt, &params, &tok, &tasks, g, 1.0, 7, 3, sched).unwrap().0
+        run_group_rollouts_bucketed(&rt, &params, &tok, &tasks, g, 1.0, 7, 3, sched, 0)
+            .unwrap()
+            .0
     };
     let cold = RolloutScheduler::new(d.max_resp);
     let a = run(&cold);
@@ -564,7 +566,7 @@ fn bucketed_rollouts_are_scheduling_invariant_on_real_artifacts() {
     let warm = RolloutScheduler::new(d.max_resp);
     for step in 0..3u64 {
         let _ = run_group_rollouts_bucketed(
-            &rt, &params, &tok, &tasks, g, 1.0, 999, step, &warm,
+            &rt, &params, &tok, &tasks, g, 1.0, 999, step, &warm, 0,
         )
         .unwrap();
     }

@@ -26,6 +26,7 @@
 use nat_rl::config::{BudgetMode, Method, RunConfig};
 use nat_rl::coordinator::batcher::{pack_budget, plan_shards, split_zero_contribution, LearnItem};
 use nat_rl::coordinator::masking;
+use nat_rl::coordinator::rollout::scheduler::SchedStats;
 use nat_rl::obs::Tracer;
 use nat_rl::coordinator::selection::{self, bench_workload, HtMoments, Selector, Stratified, Urs};
 use nat_rl::coordinator::trainer::learn_stage;
@@ -247,7 +248,7 @@ fn budget_mode_batch_flows_through_learn_stage_and_stays_shard_invariant() {
             let mut rng_mask = Rng::new(0xB0D6E7);
             let s = learn_stage(
                 &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
-                &Tracer::off(),
+                &SchedStats::default(), &Tracer::off(),
             )
             .unwrap();
             (s, params.flat)
@@ -287,7 +288,7 @@ fn budget_mode_none_matches_legacy_masking_streams_exactly() {
     let mut rng_mask = Rng::new(0x0FF);
     let s = learn_stage(
         &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
-                &Tracer::off(),
+        &SchedStats::default(), &Tracer::off(),
     )
     .unwrap();
     assert_eq!(s.budget_target, 0.0);
@@ -353,8 +354,11 @@ fn stratified_reduces_selection_variance_at_equal_expected_cost() {
         let mut opt = OptState::zeros(&rt.manifest);
         let mut acc = GradAccum::zeros(rt.manifest.param_count);
         let mut rng_mask = Rng::new(0x5E1);
-        learn_stage(&rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs, &Tracer::off())
-            .unwrap()
+        learn_stage(
+            &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
+            &SchedStats::default(), &Tracer::off(),
+        )
+        .unwrap()
     };
     let s_urs = run(Method::Urs { p: 0.5 });
     let s_str = run(Method::Stratified { p: 0.5 });
@@ -665,7 +669,7 @@ fn budget_mode_neyman_flows_through_learn_stage_and_stays_shard_invariant() {
         let mut rng_mask = Rng::new(0x4E59_4D41);
         let s = learn_stage(
             &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
-            &Tracer::off(),
+            &SchedStats::default(), &Tracer::off(),
         )
         .unwrap();
         (s, params.flat)

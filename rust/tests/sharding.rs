@@ -21,6 +21,7 @@ use nat_rl::coordinator::batcher::{
 use nat_rl::coordinator::masking;
 use nat_rl::obs::Tracer;
 use nat_rl::coordinator::pipeline::PipelineTrainer;
+use nat_rl::coordinator::rollout::scheduler::SchedStats;
 use nat_rl::coordinator::rollout::RolloutSeq;
 use nat_rl::coordinator::trainer::{learn_stage, StepStats, Trainer};
 use nat_rl::runtime::shard::{execute_shards, tree_reduce_into};
@@ -128,6 +129,7 @@ fn run_learn(
             &mut rng_mask,
             step + 1,
             seqs,
+            &SchedStats::default(),
             &Tracer::off(),
         )
         .unwrap();
@@ -252,7 +254,7 @@ fn degenerate_empty_response_row_flows_through_learn_stage() {
         let mut rng_mask = Rng::new(5);
         let s = learn_stage(
             &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1, &seqs,
-                &Tracer::off(),
+            &SchedStats::default(), &Tracer::off(),
         )
         .unwrap();
         assert_eq!(s.sequences, 4, "{packer:?}");
@@ -322,7 +324,7 @@ fn compact_toggle_is_bit_identical_for_prefix_shaped_methods() {
                 let mut rng_mask = Rng::new(0x434F_4D50 ^ case);
                 let s = learn_stage(
                     &rt, &cfg, &mut params, &mut opt, &mut acc, None, &mut rng_mask, 1,
-                    &seqs, &Tracer::off(),
+                    &seqs, &SchedStats::default(), &Tracer::off(),
                 )
                 .unwrap();
                 let saving = s.ledger.compact_saving();
